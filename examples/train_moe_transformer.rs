@@ -1,0 +1,59 @@
+//! End-to-end validation driver (DESIGN.md §5 "E2E"): train the ~104M-
+//! parameter MoE Transformer LM on synthetic data through the AOT
+//! artifacts and log the loss curve.
+//!
+//! The model (6 layers × 64 experts, d=256 — Switch top-1 routing using
+//! the Pallas top-1 kernel) was lowered once by `make artifacts`; this
+//! binary is pure Rust + PJRT — Python is not involved.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example train_moe_transformer -- [steps] [model]
+//! ```
+
+use hetumoe::config::TrainConfig;
+use hetumoe::train::Trainer;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let model = args.get(2).cloned().unwrap_or_else(|| "e2e".to_string());
+
+    let cfg = TrainConfig { steps, model, log_every: 10, ..TrainConfig::default_run() };
+    let mut trainer = Trainer::new(cfg)?;
+    println!(
+        "training '{}' on {} | {} parameter tensors, {} elements ({} steps, batch {}, seq {})",
+        trainer.cfg.model,
+        trainer.runtime.platform(),
+        trainer.num_param_tensors(),
+        trainer.num_params(),
+        trainer.cfg.steps,
+        trainer.cfg.batch_size,
+        trainer.cfg.seq_len,
+    );
+    let logs = trainer.run()?;
+
+    // Loss-curve summary for EXPERIMENTS.md.
+    println!("\nloss curve (every 20 steps):");
+    for l in logs.iter().step_by(20) {
+        println!("  step {:>5}  loss {:.4}", l.step, l.loss);
+    }
+    let first = logs.first().unwrap();
+    let last = logs.last().unwrap();
+    let mean_wall: f64 = logs.iter().map(|l| l.wall).sum::<f64>() / logs.len() as f64;
+    println!(
+        "\nfinal: {:.4} → {:.4} over {} steps ({:.2}s/step mean)",
+        first.loss,
+        last.loss,
+        logs.len(),
+        mean_wall
+    );
+    assert!(
+        last.loss < first.loss,
+        "loss must decrease: {} → {}",
+        first.loss,
+        last.loss
+    );
+    println!("train_moe_transformer OK");
+    Ok(())
+}

@@ -1,0 +1,161 @@
+"""AOT compiler: lower the L2/L1 graphs to HLO text artifacts.
+
+Run once via ``make artifacts``. Python never appears on the training
+hot path: the Rust coordinator loads ``artifacts/*.hlo.txt`` through the
+PJRT C API (`xla` crate).
+
+Interchange format is **HLO text**, not serialized HloModuleProto: the
+published xla crate binds xla_extension 0.5.1, which rejects jax≥0.5's
+64-bit instruction ids; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--models tiny,e2e]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import topk as topk_kernels
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> XlaComputation -> HLO text (return_tuple=True: the
+    Rust side unwraps with to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_save(fn, example_args, name, out_dir, meta, attrs=None):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    def shape_of(x):
+        return list(x.shape)
+
+    out_tree = jax.eval_shape(fn, *example_args)
+    outputs = [shape_of(o) for o in jax.tree_util.tree_leaves(out_tree)]
+    meta[name] = {
+        "inputs": [shape_of(a) for a in example_args],
+        "outputs": outputs,
+        "attrs": attrs or {},
+    }
+    print(f"  {name}: {len(text) / 1e6:.2f} MB HLO text, "
+          f"{len(meta[name]['inputs'])} in / {len(outputs)} out")
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def build_model_artifacts(name, cfg, out_dir, meta):
+    print(f"model '{name}': {model.num_params(cfg):,} params "
+          f"(E={cfg.num_experts}, d={cfg.d_model}, L={cfg.n_layers})")
+    n = len(model.param_spec(cfg))
+    state_specs = [spec(s) for _, s in model.param_spec(cfg)]
+    state_specs = state_specs + state_specs + state_specs + [spec(())]
+
+    # init: seed (i32 scalar) -> flat state tuple.
+    init = model.init_fn_seeded(cfg)
+    lower_and_save(
+        init,
+        [spec((), jnp.int32)],
+        f"{name}_init",
+        out_dir,
+        meta,
+        attrs={"num_params": model.num_params(cfg), "tensors": 3 * n + 1},
+    )
+
+    # step: (state..., tokens, targets) -> (state..., loss).
+    def step(*args):
+        state = list(args[:-2])
+        return model.train_step(cfg, state, args[-2], args[-1])
+
+    tok = spec((cfg.batch, cfg.seq), jnp.int32)
+    lower_and_save(
+        step,
+        state_specs + [tok, tok],
+        f"{name}_step",
+        out_dir,
+        meta,
+        attrs={
+            "vocab": cfg.vocab,
+            "batch": cfg.batch,
+            "seq": cfg.seq,
+            "lr": cfg.lr,
+            "num_params": model.num_params(cfg),
+            "d_model": cfg.d_model,
+            "num_experts": cfg.num_experts,
+        },
+    )
+
+
+def build_piece_artifacts(out_dir, meta):
+    """Piecewise graphs for the Rust expert-parallel pipeline + the
+    standalone L1 kernel artifact."""
+    d, e, h, cap, t = 256, 16, 512, 128, 1024
+
+    lower_and_save(
+        model.gate_scores_fn,
+        [spec((t, d)), spec((d, e))],
+        "gate_scores",
+        out_dir,
+        meta,
+        attrs={"num_experts": e, "d_model": d},
+    )
+    lower_and_save(
+        model.expert_ffn_fn,
+        [spec((cap, d)), spec((d, h)), spec((h,)), spec((h, d)), spec((d,))],
+        "expert_ffn",
+        out_dir,
+        meta,
+        attrs={"ffn_hidden": h, "d_model": d, "capacity": cap},
+    )
+
+    # Standalone Pallas top-1 kernel (indices cast to f32 so the Rust
+    # Tensor type can carry them).
+    def top1_f32(scores):
+        vals, idx = topk_kernels.top1(scores)
+        return vals, idx.astype(jnp.float32)
+
+    lower_and_save(
+        top1_f32,
+        [spec((t, e))],
+        "top1_pallas",
+        out_dir,
+        meta,
+        attrs={"num_experts": e, "block_t": topk_kernels.BLOCK_T},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="tiny,e2e",
+                    help="comma list from {tiny,e2e}; empty to skip")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    meta = {}
+    build_piece_artifacts(args.out_dir, meta)
+    for name in [m for m in args.models.split(",") if m]:
+        build_model_artifacts(name, model.CONFIGS[name], args.out_dir, meta)
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {meta_path} ({len(meta)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

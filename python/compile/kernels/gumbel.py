@@ -1,0 +1,51 @@
+"""Pallas Gumbel-softmax kernel (Dense-to-Sparse gate, Nie et al. 2021).
+
+Elementwise + row-reduction kernel: ``softmax((log_softmax(s) + g)/tau)``
+over VMEM row blocks. The Gumbel noise is supplied as an input (sampled
+with jax.random outside) so the kernel stays deterministic and testable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 128
+
+
+def _gumbel_softmax_kernel(s_ref, g_ref, out_ref, *, tau):
+    s = s_ref[...]
+    g = g_ref[...]
+    logp = jax.nn.log_softmax(s, axis=-1)
+    out_ref[...] = jax.nn.softmax((logp + g) / tau, axis=-1)
+
+
+def gumbel_softmax(scores, gumbel_noise, tau):
+    """scores, gumbel_noise: [T, E] -> soft routing weights [T, E]."""
+    assert scores.shape == gumbel_noise.shape
+    t, e = scores.shape
+    pt = -(-t // BLOCK_T) * BLOCK_T
+    if pt != t:
+        pad = ((0, pt - t), (0, 0))
+        scores = jnp.pad(scores, pad)
+        gumbel_noise = jnp.pad(gumbel_noise, pad)
+    grid = (pt // BLOCK_T,)
+    out = pl.pallas_call(
+        functools.partial(_gumbel_softmax_kernel, tau=float(tau)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_T, e), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_T, e), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_T, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pt, e), scores.dtype),
+        interpret=True,
+    )(scores, gumbel_noise)
+    return out[:t]
+
+
+def tau_schedule(step, tau0=2.0, tau_min=0.1, anneal_steps=10_000):
+    """Exponential temperature annealing (matches the Rust gate)."""
+    frac = jnp.minimum(step, anneal_steps) / anneal_steps
+    return tau0 * (tau_min / tau0) ** frac

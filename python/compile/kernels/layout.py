@@ -1,0 +1,120 @@
+"""Pallas layout-transform (dispatch/combine) kernels (paper Fig 4).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA layout
+transform is an atomics + scatter kernel; scatters are hostile to the
+TPU. Instead we express dispatch as the GShard-style **one-hot matmul**
+``out[S, d] = onehot[T, S]^T · x[T, d]`` which maps directly onto the
+MXU systolic array, tiled so each grid step contracts a (BLOCK_T)-token
+panel. Combine is the transpose matmul, scaled by the gate weights.
+
+The one-hot matrix is built from the same first-come-first-served
+capacity positions the Rust coordinator computes (``ref.py``'s
+``ref_capacity_positions`` is the shared specification).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 128
+BLOCK_S = 128
+BLOCK_D = 128
+
+
+def _dispatch_kernel(oh_ref, x_ref, out_ref):
+    """One grid step: out[bs, bd] += onehot[bt, bs]^T @ x[bt, bd]."""
+    t_idx = pl.program_id(2)
+    oh = oh_ref[...]  # [bt, bs]
+    x = x_ref[...]  # [bt, bd]
+    acc = jnp.dot(oh.T, x, preferred_element_type=jnp.float32)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(t_idx > 0)
+    def _acc():
+        out_ref[...] += acc
+
+
+def _pad_to(x, mult, axis, value=0.0):
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def dispatch(x, onehot):
+    """Tiled MXU dispatch: x [T, d], onehot [T, S] -> out [S, d]."""
+    t, d = x.shape
+    s = onehot.shape[1]
+    xp = _pad_to(_pad_to(x, BLOCK_T, 0), BLOCK_D, 1)
+    ohp = _pad_to(_pad_to(onehot, BLOCK_T, 0), BLOCK_S, 1)
+    pt, pd = xp.shape
+    ps = ohp.shape[1]
+    grid = (ps // BLOCK_S, pd // BLOCK_D, pt // BLOCK_T)
+    out = pl.pallas_call(
+        _dispatch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_T, BLOCK_S), lambda i, j, k: (k, i)),
+            pl.BlockSpec((BLOCK_T, BLOCK_D), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_S, BLOCK_D), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ps, pd), jnp.float32),
+        interpret=True,
+    )(ohp, xp)
+    return out[:s, :d]
+
+
+def _combine_kernel(oh_ref, buf_ref, w_ref, out_ref):
+    s_idx = pl.program_id(2)
+    oh = oh_ref[...]  # [bt, bs]
+    buf = buf_ref[...]  # [bs, bd]
+    w = w_ref[...]  # [bt, 1]
+    acc = jnp.dot(oh, buf, preferred_element_type=jnp.float32) * w
+
+    @pl.when(s_idx == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(s_idx > 0)
+    def _acc():
+        out_ref[...] += acc
+
+
+def combine(buf, onehot, weights):
+    """Tiled MXU combine: buf [S, d], onehot [T, S], weights [T] -> [T, d]."""
+    s, d = buf.shape
+    t = onehot.shape[0]
+    bufp = _pad_to(_pad_to(buf, BLOCK_S, 0), BLOCK_D, 1)
+    ohp = _pad_to(_pad_to(onehot, BLOCK_T, 0), BLOCK_S, 1)
+    wp = _pad_to(weights[:, None], BLOCK_T, 0)
+    pt = ohp.shape[0]
+    ps, pd = bufp.shape
+    grid = (pt // BLOCK_T, pd // BLOCK_D, ps // BLOCK_S)
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_T, BLOCK_S), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BLOCK_S, BLOCK_D), lambda i, j, k: (k, j)),
+            pl.BlockSpec((BLOCK_T, 1), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_T, BLOCK_D), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pt, pd), jnp.float32),
+        interpret=True,
+    )(ohp, bufp, wp)
+    return out[:t, :d]
+
+
+def vmem_bytes(dtype_bytes=4):
+    """Static per-step VMEM estimate for the dispatch kernel blocks."""
+    return (
+        BLOCK_T * BLOCK_S  # onehot block
+        + BLOCK_T * BLOCK_D  # x block
+        + BLOCK_S * BLOCK_D  # out accumulator
+    ) * dtype_bytes

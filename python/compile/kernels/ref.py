@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the L1 kernels are tested against (pytest +
+hypothesis in ``python/tests``). They are also what the kernels lower to
+semantically — a Pallas kernel that disagrees with its oracle is a bug,
+full stop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_top1(scores):
+    """Top-1 over the expert axis. scores: [T, E] -> (vals [T], idx [T])."""
+    idx = jnp.argmax(scores, axis=-1)
+    vals = jnp.max(scores, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def ref_top2(scores):
+    """Top-2 (vals [T,2] desc, idx [T,2]); ties resolve to smaller index."""
+    vals, idx = jax.lax.top_k(scores, 2)
+    return vals, idx.astype(jnp.int32)
+
+
+def ref_topk(scores, k):
+    """Generic top-k via lax.top_k."""
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)
+
+
+def ref_softmax(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+def ref_dispatch(x, onehot):
+    """Dispatch tokens into expert slots: onehot [T, S] (S = E*C slots),
+    x [T, d] -> out [S, d] = onehot^T @ x."""
+    return jnp.einsum("ts,td->sd", onehot, x)
+
+
+def ref_combine(buf, onehot, weights):
+    """Combine expert outputs back per token:
+    buf [S, d], onehot [T, S], weights [T] -> out [T, d]."""
+    return weights[:, None] * jnp.einsum("ts,sd->td", onehot, buf)
+
+
+def ref_gumbel_softmax(scores, key, tau):
+    """Gumbel-softmax sample at temperature tau. scores [T, E]."""
+    g = jax.random.gumbel(key, scores.shape, dtype=scores.dtype)
+    logp = jax.nn.log_softmax(scores, axis=-1)
+    return jax.nn.softmax((logp + g) / tau, axis=-1)
+
+
+def ref_capacity_positions(expert_idx, num_experts, capacity):
+    """First-come-first-served capacity assignment (matches the Rust
+    ``apply_capacity``): returns destination slot per token, -1 if
+    dropped. expert_idx: [T] int32."""
+    onehot = jax.nn.one_hot(expert_idx, num_experts, dtype=jnp.int32)
+    pos_within = jnp.cumsum(onehot, axis=0) - 1  # [T, E]
+    pos = jnp.take_along_axis(pos_within, expert_idx[:, None], axis=1)[:, 0]
+    dest = expert_idx * capacity + pos
+    return jnp.where(pos < capacity, dest, -1).astype(jnp.int32)
+
+
+def make_onehot(dest, num_slots):
+    """Build the [T, S] dispatch one-hot from destination slots
+    (-1 = dropped)."""
+    t = dest.shape[0]
+    rows = jnp.arange(t)
+    valid = dest >= 0
+    oh = jnp.zeros((t, num_slots), dtype=jnp.float32)
+    return oh.at[rows, jnp.clip(dest, 0)].set(jnp.where(valid, 1.0, 0.0))

@@ -1,0 +1,148 @@
+"""Pallas top-k gating kernels (paper §3.2 "Gate Optimization", Fig 3).
+
+TPU re-expression of the paper's CUDA insight (see DESIGN.md
+§Hardware-Adaptation): the scores matrix ``(tokens, experts)`` is tiled
+into VMEM blocks of ``(BLOCK_T, E)``; top-1/top-2 are vectorized
+reductions over the lane (expert) axis — one pass, no sort, no heap.
+``k > 2`` unrolls k masked-max passes (k is tiny in MoE).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness is what we validate here
+(pytest + hypothesis against ``ref.py``). VMEM footprints and MXU notes
+for a real TPU lowering are recorded in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-block size: 128 rows keeps a (128, E≤256) f32 block ≤ 128 KiB of
+# VMEM — comfortably inside a TPU core's ~16 MiB alongside double
+# buffering.
+BLOCK_T = 128
+
+
+def _top1_kernel(s_ref, vals_ref, idx_ref):
+    s = s_ref[...]  # [bt, E]
+    vals_ref[...] = jnp.max(s, axis=-1, keepdims=True)
+    idx_ref[...] = jnp.argmax(s, axis=-1, keepdims=True).astype(jnp.int32)
+
+
+def _top2_kernel(s_ref, vals_ref, idx_ref):
+    s = s_ref[...]  # [bt, E]
+    e = s.shape[-1]
+    i1 = jnp.argmax(s, axis=-1)
+    v1 = jnp.max(s, axis=-1)
+    # Mask the winner, re-reduce: two passes, still no sort.
+    masked = jnp.where(jax.nn.one_hot(i1, e, dtype=bool), -jnp.inf, s)
+    i2 = jnp.argmax(masked, axis=-1)
+    v2 = jnp.max(masked, axis=-1)
+    vals_ref[...] = jnp.stack([v1, v2], axis=-1)
+    idx_ref[...] = jnp.stack([i1, i2], axis=-1).astype(jnp.int32)
+
+
+def _topk_kernel(s_ref, vals_ref, idx_ref, *, k):
+    s = s_ref[...]
+    e = s.shape[-1]
+    cur = s
+    vals = []
+    idxs = []
+    for _ in range(k):  # unrolled: k is 1..8 in MoE
+        i = jnp.argmax(cur, axis=-1)
+        v = jnp.max(cur, axis=-1)
+        vals.append(v)
+        idxs.append(i)
+        cur = jnp.where(jax.nn.one_hot(i, e, dtype=bool), -jnp.inf, cur)
+    vals_ref[...] = jnp.stack(vals, axis=-1)
+    idx_ref[...] = jnp.stack(idxs, axis=-1).astype(jnp.int32)
+
+
+def _pad_tokens(scores):
+    t = scores.shape[0]
+    padded_t = -(-t // BLOCK_T) * BLOCK_T
+    if padded_t != t:
+        pad = jnp.full((padded_t - t, scores.shape[1]), -jnp.inf, scores.dtype)
+        scores = jnp.concatenate([scores, pad], axis=0)
+    return scores, t
+
+
+def top1(scores):
+    """Pallas top-1. scores [T, E] -> (vals [T], idx [T] int32)."""
+    scores, t = _pad_tokens(scores)
+    pt, e = scores.shape
+    grid = (pt // BLOCK_T,)
+    vals, idx = pl.pallas_call(
+        _top1_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_T, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((BLOCK_T, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_T, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pt, 1), scores.dtype),
+            jax.ShapeDtypeStruct((pt, 1), jnp.int32),
+        ],
+        interpret=True,
+    )(scores)
+    return vals[:t, 0], idx[:t, 0]
+
+
+def top2(scores):
+    """Pallas top-2. scores [T, E] -> (vals [T,2], idx [T,2] int32)."""
+    scores, t = _pad_tokens(scores)
+    pt, e = scores.shape
+    grid = (pt // BLOCK_T,)
+    vals, idx = pl.pallas_call(
+        _top2_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_T, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((BLOCK_T, 2), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_T, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pt, 2), scores.dtype),
+            jax.ShapeDtypeStruct((pt, 2), jnp.int32),
+        ],
+        interpret=True,
+    )(scores)
+    return vals[:t], idx[:t]
+
+
+def topk(scores, k):
+    """Pallas top-k (k unrolled masked-max passes)."""
+    if k == 1:
+        v, i = top1(scores)
+        return v[:, None], i[:, None]
+    if k == 2:
+        return top2(scores)
+    scores, t = _pad_tokens(scores)
+    pt, e = scores.shape
+    grid = (pt // BLOCK_T,)
+    vals, idx = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_T, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((BLOCK_T, k), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_T, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pt, k), scores.dtype),
+            jax.ShapeDtypeStruct((pt, k), jnp.int32),
+        ],
+        interpret=True,
+    )(scores)
+    return vals[:t], idx[:t]
+
+
+def vmem_bytes(block_t, num_experts, k, dtype_bytes=4):
+    """Static VMEM footprint estimate of one grid step (DESIGN.md §Perf):
+    input block + both output blocks + the masked copy."""
+    in_block = block_t * num_experts * dtype_bytes
+    out_blocks = 2 * block_t * k * dtype_bytes
+    scratch = in_block  # masked copy for the k>1 passes
+    return in_block + out_blocks + scratch

@@ -1,0 +1,309 @@
+"""Layer-2: the MoE Transformer LM in pure JAX.
+
+Architecture: tied-embedding decoder with causal self-attention and a
+Switch-style (top-1) MoE FFN in every block. The router's top-1 comes
+from the **Pallas kernel** (`kernels.topk.top1`) so the L1 kernel lowers
+into the same HLO the Rust runtime executes; dispatch/combine use the
+one-hot einsum formulation (differentiable; indices are stop-gradient,
+weights flow through the softmax gather — standard Switch training).
+
+Everything here is build-time only: ``aot.py`` lowers ``init_fn`` and
+``train_step`` to HLO text once, and the Rust trainer drives them
+through PJRT.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import topk as topk_kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 8192
+    d_model: int = 256
+    n_layers: int = 6
+    n_heads: int = 4
+    ffn_hidden: int = 512
+    num_experts: int = 64
+    capacity_factor: float = 1.25
+    seq: int = 128
+    batch: int = 4
+    lr: float = 3e-4
+    aux_loss_weight: float = 0.01
+
+    @property
+    def capacity(self):
+        tokens = self.batch * self.seq
+        return max(1, int(tokens / self.num_experts * self.capacity_factor + 0.999))
+
+
+TINY = ModelConfig(
+    vocab=256, d_model=32, n_layers=2, n_heads=2, ffn_hidden=64,
+    num_experts=4, seq=16, batch=4, lr=1e-2,
+)
+
+# ~104M parameters, expert-dominated (64 experts × 6 layers), small
+# active compute — sized for the single-core CPU testbed (DESIGN.md §2).
+E2E = ModelConfig(
+    vocab=8192, d_model=256, n_layers=6, n_heads=4, ffn_hidden=512,
+    num_experts=64, seq=128, batch=4, lr=1e-3,
+)
+
+CONFIGS = {"tiny": TINY, "e2e": E2E}
+
+
+# --------------------------------------------------------------------------
+# Parameters. Stored as a flat list of arrays (stable order) so the Rust
+# trainer can round-trip them positionally. `param_spec` names each slot.
+# --------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig):
+    """[(name, shape)] in flat order."""
+    spec = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.seq, cfg.d_model)),
+    ]
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        spec += [
+            (p + "ln1_g", (cfg.d_model,)),
+            (p + "ln1_b", (cfg.d_model,)),
+            (p + "wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_g", (cfg.d_model,)),
+            (p + "ln2_b", (cfg.d_model,)),
+            (p + "gate_w", (cfg.d_model, cfg.num_experts)),
+            (p + "w1", (cfg.num_experts, cfg.d_model, cfg.ffn_hidden)),
+            (p + "b1", (cfg.num_experts, cfg.ffn_hidden)),
+            (p + "w2", (cfg.num_experts, cfg.ffn_hidden, cfg.d_model)),
+            (p + "b2", (cfg.num_experts, cfg.d_model)),
+        ]
+    spec += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    return spec
+
+
+def num_params(cfg: ModelConfig):
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_spec(cfg))
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Flat list of parameter arrays (f32)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_b", "b1", "b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / jnp.sqrt(jnp.maximum(1.0, fan_in))
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _as_dict(cfg, params):
+    return {name: p for (name, _), p in zip(param_spec(cfg), params)}
+
+
+# --------------------------------------------------------------------------
+# Forward pieces.
+# --------------------------------------------------------------------------
+
+def layernorm(x, g, b, eps=1e-5):
+    mean = x.mean(-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def causal_attention(x, wqkv, wo, n_heads):
+    b, s, d = x.shape
+    qkv = x @ wqkv  # [b, s, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd = d // n_heads
+
+    def heads(t):
+        return t.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def moe_ffn(x, gate_w, w1, b1, w2, b2, cfg: ModelConfig):
+    """Switch-style top-1 MoE FFN over flattened tokens.
+
+    x: [T, d]. Returns ([T, d], aux_loss). Routing uses the Pallas top-1
+    kernel; dispatch/combine are one-hot einsums over the capacity-padded
+    expert buffer (GShard formulation, MXU-friendly — DESIGN.md
+    §Hardware-Adaptation).
+    """
+    t, d = x.shape
+    e, cap = cfg.num_experts, cfg.capacity
+    scores = x @ gate_w  # [T, E]
+    probs = jax.nn.softmax(scores, axis=-1)
+    # L1 Pallas kernel. Routing indices are non-differentiable by design
+    # (Switch training): stop-gradient the kernel's input so autodiff
+    # treats the routing decision as a constant.
+    _, idx = topk_kernels.top1(jax.lax.stop_gradient(scores))
+    gate_weight = jnp.take_along_axis(probs, idx[:, None], axis=1)[:, 0]  # [T]
+
+    # Capacity positions (FCFS, matches Rust apply_capacity).
+    onehot_e = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # [T, E]
+    pos = jnp.cumsum(onehot_e, axis=0) - 1.0
+    pos = jnp.sum(pos * onehot_e, axis=1)  # [T] position within expert
+    keep = pos < cap
+    # Dispatch one-hot [T, E, cap].
+    pos_oh = jax.nn.one_hot(jnp.clip(pos, 0, cap - 1).astype(jnp.int32), cap,
+                            dtype=jnp.float32)
+    dispatch = onehot_e[:, :, None] * pos_oh[:, None, :] * keep[:, None, None]
+
+    # Expert buffers [E, cap, d] → per-expert FFN → combine.
+    buf = jnp.einsum("tec,td->ecd", dispatch, x)
+    hid = jax.nn.gelu(jnp.einsum("ecd,edh->ech", buf, w1) + b1[:, None, :])
+    out_buf = jnp.einsum("ech,ehd->ecd", hid, w2) + b2[:, None, :]
+    combined = jnp.einsum("tec,ecd->td", dispatch, out_buf)
+    y = combined * gate_weight[:, None]
+
+    # Switch auxiliary loss: E · Σ f_e P_e.
+    f = onehot_e.mean(0)
+    p = probs.mean(0)
+    aux = e * jnp.sum(f * p)
+    return y, aux
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """tokens [batch, seq] int32 -> (logits [batch, seq, vocab], aux)."""
+    pd = _as_dict(cfg, params)
+    x = pd["embed"][tokens] + pd["pos"][None, :, :]
+    aux_total = 0.0
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        h = layernorm(x, pd[p + "ln1_g"], pd[p + "ln1_b"])
+        x = x + causal_attention(h, pd[p + "wqkv"], pd[p + "wo"], cfg.n_heads)
+        h = layernorm(x, pd[p + "ln2_g"], pd[p + "ln2_b"])
+        flat = h.reshape(-1, cfg.d_model)
+        y, aux = moe_ffn(
+            flat,
+            pd[p + "gate_w"], pd[p + "w1"], pd[p + "b1"],
+            pd[p + "w2"], pd[p + "b2"], cfg,
+        )
+        x = x + y.reshape(x.shape)
+        aux_total = aux_total + aux
+    x = layernorm(x, pd["lnf_g"], pd["lnf_b"])
+    logits = x @ pd["embed"].T  # tied embedding
+    return logits, aux_total / cfg.n_layers
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets):
+    logits, aux = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+    return nll + cfg.aux_loss_weight * aux, nll
+
+
+# --------------------------------------------------------------------------
+# Training step: Adam, fused fwd/bwd/update. The flat state the Rust
+# trainer round-trips is params + adam_m + adam_v + step_count.
+# --------------------------------------------------------------------------
+
+def init_state(cfg: ModelConfig, seed):
+    """Flat training state: params…, m…, v…, step."""
+    params = init_params(cfg, seed)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    return params + m + v + [jnp.zeros((), jnp.float32)]
+
+
+def train_step(cfg: ModelConfig, state, tokens, targets):
+    """One Adam step. Returns (new_state…, nll_loss) as a flat tuple."""
+    n = len(param_spec(cfg))
+    params, m, v, step = state[:n], state[n:2 * n], state[2 * n:3 * n], state[3 * n]
+
+    (total, nll), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, targets), has_aux=True
+    )(params)
+    del total
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    step = step + 1.0
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * (g * g)
+        mhat = mi / (1 - b1 ** step)
+        vhat = vi / (1 - b2 ** step)
+        new_params.append(p - cfg.lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return tuple(new_params + new_m + new_v + [step, nll])
+
+
+def init_fn(cfg: ModelConfig):
+    """jit-able init: seed scalar (i32) -> flat state tuple."""
+    def f(seed):
+        # jax.random needs a concrete key path; fold the traced seed in.
+        del seed  # lowered artifact bakes seed handling below
+        return tuple(init_state(cfg, 0))
+    return f
+
+
+def init_fn_seeded(cfg: ModelConfig):
+    """Seed-respecting init (seed folds into the PRNG key)."""
+    def f(seed):
+        key = jax.random.PRNGKey(0)
+        key = jax.random.fold_in(key, seed)
+        params = []
+        keys = jax.random.split(key, len(param_spec(cfg)))
+        for (name, shape), sub in zip(param_spec(cfg), keys):
+            if name.endswith("_g"):
+                params.append(jnp.ones(shape, jnp.float32))
+            elif name.endswith(("_b", "b1", "b2")):
+                params.append(jnp.zeros(shape, jnp.float32))
+            else:
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                scale = 1.0 / jnp.sqrt(jnp.maximum(1.0, float(fan_in)))
+                params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        return tuple(params + m + v + [jnp.zeros((), jnp.float32)])
+    return f
+
+
+def step_fn(cfg: ModelConfig):
+    """jit-able train step over the flat state."""
+    @functools.partial(jax.jit, static_argnums=())
+    def f(*args):
+        *state_and_batch, = args
+        state = list(state_and_batch[:-2])
+        tokens = state_and_batch[-2]
+        targets = state_and_batch[-1]
+        return train_step(cfg, state, tokens, targets)
+    return f
+
+
+# --------------------------------------------------------------------------
+# Piecewise graphs for the Rust expert-parallel pipeline.
+# --------------------------------------------------------------------------
+
+def gate_scores_fn(x, gate_w):
+    """x [T, d], gate_w [d, E] -> (scores, top1 idx as f32, top1 prob)."""
+    scores = x @ gate_w
+    probs = jax.nn.softmax(scores, axis=-1)
+    _, idx = topk_kernels.top1(scores)
+    w = jnp.take_along_axis(probs, idx[:, None], axis=1)[:, 0]
+    return scores, idx.astype(jnp.float32), w
+
+
+def expert_ffn_fn(x, w1, b1, w2, b2):
+    """One expert FFN: x [C, d] -> [C, d] (GeLU MLP)."""
+    return jax.nn.gelu(x @ w1 + b1) @ w2 + b2

@@ -1,0 +1,73 @@
+"""Gumbel-softmax (dense-to-sparse) kernel tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import gumbel, ref
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=15, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+@hypothesis.given(
+    t=st.integers(1, 200),
+    e=st.sampled_from([4, 16, 64]),
+    tau=st.sampled_from([0.1, 0.5, 1.0, 2.0]),
+    seed=st.integers(0, 2**31),
+)
+def test_matches_ref(t, e, tau, seed):
+    key = jax.random.PRNGKey(seed % 1000)
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.standard_normal((t, e)), jnp.float32)
+    g = jax.random.gumbel(key, s.shape)
+    out = gumbel.gumbel_softmax(s, g, tau)
+    logp = jax.nn.log_softmax(s, axis=-1)
+    expect = jax.nn.softmax((logp + g) / tau, axis=-1)
+    assert jnp.allclose(out, expect, atol=1e-5)
+
+
+def test_rows_are_distributions():
+    key = jax.random.PRNGKey(0)
+    s = jax.random.normal(key, (100, 8))
+    g = jax.random.gumbel(key, s.shape)
+    out = gumbel.gumbel_softmax(s, g, 0.7)
+    assert jnp.allclose(out.sum(-1), 1.0, atol=1e-5)
+    assert jnp.all(out >= 0)
+
+
+def test_low_temperature_sharpens():
+    """As tau → 0, the distribution approaches one-hot (dense→sparse)."""
+    key = jax.random.PRNGKey(1)
+    s = jax.random.normal(key, (200, 16))
+    g = jax.random.gumbel(key, s.shape)
+    hot = gumbel.gumbel_softmax(s, g, 0.05)
+    mild = gumbel.gumbel_softmax(s, g, 2.0)
+    assert float(hot.max(-1).mean()) > 0.95
+    assert float(mild.max(-1).mean()) < 0.7
+    # Effective experts per token (mass above 1%) shrinks with tau.
+    k_hot = float((hot > 0.01).sum(-1).mean())
+    k_mild = float((mild > 0.01).sum(-1).mean())
+    assert k_hot < k_mild
+
+
+def test_tau_schedule_monotone():
+    taus = [float(gumbel.tau_schedule(s, 2.0, 0.1, 1000)) for s in [0, 250, 500, 1000, 2000]]
+    assert abs(taus[0] - 2.0) < 1e-5
+    assert abs(taus[3] - 0.1) < 1e-5
+    assert abs(taus[4] - 0.1) < 1e-5
+    assert all(a >= b for a, b in zip(taus, taus[1:]))
+
+
+def test_agrees_with_ref_sampler():
+    """ref_gumbel_softmax(key) == kernel given the same key's noise."""
+    key = jax.random.PRNGKey(7)
+    s = jax.random.normal(jax.random.PRNGKey(8), (64, 8))
+    expect = ref.ref_gumbel_softmax(s, key, 0.5)
+    g = jax.random.gumbel(key, s.shape, dtype=s.dtype)
+    out = gumbel.gumbel_softmax(s, g, 0.5)
+    assert jnp.allclose(out, expect, atol=1e-5)

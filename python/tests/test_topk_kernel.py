@@ -1,0 +1,110 @@
+"""L1 Pallas top-k kernels vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, topk
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def scores_of(t, e, seed, dtype):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((t, e)), dtype)
+
+
+@hypothesis.given(
+    t=st.integers(1, 300),
+    e=st.sampled_from([2, 4, 16, 64, 256]),
+    seed=st.integers(0, 2**31),
+)
+def test_top1_matches_ref(t, e, seed):
+    s = scores_of(t, e, seed, jnp.float32)
+    v, i = topk.top1(s)
+    rv, ri = ref.ref_top1(s)
+    assert jnp.array_equal(i, ri)
+    assert jnp.allclose(v, rv)
+
+
+@hypothesis.given(
+    t=st.integers(1, 300),
+    e=st.sampled_from([2, 8, 16, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_top2_matches_ref(t, e, seed):
+    s = scores_of(t, e, seed, jnp.float32)
+    v, i = topk.top2(s)
+    rv, ri = ref.ref_top2(s)
+    assert jnp.array_equal(i, ri)
+    assert jnp.allclose(v, rv)
+
+
+@hypothesis.given(
+    t=st.integers(1, 150),
+    e=st.sampled_from([8, 16, 32]),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_topk_matches_ref(t, e, k, seed):
+    k = min(k, e)
+    s = scores_of(t, e, seed, jnp.float32)
+    v, i = topk.topk(s, k)
+    rv, ri = ref.ref_topk(s, k)
+    assert jnp.array_equal(i, ri)
+    assert jnp.allclose(v, rv)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    s = scores_of(130, 16, 0, dtype)
+    v, i = topk.top1(s)
+    rv, ri = ref.ref_top1(s)
+    assert jnp.array_equal(i, ri)
+    assert v.dtype == dtype
+    assert jnp.allclose(v.astype(jnp.float32), rv.astype(jnp.float32))
+
+
+def test_ties_resolve_to_smallest_index():
+    s = jnp.ones((5, 8))
+    _, i = topk.top1(s)
+    assert jnp.array_equal(i, jnp.zeros(5, jnp.int32))
+    _, i2 = topk.top2(s)
+    assert jnp.array_equal(i2, jnp.tile(jnp.array([0, 1], jnp.int32), (5, 1)))
+
+
+def test_block_boundary_shapes():
+    # Exactly BLOCK_T, one less, one more.
+    for t in [topk.BLOCK_T - 1, topk.BLOCK_T, topk.BLOCK_T + 1, 2 * topk.BLOCK_T]:
+        s = scores_of(t, 16, t, jnp.float32)
+        v, i = topk.top1(s)
+        rv, ri = ref.ref_top1(s)
+        assert jnp.array_equal(i, ri), f"t={t}"
+
+
+def test_negative_scores_and_padding():
+    # All-negative scores must not be confused by the -inf padding rows.
+    s = -jnp.abs(scores_of(100, 8, 1, jnp.float32)) - 1.0
+    v, i = topk.top1(s)
+    rv, ri = ref.ref_top1(s)
+    assert jnp.array_equal(i, ri)
+    assert jnp.all(v < 0)
+
+
+def test_jit_and_grad_compatible():
+    # The kernel lowers inside jit (what aot.py relies on).
+    s = scores_of(64, 16, 2, jnp.float32)
+    v, i = jax.jit(topk.top1)(s)
+    rv, ri = ref.ref_top1(s)
+    assert jnp.array_equal(i, ri)
+
+
+def test_vmem_estimate_within_budget():
+    # A (128, 256) f32 block with outputs fits well under 1 MiB.
+    assert topk.vmem_bytes(topk.BLOCK_T, 256, 2) < 1 << 20

@@ -1,0 +1,84 @@
+//! Figure 8 reproduction: overall MoE-layer iteration time — HetuMoE vs
+//! Tutel vs FastMoE vs DeepSpeed-MoE, Switch and GShard gates, batch
+//! sweep.
+//!
+//! Paper claims: ≥15% over the baselines (18% vs FastMoE on Switch,
+//! 15% on GShard); up to **8.1×** over DeepSpeed-MoE at batch 32
+//! (Switch). Two tracks:
+//!  1. analytic at paper scale (16 experts, d=2048, ffn 2048, seq 1024,
+//!     TITAN RTX roofline) — the headline table;
+//!  2. measured on the real CPU pipeline at bench scale — same pipeline
+//!     options per system, real wall-clock.
+
+use hetumoe::baselines::{sim_step, SystemKind, SystemProfile};
+use hetumoe::benchkit::Table;
+use hetumoe::cluster::GpuModel;
+use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
+use hetumoe::coordinator::Coordinator;
+use hetumoe::util::stats::fmt_duration;
+
+fn main() {
+    for gate in [GateKind::Switch, GateKind::GShard] {
+        analytic(gate);
+    }
+    measured(GateKind::Switch);
+}
+
+fn analytic(gate: GateKind) {
+    let moe = MoeConfig { gate: gate.clone(), ..MoeConfig::paper_layer() };
+    let cluster = ClusterConfig::commodity(1); // paper: single node × 8 GPUs
+    let gpu = GpuModel::titan_rtx();
+    let mut table = Table::new(
+        &format!(
+            "Fig 8 (analytic, paper scale): {} gate, per-GPU batch sweep, seq 1024",
+            gate.name()
+        ),
+        &["batch", "HetuMoE", "Tutel", "FastMoE", "DeepSpeed", "FastMoE/Hetu", "DeepSpeed/Hetu"],
+    );
+    for batch in [16usize, 32, 64, 128] {
+        let tokens = batch * 1024;
+        let t: Vec<f64> = SystemKind::all()
+            .iter()
+            .map(|&k| sim_step(&SystemProfile::of(k), &moe, &cluster, &gpu, tokens).total())
+            .collect();
+        table.row(vec![
+            batch.to_string(),
+            fmt_duration(t[0]),
+            fmt_duration(t[1]),
+            fmt_duration(t[2]),
+            fmt_duration(t[3]),
+            format!("{:.2}×", t[2] / t[0]),
+            format!("{:.2}×", t[3] / t[0]),
+        ]);
+    }
+    table.emit(Some(&format!("bench_results/fig8_{}.csv", gate.name())));
+    println!("paper: ≥1.15-1.18× vs FastMoE; up to 8.1× vs DeepSpeed at batch 32 (switch)\n");
+}
+
+fn measured(gate: GateKind) {
+    // Real pipeline at CPU scale: d=256, seq-equivalent tokens per rank.
+    let mut table = Table::new(
+        "Fig 8 (measured, CPU bench scale): real pipeline wall-clock per step",
+        &["tokens/rank", "HetuMoE", "Tutel", "FastMoE", "DeepSpeed", "DeepSpeed/Hetu"],
+    );
+    for tokens in [256usize, 1024] {
+        let mut row = vec![tokens.to_string()];
+        let mut times = Vec::new();
+        for kind in SystemKind::all() {
+            let profile = SystemProfile::of(kind);
+            let moe = MoeConfig { gate: gate.clone(), ..MoeConfig::bench_layer() };
+            let cluster =
+                ClusterConfig { nodes: 1, gpus_per_node: 4, ..ClusterConfig::commodity(1) };
+            let mut coord = Coordinator::new(moe, cluster, profile.options(1), 32_000, tokens, 0)
+                .expect("coordinator");
+            let summary = coord.run(3).expect("run");
+            // Wall phases only (comm is simulated; identical world here).
+            times.push(summary.breakdown.total);
+            row.push(fmt_duration(summary.breakdown.total));
+        }
+        row.push(format!("{:.2}×", times[3] / times[0]));
+        table.row(row);
+    }
+    table.emit(Some("bench_results/fig8_measured.csv"));
+    println!("(the DeepSpeed column's blow-up is the dense one-hot dispatch einsum — the paper's mechanism)");
+}

@@ -1,0 +1,17 @@
+//! Baseline MoE systems (paper Figure 8: DeepSpeed-MoE, FastMoE, Tutel)
+//! plus HetuMoE itself, each expressed two ways:
+//!
+//! 1. **Pipeline options** over the one real [`crate::moe::MoeLayer`]
+//!    implementation (`options()`): the systems differ only in which
+//!    gate kernel, layout transform and AllToAll they use, so measured
+//!    CPU-scale gaps come from the same mechanisms the paper identifies.
+//! 2. **Analytic step model** (`sim_step`): the same phase structure
+//!    charged on the [`crate::cluster::GpuModel`] roofline +
+//!    [`crate::cluster::NetworkModel`], with per-system kernel-launch
+//!    counts taken from each system's actual kernel structure — used to
+//!    regenerate Fig 1 and Fig 8 at the paper's scale (tokens = batch ×
+//!    1024, d = 2048), which does not fit a CPU wallclock budget.
+
+pub mod profiles;
+
+pub use profiles::{sim_step, SimStep, SystemKind, SystemProfile};

@@ -1,0 +1,386 @@
+//! Per-system cost profiles and the analytic MoE-layer step model.
+
+use crate::cluster::{GpuModel, NetworkModel};
+use crate::comm::alltoall::flat_alltoall_timing;
+use crate::comm::hierarchical::hierarchical_alltoall_timing;
+use crate::config::{ClusterConfig, GateKind, MoeConfig};
+use crate::moe::{CommImpl, GateImpl, LayoutImpl, MoeLayerOptions};
+
+/// Which system a profile models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    HetuMoE,
+    Tutel,
+    FastMoE,
+    DeepSpeedMoE,
+}
+
+impl SystemKind {
+    pub fn all() -> [SystemKind; 4] {
+        [
+            SystemKind::HetuMoE,
+            SystemKind::Tutel,
+            SystemKind::FastMoE,
+            SystemKind::DeepSpeedMoE,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::HetuMoE => "HetuMoE",
+            SystemKind::Tutel => "Tutel",
+            SystemKind::FastMoE => "FastMoE",
+            SystemKind::DeepSpeedMoE => "DeepSpeed-MoE",
+        }
+    }
+}
+
+/// Implementation profile of one system.
+///
+/// Launch counts reflect each system's published kernel structure circa
+/// the paper (2022): DeepSpeed-MoE's gate was a long chain of small
+/// framework ops (einsums, one-hots, cumsums — tens of launches, host
+/// syncs); FastMoE fused some but kept a generic top-k and sort-based
+/// layout; Tutel fused the gate+dispatch into a few kernels; HetuMoE
+/// ships specialized top-k and a single-pass layout kernel.
+#[derive(Clone, Debug)]
+pub struct SystemProfile {
+    pub kind: SystemKind,
+    /// Kernel launches in the gating phase (score matmul excluded).
+    pub gate_launches: usize,
+    /// Kernel launches per layout transform (forward or reverse).
+    pub layout_launches: usize,
+    /// Dispatch implementation.
+    pub layout_impl: LayoutImpl,
+    /// Top-k kernel implementation.
+    pub gate_impl: GateImpl,
+    /// AllToAll flavor.
+    pub comm_impl: CommImpl,
+    /// Relative top-k kernel efficiency vs HetuMoE's specialized kernel
+    /// (>1 = slower). PyTorch generic ≈ 1.25× (paper Fig 3).
+    pub topk_slowdown: f64,
+    /// Relative layout kernel efficiency (>1 = slower; paper Fig 4 ≈ 1.26).
+    pub layout_slowdown: f64,
+    /// Expert-GEMM efficiency (≤1): HetuMoE batches all local experts
+    /// into one grouped GEMM; FastMoE loops per-expert GEMMs (launch +
+    /// tail-effect losses on small capacity batches); Tutel's 2022
+    /// dispatcher sat in between. Calibrated against the paper's Fig 8
+    /// relative gaps.
+    pub expert_gemm_eff: f64,
+}
+
+impl SystemProfile {
+    pub fn of(kind: SystemKind) -> SystemProfile {
+        match kind {
+            SystemKind::HetuMoE => SystemProfile {
+                kind,
+                gate_launches: 3,
+                layout_launches: 1,
+                layout_impl: LayoutImpl::Optimized,
+                gate_impl: GateImpl::Fast,
+                comm_impl: CommImpl::Hierarchical,
+                topk_slowdown: 1.0,
+                layout_slowdown: 1.0,
+                expert_gemm_eff: 1.0,
+            },
+            SystemKind::Tutel => SystemProfile {
+                kind,
+                gate_launches: 5,
+                layout_launches: 2,
+                layout_impl: LayoutImpl::Optimized,
+                gate_impl: GateImpl::Fast,
+                comm_impl: CommImpl::Flat,
+                topk_slowdown: 1.05,
+                layout_slowdown: 1.1,
+                expert_gemm_eff: 0.82,
+            },
+            SystemKind::FastMoE => SystemProfile {
+                kind,
+                gate_launches: 9,
+                layout_launches: 3,
+                layout_impl: LayoutImpl::Naive,
+                gate_impl: GateImpl::Generic,
+                comm_impl: CommImpl::Flat,
+                topk_slowdown: 1.25,
+                layout_slowdown: 1.26,
+                expert_gemm_eff: 0.75,
+            },
+            SystemKind::DeepSpeedMoE => SystemProfile {
+                kind,
+                gate_launches: 30,
+                layout_launches: 4,
+                layout_impl: LayoutImpl::DenseEinsum,
+                gate_impl: GateImpl::Generic,
+                comm_impl: CommImpl::Flat,
+                topk_slowdown: 1.25,
+                layout_slowdown: 1.0, // dispatch cost is modeled as the einsum
+                expert_gemm_eff: 1.0, // dense einsum path batches fine
+            },
+        }
+    }
+
+    /// Options tuple for running this system on the real pipeline.
+    pub fn options(&self, threads: usize) -> MoeLayerOptions {
+        MoeLayerOptions {
+            gate_impl: self.gate_impl,
+            layout_impl: self.layout_impl,
+            comm_impl: self.comm_impl,
+            threads,
+        }
+    }
+}
+
+/// Analytic breakdown of one MoE-layer forward (per training iteration,
+/// per rank) at the paper's scale.
+#[derive(Clone, Debug)]
+pub struct SimStep {
+    pub system: SystemKind,
+    /// (phase, seconds) — gate, layout, alltoall (×2 folded), expert,
+    /// reverse_layout.
+    pub phases: Vec<(String, f64)>,
+}
+
+impl SimStep {
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, t)| t).sum()
+    }
+
+    pub fn phase(&self, name: &str) -> f64 {
+        self.phases
+            .iter()
+            .filter(|(n, _)| n.starts_with(name))
+            .map(|(_, t)| t)
+            .sum()
+    }
+}
+
+/// Analytic per-iteration time of one MoE layer on the simulated
+/// cluster. `tokens_per_rank` = local batch × sequence length.
+pub fn sim_step(
+    profile: &SystemProfile,
+    moe: &MoeConfig,
+    cluster: &ClusterConfig,
+    gpu: &GpuModel,
+    tokens_per_rank: usize,
+) -> SimStep {
+    let net = NetworkModel::new(cluster.clone());
+    let w = cluster.world();
+    let t = tokens_per_rank as f64;
+    let d = moe.d_model as f64;
+    let e = moe.num_experts as f64;
+    let h = moe.ffn_hidden as f64;
+    let k = match moe.gate {
+        GateKind::GShard => 2.0,
+        GateKind::TopK { k } => k as f64,
+        _ => 1.0,
+    };
+    let cap = moe.capacity(tokens_per_rank) as f64;
+
+    // --- gate: score matmul + top-k kernel chain ---
+    let score_flops = 2.0 * t * d * e;
+    let topk_bytes = t * e * 4.0 * profile.topk_slowdown;
+    let gate_time = gpu.kernel_time(score_flops, t * (d + e) * 4.0, 1)
+        + gpu.memory_time(topk_bytes, profile.gate_launches);
+
+    // --- layout transform (dispatch) ---
+    let layout_time = match profile.layout_impl {
+        LayoutImpl::DenseEinsum => {
+            // onehot [E*cap, T] · tokens [T, d] — real matmul flops.
+            let flops = 2.0 * (e * cap) * t * d;
+            gpu.kernel_time(flops, (e * cap * d + t * d) * 4.0, profile.layout_launches)
+        }
+        _ => {
+            // Scatter: read + write each routed row once.
+            let bytes = 2.0 * t * k * d * 4.0 * profile.layout_slowdown;
+            gpu.memory_time(bytes, profile.layout_launches)
+        }
+    };
+
+    // --- AllToAll (dispatch + combine) ---
+    // Per-rank payload: full padded dispatch buffer [E, cap, d] f32.
+    let payload_bytes = (e * cap * d * 4.0) as usize;
+    let chunk = payload_bytes / w;
+    let a2a_once = match profile.comm_impl {
+        CommImpl::Flat => flat_alltoall_timing(&net, chunk).total,
+        CommImpl::Hierarchical => hierarchical_alltoall_timing(&net, chunk).total,
+    };
+
+    // --- expert FFN over the padded buffer ---
+    // Each rank hosts E/W experts, each with W·cap rows after exchange:
+    // rows_total = (E/W)·W·cap = E·cap.
+    let expert_flops = 4.0 * (e * cap) * d * h / profile.expert_gemm_eff;
+    let expert_time = gpu.kernel_time(
+        expert_flops,
+        (e * cap) * (d + h) * 4.0,
+        2 * (moe.num_experts / w.max(1)).max(1),
+    );
+
+    // --- reverse layout (combine) ---
+    let reverse_time = match profile.layout_impl {
+        LayoutImpl::DenseEinsum => {
+            let flops = 2.0 * t * (e * cap) * d;
+            gpu.kernel_time(flops, (e * cap * d + t * d) * 4.0, profile.layout_launches)
+        }
+        _ => gpu.memory_time(
+            2.0 * t * k * d * 4.0 * profile.layout_slowdown,
+            profile.layout_launches,
+        ),
+    };
+
+    SimStep {
+        system: profile.kind,
+        phases: vec![
+            ("gate".into(), gate_time),
+            ("layout".into(), layout_time),
+            ("alltoall_dispatch".into(), a2a_once),
+            ("expert".into(), expert_time),
+            ("alltoall_combine".into(), a2a_once),
+            ("reverse_layout".into(), reverse_time),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_moe(gate: GateKind) -> MoeConfig {
+        MoeConfig { gate, ..MoeConfig::paper_layer() }
+    }
+
+    fn titan_cluster(nodes: usize) -> ClusterConfig {
+        ClusterConfig::commodity(nodes)
+    }
+
+    #[test]
+    fn hetu_beats_all_baselines_fig8_shape() {
+        // Paper layer, single node of 8 GPUs, switch gate.
+        let moe = paper_moe(GateKind::Switch);
+        let cluster = titan_cluster(1);
+        let gpu = GpuModel::titan_rtx();
+        for batch in [16usize, 32, 64, 128] {
+            // Paper batch sizes are per-GPU (seq len 1024).
+            let tokens = batch * 1024;
+            let hetu = sim_step(
+                &SystemProfile::of(SystemKind::HetuMoE),
+                &moe,
+                &cluster,
+                &gpu,
+                tokens,
+            )
+            .total();
+            for kind in [SystemKind::Tutel, SystemKind::FastMoE, SystemKind::DeepSpeedMoE] {
+                let other =
+                    sim_step(&SystemProfile::of(kind), &moe, &cluster, &gpu, tokens).total();
+                assert!(
+                    other > hetu,
+                    "batch {batch}: {} ({other:.6}) must be slower than HetuMoE ({hetu:.6})",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deepspeed_gap_is_large_at_small_batch_switch() {
+        // Paper: up to 8.1× at batch 32 under the switch gate.
+        let moe = paper_moe(GateKind::Switch);
+        let cluster = titan_cluster(1);
+        let gpu = GpuModel::titan_rtx();
+        let tokens = 32 * 1024;
+        let hetu = sim_step(
+            &SystemProfile::of(SystemKind::HetuMoE),
+            &moe,
+            &cluster,
+            &gpu,
+            tokens,
+        )
+        .total();
+        let ds = sim_step(
+            &SystemProfile::of(SystemKind::DeepSpeedMoE),
+            &moe,
+            &cluster,
+            &gpu,
+            tokens,
+        )
+        .total();
+        let ratio = ds / hetu;
+        assert!(ratio > 6.0, "DeepSpeed/Hetu at bs=32: {ratio:.2} (paper: 8.1)");
+        assert!(ratio < 13.0, "gap implausibly large: {ratio:.2}");
+    }
+
+    #[test]
+    fn fastmoe_gap_is_modest() {
+        // Paper: HetuMoE ≥ 15-18% over FastMoE.
+        let moe = paper_moe(GateKind::GShard);
+        let cluster = titan_cluster(1);
+        let gpu = GpuModel::titan_rtx();
+        let tokens = 64 * 1024;
+        let hetu = sim_step(
+            &SystemProfile::of(SystemKind::HetuMoE),
+            &moe,
+            &cluster,
+            &gpu,
+            tokens,
+        )
+        .total();
+        let fm = sim_step(
+            &SystemProfile::of(SystemKind::FastMoE),
+            &moe,
+            &cluster,
+            &gpu,
+            tokens,
+        )
+        .total();
+        let ratio = fm / hetu;
+        assert!(ratio > 1.12, "FastMoE/Hetu: {ratio:.3} (paper: ≥1.15)");
+        assert!(ratio < 2.0, "gap implausible: {ratio:.3}");
+    }
+
+    #[test]
+    fn multinode_is_comm_dominated_fig1_shape() {
+        // Paper Fig 1: AllToAll ≈ 99% of time at 100 Gbps multi-node for
+        // flat-AllToAll systems.
+        let moe = paper_moe(GateKind::Switch);
+        let cluster = titan_cluster(8);
+        let gpu = GpuModel::titan_rtx();
+        // Per-GPU batch 2 × seq 1024 → ~16-21 MB dispatch payload per GPU,
+        // the paper's Fig-5/6 "common setting" where AllToAll messages are
+        // latency-bound. (At much larger payloads flat AllToAll is already
+        // bandwidth-saturated and hierarchy stops paying — see the
+        // `ablations` bench for that crossover.)
+        let tokens = 2 * 1024;
+        // FastMoE = flat AllToAll without the dense-einsum dispatch, the
+        // cleanest view of the communication share.
+        let fm = sim_step(
+            &SystemProfile::of(SystemKind::FastMoE),
+            &moe,
+            &cluster,
+            &gpu,
+            tokens,
+        );
+        let comm = fm.phase("alltoall");
+        let frac = comm / fm.total();
+        assert!(frac > 0.75, "comm fraction {frac:.3} (paper: ~0.99)");
+        // Hierarchical reduces it substantially.
+        let hetu = sim_step(
+            &SystemProfile::of(SystemKind::HetuMoE),
+            &moe,
+            &cluster,
+            &gpu,
+            tokens,
+        );
+        assert!(hetu.phase("alltoall") < comm * 0.75);
+    }
+
+    #[test]
+    fn options_map_to_pipeline_choices() {
+        let p = SystemProfile::of(SystemKind::DeepSpeedMoE);
+        let o = p.options(2);
+        assert_eq!(o.layout_impl, LayoutImpl::DenseEinsum);
+        assert_eq!(o.comm_impl, CommImpl::Flat);
+        assert_eq!(o.threads, 2);
+        let h = SystemProfile::of(SystemKind::HetuMoE).options(1);
+        assert_eq!(h.comm_impl, CommImpl::Hierarchical);
+    }
+}

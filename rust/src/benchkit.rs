@@ -1,0 +1,268 @@
+//! Benchmark harness (criterion is not vendored offline).
+//!
+//! Provides warmed, auto-tuned timing with robust statistics (median +
+//! MAD), a markdown table printer used by every `rust/benches/fig*.rs`
+//! target, and CSV export so EXPERIMENTS.md rows can be regenerated
+//! mechanically.
+
+use crate::util::stats::{fmt_duration, mad, percentile};
+use std::hint::black_box as bb;
+use std::time::Instant;
+
+/// Re-export of `std::hint::black_box` for benchmark bodies.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Result of one benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median: f64,
+    /// Median absolute deviation (seconds).
+    pub mad: f64,
+    /// Mean seconds per iteration.
+    pub mean: f64,
+    /// p90 seconds.
+    pub p90: f64,
+    /// Total measured iterations.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn display(&self) -> String {
+        format!(
+            "{}: {} ± {} (n={})",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.mad),
+            self.iters
+        )
+    }
+}
+
+/// Options controlling a measurement.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    /// Target total measurement wall time (seconds).
+    pub measure_secs: f64,
+    /// Warmup wall time (seconds).
+    pub warmup_secs: f64,
+    /// Max samples to record.
+    pub max_samples: usize,
+    /// Min samples to record.
+    pub min_samples: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { measure_secs: 1.0, warmup_secs: 0.3, max_samples: 200, min_samples: 10 }
+    }
+}
+
+impl BenchOpts {
+    /// Quick profile for cheap micro benches in CI.
+    pub fn quick() -> Self {
+        BenchOpts { measure_secs: 0.25, warmup_secs: 0.05, max_samples: 100, min_samples: 5 }
+    }
+
+    /// Profile for expensive end-to-end steps.
+    pub fn slow() -> Self {
+        BenchOpts { measure_secs: 3.0, warmup_secs: 0.5, max_samples: 60, min_samples: 3 }
+    }
+}
+
+/// Measure `f` with warmup and batching; returns per-iteration statistics.
+pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult {
+    // Warmup + estimate single-iteration cost.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0usize;
+    while warm_start.elapsed().as_secs_f64() < opts.warmup_secs || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    let est = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+    // Choose a batch size so each sample is ≥ ~50µs (timer noise floor).
+    let batch = ((5e-5 / est.max(1e-12)).ceil() as usize).max(1);
+    let target_samples = ((opts.measure_secs / (est * batch as f64).max(1e-9)) as usize)
+        .clamp(opts.min_samples, opts.max_samples);
+
+    let mut samples = Vec::with_capacity(target_samples);
+    let measure_start = Instant::now();
+    for _ in 0..target_samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed().as_secs_f64() / batch as f64);
+        if measure_start.elapsed().as_secs_f64() > opts.measure_secs * 3.0 {
+            break; // hard wall: don't let a mis-estimated batch run forever
+        }
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        median: percentile(&samples, 50.0),
+        mad: if samples.len() > 1 { mad(&samples) } else { 0.0 },
+        mean,
+        p90: percentile(&samples, 90.0),
+        iters: samples.len() * batch,
+    }
+}
+
+/// Markdown table builder used by the figure benches.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n### {}\n\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Render as CSV (headers + rows).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print markdown to stdout and optionally write CSV next to it.
+    pub fn emit(&self, csv_path: Option<&str>) {
+        println!("{}", self.to_markdown());
+        if let Some(path) = csv_path {
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            if let Err(e) = std::fs::write(path, self.to_csv()) {
+                eprintln!("warning: could not write {path}: {e}");
+            } else {
+                println!("(csv written to {path})");
+            }
+        }
+    }
+}
+
+/// Format a speedup ratio for tables.
+pub fn fmt_speedup(baseline: f64, ours: f64) -> String {
+    if ours <= 0.0 {
+        return "n/a".into();
+    }
+    format!("{:.2}×", baseline / ours)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", &BenchOpts::quick(), || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.median >= 0.0);
+        assert!(r.iters > 0);
+        assert!(r.display().contains("noop-ish"));
+    }
+
+    #[test]
+    fn bench_orders_magnitudes() {
+        let cheap = bench("cheap", &BenchOpts::quick(), || {
+            black_box(1 + 1);
+        });
+        let costly = bench("costly", &BenchOpts::quick(), || {
+            let mut s = 0u64;
+            for i in 0..50_000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(costly.median > cheap.median * 10.0);
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| 1"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("a,b\n"));
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(fmt_speedup(2.0, 1.0), "2.00×");
+        assert_eq!(fmt_speedup(1.0, 0.0), "n/a");
+    }
+}

@@ -1,0 +1,192 @@
+//! Command-line argument parsing (`clap` is not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and generated usage text. The `hetumoe`
+//! binary's subcommands are built on this.
+
+use crate::error::{HetuError, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments in order (subcommand first, by convention).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    ///
+    /// An option consumes the next token as its value unless that token
+    /// starts with `--`; then it is treated as a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.options.insert(rest.to_string(), v);
+                        }
+                        _ => out.flags.push(rest.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// The subcommand (first positional), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                HetuError::Config(format!("--{name} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                HetuError::Config(format!("--{name} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                HetuError::Config(format!("--{name} expects a number, got '{v}'"))
+            }),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--batches 16,32,64`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse().map_err(|_| {
+                        HetuError::Config(format!("--{name}: bad integer '{s}'"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+/// A subcommand description for `--help` output.
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub options: &'static [(&'static str, &'static str)],
+}
+
+/// Render usage text for the binary.
+pub fn usage(bin: &str, commands: &[CommandSpec]) -> String {
+    let mut s = format!("USAGE: {bin} <command> [options]\n\ncommands:\n");
+    for c in commands {
+        s.push_str(&format!("  {:<18} {}\n", c.name, c.about));
+    }
+    s.push_str("\nper-command options:\n");
+    for c in commands {
+        if !c.options.is_empty() {
+            s.push_str(&format!("  {}:\n", c.name));
+            for (opt, about) in c.options {
+                s.push_str(&format!("    --{:<20} {}\n", opt, about));
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_positional_and_options() {
+        let a = parse(&["train", "--steps", "100", "--gate=gshard", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("gate"), Some("gshard"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["x", "--n", "8", "--f", "2.5", "--list", "1,2,3"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 8);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("f", 0.0).unwrap(), 2.5);
+        assert_eq!(a.usize_list_or("list", &[]).unwrap(), vec![1, 2, 3]);
+        assert!(a.usize_or("f", 0).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--quick", "--deep"]);
+        assert!(a.has_flag("quick"));
+        assert!(a.has_flag("deep"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // A value starting with '-' (not '--') is consumed as a value.
+        let a = parse(&["--offset", "-5"]);
+        assert_eq!(a.get("offset"), Some("-5"));
+    }
+
+    #[test]
+    fn usage_renders() {
+        let cmds = [CommandSpec {
+            name: "train",
+            about: "run training",
+            options: &[("steps", "number of steps")],
+        }];
+        let u = usage("hetumoe", &cmds);
+        assert!(u.contains("train"));
+        assert!(u.contains("--steps"));
+    }
+}

@@ -1,0 +1,80 @@
+//! Analytic GPU compute model.
+//!
+//! The paper's evaluation runs on TITAN RTX GPUs we do not have; compute
+//! phases of the *simulated* pipelines (Fig 1 / Fig 8) are charged with a
+//! roofline model: `time = launches·overhead + flops/peak + bytes/membw`.
+//! FLOP and byte counts come from the real tensor dimensions, launch
+//! counts from each system's actual kernel structure (fused vs unfused) —
+//! so relative system gaps emerge from mechanism, not fudge factors.
+
+/// Roofline parameters of one simulated GPU.
+#[derive(Clone, Debug)]
+pub struct GpuModel {
+    /// Effective matmul throughput, FLOP/s.
+    pub flops: f64,
+    /// Device memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Kernel launch + host sync overhead, seconds per launch.
+    pub launch_overhead: f64,
+}
+
+impl GpuModel {
+    /// TITAN RTX-class card (fp32 ≈ 16.3 TFLOPs peak, ~70% matmul
+    /// efficiency; 672 GB/s HBM; ~10 µs per launch incl. driver time).
+    pub fn titan_rtx() -> GpuModel {
+        GpuModel { flops: 11.5e12, mem_bw: 672.0e9, launch_overhead: 10.0e-6 }
+    }
+
+    /// A100-class card (for the Fig-1 single-node profile).
+    pub fn a100() -> GpuModel {
+        GpuModel { flops: 19.5e12 * 0.7, mem_bw: 1555.0e9, launch_overhead: 8.0e-6 }
+    }
+
+    /// Time of a compute-bound kernel.
+    pub fn compute_time(&self, flops: f64, launches: usize) -> f64 {
+        self.launch_overhead * launches as f64 + flops / self.flops
+    }
+
+    /// Time of a bandwidth-bound kernel.
+    pub fn memory_time(&self, bytes: f64, launches: usize) -> f64 {
+        self.launch_overhead * launches as f64 + bytes / self.mem_bw
+    }
+
+    /// Time of a kernel doing both (max of rails, plus launches).
+    pub fn kernel_time(&self, flops: f64, bytes: f64, launches: usize) -> f64 {
+        self.launch_overhead * launches as f64
+            + (flops / self.flops).max(bytes / self.mem_bw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_overhead_dominates_tiny_kernels() {
+        let g = GpuModel::titan_rtx();
+        let tiny = g.compute_time(1e3, 1);
+        assert!(tiny > 0.9 * g.launch_overhead);
+        // 30 launches of tiny kernels ≈ 30× one launch.
+        let many = g.compute_time(1e3, 30);
+        assert!(many / tiny > 25.0);
+    }
+
+    #[test]
+    fn big_matmul_is_compute_bound() {
+        let g = GpuModel::titan_rtx();
+        let flops = 2.0 * 32768.0 * 2048.0 * 2048.0;
+        let t = g.kernel_time(flops, 32768.0 * 2048.0 * 4.0 * 3.0, 1);
+        assert!((t - flops / g.flops).abs() / t < 0.2);
+    }
+
+    #[test]
+    fn bandwidth_bound_copy() {
+        let g = GpuModel::titan_rtx();
+        let bytes = 1e9;
+        let t = g.memory_time(bytes, 2);
+        assert!(t > bytes / g.mem_bw);
+        assert!(t < bytes / g.mem_bw + 3.0 * g.launch_overhead);
+    }
+}

@@ -1,0 +1,16 @@
+//! Cluster simulator: topology math, the α–β network cost model, and the
+//! simulated event timeline.
+//!
+//! The paper's testbed (nodes of 8 TITAN RTX GPUs over PCIe, one NIC per
+//! node) is unavailable here, so "GPUs" are simulated ranks that own real
+//! host buffers. Collectives in [`crate::comm`] move the actual bytes
+//! (semantics are testable) and charge simulated time through
+//! [`NetworkModel`] (performance is analyzable). See DESIGN.md §2.
+
+pub mod gpu;
+pub mod network;
+pub mod timeline;
+
+pub use gpu::GpuModel;
+pub use network::{LinkKind, NetworkModel};
+pub use timeline::{Event, Timeline};

@@ -1,0 +1,172 @@
+//! α–β network cost model with small-message bandwidth penalty and NIC
+//! contention.
+//!
+//! A point-to-point message of `m` bytes over a link with latency `α` and
+//! peak bandwidth `β` costs
+//!
+//! ```text
+//!   t(m) = α + m / eff_bw(m),     eff_bw(m) = β · m / (m + c)
+//! ```
+//!
+//! where `c` (`msg_bw_const`) is the half-peak message size — the standard
+//! way to capture that NCCL/RDMA reaches peak bandwidth only for large
+//! messages. Inter-node traffic of all GPUs in a node serializes through
+//! the node's NIC(s); that contention is what hierarchical AllToAll
+//! exploits (fewer, larger messages through the same NIC).
+
+use crate::config::ClusterConfig;
+
+/// Which physical link a transfer crosses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// GPU↔GPU inside a node (PCIe / NVLink), pairwise.
+    Intra,
+    /// Node↔node through the NIC.
+    Inter,
+    /// On-device copy (layout transform, message aggregation).
+    Device,
+}
+
+/// The cost model. Cheap to copy around; all methods are pure.
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    pub cfg: ClusterConfig,
+}
+
+impl NetworkModel {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        NetworkModel { cfg }
+    }
+
+    /// Effective bandwidth of one message of `bytes` on a link with peak
+    /// `bw`: `bw · m/(m+c)`.
+    pub fn eff_bw(&self, bw: f64, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return bw;
+        }
+        bw * bytes / (bytes + self.cfg.msg_bw_const)
+    }
+
+    /// Time for one point-to-point message.
+    pub fn msg_time(&self, kind: LinkKind, bytes: f64) -> f64 {
+        match kind {
+            LinkKind::Intra => {
+                self.cfg.intra_lat + bytes / self.eff_bw(self.cfg.intra_bw, bytes)
+            }
+            LinkKind::Inter => {
+                self.cfg.inter_lat + bytes / self.eff_bw(self.cfg.inter_bw, bytes)
+            }
+            LinkKind::Device => bytes / self.cfg.gpu_mem_bw,
+        }
+    }
+
+    /// Time for a batch of `count` equal messages through one NIC,
+    /// serialized (α per message + bytes at message-size effective bw),
+    /// spread over the node's NICs.
+    pub fn nic_batch_time(&self, count: usize, msg_bytes: f64) -> f64 {
+        if count == 0 || msg_bytes <= 0.0 {
+            return 0.0;
+        }
+        let per_msg = self.cfg.inter_lat + msg_bytes / self.eff_bw(self.cfg.inter_bw, msg_bytes);
+        per_msg * count as f64 / self.cfg.nics_per_node as f64
+    }
+
+    /// Time for `count` equal messages on one GPU's intra-node link,
+    /// serialized.
+    pub fn intra_batch_time(&self, count: usize, msg_bytes: f64) -> f64 {
+        if count == 0 || msg_bytes <= 0.0 {
+            return 0.0;
+        }
+        (self.cfg.intra_lat + msg_bytes / self.eff_bw(self.cfg.intra_bw, msg_bytes))
+            * count as f64
+    }
+
+    /// Gather/scatter of `total_bytes` through the node's PCIe-switch
+    /// fabric (aggregate bandwidth `intra_gather_bw`), `count` messages.
+    pub fn gather_time(&self, count: usize, total_bytes: f64) -> f64 {
+        if count == 0 || total_bytes <= 0.0 {
+            return 0.0;
+        }
+        self.cfg.intra_lat * count as f64 + total_bytes / self.cfg.intra_gather_bw
+    }
+
+    /// On-device copy time (layout transform / aggregation buffers).
+    pub fn device_copy_time(&self, bytes: f64) -> f64 {
+        bytes / self.cfg.gpu_mem_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn model() -> NetworkModel {
+        NetworkModel::new(ClusterConfig::commodity(4))
+    }
+
+    #[test]
+    fn eff_bw_monotone_in_message_size() {
+        let m = model();
+        let bw = m.cfg.inter_bw;
+        let small = m.eff_bw(bw, 1e4);
+        let mid = m.eff_bw(bw, 1e6);
+        let large = m.eff_bw(bw, 64e6);
+        assert!(small < mid && mid < large);
+        assert!(large <= bw);
+        // Half-peak at msg == c.
+        let half = m.eff_bw(bw, m.cfg.msg_bw_const);
+        assert!((half - bw / 2.0).abs() / bw < 1e-9);
+    }
+
+    #[test]
+    fn msg_time_has_latency_floor() {
+        let m = model();
+        let t = m.msg_time(LinkKind::Inter, 1.0);
+        assert!(t >= m.cfg.inter_lat);
+        // Zero-ish bytes → ~pure latency.
+        assert!((m.msg_time(LinkKind::Inter, 0.0) - m.cfg.inter_lat).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inter_slower_than_intra_for_same_bytes() {
+        let m = model();
+        let bytes = 4.0e6;
+        assert!(m.msg_time(LinkKind::Inter, bytes) > m.msg_time(LinkKind::Intra, bytes) * 0.5);
+        assert!(m.msg_time(LinkKind::Device, bytes) < m.msg_time(LinkKind::Intra, bytes));
+    }
+
+    #[test]
+    fn aggregation_beats_fragmentation_through_nic() {
+        // Same total bytes, 64 small messages vs 1 large: the large
+        // message must be strictly faster (this inequality IS the paper's
+        // hierarchical-AllToAll argument).
+        let m = model();
+        let total = 32.0e6;
+        let frag = m.nic_batch_time(64, total / 64.0);
+        let agg = m.nic_batch_time(1, total);
+        assert!(
+            agg < frag * 0.7,
+            "aggregated={agg:.6}s fragmented={frag:.6}s"
+        );
+    }
+
+    #[test]
+    fn nic_count_divides_time() {
+        let mut cfg = ClusterConfig::commodity(2);
+        cfg.nics_per_node = 2;
+        let m2 = NetworkModel::new(cfg);
+        let m1 = model();
+        let t1 = m1.nic_batch_time(8, 1e6);
+        let t2 = m2.nic_batch_time(8, 1e6);
+        assert!((t1 / t2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_edges() {
+        let m = model();
+        assert_eq!(m.nic_batch_time(0, 1e6), 0.0);
+        assert_eq!(m.intra_batch_time(3, 0.0), 0.0);
+        assert_eq!(m.gather_time(0, 0.0), 0.0);
+    }
+}

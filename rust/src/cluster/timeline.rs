@@ -1,0 +1,162 @@
+//! Simulated event timeline.
+//!
+//! Collectives and pipeline phases append [`Event`]s (name, simulated
+//! start, simulated duration). The timeline produces the per-phase
+//! breakdown behind Figure 1 and exports JSON for offline inspection.
+
+use crate::util::json::Json;
+
+/// One recorded phase/event on the simulated clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub name: String,
+    /// Simulated start time (seconds since step start).
+    pub start: f64,
+    /// Simulated duration (seconds).
+    pub dur: f64,
+}
+
+/// An append-only simulated timeline with a running clock.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    events: Vec<Event>,
+    clock: f64,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline::default()
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+
+    /// Record an event of `dur` seconds starting now; advances the clock.
+    pub fn push(&mut self, name: &str, dur: f64) {
+        self.events.push(Event { name: name.to_string(), start: self.clock, dur });
+        self.clock += dur;
+    }
+
+    /// Record an event that overlaps (does not advance the clock).
+    pub fn push_overlapped(&mut self, name: &str, dur: f64) {
+        self.events.push(Event { name: name.to_string(), start: self.clock, dur });
+    }
+
+    /// Advance the clock without an event (idle / barrier wait).
+    pub fn advance(&mut self, dur: f64) {
+        self.clock += dur;
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Total duration attributed to events whose name starts with `prefix`.
+    pub fn total_for(&self, prefix: &str) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.name.starts_with(prefix))
+            .map(|e| e.dur)
+            .sum()
+    }
+
+    /// Sum of all event durations.
+    pub fn total(&self) -> f64 {
+        self.events.iter().map(|e| e.dur).sum()
+    }
+
+    /// Collapse into (name → total seconds) pairs in first-seen order.
+    pub fn breakdown(&self) -> Vec<(String, f64)> {
+        let mut order: Vec<String> = Vec::new();
+        let mut totals: std::collections::HashMap<String, f64> = Default::default();
+        for e in &self.events {
+            if !totals.contains_key(&e.name) {
+                order.push(e.name.clone());
+            }
+            *totals.entry(e.name.clone()).or_insert(0.0) += e.dur;
+        }
+        order.into_iter().map(|n| {
+            let t = totals[&n];
+            (n, t)
+        }).collect()
+    }
+
+    /// Merge another timeline's events under a prefix, sequentially after
+    /// the current clock.
+    pub fn absorb(&mut self, prefix: &str, other: &Timeline) {
+        for e in other.events() {
+            self.push(&format!("{prefix}{}", e.name), e.dur);
+        }
+    }
+
+    /// Export as JSON (for tooling / EXPERIMENTS.md appendices).
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.events.iter().map(|e| {
+            Json::obj(vec![
+                ("name", Json::str(e.name.clone())),
+                ("start", Json::num(e.start)),
+                ("dur", Json::num(e.dur)),
+            ])
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_with_events() {
+        let mut t = Timeline::new();
+        t.push("gate", 0.1);
+        t.push("alltoall", 0.2);
+        assert!((t.now() - 0.3).abs() < 1e-12);
+        assert_eq!(t.events().len(), 2);
+        assert_eq!(t.events()[1].start, 0.1);
+    }
+
+    #[test]
+    fn overlapped_does_not_advance() {
+        let mut t = Timeline::new();
+        t.push_overlapped("prefetch", 0.5);
+        assert_eq!(t.now(), 0.0);
+        assert_eq!(t.total(), 0.5);
+    }
+
+    #[test]
+    fn breakdown_aggregates_by_name() {
+        let mut t = Timeline::new();
+        t.push("alltoall", 0.1);
+        t.push("expert", 0.3);
+        t.push("alltoall", 0.2);
+        let b = t.breakdown();
+        assert_eq!(b[0].0, "alltoall");
+        assert!((b[0].1 - 0.3).abs() < 1e-12);
+        assert!((t.total_for("all") - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_prefixes_and_sequences() {
+        let mut inner = Timeline::new();
+        inner.push("gather", 1.0);
+        inner.push("inter", 2.0);
+        let mut outer = Timeline::new();
+        outer.push("gate", 0.5);
+        outer.absorb("a2a/", &inner);
+        assert!((outer.now() - 3.5).abs() < 1e-12);
+        assert!((outer.total_for("a2a/") - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let mut t = Timeline::new();
+        t.push("x", 0.25);
+        let j = t.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].str_field("name").unwrap(), "x");
+        assert_eq!(arr[0].f64_field("dur").unwrap(), 0.25);
+    }
+}

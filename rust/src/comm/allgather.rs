@@ -1,0 +1,139 @@
+//! AllGather and ReduceScatter (ring schedules).
+//!
+//! Used by the coordinator for expert-parallel parameter collection and
+//! by the sharding ablations.
+
+use crate::cluster::NetworkModel;
+use crate::comm::{uniform_len, CommTiming};
+use crate::error::Result;
+
+/// AllGather: every rank ends with the concatenation of all ranks'
+/// buffers (rank order). Returns (gathered buffers, timing).
+pub fn allgather(net: &NetworkModel, buffers: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, CommTiming)> {
+    let w = buffers.len();
+    let len = uniform_len(buffers)?;
+    if w != net.cfg.world() {
+        return Err(crate::comm_err!(
+            "allgather over {w} buffers but cluster world is {}",
+            net.cfg.world()
+        ));
+    }
+    let mut cat = Vec::with_capacity(w * len);
+    for b in buffers {
+        cat.extend_from_slice(b);
+    }
+    let out = vec![cat; w];
+    Ok((out, ring_timing(net, len * 4, w.saturating_sub(1))))
+}
+
+/// ReduceScatter: rank `r` ends with the elementwise sum of everyone's
+/// chunk `r`. Buffers must be `W` equal chunks long.
+pub fn reduce_scatter(
+    net: &NetworkModel,
+    buffers: &mut [Vec<f32>],
+) -> Result<CommTiming> {
+    let w = buffers.len();
+    let len = uniform_len(buffers)?;
+    if w != net.cfg.world() {
+        return Err(crate::comm_err!(
+            "reduce_scatter over {w} buffers but cluster world is {}",
+            net.cfg.world()
+        ));
+    }
+    if len % w != 0 {
+        return Err(crate::comm_err!("buffer len {len} not divisible by world {w}"));
+    }
+    let chunk = len / w;
+    let mut outs: Vec<Vec<f32>> = Vec::with_capacity(w);
+    for r in 0..w {
+        let mut acc = vec![0.0f32; chunk];
+        for b in buffers.iter() {
+            for (a, x) in acc.iter_mut().zip(&b[r * chunk..(r + 1) * chunk]) {
+                *a += *x;
+            }
+        }
+        outs.push(acc);
+    }
+    for (b, o) in buffers.iter_mut().zip(outs) {
+        *b = o;
+    }
+    Ok(ring_timing(net, chunk * 4, w.saturating_sub(1)))
+}
+
+/// Ring timing: `steps` steps, each forwarding `seg_bytes` along the ring.
+fn ring_timing(net: &NetworkModel, seg_bytes: usize, steps: usize) -> CommTiming {
+    let cfg = &net.cfg;
+    if steps == 0 {
+        return CommTiming { phases: vec![("ring".into(), 0.0)], total: 0.0 };
+    }
+    let seg = seg_bytes as f64;
+    let intra_hop = cfg.intra_lat + seg / net.eff_bw(cfg.intra_bw, seg);
+    let hop = if cfg.nodes > 1 {
+        let inter_hop = cfg.inter_lat + seg / net.eff_bw(cfg.inter_bw, seg);
+        intra_hop.max(inter_hop)
+    } else {
+        intra_hop
+    };
+    let total = hop * steps as f64;
+    CommTiming { phases: vec![("ring".into(), total)], total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn net(nodes: usize, gpus: usize) -> NetworkModel {
+        let mut cfg = ClusterConfig::commodity(nodes);
+        cfg.gpus_per_node = gpus;
+        NetworkModel::new(cfg)
+    }
+
+    #[test]
+    fn allgather_concatenates_in_rank_order() {
+        let m = net(1, 3);
+        let bufs = vec![vec![1.0f32], vec![2.0], vec![3.0]];
+        let (out, t) = allgather(&m, &bufs).unwrap();
+        for o in &out {
+            assert_eq!(o, &vec![1.0, 2.0, 3.0]);
+        }
+        assert!(t.total > 0.0);
+    }
+
+    #[test]
+    fn reduce_scatter_sums_chunks() {
+        let m = net(2, 2);
+        // 4 ranks, chunk=2. Rank r ends with sum of chunk r.
+        let mut bufs: Vec<Vec<f32>> = (0..4)
+            .map(|r| (0..8).map(|i| (r * 10 + i) as f32).collect())
+            .collect();
+        reduce_scatter(&m, &mut bufs).unwrap();
+        // chunk r elementwise: sum over ranks of (r*2+i + 10*rank).
+        for r in 0..4 {
+            for i in 0..2 {
+                let expect: f32 = (0..4).map(|s| (s * 10 + r * 2 + i) as f32).sum();
+                assert_eq!(bufs[r][i], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_then_allgather_is_allreduce() {
+        let m = net(2, 2);
+        let mut a: Vec<Vec<f32>> = (0..4)
+            .map(|r| (0..8).map(|i| (r + i) as f32).collect())
+            .collect();
+        let mut expected = a.clone();
+        crate::comm::allreduce(&m, &mut expected).unwrap();
+        reduce_scatter(&m, &mut a).unwrap();
+        let (gathered, _) = allgather(&m, &a).unwrap();
+        assert_eq!(gathered[0], expected[0]);
+    }
+
+    #[test]
+    fn validates_divisibility() {
+        let m = net(1, 4);
+        let mut bad = vec![vec![0.0; 5]; 4];
+        assert!(reduce_scatter(&m, &mut bad).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Ring AllReduce (for the dense, non-expert gradients).
+//!
+//! MoE models still allreduce the non-expert parameters every step; the
+//! coordinator charges this through the same cost model so end-to-end
+//! step times (Fig 8) include it.
+
+use crate::cluster::NetworkModel;
+use crate::comm::{uniform_len, CommTiming};
+use crate::error::Result;
+
+/// In-place sum-AllReduce: every rank's buffer becomes the elementwise
+/// sum over all ranks. Timing models the standard 2(W−1)-step ring.
+pub fn allreduce(net: &NetworkModel, buffers: &mut [Vec<f32>]) -> Result<CommTiming> {
+    let w = buffers.len();
+    let len = uniform_len(buffers)?;
+    if w != net.cfg.world() {
+        return Err(crate::comm_err!(
+            "allreduce over {w} buffers but cluster world is {}",
+            net.cfg.world()
+        ));
+    }
+
+    // ---- data movement: reduce then broadcast (semantically equal to ring) ----
+    let mut sum = vec![0.0f32; len];
+    for b in buffers.iter() {
+        for (acc, x) in sum.iter_mut().zip(b) {
+            *acc += *x;
+        }
+    }
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(&sum);
+    }
+
+    Ok(allreduce_timing(net, len * 4))
+}
+
+/// Ring-allreduce timing for a `bytes`-sized buffer per rank.
+///
+/// 2(W−1) steps; in each step every rank forwards `bytes/W` to its ring
+/// neighbor. Within a node the hop crosses PCIe; at node boundaries it
+/// crosses the NIC — with the ring laid out rank-major, each node has
+/// exactly one outbound boundary hop per step, so the NIC carries one
+/// message per step.
+pub fn allreduce_timing(net: &NetworkModel, bytes: usize) -> CommTiming {
+    let cfg = &net.cfg;
+    let w = cfg.world();
+    if w == 1 {
+        return CommTiming { phases: vec![("local".into(), 0.0)], total: 0.0 };
+    }
+    let seg = bytes as f64 / w as f64;
+    let steps = 2 * (w - 1);
+    let intra_hop = cfg.intra_lat + seg / net.eff_bw(cfg.intra_bw, seg);
+    let step_time = if cfg.nodes > 1 {
+        let inter_hop = cfg.inter_lat + seg / net.eff_bw(cfg.inter_bw, seg);
+        intra_hop.max(inter_hop) // slowest hop paces the ring
+    } else {
+        intra_hop
+    };
+    let total = steps as f64 * step_time;
+    CommTiming { phases: vec![("ring".into(), total)], total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::util::rng::Rng;
+
+    fn net(nodes: usize, gpus: usize) -> NetworkModel {
+        let mut cfg = ClusterConfig::commodity(nodes);
+        cfg.gpus_per_node = gpus;
+        NetworkModel::new(cfg)
+    }
+
+    #[test]
+    fn sums_across_ranks() {
+        let m = net(2, 2);
+        let mut bufs = vec![
+            vec![1.0f32, 2.0],
+            vec![10.0, 20.0],
+            vec![100.0, 200.0],
+            vec![1000.0, 2000.0],
+        ];
+        allreduce(&m, &mut bufs).unwrap();
+        for b in &bufs {
+            assert_eq!(b, &vec![1111.0, 2222.0]);
+        }
+    }
+
+    #[test]
+    fn idempotent_on_equal_inputs_scaled() {
+        let m = net(1, 4);
+        let mut rng = Rng::seed(0);
+        let base: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let mut bufs = vec![base.clone(); 4];
+        allreduce(&m, &mut bufs).unwrap();
+        for b in &bufs {
+            for (x, y) in b.iter().zip(&base) {
+                assert!((x - y * 4.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn timing_grows_with_world_and_bytes() {
+        let t_small = allreduce_timing(&net(1, 2), 1 << 20);
+        let t_big = allreduce_timing(&net(4, 8), 1 << 20);
+        assert!(t_big.total > t_small.total);
+        let t_more_bytes = allreduce_timing(&net(4, 8), 1 << 24);
+        assert!(t_more_bytes.total > t_big.total);
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let t = allreduce_timing(&net(1, 1), 1 << 20);
+        assert_eq!(t.total, 0.0);
+        let mut bufs = vec![vec![3.0f32]];
+        allreduce(&net(1, 1), &mut bufs).unwrap();
+        assert_eq!(bufs[0], vec![3.0]);
+    }
+}

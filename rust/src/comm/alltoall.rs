@@ -1,0 +1,313 @@
+//! Vanilla (flat, NCCL-style) AllToAll.
+//!
+//! Paper Figure 5: every GPU splits its buffer into `W` equal chunks and
+//! exchanges chunk `j` with rank `j`. With `N` nodes × `G` GPUs and
+//! per-GPU payload `B`, each inter-node message is only `B/(NG)` bytes —
+//! at the paper's common setting (`N=8, G=8, B=16 MB`) that is 256 KB,
+//! far below the NIC's bandwidth saturation point, which is exactly the
+//! inefficiency hierarchical AllToAll removes.
+
+use crate::cluster::NetworkModel;
+use crate::comm::{uniform_len, CommTiming};
+use crate::error::Result;
+
+/// Flat AllToAll over equal chunks.
+///
+/// `buffers[r]` holds rank `r`'s send data, logically `W` chunks of
+/// `len/W` elements; on return `buffers[r]` chunk `s` contains what rank
+/// `s` had in chunk `r`. Returns the simulated timing on `net`'s cluster.
+pub fn alltoall(net: &NetworkModel, buffers: &mut [Vec<f32>]) -> Result<CommTiming> {
+    let w = buffers.len();
+    let len = uniform_len(buffers)?;
+    let cfg = &net.cfg;
+    if w != cfg.world() {
+        return Err(crate::comm_err!(
+            "alltoall over {w} buffers but cluster world is {}",
+            cfg.world()
+        ));
+    }
+    if len % w != 0 {
+        return Err(crate::comm_err!("buffer len {len} not divisible by world {w}"));
+    }
+    let chunk = len / w;
+
+    // ---- data movement: out[r][s] = in[s][r] (chunk-wise transpose) ----
+    let mut out: Vec<Vec<f32>> = vec![vec![0.0f32; len]; w];
+    for r in 0..w {
+        for s in 0..w {
+            out[r][s * chunk..(s + 1) * chunk]
+                .copy_from_slice(&buffers[s][r * chunk..(r + 1) * chunk]);
+        }
+    }
+    for (b, o) in buffers.iter_mut().zip(out) {
+        *b = o;
+    }
+
+    // ---- simulated timing ----
+    Ok(flat_alltoall_timing(net, chunk * 4))
+}
+
+/// Timing of a flat AllToAll with `chunk_bytes` per pairwise message
+/// (separate so benches can sweep payloads without allocating).
+pub fn flat_alltoall_timing(net: &NetworkModel, chunk_bytes: usize) -> CommTiming {
+    let cfg = &net.cfg;
+    let (n, g) = (cfg.nodes, cfg.gpus_per_node);
+    let w = n * g;
+    let cb = chunk_bytes as f64;
+
+    // Each GPU sends G-1 intra-node chunks over its own PCIe link.
+    let t_intra = net.intra_batch_time(g.saturating_sub(1), cb);
+    // Each node pushes G·(W−G) chunks through its NIC(s).
+    let t_inter = net.nic_batch_time(g * (w - g), cb);
+    // Intra and inter rails run concurrently (NCCL overlaps channels).
+    let total = t_intra.max(t_inter);
+    CommTiming {
+        phases: vec![("intra".into(), t_intra), ("inter".into(), t_inter)],
+        total,
+    }
+}
+
+/// Variable-count AllToAll (`alltoallv`): `counts[s][d]` elements flow
+/// from rank `s` to rank `d`. `buffers[s]` is the concatenation of the
+/// `W` destination segments in rank order; on return `buffers[d]` is the
+/// concatenation of the `W` source segments in rank order.
+pub fn alltoallv(
+    net: &NetworkModel,
+    buffers: &mut [Vec<f32>],
+    counts: &[Vec<usize>],
+) -> Result<CommTiming> {
+    let w = buffers.len();
+    let cfg = &net.cfg;
+    if w != cfg.world() {
+        return Err(crate::comm_err!(
+            "alltoallv over {w} buffers but cluster world is {}",
+            cfg.world()
+        ));
+    }
+    if counts.len() != w || counts.iter().any(|row| row.len() != w) {
+        return Err(crate::comm_err!("counts must be {w}x{w}"));
+    }
+    for s in 0..w {
+        let expect: usize = counts[s].iter().sum();
+        if buffers[s].len() != expect {
+            return Err(crate::comm_err!(
+                "rank {s}: buffer has {} elements but counts sum to {expect}",
+                buffers[s].len()
+            ));
+        }
+    }
+
+    // Source-side segment offsets.
+    let offsets: Vec<Vec<usize>> = counts
+        .iter()
+        .map(|row| {
+            let mut off = vec![0usize; w];
+            for d in 1..w {
+                off[d] = off[d - 1] + row[d - 1];
+            }
+            off
+        })
+        .collect();
+
+    // ---- data movement ----
+    let mut out: Vec<Vec<f32>> = (0..w)
+        .map(|d| {
+            let total: usize = counts.iter().map(|row| row[d]).sum();
+            Vec::with_capacity(total)
+        })
+        .collect();
+    for (d, out_d) in out.iter_mut().enumerate() {
+        for s in 0..w {
+            let lo = offsets[s][d];
+            out_d.extend_from_slice(&buffers[s][lo..lo + counts[s][d]]);
+        }
+    }
+    for (b, o) in buffers.iter_mut().zip(out) {
+        *b = o;
+    }
+
+    // ---- simulated timing: worst GPU intra rail, worst NIC inter rail ----
+    let (n, g) = (cfg.nodes, cfg.gpus_per_node);
+    let mut t_intra_max = 0.0f64;
+    let mut t_inter_max = 0.0f64;
+    for node in 0..n {
+        let mut nic_time = 0.0f64;
+        for local in 0..g {
+            let s = node * g + local;
+            let mut gpu_intra = 0.0f64;
+            for d in 0..w {
+                if d == s || counts[s][d] == 0 {
+                    continue;
+                }
+                let bytes = (counts[s][d] * 4) as f64;
+                if cfg.node_of(d) == node {
+                    gpu_intra +=
+                        cfg.intra_lat + bytes / net.eff_bw(cfg.intra_bw, bytes);
+                } else {
+                    nic_time += cfg.inter_lat + bytes / net.eff_bw(cfg.inter_bw, bytes);
+                }
+            }
+            t_intra_max = t_intra_max.max(gpu_intra);
+        }
+        t_inter_max = t_inter_max.max(nic_time / cfg.nics_per_node as f64);
+    }
+    Ok(CommTiming {
+        phases: vec![("intra".into(), t_intra_max), ("inter".into(), t_inter_max)],
+        total: t_intra_max.max(t_inter_max),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+
+    fn net(nodes: usize, gpus: usize) -> NetworkModel {
+        let mut cfg = ClusterConfig::commodity(nodes);
+        cfg.gpus_per_node = gpus;
+        NetworkModel::new(cfg)
+    }
+
+    /// Tag each element with (source rank, chunk index, offset) so the
+    /// permutation is fully checkable.
+    fn tagged(w: usize, chunk: usize) -> Vec<Vec<f32>> {
+        (0..w)
+            .map(|r| {
+                (0..w * chunk)
+                    .map(|i| (r * w * chunk + i) as f32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn alltoall_permutation_semantics() {
+        let m = net(2, 2);
+        let chunk = 3;
+        let mut bufs = tagged(4, chunk);
+        let orig = bufs.clone();
+        alltoall(&m, &mut bufs).unwrap();
+        for r in 0..4 {
+            for s in 0..4 {
+                assert_eq!(
+                    &bufs[r][s * chunk..(s + 1) * chunk],
+                    &orig[s][r * chunk..(r + 1) * chunk],
+                    "dest {r} chunk {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_is_involution() {
+        let m = net(2, 4);
+        let mut rng = Rng::seed(0);
+        let w = 8;
+        let mut bufs: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..w * 5).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let orig = bufs.clone();
+        alltoall(&m, &mut bufs).unwrap();
+        alltoall(&m, &mut bufs).unwrap();
+        assert_eq!(bufs, orig);
+    }
+
+    #[test]
+    fn alltoall_conserves_elements() {
+        let m = net(2, 2);
+        let mut rng = Rng::seed(1);
+        let mut bufs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..8).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let sum_before: f64 = bufs.iter().flatten().map(|&x| x as f64).sum();
+        alltoall(&m, &mut bufs).unwrap();
+        let sum_after: f64 = bufs.iter().flatten().map(|&x| x as f64).sum();
+        assert!((sum_before - sum_after).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alltoall_validates_inputs() {
+        let m = net(1, 4);
+        let mut bad_world = vec![vec![0.0; 4]; 3];
+        assert!(alltoall(&m, &mut bad_world).is_err());
+        let mut bad_len = vec![vec![0.0; 5]; 4]; // 5 % 4 != 0
+        assert!(alltoall(&m, &mut bad_len).is_err());
+    }
+
+    #[test]
+    fn timing_inter_dominates_on_commodity() {
+        // Multi-node flat alltoall must be NIC-bound (paper: 99% of time
+        // under 100 Gbps).
+        let m = net(8, 8);
+        let t = flat_alltoall_timing(&m, 16 * 1024 * 1024 / 64);
+        assert!(t.phase("inter") > t.phase("intra") * 5.0);
+        assert_eq!(t.total, t.phase("inter").max(t.phase("intra")));
+    }
+
+    #[test]
+    fn timing_scales_with_payload() {
+        let m = net(4, 8);
+        let small = flat_alltoall_timing(&m, 1024);
+        let big = flat_alltoall_timing(&m, 1024 * 1024);
+        assert!(big.total > small.total);
+    }
+
+    #[test]
+    fn alltoallv_matches_alltoall_on_equal_counts() {
+        let m = net(2, 2);
+        let w = 4;
+        let chunk = 3;
+        let mut a = tagged(w, chunk);
+        let mut b = a.clone();
+        let counts = vec![vec![chunk; w]; w];
+        alltoall(&m, &mut a).unwrap();
+        alltoallv(&m, &mut b, &counts).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn alltoallv_ragged_counts() {
+        let m = net(1, 3);
+        // counts[s][d]: s sends (s+d) elements to d.
+        let counts: Vec<Vec<usize>> =
+            (0..3).map(|s| (0..3).map(|d| s + d).collect()).collect();
+        let mut bufs: Vec<Vec<f32>> = (0..3)
+            .map(|s| {
+                let total: usize = counts[s].iter().sum();
+                (0..total).map(|i| (s * 100 + i) as f32).collect()
+            })
+            .collect();
+        alltoallv(&m, &mut bufs, &counts).unwrap();
+        for d in 0..3 {
+            let expect: usize = (0..3).map(|s| counts[s][d]).sum();
+            assert_eq!(bufs[d].len(), expect, "dest {d}");
+        }
+        // Spot-check: dest 2 receives from src 1 the segment after src 0's.
+        // src 1 sends to 2: counts[1][2]=3 elements starting at offset 1+2=3.
+        let received = &bufs[2][counts[0][2]..counts[0][2] + counts[1][2]];
+        assert_eq!(received, &[103.0, 104.0, 105.0]);
+    }
+
+    #[test]
+    fn alltoallv_conservation_property() {
+        for_all(20, |g| {
+            let w = 4;
+            let m = net(2, 2);
+            let counts: Vec<Vec<usize>> = (0..w)
+                .map(|_| (0..w).map(|_| g.usize_in(0..6)).collect())
+                .collect();
+            let mut bufs: Vec<Vec<f32>> = (0..w)
+                .map(|s| {
+                    let total: usize = counts[s].iter().sum();
+                    (0..total).map(|i| (s * 1000 + i) as f32).collect()
+                })
+                .collect();
+            let before: usize = bufs.iter().map(|b| b.len()).sum();
+            alltoallv(&m, &mut bufs, &counts).unwrap();
+            let after: usize = bufs.iter().map(|b| b.len()).sum();
+            assert_eq!(before, after);
+        });
+    }
+}

@@ -1,0 +1,86 @@
+//! Collective communication over the simulated cluster.
+//!
+//! Every collective does **two** things:
+//! 1. moves the real bytes between per-rank host buffers — so semantics
+//!    are unit-testable (hierarchical AllToAll must produce *exactly* the
+//!    vanilla AllToAll permutation);
+//! 2. returns a [`CommTiming`] computed from the [`NetworkModel`] — the
+//!    simulated wall time the same schedule would take on the paper's
+//!    cluster (PCIe intra-node, one NIC inter-node).
+//!
+//! The split mirrors the paper's Figure 5 (vanilla NCCL AllToAll) and
+//! Figure 6 (hierarchical AllToAll: intra-node gather → on-device layout
+//! transform → aggregated inter-node AllToAll → scatter).
+
+pub mod allgather;
+pub mod allreduce;
+pub mod alltoall;
+pub mod hierarchical;
+
+pub use allgather::{allgather, reduce_scatter};
+pub use allreduce::allreduce;
+pub use alltoall::{alltoall, alltoallv};
+pub use hierarchical::hierarchical_alltoall;
+
+/// Simulated timing of one collective, with a per-phase breakdown.
+#[derive(Clone, Debug, Default)]
+pub struct CommTiming {
+    /// (phase name, simulated seconds). Phases may overlap; `total` is
+    /// authoritative.
+    pub phases: Vec<(String, f64)>,
+    /// Simulated wall time of the whole collective.
+    pub total: f64,
+}
+
+impl CommTiming {
+    pub fn phase(&self, name: &str) -> f64 {
+        self.phases
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, t)| *t)
+            .sum()
+    }
+}
+
+/// Check that all rank buffers have identical length; returns it.
+pub(crate) fn uniform_len(buffers: &[Vec<f32>]) -> crate::error::Result<usize> {
+    let w = buffers.len();
+    if w == 0 {
+        return Err(crate::comm_err!("no ranks"));
+    }
+    let len = buffers[0].len();
+    for (r, b) in buffers.iter().enumerate() {
+        if b.len() != len {
+            return Err(crate::comm_err!(
+                "rank {r} buffer has {} elements, rank 0 has {len}",
+                b.len()
+            ));
+        }
+    }
+    Ok(len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_timing_phase_lookup() {
+        let t = CommTiming {
+            phases: vec![("a".into(), 1.0), ("b".into(), 2.0), ("a".into(), 0.5)],
+            total: 3.5,
+        };
+        assert!((t.phase("a") - 1.5).abs() < 1e-12);
+        assert_eq!(t.phase("zzz"), 0.0);
+    }
+
+    #[test]
+    fn uniform_len_rejects_ragged() {
+        let ok = vec![vec![0.0; 4], vec![0.0; 4]];
+        assert_eq!(uniform_len(&ok).unwrap(), 4);
+        let bad = vec![vec![0.0; 4], vec![0.0; 5]];
+        assert!(uniform_len(&bad).is_err());
+        let empty: Vec<Vec<f32>> = vec![];
+        assert!(uniform_len(&empty).is_err());
+    }
+}

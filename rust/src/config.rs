@@ -1,0 +1,473 @@
+//! Typed configuration system.
+//!
+//! Configs load from JSON files (see `configs/` at the repo root for
+//! presets) or from built-in presets; every field is validated before a
+//! run starts so misconfigurations fail fast at the CLI boundary rather
+//! than deep in a collective.
+
+use crate::error::{HetuError, Result};
+use crate::util::json::Json;
+
+/// Which gating strategy to run (the paper's Figure 2 feature matrix).
+#[derive(Clone, Debug, PartialEq)]
+pub enum GateKind {
+    /// Switch Transformer: top-1 with capacity factor + auxiliary loss.
+    Switch,
+    /// GShard: top-2 with capacity factor.
+    GShard,
+    /// Generic top-k.
+    TopK { k: usize },
+    /// M6-T: experts split into `k` prototypes, top-1 within each.
+    KTop1 { k: usize },
+    /// SAM: hierarchical — switch over `groups`, top-`k` within the group.
+    SamHTopK { groups: usize, k: usize },
+    /// BASE layer: balanced linear assignment (auction algorithm).
+    Base,
+    /// Hash layer: deterministic token→expert hash.
+    Hash { scheme: HashScheme },
+    /// Dense-to-Sparse: Gumbel-softmax with temperature annealing.
+    DenseToSparse { tau0: f64, tau_min: f64, anneal_steps: u64 },
+}
+
+/// Hash-layer variants (Roller et al., 2021).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HashScheme {
+    Random,
+    Balanced,
+    Clustered,
+}
+
+impl GateKind {
+    /// Parse from the JSON config form, e.g.
+    /// `{"gate": "switch"}` or `{"gate": "topk", "k": 4}`.
+    pub fn from_json(obj: &Json) -> Result<GateKind> {
+        let name = obj.str_or("gate", "switch").to_lowercase();
+        Ok(match name.as_str() {
+            "switch" | "top1" => GateKind::Switch,
+            "gshard" | "top2" => GateKind::GShard,
+            "topk" => GateKind::TopK { k: obj.usize_or("k", 2) },
+            "ktop1" | "m6" => GateKind::KTop1 { k: obj.usize_or("k", 2) },
+            "sam" | "htopk" => GateKind::SamHTopK {
+                groups: obj.usize_or("groups", 4),
+                k: obj.usize_or("k", 2),
+            },
+            "base" => GateKind::Base,
+            "hash" => GateKind::Hash {
+                scheme: match obj.str_or("scheme", "random") {
+                    "balanced" => HashScheme::Balanced,
+                    "clustered" => HashScheme::Clustered,
+                    _ => HashScheme::Random,
+                },
+            },
+            "dense_to_sparse" | "d2s" => GateKind::DenseToSparse {
+                tau0: obj.f64_or("tau0", 2.0),
+                tau_min: obj.f64_or("tau_min", 0.1),
+                anneal_steps: obj.f64_or("anneal_steps", 10_000.0) as u64,
+            },
+            other => {
+                return Err(HetuError::Config(format!("unknown gate '{other}'")));
+            }
+        })
+    }
+
+    /// Short display name used in tables.
+    pub fn name(&self) -> String {
+        match self {
+            GateKind::Switch => "switch".into(),
+            GateKind::GShard => "gshard".into(),
+            GateKind::TopK { k } => format!("top{k}"),
+            GateKind::KTop1 { k } => format!("{k}top1"),
+            GateKind::SamHTopK { groups, k } => format!("sam_g{groups}k{k}"),
+            GateKind::Base => "base".into(),
+            GateKind::Hash { scheme } => format!("hash_{scheme:?}").to_lowercase(),
+            GateKind::DenseToSparse { .. } => "dense_to_sparse".into(),
+        }
+    }
+}
+
+/// MoE layer configuration (the paper's benchmark layer defaults:
+/// 16 experts, hidden 2048, embedding 2048, sequence 1024).
+#[derive(Clone, Debug)]
+pub struct MoeConfig {
+    pub num_experts: usize,
+    pub d_model: usize,
+    pub ffn_hidden: usize,
+    pub capacity_factor: f64,
+    pub gate: GateKind,
+}
+
+impl MoeConfig {
+    pub fn paper_layer() -> MoeConfig {
+        MoeConfig {
+            num_experts: 16,
+            d_model: 2048,
+            ffn_hidden: 2048,
+            capacity_factor: 1.25,
+            gate: GateKind::Switch,
+        }
+    }
+
+    /// Scaled-down layer for CPU-bound benches (same expert count and
+    /// shape ratios as the paper layer).
+    pub fn bench_layer() -> MoeConfig {
+        MoeConfig {
+            num_experts: 16,
+            d_model: 256,
+            ffn_hidden: 256,
+            capacity_factor: 1.25,
+            gate: GateKind::Switch,
+        }
+    }
+
+    pub fn tiny() -> MoeConfig {
+        MoeConfig {
+            num_experts: 4,
+            d_model: 16,
+            ffn_hidden: 32,
+            capacity_factor: 1.5,
+            gate: GateKind::Switch,
+        }
+    }
+
+    pub fn from_json(obj: &Json) -> Result<MoeConfig> {
+        let cfg = MoeConfig {
+            num_experts: obj.usize_or("num_experts", 16),
+            d_model: obj.usize_or("d_model", 2048),
+            ffn_hidden: obj.usize_or("ffn_hidden", 2048),
+            capacity_factor: obj.f64_or("capacity_factor", 1.25),
+            gate: GateKind::from_json(obj)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.num_experts == 0 {
+            return Err(HetuError::Config("num_experts must be > 0".into()));
+        }
+        if self.d_model == 0 || self.ffn_hidden == 0 {
+            return Err(HetuError::Config("d_model/ffn_hidden must be > 0".into()));
+        }
+        if self.capacity_factor <= 0.0 {
+            return Err(HetuError::Config("capacity_factor must be > 0".into()));
+        }
+        match &self.gate {
+            GateKind::TopK { k } | GateKind::KTop1 { k } if *k == 0 => {
+                return Err(HetuError::Config("k must be > 0".into()));
+            }
+            GateKind::TopK { k } if *k > self.num_experts => {
+                return Err(HetuError::Config(format!(
+                    "k={k} exceeds num_experts={}",
+                    self.num_experts
+                )));
+            }
+            GateKind::KTop1 { k } if self.num_experts % *k != 0 => {
+                return Err(HetuError::Config(format!(
+                    "kTop1 needs num_experts divisible by k ({} % {k} != 0)",
+                    self.num_experts
+                )));
+            }
+            GateKind::SamHTopK { groups, k } => {
+                if *groups == 0 || self.num_experts % *groups != 0 {
+                    return Err(HetuError::Config(format!(
+                        "SAM needs num_experts divisible by groups ({} % {groups})",
+                        self.num_experts
+                    )));
+                }
+                if *k > self.num_experts / *groups {
+                    return Err(HetuError::Config(format!(
+                        "SAM k={k} exceeds experts per group {}",
+                        self.num_experts / *groups
+                    )));
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Expert capacity for `tokens` inputs: `ceil(tokens/E * factor)`,
+    /// scaled by the number of expert slots each token consumes.
+    pub fn capacity(&self, tokens: usize) -> usize {
+        let k = match &self.gate {
+            GateKind::Switch | GateKind::Base | GateKind::Hash { .. } => 1,
+            GateKind::GShard => 2,
+            GateKind::TopK { k } | GateKind::KTop1 { k } => *k,
+            GateKind::SamHTopK { k, .. } => *k,
+            GateKind::DenseToSparse { .. } => 2,
+        };
+        (((tokens * k) as f64 / self.num_experts as f64) * self.capacity_factor)
+            .ceil()
+            .max(1.0) as usize
+    }
+}
+
+/// Cluster topology + link performance (the simulator's ground truth).
+///
+/// Defaults model the paper's commodity setting: PCIe ~12 GB/s intra-node,
+/// one 100 Gbps NIC per node, with realistic per-message launch latencies.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Intra-node (PCIe/NVLink) bandwidth per GPU pair, bytes/sec.
+    pub intra_bw: f64,
+    /// Inter-node NIC bandwidth, bytes/sec (shared by the node).
+    pub inter_bw: f64,
+    /// Per-message launch latency intra-node, seconds.
+    pub intra_lat: f64,
+    /// Per-message latency inter-node, seconds.
+    pub inter_lat: f64,
+    /// NICs per node (the paper's commodity cluster has 1).
+    pub nics_per_node: usize,
+    /// On-device memory bandwidth (bytes/sec) — charges the on-GPU layout
+    /// transform / message-aggregation copies of hierarchical AllToAll.
+    pub gpu_mem_bw: f64,
+    /// Small-message bandwidth penalty constant (bytes): a message of size
+    /// `m` achieves `bw * m / (m + msg_bw_const)` effective bandwidth.
+    /// Calibrated against NCCL busbw curves (≈0.33× peak at 0.5 MiB,
+    /// ≈0.95× peak at 32 MiB over 100 Gbps RoCE).
+    pub msg_bw_const: f64,
+    /// Effective aggregate intra-node bandwidth for the gather/scatter
+    /// phases of hierarchical AllToAll (PCIe-switch fabric aggregate,
+    /// higher than a single pairwise link).
+    pub intra_gather_bw: f64,
+}
+
+impl ClusterConfig {
+    /// The paper's evaluation cluster: 8 GPUs per node over PCIe, 1 NIC.
+    pub fn commodity(nodes: usize) -> ClusterConfig {
+        ClusterConfig {
+            nodes,
+            gpus_per_node: 8,
+            intra_bw: 12.0e9,   // PCIe 3.0 x16 practical
+            inter_bw: 12.5e9,   // 100 Gbps
+            intra_lat: 3.0e-6,  // ~3 µs kernel/copy launch
+            inter_lat: 20.0e-6, // ~20 µs RDMA/TCP message setup
+            nics_per_node: 1,
+            gpu_mem_bw: 600.0e9,    // TITAN RTX HBM-class
+            msg_bw_const: 1.0e6,    // ~1 MiB half-peak message size
+            intra_gather_bw: 25.0e9, // PCIe switch fabric aggregate
+        }
+    }
+
+    /// NVLink "hypercluster" for contrast experiments.
+    pub fn hypercluster(nodes: usize) -> ClusterConfig {
+        ClusterConfig {
+            nodes,
+            gpus_per_node: 8,
+            intra_bw: 300.0e9, // NVLink
+            inter_bw: 50.0e9,  // 8×50 Gbps HDR per node aggregated
+            intra_lat: 2.0e-6,
+            inter_lat: 5.0e-6,
+            nics_per_node: 8,
+            gpu_mem_bw: 1500.0e9,
+            msg_bw_const: 0.25e6,
+            intra_gather_bw: 250.0e9,
+        }
+    }
+
+    pub fn from_json(obj: &Json) -> Result<ClusterConfig> {
+        let cfg = ClusterConfig {
+            nodes: obj.usize_or("nodes", 1),
+            gpus_per_node: obj.usize_or("gpus_per_node", 8),
+            intra_bw: obj.f64_or("intra_bw_gbps", 96.0) * 1e9 / 8.0,
+            inter_bw: obj.f64_or("inter_bw_gbps", 100.0) * 1e9 / 8.0,
+            intra_lat: obj.f64_or("intra_lat_us", 3.0) * 1e-6,
+            inter_lat: obj.f64_or("inter_lat_us", 20.0) * 1e-6,
+            nics_per_node: obj.usize_or("nics_per_node", 1),
+            gpu_mem_bw: obj.f64_or("gpu_mem_bw_gbps", 4800.0) * 1e9 / 8.0,
+            msg_bw_const: obj.f64_or("msg_bw_const_mib", 1.0) * 1024.0 * 1024.0,
+            intra_gather_bw: obj.f64_or("intra_gather_bw_gbps", 200.0) * 1e9 / 8.0,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.gpus_per_node == 0 {
+            return Err(HetuError::Config("nodes/gpus_per_node must be > 0".into()));
+        }
+        if self.intra_bw <= 0.0 || self.inter_bw <= 0.0 {
+            return Err(HetuError::Config("bandwidths must be > 0".into()));
+        }
+        if self.nics_per_node == 0 {
+            return Err(HetuError::Config("nics_per_node must be > 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Total GPU (rank) count.
+    pub fn world(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Node index of a rank.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    /// Local index of a rank inside its node.
+    pub fn local_of(&self, rank: usize) -> usize {
+        rank % self.gpus_per_node
+    }
+}
+
+/// Training-run configuration for the end-to-end driver.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: u64,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    pub log_every: u64,
+    pub seed: u64,
+    pub artifact_dir: String,
+    /// Which artifact variant to train (see `python/compile/aot.py`).
+    pub model: String,
+}
+
+impl TrainConfig {
+    pub fn default_run() -> TrainConfig {
+        TrainConfig {
+            steps: 300,
+            batch_size: 8,
+            seq_len: 128,
+            log_every: 10,
+            seed: 0,
+            artifact_dir: "artifacts".into(),
+            model: "e2e".into(),
+        }
+    }
+
+    pub fn from_json(obj: &Json) -> Result<TrainConfig> {
+        Ok(TrainConfig {
+            steps: obj.f64_or("steps", 300.0) as u64,
+            batch_size: obj.usize_or("batch_size", 8),
+            seq_len: obj.usize_or("seq_len", 128),
+            log_every: obj.f64_or("log_every", 10.0) as u64,
+            seed: obj.f64_or("seed", 0.0) as u64,
+            artifact_dir: obj.str_or("artifact_dir", "artifacts").to_string(),
+            model: obj.str_or("model", "e2e").to_string(),
+        })
+    }
+}
+
+/// Load a JSON config file and dispatch sections.
+pub struct ConfigFile {
+    pub root: Json,
+}
+
+impl ConfigFile {
+    pub fn load(path: &str) -> Result<ConfigFile> {
+        Ok(ConfigFile { root: Json::from_file(path)? })
+    }
+
+    pub fn moe(&self) -> Result<MoeConfig> {
+        match self.root.get("moe") {
+            Some(o) => MoeConfig::from_json(o),
+            None => MoeConfig::from_json(&self.root),
+        }
+    }
+
+    pub fn cluster(&self) -> Result<ClusterConfig> {
+        match self.root.get("cluster") {
+            Some(o) => ClusterConfig::from_json(o),
+            None => Ok(ClusterConfig::commodity(1)),
+        }
+    }
+
+    pub fn train(&self) -> Result<TrainConfig> {
+        match self.root.get("train") {
+            Some(o) => TrainConfig::from_json(o),
+            None => Ok(TrainConfig::default_run()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_kind_parsing() {
+        let j = Json::parse(r#"{"gate": "gshard"}"#).unwrap();
+        assert_eq!(GateKind::from_json(&j).unwrap(), GateKind::GShard);
+        let j = Json::parse(r#"{"gate": "topk", "k": 4}"#).unwrap();
+        assert_eq!(GateKind::from_json(&j).unwrap(), GateKind::TopK { k: 4 });
+        let j = Json::parse(r#"{"gate": "hash", "scheme": "balanced"}"#).unwrap();
+        assert_eq!(
+            GateKind::from_json(&j).unwrap(),
+            GateKind::Hash { scheme: HashScheme::Balanced }
+        );
+        let j = Json::parse(r#"{"gate": "martian"}"#).unwrap();
+        assert!(GateKind::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn moe_validation() {
+        let mut cfg = MoeConfig::paper_layer();
+        assert!(cfg.validate().is_ok());
+        cfg.gate = GateKind::TopK { k: 99 };
+        assert!(cfg.validate().is_err());
+        cfg.gate = GateKind::KTop1 { k: 3 }; // 16 % 3 != 0
+        assert!(cfg.validate().is_err());
+        cfg.gate = GateKind::SamHTopK { groups: 4, k: 2 };
+        assert!(cfg.validate().is_ok());
+        cfg.gate = GateKind::SamHTopK { groups: 5, k: 2 };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn capacity_math() {
+        let cfg = MoeConfig { capacity_factor: 1.0, ..MoeConfig::paper_layer() };
+        // 1024 tokens, 16 experts, top-1, cf=1 → 64 per expert.
+        assert_eq!(cfg.capacity(1024), 64);
+        let cfg2 = MoeConfig { gate: GateKind::GShard, ..cfg.clone() };
+        assert_eq!(cfg2.capacity(1024), 128); // top-2 doubles slots
+        let cfg3 = MoeConfig { capacity_factor: 1.25, ..cfg };
+        assert_eq!(cfg3.capacity(1024), 80);
+    }
+
+    #[test]
+    fn cluster_rank_math() {
+        let c = ClusterConfig::commodity(4);
+        assert_eq!(c.world(), 32);
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(8), 1);
+        assert_eq!(c.local_of(13), 5);
+    }
+
+    #[test]
+    fn cluster_json_units() {
+        let j = Json::parse(
+            r#"{"nodes": 2, "gpus_per_node": 4, "inter_bw_gbps": 100, "inter_lat_us": 20}"#,
+        )
+        .unwrap();
+        let c = ClusterConfig::from_json(&j).unwrap();
+        assert_eq!(c.nodes, 2);
+        assert!((c.inter_bw - 12.5e9).abs() < 1.0);
+        assert!((c.inter_lat - 20e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn config_file_sections() {
+        let text = r#"{
+            "moe": {"num_experts": 8, "d_model": 64, "ffn_hidden": 128, "gate": "gshard"},
+            "cluster": {"nodes": 2, "gpus_per_node": 2},
+            "train": {"steps": 5, "batch_size": 2}
+        }"#;
+        let cf = ConfigFile { root: Json::parse(text).unwrap() };
+        let moe = cf.moe().unwrap();
+        assert_eq!(moe.num_experts, 8);
+        assert_eq!(moe.gate, GateKind::GShard);
+        assert_eq!(cf.cluster().unwrap().world(), 4);
+        assert_eq!(cf.train().unwrap().steps, 5);
+    }
+
+    #[test]
+    fn gate_names() {
+        assert_eq!(GateKind::Switch.name(), "switch");
+        assert_eq!(GateKind::TopK { k: 3 }.name(), "top3");
+        assert_eq!(GateKind::KTop1 { k: 2 }.name(), "2top1");
+    }
+}

@@ -1,0 +1,161 @@
+//! Aggregation of per-step phase timings into run-level breakdowns.
+
+use crate::moe::StepReport;
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// Accumulated phase totals over a run.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsAgg {
+    steps: usize,
+    wall: HashMap<String, f64>,
+    comm: HashMap<String, f64>,
+    wall_order: Vec<String>,
+    comm_order: Vec<String>,
+    pub drop_rate: f64,
+    pub padding_waste: f64,
+    pub aux_loss: f64,
+}
+
+impl MetricsAgg {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, report: &StepReport) {
+        self.steps += 1;
+        for (name, t) in &report.wall {
+            if !self.wall.contains_key(name) {
+                self.wall_order.push(name.clone());
+            }
+            *self.wall.entry(name.clone()).or_insert(0.0) += t;
+        }
+        for (name, t) in &report.comm {
+            if !self.comm.contains_key(name) {
+                self.comm_order.push(name.clone());
+            }
+            *self.comm.entry(name.clone()).or_insert(0.0) += t;
+        }
+        self.drop_rate += report.drop_rate;
+        self.padding_waste += report.padding_waste;
+        self.aux_loss += report.aux_loss;
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Mean-per-step breakdown, wall phases then comm phases, with
+    /// fractions of the combined total.
+    pub fn breakdown(&self) -> Breakdown {
+        let n = self.steps.max(1) as f64;
+        let mut phases: Vec<(String, f64)> = Vec::new();
+        for name in &self.wall_order {
+            phases.push((name.clone(), self.wall[name] / n));
+        }
+        for name in &self.comm_order {
+            phases.push((name.clone(), self.comm[name] / n));
+        }
+        let total: f64 = phases.iter().map(|(_, t)| t).sum();
+        Breakdown {
+            phases,
+            total,
+            drop_rate: self.drop_rate / n,
+            padding_waste: self.padding_waste / n,
+            aux_loss: self.aux_loss / n,
+        }
+    }
+}
+
+/// Per-step mean phase times.
+#[derive(Clone, Debug)]
+pub struct Breakdown {
+    pub phases: Vec<(String, f64)>,
+    pub total: f64,
+    pub drop_rate: f64,
+    pub padding_waste: f64,
+    pub aux_loss: f64,
+}
+
+impl Breakdown {
+    /// Fraction of the step spent in phases whose name starts with any
+    /// of `prefixes`.
+    pub fn fraction_of(&self, prefixes: &[&str]) -> f64 {
+        if self.total <= 0.0 {
+            return 0.0;
+        }
+        let t: f64 = self
+            .phases
+            .iter()
+            .filter(|(n, _)| prefixes.iter().any(|p| n.starts_with(p)))
+            .map(|(_, t)| t)
+            .sum();
+        t / self.total
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "phases",
+                Json::Obj(
+                    self.phases
+                        .iter()
+                        .map(|(n, t)| (n.clone(), Json::num(*t)))
+                        .collect(),
+                ),
+            ),
+            ("total", Json::num(self.total)),
+            ("drop_rate", Json::num(self.drop_rate)),
+            ("padding_waste", Json::num(self.padding_waste)),
+            ("aux_loss", Json::num(self.aux_loss)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(gate: f64, a2a: f64) -> StepReport {
+        StepReport {
+            wall: vec![("gate".into(), gate), ("expert".into(), 1.0)],
+            comm: vec![("alltoall_dispatch".into(), a2a)],
+            drop_rate: 0.1,
+            padding_waste: 0.2,
+            expert_counts: vec![],
+            aux_loss: 1.0,
+        }
+    }
+
+    #[test]
+    fn aggregates_means() {
+        let mut agg = MetricsAgg::new();
+        agg.push(&report(0.2, 0.4));
+        agg.push(&report(0.4, 0.6));
+        let b = agg.breakdown();
+        assert_eq!(agg.steps(), 2);
+        let gate = b.phases.iter().find(|(n, _)| n == "gate").unwrap().1;
+        assert!((gate - 0.3).abs() < 1e-12);
+        assert!((b.total - (0.3 + 1.0 + 0.5)).abs() < 1e-12);
+        assert!((b.drop_rate - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fractions() {
+        let mut agg = MetricsAgg::new();
+        agg.push(&report(1.0, 2.0)); // gate 1, expert 1, a2a 2 → total 4
+        let b = agg.breakdown();
+        assert!((b.fraction_of(&["alltoall"]) - 0.5).abs() < 1e-12);
+        assert!((b.fraction_of(&["gate", "alltoall"]) - 0.75).abs() < 1e-12);
+        assert_eq!(b.fraction_of(&["nope"]), 0.0);
+    }
+
+    #[test]
+    fn json_export() {
+        let mut agg = MetricsAgg::new();
+        agg.push(&report(1.0, 1.0));
+        let j = agg.breakdown().to_json();
+        assert!(j.get("phases").is_some());
+        assert!(j.f64_field("total").unwrap() > 0.0);
+    }
+}

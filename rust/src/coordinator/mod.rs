@@ -1,0 +1,10 @@
+//! The training coordinator: drives iterations of the expert-parallel
+//! MoE pipeline across the simulated mesh, aggregates per-phase metrics
+//! (Figure 1's breakdown), and exposes the leader-side run loop used by
+//! the `hetumoe` binary and the benches.
+
+pub mod metrics;
+pub mod runner;
+
+pub use metrics::{Breakdown, MetricsAgg};
+pub use runner::{Coordinator, RunSummary};

@@ -1,0 +1,136 @@
+//! Leader run loop: embedding lookup → repeated MoE-layer iterations
+//! over per-rank shards, with metrics aggregation.
+//!
+//! This is the benchmark-loop analog of the paper's evaluation driver
+//! (the MoE *layer* is what every Fig-8 system comparison times); full
+//! model training with losses runs through [`crate::train::Trainer`] on
+//! the AOT artifacts instead.
+
+use crate::config::{ClusterConfig, MoeConfig};
+use crate::coordinator::metrics::{Breakdown, MetricsAgg};
+use crate::data::{BatchIter, SyntheticLm};
+use crate::error::Result;
+use crate::moe::{MoeLayer, MoeLayerOptions};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// End-of-run summary.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub steps: usize,
+    pub breakdown: Breakdown,
+    /// Output norm of the last step (smoke signal that compute happened).
+    pub last_output_norm: f64,
+}
+
+/// Drives repeated MoE-layer steps over synthetic token batches.
+pub struct Coordinator {
+    pub layer: MoeLayer,
+    /// Embedding table `[vocab, d]` (host side — the coordinator embeds
+    /// tokens before sharding, mirroring the model's lookup).
+    pub embedding: Tensor,
+    pub batches: BatchIter,
+    pub tokens_per_rank: usize,
+}
+
+impl Coordinator {
+    pub fn new(
+        moe: MoeConfig,
+        cluster: ClusterConfig,
+        opts: MoeLayerOptions,
+        vocab: usize,
+        tokens_per_rank: usize,
+        seed: u64,
+    ) -> Result<Coordinator> {
+        let mut rng = Rng::seed(seed ^ 0xC00D);
+        let mut embedding = Tensor::randn(&[vocab, moe.d_model], &mut rng);
+        embedding.scale(1.0 / (moe.d_model as f32).sqrt());
+        let world = cluster.world();
+        let layer = MoeLayer::native(moe, cluster, opts, seed)?;
+        let task = SyntheticLm::new(vocab, 1.1, 0.85);
+        let batches = BatchIter::new(task, world, tokens_per_rank, seed ^ 0xBA7C);
+        Ok(Coordinator { layer, embedding, batches, tokens_per_rank })
+    }
+
+    /// Embed a flat token batch into per-rank shards.
+    pub fn embed_shards(&self, tokens: &[u32]) -> Vec<Tensor> {
+        let world = self.layer.cluster.world();
+        let d = self.layer.cfg.d_model;
+        let per = self.tokens_per_rank;
+        assert_eq!(tokens.len(), world * per);
+        (0..world)
+            .map(|r| {
+                let mut shard = Tensor::zeros(&[per, d]);
+                for i in 0..per {
+                    let tok = tokens[r * per + i] as usize % self.embedding.rows();
+                    shard.row_mut(i).copy_from_slice(self.embedding.row(tok));
+                }
+                shard
+            })
+            .collect()
+    }
+
+    /// Run `steps` iterations; returns the aggregated summary.
+    pub fn run(&mut self, steps: usize) -> Result<RunSummary> {
+        let mut agg = MetricsAgg::new();
+        let mut last_norm = 0.0f64;
+        for _ in 0..steps {
+            let (tokens, _targets) = self.batches.next_batch();
+            let shards = self.embed_shards(&tokens);
+            let (outputs, report) = self.layer.forward(&shards)?;
+            agg.push(&report);
+            last_norm = outputs.iter().map(|t| t.norm() as f64).sum();
+        }
+        Ok(RunSummary { steps, breakdown: agg.breakdown(), last_output_norm: last_norm })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GateKind;
+
+    fn small() -> (MoeConfig, ClusterConfig) {
+        (
+            MoeConfig {
+                num_experts: 4,
+                d_model: 16,
+                ffn_hidden: 32,
+                capacity_factor: 1.5,
+                gate: GateKind::Switch,
+            },
+            ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) },
+        )
+    }
+
+    #[test]
+    fn runs_steps_and_aggregates() {
+        let (moe, cluster) = small();
+        let mut coord =
+            Coordinator::new(moe, cluster, MoeLayerOptions::default(), 64, 8, 0).unwrap();
+        let summary = coord.run(3).unwrap();
+        assert_eq!(summary.steps, 3);
+        assert!(summary.breakdown.total > 0.0);
+        assert!(summary.last_output_norm > 0.0);
+        // All six phases present.
+        let names: Vec<&str> =
+            summary.breakdown.phases.iter().map(|(n, _)| n.as_str()).collect();
+        for expect in ["gate", "layout", "expert", "reverse_layout", "alltoall_dispatch"] {
+            assert!(names.contains(&expect), "missing {expect}: {names:?}");
+        }
+    }
+
+    #[test]
+    fn embedding_shards_are_lookup_rows() {
+        let (moe, cluster) = small();
+        let coord =
+            Coordinator::new(moe, cluster, MoeLayerOptions::default(), 64, 4, 1).unwrap();
+        let tokens: Vec<u32> = (0..16).collect();
+        let shards = coord.embed_shards(&tokens);
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[0].shape(), &[4, 16]);
+        // Row 0 of shard 0 must equal embedding row of token 0.
+        assert_eq!(shards[0].row(0), coord.embedding.row(0));
+        assert_eq!(shards[3].row(3), coord.embedding.row(15));
+    }
+}

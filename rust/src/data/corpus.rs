@@ -1,0 +1,126 @@
+//! A tiny embedded text corpus + character tokenizer, for the examples
+//! that want "real" (non-synthetic) text without network access.
+
+/// ~2.5 KB of public-domain text (Shakespeare, sonnets 1-3 + Hamlet
+/// fragment) — enough for a character-level LM smoke run.
+pub const TINY_CORPUS: &str = "\
+From fairest creatures we desire increase,
+That thereby beauty's rose might never die,
+But as the riper should by time decease,
+His tender heir might bear his memory:
+But thou contracted to thine own bright eyes,
+Feed'st thy light's flame with self-substantial fuel,
+Making a famine where abundance lies,
+Thy self thy foe, to thy sweet self too cruel:
+Thou that art now the world's fresh ornament,
+And only herald to the gaudy spring,
+Within thine own bud buriest thy content,
+And, tender churl, mak'st waste in niggarding:
+Pity the world, or else this glutton be,
+To eat the world's due, by the grave and thee.
+When forty winters shall besiege thy brow,
+And dig deep trenches in thy beauty's field,
+Thy youth's proud livery so gazed on now,
+Will be a totter'd weed of small worth held:
+Then being asked, where all thy beauty lies,
+Where all the treasure of thy lusty days;
+To say, within thine own deep sunken eyes,
+Were an all-eating shame, and thriftless praise.
+How much more praise deserv'd thy beauty's use,
+If thou couldst answer 'This fair child of mine
+Shall sum my count, and make my old excuse,'
+Proving his beauty by succession thine!
+This were to be new made when thou art old,
+And see thy blood warm when thou feel'st it cold.
+To be, or not to be, that is the question:
+Whether 'tis nobler in the mind to suffer
+The slings and arrows of outrageous fortune,
+Or to take arms against a sea of troubles
+And by opposing end them. To die: to sleep;
+No more; and by a sleep to say we end
+The heart-ache and the thousand natural shocks
+That flesh is heir to, 'tis a consummation
+Devoutly to be wish'd. To die, to sleep;
+To sleep: perchance to dream: ay, there's the rub;
+For in that sleep of death what dreams may come
+When we have shuffled off this mortal coil,
+Must give us pause: there's the respect
+That makes calamity of so long life;
+";
+
+/// Character-level tokenizer over a fixed corpus alphabet.
+#[derive(Clone, Debug)]
+pub struct CharTokenizer {
+    chars: Vec<char>,
+    index: std::collections::HashMap<char, u32>,
+}
+
+impl CharTokenizer {
+    /// Build from a corpus: vocabulary = sorted distinct characters.
+    pub fn fit(text: &str) -> CharTokenizer {
+        let mut chars: Vec<char> = text.chars().collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        chars.sort_unstable();
+        let index = chars.iter().enumerate().map(|(i, &c)| (c, i as u32)).collect();
+        CharTokenizer { chars, index }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.chars.len()
+    }
+
+    /// Encode text (unknown characters are skipped).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.chars().filter_map(|c| self.index.get(&c).copied()).collect()
+    }
+
+    /// Decode ids back to text.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter().map(|&i| self.chars[i as usize]).collect()
+    }
+
+    /// Contiguous (input, target) training pairs of length `seq` from the
+    /// corpus, tiled with stride `seq`.
+    pub fn training_pairs(&self, text: &str, seq: usize) -> Vec<(Vec<u32>, Vec<u32>)> {
+        let ids = self.encode(text);
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + seq + 1 <= ids.len() {
+            out.push((ids[i..i + seq].to_vec(), ids[i + 1..i + seq + 1].to_vec()));
+            i += seq;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tok = CharTokenizer::fit(TINY_CORPUS);
+        assert!(tok.vocab_size() > 20 && tok.vocab_size() < 128);
+        let ids = tok.encode("To be, or not to be");
+        assert_eq!(tok.decode(&ids), "To be, or not to be");
+    }
+
+    #[test]
+    fn unknown_chars_skipped() {
+        let tok = CharTokenizer::fit("abc");
+        assert_eq!(tok.encode("aXbYc").len(), 3);
+    }
+
+    #[test]
+    fn training_pairs_shift_by_one() {
+        let tok = CharTokenizer::fit(TINY_CORPUS);
+        let pairs = tok.training_pairs(TINY_CORPUS, 32);
+        assert!(pairs.len() > 10);
+        for (x, y) in &pairs {
+            assert_eq!(x.len(), 32);
+            assert_eq!(y.len(), 32);
+            assert_eq!(x[1..], y[..31]);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Synthetic and tiny-corpus data for training and benchmarks.
+
+pub mod corpus;
+pub mod synthetic;
+
+pub use corpus::{CharTokenizer, TINY_CORPUS};
+pub use synthetic::{BatchIter, SyntheticLm};

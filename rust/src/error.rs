@@ -1,0 +1,107 @@
+//! Library-wide error type.
+//!
+//! The crate deliberately avoids pulling in `thiserror`/`eyre` (the build
+//! environment vendors only the `xla` closure); this is a small hand-rolled
+//! error enum with `From` impls for the foreign errors we touch.
+
+use std::fmt;
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, HetuError>;
+
+/// Error type for all HetuMoE operations.
+#[derive(Debug)]
+pub enum HetuError {
+    /// Invalid or inconsistent configuration.
+    Config(String),
+    /// Shape mismatch in tensor / routing plumbing.
+    Shape(String),
+    /// Communication-layer failure (mesh mismatch, buffer sizes, ...).
+    Comm(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// Artifact missing or malformed (run `make artifacts`).
+    Artifact(String),
+    /// JSON parse error.
+    Json(String),
+    /// Gating failure (e.g. assignment did not converge).
+    Gating(String),
+    /// Underlying I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for HetuError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HetuError::Config(m) => write!(f, "config error: {m}"),
+            HetuError::Shape(m) => write!(f, "shape error: {m}"),
+            HetuError::Comm(m) => write!(f, "comm error: {m}"),
+            HetuError::Runtime(m) => write!(f, "runtime error: {m}"),
+            HetuError::Artifact(m) => write!(
+                f,
+                "artifact error: {m} (hint: run `make artifacts` to build the HLO artifacts)"
+            ),
+            HetuError::Json(m) => write!(f, "json error: {m}"),
+            HetuError::Gating(m) => write!(f, "gating error: {m}"),
+            HetuError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HetuError {}
+
+impl From<std::io::Error> for HetuError {
+    fn from(e: std::io::Error) -> Self {
+        HetuError::Io(e)
+    }
+}
+
+impl From<xla::Error> for HetuError {
+    fn from(e: xla::Error) -> Self {
+        HetuError::Runtime(e.to_string())
+    }
+}
+
+/// Convenience constructor macros.
+#[macro_export]
+macro_rules! config_err {
+    ($($arg:tt)*) => { $crate::error::HetuError::Config(format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! shape_err {
+    ($($arg:tt)*) => { $crate::error::HetuError::Shape(format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! comm_err {
+    ($($arg:tt)*) => { $crate::error::HetuError::Comm(format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = HetuError::Config("bad".into());
+        assert!(e.to_string().contains("config error: bad"));
+        let e = HetuError::Artifact("missing model.hlo.txt".into());
+        assert!(e.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: HetuError = io.into();
+        assert!(matches!(e, HetuError::Io(_)));
+    }
+
+    #[test]
+    fn macros_build_variants() {
+        let e = config_err!("x={}", 3);
+        assert!(matches!(e, HetuError::Config(ref m) if m == "x=3"));
+        let e = shape_err!("got {:?}", [1, 2]);
+        assert!(matches!(e, HetuError::Shape(_)));
+        let e = comm_err!("rank {}", 7);
+        assert!(matches!(e, HetuError::Comm(ref m) if m.contains('7')));
+    }
+}

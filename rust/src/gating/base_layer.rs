@@ -1,0 +1,255 @@
+//! BASE layer gate (Lewis et al., 2021): token→expert allocation as a
+//! **balanced linear assignment problem** — maximize total token-expert
+//! affinity subject to every expert receiving exactly `N/E` tokens.
+//!
+//! We solve the transportation-relaxed assignment with the **auction
+//! algorithm** (Bertsekas): tokens bid for experts; an over-subscribed
+//! expert keeps its highest bidders and raises its price; ε-scaling
+//! guarantees termination within `max(score)−min(score) / ε` rounds.
+//! A greedy seeding pass makes typical inputs converge in a few rounds.
+
+use crate::gating::{Gate, GateBatch, Routing};
+use crate::tensor::Tensor;
+
+/// Balanced-assignment gate.
+#[derive(Clone, Debug)]
+pub struct BaseLayerGate {
+    num_experts: usize,
+    /// Auction ε (price increment floor). Larger = faster, less optimal.
+    pub epsilon: f32,
+    /// Hard cap on auction rounds (bail to greedy fill if exceeded).
+    pub max_rounds: usize,
+}
+
+impl BaseLayerGate {
+    pub fn new(num_experts: usize) -> Self {
+        BaseLayerGate { num_experts, epsilon: 1e-3, max_rounds: 2000 }
+    }
+}
+
+/// Solve balanced assignment: `scores` is `(tokens, E)`; every expert
+/// receives `ceil(tokens/E)` or `floor(tokens/E)` tokens. Returns the
+/// expert of each token.
+pub fn balanced_assignment(
+    scores: &Tensor,
+    num_experts: usize,
+    epsilon: f32,
+    max_rounds: usize,
+) -> Vec<u32> {
+    let tokens = scores.rows();
+    let e = num_experts;
+    // Per-expert capacity: distribute the remainder to the first experts.
+    let base_cap = tokens / e;
+    let rem = tokens % e;
+    let cap: Vec<usize> = (0..e).map(|i| base_cap + usize::from(i < rem)).collect();
+
+    let mut price = vec![0.0f32; e];
+    let mut assign: Vec<i64> = vec![-1; tokens]; // token -> expert
+    // Expert slots: holders[e] = tokens currently assigned (worst bidder
+    // evicted when over capacity). Track each holder's net value to evict
+    // the weakest.
+    let mut holders: Vec<Vec<u32>> = vec![Vec::new(); e];
+
+    let mut unassigned: Vec<u32> = (0..tokens as u32).collect();
+    let mut rounds = 0usize;
+    while let Some(t) = unassigned.pop() {
+        rounds += 1;
+        if rounds > max_rounds * tokens.max(1) {
+            // Safety valve: greedy-fill all remaining.
+            unassigned.push(t);
+            greedy_fill(scores, &cap, &mut holders, &mut assign, &mut unassigned);
+            break;
+        }
+        let row = scores.row(t as usize);
+        // Find best and second-best net value (score - price).
+        let (mut b1, mut v1, mut v2) = (0usize, f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for j in 0..e {
+            let net = row[j] - price[j];
+            if net > v1 {
+                v2 = v1;
+                v1 = net;
+                b1 = j;
+            } else if net > v2 {
+                v2 = net;
+            }
+        }
+        // Bid: raise price by the margin + ε.
+        let bid_increment = (v1 - v2) + epsilon;
+        assign[t as usize] = b1 as i64;
+        holders[b1].push(t);
+        if holders[b1].len() > cap[b1] {
+            price[b1] += bid_increment;
+            // Evict the weakest holder (lowest raw score for this expert).
+            let (widx, _) = holders[b1]
+                .iter()
+                .enumerate()
+                .map(|(i, &tok)| (i, scores.at(tok as usize, b1)))
+                .fold((0usize, f32::INFINITY), |acc, (i, s)| {
+                    if s < acc.1 {
+                        (i, s)
+                    } else {
+                        acc
+                    }
+                });
+            let evicted = holders[b1].swap_remove(widx);
+            assign[evicted as usize] = -1;
+            unassigned.push(evicted);
+        } else if holders[b1].len() == cap[b1] {
+            // Expert is now full; nudge price so future bidders prefer others.
+            price[b1] += epsilon;
+        }
+    }
+    assign.into_iter().map(|a| a.max(0) as u32).collect()
+}
+
+/// Greedy fallback: assign remaining tokens to the best expert with
+/// spare capacity.
+fn greedy_fill(
+    scores: &Tensor,
+    cap: &[usize],
+    holders: &mut [Vec<u32>],
+    assign: &mut [i64],
+    unassigned: &mut Vec<u32>,
+) {
+    while let Some(t) = unassigned.pop() {
+        let row = scores.row(t as usize);
+        let mut best = usize::MAX;
+        let mut bv = f32::NEG_INFINITY;
+        for (j, h) in holders.iter().enumerate() {
+            if h.len() < cap[j] && row[j] > bv {
+                bv = row[j];
+                best = j;
+            }
+        }
+        assert!(best != usize::MAX, "capacities must sum to tokens");
+        holders[best].push(t);
+        assign[t as usize] = best as i64;
+    }
+}
+
+impl Gate for BaseLayerGate {
+    fn name(&self) -> String {
+        "base".into()
+    }
+
+    fn k(&self) -> usize {
+        1
+    }
+
+    fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    fn route(&self, batch: &GateBatch) -> Routing {
+        let scores = batch.scores;
+        let tokens = scores.rows();
+        assert_eq!(scores.row_len(), self.num_experts);
+        let assign =
+            balanced_assignment(scores, self.num_experts, self.epsilon, self.max_rounds);
+        // BASE weight: σ(affinity) of the assigned expert — no softmax
+        // competition, no auxiliary loss needed (balance is structural).
+        let weights: Vec<f32> = assign
+            .iter()
+            .enumerate()
+            .map(|(t, &e)| {
+                let s = scores.at(t, e as usize);
+                1.0 / (1.0 + (-s).exp())
+            })
+            .collect();
+        Routing {
+            k: 1,
+            tokens,
+            num_experts: self.num_experts,
+            expert_ids: assign,
+            weights,
+            aux_loss: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+    use crate::util::stats::load_cv;
+
+    #[test]
+    fn assignment_is_perfectly_balanced() {
+        let mut rng = Rng::seed(0);
+        let scores = Tensor::randn(&[64, 8], &mut rng);
+        let gate = BaseLayerGate::new(8);
+        let r = gate.route_scores(&scores, 0);
+        r.validate().unwrap();
+        let counts = r.expert_counts();
+        assert_eq!(counts, vec![8; 8]);
+        assert!(load_cv(&counts) < 1e-9);
+    }
+
+    #[test]
+    fn balanced_even_under_skewed_scores() {
+        // All tokens prefer expert 0 — balance must still hold (this is
+        // the entire point of BASE vs Switch).
+        let mut rng = Rng::seed(1);
+        let mut scores = Tensor::randn(&[32, 4], &mut rng);
+        for t in 0..32 {
+            scores.set(t, 0, scores.at(t, 0) + 10.0);
+        }
+        let r = BaseLayerGate::new(4).route_scores(&scores, 0);
+        assert_eq!(r.expert_counts(), vec![8; 4]);
+    }
+
+    #[test]
+    fn remainder_distribution() {
+        let mut rng = Rng::seed(2);
+        let scores = Tensor::randn(&[10, 4], &mut rng);
+        let r = BaseLayerGate::new(4).route_scores(&scores, 0);
+        let mut counts = r.expert_counts();
+        counts.sort_unstable();
+        assert_eq!(counts, vec![2, 2, 3, 3]); // 10 = 3+3+2+2
+    }
+
+    #[test]
+    fn beats_random_assignment_on_total_score() {
+        let mut rng = Rng::seed(3);
+        let scores = Tensor::randn(&[48, 6], &mut rng);
+        let assign = balanced_assignment(&scores, 6, 1e-3, 2000);
+        let total: f32 = assign
+            .iter()
+            .enumerate()
+            .map(|(t, &e)| scores.at(t, e as usize))
+            .sum();
+        // Random balanced baseline: round-robin.
+        let rr_total: f32 = (0..48).map(|t| scores.at(t, t % 6)).sum();
+        assert!(
+            total > rr_total,
+            "auction {total:.2} must beat round-robin {rr_total:.2}"
+        );
+    }
+
+    #[test]
+    fn property_balance_holds_for_all_shapes() {
+        for_all(20, |g| {
+            let e = g.usize_in(2..9);
+            let tokens = g.usize_in(e..80);
+            let mut rng = Rng::seed(g.case as u64 + 100);
+            let scores = Tensor::randn(&[tokens, e], &mut rng);
+            let assign = balanced_assignment(&scores, e, 1e-3, 2000);
+            let mut counts = vec![0usize; e];
+            for &a in &assign {
+                counts[a as usize] += 1;
+            }
+            let max = counts.iter().max().unwrap();
+            let min = counts.iter().min().unwrap();
+            assert!(max - min <= 1, "counts={counts:?}");
+        });
+    }
+
+    #[test]
+    fn weights_are_sigmoid_bounded() {
+        let mut rng = Rng::seed(4);
+        let scores = Tensor::randn(&[16, 4], &mut rng);
+        let r = BaseLayerGate::new(4).route_scores(&scores, 0);
+        assert!(r.weights.iter().all(|&w| w > 0.0 && w < 1.0));
+    }
+}

@@ -1,0 +1,191 @@
+//! Expert-capacity enforcement (GShard/Switch semantics).
+//!
+//! Each expert accepts at most `C` tokens per batch; excess tokens are
+//! *dropped* (they bypass the expert and flow through the residual).
+//! Slots are granted first-come-first-served in token order — the same
+//! deterministic priority rule Switch uses — so the resulting
+//! [`DispatchPlan`] is reproducible and the layout transform can place
+//! rows without synchronization.
+
+use crate::gating::Routing;
+
+/// Placement of every routing slot into the padded expert buffers.
+#[derive(Clone, Debug)]
+pub struct DispatchPlan {
+    pub num_experts: usize,
+    /// Per-expert row budget `C`.
+    pub capacity: usize,
+    pub tokens: usize,
+    pub k: usize,
+    /// Flat `[tokens*k]`: destination row in the `[E*C]` expert buffer,
+    /// or `u32::MAX` when the slot was dropped (over capacity or weight 0).
+    pub dest: Vec<u32>,
+    /// Combine weights aligned with `dest` (0 for dropped slots).
+    pub weights: Vec<f32>,
+    /// Raw demanded counts per expert (before truncation).
+    pub demand: Vec<usize>,
+    /// Accepted counts per expert (≤ capacity).
+    pub kept: Vec<usize>,
+}
+
+impl DispatchPlan {
+    /// Number of slots dropped by the capacity limit (weight-0 slots
+    /// pruned by the gate are not counted — they never demanded a seat).
+    pub fn dropped_slots(&self) -> usize {
+        self.demand
+            .iter()
+            .zip(&self.kept)
+            .map(|(&d, &k)| d - k)
+            .sum()
+    }
+
+    /// Fraction of demanded slots dropped.
+    pub fn drop_rate(&self) -> f64 {
+        let demanded: usize = self.demand.iter().sum();
+        self.dropped_slots() as f64 / demanded.max(1) as f64
+    }
+
+    /// Total rows in the padded dispatch buffer (`E·C`).
+    pub fn buffer_rows(&self) -> usize {
+        self.num_experts * self.capacity
+    }
+
+    /// Padding waste: fraction of buffer rows that carry no token.
+    pub fn padding_waste(&self) -> f64 {
+        let used: usize = self.kept.iter().sum();
+        1.0 - used as f64 / self.buffer_rows().max(1) as f64
+    }
+}
+
+/// Assign buffer positions under capacity `C`.
+///
+/// Note: the *weights* of dropped slots remain in the plan (set to 0) so
+/// the reverse transform can still walk `tokens × k` uniformly.
+pub fn apply_capacity(routing: &Routing, capacity: usize) -> DispatchPlan {
+    let e = routing.num_experts;
+    let mut fill = vec![0usize; e];
+    let mut demand = vec![0usize; e];
+    let slots = routing.tokens * routing.k;
+    let mut dest = vec![u32::MAX; slots];
+    let mut weights = vec![0.0f32; slots];
+    for s in 0..slots {
+        let w = routing.weights[s];
+        if w == 0.0 {
+            continue; // inactive slot (variable-k gates)
+        }
+        let ex = routing.expert_ids[s] as usize;
+        demand[ex] += 1;
+        if fill[ex] < capacity {
+            dest[s] = (ex * capacity + fill[ex]) as u32;
+            weights[s] = w;
+            fill[ex] += 1;
+        }
+        // else: dropped — dest stays MAX, weight stays 0 in the plan,
+        // but `routing.weights[s]` keeps the original for drop stats.
+    }
+    DispatchPlan {
+        num_experts: e,
+        capacity,
+        tokens: routing.tokens,
+        k: routing.k,
+        dest,
+        weights,
+        demand,
+        kept: fill,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gating::{Gate, SwitchGate};
+    use crate::tensor::Tensor;
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+
+    fn routing_1slot(ids: &[u32], e: usize) -> Routing {
+        Routing {
+            k: 1,
+            tokens: ids.len(),
+            num_experts: e,
+            expert_ids: ids.to_vec(),
+            weights: vec![1.0; ids.len()],
+            aux_loss: 0.0,
+        }
+    }
+
+    #[test]
+    fn fcfs_priority_and_drop() {
+        // 5 tokens all to expert 0, capacity 3 → first 3 kept.
+        let r = routing_1slot(&[0, 0, 0, 0, 0], 2);
+        let p = apply_capacity(&r, 3);
+        assert_eq!(p.dest[..3], [0, 1, 2]);
+        assert_eq!(p.dest[3], u32::MAX);
+        assert_eq!(p.dest[4], u32::MAX);
+        assert_eq!(p.dropped_slots(), 2);
+        assert_eq!(p.kept, vec![3, 0]);
+        assert_eq!(p.demand, vec![5, 0]);
+        assert!((p.drop_rate() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn positions_are_contiguous_per_expert() {
+        let r = routing_1slot(&[1, 0, 1, 0, 1], 2);
+        let p = apply_capacity(&r, 4);
+        // Expert 1 buffer starts at 4.
+        assert_eq!(p.dest, vec![4, 0, 5, 1, 6]);
+        assert_eq!(p.padding_waste(), 1.0 - 5.0 / 8.0);
+    }
+
+    #[test]
+    fn zero_weight_slots_skipped() {
+        let r = Routing {
+            k: 2,
+            tokens: 2,
+            num_experts: 2,
+            expert_ids: vec![0, 1, 0, 1],
+            weights: vec![0.7, 0.0, 0.6, 0.4],
+            aux_loss: 0.0,
+        };
+        let p = apply_capacity(&r, 2);
+        assert_eq!(p.dest[1], u32::MAX); // zero-weight slot never placed
+        assert_eq!(p.demand, vec![2, 1]); // only active slots demand
+        assert_eq!(p.dropped_slots(), 0); // pruned ≠ dropped
+    }
+
+    #[test]
+    fn no_duplicate_destinations_property() {
+        for_all(24, |g| {
+            let e = g.usize_in(2..8);
+            let tokens = g.usize_in(1..100);
+            let cap = g.usize_in(1..32);
+            let ids: Vec<u32> = (0..tokens).map(|_| g.u32_in(0..e as u32)).collect();
+            let r = routing_1slot(&ids, e);
+            let p = apply_capacity(&r, cap);
+            let mut seen = std::collections::HashSet::new();
+            for &d in &p.dest {
+                if d != u32::MAX {
+                    assert!(seen.insert(d), "duplicate dest {d}");
+                    assert!((d as usize) < e * cap);
+                }
+            }
+            // kept ≤ min(demand, cap)
+            for ex in 0..e {
+                assert_eq!(p.kept[ex], p.demand[ex].min(cap));
+            }
+        });
+    }
+
+    #[test]
+    fn integrates_with_switch_gate() {
+        let mut rng = Rng::seed(0);
+        let scores = Tensor::randn(&[256, 8], &mut rng);
+        let r = SwitchGate::new(8, 1.0).route_scores(&scores, 0);
+        let cap = 256 / 8; // cf = 1.0
+        let p = apply_capacity(&r, cap);
+        let total_kept: usize = p.kept.iter().sum();
+        assert!(total_kept <= 256);
+        assert!(p.drop_rate() < 0.5); // random scores → moderate drops
+        assert!(p.kept.iter().all(|&k| k <= cap));
+    }
+}

@@ -1,0 +1,194 @@
+//! Dense-to-Sparse gate (Nie et al., 2021): start dense — every token
+//! routed to (almost) all experts — and anneal a Gumbel-softmax
+//! temperature so routing sharpens into a sparse top-1-like gate as
+//! training progresses. Decouples gate learning from expert learning.
+//!
+//! Implementation: per token, weights are `softmax((log-softmax(scores) +
+//! gumbel) / τ(step))`; experts with weight below a threshold are pruned
+//! (slot weight 0). `τ` anneals exponentially from `tau0` to `tau_min`
+//! over `anneal_steps`.
+
+use crate::gating::{Gate, GateBatch, Routing};
+use crate::util::rng::{hash_u64, Rng};
+
+/// Gumbel-softmax gate with temperature annealing.
+#[derive(Clone, Debug)]
+pub struct DenseToSparseGate {
+    num_experts: usize,
+    pub tau0: f32,
+    pub tau_min: f32,
+    pub anneal_steps: u64,
+    pub seed: u64,
+    /// Slots below this weight are pruned (paper uses a small cutoff so
+    /// the layout transform skips negligible experts).
+    pub prune_threshold: f32,
+}
+
+impl DenseToSparseGate {
+    pub fn new(
+        num_experts: usize,
+        tau0: f32,
+        tau_min: f32,
+        anneal_steps: u64,
+        seed: u64,
+    ) -> Self {
+        assert!(tau0 >= tau_min && tau_min > 0.0);
+        DenseToSparseGate {
+            num_experts,
+            tau0,
+            tau_min,
+            anneal_steps: anneal_steps.max(1),
+            seed,
+            prune_threshold: 0.01,
+        }
+    }
+
+    /// Temperature at a training step (exponential decay).
+    pub fn tau(&self, step: u64) -> f32 {
+        let frac = (step.min(self.anneal_steps) as f64) / self.anneal_steps as f64;
+        let t = (self.tau0 as f64) * ((self.tau_min / self.tau0) as f64).powf(frac);
+        t as f32
+    }
+}
+
+impl Gate for DenseToSparseGate {
+    fn name(&self) -> String {
+        "dense_to_sparse".into()
+    }
+
+    /// Slots per token = E (dense upper bound; weight-0 slots inactive).
+    fn k(&self) -> usize {
+        self.num_experts
+    }
+
+    fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    fn route(&self, batch: &GateBatch) -> Routing {
+        let scores = batch.scores;
+        let tokens = scores.rows();
+        let e = self.num_experts;
+        assert_eq!(scores.row_len(), e);
+        let tau = self.tau(batch.step);
+        let mut expert_ids = Vec::with_capacity(tokens * e);
+        let mut weights = Vec::with_capacity(tokens * e);
+        for t in 0..tokens {
+            let row = scores.row(t);
+            // log-softmax of scores.
+            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let lse = row.iter().map(|v| (v - max).exp()).sum::<f32>().ln() + max;
+            // Gumbel noise, deterministic per (seed, step, token, expert).
+            let mut rng =
+                Rng::seed(hash_u64(self.seed ^ batch.step.wrapping_mul(0x9E37) ^ (t as u64) << 20));
+            let mut logits = vec![0.0f32; e];
+            for (j, l) in logits.iter_mut().enumerate() {
+                *l = (row[j] - lse + rng.gumbel()) / tau;
+            }
+            // Softmax.
+            let lmax = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for l in logits.iter_mut() {
+                *l = (*l - lmax).exp();
+                sum += *l;
+            }
+            for (j, l) in logits.iter().enumerate() {
+                let w = l / sum;
+                expert_ids.push(j as u32);
+                weights.push(if w >= self.prune_threshold { w } else { 0.0 });
+            }
+        }
+        Routing { k: e, tokens, num_experts: e, expert_ids, weights, aux_loss: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn gate() -> DenseToSparseGate {
+        DenseToSparseGate::new(8, 4.0, 0.05, 1000, 7)
+    }
+
+    #[test]
+    fn temperature_anneals_monotonically() {
+        let g = gate();
+        assert!((g.tau(0) - 4.0).abs() < 1e-5);
+        assert!((g.tau(1000) - 0.05).abs() < 1e-5);
+        assert!((g.tau(5000) - 0.05).abs() < 1e-5); // clamped
+        let mut prev = f32::INFINITY;
+        for s in [0u64, 100, 300, 600, 1000] {
+            let t = g.tau(s);
+            assert!(t < prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn starts_dense_becomes_sparse() {
+        let g = gate();
+        let mut rng = Rng::seed(0);
+        let scores = Tensor::randn(&[128, 8], &mut rng);
+        let early = g.route_scores(&scores, 0);
+        let late = g.route_scores(&scores, 1000);
+        early.validate().unwrap();
+        late.validate().unwrap();
+        let k_early = early.mean_active_k();
+        let k_late = late.mean_active_k();
+        assert!(
+            k_early > 3.0,
+            "early routing should be dense-ish, got {k_early:.2}"
+        );
+        assert!(k_late < 2.0, "late routing should be sparse, got {k_late:.2}");
+        assert!(k_early > k_late + 1.0);
+    }
+
+    #[test]
+    fn weights_form_subprobability() {
+        let g = gate();
+        let mut rng = Rng::seed(1);
+        let scores = Tensor::randn(&[32, 8], &mut rng);
+        let r = g.route_scores(&scores, 500);
+        for t in 0..32 {
+            let s: f32 = r.weights[t * 8..(t + 1) * 8].iter().sum();
+            assert!(s <= 1.0 + 1e-5 && s > 0.5, "sum={s}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_step() {
+        let g = gate();
+        let mut rng = Rng::seed(2);
+        let scores = Tensor::randn(&[16, 8], &mut rng);
+        assert_eq!(g.route_scores(&scores, 3).weights, g.route_scores(&scores, 3).weights);
+        assert_ne!(g.route_scores(&scores, 3).weights, g.route_scores(&scores, 4).weights);
+    }
+
+    #[test]
+    fn late_routing_tracks_argmax() {
+        // At tiny τ with mild noise, the dominant expert should win almost
+        // always.
+        let g = DenseToSparseGate::new(4, 1.0, 0.02, 10, 0);
+        let mut scores = Tensor::zeros(&[64, 4]);
+        for t in 0..64 {
+            scores.set(t, t % 4, 6.0);
+        }
+        let r = g.route_scores(&scores, 10);
+        let mut correct = 0;
+        for t in 0..64 {
+            let w = &r.weights[t * 4..(t + 1) * 4];
+            let argmax = w
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax == t % 4 {
+                correct += 1;
+            }
+        }
+        assert!(correct > 56, "correct={correct}/64");
+    }
+}

@@ -1,0 +1,144 @@
+//! GShard gate (Lepikhin et al., 2020): top-2 routing. The second expert
+//! is kept with probability proportional to its router weight (the
+//! "random routing" trick), and weights are renormalized over the kept
+//! pair.
+
+use crate::gating::topk::{softmax_of_selected, top2_row};
+use crate::gating::{aux_loss, Gate, GateBatch, Routing};
+use crate::nn::softmax_rows;
+use crate::tensor::Tensor;
+use crate::util::rng::{hash_u64, Rng};
+
+/// Top-2 gate with stochastic second-expert dropping.
+#[derive(Clone, Debug)]
+pub struct GShardGate {
+    num_experts: usize,
+    /// Deterministic seed for the second-expert coin flips (reproducible
+    /// training).
+    pub seed: u64,
+    /// If false, always keep the second expert (used by tests/benches).
+    pub stochastic_second: bool,
+}
+
+impl GShardGate {
+    pub fn new(num_experts: usize) -> Self {
+        GShardGate { num_experts, seed: 0x65_5348_4152_44, stochastic_second: true }
+    }
+
+    pub fn deterministic(num_experts: usize) -> Self {
+        GShardGate { num_experts, seed: 0, stochastic_second: false }
+    }
+}
+
+impl Gate for GShardGate {
+    fn name(&self) -> String {
+        "gshard".into()
+    }
+
+    fn k(&self) -> usize {
+        2
+    }
+
+    fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    fn route(&self, batch: &GateBatch) -> Routing {
+        let scores = batch.scores;
+        let tokens = scores.rows();
+        assert_eq!(scores.row_len(), self.num_experts);
+        assert!(self.num_experts >= 2, "gshard needs at least 2 experts");
+        let mut expert_ids = Vec::with_capacity(tokens * 2);
+        let mut weights = Vec::with_capacity(tokens * 2);
+        let mut top1 = Vec::with_capacity(tokens);
+        for t in 0..tokens {
+            let row = scores.row(t);
+            let (ids, vals) = top2_row(row);
+            let mut p = [0.0f32; 2];
+            softmax_of_selected(row, &vals, &mut p);
+            top1.push(ids[0]);
+
+            // GShard: keep 2nd expert with prob = 2*p2 (capped at 1) —
+            // tokens where the router is confident route to one expert.
+            let keep2 = if self.stochastic_second {
+                let mut rng = Rng::seed(
+                    hash_u64(self.seed ^ batch.step.wrapping_mul(0x9E37) ^ t as u64),
+                );
+                rng.next_f32() < (2.0 * p[1]).min(1.0)
+            } else {
+                true
+            };
+            let denom = p[0] + if keep2 { p[1] } else { 0.0 };
+            expert_ids.push(ids[0]);
+            weights.push(p[0] / denom);
+            expert_ids.push(ids[1]);
+            weights.push(if keep2 { p[1] / denom } else { 0.0 });
+        }
+        let mut probs = scores.clone();
+        softmax_rows(&mut probs);
+        let loss = aux_loss(&probs, &top1, self.num_experts);
+        Routing {
+            k: 2,
+            tokens,
+            num_experts: self.num_experts,
+            expert_ids,
+            weights,
+            aux_loss: loss,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn deterministic_variant_keeps_both() {
+        let mut rng = Rng::seed(0);
+        let scores = Tensor::randn(&[64, 8], &mut rng);
+        let gate = GShardGate::deterministic(8);
+        let r = gate.route_scores(&scores, 0);
+        r.validate().unwrap();
+        assert_eq!(r.k, 2);
+        assert!((r.mean_active_k() - 2.0).abs() < 1e-9);
+        // Weights renormalized: each token's pair sums to 1.
+        for t in 0..64 {
+            let s = r.weights[2 * t] + r.weights[2 * t + 1];
+            assert!((s - 1.0).abs() < 1e-5);
+            // Top-1 weight ≥ top-2 weight.
+            assert!(r.weights[2 * t] >= r.weights[2 * t + 1]);
+        }
+    }
+
+    #[test]
+    fn stochastic_second_drops_some() {
+        let mut rng = Rng::seed(1);
+        // Confident router: big gaps → second prob small → mostly dropped.
+        let mut scores = Tensor::randn(&[256, 8], &mut rng);
+        for t in 0..256 {
+            let j = t % 8;
+            scores.set(t, j, scores.at(t, j) + 8.0);
+        }
+        let gate = GShardGate::new(8);
+        let r = gate.route_scores(&scores, 0);
+        let active = r.mean_active_k();
+        assert!(active < 1.5, "mean active k = {active}");
+        // Reproducible for the same step.
+        let r2 = gate.route_scores(&scores, 0);
+        assert_eq!(r.weights, r2.weights);
+        // Different step → different coin flips somewhere.
+        let r3 = gate.route_scores(&scores, 1);
+        assert_ne!(r.weights, r3.weights);
+    }
+
+    #[test]
+    fn distinct_experts_per_token() {
+        let mut rng = Rng::seed(2);
+        let scores = Tensor::randn(&[100, 4], &mut rng);
+        let r = GShardGate::deterministic(4).route_scores(&scores, 0);
+        for t in 0..100 {
+            assert_ne!(r.expert_ids[2 * t], r.expert_ids[2 * t + 1]);
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Hash layer gates (Roller et al., 2021): parameter-free token→expert
+//! mappings. Three variants from the paper:
+//! - **Random hash** — `hash(token_id) mod E`;
+//! - **Balanced hash** — a precomputed vocab→expert table with exactly
+//!   equal vocab shares per expert;
+//! - **Clustered hash** — k-means over the token embedding table; each
+//!   cluster is an expert (similar tokens share an expert).
+
+use crate::gating::{Gate, GateBatch, Routing};
+use crate::tensor::Tensor;
+use crate::util::rng::{hash_u64, Rng};
+
+/// Token id for row `t` — hash gates prefer real ids, fall back to the
+/// row index (still deterministic).
+fn token_id(batch: &GateBatch, t: usize) -> u64 {
+    match batch.token_ids {
+        Some(ids) => ids[t] as u64,
+        None => t as u64,
+    }
+}
+
+/// `hash(token) mod E`.
+#[derive(Clone, Debug)]
+pub struct RandomHashGate {
+    num_experts: usize,
+    pub salt: u64,
+}
+
+impl RandomHashGate {
+    pub fn new(num_experts: usize) -> Self {
+        RandomHashGate { num_experts, salt: 0xAB5E }
+    }
+}
+
+impl Gate for RandomHashGate {
+    fn name(&self) -> String {
+        "hash_random".into()
+    }
+
+    fn k(&self) -> usize {
+        1
+    }
+
+    fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    fn route(&self, batch: &GateBatch) -> Routing {
+        let tokens = batch.scores.rows();
+        let expert_ids: Vec<u32> = (0..tokens)
+            .map(|t| (hash_u64(token_id(batch, t) ^ self.salt) % self.num_experts as u64) as u32)
+            .collect();
+        Routing {
+            k: 1,
+            tokens,
+            num_experts: self.num_experts,
+            expert_ids,
+            weights: vec![1.0; tokens],
+            aux_loss: 0.0,
+        }
+    }
+}
+
+/// Balanced vocab→expert table: expert `perm[v] % E` where `perm` is a
+/// seeded permutation of the vocab — every expert owns exactly
+/// `vocab/E` (±1) token types.
+#[derive(Clone, Debug)]
+pub struct BalancedHashGate {
+    num_experts: usize,
+    table: Vec<u32>,
+}
+
+impl BalancedHashGate {
+    pub fn new(num_experts: usize, vocab_size: usize) -> Self {
+        // Deterministic permutation of the vocab, then round-robin.
+        let mut perm: Vec<u32> = (0..vocab_size as u32).collect();
+        let mut rng = Rng::seed(0xBA1A_u64);
+        rng.shuffle(&mut perm);
+        let mut table = vec![0u32; vocab_size];
+        for (pos, &v) in perm.iter().enumerate() {
+            table[v as usize] = (pos % num_experts) as u32;
+        }
+        BalancedHashGate { num_experts, table }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.table.len()
+    }
+}
+
+impl Gate for BalancedHashGate {
+    fn name(&self) -> String {
+        "hash_balanced".into()
+    }
+
+    fn k(&self) -> usize {
+        1
+    }
+
+    fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    fn route(&self, batch: &GateBatch) -> Routing {
+        let tokens = batch.scores.rows();
+        let expert_ids: Vec<u32> = (0..tokens)
+            .map(|t| {
+                let id = token_id(batch, t) as usize % self.table.len();
+                self.table[id]
+            })
+            .collect();
+        Routing {
+            k: 1,
+            tokens,
+            num_experts: self.num_experts,
+            expert_ids,
+            weights: vec![1.0; tokens],
+            aux_loss: 0.0,
+        }
+    }
+}
+
+/// K-means-clustered vocab→expert table built from an embedding matrix.
+#[derive(Clone, Debug)]
+pub struct ClusteredHashGate {
+    num_experts: usize,
+    table: Vec<u32>,
+}
+
+impl ClusteredHashGate {
+    /// Fit k-means (Lloyd's, `iters` rounds, seeded init) on the rows of
+    /// `embeddings` `[vocab, d]`; cluster = expert.
+    pub fn fit(num_experts: usize, embeddings: &Tensor, iters: usize, seed: u64) -> Self {
+        let vocab = embeddings.rows();
+        let d = embeddings.row_len();
+        let mut rng = Rng::seed(seed ^ 0xC1_0573);
+        // Init: distinct random rows as centroids.
+        let mut centroid_idx: Vec<usize> = (0..vocab).collect();
+        rng.shuffle(&mut centroid_idx);
+        let mut centroids: Vec<Vec<f32>> = centroid_idx
+            .iter()
+            .take(num_experts)
+            .map(|&i| embeddings.row(i).to_vec())
+            .collect();
+        // If vocab < E, repeat rows.
+        while centroids.len() < num_experts {
+            let i = rng.below(vocab);
+            centroids.push(embeddings.row(i).to_vec());
+        }
+        let mut table = vec![0u32; vocab];
+        for _ in 0..iters.max(1) {
+            // Assign.
+            for v in 0..vocab {
+                let row = embeddings.row(v);
+                let mut best = 0usize;
+                let mut bd = f32::INFINITY;
+                for (c, cent) in centroids.iter().enumerate() {
+                    let mut dist = 0.0f32;
+                    for j in 0..d {
+                        let diff = row[j] - cent[j];
+                        dist += diff * diff;
+                    }
+                    if dist < bd {
+                        bd = dist;
+                        best = c;
+                    }
+                }
+                table[v] = best as u32;
+            }
+            // Update.
+            let mut sums = vec![vec![0.0f32; d]; num_experts];
+            let mut counts = vec![0usize; num_experts];
+            for v in 0..vocab {
+                let c = table[v] as usize;
+                counts[c] += 1;
+                for j in 0..d {
+                    sums[c][j] += embeddings.at(v, j);
+                }
+            }
+            for c in 0..num_experts {
+                if counts[c] > 0 {
+                    for j in 0..d {
+                        centroids[c][j] = sums[c][j] / counts[c] as f32;
+                    }
+                } else {
+                    // Re-seed empty cluster.
+                    let i = rng.below(vocab);
+                    centroids[c] = embeddings.row(i).to_vec();
+                }
+            }
+        }
+        ClusteredHashGate { num_experts, table }
+    }
+}
+
+impl Gate for ClusteredHashGate {
+    fn name(&self) -> String {
+        "hash_clustered".into()
+    }
+
+    fn k(&self) -> usize {
+        1
+    }
+
+    fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    fn route(&self, batch: &GateBatch) -> Routing {
+        let tokens = batch.scores.rows();
+        let expert_ids: Vec<u32> = (0..tokens)
+            .map(|t| {
+                let id = token_id(batch, t) as usize % self.table.len();
+                self.table[id]
+            })
+            .collect();
+        Routing {
+            k: 1,
+            tokens,
+            num_experts: self.num_experts,
+            expert_ids,
+            weights: vec![1.0; tokens],
+            aux_loss: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::load_cv;
+
+    fn batch_of(ids: &[u32], e: usize) -> (Tensor, Vec<u32>) {
+        (Tensor::zeros(&[ids.len(), e]), ids.to_vec())
+    }
+
+    #[test]
+    fn random_hash_is_deterministic_and_spread() {
+        let gate = RandomHashGate::new(8);
+        let ids: Vec<u32> = (0..1024).collect();
+        let (scores, ids) = batch_of(&ids, 8);
+        let b = GateBatch { scores: &scores, token_ids: Some(&ids), step: 0 };
+        let r1 = gate.route(&b);
+        let r2 = gate.route(&b);
+        assert_eq!(r1.expert_ids, r2.expert_ids);
+        // Roughly uniform across experts.
+        assert!(load_cv(&r1.expert_counts()) < 0.25);
+    }
+
+    #[test]
+    fn same_token_always_same_expert() {
+        let gate = RandomHashGate::new(4);
+        let ids = vec![42u32; 16];
+        let (scores, ids) = batch_of(&ids, 4);
+        let r = gate.route(&GateBatch { scores: &scores, token_ids: Some(&ids), step: 0 });
+        assert!(r.expert_ids.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn balanced_hash_exact_vocab_balance() {
+        let gate = BalancedHashGate::new(4, 100);
+        // Count vocab entries per expert.
+        let mut counts = vec![0usize; 4];
+        for v in 0..100u32 {
+            let (scores, ids) = batch_of(&[v], 4);
+            let r =
+                gate.route(&GateBatch { scores: &scores, token_ids: Some(&ids), step: 0 });
+            counts[r.expert_ids[0] as usize] += 1;
+        }
+        assert_eq!(counts, vec![25; 4]);
+    }
+
+    #[test]
+    fn clustered_hash_groups_similar_tokens() {
+        // Two well-separated blobs of embeddings → the table should give
+        // each blob a consistent expert.
+        let vocab = 40;
+        let d = 4;
+        let mut emb = Tensor::zeros(&[vocab, d]);
+        for v in 0..vocab {
+            let offset = if v < 20 { 10.0 } else { -10.0 };
+            for j in 0..d {
+                emb.set(v, j, offset + ((v * 7 + j) % 3) as f32 * 0.1);
+            }
+        }
+        let gate = ClusteredHashGate::fit(2, &emb, 10, 0);
+        let ids: Vec<u32> = (0..vocab as u32).collect();
+        let (scores, ids) = batch_of(&ids, 2);
+        let r = gate.route(&GateBatch { scores: &scores, token_ids: Some(&ids), step: 0 });
+        let first = r.expert_ids[0];
+        assert!(r.expert_ids[..20].iter().all(|&e| e == first));
+        let second = r.expert_ids[20];
+        assert!(r.expert_ids[20..].iter().all(|&e| e == second));
+        assert_ne!(first, second);
+    }
+
+    #[test]
+    fn fallback_to_row_index_without_ids() {
+        let gate = RandomHashGate::new(4);
+        let scores = Tensor::zeros(&[8, 4]);
+        let r1 = gate.route(&GateBatch { scores: &scores, token_ids: None, step: 0 });
+        let r2 = gate.route(&GateBatch { scores: &scores, token_ids: None, step: 9 });
+        assert_eq!(r1.expert_ids, r2.expert_ids); // step-independent
+        r1.validate().unwrap();
+    }
+}

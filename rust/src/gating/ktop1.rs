@@ -1,0 +1,125 @@
+//! kTop1 gate (M6-T, Yang et al., 2021): experts are partitioned into
+//! `k` prototypes; each token takes the top-1 expert *within every
+//! prototype* and the prototype outputs are summed.
+//!
+//! Compared with plain top-k this bounds each prototype's traffic
+//! independently and was observed to train better at equal FLOPs.
+
+use crate::error::Result;
+use crate::gating::topk::{softmax_of_selected, top1_row};
+use crate::gating::{Gate, GateBatch, Routing};
+
+/// M6-style k-prototype top-1 routing. Prototypes are contiguous expert
+/// ranges of size `E/k`.
+#[derive(Clone, Debug)]
+pub struct KTop1Gate {
+    num_experts: usize,
+    k: usize,
+    per_proto: usize,
+}
+
+impl KTop1Gate {
+    pub fn new(num_experts: usize, k: usize) -> Result<Self> {
+        if k == 0 || num_experts % k != 0 {
+            return Err(crate::config_err!(
+                "kTop1 needs num_experts divisible by k ({num_experts} % {k})"
+            ));
+        }
+        Ok(KTop1Gate { num_experts, k, per_proto: num_experts / k })
+    }
+
+    /// Prototype index of an expert.
+    pub fn proto_of(&self, expert: usize) -> usize {
+        expert / self.per_proto
+    }
+}
+
+impl Gate for KTop1Gate {
+    fn name(&self) -> String {
+        format!("{}top1", self.k)
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    fn route(&self, batch: &GateBatch) -> Routing {
+        let scores = batch.scores;
+        let tokens = scores.rows();
+        assert_eq!(scores.row_len(), self.num_experts);
+        let mut expert_ids = Vec::with_capacity(tokens * self.k);
+        let mut weights = Vec::with_capacity(tokens * self.k);
+        for t in 0..tokens {
+            let row = scores.row(t);
+            for p in 0..self.k {
+                let lo = p * self.per_proto;
+                let hi = lo + self.per_proto;
+                let sub = &row[lo..hi];
+                let (i, v) = top1_row(sub);
+                // Weight: softmax within the prototype (each prototype
+                // contributes an independent mixture component).
+                let mut w = [0.0f32; 1];
+                softmax_of_selected(sub, &[v], &mut w);
+                expert_ids.push((lo + i as usize) as u32);
+                // Scale by 1/k so the summed output stays O(1).
+                weights.push(w[0] / self.k as f32);
+            }
+        }
+        Routing {
+            k: self.k,
+            tokens,
+            num_experts: self.num_experts,
+            expert_ids,
+            weights,
+            aux_loss: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn one_expert_per_prototype() {
+        let mut rng = Rng::seed(0);
+        let gate = KTop1Gate::new(8, 4).unwrap();
+        let scores = Tensor::randn(&[50, 8], &mut rng);
+        let r = gate.route_scores(&scores, 0);
+        r.validate().unwrap();
+        for t in 0..50 {
+            let slots = &r.expert_ids[t * 4..(t + 1) * 4];
+            for (p, &e) in slots.iter().enumerate() {
+                assert_eq!(gate.proto_of(e as usize), p, "slot {p} expert {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indivisible() {
+        assert!(KTop1Gate::new(8, 3).is_err());
+        assert!(KTop1Gate::new(8, 0).is_err());
+        assert!(KTop1Gate::new(8, 8).is_ok());
+    }
+
+    #[test]
+    fn weights_bounded_by_inverse_k() {
+        let mut rng = Rng::seed(1);
+        let gate = KTop1Gate::new(16, 2).unwrap();
+        let scores = Tensor::randn(&[32, 16], &mut rng);
+        let r = gate.route_scores(&scores, 0);
+        // Each weight ≤ 1/k (softmax prob ≤ 1, scaled by 1/k).
+        assert!(r.weights.iter().all(|&w| w <= 0.5 + 1e-6 && w > 0.0));
+        // k=1 degenerates to switch-like ids.
+        let g1 = KTop1Gate::new(16, 1).unwrap();
+        let r1 = g1.route_scores(&scores, 0);
+        let sw = crate::gating::SwitchGate::new(16, 1.0).route_scores(&scores, 0);
+        assert_eq!(r1.expert_ids, sw.expert_ids);
+    }
+}

@@ -1,0 +1,284 @@
+//! The gating-strategy zoo (paper §3.1, Figure 2).
+//!
+//! HetuMoE's usability claim is breadth: Switch (Top-1), GShard (Top-2),
+//! generic Top-K, M6's kTop1, SAM's hierarchical Top-K, BASE's balanced
+//! linear assignment, Hash layers, and Dense-to-Sparse — all behind one
+//! [`Gate`] trait so the coordinator, benches and examples treat them
+//! uniformly.
+//!
+//! A gate maps a score matrix `(tokens, experts)` (and optionally token
+//! ids / the training step) to a [`Routing`]: `k` expert slots per token
+//! with combine weights. Weight `0` marks an inactive slot (used by
+//! Dense-to-Sparse whose effective k varies per token).
+
+pub mod base_layer;
+pub mod capacity;
+pub mod dense_to_sparse;
+pub mod gshard;
+pub mod hash;
+pub mod ktop1;
+pub mod sam;
+pub mod switch;
+pub mod topk;
+pub mod topk_gate;
+
+pub use base_layer::BaseLayerGate;
+pub use capacity::{apply_capacity, DispatchPlan};
+pub use dense_to_sparse::DenseToSparseGate;
+pub use gshard::GShardGate;
+pub use hash::{BalancedHashGate, ClusteredHashGate, RandomHashGate};
+pub use ktop1::KTop1Gate;
+pub use sam::SamGate;
+pub use switch::SwitchGate;
+pub use topk_gate::TopKGate;
+
+use crate::config::{GateKind, HashScheme, MoeConfig};
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// Routing decision for a batch of tokens.
+#[derive(Clone, Debug)]
+pub struct Routing {
+    /// Expert slots per token.
+    pub k: usize,
+    pub tokens: usize,
+    pub num_experts: usize,
+    /// Flat `[tokens * k]`: expert id per slot.
+    pub expert_ids: Vec<u32>,
+    /// Flat `[tokens * k]`: combine weight per slot (0 = inactive slot).
+    pub weights: Vec<f32>,
+    /// Auxiliary load-balancing loss (0 for gates that don't define one).
+    pub aux_loss: f32,
+}
+
+impl Routing {
+    /// Per-expert demanded token counts (inactive slots excluded).
+    pub fn expert_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.num_experts];
+        for (slot, &e) in self.expert_ids.iter().enumerate() {
+            if self.weights[slot] != 0.0 {
+                counts[e as usize] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Mean number of active expert slots per token.
+    pub fn mean_active_k(&self) -> f64 {
+        let active = self.weights.iter().filter(|&&w| w != 0.0).count();
+        active as f64 / self.tokens.max(1) as f64
+    }
+
+    /// Internal-consistency check used by tests and debug builds.
+    pub fn validate(&self) -> Result<()> {
+        if self.expert_ids.len() != self.tokens * self.k
+            || self.weights.len() != self.tokens * self.k
+        {
+            return Err(crate::shape_err!(
+                "routing arrays must be tokens*k = {}",
+                self.tokens * self.k
+            ));
+        }
+        for &e in &self.expert_ids {
+            if e as usize >= self.num_experts {
+                return Err(crate::shape_err!(
+                    "expert id {e} out of range (E={})",
+                    self.num_experts
+                ));
+            }
+        }
+        for &w in &self.weights {
+            if !(w.is_finite() && w >= 0.0) {
+                return Err(crate::shape_err!("bad combine weight {w}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Input bundle for a gate call.
+pub struct GateBatch<'a> {
+    /// Raw affinity logits `(tokens, experts)` — typically `x · W_gate`
+    /// computed by L2 (or [`crate::nn::matmul`] natively).
+    pub scores: &'a Tensor,
+    /// Token ids (needed by hash gates; others ignore them).
+    pub token_ids: Option<&'a [u32]>,
+    /// Training step (needed by Dense-to-Sparse annealing).
+    pub step: u64,
+}
+
+/// A gating strategy.
+pub trait Gate: Send + Sync {
+    fn name(&self) -> String;
+    /// Expert slots allocated per token (upper bound for variable-k gates).
+    fn k(&self) -> usize;
+    fn num_experts(&self) -> usize;
+    /// Route a batch.
+    fn route(&self, batch: &GateBatch) -> Routing;
+
+    /// Convenience wrapper: route from scores only.
+    fn route_scores(&self, scores: &Tensor, step: u64) -> Routing {
+        self.route(&GateBatch { scores, token_ids: None, step })
+    }
+}
+
+/// Instantiate a gate from config. `vocab_size` and `embeddings` feed the
+/// hash gates (balanced needs the vocab, clustered needs token vectors).
+pub fn make_gate(
+    cfg: &MoeConfig,
+    vocab_size: usize,
+    embeddings: Option<&Tensor>,
+) -> Result<Box<dyn Gate>> {
+    cfg.validate()?;
+    let e = cfg.num_experts;
+    Ok(match &cfg.gate {
+        GateKind::Switch => Box::new(SwitchGate::new(e, cfg.capacity_factor as f32)),
+        GateKind::GShard => Box::new(GShardGate::new(e)),
+        GateKind::TopK { k } => Box::new(TopKGate::new(e, *k)),
+        GateKind::KTop1 { k } => Box::new(KTop1Gate::new(e, *k)?),
+        GateKind::SamHTopK { groups, k } => Box::new(SamGate::new(e, *groups, *k)?),
+        GateKind::Base => Box::new(BaseLayerGate::new(e)),
+        GateKind::Hash { scheme } => match scheme {
+            HashScheme::Random => Box::new(RandomHashGate::new(e)),
+            HashScheme::Balanced => Box::new(BalancedHashGate::new(e, vocab_size)),
+            HashScheme::Clustered => {
+                let emb = embeddings.ok_or_else(|| {
+                    crate::config_err!("clustered hash gate needs an embedding table")
+                })?;
+                Box::new(ClusteredHashGate::fit(e, emb, 10, 0))
+            }
+        },
+        GateKind::DenseToSparse { tau0, tau_min, anneal_steps } => Box::new(
+            DenseToSparseGate::new(e, *tau0 as f32, *tau_min as f32, *anneal_steps, 0),
+        ),
+    })
+}
+
+/// Switch-style auxiliary load-balancing loss:
+/// `E · Σ_e f_e · P_e`, where `f_e` is the fraction of tokens whose top
+/// choice is `e` and `P_e` the mean router probability of `e`.
+pub(crate) fn aux_loss(probs: &Tensor, top1: &[u32], num_experts: usize) -> f32 {
+    let tokens = probs.rows();
+    if tokens == 0 {
+        return 0.0;
+    }
+    let mut f = vec![0.0f64; num_experts];
+    for &e in top1 {
+        f[e as usize] += 1.0;
+    }
+    let mut p = vec![0.0f64; num_experts];
+    for t in 0..tokens {
+        for (e, pe) in p.iter_mut().enumerate() {
+            *pe += probs.at(t, e) as f64;
+        }
+    }
+    let n = tokens as f64;
+    let mut loss = 0.0f64;
+    for e in 0..num_experts {
+        loss += (f[e] / n) * (p[e] / n);
+    }
+    (loss * num_experts as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn routing_counts_and_validation() {
+        let r = Routing {
+            k: 2,
+            tokens: 3,
+            num_experts: 4,
+            expert_ids: vec![0, 1, 1, 2, 3, 3],
+            weights: vec![0.5, 0.5, 1.0, 0.0, 0.6, 0.4],
+            aux_loss: 0.0,
+        };
+        r.validate().unwrap();
+        assert_eq!(r.expert_counts(), vec![1, 2, 0, 2]); // slot with w=0 excluded
+        assert!((r.mean_active_k() - 5.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn routing_validation_catches_bad_ids() {
+        let r = Routing {
+            k: 1,
+            tokens: 1,
+            num_experts: 2,
+            expert_ids: vec![5],
+            weights: vec![1.0],
+            aux_loss: 0.0,
+        };
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn aux_loss_uniform_is_one() {
+        // Perfectly uniform probs and assignment → loss = E * E * (1/E)*(1/E) = 1.
+        let e = 4;
+        let tokens = 8;
+        let probs = Tensor::full(&[tokens, e], 1.0 / e as f32);
+        let top1: Vec<u32> = (0..tokens as u32).map(|t| t % e as u32).collect();
+        let loss = aux_loss(&probs, &top1, e);
+        assert!((loss - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn aux_loss_penalizes_collapse() {
+        let e = 4;
+        let tokens = 8;
+        let mut probs = Tensor::zeros(&[tokens, e]);
+        for t in 0..tokens {
+            probs.set(t, 0, 1.0); // all mass on expert 0
+        }
+        let top1 = vec![0u32; tokens];
+        assert!(aux_loss(&probs, &top1, e) > 3.0);
+    }
+
+    #[test]
+    fn make_gate_covers_all_kinds() {
+        let mut rng = Rng::seed(0);
+        let emb = Tensor::randn(&[32, 8], &mut rng);
+        let kinds = vec![
+            GateKind::Switch,
+            GateKind::GShard,
+            GateKind::TopK { k: 3 },
+            GateKind::KTop1 { k: 2 },
+            GateKind::SamHTopK { groups: 2, k: 2 },
+            GateKind::Base,
+            GateKind::Hash { scheme: HashScheme::Random },
+            GateKind::Hash { scheme: HashScheme::Balanced },
+            GateKind::Hash { scheme: HashScheme::Clustered },
+            GateKind::DenseToSparse { tau0: 2.0, tau_min: 0.2, anneal_steps: 100 },
+        ];
+        for gate_kind in kinds {
+            let cfg = MoeConfig {
+                num_experts: 8,
+                d_model: 8,
+                ffn_hidden: 16,
+                capacity_factor: 1.25,
+                gate: gate_kind.clone(),
+            };
+            let gate = make_gate(&cfg, 32, Some(&emb)).unwrap();
+            let scores = Tensor::randn(&[16, 8], &mut rng);
+            let ids: Vec<u32> = (0..16).collect();
+            let r = gate.route(&GateBatch { scores: &scores, token_ids: Some(&ids), step: 5 });
+            r.validate().unwrap_or_else(|e| panic!("{}: {e}", gate.name()));
+            assert_eq!(r.tokens, 16, "{}", gate.name());
+            assert!(r.mean_active_k() > 0.0, "{}", gate.name());
+        }
+    }
+
+    #[test]
+    fn clustered_hash_without_embeddings_errors() {
+        let cfg = MoeConfig {
+            num_experts: 4,
+            d_model: 8,
+            ffn_hidden: 8,
+            capacity_factor: 1.0,
+            gate: GateKind::Hash { scheme: HashScheme::Clustered },
+        };
+        assert!(make_gate(&cfg, 16, None).is_err());
+    }
+}

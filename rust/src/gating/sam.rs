@@ -1,0 +1,151 @@
+//! SAM hierarchical gate ("Switch and Mixture", Jiang et al., 2021).
+//!
+//! Experts are grouped by device: a *Switch router* first picks one group
+//! per token (top-1 over group scores), then a *Mixture router* picks
+//! top-k experts **within** that group. All of a token's experts live on
+//! one device, so cross-device traffic is bounded by the group choice —
+//! the communication-aware routing the paper lists as "H Topk".
+
+use crate::error::Result;
+use crate::gating::topk::{softmax_of_selected, top1_row, topk_select_row};
+use crate::gating::{Gate, GateBatch, Routing};
+
+/// Hierarchical switch-then-mixture gate.
+#[derive(Clone, Debug)]
+pub struct SamGate {
+    num_experts: usize,
+    groups: usize,
+    k: usize,
+    per_group: usize,
+}
+
+impl SamGate {
+    pub fn new(num_experts: usize, groups: usize, k: usize) -> Result<Self> {
+        if groups == 0 || num_experts % groups != 0 {
+            return Err(crate::config_err!(
+                "SAM needs num_experts divisible by groups ({num_experts} % {groups})"
+            ));
+        }
+        let per_group = num_experts / groups;
+        if k == 0 || k > per_group {
+            return Err(crate::config_err!(
+                "SAM k={k} out of range for {per_group} experts/group"
+            ));
+        }
+        Ok(SamGate { num_experts, groups, k, per_group })
+    }
+
+    pub fn group_of(&self, expert: usize) -> usize {
+        expert / self.per_group
+    }
+}
+
+impl Gate for SamGate {
+    fn name(&self) -> String {
+        format!("sam_g{}k{}", self.groups, self.k)
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    fn route(&self, batch: &GateBatch) -> Routing {
+        let scores = batch.scores;
+        let tokens = scores.rows();
+        assert_eq!(scores.row_len(), self.num_experts);
+        let mut expert_ids = Vec::with_capacity(tokens * self.k);
+        let mut weights = Vec::with_capacity(tokens * self.k);
+        let mut group_scores = vec![0.0f32; self.groups];
+        let mut sel_ids = vec![0u32; self.k];
+        let mut sel_vals = vec![0.0f32; self.k];
+        for t in 0..tokens {
+            let row = scores.row(t);
+            // Switch router: group score = mean expert score in group.
+            for g in 0..self.groups {
+                let lo = g * self.per_group;
+                group_scores[g] = row[lo..lo + self.per_group].iter().sum::<f32>()
+                    / self.per_group as f32;
+            }
+            let (g, _) = top1_row(&group_scores);
+            let lo = g as usize * self.per_group;
+            let sub = &row[lo..lo + self.per_group];
+            // Mixture router: top-k within the chosen group.
+            topk_select_row(sub, self.k, &mut sel_ids, &mut sel_vals);
+            let mut w = vec![0.0f32; self.k];
+            softmax_of_selected(sub, &sel_vals, &mut w);
+            let s: f32 = w.iter().sum();
+            for (j, &i) in sel_ids.iter().enumerate() {
+                expert_ids.push((lo + i as usize) as u32);
+                weights.push(w[j] / s);
+            }
+        }
+        Routing {
+            k: self.k,
+            tokens,
+            num_experts: self.num_experts,
+            expert_ids,
+            weights,
+            aux_loss: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_slots_in_one_group() {
+        let mut rng = Rng::seed(0);
+        let gate = SamGate::new(16, 4, 3).unwrap();
+        let scores = Tensor::randn(&[40, 16], &mut rng);
+        let r = gate.route_scores(&scores, 0);
+        r.validate().unwrap();
+        for t in 0..40 {
+            let slots = &r.expert_ids[t * 3..(t + 1) * 3];
+            let g0 = gate.group_of(slots[0] as usize);
+            assert!(slots.iter().all(|&e| gate.group_of(e as usize) == g0));
+            // Distinct experts within the group.
+            let mut s = slots.to_vec();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 3);
+        }
+    }
+
+    #[test]
+    fn weights_renormalized() {
+        let mut rng = Rng::seed(1);
+        let gate = SamGate::new(8, 2, 2).unwrap();
+        let r = gate.route_scores(&Tensor::randn(&[16, 8], &mut rng), 0);
+        for t in 0..16 {
+            let s: f32 = r.weights[t * 2..(t + 1) * 2].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn picks_the_strong_group() {
+        // Make group 1 (experts 4..8) uniformly dominant for token 0.
+        let mut scores = Tensor::zeros(&[1, 8]);
+        for e in 4..8 {
+            scores.set(0, e, 5.0);
+        }
+        let gate = SamGate::new(8, 2, 2).unwrap();
+        let r = gate.route_scores(&scores, 0);
+        assert!(r.expert_ids.iter().all(|&e| e >= 4));
+    }
+
+    #[test]
+    fn constructor_validation() {
+        assert!(SamGate::new(16, 3, 1).is_err()); // 16 % 3
+        assert!(SamGate::new(16, 4, 5).is_err()); // k > per_group
+        assert!(SamGate::new(16, 4, 4).is_ok());
+    }
+}

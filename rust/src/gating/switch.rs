@@ -1,0 +1,111 @@
+//! Switch Transformer gate (Fedus et al., 2021): top-1 routing with a
+//! capacity factor and an auxiliary load-balancing loss.
+
+use crate::gating::topk::{softmax_of_selected, top1_row};
+use crate::gating::{aux_loss, Gate, GateBatch, Routing};
+use crate::nn::softmax_rows;
+use crate::tensor::Tensor;
+
+/// Top-1 gate with auxiliary loss.
+#[derive(Clone, Debug)]
+pub struct SwitchGate {
+    num_experts: usize,
+    /// Kept for reporting; capacity is enforced by
+    /// [`crate::gating::apply_capacity`].
+    pub capacity_factor: f32,
+}
+
+impl SwitchGate {
+    pub fn new(num_experts: usize, capacity_factor: f32) -> Self {
+        SwitchGate { num_experts, capacity_factor }
+    }
+}
+
+impl Gate for SwitchGate {
+    fn name(&self) -> String {
+        "switch".into()
+    }
+
+    fn k(&self) -> usize {
+        1
+    }
+
+    fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    fn route(&self, batch: &GateBatch) -> Routing {
+        let scores = batch.scores;
+        let tokens = scores.rows();
+        assert_eq!(scores.row_len(), self.num_experts);
+        let mut expert_ids = Vec::with_capacity(tokens);
+        let mut weights = Vec::with_capacity(tokens);
+        for t in 0..tokens {
+            let row = scores.row(t);
+            let (i, v) = top1_row(row);
+            let mut p = [0.0f32; 1];
+            softmax_of_selected(row, &[v], &mut p);
+            expert_ids.push(i);
+            weights.push(p[0]);
+        }
+        // Aux loss needs full probabilities.
+        let mut probs = scores.clone();
+        softmax_rows(&mut probs);
+        let loss = aux_loss(&probs, &expert_ids, self.num_experts);
+        Routing {
+            k: 1,
+            tokens,
+            num_experts: self.num_experts,
+            expert_ids,
+            weights,
+            aux_loss: loss,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn routes_to_argmax_with_softmax_weight() {
+        let scores =
+            Tensor::from_vec(vec![0.0, 2.0, -1.0, 1.0, 0.0, 0.0], &[2, 3]).unwrap();
+        let gate = SwitchGate::new(3, 1.25);
+        let r = gate.route_scores(&scores, 0);
+        r.validate().unwrap();
+        assert_eq!(r.expert_ids, vec![1, 0]);
+        // Weight = softmax prob of the winner.
+        let p0 = (2.0f32).exp() / (1.0 + (2.0f32).exp() + (-1.0f32).exp());
+        assert!((r.weights[0] - p0).abs() < 1e-5);
+        assert!(r.weights.iter().all(|&w| w > 0.0 && w <= 1.0));
+    }
+
+    #[test]
+    fn aux_loss_reflects_balance() {
+        let mut rng = Rng::seed(0);
+        let gate = SwitchGate::new(8, 1.0);
+        // Random scores → near-uniform loss ≈ 1.
+        let scores = Tensor::randn(&[512, 8], &mut rng);
+        let balanced = gate.route_scores(&scores, 0).aux_loss;
+        // Biased scores → collapsed routing, loss > balanced.
+        let mut biased = Tensor::randn(&[512, 8], &mut rng);
+        for t in 0..512 {
+            biased.set(t, 0, biased.at(t, 0) + 10.0);
+        }
+        let collapsed = gate.route_scores(&biased, 0).aux_loss;
+        assert!(balanced < 1.5, "balanced={balanced}");
+        assert!(collapsed > 4.0, "collapsed={collapsed}");
+    }
+
+    #[test]
+    fn k_is_one() {
+        let gate = SwitchGate::new(4, 1.0);
+        assert_eq!(gate.k(), 1);
+        assert_eq!(gate.num_experts(), 4);
+        let mut rng = Rng::seed(1);
+        let r = gate.route_scores(&Tensor::randn(&[10, 4], &mut rng), 0);
+        assert!((r.mean_active_k() - 1.0).abs() < 1e-9);
+    }
+}

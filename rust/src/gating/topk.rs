@@ -1,0 +1,341 @@
+//! Top-k selection kernels (the paper's Figure 3 "gating operator").
+//!
+//! The paper's observation: deep-learning frameworks ship one *generic*
+//! top-k (heap/sort based, arbitrary k), but MoE only ever needs tiny k
+//! (1 or 2). Specializing removes the heap entirely — a single
+//! branch-light pass tracking one (or two) running maxima — and was
+//! measured ~25% faster than PyTorch's kernel on average.
+//!
+//! This module carries both: the specialized kernels (`top1_row`,
+//! `top2_row`, `topk_select_row`) that HetuMoE uses, and the generic
+//! heap kernel (`topk_heap_row`) standing in for the PyTorch baseline in
+//! the Fig-3 bench. Ties resolve to the smallest index in every
+//! implementation so results are bit-identical and testable.
+
+use crate::tensor::Tensor;
+use crate::util::threadpool::parallel_for_chunks;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Single-pass argmax. Returns (index, value).
+#[inline]
+pub fn top1_row(row: &[f32]) -> (u32, f32) {
+    debug_assert!(!row.is_empty());
+    let mut bi = 0u32;
+    let mut bv = row[0];
+    for (i, &v) in row.iter().enumerate().skip(1) {
+        // Strict > keeps the smallest index on ties.
+        if v > bv {
+            bv = v;
+            bi = i as u32;
+        }
+    }
+    (bi, bv)
+}
+
+/// Single-pass top-2: two running maxima, no heap, no sort.
+/// Returns ([i1, i2], [v1, v2]) with v1 ≥ v2.
+#[inline]
+pub fn top2_row(row: &[f32]) -> ([u32; 2], [f32; 2]) {
+    debug_assert!(row.len() >= 2);
+    let (mut i1, mut v1, mut i2, mut v2);
+    if row[0] >= row[1] {
+        i1 = 0u32;
+        v1 = row[0];
+        i2 = 1u32;
+        v2 = row[1];
+    } else {
+        i1 = 1;
+        v1 = row[1];
+        i2 = 0;
+        v2 = row[0];
+    }
+    for (i, &v) in row.iter().enumerate().skip(2) {
+        if v > v2 {
+            if v > v1 {
+                i2 = i1;
+                v2 = v1;
+                i1 = i as u32;
+                v1 = v;
+            } else {
+                i2 = i as u32;
+                v2 = v;
+            }
+        }
+    }
+    ([i1, i2], [v1, v2])
+}
+
+/// Partial selection for small k (3..8): k passes of masked argmax.
+/// O(k·E) with perfect cache behaviour — beats a heap for the k values
+/// MoE uses.
+pub fn topk_select_row(row: &[f32], k: usize, ids: &mut [u32], vals: &mut [f32]) {
+    debug_assert!(k <= row.len());
+    let mut taken = [false; 512]; // E ≤ 512 in every config we run
+    debug_assert!(row.len() <= 512);
+    for slot in 0..k {
+        let mut bi = usize::MAX;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &v) in row.iter().enumerate() {
+            if !taken[i] && v > bv {
+                bv = v;
+                bi = i;
+            }
+        }
+        taken[bi] = true;
+        ids[slot] = bi as u32;
+        vals[slot] = bv;
+    }
+}
+
+/// Heap entry ordered by (value, reversed index) so ties pop the smaller
+/// index last — matching the specialized kernels' tie-break.
+#[derive(PartialEq)]
+struct Entry(f32, u32);
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // "Greatest" entry = the one to evict first: smaller value is
+        // greater; among equal values the larger index is greater (so the
+        // smallest index survives, matching the specialized kernels).
+        other
+            .0
+            .partial_cmp(&self.0)
+            .unwrap_or(Ordering::Equal)
+            .then(self.1.cmp(&other.1))
+    }
+}
+
+/// Generic heap-based top-k — the "PyTorch kernel" baseline of Fig 3.
+/// Maintains a size-k min-heap over the row; O(E log k) with heap
+/// control flow per element.
+pub fn topk_heap_row(row: &[f32], k: usize, ids: &mut [u32], vals: &mut [f32]) {
+    debug_assert!(k <= row.len());
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(k + 1);
+    for (i, &v) in row.iter().enumerate() {
+        if heap.len() < k {
+            heap.push(Entry(v, i as u32));
+        } else if let Some(top) = heap.peek() {
+            // top is the current minimum (greatest Entry in our order).
+            if v > top.0 {
+                heap.pop();
+                heap.push(Entry(v, i as u32));
+            }
+        }
+    }
+    // Drain: pops minimum first → fill back-to-front.
+    let mut slot = k;
+    while let Some(Entry(v, i)) = heap.pop() {
+        slot -= 1;
+        ids[slot] = i;
+        vals[slot] = v;
+    }
+    // Equal values must order by ascending index: stable fix-up pass
+    // (k is tiny; insertion sort by (value desc, index asc)).
+    for a in 1..k {
+        let mut b = a;
+        while b > 0
+            && (vals[b] > vals[b - 1]
+                || (vals[b] == vals[b - 1] && ids[b] < ids[b - 1]))
+        {
+            vals.swap(b, b - 1);
+            ids.swap(b, b - 1);
+            b -= 1;
+        }
+    }
+}
+
+/// Batched top-k over a score matrix, dispatching to the specialized
+/// kernels (HetuMoE's optimized gating operator). Returns flat
+/// `[tokens*k]` ids and values. `threads > 1` shards rows.
+pub fn topk_rows(scores: &Tensor, k: usize, threads: usize) -> (Vec<u32>, Vec<f32>) {
+    let tokens = scores.rows();
+    let e = scores.row_len();
+    assert!(k >= 1 && k <= e, "k={k} out of range for E={e}");
+    let mut ids = vec![0u32; tokens * k];
+    let mut vals = vec![0.0f32; tokens * k];
+    let ids_ptr = ids.as_mut_ptr() as usize;
+    let vals_ptr = vals.as_mut_ptr() as usize;
+    let body = |range: std::ops::Range<usize>| {
+        // SAFETY: disjoint row ranges → disjoint output slices.
+        let ids_out = unsafe {
+            std::slice::from_raw_parts_mut(
+                (ids_ptr as *mut u32).add(range.start * k),
+                range.len() * k,
+            )
+        };
+        let vals_out = unsafe {
+            std::slice::from_raw_parts_mut(
+                (vals_ptr as *mut f32).add(range.start * k),
+                range.len() * k,
+            )
+        };
+        for (local, t) in range.clone().enumerate() {
+            let row = scores.row(t);
+            let o = local * k;
+            match k {
+                1 => {
+                    let (i, v) = top1_row(row);
+                    ids_out[o] = i;
+                    vals_out[o] = v;
+                }
+                2 => {
+                    let (i2, v2) = top2_row(row);
+                    ids_out[o..o + 2].copy_from_slice(&i2);
+                    vals_out[o..o + 2].copy_from_slice(&v2);
+                }
+                _ => topk_select_row(row, k, &mut ids_out[o..o + k], &mut vals_out[o..o + k]),
+            }
+        }
+    };
+    if threads <= 1 {
+        body(0..tokens);
+    } else {
+        parallel_for_chunks(tokens, threads, body);
+    }
+    (ids, vals)
+}
+
+/// Batched generic heap top-k (baseline for Fig 3).
+pub fn topk_rows_heap(scores: &Tensor, k: usize) -> (Vec<u32>, Vec<f32>) {
+    let tokens = scores.rows();
+    let mut ids = vec![0u32; tokens * k];
+    let mut vals = vec![0.0f32; tokens * k];
+    for t in 0..tokens {
+        topk_heap_row(scores.row(t), k, &mut ids[t * k..(t + 1) * k], &mut vals[t * k..(t + 1) * k]);
+    }
+    (ids, vals)
+}
+
+/// Softmax probabilities of selected slots given raw logits: computes the
+/// full-row softmax denominator in one pass and normalizes the selected
+/// values (fused, no materialized softmax matrix).
+pub fn softmax_of_selected(row: &[f32], vals: &[f32], out: &mut [f32]) {
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let denom: f32 = row.iter().map(|&v| (v - max).exp()).sum();
+    for (o, &v) in out.iter_mut().zip(vals) {
+        *o = (v - max).exp() / denom;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+
+    fn reference_topk(row: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
+        // Sort by (value desc, index asc) — the specification.
+        let mut idx: Vec<usize> = (0..row.len()).collect();
+        idx.sort_by(|&a, &b| {
+            row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b))
+        });
+        let ids = idx[..k].iter().map(|&i| i as u32).collect();
+        let vals = idx[..k].iter().map(|&i| row[i]).collect();
+        (ids, vals)
+    }
+
+    #[test]
+    fn top1_matches_reference() {
+        let row = [0.3, -1.0, 2.5, 2.5, 0.0];
+        let (i, v) = top1_row(&row);
+        assert_eq!(i, 2); // tie → smallest index
+        assert_eq!(v, 2.5);
+    }
+
+    #[test]
+    fn top2_matches_reference_with_ties() {
+        let row = [1.0, 3.0, 3.0, 2.0];
+        let ([i1, i2], [v1, v2]) = top2_row(&row);
+        assert_eq!((i1, i2), (1, 2));
+        assert_eq!((v1, v2), (3.0, 3.0));
+        // First two elements ordering edge case.
+        let row = [5.0, 5.0, 1.0];
+        let ([i1, i2], _) = top2_row(&row);
+        assert_eq!((i1, i2), (0, 1));
+    }
+
+    #[test]
+    fn all_kernels_agree_property() {
+        for_all(60, |g| {
+            let e = g.usize_in(2..64);
+            let row = g.vec_normal(e..e + 1);
+            let kmax = e.min(8);
+            let k = g.usize_in(1..kmax + 1);
+            let (ref_ids, ref_vals) = reference_topk(&row, k);
+
+            // Heap kernel.
+            let mut hi = vec![0u32; k];
+            let mut hv = vec![0.0f32; k];
+            topk_heap_row(&row, k, &mut hi, &mut hv);
+            assert_eq!(hi, ref_ids, "heap ids, row={row:?} k={k}");
+
+            // Specialized kernels.
+            match k {
+                1 => {
+                    let (i, v) = top1_row(&row);
+                    assert_eq!(vec![i], ref_ids);
+                    assert_eq!(vec![v], ref_vals);
+                }
+                2 => {
+                    let (ids, vals) = top2_row(&row);
+                    assert_eq!(ids.to_vec(), ref_ids);
+                    assert_eq!(vals.to_vec(), ref_vals);
+                }
+                _ => {
+                    let mut si = vec![0u32; k];
+                    let mut sv = vec![0.0f32; k];
+                    topk_select_row(&row, k, &mut si, &mut sv);
+                    assert_eq!(si, ref_ids);
+                    assert_eq!(sv, ref_vals);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn batched_matches_rowwise_and_parallel() {
+        let mut rng = Rng::seed(3);
+        let scores = Tensor::randn(&[100, 16], &mut rng);
+        for k in [1, 2, 4] {
+            let (ids1, vals1) = topk_rows(&scores, k, 1);
+            let (ids4, vals4) = topk_rows(&scores, k, 4);
+            let (idh, valh) = topk_rows_heap(&scores, k);
+            assert_eq!(ids1, ids4, "k={k}");
+            assert_eq!(vals1, vals4, "k={k}");
+            assert_eq!(ids1, idh, "k={k}");
+            assert_eq!(vals1, valh, "k={k}");
+        }
+    }
+
+    #[test]
+    fn duplicate_values_stable_everywhere() {
+        let mut row = vec![1.0f32; 16];
+        row[7] = 2.0;
+        let (ids, _) = topk_rows(&Tensor::from_vec(row.clone(), &[1, 16]).unwrap(), 3, 1);
+        assert_eq!(ids, vec![7, 0, 1]);
+        let mut hi = vec![0u32; 3];
+        let mut hv = vec![0.0f32; 3];
+        topk_heap_row(&row, 3, &mut hi, &mut hv);
+        assert_eq!(hi, vec![7, 0, 1]);
+    }
+
+    #[test]
+    fn softmax_of_selected_matches_full() {
+        let row = [0.1f32, 1.2, -0.3, 0.8];
+        let ([i1, i2], vals) = top2_row(&row);
+        let mut probs = [0.0f32; 2];
+        softmax_of_selected(&row, &vals, &mut probs);
+        // Full softmax reference.
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let denom: f32 = row.iter().map(|v| (v - max).exp()).sum();
+        let full: Vec<f32> = row.iter().map(|v| (v - max).exp() / denom).collect();
+        assert!((probs[0] - full[i1 as usize]).abs() < 1e-6);
+        assert!((probs[1] - full[i2 as usize]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,113 @@
+//! Generic Top-K gate (Shazeer et al., 2017): softmax over the selected
+//! k expert scores.
+
+use crate::gating::topk::{softmax_of_selected, topk_rows};
+use crate::gating::{aux_loss, Gate, GateBatch, Routing};
+use crate::nn::softmax_rows;
+
+/// Top-K routing with per-token weight renormalization over the chosen k.
+#[derive(Clone, Debug)]
+pub struct TopKGate {
+    num_experts: usize,
+    k: usize,
+}
+
+impl TopKGate {
+    pub fn new(num_experts: usize, k: usize) -> Self {
+        assert!(k >= 1 && k <= num_experts);
+        TopKGate { num_experts, k }
+    }
+}
+
+impl Gate for TopKGate {
+    fn name(&self) -> String {
+        format!("top{}", self.k)
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    fn route(&self, batch: &GateBatch) -> Routing {
+        let scores = batch.scores;
+        let tokens = scores.rows();
+        assert_eq!(scores.row_len(), self.num_experts);
+        let (expert_ids, vals) = topk_rows(scores, self.k, 1);
+        let mut weights = vec![0.0f32; tokens * self.k];
+        let mut top1 = Vec::with_capacity(tokens);
+        for t in 0..tokens {
+            let row = scores.row(t);
+            let sel = &vals[t * self.k..(t + 1) * self.k];
+            let out = &mut weights[t * self.k..(t + 1) * self.k];
+            softmax_of_selected(row, sel, out);
+            // Renormalize over the k selected (standard top-k MoE).
+            let s: f32 = out.iter().sum();
+            for w in out.iter_mut() {
+                *w /= s;
+            }
+            top1.push(expert_ids[t * self.k]);
+        }
+        let mut probs = scores.clone();
+        softmax_rows(&mut probs);
+        let loss = aux_loss(&probs, &top1, self.num_experts);
+        Routing {
+            k: self.k,
+            tokens,
+            num_experts: self.num_experts,
+            expert_ids,
+            weights,
+            aux_loss: loss,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weights_sum_to_one_and_sorted() {
+        let mut rng = Rng::seed(0);
+        let scores = Tensor::randn(&[32, 16], &mut rng);
+        let gate = TopKGate::new(16, 4);
+        let r = gate.route_scores(&scores, 0);
+        r.validate().unwrap();
+        for t in 0..32 {
+            let w = &r.weights[t * 4..(t + 1) * 4];
+            assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+            for i in 1..4 {
+                assert!(w[i - 1] >= w[i], "weights must be descending");
+            }
+        }
+    }
+
+    #[test]
+    fn k1_matches_switch_expert_choice() {
+        let mut rng = Rng::seed(1);
+        let scores = Tensor::randn(&[20, 8], &mut rng);
+        let topk = TopKGate::new(8, 1).route_scores(&scores, 0);
+        let switch =
+            crate::gating::SwitchGate::new(8, 1.0).route_scores(&scores, 0);
+        assert_eq!(topk.expert_ids, switch.expert_ids);
+        // Top-1 renormalized weight is exactly 1.
+        assert!(topk.weights.iter().all(|&w| (w - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn k_equals_e_routes_everywhere() {
+        let mut rng = Rng::seed(2);
+        let scores = Tensor::randn(&[10, 4], &mut rng);
+        let r = TopKGate::new(4, 4).route_scores(&scores, 0);
+        for t in 0..10 {
+            let mut ids: Vec<u32> = r.expert_ids[t * 4..(t + 1) * 4].to_vec();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![0, 1, 2, 3]);
+        }
+    }
+}

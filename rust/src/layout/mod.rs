@@ -1,0 +1,20 @@
+//! Data layout transformation (paper §3.2 "Layout Transform
+//! Optimization", Figure 4).
+//!
+//! After the gate decides token→expert, tokens headed to the same expert
+//! must be physically contiguous for the AllToAll and the expert batch
+//! GEMM. Two implementations:
+//! - [`transform::naive_layout`] — argsort-by-expert then gather, the
+//!   "state-of-the-art" general implementation the paper compares
+//!   against (`O(T log T)`, two passes over the rows);
+//! - [`transform::opt_layout`] — HetuMoE's kernel: the
+//!   [`crate::gating::DispatchPlan`] already carries exact destination
+//!   rows (counting-sort positions computed in `O(T)` during capacity
+//!   assignment), so the transform is a single scatter pass,
+//!   parallelizable over disjoint token chunks.
+//!
+//! Both produce bit-identical buffers; Fig-4's bench measures the gap.
+
+pub mod transform;
+
+pub use transform::{naive_layout, opt_layout, reverse_layout, LayoutBuffer};

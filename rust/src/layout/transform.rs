@@ -1,0 +1,291 @@
+//! Forward / reverse layout transforms.
+
+use crate::gating::DispatchPlan;
+use crate::tensor::Tensor;
+use crate::util::threadpool::parallel_for_chunks;
+
+/// The padded expert-major buffer `[E*C, d]` produced by the forward
+/// transform. Row `e*C + p` holds the `p`-th token accepted by expert
+/// `e`; unused rows are zero.
+#[derive(Clone, Debug)]
+pub struct LayoutBuffer {
+    pub data: Tensor,
+    pub capacity: usize,
+    pub num_experts: usize,
+}
+
+impl LayoutBuffer {
+    /// Rows of expert `e` that are actually occupied.
+    pub fn expert_rows<'a>(&'a self, e: usize, kept: usize) -> &'a [f32] {
+        let d = self.data.row_len();
+        let lo = e * self.capacity;
+        &self.data.data()[lo * d..(lo + kept) * d]
+    }
+}
+
+/// HetuMoE's optimized layout transform: single scatter pass driven by
+/// the precomputed destinations in the [`DispatchPlan`]. `threads > 1`
+/// shards the token dimension (destinations are unique, so scatters are
+/// race-free).
+pub fn opt_layout(tokens: &Tensor, plan: &DispatchPlan, threads: usize) -> LayoutBuffer {
+    let d = tokens.row_len();
+    debug_assert_eq!(tokens.rows(), plan.tokens);
+    // Perf (§Perf L3-2b): don't zero-fill the whole buffer and then
+    // overwrite 80% of it — allocate uninitialized, scatter the occupied
+    // rows, and zero only the padding tail of each expert (FCFS
+    // guarantees rows 0..kept[e] are each written exactly once).
+    let rows = plan.buffer_rows();
+    let mut data: Vec<f32> = Vec::with_capacity(rows * d);
+    #[allow(clippy::uninit_vec)]
+    // SAFETY: every element is written exactly once below — occupied rows
+    // by the scatter loop, padding rows by the zeroing loop.
+    unsafe {
+        data.set_len(rows * d);
+    }
+    for e in 0..plan.num_experts {
+        let lo = (e * plan.capacity + plan.kept[e]) * d;
+        let hi = (e + 1) * plan.capacity * d;
+        data[lo..hi].fill(0.0);
+    }
+    let mut out = Tensor::from_vec(data, &[rows, d]).expect("sized above");
+    let out_ptr = out.data_mut().as_mut_ptr() as usize;
+    let k = plan.k;
+    let body = |range: std::ops::Range<usize>| {
+        // SAFETY: every dest row is unique across the whole plan
+        // (enforced by apply_capacity), so concurrent writes never alias.
+        let out_slice = unsafe {
+            std::slice::from_raw_parts_mut(out_ptr as *mut f32, plan.buffer_rows() * d)
+        };
+        for t in range {
+            let src = tokens.row(t);
+            for j in 0..k {
+                let dest = plan.dest[t * k + j];
+                if dest != u32::MAX {
+                    let o = dest as usize * d;
+                    out_slice[o..o + d].copy_from_slice(src);
+                }
+            }
+        }
+    };
+    if threads <= 1 {
+        body(0..plan.tokens);
+    } else {
+        parallel_for_chunks(plan.tokens, threads, body);
+    }
+    LayoutBuffer { data: out, capacity: plan.capacity, num_experts: plan.num_experts }
+}
+
+/// Baseline layout transform (the "PyTorch-style" general path of
+/// Fig 4): materialize (expert, token, slot) triples, stable-sort by
+/// expert, then gather rows in sorted order while re-deriving positions.
+/// Produces a buffer bit-identical to [`opt_layout`].
+pub fn naive_layout(tokens: &Tensor, plan: &DispatchPlan) -> LayoutBuffer {
+    let d = tokens.row_len();
+    let k = plan.k;
+    // Collect kept slots as (expert, token) — include slot for stability.
+    let mut triples: Vec<(u32, u32)> = Vec::with_capacity(plan.tokens * k);
+    for t in 0..plan.tokens {
+        for j in 0..k {
+            let dest = plan.dest[t * k + j];
+            if dest != u32::MAX {
+                let e = dest / plan.capacity as u32;
+                triples.push((e, (t * k + j) as u32));
+            }
+        }
+    }
+    // Stable sort by expert (slot order preserved → same positions as
+    // first-come-first-served).
+    triples.sort_by_key(|&(e, _)| e);
+    let mut out = Tensor::zeros(&[plan.buffer_rows(), d]);
+    let mut fill = vec![0usize; plan.num_experts];
+    for &(e, slot) in &triples {
+        let t = slot as usize / k;
+        let row = tokens.row(t);
+        let pos = e as usize * plan.capacity + fill[e as usize];
+        out.row_mut(pos).copy_from_slice(row);
+        fill[e as usize] += 1;
+    }
+    LayoutBuffer { data: out, capacity: plan.capacity, num_experts: plan.num_experts }
+}
+
+/// Reverse layout transform ("Reverse_Layout_Transform" of Algorithm 1):
+/// gather each token's expert outputs back to its original position,
+/// combining with the gate weights. Dropped slots contribute nothing
+/// (residual connection handles them upstream).
+pub fn reverse_layout(buffer: &LayoutBuffer, plan: &DispatchPlan, threads: usize) -> Tensor {
+    let d = buffer.data.row_len();
+    let k = plan.k;
+    let mut out = Tensor::zeros(&[plan.tokens, d]);
+    let out_ptr = out.data_mut().as_mut_ptr() as usize;
+    let body = |range: std::ops::Range<usize>| {
+        let out_slice = unsafe {
+            std::slice::from_raw_parts_mut(out_ptr as *mut f32, plan.tokens * d)
+        };
+        for t in range {
+            let dst = &mut out_slice[t * d..(t + 1) * d];
+            for j in 0..k {
+                let slot = t * k + j;
+                let dest = plan.dest[slot];
+                if dest == u32::MAX {
+                    continue;
+                }
+                let w = plan.weights[slot];
+                let src = buffer.data.row(dest as usize);
+                for (o, &s) in dst.iter_mut().zip(src) {
+                    *o += w * s;
+                }
+            }
+        }
+    };
+    if threads <= 1 {
+        body(0..plan.tokens);
+    } else {
+        parallel_for_chunks(plan.tokens, threads, body);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gating::{apply_capacity, Gate, GShardGate, Routing, SwitchGate};
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+
+    fn plan_from(ids: &[u32], e: usize, cap: usize) -> DispatchPlan {
+        let r = Routing {
+            k: 1,
+            tokens: ids.len(),
+            num_experts: e,
+            expert_ids: ids.to_vec(),
+            weights: vec![1.0; ids.len()],
+            aux_loss: 0.0,
+        };
+        apply_capacity(&r, cap)
+    }
+
+    #[test]
+    fn opt_places_tokens_contiguously() {
+        let tokens = Tensor::from_vec(
+            vec![
+                1.0, 1.0, // t0 -> e1
+                2.0, 2.0, // t1 -> e0
+                3.0, 3.0, // t2 -> e1
+            ],
+            &[3, 2],
+        )
+        .unwrap();
+        let plan = plan_from(&[1, 0, 1], 2, 2);
+        let buf = opt_layout(&tokens, &plan, 1);
+        // e0 buffer rows 0..2: [t1, 0]; e1 rows 2..4: [t0, t2].
+        assert_eq!(buf.data.row(0), &[2.0, 2.0]);
+        assert_eq!(buf.data.row(1), &[0.0, 0.0]);
+        assert_eq!(buf.data.row(2), &[1.0, 1.0]);
+        assert_eq!(buf.data.row(3), &[3.0, 3.0]);
+    }
+
+    #[test]
+    fn naive_matches_opt_bitwise() {
+        let mut rng = Rng::seed(0);
+        for (tokens_n, e, cap_frac) in [(64, 8, 1.0), (200, 16, 0.5), (33, 4, 2.0)] {
+            let tokens = Tensor::randn(&[tokens_n, 8], &mut rng);
+            let scores = Tensor::randn(&[tokens_n, e], &mut rng);
+            let r = SwitchGate::new(e, 1.0).route_scores(&scores, 0);
+            let cap = (((tokens_n as f64 / e as f64) * cap_frac).ceil() as usize).max(1);
+            let plan = apply_capacity(&r, cap);
+            let a = opt_layout(&tokens, &plan, 1);
+            let b = naive_layout(&tokens, &plan);
+            assert_eq!(a.data, b.data, "T={tokens_n} E={e} cap={cap}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::seed(1);
+        let tokens = Tensor::randn(&[301, 16], &mut rng);
+        let scores = Tensor::randn(&[301, 8], &mut rng);
+        let r = GShardGate::deterministic(8).route_scores(&scores, 0);
+        let plan = apply_capacity(&r, 100);
+        let s = opt_layout(&tokens, &plan, 1);
+        for threads in [2, 4, 8] {
+            let p = opt_layout(&tokens, &plan, threads);
+            assert_eq!(s.data, p.data, "threads={threads}");
+        }
+        let rs = reverse_layout(&s, &plan, 1);
+        for threads in [2, 4] {
+            let rp = reverse_layout(&s, &plan, threads);
+            assert!(rs.allclose(&rp, 0.0));
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity_with_unit_weights_no_drops() {
+        // k=1, cap ≥ tokens, weights 1 → reverse(opt(x)) == x.
+        let mut rng = Rng::seed(2);
+        let tokens = Tensor::randn(&[50, 4], &mut rng);
+        let ids: Vec<u32> = (0..50).map(|t| (t % 4) as u32).collect();
+        let plan = plan_from(&ids, 4, 50);
+        let buf = opt_layout(&tokens, &plan, 1);
+        let back = reverse_layout(&buf, &plan, 1);
+        assert!(back.allclose(&tokens, 1e-6));
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        for_all(16, |g| {
+            let e = g.usize_in(2..6);
+            let n = g.usize_in(1..60);
+            let d = g.usize_in(1..8);
+            let ids: Vec<u32> = (0..n).map(|_| g.u32_in(0..e as u32)).collect();
+            let mut rng = Rng::seed(g.case as u64 + 7);
+            let tokens = Tensor::randn(&[n, d], &mut rng);
+            let plan = plan_from(&ids, e, n.max(1));
+            let buf = opt_layout(&tokens, &plan, 1);
+            let back = reverse_layout(&buf, &plan, 1);
+            assert!(back.allclose(&tokens, 1e-5));
+        });
+    }
+
+    #[test]
+    fn dropped_tokens_come_back_zero() {
+        // Capacity 1, three tokens to the same expert → tokens 1,2 dropped.
+        let tokens = Tensor::from_vec(vec![1.0, 2.0, 3.0], &[3, 1]).unwrap();
+        let plan = plan_from(&[0, 0, 0], 2, 1);
+        let buf = opt_layout(&tokens, &plan, 1);
+        let back = reverse_layout(&buf, &plan, 1);
+        assert_eq!(back.row(0), &[1.0]);
+        assert_eq!(back.row(1), &[0.0]);
+        assert_eq!(back.row(2), &[0.0]);
+    }
+
+    #[test]
+    fn top2_combines_weighted_sum() {
+        // One token to experts 0 and 1 with weights 0.25 / 0.75; expert
+        // buffers hold distinct values after "expert compute".
+        let tokens = Tensor::from_vec(vec![5.0], &[1, 1]).unwrap();
+        let r = Routing {
+            k: 2,
+            tokens: 1,
+            num_experts: 2,
+            expert_ids: vec![0, 1],
+            weights: vec![0.25, 0.75],
+            aux_loss: 0.0,
+        };
+        let plan = apply_capacity(&r, 1);
+        let mut buf = opt_layout(&tokens, &plan, 1);
+        // Pretend experts doubled / negated their input.
+        buf.data.data_mut()[0] = 10.0; // expert 0 output
+        buf.data.data_mut()[1] = -4.0; // expert 1 output
+        let back = reverse_layout(&buf, &plan, 1);
+        assert!((back.at(0, 0) - (0.25 * 10.0 + 0.75 * -4.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn expert_rows_view() {
+        let tokens = Tensor::from_vec(vec![1.0, 2.0, 3.0], &[3, 1]).unwrap();
+        let plan = plan_from(&[1, 1, 0], 2, 2);
+        let buf = opt_layout(&tokens, &plan, 1);
+        assert_eq!(buf.expert_rows(1, plan.kept[1]), &[1.0, 2.0]);
+        assert_eq!(buf.expert_rows(0, plan.kept[0]), &[3.0]);
+    }
+}

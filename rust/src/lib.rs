@@ -1,0 +1,57 @@
+//! # HetuMoE (reproduction)
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via XLA/PJRT) reproduction of
+//! *HetuMoE: An Efficient Trillion-scale Mixture-of-Expert Distributed
+//! Training System* (Nie et al., 2022).
+//!
+//! The crate is the **Layer-3 coordinator**: it owns the cluster simulator,
+//! the collective-communication library (vanilla + hierarchical AllToAll),
+//! the full gating-strategy zoo, the optimized layout-transform kernels, the
+//! MoE training pipeline (Algorithm 1 of the paper) and the baseline-system
+//! reimplementations (DeepSpeed-MoE / FastMoE / Tutel profiles) used by the
+//! benchmark harness.
+//!
+//! Layer 2 (the JAX model) and Layer 1 (Pallas kernels) live under
+//! `python/compile/` and are compiled **once** (`make artifacts`) to HLO
+//! text; [`runtime`] loads and executes those artifacts through the PJRT
+//! CPU client. Python is never on the training hot path.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use hetumoe::gating::{Gate, SwitchGate};
+//! use hetumoe::tensor::Tensor;
+//! use hetumoe::util::rng::Rng;
+//!
+//! let mut rng = Rng::seed(0);
+//! let scores = Tensor::randn(&[128, 16], &mut rng); // (tokens, experts)
+//! let gate = SwitchGate::new(16, 1.25);
+//! let routing = gate.route_scores(&scores, 0);
+//! assert_eq!(routing.k, 1);
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! the paper-figure reproductions.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod cli;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod gating;
+pub mod layout;
+pub mod moe;
+pub mod nn;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate version string (from Cargo).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

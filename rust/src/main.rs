@@ -1,0 +1,301 @@
+//! `hetumoe` — the leader binary.
+//!
+//! Subcommands:
+//! - `train`        — end-to-end training on the AOT artifacts
+//! - `layer-bench`  — time the MoE layer pipeline (real CPU execution)
+//! - `sim`          — analytic cluster-scale simulation of all systems
+//! - `gate-stats`   — routing/load-balance diagnostics for every gate
+//! - `alltoall`     — compare flat vs hierarchical AllToAll
+//! - `info`         — artifact + platform inventory
+
+use hetumoe::baselines::{sim_step, SystemKind, SystemProfile};
+use hetumoe::benchkit::Table;
+use hetumoe::cli::{usage, Args, CommandSpec};
+use hetumoe::cluster::{GpuModel, NetworkModel};
+use hetumoe::comm::alltoall::flat_alltoall_timing;
+use hetumoe::comm::hierarchical::hierarchical_alltoall_timing;
+use hetumoe::config::{ClusterConfig, ConfigFile, GateKind, MoeConfig, TrainConfig};
+use hetumoe::coordinator::Coordinator;
+use hetumoe::gating::{make_gate, GateBatch};
+use hetumoe::moe::MoeLayerOptions;
+use hetumoe::tensor::Tensor;
+use hetumoe::train::Trainer;
+use hetumoe::util::rng::Rng;
+use hetumoe::util::stats::{fmt_duration, load_cv, normalized_entropy};
+
+const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "train",
+        about: "train the MoE transformer on AOT artifacts",
+        options: &[
+            ("config", "JSON config file"),
+            ("model", "artifact variant (default e2e)"),
+            ("steps", "training steps"),
+            ("artifacts", "artifact directory (default artifacts)"),
+        ],
+    },
+    CommandSpec {
+        name: "layer-bench",
+        about: "run the real MoE-layer pipeline and print the phase breakdown",
+        options: &[
+            ("system", "hetumoe|tutel|fastmoe|deepspeed (default hetumoe)"),
+            ("gate", "switch|gshard|topk|... (default switch)"),
+            ("tokens", "tokens per rank (default 512)"),
+            ("steps", "iterations (default 5)"),
+            ("nodes", "simulated nodes (default 1)"),
+            ("gpus", "GPUs per node (default 2)"),
+        ],
+    },
+    CommandSpec {
+        name: "sim",
+        about: "analytic paper-scale simulation of all four systems",
+        options: &[
+            ("batches", "comma list of batch sizes (default 16,32,64,128)"),
+            ("gate", "switch|gshard (default switch)"),
+            ("nodes", "nodes (default 1)"),
+        ],
+    },
+    CommandSpec {
+        name: "gate-stats",
+        about: "load-balance diagnostics for every gating strategy",
+        options: &[("tokens", "tokens (default 4096)"), ("experts", "experts (default 16)")],
+    },
+    CommandSpec {
+        name: "alltoall",
+        about: "flat vs hierarchical AllToAll on the simulated cluster",
+        options: &[
+            ("payload-mib", "per-GPU payload MiB (default 16)"),
+            ("nodes", "comma list of node counts (default 2,4,8)"),
+        ],
+    },
+    CommandSpec { name: "info", about: "platform + artifact inventory", options: &[] },
+];
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("layer-bench") => cmd_layer_bench(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("gate-stats") => cmd_gate_stats(&args),
+        Some("alltoall") => cmd_alltoall(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            println!("hetumoe {} — MoE distributed training (HetuMoE reproduction)", hetumoe::version());
+            println!("{}", usage("hetumoe", COMMANDS));
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_train(args: &Args) -> hetumoe::error::Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ConfigFile::load(path)?.train()?,
+        None => TrainConfig::default_run(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    cfg.steps = args.u64_or("steps", cfg.steps)?;
+    cfg.artifact_dir = args.str_or("artifacts", &cfg.artifact_dir).to_string();
+    let mut trainer = Trainer::new(cfg)?;
+    println!(
+        "platform: {} | params: {} tensors / {} elements",
+        trainer.runtime.platform(),
+        trainer.num_param_tensors(),
+        trainer.num_params()
+    );
+    let logs = trainer.run()?;
+    let first = logs.first().map(|l| l.loss).unwrap_or(f32::NAN);
+    let last = logs.last().map(|l| l.loss).unwrap_or(f32::NAN);
+    println!("loss: {first:.4} → {last:.4} over {} steps", logs.len());
+    Ok(())
+}
+
+fn parse_system(name: &str) -> SystemKind {
+    match name.to_lowercase().as_str() {
+        "tutel" => SystemKind::Tutel,
+        "fastmoe" => SystemKind::FastMoE,
+        "deepspeed" | "deepspeed-moe" => SystemKind::DeepSpeedMoE,
+        _ => SystemKind::HetuMoE,
+    }
+}
+
+fn parse_gate(args: &Args) -> GateKind {
+    match args.str_or("gate", "switch") {
+        "gshard" | "top2" => GateKind::GShard,
+        "topk" => GateKind::TopK { k: 4 },
+        "base" => GateKind::Base,
+        "hash" => GateKind::Hash { scheme: hetumoe::config::HashScheme::Random },
+        _ => GateKind::Switch,
+    }
+}
+
+fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
+    let system = parse_system(args.str_or("system", "hetumoe"));
+    let profile = SystemProfile::of(system);
+    let nodes = args.usize_or("nodes", 1)?;
+    let gpus = args.usize_or("gpus", 2)?;
+    let tokens = args.usize_or("tokens", 512)?;
+    let steps = args.usize_or("steps", 5)?;
+    let mut cluster = ClusterConfig::commodity(nodes);
+    cluster.gpus_per_node = gpus;
+    let moe = MoeConfig { gate: parse_gate(args), ..MoeConfig::bench_layer() };
+    let threads = hetumoe::util::threadpool::available_parallelism().min(8);
+    let mut coord =
+        Coordinator::new(moe, cluster, profile.options(threads), 32_000, tokens, 0)?;
+    let summary = coord.run(steps)?;
+    let mut table = Table::new(
+        &format!("{} MoE layer breakdown ({} steps)", system.name(), steps),
+        &["phase", "mean/step", "fraction"],
+    );
+    for (name, t) in &summary.breakdown.phases {
+        table.row(vec![
+            name.clone(),
+            fmt_duration(*t),
+            format!("{:.1}%", 100.0 * t / summary.breakdown.total),
+        ]);
+    }
+    table.row(vec!["TOTAL".into(), fmt_duration(summary.breakdown.total), "100%".into()]);
+    table.emit(None);
+    println!(
+        "drop_rate={:.3} padding_waste={:.3} aux_loss={:.3}",
+        summary.breakdown.drop_rate,
+        summary.breakdown.padding_waste,
+        summary.breakdown.aux_loss
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> hetumoe::error::Result<()> {
+    let batches = args.usize_list_or("batches", &[16, 32, 64, 128])?;
+    let nodes = args.usize_or("nodes", 1)?;
+    let cluster = ClusterConfig::commodity(nodes);
+    let gpu = GpuModel::titan_rtx();
+    let moe = MoeConfig { gate: parse_gate(args), ..MoeConfig::paper_layer() };
+    let mut table = Table::new(
+        &format!(
+            "Simulated MoE-layer iteration time, {} gate, {}x{} GPUs (paper Fig 8 scale)",
+            moe.gate.name(),
+            nodes,
+            cluster.gpus_per_node
+        ),
+        &["batch", "HetuMoE", "Tutel", "FastMoE", "DeepSpeed-MoE", "best-baseline/Hetu"],
+    );
+    for b in batches {
+        let tokens = b * 1024; // per-GPU batch, seq len 1024 (paper setting)
+        let times: Vec<f64> = SystemKind::all()
+            .iter()
+            .map(|&k| sim_step(&SystemProfile::of(k), &moe, &cluster, &gpu, tokens).total())
+            .collect();
+        let hetu = times[0];
+        let best_baseline = times[1..].iter().cloned().fold(f64::INFINITY, f64::min);
+        table.row(vec![
+            b.to_string(),
+            fmt_duration(times[0]),
+            fmt_duration(times[1]),
+            fmt_duration(times[2]),
+            fmt_duration(times[3]),
+            format!("{:.2}×", best_baseline / hetu),
+        ]);
+    }
+    table.emit(None);
+    Ok(())
+}
+
+fn cmd_gate_stats(args: &Args) -> hetumoe::error::Result<()> {
+    let tokens = args.usize_or("tokens", 4096)?;
+    let e = args.usize_or("experts", 16)?;
+    let mut rng = Rng::seed(0);
+    let scores = Tensor::randn(&[tokens, e], &mut rng);
+    let emb = Tensor::randn(&[1024, 16], &mut rng);
+    let token_ids: Vec<u32> = (0..tokens as u32).map(|t| t % 1024).collect();
+    let kinds = vec![
+        GateKind::Switch,
+        GateKind::GShard,
+        GateKind::TopK { k: 4 },
+        GateKind::KTop1 { k: 4 },
+        GateKind::SamHTopK { groups: 4, k: 2 },
+        GateKind::Base,
+        GateKind::Hash { scheme: hetumoe::config::HashScheme::Random },
+        GateKind::Hash { scheme: hetumoe::config::HashScheme::Balanced },
+        GateKind::DenseToSparse { tau0: 2.0, tau_min: 0.1, anneal_steps: 1000 },
+    ];
+    let mut table = Table::new(
+        &format!("Gating-strategy diagnostics ({tokens} tokens, {e} experts)"),
+        &["gate", "mean k", "load CV", "entropy", "aux loss"],
+    );
+    for kind in kinds {
+        let cfg = MoeConfig {
+            num_experts: e,
+            d_model: 64,
+            ffn_hidden: 64,
+            capacity_factor: 1.25,
+            gate: kind,
+        };
+        let gate = make_gate(&cfg, 1024, Some(&emb))?;
+        let r = gate.route(&GateBatch { scores: &scores, token_ids: Some(&token_ids), step: 100 });
+        let counts = r.expert_counts();
+        table.row(vec![
+            gate.name(),
+            format!("{:.2}", r.mean_active_k()),
+            format!("{:.3}", load_cv(&counts)),
+            format!("{:.3}", normalized_entropy(&counts)),
+            format!("{:.3}", r.aux_loss),
+        ]);
+    }
+    table.emit(None);
+    Ok(())
+}
+
+fn cmd_alltoall(args: &Args) -> hetumoe::error::Result<()> {
+    let payload_mib = args.f64_or("payload-mib", 16.0)?;
+    let node_list = args.usize_list_or("nodes", &[2, 4, 8])?;
+    let payload = (payload_mib * 1024.0 * 1024.0) as usize;
+    let mut table = Table::new(
+        &format!("Flat vs hierarchical AllToAll ({payload_mib} MiB per GPU, 8 GPUs/node)"),
+        &["nodes", "flat", "hierarchical", "speedup"],
+    );
+    for n in node_list {
+        let net = NetworkModel::new(ClusterConfig::commodity(n));
+        let chunk = payload / net.cfg.world();
+        let flat = flat_alltoall_timing(&net, chunk).total;
+        let hier = hierarchical_alltoall_timing(&net, chunk).total;
+        table.row(vec![
+            n.to_string(),
+            fmt_duration(flat),
+            fmt_duration(hier),
+            format!("{:.2}×", flat / hier),
+        ]);
+    }
+    table.emit(None);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> hetumoe::error::Result<()> {
+    println!("hetumoe {}", hetumoe::version());
+    let dir = args.str_or("artifacts", "artifacts");
+    match hetumoe::runtime::ArtifactRegistry::load(dir) {
+        Ok(reg) => {
+            println!("artifacts in {dir}:");
+            for name in reg.names() {
+                let m = reg.get(name)?;
+                println!(
+                    "  {name}: {} inputs, {} outputs",
+                    m.inputs.len(),
+                    m.outputs.len()
+                );
+            }
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!("pjrt: {} ({} devices)", c.platform_name(), c.device_count()),
+        Err(e) => println!("pjrt unavailable: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Expert executors: the per-expert FFN computation behind Algorithm 1's
+//! step 4, abstracted so the pipeline can run either natively (pure Rust,
+//! self-contained benches) or through an AOT-compiled XLA artifact (the
+//! production path — L1/L2 compute compiled by `python/compile/aot.py`).
+
+use crate::error::Result;
+use crate::nn::Ffn;
+use crate::runtime::HloRunner;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// One expert's forward computation over a row batch `[n, d] → [n, d]`.
+///
+/// Not `Send`/`Sync`: the PJRT executable handle behind [`HloExpert`]
+/// uses non-atomic reference counting. The coordinator executes experts
+/// from the leader thread; intra-kernel parallelism lives below this
+/// interface.
+pub trait ExpertExecutor {
+    fn forward(&self, x: &Tensor) -> Result<Tensor>;
+    /// Model dimension.
+    fn d_model(&self) -> usize;
+    /// FLOPs of a forward over `n` rows (for the roofline model).
+    fn flops(&self, n: usize) -> f64;
+}
+
+/// Pure-Rust FFN expert.
+pub struct NativeExpert {
+    ffn: Ffn,
+}
+
+impl NativeExpert {
+    pub fn init(d: usize, h: usize, rng: &mut Rng) -> Self {
+        NativeExpert { ffn: Ffn::init(d, h, rng) }
+    }
+
+    pub fn ffn(&self) -> &Ffn {
+        &self.ffn
+    }
+}
+
+impl ExpertExecutor for NativeExpert {
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        Ok(self.ffn.forward(x))
+    }
+
+    fn d_model(&self) -> usize {
+        self.ffn.d
+    }
+
+    fn flops(&self, n: usize) -> f64 {
+        self.ffn.flops(n) as f64
+    }
+}
+
+/// Artifact-backed expert: runs the `expert_ffn` HLO (fixed `[C, d]`
+/// shape) through PJRT. Inputs shorter than `C` are zero-padded; the
+/// padding rows are discarded on return.
+pub struct HloExpert {
+    runner: Arc<HloRunner>,
+    /// Expert parameters, uploaded once: w1 [d,h], b1 [h], w2 [h,d], b2 [d].
+    params: Vec<Tensor>,
+    capacity: usize,
+    d: usize,
+    h: usize,
+}
+
+impl HloExpert {
+    /// `runner` must be the `expert_ffn` artifact; `params` are this
+    /// expert's weights in artifact argument order (after the row input).
+    pub fn new(runner: Arc<HloRunner>, params: Vec<Tensor>) -> Result<Self> {
+        let shape0 = runner
+            .meta
+            .inputs
+            .first()
+            .ok_or_else(|| crate::shape_err!("expert artifact has no inputs"))?
+            .clone();
+        if shape0.len() != 2 {
+            return Err(crate::shape_err!(
+                "expert artifact input 0 must be rank-2, got {shape0:?}"
+            ));
+        }
+        let h = runner.meta.attr_usize("ffn_hidden")?;
+        Ok(HloExpert { runner, params, capacity: shape0[0], d: shape0[1], h })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+impl ExpertExecutor for HloExpert {
+    fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let n = x.rows();
+        if n > self.capacity {
+            return Err(crate::shape_err!(
+                "expert got {n} rows, artifact capacity is {}",
+                self.capacity
+            ));
+        }
+        // Pad to the artifact's static shape.
+        let mut padded = Tensor::zeros(&[self.capacity, self.d]);
+        padded.data_mut()[..n * self.d].copy_from_slice(x.data());
+        let mut inputs = vec![padded];
+        inputs.extend(self.params.iter().cloned());
+        let outs = self.runner.run(&inputs)?;
+        let full = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| crate::shape_err!("expert artifact returned nothing"))?;
+        Ok(full.slice_rows(0, n))
+    }
+
+    fn d_model(&self) -> usize {
+        self.d
+    }
+
+    fn flops(&self, n: usize) -> f64 {
+        (4 * n * self.d * self.h) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_expert_shapes_and_flops() {
+        let mut rng = Rng::seed(0);
+        let e = NativeExpert::init(8, 16, &mut rng);
+        let x = Tensor::randn(&[5, 8], &mut rng);
+        let y = e.forward(&x).unwrap();
+        assert_eq!(y.shape(), &[5, 8]);
+        assert_eq!(e.d_model(), 8);
+        assert_eq!(e.flops(5), (2 * 5 * 8 * 16 * 2) as f64);
+    }
+
+    #[test]
+    fn native_expert_deterministic() {
+        let mut r1 = Rng::seed(1);
+        let mut r2 = Rng::seed(1);
+        let e1 = NativeExpert::init(4, 8, &mut r1);
+        let e2 = NativeExpert::init(4, 8, &mut r2);
+        let x = Tensor::randn(&[3, 4], &mut r1);
+        let x2 = Tensor::randn(&[3, 4], &mut r2);
+        assert!(e1.forward(&x).unwrap().allclose(&e2.forward(&x2).unwrap(), 0.0));
+    }
+}

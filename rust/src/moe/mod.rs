@@ -1,0 +1,11 @@
+//! The MoE layer: Algorithm 1 of the paper, end to end.
+//!
+//! `Gate → Layout_Transform → AllToAll → Expert → AllToAll →
+//! Reverse_Layout_Transform`, executed over the simulated expert-parallel
+//! mesh with real data movement and per-phase timing.
+
+pub mod expert;
+pub mod layer;
+
+pub use expert::{ExpertExecutor, HloExpert, NativeExpert};
+pub use layer::{CommImpl, GateImpl, LayoutImpl, MoeLayer, MoeLayerOptions, StepReport};

@@ -1,0 +1,49 @@
+//! Elementwise activations.
+
+/// Exact GeLU (erf form approximated with tanh, as used by most frameworks).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// ReLU.
+#[inline]
+pub fn relu(x: f32) -> f32 {
+    x.max(0.0)
+}
+
+/// Apply an activation in place.
+pub fn map_inplace(xs: &mut [f32], f: impl Fn(f32) -> f32) {
+    for x in xs {
+        *x = f(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_known_values() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.1588).abs() < 1e-3);
+        // Large |x| saturates to identity / zero.
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn relu_basics() {
+        assert_eq!(relu(-2.0), 0.0);
+        assert_eq!(relu(3.0), 3.0);
+    }
+
+    #[test]
+    fn map_inplace_applies() {
+        let mut v = vec![-1.0, 2.0];
+        map_inplace(&mut v, relu);
+        assert_eq!(v, vec![0.0, 2.0]);
+    }
+}

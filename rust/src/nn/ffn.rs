@@ -1,0 +1,139 @@
+//! A feed-forward expert network: `y = GeLU(x·W1 + b1)·W2 + b2`.
+//!
+//! This is the "expert" of the paper's benchmark model (hidden size 2048)
+//! when running the coordinator without PJRT artifacts; the artifact-backed
+//! expert ([`crate::moe::expert::HloExpert`]) computes the same function
+//! through XLA.
+
+use crate::nn::activation::gelu;
+use crate::nn::matmul::matmul_into;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Two-layer FFN expert with GeLU.
+#[derive(Clone, Debug)]
+pub struct Ffn {
+    pub w1: Tensor, // [d, h]
+    pub b1: Vec<f32>,
+    pub w2: Tensor, // [h, d]
+    pub b2: Vec<f32>,
+    pub d: usize,
+    pub h: usize,
+}
+
+impl Ffn {
+    /// Random initialization (He-style scaled normals).
+    pub fn init(d: usize, h: usize, rng: &mut Rng) -> Ffn {
+        let mut w1 = Tensor::randn(&[d, h], rng);
+        w1.scale((2.0 / d as f32).sqrt());
+        let mut w2 = Tensor::randn(&[h, d], rng);
+        w2.scale((2.0 / h as f32).sqrt());
+        Ffn { w1, b1: vec![0.0; h], w2, b2: vec![0.0; d], d, h }
+    }
+
+    /// Forward over a batch of rows `[n, d]` → `[n, d]`.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.shape()[1], self.d);
+        let n = x.rows();
+        let mut hid = Tensor::zeros(&[n, self.h]);
+        matmul_into(x.data(), self.w1.data(), hid.data_mut(), n, self.d, self.h);
+        for i in 0..n {
+            let row = hid.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = gelu(*v + self.b1[j]);
+            }
+        }
+        let mut out = Tensor::zeros(&[n, self.d]);
+        matmul_into(hid.data(), self.w2.data(), out.data_mut(), n, self.h, self.d);
+        for i in 0..n {
+            let row = out.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v += self.b2[j];
+            }
+        }
+        out
+    }
+
+    /// Forward into a preallocated output + scratch (hot-path variant used
+    /// by the pipeline benches; avoids per-call allocation).
+    pub fn forward_into(&self, x: &Tensor, scratch: &mut Vec<f32>, out: &mut Tensor) {
+        let n = x.rows();
+        scratch.resize(n * self.h, 0.0);
+        matmul_into(x.data(), self.w1.data(), &mut scratch[..n * self.h], n, self.d, self.h);
+        for i in 0..n {
+            for j in 0..self.h {
+                let v = scratch[i * self.h + j] + self.b1[j];
+                scratch[i * self.h + j] = gelu(v);
+            }
+        }
+        matmul_into(&scratch[..n * self.h], self.w2.data(), out.data_mut(), n, self.h, self.d);
+        for i in 0..n {
+            let row = out.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v += self.b2[j];
+            }
+        }
+    }
+
+    /// Parameter count.
+    pub fn num_params(&self) -> usize {
+        self.d * self.h + self.h + self.h * self.d + self.d
+    }
+
+    /// FLOPs for a forward over `n` rows.
+    pub fn flops(&self, n: usize) -> usize {
+        2 * n * self.d * self.h * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_params() {
+        let mut rng = Rng::seed(0);
+        let f = Ffn::init(16, 64, &mut rng);
+        let x = Tensor::randn(&[5, 16], &mut rng);
+        let y = f.forward(&x);
+        assert_eq!(y.shape(), &[5, 16]);
+        assert_eq!(f.num_params(), 16 * 64 + 64 + 64 * 16 + 16);
+    }
+
+    #[test]
+    fn forward_into_matches_forward() {
+        let mut rng = Rng::seed(1);
+        let f = Ffn::init(8, 32, &mut rng);
+        let x = Tensor::randn(&[7, 8], &mut rng);
+        let y = f.forward(&x);
+        let mut scratch = Vec::new();
+        let mut out = Tensor::zeros(&[7, 8]);
+        f.forward_into(&x, &mut scratch, &mut out);
+        assert!(y.allclose(&out, 1e-6));
+    }
+
+    #[test]
+    fn zero_input_gives_bias_path() {
+        let mut rng = Rng::seed(2);
+        let mut f = Ffn::init(4, 8, &mut rng);
+        f.b1.iter_mut().for_each(|b| *b = 0.0);
+        f.b2 = vec![0.5; 4];
+        let x = Tensor::zeros(&[3, 4]);
+        let y = f.forward(&x);
+        // gelu(0)=0 so output = b2 everywhere.
+        for v in y.data() {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::seed(5);
+        let mut r2 = Rng::seed(5);
+        let f1 = Ffn::init(6, 12, &mut r1);
+        let f2 = Ffn::init(6, 12, &mut r2);
+        let x = Tensor::randn(&[2, 6], &mut r1);
+        let x2 = Tensor::randn(&[2, 6], &mut r2);
+        assert!(f1.forward(&x).allclose(&f2.forward(&x2), 0.0));
+    }
+}

@@ -1,0 +1,224 @@
+//! Blocked matrix multiplication.
+//!
+//! `C[m,n] = A[m,k] · B[k,n]`. The inner loops use an `i-k-j` ordering so
+//! the `j` loop is a contiguous FMA sweep the compiler auto-vectorizes;
+//! blocking over `k` keeps the `B` panel in cache. `matmul_par` shards rows
+//! across scoped threads for the coordinator's batch-level calls.
+
+use crate::tensor::Tensor;
+use crate::util::threadpool::parallel_for_chunks;
+
+/// Cache block size over the reduction dimension.
+const KB: usize = 64;
+
+/// Multiply into a caller-provided output slice (`m*n`, zeroed by callee).
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    matmul_accumulate(a, b, c, m, k, n, 0..m);
+}
+
+/// Accumulating kernel over a row range (used by both serial and parallel
+/// front-ends). `c` must already be initialized for the rows in `rows`.
+fn matmul_accumulate(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    _m: usize,
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+) {
+    for kb in (0..k).step_by(KB) {
+        let ke = (kb + KB).min(k);
+        for i in rows.clone() {
+            let arow = &a[i * k..i * k + k];
+            let crow = &mut c[i * n..i * n + n];
+            for kk in kb..ke {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue; // dispatch matrices are mostly zero
+                }
+                let brow = &b[kk * n..kk * n + n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// `A[m,k] · B[k,n]` → new `Tensor[m,n]` (serial).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_into(a.data(), b.data(), out.data_mut(), m, k, n);
+    out
+}
+
+/// Parallel matmul: rows sharded over `threads` scoped threads.
+pub fn matmul_par(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let (adata, bdata) = (a.data(), b.data());
+    // Shard output rows; each chunk writes a disjoint region. We use
+    // raw pointer arithmetic through a usize to sidestep &mut aliasing
+    // across scoped threads (regions are provably disjoint).
+    let cptr = out.data_mut().as_mut_ptr() as usize;
+    parallel_for_chunks(m, threads, |range| {
+        let lo = range.start;
+        let hi = range.end;
+        // SAFETY: chunks are disjoint row ranges of the output buffer.
+        let cslice = unsafe {
+            std::slice::from_raw_parts_mut((cptr as *mut f32).add(lo * n), (hi - lo) * n)
+        };
+        cslice.fill(0.0);
+        // Build a local view where row indices are rebased to 0.
+        for kb in (0..k).step_by(KB) {
+            let ke = (kb + KB).min(k);
+            for i in lo..hi {
+                let arow = &adata[i * k..i * k + k];
+                let crow = &mut cslice[(i - lo) * n..(i - lo) * n + n];
+                for kk in kb..ke {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bdata[kk * n..kk * n + n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Blocked matmul **without** the zero-skip: used to model baseline
+/// systems whose dense einsums pay full FLOPs on mostly-zero one-hot
+/// operands (a GPU einsum cannot skip zeros either). Same result as
+/// [`matmul`].
+pub fn matmul_dense(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let (adata, bdata, cdata) = (a.data(), b.data(), out.data_mut());
+    for kb in (0..k).step_by(KB) {
+        let ke = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = &adata[i * k..i * k + k];
+            let crow = &mut cdata[i * n..i * n + n];
+            for kk in kb..ke {
+                let aik = arow[kk];
+                let brow = &bdata[kk * n..kk * n + n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Naive triple loop for testing the blocked kernels.
+pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let n = b.shape()[1];
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a.at(i, kk) * b.at(kk, j);
+            }
+            out.set(i, j, acc);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Rng::seed(0);
+        let a = Tensor::randn(&[7, 13], &mut rng);
+        let b = Tensor::randn(&[13, 5], &mut rng);
+        let fast = matmul(&a, &b);
+        let slow = matmul_naive(&a, &b);
+        assert!(fast.allclose(&slow, 1e-4), "diff={}", fast.max_abs_diff(&slow));
+    }
+
+    #[test]
+    fn matches_naive_blocked_boundary() {
+        // k crosses the KB=64 block boundary.
+        let mut rng = Rng::seed(1);
+        let a = Tensor::randn(&[3, 130], &mut rng);
+        let b = Tensor::randn(&[130, 9], &mut rng);
+        assert!(matmul(&a, &b).allclose(&matmul_naive(&a, &b), 1e-3));
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::seed(2);
+        let a = Tensor::randn(&[65, 40], &mut rng);
+        let b = Tensor::randn(&[40, 33], &mut rng);
+        let s = matmul(&a, &b);
+        for threads in [1, 2, 4, 8] {
+            let p = matmul_par(&a, &b, threads);
+            assert!(p.allclose(&s, 1e-5), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn identity_multiplication() {
+        let mut rng = Rng::seed(3);
+        let a = Tensor::randn(&[6, 6], &mut rng);
+        let mut eye = Tensor::zeros(&[6, 6]);
+        for i in 0..6 {
+            eye.set(i, i, 1.0);
+        }
+        assert!(matmul(&a, &eye).allclose(&a, 1e-6));
+        assert!(matmul(&eye, &a).allclose(&a, 1e-6));
+    }
+
+    #[test]
+    fn property_linear_in_first_argument() {
+        for_all(16, |g| {
+            let m = g.usize_in(1..8);
+            let k = g.usize_in(1..8);
+            let n = g.usize_in(1..8);
+            let mut rng = Rng::seed(g.case as u64);
+            let a1 = Tensor::randn(&[m, k], &mut rng);
+            let a2 = Tensor::randn(&[m, k], &mut rng);
+            let b = Tensor::randn(&[k, n], &mut rng);
+            let mut sum_a = a1.clone();
+            sum_a.add_assign(&a2);
+            let lhs = matmul(&sum_a, &b);
+            let mut rhs = matmul(&a1, &b);
+            rhs.add_assign(&matmul(&a2, &b));
+            assert!(lhs.allclose(&rhs, 1e-4));
+        });
+    }
+
+    #[test]
+    fn skips_zero_entries_correctly() {
+        // The `aik == 0.0` skip must not change results.
+        let a = Tensor::from_vec(vec![0.0, 2.0, 0.0, 0.0, 3.0, 0.0], &[2, 3]).unwrap();
+        let mut rng = Rng::seed(4);
+        let b = Tensor::randn(&[3, 4], &mut rng);
+        assert!(matmul(&a, &b).allclose(&matmul_naive(&a, &b), 1e-6));
+    }
+}

@@ -1,0 +1,20 @@
+//! Native (pure-Rust) neural-network math.
+//!
+//! Two uses:
+//! 1. **Baseline experts / gates** when benchmarking the coordinator
+//!    without PJRT artifacts (the Fig-8 pipelines run thousands of expert
+//!    FFN calls; native math keeps the benches self-contained).
+//! 2. **Reference implementations** for tests of the HLO-executing path.
+//!
+//! The hot kernel is [`matmul::matmul`] — a blocked, transposed-B kernel
+//! with optional thread parallelism; everything else is elementwise.
+
+pub mod activation;
+pub mod ffn;
+pub mod matmul;
+pub mod ops;
+
+pub use activation::{gelu, relu};
+pub use ffn::Ffn;
+pub use matmul::{matmul, matmul_into, matmul_par};
+pub use ops::{cross_entropy, layernorm, log_softmax, softmax_rows};

@@ -1,0 +1,135 @@
+//! Row-wise softmax / layernorm / cross-entropy.
+
+use crate::tensor::Tensor;
+
+/// Numerically-stable softmax over the last axis of a 2-D tensor, in place.
+pub fn softmax_rows(t: &mut Tensor) {
+    let w = t.row_len();
+    let rows = t.rows();
+    let data = t.data_mut();
+    for i in 0..rows {
+        let row = &mut data[i * w..(i + 1) * w];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Log-softmax over the last axis, in place.
+pub fn log_softmax(t: &mut Tensor) {
+    let w = t.row_len();
+    let rows = t.rows();
+    let data = t.data_mut();
+    for i in 0..rows {
+        let row = &mut data[i * w..(i + 1) * w];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let lse = row.iter().map(|v| (v - max).exp()).sum::<f32>().ln() + max;
+        for v in row.iter_mut() {
+            *v -= lse;
+        }
+    }
+}
+
+/// LayerNorm over the last axis with learnable gain/bias.
+pub fn layernorm(t: &mut Tensor, gamma: &[f32], beta: &[f32], eps: f32) {
+    let w = t.row_len();
+    assert_eq!(gamma.len(), w);
+    assert_eq!(beta.len(), w);
+    let rows = t.rows();
+    let data = t.data_mut();
+    for i in 0..rows {
+        let row = &mut data[i * w..(i + 1) * w];
+        let mean = row.iter().sum::<f32>() / w as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / w as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * gamma[j] + beta[j];
+        }
+    }
+}
+
+/// Mean cross-entropy of logits `[tokens, vocab]` against integer targets.
+pub fn cross_entropy(logits: &Tensor, targets: &[u32]) -> f32 {
+    assert_eq!(logits.rows(), targets.len());
+    let mut ls = logits.clone();
+    log_softmax(&mut ls);
+    let mut total = 0.0f64;
+    for (i, &t) in targets.iter().enumerate() {
+        total -= ls.at(i, t as usize) as f64;
+    }
+    (total / targets.len() as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::seed(0);
+        let mut t = Tensor::randn(&[5, 9], &mut rng);
+        softmax_rows(&mut t);
+        for i in 0..5 {
+            let s: f32 = t.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(t.row(i).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut t = Tensor::from_vec(vec![1000.0, 1001.0], &[1, 2]).unwrap();
+        softmax_rows(&mut t);
+        assert!(t.data().iter().all(|v| v.is_finite()));
+        assert!((t.at(0, 1) - 0.7311).abs() < 1e-3);
+    }
+
+    #[test]
+    fn log_softmax_consistent_with_softmax() {
+        let mut rng = Rng::seed(1);
+        let t = Tensor::randn(&[3, 7], &mut rng);
+        let mut sm = t.clone();
+        softmax_rows(&mut sm);
+        let mut lsm = t.clone();
+        log_softmax(&mut lsm);
+        for (a, b) in sm.data().iter().zip(lsm.data()) {
+            assert!((a.ln() - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::seed(2);
+        let mut t = Tensor::randn(&[4, 32], &mut rng);
+        let gamma = vec![1.0; 32];
+        let beta = vec![0.0; 32];
+        layernorm(&mut t, &gamma, &beta, 1e-5);
+        for i in 0..4 {
+            let row = t.row(i);
+            let mean: f32 = row.iter().sum::<f32>() / 32.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 32.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction_is_small() {
+        // Huge logit on the target class → loss ≈ 0.
+        let mut logits = Tensor::zeros(&[2, 4]);
+        logits.set(0, 1, 50.0);
+        logits.set(1, 3, 50.0);
+        assert!(cross_entropy(&logits, &[1, 3]) < 1e-4);
+        // Uniform logits → ln(vocab).
+        let logits = Tensor::zeros(&[2, 4]);
+        assert!((cross_entropy(&logits, &[0, 2]) - (4.0f32).ln()).abs() < 1e-5);
+    }
+}

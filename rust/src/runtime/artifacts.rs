@@ -1,0 +1,186 @@
+//! Artifact registry: discovers `artifacts/*.hlo.txt` and the shapes
+//! recorded in `artifacts/meta.json` by `python/compile/aot.py`.
+
+use crate::error::{HetuError, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one compiled artifact (one jitted function).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Path to the HLO text file.
+    pub path: PathBuf,
+    /// Input shapes in argument order (row-major dims).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (the function returns a tuple of these).
+    pub outputs: Vec<Vec<usize>>,
+    /// Free-form attributes emitted by aot.py (model dims, vocab, ...).
+    pub attrs: BTreeMap<String, f64>,
+}
+
+impl ArtifactMeta {
+    fn from_json(name: &str, dir: &Path, obj: &Json) -> Result<ArtifactMeta> {
+        let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+            let arr = obj
+                .req(key)?
+                .as_arr()
+                .ok_or_else(|| HetuError::Json(format!("{name}.{key} must be an array")))?;
+            arr.iter()
+                .map(|s| {
+                    s.as_arr()
+                        .ok_or_else(|| {
+                            HetuError::Json(format!("{name}.{key} entries must be arrays"))
+                        })?
+                        .iter()
+                        .map(|d| {
+                            d.as_usize().ok_or_else(|| {
+                                HetuError::Json(format!("{name}.{key}: bad dim"))
+                            })
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let mut attrs = BTreeMap::new();
+        if let Some(Json::Obj(pairs)) = obj.get("attrs") {
+            for (k, v) in pairs {
+                if let Some(x) = v.as_f64() {
+                    attrs.insert(k.clone(), x);
+                }
+            }
+        }
+        Ok(ArtifactMeta {
+            name: name.to_string(),
+            path: dir.join(format!("{name}.hlo.txt")),
+            inputs: shapes("inputs")?,
+            outputs: shapes("outputs")?,
+            attrs,
+        })
+    }
+
+    /// Attribute lookup with error context.
+    pub fn attr(&self, key: &str) -> Result<f64> {
+        self.attrs.get(key).copied().ok_or_else(|| {
+            HetuError::Artifact(format!("artifact '{}' missing attr '{key}'", self.name))
+        })
+    }
+
+    pub fn attr_usize(&self, key: &str) -> Result<usize> {
+        Ok(self.attr(key)? as usize)
+    }
+}
+
+/// All artifacts in a directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    metas: BTreeMap<String, ArtifactMeta>,
+}
+
+impl ArtifactRegistry {
+    /// Load `dir/meta.json` and index the artifacts it describes.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRegistry> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        if !meta_path.exists() {
+            return Err(HetuError::Artifact(format!(
+                "{} not found",
+                meta_path.display()
+            )));
+        }
+        let root = Json::from_file(&meta_path)?;
+        let mut metas = BTreeMap::new();
+        if let Json::Obj(pairs) = &root {
+            for (name, obj) in pairs {
+                metas.insert(name.clone(), ArtifactMeta::from_json(name, &dir, obj)?);
+            }
+        } else {
+            return Err(HetuError::Json("meta.json root must be an object".into()));
+        }
+        Ok(ArtifactRegistry { dir, metas })
+    }
+
+    /// Look up one artifact; verifies the HLO file exists.
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        let meta = self.metas.get(name).ok_or_else(|| {
+            HetuError::Artifact(format!(
+                "artifact '{name}' not in meta.json (have: {:?})",
+                self.names()
+            ))
+        })?;
+        if !meta.path.exists() {
+            return Err(HetuError::Artifact(format!(
+                "{} listed in meta.json but file missing",
+                meta.path.display()
+            )));
+        }
+        Ok(meta)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.metas.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metas.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_registry(dir: &Path, meta: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("meta.json"), meta).unwrap();
+        for f in files {
+            let mut fh = std::fs::File::create(dir.join(f)).unwrap();
+            writeln!(fh, "HloModule dummy").unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("hetu_test_artifacts_1");
+        write_registry(
+            &dir,
+            r#"{
+              "gate": {"inputs": [[4, 8]], "outputs": [[4, 2]],
+                       "attrs": {"num_experts": 8}}
+            }"#,
+            &["gate.hlo.txt"],
+        );
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.len(), 1);
+        let m = reg.get("gate").unwrap();
+        assert_eq!(m.inputs, vec![vec![4, 8]]);
+        assert_eq!(m.outputs, vec![vec![4, 2]]);
+        assert_eq!(m.attr_usize("num_experts").unwrap(), 8);
+        assert!(m.attr("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_and_file_errors_mention_make_artifacts() {
+        let err = ArtifactRegistry::load("/nonexistent/dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+
+        let dir = std::env::temp_dir().join("hetu_test_artifacts_2");
+        write_registry(
+            &dir,
+            r#"{"ghost": {"inputs": [], "outputs": []}}"#,
+            &[],
+        );
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert!(reg.get("ghost").is_err()); // file missing
+        assert!(reg.get("unknown").is_err()); // not in meta
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,180 @@
+//! PJRT client wrapper and compiled-executable cache.
+//!
+//! Follows the pattern validated in `/opt/xla-example/load_hlo`: HLO text
+//! → `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Training keeps parameters resident
+//! as device buffers and uses `execute_b` so the step loop never copies
+//! weights through the host.
+
+use crate::error::{HetuError, Result};
+use crate::runtime::artifacts::{ArtifactMeta, ArtifactRegistry};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// A compiled artifact ready to run.
+pub struct HloRunner {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl HloRunner {
+    /// Execute with host tensors; returns host tensors (tuple flattened).
+    ///
+    /// Inputs are uploaded as owned `PjRtBuffer`s and run through
+    /// `execute_b`: the crate's literal-taking `execute()` leaks every
+    /// uploaded input buffer (its C shim never frees them), which is
+    /// fatal for large, repeated calls (see `train::trainer`).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(HetuError::Runtime(format!(
+                "artifact '{}' wants {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let client = self.exe.client();
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for (i, (t, shape)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if t.shape() != shape.as_slice() {
+                return Err(HetuError::Runtime(format!(
+                    "artifact '{}' input {i}: shape {:?} expected {:?}",
+                    self.meta.name,
+                    t.shape(),
+                    shape
+                )));
+            }
+            bufs.push(client.buffer_from_host_buffer(t.data(), t.shape(), None)?);
+        }
+        let out = self.run_buffers(&bufs)?;
+        drop(bufs);
+        let lit = out.to_literal_sync()?;
+        self.from_tuple(lit)
+    }
+
+    /// Execute with raw literals (callers that manage their own literal
+    /// types, e.g. the trainer's i32 token batches). Returns the single
+    /// (tuple) output literal.
+    pub fn execute_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<xla::Literal> {
+        let result = self.exe.execute(args)?;
+        Ok(result[0][0].to_literal_sync()?)
+    }
+
+    /// Execute with device buffers (no host copies of the inputs);
+    /// returns the raw output buffer for chaining.
+    pub fn run_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let mut result = self.exe.execute_b::<xla::PjRtBuffer>(inputs)?;
+        Ok(result.remove(0).remove(0))
+    }
+
+    /// Upload host tensors as input literals, validating shapes against
+    /// the artifact metadata.
+    pub fn to_literals(&self, inputs: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(HetuError::Runtime(format!(
+                "artifact '{}' wants {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        inputs
+            .iter()
+            .zip(&self.meta.inputs)
+            .enumerate()
+            .map(|(i, (t, shape))| {
+                if t.shape() != shape.as_slice() {
+                    return Err(HetuError::Runtime(format!(
+                        "artifact '{}' input {i}: shape {:?} expected {:?}",
+                        self.meta.name,
+                        t.shape(),
+                        shape
+                    )));
+                }
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+            })
+            .collect()
+    }
+
+    /// Unpack a (possibly tuple) output literal into host tensors.
+    pub fn from_tuple(&self, out: xla::Literal) -> Result<Vec<Tensor>> {
+        let parts = out.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(HetuError::Runtime(format!(
+                "artifact '{}' returned {} outputs, meta says {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, shape)| {
+                let v = lit.to_vec::<f32>()?;
+                Tensor::from_vec(v, shape)
+            })
+            .collect()
+    }
+
+    /// Unpack the output buffer of [`Self::run_buffers`] to host tensors.
+    pub fn buffer_to_tensors(&self, buf: &xla::PjRtBuffer) -> Result<Vec<Tensor>> {
+        let lit = buf.to_literal_sync()?;
+        self.from_tuple(lit)
+    }
+}
+
+/// PJRT CPU client + executable cache over an artifact registry.
+pub struct RuntimeClient {
+    pub client: xla::PjRtClient,
+    pub registry: ArtifactRegistry,
+    cache: HashMap<String, std::sync::Arc<HloRunner>>,
+}
+
+impl RuntimeClient {
+    /// Create a CPU PJRT client over `artifact_dir`.
+    pub fn cpu(artifact_dir: &str) -> Result<RuntimeClient> {
+        let registry = ArtifactRegistry::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(RuntimeClient { client, registry, cache: HashMap::new() })
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn runner(&mut self, name: &str) -> Result<std::sync::Arc<HloRunner>> {
+        if let Some(r) = self.cache.get(name) {
+            return Ok(r.clone());
+        }
+        let meta = self.registry.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let runner = std::sync::Arc::new(HloRunner { meta, exe });
+        self.cache.insert(name.to_string(), runner.clone());
+        Ok(runner)
+    }
+
+    /// Upload a host tensor to a device buffer.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let dims: Vec<usize> = t.shape().to_vec();
+        Ok(self
+            .client
+            .buffer_from_host_buffer(t.data(), &dims, None)?)
+    }
+
+    /// Platform description for logs.
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+}
+
+// Tests for this module live in `tests/runtime_integration.rs`; they need
+// real artifacts (built by `make artifacts`) and a PJRT client, which we
+// keep out of the unit-test path.

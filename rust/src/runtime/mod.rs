@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once; it writes
+//! `artifacts/<name>.hlo.txt` (HLO **text** — xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos, see DESIGN.md) plus `artifacts/meta.json`
+//! describing shapes. This module is the only place the coordinator
+//! touches XLA: everything above works with [`crate::tensor::Tensor`].
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactMeta, ArtifactRegistry};
+pub use client::{HloRunner, RuntimeClient};

@@ -1,0 +1,291 @@
+//! Host-side dense f32 tensor.
+//!
+//! A deliberately small row-major tensor: the heavy math runs inside XLA
+//! artifacts (L2) or the native kernels in [`crate::nn`]; this type is the
+//! interchange container the coordinator shuffles between gates, layout
+//! transforms and collectives.
+
+use crate::error::{HetuError, Result};
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { data: vec![v; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Tensor from existing data (checks element count).
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Result<Tensor> {
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            return Err(HetuError::Shape(format!(
+                "data has {} elements, shape {:?} wants {}",
+                data.len(),
+                shape,
+                expect
+            )));
+        }
+        Ok(Tensor { data, shape: shape.to_vec() })
+    }
+
+    /// Standard-normal random tensor.
+    pub fn randn(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal_f32()).collect();
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    /// Uniform random tensor in `[lo, hi)`.
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.uniform(lo, hi)).collect();
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows (first dim) for a matrix view.
+    pub fn rows(&self) -> usize {
+        *self.shape.first().unwrap_or(&0)
+    }
+
+    /// Row stride = product of trailing dims.
+    pub fn row_len(&self) -> usize {
+        self.shape.iter().skip(1).product::<usize>().max(1)
+    }
+
+    /// Borrow row `i` (requires ndim ≥ 1).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.row_len();
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Mutably borrow row `i`.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let w = self.row_len();
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// 2-D indexing convenience.
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let expect: usize = shape.iter().product();
+        if expect != self.data.len() {
+            return Err(HetuError::Shape(format!(
+                "cannot reshape {:?} ({} elems) to {:?} ({} elems)",
+                self.shape,
+                self.data.len(),
+                shape,
+                expect
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Copy rows `lo..hi` into a new tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        let w = self.row_len();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor { data: self.data[lo * w..hi * w].to_vec(), shape }
+    }
+
+    /// Concatenate tensors along axis 0 (trailing dims must match).
+    pub fn concat_rows(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            return Err(HetuError::Shape("concat of zero tensors".into()));
+        }
+        let tail = &parts[0].shape[1..];
+        let mut rows = 0;
+        for p in parts {
+            if &p.shape[1..] != tail {
+                return Err(HetuError::Shape(format!(
+                    "concat tail mismatch: {:?} vs {:?}",
+                    &p.shape[1..],
+                    tail
+                )));
+            }
+            rows += p.shape[0];
+        }
+        let mut shape = parts[0].shape.clone();
+        shape[0] = rows;
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Ok(Tensor { data, shape })
+    }
+
+    /// Elementwise maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Check approximate equality.
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= atol
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// In-place add of another tensor.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.at(0, 1), 2.0);
+        assert_eq!(t.at(1, 2), 6.0);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0]);
+        assert!(Tensor::from_vec(vec![1.0], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(&[4, 3]);
+        assert!(t.clone().reshape(&[3, 4]).is_ok());
+        assert!(t.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn slice_and_concat_roundtrip() {
+        let mut rng = Rng::seed(0);
+        let t = Tensor::randn(&[10, 4], &mut rng);
+        let a = t.slice_rows(0, 3);
+        let b = t.slice_rows(3, 10);
+        let back = Tensor::concat_rows(&[&a, &b]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn concat_rejects_mismatched_tail() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 4]);
+        assert!(Tensor::concat_rows(&[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seed(1);
+        let t = Tensor::randn(&[5, 7], &mut rng);
+        assert_eq!(t.transpose().transpose(), t);
+        assert_eq!(t.transpose().shape(), &[7, 5]);
+        assert_eq!(t.at(2, 3), t.transpose().at(3, 2));
+    }
+
+    #[test]
+    fn arithmetic_helpers() {
+        let mut a = Tensor::full(&[2, 2], 1.0);
+        let b = Tensor::full(&[2, 2], 2.0);
+        a.add_assign(&b);
+        assert_eq!(a, Tensor::full(&[2, 2], 3.0));
+        a.scale(0.5);
+        assert_eq!(a, Tensor::full(&[2, 2], 1.5));
+        assert!((Tensor::full(&[4], 2.0).norm() - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = Tensor::full(&[3], 1.0);
+        let mut b = a.clone();
+        b.data_mut()[1] = 1.0005;
+        assert!(a.allclose(&b, 1e-3));
+        assert!(!a.allclose(&b, 1e-4));
+        assert!((a.max_abs_diff(&b) - 0.0005).abs() < 1e-6);
+    }
+
+    #[test]
+    fn randn_is_seeded() {
+        let mut r1 = Rng::seed(9);
+        let mut r2 = Rng::seed(9);
+        assert_eq!(Tensor::randn(&[8, 8], &mut r1), Tensor::randn(&[8, 8], &mut r2));
+    }
+}

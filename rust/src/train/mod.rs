@@ -1,0 +1,14 @@
+//! End-to-end training over the AOT artifacts (L2/L1 compute).
+//!
+//! `python/compile/aot.py` lowers two functions per model variant:
+//! - `<model>_init(seed) → params…` — parameter initialization;
+//! - `<model>_step(params…, tokens, targets) → (params…, loss)` — one
+//!   fused forward/backward/Adam step.
+//!
+//! The trainer loads both once, keeps parameters as host literals, and
+//! loops: feed params + batch → receive new params + loss. Python is
+//! never involved at run time.
+
+pub mod trainer;
+
+pub use trainer::{TrainLog, Trainer};

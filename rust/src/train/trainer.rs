@@ -1,0 +1,224 @@
+//! The artifact-driven training loop.
+//!
+//! NOTE on the execution path: the published `xla` crate's
+//! `PjRtLoadedExecutable::execute(&[Literal])` **leaks every input
+//! device buffer** (its C shim `release()`s the uploaded buffers and
+//! never frees them), which at ~1.3 GB of parameters per step OOMs a
+//! 100M-param run within ~25 steps. The trainer therefore uploads
+//! inputs itself (`buffer_from_host_buffer` → owned `PjRtBuffer`s with
+//! correct `Drop`) and runs `execute_b`, which only borrows them.
+
+use crate::config::TrainConfig;
+use crate::data::{BatchIter, SyntheticLm};
+use crate::error::{HetuError, Result};
+use crate::runtime::{HloRunner, RuntimeClient};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Per-step record of the run.
+#[derive(Clone, Debug)]
+pub struct TrainLog {
+    pub step: u64,
+    pub loss: f32,
+    pub wall: f64,
+}
+
+/// One flat state tensor (host side).
+struct HostParam {
+    data: Vec<f32>,
+    dims: Vec<usize>,
+}
+
+/// Loads `<model>_init` / `<model>_step` artifacts and trains.
+pub struct Trainer {
+    pub runtime: RuntimeClient,
+    step: Arc<HloRunner>,
+    pub cfg: TrainConfig,
+    /// Flat training state (params + optimizer state), fed back each step.
+    params: Vec<HostParam>,
+    pub vocab: usize,
+    pub logs: Vec<TrainLog>,
+}
+
+impl Trainer {
+    /// Load artifacts for `cfg.model` and initialize parameters.
+    ///
+    /// Batch geometry (batch size / sequence length) is static in the
+    /// compiled artifact, so the trainer adopts the artifact's values.
+    pub fn new(mut cfg: TrainConfig) -> Result<Trainer> {
+        let mut runtime = RuntimeClient::cpu(&cfg.artifact_dir)?;
+        let init = runtime.runner(&format!("{}_init", cfg.model))?;
+        let step = runtime.runner(&format!("{}_step", cfg.model))?;
+        let vocab = step.meta.attr_usize("vocab")?;
+        cfg.batch_size = step.meta.attr_usize("batch")?;
+        cfg.seq_len = step.meta.attr_usize("seq")?;
+
+        // Run init(seed) once through execute_b.
+        let seed_buf = runtime
+            .client
+            .buffer_from_host_buffer(&[cfg.seed as i32], &[], None)?;
+        let out = init.run_buffers(&[seed_buf])?;
+        let lits = out.to_literal_sync()?.to_tuple()?;
+        let params: Vec<HostParam> = lits
+            .into_iter()
+            .zip(&step.meta.inputs)
+            .map(|(lit, dims)| {
+                Ok(HostParam { data: lit.to_vec::<f32>()?, dims: dims.clone() })
+            })
+            .collect::<Result<_>>()?;
+        if params.len() + 2 != step.meta.inputs.len() {
+            return Err(HetuError::Artifact(format!(
+                "init returned {} params but step wants {} inputs (params + tokens + targets)",
+                params.len(),
+                step.meta.inputs.len()
+            )));
+        }
+        Ok(Trainer { runtime, step, cfg, params, vocab, logs: Vec::new() })
+    }
+
+    /// Number of parameter tensors.
+    pub fn num_param_tensors(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Total state element count.
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|p| p.data.len()).sum()
+    }
+
+    /// One training step on an (inputs, targets) token batch.
+    pub fn train_step(&mut self, tokens: &[u32], targets: &[u32]) -> Result<f32> {
+        let n = self.cfg.batch_size * self.cfg.seq_len;
+        if tokens.len() != n || targets.len() != n {
+            return Err(crate::shape_err!(
+                "batch must be {n} tokens, got {}/{}",
+                tokens.len(),
+                targets.len()
+            ));
+        }
+        let client = &self.runtime.client;
+        let dims = [self.cfg.batch_size, self.cfg.seq_len];
+        let tok_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tgt_i32: Vec<i32> = targets.iter().map(|&t| t as i32).collect();
+
+        // Upload the whole state + batch as owned device buffers.
+        let mut bufs = Vec::with_capacity(self.params.len() + 2);
+        for p in &self.params {
+            bufs.push(client.buffer_from_host_buffer(&p.data, &p.dims, None)?);
+        }
+        bufs.push(client.buffer_from_host_buffer(&tok_i32, &dims, None)?);
+        bufs.push(client.buffer_from_host_buffer(&tgt_i32, &dims, None)?);
+
+        let out = self.step.run_buffers(&bufs)?;
+        drop(bufs); // inputs freed here (execute_b only borrows)
+        let mut parts = out.to_literal_sync()?.to_tuple()?;
+        // Convention: last tuple element is the scalar loss.
+        let loss_lit = parts.pop().ok_or_else(|| {
+            HetuError::Artifact("step artifact returned empty tuple".into())
+        })?;
+        let loss = loss_lit.get_first_element::<f32>()?;
+        for (p, lit) in self.params.iter_mut().zip(parts) {
+            p.data = lit.to_vec::<f32>()?;
+        }
+        Ok(loss)
+    }
+
+    /// Save the full training state (params + optimizer) to a binary
+    /// checkpoint: a JSON header (tensor dims, model name) followed by
+    /// raw little-endian f32 data.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        use std::io::Write;
+        let header = crate::util::json::Json::obj(vec![
+            ("model", crate::util::json::Json::str(self.cfg.model.clone())),
+            ("vocab", crate::util::json::Json::num(self.vocab as f64)),
+            (
+                "tensors",
+                crate::util::json::Json::arr(self.params.iter().map(|p| {
+                    crate::util::json::Json::arr(
+                        p.dims.iter().map(|&d| crate::util::json::Json::num(d as f64)),
+                    )
+                })),
+            ),
+        ])
+        .dump();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for p in &self.params {
+            for v in &p.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Restore training state from [`Self::save_checkpoint`] output.
+    /// The checkpoint must match the loaded artifact's tensor layout.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        use std::io::Read;
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = crate::util::json::Json::parse(
+            std::str::from_utf8(&hbytes)
+                .map_err(|_| HetuError::Artifact("bad checkpoint header".into()))?,
+        )?;
+        if header.str_field("model")? != self.cfg.model {
+            return Err(HetuError::Config(format!(
+                "checkpoint is for model '{}', trainer loaded '{}'",
+                header.str_field("model")?,
+                self.cfg.model
+            )));
+        }
+        let dims = header.req("tensors")?.as_arr().ok_or_else(|| {
+            HetuError::Artifact("checkpoint header missing tensors".into())
+        })?;
+        if dims.len() != self.params.len() {
+            return Err(HetuError::Artifact(format!(
+                "checkpoint has {} tensors, artifact wants {}",
+                dims.len(),
+                self.params.len()
+            )));
+        }
+        for p in self.params.iter_mut() {
+            let mut bytes = vec![0u8; p.data.len() * 4];
+            f.read_exact(&mut bytes)?;
+            for (i, v) in p.data.iter_mut().enumerate() {
+                *v = f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+            }
+        }
+        Ok(())
+    }
+
+    /// Full training run over synthetic data; returns the loss log.
+    pub fn run(&mut self) -> Result<Vec<TrainLog>> {
+        let task = SyntheticLm::new(self.vocab, 1.1, 0.85);
+        let mut batches = BatchIter::new(
+            task,
+            self.cfg.batch_size,
+            self.cfg.seq_len,
+            self.cfg.seed ^ 0xDA7A,
+        );
+        for step in 0..self.cfg.steps {
+            let (x, y) = batches.next_batch();
+            let t0 = Instant::now();
+            let loss = self.train_step(&x, &y)?;
+            let wall = t0.elapsed().as_secs_f64();
+            if !loss.is_finite() {
+                return Err(HetuError::Runtime(format!(
+                    "loss diverged (NaN/inf) at step {step}"
+                )));
+            }
+            self.logs.push(TrainLog { step, loss, wall });
+            if step % self.cfg.log_every == 0 {
+                eprintln!("step {step:>5}  loss {loss:.4}  ({wall:.3}s)");
+            }
+        }
+        Ok(self.logs.clone())
+    }
+}
+
+// Tests live in rust/tests/integration.rs (need built artifacts).

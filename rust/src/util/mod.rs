@@ -1,0 +1,10 @@
+//! Self-contained substrates the offline build environment forced us to own:
+//! PRNG (`rand` is unavailable), JSON (`serde` is unavailable), a thread
+//! pool (`tokio`/`rayon` are unavailable), summary statistics, and a tiny
+//! property-testing kit (`proptest` is unavailable).
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

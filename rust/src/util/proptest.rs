@@ -1,0 +1,218 @@
+//! Mini property-based testing kit.
+//!
+//! The `proptest` crate is not vendored in this environment; this module
+//! provides the subset the test suite needs: seeded generators, a case
+//! runner that reports the failing input, and a greedy shrink pass for
+//! `Vec`-shaped inputs.
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath):
+//! ```no_run
+//! use hetumoe::util::proptest::{for_all, Gen};
+//! for_all(64, |g| {
+//!     let xs = g.vec_u32(0..100, 0..64);
+//!     let mut sorted = xs.clone();
+//!     sorted.sort_unstable();
+//!     assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Generator handle passed to properties; wraps a seeded [`Rng`] with
+/// convenience samplers.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (exposed so properties can scale sizes).
+    pub case: usize,
+}
+
+impl Gen {
+    /// Raw RNG access.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// usize in `[lo, hi)`.
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.rng.range(range.start, range.end.max(range.start + 1))
+    }
+
+    /// u32 in `[lo, hi)`.
+    pub fn u32_in(&mut self, range: std::ops::Range<u32>) -> u32 {
+        self.rng.range(range.start as usize, range.end.max(range.start + 1) as usize) as u32
+    }
+
+    /// f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Standard normal f32.
+    pub fn normal(&mut self) -> f32 {
+        self.rng.normal_f32()
+    }
+
+    /// Bool with probability `p` of true.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Vec of u32 values with length drawn from `len` and values from `val`.
+    pub fn vec_u32(
+        &mut self,
+        val: std::ops::Range<u32>,
+        len: std::ops::Range<usize>,
+    ) -> Vec<u32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.u32_in(val.clone())).collect()
+    }
+
+    /// Vec of f32 normals with length drawn from `len`.
+    pub fn vec_normal(&mut self, len: std::ops::Range<usize>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Pick one of the provided choices.
+    pub fn choose<'a, T>(&mut self, options: &'a [T]) -> &'a T {
+        &options[self.rng.below(options.len())]
+    }
+}
+
+/// Run `prop` over `cases` seeded generator instances. Panics (with the
+/// case seed) on the first failing case so it can be replayed with
+/// [`replay`].
+pub fn for_all<F: FnMut(&mut Gen)>(cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = derive_seed(case);
+        let mut g = Gen { rng: Rng::seed(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = panic_message(&payload);
+            panic!(
+                "property failed on case {case} (seed {seed:#x}): {msg}\n\
+                 replay with hetumoe::util::proptest::replay({seed:#x}, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a property with a specific seed (for debugging a failure).
+pub fn replay<F: FnMut(&mut Gen)>(seed: u64, mut prop: F) {
+    let mut g = Gen { rng: Rng::seed(seed), case: 0 };
+    prop(&mut g);
+}
+
+/// Derive a per-case seed (stable across runs — deterministic CI).
+fn derive_seed(case: usize) -> u64 {
+    crate::util::rng::hash_u64(0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+fn panic_message(payload: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".into()
+    }
+}
+
+/// Greedy shrink for vector inputs: given a failing input and a predicate
+/// `fails`, repeatedly try dropping halves/elements while the predicate
+/// still fails. Returns a (locally) minimal failing input.
+pub fn shrink_vec<T: Clone, F: Fn(&[T]) -> bool>(input: &[T], fails: F) -> Vec<T> {
+    let mut cur: Vec<T> = input.to_vec();
+    if !fails(&cur) {
+        return cur;
+    }
+    loop {
+        let mut progressed = false;
+        // Try removing contiguous chunks, halving sizes.
+        let mut chunk = (cur.len() / 2).max(1);
+        while chunk >= 1 {
+            let mut i = 0;
+            while i + chunk <= cur.len() {
+                let mut candidate = Vec::with_capacity(cur.len() - chunk);
+                candidate.extend_from_slice(&cur[..i]);
+                candidate.extend_from_slice(&cur[i + chunk..]);
+                if fails(&candidate) {
+                    cur = candidate;
+                    progressed = true;
+                } else {
+                    i += chunk;
+                }
+            }
+            if chunk == 1 {
+                break;
+            }
+            chunk /= 2;
+        }
+        if !progressed {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_runs_all_cases() {
+        let mut count = 0;
+        for_all(32, |_| count += 1);
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    fn for_all_seeds_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        for_all(8, |g| first.push(g.rng().next_u64()));
+        let mut second: Vec<u64> = Vec::new();
+        for_all(8, |g| second.push(g.rng().next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed on case")]
+    fn failing_property_reports_seed() {
+        for_all(16, |g| {
+            let v = g.usize_in(0..10);
+            assert!(v < 100); // passes
+            if g.case == 7 {
+                panic!("intentional");
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        for_all(64, |g| {
+            let u = g.usize_in(3..9);
+            assert!((3..9).contains(&u));
+            let xs = g.vec_u32(5..8, 0..20);
+            assert!(xs.len() < 20);
+            assert!(xs.iter().all(|&x| (5..8).contains(&x)));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        });
+    }
+
+    #[test]
+    fn shrink_finds_minimal_counterexample() {
+        // Property: no element equals 42. Failing input contains some.
+        let input: Vec<u32> = (0..100).map(|i| if i % 17 == 0 { 42 } else { i }).collect();
+        let minimal = shrink_vec(&input, |xs| xs.iter().any(|&x| x == 42));
+        assert_eq!(minimal, vec![42]);
+    }
+
+    #[test]
+    fn shrink_non_failing_returns_input() {
+        let input = vec![1u32, 2, 3];
+        let out = shrink_vec(&input, |_| false);
+        assert_eq!(out, input);
+    }
+}

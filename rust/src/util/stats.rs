@@ -1,0 +1,239 @@
+//! Summary statistics for benchmarks and load-balance diagnostics.
+
+/// Online mean/variance (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile over a sample (linear interpolation, like numpy's default).
+/// `q` in `[0, 100]`. Sorts a copy; fine for bench-sized samples.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = q / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Median absolute deviation (robust spread), scaled for normal consistency.
+pub fn mad(samples: &[f64]) -> f64 {
+    let med = percentile(samples, 50.0);
+    let devs: Vec<f64> = samples.iter().map(|x| (x - med).abs()).collect();
+    1.4826 * percentile(&devs, 50.0)
+}
+
+/// Full summary of a sample.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        let mut w = Welford::new();
+        for &x in samples {
+            w.push(x);
+        }
+        Summary {
+            n: samples.len(),
+            mean: w.mean(),
+            std: w.std(),
+            min: w.min(),
+            p50: percentile(samples, 50.0),
+            p90: percentile(samples, 90.0),
+            p99: percentile(samples, 99.0),
+            max: w.max(),
+        }
+    }
+}
+
+/// Coefficient of variation of per-expert loads — the standard MoE
+/// load-balance metric (0 = perfectly balanced).
+pub fn load_cv(counts: &[usize]) -> f64 {
+    if counts.is_empty() {
+        return 0.0;
+    }
+    let mut w = Welford::new();
+    for &c in counts {
+        w.push(c as f64);
+    }
+    if w.mean() == 0.0 {
+        0.0
+    } else {
+        w.std() / w.mean()
+    }
+}
+
+/// Shannon entropy (nats) of a count distribution, normalized to `[0,1]`
+/// by `ln(n)`. 1 = uniform routing.
+pub fn normalized_entropy(counts: &[usize]) -> f64 {
+    let total: usize = counts.iter().sum();
+    if total == 0 || counts.len() < 2 {
+        return 0.0;
+    }
+    let mut h = 0.0f64;
+    for &c in counts {
+        if c > 0 {
+            let p = c as f64 / total as f64;
+            h -= p * p.ln();
+        }
+    }
+    h / (counts.len() as f64).ln()
+}
+
+/// Pretty duration formatting for bench tables.
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3} µs", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+/// Pretty byte-size formatting.
+pub fn fmt_bytes(bytes: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert_eq!(w.count(), 5);
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+        assert!((w.var() - 2.5).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mad_robust_to_outlier() {
+        let xs = [1.0, 1.1, 0.9, 1.0, 100.0];
+        assert!(mad(&xs) < 1.0);
+    }
+
+    #[test]
+    fn summary_fields_consistent() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn load_cv_zero_when_balanced() {
+        assert!(load_cv(&[10, 10, 10, 10]) < 1e-12);
+        assert!(load_cv(&[40, 0, 0, 0]) > 1.0);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        assert!((normalized_entropy(&[5, 5, 5, 5]) - 1.0).abs() < 1e-12);
+        assert!(normalized_entropy(&[20, 0, 0, 0]) < 1e-12);
+        let mid = normalized_entropy(&[10, 5, 3, 2]);
+        assert!(mid > 0.0 && mid < 1.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_duration(2.5), "2.500 s");
+        assert_eq!(fmt_duration(0.0025), "2.500 ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_bytes(10), "10 B");
+        assert_eq!(fmt_bytes(1536), "1.50 KiB");
+        assert_eq!(fmt_bytes(16 * 1024 * 1024), "16.00 MiB");
+    }
+}

@@ -1,0 +1,239 @@
+//! A small scoped thread pool.
+//!
+//! `rayon`/`tokio` are not vendored in this environment, so the coordinator
+//! and the optimized layout-transform kernels use this pool: fixed worker
+//! threads, a shared injector queue, and a scoped `parallel_for` that
+//! borrows from the caller's stack (via `std::thread::scope` semantics
+//! implemented with raw scope-bound closures and a completion latch).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<Vec<Job>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// Fixed-size thread pool with FIFO-ish job execution.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` worker threads (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let sh = Arc::clone(&shared);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("hetu-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { shared, workers, size }
+    }
+
+    /// Pool with one worker per available core.
+    pub fn with_cores() -> Self {
+        ThreadPool::new(available_parallelism())
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job (fire and forget).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push(Box::new(f));
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop() {
+                    break Some(j);
+                }
+                if *shared.shutdown.lock().unwrap() {
+                    break None;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+/// Number of logical cores (fallback 4).
+pub fn available_parallelism() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Scoped data-parallel map over index chunks using `std::thread::scope`.
+///
+/// Splits `0..n` into `chunks` contiguous ranges and runs `f(range)` on
+/// scoped threads; `f` may borrow from the caller's stack. Returns when all
+/// chunks complete. Falls back to inline execution for `n == 0` or a single
+/// chunk.
+pub fn parallel_for_chunks<F>(n: usize, chunks: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let chunks = chunks.max(1).min(n);
+    if chunks == 1 {
+        f(0..n);
+        return;
+    }
+    let per = n.div_ceil(chunks);
+    thread::scope(|scope| {
+        for c in 0..chunks {
+            let lo = c * per;
+            let hi = ((c + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fr = &f;
+            scope.spawn(move || fr(lo..hi));
+        }
+    });
+}
+
+/// Scoped parallel map: applies `f(i)` for `i in 0..n` on up to `threads`
+/// scoped threads, collecting results in order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<Mutex<&mut Option<T>>> =
+            out.iter_mut().map(Mutex::new).collect();
+        let next = AtomicUsize::new(0);
+        let nthreads = threads.max(1).min(n.max(1));
+        thread::scope(|scope| {
+            for _ in 0..nthreads {
+                let fr = &f;
+                let slots = &slots;
+                let next = &next;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        return;
+                    }
+                    let v = fr(i);
+                    **slots[i].lock().unwrap() = Some(v);
+                });
+            }
+        });
+    }
+    out.into_iter().map(|v| v.expect("slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let latch = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let n = 100;
+        for _ in 0..n {
+            let c = Arc::clone(&counter);
+            let l = Arc::clone(&latch);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let (m, cv) = &*l;
+                *m.lock().unwrap() += 1;
+                cv.notify_all();
+            });
+        }
+        let (m, cv) = &*latch;
+        let mut done = m.lock().unwrap();
+        while *done < n {
+            done = cv.wait(done).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), n);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let n = 1003;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(n, 7, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_handles_edges() {
+        parallel_for_chunks(0, 4, |_| panic!("should not run"));
+        let hit = AtomicUsize::new(0);
+        parallel_for_chunks(1, 8, |r| {
+            hit.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(64, 8, |i| i * i);
+        let expect: Vec<usize> = (0..64).map(|i| i * i).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+}
