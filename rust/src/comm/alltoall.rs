@@ -126,8 +126,24 @@ pub fn alltoallv(
         *b = o;
     }
 
-    // ---- simulated timing: worst GPU intra rail, worst NIC inter rail ----
+    // ---- simulated timing ----
+    Ok(alltoallv_timing(net, counts, 4))
+}
+
+/// Timing of a flat variable-count AllToAll: `counts[s][d]` messages of
+/// `elem_bytes`-sized elements flow from rank `s` to rank `d` (zero
+/// counts send nothing). Worst GPU intra rail vs worst NIC inter rail,
+/// overlapped. Separate from [`alltoallv`] so cost-model callers (the
+/// serving router, benches) can score a dispatch plan without moving
+/// bytes.
+pub fn alltoallv_timing(
+    net: &NetworkModel,
+    counts: &[Vec<usize>],
+    elem_bytes: usize,
+) -> CommTiming {
+    let cfg = &net.cfg;
     let (n, g) = (cfg.nodes, cfg.gpus_per_node);
+    let w = n * g;
     let mut t_intra_max = 0.0f64;
     let mut t_inter_max = 0.0f64;
     for node in 0..n {
@@ -139,7 +155,7 @@ pub fn alltoallv(
                 if d == s || counts[s][d] == 0 {
                     continue;
                 }
-                let bytes = (counts[s][d] * 4) as f64;
+                let bytes = (counts[s][d] * elem_bytes) as f64;
                 if cfg.node_of(d) == node {
                     gpu_intra +=
                         cfg.intra_lat + bytes / net.eff_bw(cfg.intra_bw, bytes);
@@ -151,10 +167,10 @@ pub fn alltoallv(
         }
         t_inter_max = t_inter_max.max(nic_time / cfg.nics_per_node as f64);
     }
-    Ok(CommTiming {
+    CommTiming {
         phases: vec![("intra".into(), t_intra_max), ("inter".into(), t_inter_max)],
         total: t_intra_max.max(t_inter_max),
-    })
+    }
 }
 
 #[cfg(test)]
@@ -288,6 +304,44 @@ mod tests {
         // src 1 sends to 2: counts[1][2]=3 elements starting at offset 1+2=3.
         let received = &bufs[2][counts[0][2]..counts[0][2] + counts[1][2]];
         assert_eq!(received, &[103.0, 104.0, 105.0]);
+    }
+
+    #[test]
+    fn alltoallv_timing_matches_flat_on_uniform_counts() {
+        for (nodes, gpus, chunk) in [(2usize, 2usize, 64usize), (4, 8, 256)] {
+            let m = net(nodes, gpus);
+            let w = nodes * gpus;
+            let counts = vec![vec![chunk; w]; w];
+            let ragged = alltoallv_timing(&m, &counts, 4);
+            let flat = flat_alltoall_timing(&m, chunk * 4);
+            assert!(
+                (ragged.total - flat.total).abs() < 1e-12,
+                "nodes={nodes} gpus={gpus}: {} vs {}",
+                ragged.total,
+                flat.total
+            );
+        }
+    }
+
+    #[test]
+    fn alltoallv_timing_is_direction_sensitive() {
+        // Fan-in to one rank spreads the sends across ranks; the
+        // reverse (fan-out from that rank) serializes them on a single
+        // link — the serving router charges the combine leg on the
+        // transposed matrix for exactly this reason.
+        let m = net(1, 4);
+        let mut fan_in = vec![vec![0usize; 4]; 4];
+        fan_in[1][0] = 10;
+        fan_in[2][0] = 10;
+        fan_in[3][0] = 10;
+        let fan_out: Vec<Vec<usize>> =
+            (0..4).map(|d| (0..4).map(|s| fan_in[s][d]).collect()).collect();
+        let t_in = alltoallv_timing(&m, &fan_in, 4).total;
+        let t_out = alltoallv_timing(&m, &fan_out, 4).total;
+        assert!(
+            t_out > t_in * 2.0,
+            "fan-out {t_out} must serialize vs fan-in {t_in}"
+        );
     }
 
     #[test]

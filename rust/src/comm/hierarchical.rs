@@ -135,10 +135,106 @@ pub fn hierarchical_alltoall_timing(net: &NetworkModel, chunk_bytes: usize) -> C
     }
 }
 
+/// Timing of the hierarchical schedule for a **variable-count** exchange:
+/// `counts[s][d]` elements of `elem_bytes` from rank `s` to rank `d`.
+///
+/// Same four phases as [`hierarchical_alltoall_timing`], with each phase
+/// charged for the bytes the ragged plan actually moves: non-leader GPUs
+/// gather their whole payload at the node leader, the leader re-lays the
+/// aggregate out by destination node, and each leader pair exchanges one
+/// aggregated message. With uniform counts this reduces exactly to the
+/// equal-chunk formula (asserted in tests). Cost-model twin of
+/// [`super::alltoall::alltoallv_timing`], used by the serving router to
+/// score a dispatch plan against both schedules.
+pub fn hierarchical_alltoallv_timing(
+    net: &NetworkModel,
+    counts: &[Vec<usize>],
+    elem_bytes: usize,
+) -> CommTiming {
+    let cfg = &net.cfg;
+    let (n, g) = (cfg.nodes, cfg.gpus_per_node);
+    let w = n * g;
+    let eb = elem_bytes as f64;
+
+    if n == 1 {
+        // Degenerates to the flat scheme's intra-node exchange.
+        let flat = super::alltoall::alltoallv_timing(net, counts, elem_bytes);
+        let t = flat.phase("intra");
+        return CommTiming { phases: vec![("intra".into(), t)], total: t };
+    }
+
+    let mut gather_max = 0.0f64;
+    let mut layout_max = 0.0f64;
+    let mut inter_max = 0.0f64;
+    let mut layout2_max = 0.0f64;
+    let mut scatter_max = 0.0f64;
+    for node in 0..n {
+        // Send side (gather + first layout): bytes this node's GPUs hold.
+        let mut send_bytes = 0.0f64;
+        let mut gather_bytes = 0.0f64;
+        // Receive side (second layout + scatter): bytes destined to this
+        // node's GPUs — ragged traffic need not be symmetric, so the
+        // mirror phases are charged from the receive profile.
+        let mut recv_bytes = 0.0f64;
+        let mut scatter_bytes = 0.0f64;
+        for local in 0..g {
+            let s = node * g + local;
+            let row: usize = counts[s].iter().sum();
+            let out_bytes = row as f64 * eb;
+            send_bytes += out_bytes;
+            let col: usize = (0..w).map(|src| counts[src][s]).sum();
+            let in_bytes = col as f64 * eb;
+            recv_bytes += in_bytes;
+            if local != 0 {
+                gather_bytes += out_bytes; // leader's own payload needs no hop
+                scatter_bytes += in_bytes;
+            }
+        }
+        let t_gather = net.gather_time(g - 1, gather_bytes);
+        let t_layout = net.device_copy_time(send_bytes);
+        let t_layout2 = net.device_copy_time(recv_bytes);
+        let t_scatter = net.gather_time(g - 1, scatter_bytes);
+        let mut nic_time = 0.0f64;
+        for dest_node in 0..n {
+            if dest_node == node {
+                continue;
+            }
+            let mut msg = 0usize;
+            for local in 0..g {
+                let s = node * g + local;
+                for dest_local in 0..g {
+                    msg += counts[s][dest_node * g + dest_local];
+                }
+            }
+            if msg > 0 {
+                let bytes = msg as f64 * eb;
+                nic_time += cfg.inter_lat + bytes / net.eff_bw(cfg.inter_bw, bytes);
+            }
+        }
+        let t_inter = nic_time / cfg.nics_per_node as f64;
+        gather_max = gather_max.max(t_gather);
+        layout_max = layout_max.max(t_layout);
+        inter_max = inter_max.max(t_inter);
+        layout2_max = layout2_max.max(t_layout2);
+        scatter_max = scatter_max.max(t_scatter);
+    }
+    let total = gather_max + layout_max + inter_max + layout2_max + scatter_max;
+    CommTiming {
+        phases: vec![
+            ("gather".into(), gather_max),
+            ("layout".into(), layout_max),
+            ("inter".into(), inter_max),
+            ("layout2".into(), layout2_max),
+            ("scatter".into(), scatter_max),
+        ],
+        total,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::alltoall::{alltoall, flat_alltoall_timing};
+    use crate::comm::alltoall::{alltoall, alltoallv_timing, flat_alltoall_timing};
     use crate::config::ClusterConfig;
     use crate::util::proptest::for_all;
     use crate::util::rng::Rng;
@@ -251,5 +347,68 @@ mod tests {
         let m = net(2, 2);
         let mut bad = vec![vec![0.0; 8]; 3];
         assert!(hierarchical_alltoall(&m, &mut bad).is_err());
+    }
+
+    #[test]
+    fn ragged_timing_matches_equal_chunk_on_uniform_counts() {
+        for (nodes, gpus, chunk) in [(2usize, 4usize, 256usize), (4, 8, 64), (1, 4, 128)] {
+            let m = net(nodes, gpus);
+            let w = nodes * gpus;
+            let counts = vec![vec![chunk; w]; w];
+            let ragged = hierarchical_alltoallv_timing(&m, &counts, 4);
+            let equal = hierarchical_alltoall_timing(&m, chunk * 4);
+            assert!(
+                (ragged.total - equal.total).abs() < 1e-12,
+                "nodes={nodes} gpus={gpus}: {} vs {}",
+                ragged.total,
+                equal.total
+            );
+        }
+    }
+
+    #[test]
+    fn ragged_timing_skips_empty_destinations() {
+        // All traffic stays on node 0: no inter phase at all.
+        let m = net(2, 2);
+        let mut counts = vec![vec![0usize; 4]; 4];
+        counts[0][1] = 100;
+        counts[1][0] = 100;
+        let t = hierarchical_alltoallv_timing(&m, &counts, 4);
+        assert_eq!(t.phase("inter"), 0.0);
+        assert!(t.total > 0.0); // gather/layout still move the payload
+    }
+
+    #[test]
+    fn ragged_timing_charges_receive_skew() {
+        // Only node 0's *leader* sends, and only to node 1's non-leader
+        // GPUs: nothing needs gathering on the send side, but the rows
+        // still fan out from node 1's leader — the scatter phase must be
+        // charged from the receive profile, not mirrored from the send.
+        let m = net(2, 4);
+        let w = 8;
+        let mut counts = vec![vec![0usize; w]; w];
+        counts[0][5] = 50;
+        counts[0][6] = 50;
+        let t = hierarchical_alltoallv_timing(&m, &counts, 4);
+        assert_eq!(t.phase("gather"), 0.0, "leader-held payload needs no gather");
+        assert!(t.phase("scatter") > 0.0, "non-leader destinations need a scatter");
+        assert!(t.phase("inter") > 0.0);
+    }
+
+    #[test]
+    fn aggregation_beats_flat_on_small_serving_batches() {
+        // Serving-scale dispatch: a few token rows per (src, dst) pair.
+        // Flat pays one NIC latency per pair; hierarchical pays one per
+        // node pair — the paper's mechanism at online batch sizes.
+        let m = net(4, 8);
+        let w = m.cfg.world();
+        let counts = vec![vec![2usize; w]; w]; // 2 rows per pair
+        let row_bytes = 256; // d_model 64 × f32
+        let flat = alltoallv_timing(&m, &counts, row_bytes).total;
+        let hier = hierarchical_alltoallv_timing(&m, &counts, row_bytes).total;
+        assert!(
+            hier < flat * 0.5,
+            "hier {hier:.6}s must clearly beat flat {flat:.6}s on small messages"
+        );
     }
 }

@@ -56,6 +56,7 @@ impl From<std::io::Error> for HetuError {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for HetuError {
     fn from(e: xla::Error) -> Self {
         HetuError::Runtime(e.to_string())

@@ -14,7 +14,14 @@
 //! Layer 2 (the JAX model) and Layer 1 (Pallas kernels) live under
 //! `python/compile/` and are compiled **once** (`make artifacts`) to HLO
 //! text; [`runtime`] loads and executes those artifacts through the PJRT
-//! CPU client. Python is never on the training hot path.
+//! CPU client. Python is never on the training hot path. The PJRT
+//! execution path is behind the off-by-default `pjrt` cargo feature so
+//! the crate builds without the XLA toolchain (see DESIGN.md §8).
+//!
+//! On top of the training pipeline, [`serve`] turns the same MoE layer
+//! into an online inference service: open-loop workload generation,
+//! continuous batching under expert-capacity and latency budgets,
+//! expert-placement-aware AllToAll selection, and SLO reporting.
 //!
 //! ## Quick tour
 //!
@@ -47,7 +54,9 @@ pub mod layout;
 pub mod moe;
 pub mod nn;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
+#[cfg(feature = "pjrt")]
 pub mod train;
 pub mod util;
 

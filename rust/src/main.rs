@@ -6,6 +6,7 @@
 //! - `sim`          — analytic cluster-scale simulation of all systems
 //! - `gate-stats`   — routing/load-balance diagnostics for every gate
 //! - `alltoall`     — compare flat vs hierarchical AllToAll
+//! - `serve`        — online inference serving on the simulated cluster
 //! - `info`         — artifact + platform inventory
 
 use hetumoe::baselines::{sim_step, SystemKind, SystemProfile};
@@ -14,12 +15,12 @@ use hetumoe::cli::{usage, Args, CommandSpec};
 use hetumoe::cluster::{GpuModel, NetworkModel};
 use hetumoe::comm::alltoall::flat_alltoall_timing;
 use hetumoe::comm::hierarchical::hierarchical_alltoall_timing;
-use hetumoe::config::{ClusterConfig, ConfigFile, GateKind, MoeConfig, TrainConfig};
+use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
 use hetumoe::coordinator::Coordinator;
 use hetumoe::gating::{make_gate, GateBatch};
 use hetumoe::moe::MoeLayerOptions;
+use hetumoe::serve::{ArrivalProcess, CommChoice, ServeConfig, ServeEngine};
 use hetumoe::tensor::Tensor;
-use hetumoe::train::Trainer;
 use hetumoe::util::rng::Rng;
 use hetumoe::util::stats::{fmt_duration, load_cv, normalized_entropy};
 
@@ -68,6 +69,24 @@ const COMMANDS: &[CommandSpec] = &[
             ("nodes", "comma list of node counts (default 2,4,8)"),
         ],
     },
+    CommandSpec {
+        name: "serve",
+        about: "online MoE inference serving on the simulated cluster",
+        options: &[
+            ("rate", "mean request arrival rate, req/s (default 2000)"),
+            ("duration", "simulated seconds of traffic (default 2.0)"),
+            ("slo-ms", "per-request latency SLO in ms (default 50)"),
+            ("gate", "switch|gshard|topk|... (default switch)"),
+            ("comm", "flat|hier|auto AllToAll selection (default auto)"),
+            ("workload", "poisson|bursty arrivals (default poisson)"),
+            ("nodes", "simulated nodes (default 2)"),
+            ("gpus", "GPUs per node (default 8)"),
+            ("experts", "experts (default 16)"),
+            ("d-model", "model width (default 64)"),
+            ("max-tokens", "max tokens per request (default 64)"),
+            ("seed", "workload/model seed (default 0)"),
+        ],
+    },
     CommandSpec { name: "info", about: "platform + artifact inventory", options: &[] },
 ];
 
@@ -79,6 +98,7 @@ fn main() {
         Some("sim") => cmd_sim(&args),
         Some("gate-stats") => cmd_gate_stats(&args),
         Some("alltoall") => cmd_alltoall(&args),
+        Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(&args),
         _ => {
             println!("hetumoe {} — MoE distributed training (HetuMoE reproduction)", hetumoe::version());
@@ -92,7 +112,20 @@ fn main() {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> hetumoe::error::Result<()> {
+    Err(hetumoe::error::HetuError::Runtime(
+        "the `train` subcommand executes AOT artifacts through PJRT; \
+         rebuild with `cargo build --release --features pjrt`"
+            .into(),
+    ))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> hetumoe::error::Result<()> {
+    use hetumoe::config::{ConfigFile, TrainConfig};
+    use hetumoe::train::Trainer;
+
     let mut cfg = match args.get("config") {
         Some(path) => ConfigFile::load(path)?.train()?,
         None => TrainConfig::default_run(),
@@ -293,9 +326,82 @@ fn cmd_info(args: &Args) -> hetumoe::error::Result<()> {
         }
         Err(e) => println!("no artifacts: {e}"),
     }
+    #[cfg(feature = "pjrt")]
     match xla::PjRtClient::cpu() {
         Ok(c) => println!("pjrt: {} ({} devices)", c.platform_name(), c.device_count()),
         Err(e) => println!("pjrt unavailable: {e}"),
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt: disabled at compile time (rebuild with --features pjrt)");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
+    let rate = args.f64_or("rate", 2000.0)?;
+    let duration = args.f64_or("duration", 2.0)?;
+    let slo = args.f64_or("slo-ms", 50.0)? * 1e-3;
+    let nodes = args.usize_or("nodes", 2)?;
+    let gpus = args.usize_or("gpus", 8)?;
+    let experts = args.usize_or("experts", 16)?;
+    let d_model = args.usize_or("d-model", 64)?;
+    let max_tokens = args.usize_or("max-tokens", 64)?;
+    let seed = args.u64_or("seed", 0)?;
+    let comm = CommChoice::parse(args.str_or("comm", "auto"))?;
+    let workload = args.str_or("workload", "poisson");
+    let process = match workload {
+        // Calibrated so the long-run mean equals --rate:
+        // (3r·0.05 + 0.5r·0.2) / 0.25 = r (see ArrivalProcess::mean_rate).
+        "bursty" => ArrivalProcess::Bursty {
+            base_rate: rate * 0.5,
+            burst_rate: rate * 3.0,
+            mean_burst: 0.05,
+            mean_calm: 0.2,
+        },
+        "poisson" => ArrivalProcess::Poisson { rate },
+        other => {
+            return Err(hetumoe::config_err!(
+                "unknown workload '{other}' (expected poisson|bursty)"
+            ));
+        }
+    };
+
+    let mut cluster = ClusterConfig::commodity(nodes);
+    cluster.gpus_per_node = gpus;
+    let moe = MoeConfig {
+        num_experts: experts,
+        d_model,
+        ffn_hidden: 2 * d_model,
+        capacity_factor: 1.25,
+        gate: parse_gate(args),
+    };
+    let cfg = ServeConfig {
+        moe,
+        cluster,
+        process,
+        comm,
+        slo,
+        duration,
+        max_tokens,
+        seed,
+        ..ServeConfig::default_run()
+    };
+    println!(
+        "serving {} gate on {nodes}x{gpus} GPUs | {rate:.0} req/s {workload} arrivals | \
+         comm={} | SLO {:.0} ms",
+        cfg.moe.gate.name(),
+        cfg.comm.name(),
+        slo * 1e3,
+    );
+    let mut engine = ServeEngine::new(cfg)?;
+    let report = engine.run()?;
+    report.emit();
+    let (flat_n, hier_n) = engine.router.comm_decisions();
+    println!("comm decisions: {flat_n} flat / {hier_n} hierarchical batches");
+    let hot = engine.router.hot_experts(1.5);
+    if hot.is_empty() {
+        println!("hot experts: none (load within 1.5x of mean)");
+    } else {
+        println!("hot experts (>1.5x mean load): {hot:?}");
     }
     Ok(())
 }

@@ -5,9 +5,11 @@
 
 use crate::error::Result;
 use crate::nn::Ffn;
+#[cfg(feature = "pjrt")]
 use crate::runtime::HloRunner;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
 /// One expert's forward computation over a row batch `[n, d] → [n, d]`.
@@ -56,6 +58,7 @@ impl ExpertExecutor for NativeExpert {
 /// Artifact-backed expert: runs the `expert_ffn` HLO (fixed `[C, d]`
 /// shape) through PJRT. Inputs shorter than `C` are zero-padded; the
 /// padding rows are discarded on return.
+#[cfg(feature = "pjrt")]
 pub struct HloExpert {
     runner: Arc<HloRunner>,
     /// Expert parameters, uploaded once: w1 [d,h], b1 [h], w2 [h,d], b2 [d].
@@ -65,6 +68,7 @@ pub struct HloExpert {
     h: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl HloExpert {
     /// `runner` must be the `expert_ffn` artifact; `params` are this
     /// expert's weights in artifact argument order (after the row input).
@@ -89,6 +93,7 @@ impl HloExpert {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ExpertExecutor for HloExpert {
     fn forward(&self, x: &Tensor) -> Result<Tensor> {
         let n = x.rows();

@@ -7,5 +7,7 @@
 pub mod expert;
 pub mod layer;
 
-pub use expert::{ExpertExecutor, HloExpert, NativeExpert};
+#[cfg(feature = "pjrt")]
+pub use expert::HloExpert;
+pub use expert::{ExpertExecutor, NativeExpert};
 pub use layer::{CommImpl, GateImpl, LayoutImpl, MoeLayer, MoeLayerOptions, StepReport};

@@ -5,9 +5,15 @@
 //! jax≥0.5 serialized protos, see DESIGN.md) plus `artifacts/meta.json`
 //! describing shapes. This module is the only place the coordinator
 //! touches XLA: everything above works with [`crate::tensor::Tensor`].
+//!
+//! The executing half ([`client`]) needs the `xla` crate and is gated
+//! behind the `pjrt` cargo feature; artifact discovery stays available
+//! in every build so `hetumoe info` can inventory a checkout.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
 
 pub use artifacts::{ArtifactMeta, ArtifactRegistry};
+#[cfg(feature = "pjrt")]
 pub use client::{HloRunner, RuntimeClient};

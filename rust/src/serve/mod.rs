@@ -1,0 +1,37 @@
+//! Online MoE inference serving (the north star's serving half).
+//!
+//! The training stack reproduces HetuMoE's fixed-batch iteration; this
+//! subsystem turns the same MoE layer into a request-level service on
+//! the simulated cluster:
+//!
+//! - [`workload`] — open-loop Poisson / bursty arrival generation and
+//!   replayable [`Trace`]s;
+//! - [`scheduler`] — continuous batching: requests join and leave the
+//!   running token batch mid-flight, under an expert-capacity token
+//!   budget and per-request deadlines;
+//! - [`router`] — the training gating zoo plus *placement awareness*:
+//!   each batch's dispatch plan is scored against the network model
+//!   under flat and hierarchical AllToAll and the cheaper schedule is
+//!   chosen per batch, while per-expert EWMA load tracks hot/cold
+//!   experts;
+//! - [`slo`] — p50/p95/p99 latency, goodput, shed rates and queue depth,
+//!   folded into the coordinator's phase-breakdown metrics;
+//! - [`engine`] — the deterministic event loop tying it together on the
+//!   simulated clock.
+//!
+//! The serving router is contractually identical to the training path:
+//! same gate, same router weight, same capacity rule — asserted against
+//! [`crate::moe::MoeLayer`] in `tests/serve_integration.rs`. See
+//! DESIGN.md §7.
+
+pub mod engine;
+pub mod router;
+pub mod scheduler;
+pub mod slo;
+pub mod workload;
+
+pub use engine::{ServeConfig, ServeEngine};
+pub use router::{CommChoice, PlacementRouter, RouteDecision};
+pub use scheduler::{BatchPlan, ContinuousBatcher, SchedulerConfig};
+pub use slo::{SloReport, SloTracker};
+pub use workload::{ArrivalProcess, Request, Trace, WorkloadGen};

@@ -1,0 +1,479 @@
+//! Expert-placement-aware routing for the serving path.
+//!
+//! The router reuses the training stack verbatim — the same
+//! [`Gate`] zoo, the same router weight, the same capacity rule — so a
+//! token batch routes to *exactly* the experts the training-path
+//! [`MoeLayer`] would pick (asserted in `tests/serve_integration.rs`).
+//! What serving adds on top is *placement awareness*: knowing that
+//! expert `e` lives on rank `e / (E/W)`, the router turns a dispatch
+//! plan into a per-(src, dst) rank traffic matrix, scores that matrix
+//! against the [`NetworkModel`] under both the flat and the hierarchical
+//! AllToAll schedules, and picks the cheaper one **per batch**. Online
+//! batches are small and ragged, so the winner genuinely flips with
+//! load — at low rate few pairs are populated and flat's direct sends
+//! win; near saturation the NIC drowns in small messages and the
+//! paper's aggregation wins. It also tracks a per-expert EWMA load so
+//! operators can see hot/cold experts drift with the workload.
+
+use crate::cluster::NetworkModel;
+use crate::comm::alltoall::alltoallv_timing;
+use crate::comm::hierarchical::hierarchical_alltoallv_timing;
+use crate::config::{ClusterConfig, MoeConfig};
+use crate::error::Result;
+use crate::gating::{apply_capacity, make_gate, DispatchPlan, Gate, Routing};
+use crate::moe::{CommImpl, MoeLayer};
+use crate::nn::matmul;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// AllToAll selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommChoice {
+    Flat,
+    Hierarchical,
+    /// Score both schedules per batch and take the cheaper one.
+    Auto,
+}
+
+impl CommChoice {
+    pub fn parse(s: &str) -> Result<CommChoice> {
+        Ok(match s.to_lowercase().as_str() {
+            "flat" => CommChoice::Flat,
+            "hier" | "hierarchical" => CommChoice::Hierarchical,
+            "auto" => CommChoice::Auto,
+            other => {
+                return Err(crate::config_err!("unknown comm choice '{other}'"));
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommChoice::Flat => "flat",
+            CommChoice::Hierarchical => "hier",
+            CommChoice::Auto => "auto",
+        }
+    }
+}
+
+/// Routing outcome for one admitted batch.
+#[derive(Clone, Debug)]
+pub struct RouteDecision {
+    /// Per-shard routing + capacity plan, rank order (training layout).
+    pub shards: Vec<(Routing, DispatchPlan)>,
+    /// `counts[src][dst]`: kept token rows rank `src` ships to `dst`.
+    pub counts: Vec<Vec<usize>>,
+    /// Global per-expert kept token counts.
+    pub expert_counts: Vec<usize>,
+    /// Chosen schedule.
+    pub comm: CommImpl,
+    /// Predicted dispatch-leg time of the chosen schedule.
+    pub dispatch_time: f64,
+    /// Predicted combine-leg time of the chosen schedule — charged on
+    /// the **transposed** traffic matrix, since the return exchange
+    /// reverses every flow (a hot expert's rank serializes the sends).
+    pub combine_time: f64,
+    /// Round-trip (dispatch + combine) predicted times per schedule.
+    pub flat_time: f64,
+    pub hier_time: f64,
+    /// Capacity-drop rate across the batch's demanded slots.
+    pub drop_rate: f64,
+    /// Mean padding waste of the per-shard dispatch buffers.
+    pub padding_waste: f64,
+    /// Mean auxiliary loss across shards.
+    pub aux_loss: f64,
+}
+
+impl RouteDecision {
+    /// Rows landing on the most-loaded rank (the expert-compute
+    /// straggler after the exchange).
+    pub fn max_rank_rows(&self) -> usize {
+        let w = self.counts.len();
+        (0..w)
+            .map(|dst| (0..w).map(|src| self.counts[src][dst]).sum::<usize>())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// The placement-aware router (see module docs).
+pub struct PlacementRouter {
+    pub cfg: MoeConfig,
+    pub cluster: ClusterConfig,
+    pub net: NetworkModel,
+    pub gate: Box<dyn Gate>,
+    /// Router weight `[d, E]` — identical to the training layer's.
+    pub gate_weight: Tensor,
+    choice: CommChoice,
+    /// EWMA of per-expert kept-token load.
+    load_ewma: Vec<f64>,
+    ewma_alpha: f64,
+    flat_chosen: usize,
+    hier_chosen: usize,
+}
+
+impl PlacementRouter {
+    /// Build with a freshly initialized router weight (same init recipe
+    /// as [`MoeLayer::native`]).
+    pub fn new(
+        cfg: MoeConfig,
+        cluster: ClusterConfig,
+        choice: CommChoice,
+        seed: u64,
+    ) -> Result<PlacementRouter> {
+        cfg.validate()?;
+        let mut rng = Rng::seed(seed ^ 0x10_07E5);
+        let mut gate_weight = Tensor::randn(&[cfg.d_model, cfg.num_experts], &mut rng);
+        gate_weight.scale(1.0 / (cfg.d_model as f32).sqrt());
+        Self::with_weight(cfg, cluster, choice, gate_weight)
+    }
+
+    /// Build sharing an existing training layer's gate config and router
+    /// weight — the serving path then routes exactly as training does.
+    pub fn from_layer(layer: &MoeLayer, choice: CommChoice) -> Result<PlacementRouter> {
+        Self::with_weight(
+            layer.cfg.clone(),
+            layer.cluster.clone(),
+            choice,
+            layer.gate_weight.clone(),
+        )
+    }
+
+    fn with_weight(
+        cfg: MoeConfig,
+        cluster: ClusterConfig,
+        choice: CommChoice,
+        gate_weight: Tensor,
+    ) -> Result<PlacementRouter> {
+        let w = cluster.world();
+        if cfg.num_experts % w != 0 {
+            return Err(crate::config_err!(
+                "num_experts {} must divide by world {w}",
+                cfg.num_experts
+            ));
+        }
+        let gate = make_gate(&cfg, 1, None)?;
+        let net = NetworkModel::new(cluster.clone());
+        let e = cfg.num_experts;
+        Ok(PlacementRouter {
+            cfg,
+            cluster,
+            net,
+            gate,
+            gate_weight,
+            choice,
+            load_ewma: vec![0.0; e],
+            ewma_alpha: 0.2,
+            flat_chosen: 0,
+            hier_chosen: 0,
+        })
+    }
+
+    /// Experts hosted per rank.
+    pub fn experts_per_rank(&self) -> usize {
+        self.cfg.num_experts / self.cluster.world()
+    }
+
+    /// Rank hosting a global expert id (the training-path placement).
+    pub fn rank_of_expert(&self, expert: usize) -> usize {
+        expert / self.experts_per_rank()
+    }
+
+    /// Route one per-rank shard exactly like the training pipeline:
+    /// score matmul → gate → capacity plan.
+    pub fn route_shard(&self, shard: &Tensor, step: u64) -> (Routing, DispatchPlan) {
+        let scores = matmul(shard, &self.gate_weight);
+        let routing = self.gate.route_scores(&scores, step);
+        let cap = self.cfg.capacity(shard.rows());
+        let plan = apply_capacity(&routing, cap);
+        (routing, plan)
+    }
+
+    /// Route a whole admitted batch `[T, d]`: shard it contiguously
+    /// across the world (training layout), route every shard, build the
+    /// rank traffic matrix, and pick the AllToAll schedule.
+    pub fn route_batch(&mut self, batch: &Tensor, step: u64) -> RouteDecision {
+        let w = self.cluster.world();
+        let tokens = batch.rows();
+        let per = tokens.div_ceil(w);
+        let mut shards = Vec::with_capacity(w);
+        for r in 0..w {
+            let lo = (r * per).min(tokens);
+            let hi = ((r + 1) * per).min(tokens);
+            let shard = batch.slice_rows(lo, hi);
+            if shard.rows() == 0 {
+                let routing = Routing {
+                    k: self.gate.k(),
+                    tokens: 0,
+                    num_experts: self.cfg.num_experts,
+                    expert_ids: Vec::new(),
+                    weights: Vec::new(),
+                    aux_loss: 0.0,
+                };
+                let plan = apply_capacity(&routing, 1);
+                shards.push((routing, plan));
+            } else {
+                shards.push(self.route_shard(&shard, step));
+            }
+        }
+
+        // Traffic matrix + per-expert loads from the kept slots.
+        let mut counts = vec![vec![0usize; w]; w];
+        let mut expert_counts = vec![0usize; self.cfg.num_experts];
+        let mut demanded = 0usize;
+        let mut dropped = 0usize;
+        let mut waste = 0.0f64;
+        let mut aux = 0.0f64;
+        let mut occupied = 0usize;
+        for (src, (routing, plan)) in shards.iter().enumerate() {
+            for (slot, &dest) in plan.dest.iter().enumerate() {
+                if dest == u32::MAX {
+                    continue;
+                }
+                let expert = routing.expert_ids[slot] as usize;
+                counts[src][self.rank_of_expert(expert)] += 1;
+                expert_counts[expert] += 1;
+            }
+            demanded += plan.demand.iter().sum::<usize>();
+            dropped += plan.dropped_slots();
+            // Empty shards (small batches on big worlds) carry no
+            // dispatch buffer; averaging their vacuous 100%-waste plans
+            // in would swamp the metric.
+            if routing.tokens > 0 {
+                waste += plan.padding_waste();
+                aux += routing.aux_loss as f64;
+                occupied += 1;
+            }
+        }
+        let occupied_f = occupied.max(1) as f64;
+        let waste = waste / occupied_f;
+        let aux = aux / occupied_f;
+
+        // Score both schedules over the full round trip: the combine
+        // leg is the transpose of the dispatch matrix (every flow
+        // reverses), and under expert skew the two legs cost very
+        // different amounts — a hot expert's rank receives fan-in
+        // cheaply but serializes the whole fan-out on the way back.
+        let counts_t: Vec<Vec<usize>> =
+            (0..w).map(|d| (0..w).map(|s| counts[s][d]).collect()).collect();
+        let row_bytes = self.cfg.d_model * 4;
+        let flat_dispatch = alltoallv_timing(&self.net, &counts, row_bytes).total;
+        let flat_combine = alltoallv_timing(&self.net, &counts_t, row_bytes).total;
+        let hier_dispatch =
+            hierarchical_alltoallv_timing(&self.net, &counts, row_bytes).total;
+        let hier_combine =
+            hierarchical_alltoallv_timing(&self.net, &counts_t, row_bytes).total;
+        let flat_time = flat_dispatch + flat_combine;
+        let hier_time = hier_dispatch + hier_combine;
+        let comm = match self.choice {
+            CommChoice::Flat => CommImpl::Flat,
+            CommChoice::Hierarchical => CommImpl::Hierarchical,
+            CommChoice::Auto => {
+                if hier_time < flat_time {
+                    CommImpl::Hierarchical
+                } else {
+                    CommImpl::Flat
+                }
+            }
+        };
+        let (dispatch_time, combine_time) = match comm {
+            CommImpl::Flat => (flat_dispatch, flat_combine),
+            CommImpl::Hierarchical => (hier_dispatch, hier_combine),
+        };
+        match comm {
+            CommImpl::Flat => self.flat_chosen += 1,
+            CommImpl::Hierarchical => self.hier_chosen += 1,
+        }
+        self.observe(&expert_counts);
+
+        RouteDecision {
+            shards,
+            counts,
+            expert_counts,
+            comm,
+            dispatch_time,
+            combine_time,
+            flat_time,
+            hier_time,
+            drop_rate: dropped as f64 / demanded.max(1) as f64,
+            padding_waste: waste,
+            aux_loss: aux,
+        }
+    }
+
+    /// Fold a batch's per-expert loads into the EWMA tracker.
+    fn observe(&mut self, expert_counts: &[usize]) {
+        let a = self.ewma_alpha;
+        for (ewma, &c) in self.load_ewma.iter_mut().zip(expert_counts) {
+            *ewma = (1.0 - a) * *ewma + a * c as f64;
+        }
+    }
+
+    /// Smoothed per-expert load.
+    pub fn load(&self) -> &[f64] {
+        &self.load_ewma
+    }
+
+    /// Experts whose smoothed load exceeds `factor` × the mean load.
+    pub fn hot_experts(&self, factor: f64) -> Vec<usize> {
+        let mean = self.load_ewma.iter().sum::<f64>() / self.load_ewma.len().max(1) as f64;
+        if mean <= 0.0 {
+            return Vec::new();
+        }
+        self.load_ewma
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l > factor * mean)
+            .map(|(e, _)| e)
+            .collect()
+    }
+
+    /// Experts whose smoothed load is below `factor` × the mean load —
+    /// candidates for consolidation/eviction.
+    pub fn cold_experts(&self, factor: f64) -> Vec<usize> {
+        let mean = self.load_ewma.iter().sum::<f64>() / self.load_ewma.len().max(1) as f64;
+        self.load_ewma
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l < factor * mean)
+            .map(|(e, _)| e)
+            .collect()
+    }
+
+    /// `(flat, hierarchical)` batch counts chosen so far.
+    pub fn comm_decisions(&self) -> (usize, usize) {
+        (self.flat_chosen, self.hier_chosen)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GateKind;
+
+    fn cfg(gate: GateKind) -> MoeConfig {
+        MoeConfig {
+            num_experts: 8,
+            d_model: 16,
+            ffn_hidden: 32,
+            capacity_factor: 2.0,
+            gate,
+        }
+    }
+
+    fn cluster(nodes: usize, gpus: usize) -> ClusterConfig {
+        ClusterConfig { nodes, gpus_per_node: gpus, ..ClusterConfig::commodity(nodes) }
+    }
+
+    #[test]
+    fn placement_matches_training_layout() {
+        let r = PlacementRouter::new(
+            cfg(GateKind::Switch),
+            cluster(2, 2),
+            CommChoice::Auto,
+            0,
+        )
+        .unwrap();
+        assert_eq!(r.experts_per_rank(), 2);
+        assert_eq!(r.rank_of_expert(0), 0);
+        assert_eq!(r.rank_of_expert(3), 1);
+        assert_eq!(r.rank_of_expert(7), 3);
+    }
+
+    #[test]
+    fn traffic_matrix_conserves_kept_tokens() {
+        let mut r = PlacementRouter::new(
+            cfg(GateKind::Switch),
+            cluster(2, 2),
+            CommChoice::Auto,
+            1,
+        )
+        .unwrap();
+        let mut rng = Rng::seed(5);
+        let x = Tensor::randn(&[64, 16], &mut rng);
+        let d = r.route_batch(&x, 0);
+        let matrix_total: usize = d.counts.iter().flatten().sum();
+        let expert_total: usize = d.expert_counts.iter().sum();
+        let kept_total: usize =
+            d.shards.iter().map(|(_, p)| p.kept.iter().sum::<usize>()).sum();
+        assert_eq!(matrix_total, expert_total);
+        assert_eq!(matrix_total, kept_total);
+        assert!(matrix_total <= 64); // top-1 gate: at most one slot/token
+        assert!(d.flat_time >= 0.0 && d.hier_time > 0.0);
+        assert!(d.max_rank_rows() >= matrix_total / 4);
+    }
+
+    #[test]
+    fn auto_choice_picks_the_cheaper_schedule() {
+        let mut r = PlacementRouter::new(
+            cfg(GateKind::Switch),
+            cluster(2, 4),
+            CommChoice::Auto,
+            2,
+        )
+        .unwrap();
+        let mut rng = Rng::seed(9);
+        let x = Tensor::randn(&[128, 16], &mut rng);
+        let d = r.route_batch(&x, 0);
+        match d.comm {
+            CommImpl::Flat => assert!(d.flat_time <= d.hier_time),
+            CommImpl::Hierarchical => assert!(d.hier_time < d.flat_time),
+        }
+        let (f, h) = r.comm_decisions();
+        assert_eq!(f + h, 1);
+    }
+
+    #[test]
+    fn forced_choices_are_respected() {
+        for (choice, expect) in [
+            (CommChoice::Flat, CommImpl::Flat),
+            (CommChoice::Hierarchical, CommImpl::Hierarchical),
+        ] {
+            let mut r =
+                PlacementRouter::new(cfg(GateKind::Switch), cluster(2, 2), choice, 3)
+                    .unwrap();
+            let mut rng = Rng::seed(11);
+            let x = Tensor::randn(&[32, 16], &mut rng);
+            assert_eq!(r.route_batch(&x, 0).comm, expect);
+        }
+    }
+
+    #[test]
+    fn ewma_tracks_hot_experts() {
+        let mut r = PlacementRouter::new(
+            cfg(GateKind::Switch),
+            cluster(1, 2),
+            CommChoice::Auto,
+            4,
+        )
+        .unwrap();
+        // Skewed loads: expert 0 hot, everyone else cold.
+        for _ in 0..10 {
+            r.observe(&[80, 2, 2, 2, 2, 2, 2, 2]);
+        }
+        let hot = r.hot_experts(1.5);
+        assert_eq!(hot, vec![0]);
+        let cold = r.cold_experts(0.5);
+        assert_eq!(cold, vec![1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn tiny_batches_shard_without_panicking() {
+        let mut r = PlacementRouter::new(
+            cfg(GateKind::GShard),
+            cluster(2, 2),
+            CommChoice::Auto,
+            6,
+        )
+        .unwrap();
+        let mut rng = Rng::seed(13);
+        // Fewer tokens than ranks → some shards are empty.
+        let x = Tensor::randn(&[2, 16], &mut rng);
+        let d = r.route_batch(&x, 0);
+        assert_eq!(d.shards.len(), 4);
+        let kept: usize = d.expert_counts.iter().sum();
+        assert!(kept >= 2, "top-2 over 2 tokens keeps >= 2 slots, got {kept}");
+        assert!(CommChoice::parse("nonsense").is_err());
+        assert_eq!(CommChoice::parse("hier").unwrap(), CommChoice::Hierarchical);
+    }
+}

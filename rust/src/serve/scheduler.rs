@@ -1,0 +1,341 @@
+//! Continuous batching under expert-capacity and latency budgets.
+//!
+//! Unlike the training loop's fixed shards, the serving path assembles a
+//! fresh token batch every engine iteration from whatever requests are
+//! in flight (vLLM-style continuous batching): a request joins the
+//! running batch the moment a slot frees up and leaves the moment its
+//! last token is processed — no waiting for batch-mates. Admission is
+//! bounded two ways:
+//!
+//! 1. **token budget** (`max_batch_tokens`) — the `E·C` rows the expert
+//!    buffers can absorb per iteration without excess drops, as derived
+//!    by the engine from the MoE capacity config and the latency budget;
+//! 2. **deadlines** — queued requests whose SLO already expired are
+//!    dropped before they waste a slot (better to shed than to serve
+//!    dead work), and the queue itself is bounded (`max_queue`) so
+//!    overload sheds at admission instead of growing unboundedly.
+
+use crate::serve::workload::Request;
+use std::collections::VecDeque;
+
+/// Batcher limits (see module docs).
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Max tokens across all requests in one iteration's batch.
+    pub max_batch_tokens: usize,
+    /// Max tokens a single request contributes per iteration (its
+    /// remaining work is carried to later iterations).
+    pub chunk_tokens: usize,
+    /// Admission-queue bound; arrivals beyond it are rejected.
+    pub max_queue: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_batch_tokens: 1024, chunk_tokens: 64, max_queue: 4096 }
+    }
+}
+
+/// A request being served across iterations.
+#[derive(Clone, Debug)]
+struct Active {
+    req: Request,
+    remaining: usize,
+}
+
+/// Batcher-local counters for tests and diagnostics. The engine's
+/// [`crate::serve::slo::SloTracker`] keeps its own request accounting
+/// at event time; these are not folded into the SLO report.
+#[derive(Clone, Debug, Default)]
+pub struct SchedStats {
+    pub admitted: usize,
+    pub rejected: usize,
+    pub expired: usize,
+}
+
+/// One iteration's admitted work.
+#[derive(Clone, Debug)]
+pub struct BatchPlan {
+    /// `(request id, tokens contributed this iteration)` in service order.
+    pub entries: Vec<(u64, usize)>,
+    /// Total tokens in the batch.
+    pub tokens: usize,
+}
+
+/// The continuous batcher.
+pub struct ContinuousBatcher {
+    pub cfg: SchedulerConfig,
+    queue: VecDeque<Request>,
+    active: Vec<Active>,
+    pub stats: SchedStats,
+}
+
+impl ContinuousBatcher {
+    pub fn new(mut cfg: SchedulerConfig) -> ContinuousBatcher {
+        // A zero chunk or budget would admit work it can never serve.
+        cfg.chunk_tokens = cfg.chunk_tokens.max(1);
+        cfg.max_batch_tokens = cfg.max_batch_tokens.max(cfg.chunk_tokens);
+        ContinuousBatcher {
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            stats: SchedStats::default(),
+        }
+    }
+
+    /// Offer an arrival; `false` means the bounded queue rejected it.
+    pub fn enqueue(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.cfg.max_queue {
+            self.stats.rejected += 1;
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    /// Drop queued requests whose deadline has already passed; returns
+    /// them so the tracker can account the sheds.
+    pub fn expire(&mut self, now: f64) -> Vec<Request> {
+        let mut dropped = Vec::new();
+        self.queue.retain(|r| {
+            if r.deadline < now {
+                dropped.push(r.clone());
+                false
+            } else {
+                true
+            }
+        });
+        self.stats.expired += dropped.len();
+        dropped
+    }
+
+    /// Assemble the next iteration's batch: in-flight requests first
+    /// (FCFS by admission), then fresh admissions from the queue while
+    /// the token budget holds. `None` when there is nothing to serve.
+    ///
+    /// Deadline shedding is the caller's job: call [`Self::expire`]
+    /// first so every dropped request is accounted for — this method
+    /// never discards work silently.
+    pub fn next_batch(&mut self) -> Option<BatchPlan> {
+        let mut entries = Vec::new();
+        let mut tokens = 0usize;
+        for a in &self.active {
+            if tokens >= self.cfg.max_batch_tokens {
+                break; // over-subscribed: the rest waits an iteration
+            }
+            let take = a
+                .remaining
+                .min(self.cfg.chunk_tokens)
+                .min(self.cfg.max_batch_tokens - tokens);
+            if take == 0 {
+                continue;
+            }
+            entries.push((a.req.id, take));
+            tokens += take;
+        }
+        while tokens < self.cfg.max_batch_tokens {
+            let take = match self.queue.front() {
+                Some(front) => front
+                    .tokens
+                    .min(self.cfg.chunk_tokens)
+                    .min(self.cfg.max_batch_tokens - tokens),
+                None => break,
+            };
+            // `take == 0` here only for a zero-token request (the chunk
+            // and remaining budget are both >= 1): admit it anyway so
+            // `complete` retires it this iteration instead of letting it
+            // block the queue head until its deadline.
+            let req = self.queue.pop_front().unwrap();
+            self.stats.admitted += 1;
+            entries.push((req.id, take));
+            tokens += take;
+            self.active.push(Active { remaining: req.tokens, req });
+        }
+        if entries.is_empty() {
+            None
+        } else {
+            Some(BatchPlan { entries, tokens })
+        }
+    }
+
+    /// Account a served batch; returns requests that just finished.
+    pub fn complete(&mut self, plan: &BatchPlan) -> Vec<Request> {
+        // Index once: under overload `active` holds thousands of
+        // requests and a per-entry linear scan would dominate the loop.
+        let index: std::collections::HashMap<u64, usize> = self
+            .active
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.req.id, i))
+            .collect();
+        for &(id, served) in &plan.entries {
+            if let Some(&i) = index.get(&id) {
+                self.active[i].remaining = self.active[i].remaining.saturating_sub(served);
+            }
+        }
+        let mut finished = Vec::new();
+        self.active.retain(|a| {
+            if a.remaining == 0 {
+                finished.push(a.req.clone());
+                false
+            } else {
+                true
+            }
+        });
+        finished
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Tokens still owed to in-flight requests.
+    pub fn in_flight_tokens(&self) -> usize {
+        self.active.iter().map(|a| a.remaining).sum()
+    }
+
+    /// True when no request is queued or in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64, tokens: usize, slo: f64) -> Request {
+        Request { id, arrival, tokens, deadline: arrival + slo }
+    }
+
+    fn batcher(max_batch: usize, chunk: usize, max_queue: usize) -> ContinuousBatcher {
+        ContinuousBatcher::new(SchedulerConfig {
+            max_batch_tokens: max_batch,
+            chunk_tokens: chunk,
+            max_queue,
+        })
+    }
+
+    #[test]
+    fn admits_fcfs_under_token_budget() {
+        let mut b = batcher(100, 64, 16);
+        for i in 0..4 {
+            assert!(b.enqueue(req(i, 0.0, 40, 1.0)));
+        }
+        let plan = b.next_batch().unwrap();
+        // 40 + 40 admitted, third would overflow to 120 → capped at 20.
+        assert_eq!(plan.entries[0], (0, 40));
+        assert_eq!(plan.entries[1], (1, 40));
+        assert_eq!(plan.entries[2], (2, 20));
+        assert_eq!(plan.tokens, 100);
+        assert_eq!(b.queue_depth(), 1);
+        assert_eq!(b.active_count(), 3);
+    }
+
+    #[test]
+    fn long_request_is_chunked_across_iterations() {
+        let mut b = batcher(256, 32, 16);
+        b.enqueue(req(0, 0.0, 100, 1.0));
+        let mut iterations = 0;
+        let mut finished = Vec::new();
+        while let Some(plan) = b.next_batch() {
+            assert!(plan.tokens <= 32);
+            finished.extend(b.complete(&plan));
+            iterations += 1;
+            assert!(iterations < 10, "must terminate");
+        }
+        // ceil(100 / 32) = 4 iterations to drain.
+        assert_eq!(iterations, 4);
+        assert_eq!(finished.len(), 1);
+        assert_eq!(finished[0].id, 0);
+        assert!(b.is_idle());
+    }
+
+    #[test]
+    fn continuous_admission_joins_running_batch() {
+        let mut b = batcher(64, 32, 16);
+        b.enqueue(req(0, 0.0, 64, 1.0));
+        let p1 = b.next_batch().unwrap();
+        assert_eq!(p1.entries.len(), 1);
+        b.complete(&p1);
+        // A new request arrives mid-flight; next batch serves both.
+        b.enqueue(req(1, 0.1, 16, 1.0));
+        let p2 = b.next_batch().unwrap();
+        let ids: Vec<u64> = p2.entries.iter().map(|e| e.0).collect();
+        assert_eq!(ids, vec![0, 1], "in-flight first, then fresh admission");
+    }
+
+    #[test]
+    fn expired_queued_requests_are_shed() {
+        let mut b = batcher(64, 32, 16);
+        b.enqueue(req(0, 0.0, 16, 0.05)); // deadline 0.05
+        b.enqueue(req(1, 0.0, 16, 1.0));
+        let dropped = b.expire(0.1);
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].id, 0);
+        assert_eq!(b.stats.expired, 1);
+        let plan = b.next_batch().unwrap();
+        assert_eq!(plan.entries[0].0, 1);
+    }
+
+    #[test]
+    fn admitted_requests_run_to_completion_past_deadline() {
+        // Deadlines shed queued work only; in-flight requests finish
+        // (and get counted as SLO violations by the tracker instead).
+        let mut b = batcher(64, 32, 16);
+        b.enqueue(req(0, 0.0, 64, 0.01));
+        let p1 = b.next_batch().unwrap();
+        b.complete(&p1);
+        let p2 = b.next_batch().unwrap(); // way past the deadline
+        assert_eq!(p2.entries[0].0, 0);
+        let finished = b.complete(&p2);
+        assert_eq!(finished.len(), 1);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overload() {
+        let mut b = batcher(64, 32, 2);
+        assert!(b.enqueue(req(0, 0.0, 8, 1.0)));
+        assert!(b.enqueue(req(1, 0.0, 8, 1.0)));
+        assert!(!b.enqueue(req(2, 0.0, 8, 1.0)));
+        assert_eq!(b.stats.rejected, 1);
+        assert_eq!(b.queue_depth(), 2);
+    }
+
+    #[test]
+    fn zero_token_request_retires_without_blocking() {
+        // A malformed/empty request (e.g. from a hand-written trace)
+        // must not camp on the queue head starving later arrivals.
+        let mut b = batcher(64, 32, 16);
+        b.enqueue(req(0, 0.0, 0, 1.0));
+        b.enqueue(req(1, 0.0, 16, 1.0));
+        let plan = b.next_batch().unwrap();
+        assert_eq!(plan.entries, vec![(0, 0), (1, 16)]);
+        let finished = b.complete(&plan);
+        assert_eq!(finished.len(), 2, "zero-token request retires immediately");
+        assert!(b.is_idle());
+    }
+
+    #[test]
+    fn degenerate_config_is_clamped() {
+        let b = ContinuousBatcher::new(SchedulerConfig {
+            max_batch_tokens: 0,
+            chunk_tokens: 0,
+            max_queue: 4,
+        });
+        assert_eq!(b.cfg.chunk_tokens, 1);
+        assert_eq!(b.cfg.max_batch_tokens, 1);
+    }
+
+    #[test]
+    fn empty_batcher_yields_no_batch() {
+        let mut b = batcher(64, 32, 4);
+        assert!(b.next_batch().is_none());
+        assert!(b.is_idle());
+        assert_eq!(b.in_flight_tokens(), 0);
+    }
+}

@@ -1,0 +1,294 @@
+//! SLO accounting: request latencies, goodput, shed rates, queue depth,
+//! and the per-phase time breakdown.
+//!
+//! The tracker is fed three streams by the engine — request outcomes
+//! (completion / shed), queue-depth samples at each iteration, and the
+//! per-batch [`StepReport`]s the training pipeline already emits — and
+//! folds the last into the coordinator's [`MetricsAgg`], so a serving
+//! run produces the same phase breakdown tables as a training run plus
+//! the latency distribution on top.
+
+use crate::coordinator::metrics::{Breakdown, MetricsAgg};
+use crate::moe::StepReport;
+use crate::serve::workload::Request;
+use crate::util::json::Json;
+use crate::util::stats::Quantiles;
+
+/// A completed request with its observed completion time.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub arrival: f64,
+    pub finish: f64,
+    pub tokens: usize,
+    pub deadline: f64,
+}
+
+impl RequestOutcome {
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+
+    pub fn on_time(&self) -> bool {
+        self.finish <= self.deadline
+    }
+}
+
+/// Collects everything the final [`SloReport`] needs.
+#[derive(Default)]
+pub struct SloTracker {
+    completed: Vec<RequestOutcome>,
+    dropped: usize,
+    rejected: usize,
+    queue_depths: Vec<f64>,
+    metrics: MetricsAgg,
+}
+
+impl SloTracker {
+    pub fn new() -> SloTracker {
+        SloTracker::default()
+    }
+
+    /// Record a request finishing at `finish` (possibly past deadline).
+    pub fn complete(&mut self, req: &Request, finish: f64) {
+        self.completed.push(RequestOutcome {
+            id: req.id,
+            arrival: req.arrival,
+            finish,
+            tokens: req.tokens,
+            deadline: req.deadline,
+        });
+    }
+
+    /// Record queued requests shed for missing their deadline.
+    pub fn drop_expired(&mut self, n: usize) {
+        self.dropped += n;
+    }
+
+    /// Record arrivals rejected at admission (bounded queue).
+    pub fn reject(&mut self, n: usize) {
+        self.rejected += n;
+    }
+
+    /// Sample the admission-queue depth (once per engine iteration).
+    pub fn sample_queue_depth(&mut self, depth: usize) {
+        self.queue_depths.push(depth as f64);
+    }
+
+    /// Fold one served batch's phase times into the breakdown.
+    pub fn push_step(&mut self, report: &StepReport) {
+        self.metrics.push(report);
+    }
+
+    pub fn completed_count(&self) -> usize {
+        self.completed.len()
+    }
+
+    /// Produce the final report for a run of `duration` simulated
+    /// seconds.
+    pub fn report(&self, duration: f64) -> SloReport {
+        let latencies: Vec<f64> = self.completed.iter().map(|o| o.latency()).collect();
+        let on_time: Vec<&RequestOutcome> =
+            self.completed.iter().filter(|o| o.on_time()).collect();
+        let offered = self.completed.len() + self.dropped + self.rejected;
+        let dur = duration.max(1e-9);
+        let mean_latency = if latencies.is_empty() {
+            0.0
+        } else {
+            latencies.iter().sum::<f64>() / latencies.len() as f64
+        };
+        let mean_queue = if self.queue_depths.is_empty() {
+            0.0
+        } else {
+            self.queue_depths.iter().sum::<f64>() / self.queue_depths.len() as f64
+        };
+        let max_queue = self.queue_depths.iter().cloned().fold(0.0, f64::max);
+        SloReport {
+            duration,
+            offered,
+            completed: self.completed.len(),
+            dropped: self.dropped,
+            rejected: self.rejected,
+            slo_violations: self.completed.len() - on_time.len(),
+            latency: Quantiles::of(&latencies),
+            mean_latency,
+            goodput_rps: on_time.len() as f64 / dur,
+            goodput_tps: on_time.iter().map(|o| o.tokens as f64).sum::<f64>() / dur,
+            drop_rate: (self.dropped + self.rejected) as f64 / offered.max(1) as f64,
+            mean_queue_depth: mean_queue,
+            max_queue_depth: max_queue,
+            breakdown: self.metrics.breakdown(),
+            batches: self.metrics.steps(),
+        }
+    }
+}
+
+/// End-of-run serving report.
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    /// Simulated seconds the run covered.
+    pub duration: f64,
+    /// Requests that arrived (completed + shed).
+    pub offered: usize,
+    pub completed: usize,
+    /// Queued requests shed for missing their deadline.
+    pub dropped: usize,
+    /// Arrivals rejected by the bounded admission queue.
+    pub rejected: usize,
+    /// Completed requests that finished after their deadline.
+    pub slo_violations: usize,
+    /// Latency distribution over completed requests, seconds.
+    pub latency: Quantiles,
+    pub mean_latency: f64,
+    /// On-time completions per simulated second.
+    pub goodput_rps: f64,
+    /// On-time tokens per simulated second.
+    pub goodput_tps: f64,
+    /// Shed fraction of offered requests (expired + rejected).
+    pub drop_rate: f64,
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: f64,
+    /// Per-phase mean times over served batches (coordinator metrics).
+    pub breakdown: Breakdown,
+    /// Batches served.
+    pub batches: usize,
+}
+
+impl SloReport {
+    /// Print the operator-facing summary tables.
+    pub fn emit(&self) {
+        use crate::benchkit::Table;
+        use crate::util::stats::fmt_duration;
+        let mut t = Table::new(
+            &format!(
+                "Serving SLO report ({:.2} s simulated, {} batches)",
+                self.duration, self.batches
+            ),
+            &["metric", "value"],
+        );
+        t.row(vec!["requests offered".into(), self.offered.to_string()]);
+        t.row(vec!["completed".into(), self.completed.to_string()]);
+        t.row(vec![
+            "dropped (deadline) / rejected (queue)".into(),
+            format!("{} / {}", self.dropped, self.rejected),
+        ]);
+        t.row(vec!["SLO violations (late finishes)".into(), self.slo_violations.to_string()]);
+        t.row(vec!["latency p50".into(), fmt_duration(self.latency.p50)]);
+        t.row(vec!["latency p95".into(), fmt_duration(self.latency.p95)]);
+        t.row(vec!["latency p99".into(), fmt_duration(self.latency.p99)]);
+        t.row(vec!["mean latency".into(), fmt_duration(self.mean_latency)]);
+        t.row(vec![
+            "goodput".into(),
+            format!("{:.0} req/s, {:.0} tok/s", self.goodput_rps, self.goodput_tps),
+        ]);
+        t.row(vec!["drop rate".into(), format!("{:.3}", self.drop_rate)]);
+        t.row(vec![
+            "queue depth mean / max".into(),
+            format!("{:.1} / {:.0}", self.mean_queue_depth, self.max_queue_depth),
+        ]);
+        t.emit(None);
+        if !self.breakdown.phases.is_empty() {
+            let mut b = Table::new(
+                "Per-batch phase breakdown (simulated means)",
+                &["phase", "mean/batch", "fraction"],
+            );
+            for (name, secs) in &self.breakdown.phases {
+                b.row(vec![
+                    name.clone(),
+                    fmt_duration(*secs),
+                    format!("{:.1}%", 100.0 * secs / self.breakdown.total.max(1e-12)),
+                ]);
+            }
+            b.emit(None);
+        }
+    }
+
+    /// JSON export for tooling and EXPERIMENTS appendices.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("duration", Json::num(self.duration)),
+            ("offered", Json::num(self.offered as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("slo_violations", Json::num(self.slo_violations as f64)),
+            ("latency_p50", Json::num(self.latency.p50)),
+            ("latency_p95", Json::num(self.latency.p95)),
+            ("latency_p99", Json::num(self.latency.p99)),
+            ("mean_latency", Json::num(self.mean_latency)),
+            ("goodput_rps", Json::num(self.goodput_rps)),
+            ("goodput_tps", Json::num(self.goodput_tps)),
+            ("drop_rate", Json::num(self.drop_rate)),
+            ("mean_queue_depth", Json::num(self.mean_queue_depth)),
+            ("max_queue_depth", Json::num(self.max_queue_depth)),
+            ("breakdown", self.breakdown.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64, tokens: usize, deadline: f64) -> Request {
+        Request { id, arrival, tokens, deadline }
+    }
+
+    fn step(gate: f64, comm: f64) -> StepReport {
+        StepReport {
+            wall: vec![("gate".into(), gate), ("expert".into(), 0.5)],
+            comm: vec![("alltoall_dispatch".into(), comm)],
+            drop_rate: 0.0,
+            padding_waste: 0.0,
+            expert_counts: vec![],
+            aux_loss: 0.0,
+        }
+    }
+
+    #[test]
+    fn report_counts_and_goodput() {
+        let mut t = SloTracker::new();
+        // Two on-time completions, one late, one shed, one rejected.
+        t.complete(&req(0, 0.0, 10, 1.0), 0.5);
+        t.complete(&req(1, 0.0, 20, 1.0), 0.9);
+        t.complete(&req(2, 0.0, 30, 0.2), 0.8); // late
+        t.drop_expired(1);
+        t.reject(1);
+        t.sample_queue_depth(2);
+        t.sample_queue_depth(4);
+        let r = t.report(2.0);
+        assert_eq!(r.offered, 5);
+        assert_eq!(r.completed, 3);
+        assert_eq!(r.slo_violations, 1);
+        assert!((r.goodput_rps - 1.0).abs() < 1e-12); // 2 on-time / 2 s
+        assert!((r.goodput_tps - 15.0).abs() < 1e-12); // (10+20) / 2 s
+        assert!((r.drop_rate - 0.4).abs() < 1e-12); // 2 of 5 shed
+        assert!((r.mean_queue_depth - 3.0).abs() < 1e-12);
+        assert_eq!(r.max_queue_depth, 4.0);
+        // p50 over latencies {0.5, 0.9, 0.8}.
+        assert!((r.latency.p50 - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_integrates_with_coordinator_metrics() {
+        let mut t = SloTracker::new();
+        t.push_step(&step(0.2, 0.4));
+        t.push_step(&step(0.4, 0.6));
+        let r = t.report(1.0);
+        assert_eq!(r.batches, 2);
+        let gate = r.breakdown.phases.iter().find(|(n, _)| n == "gate").unwrap().1;
+        assert!((gate - 0.3).abs() < 1e-12);
+        assert!(r.breakdown.fraction_of(&["alltoall"]) > 0.0);
+    }
+
+    #[test]
+    fn empty_tracker_reports_zeros() {
+        let r = SloTracker::new().report(1.0);
+        assert_eq!(r.offered, 0);
+        assert_eq!(r.latency, Quantiles::default());
+        assert_eq!(r.goodput_rps, 0.0);
+        assert_eq!(r.drop_rate, 0.0);
+        let j = r.to_json();
+        assert_eq!(j.f64_field("completed").unwrap(), 0.0);
+    }
+}

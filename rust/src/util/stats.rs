@@ -53,21 +53,30 @@ impl Welford {
     }
 }
 
-/// Percentile over a sample (linear interpolation, like numpy's default).
-/// `q` in `[0, 100]`. Sorts a copy; fine for bench-sized samples.
+/// Percentile of an **already-sorted** sample (linear interpolation,
+/// like numpy's default). `q` in `[0, 100]`. The single definition
+/// behind [`percentile`], [`Quantiles`] and [`Summary`].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Percentile over an unsorted sample. Sorts a copy; fine for
+/// bench-sized samples (callers taking several quantiles should sort
+/// once and use [`percentile_sorted`]).
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     assert!(!samples.is_empty());
     let mut v = samples.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = q / 100.0 * (v.len() - 1) as f64;
-    let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
-    if lo == hi {
-        v[lo]
-    } else {
-        let w = rank - lo as f64;
-        v[lo] * (1.0 - w) + v[hi] * w
-    }
+    percentile_sorted(&v, q)
 }
 
 /// Median absolute deviation (robust spread), scaled for normal consistency.
@@ -96,15 +105,45 @@ impl Summary {
         for &x in samples {
             w.push(x);
         }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Summary {
             n: samples.len(),
             mean: w.mean(),
             std: w.std(),
             min: w.min(),
-            p50: percentile(samples, 50.0),
-            p90: percentile(samples, 90.0),
-            p99: percentile(samples, 99.0),
+            p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
+            p99: percentile_sorted(&sorted, 99.0),
             max: w.max(),
+        }
+    }
+}
+
+/// Tail-latency quantiles of a sample (the serving SLO set). One sort,
+/// shared by the SLO engine, the serving bench and the CLI so every
+/// surface reports identical numbers for identical samples.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Quantiles {
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Quantiles {
+    /// Quantiles of `samples`; all-zero when the sample is empty.
+    pub fn of(samples: &[f64]) -> Quantiles {
+        if samples.is_empty() {
+            return Quantiles::default();
+        }
+        let mut v = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Quantiles {
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p95: percentile_sorted(&v, 95.0),
+            p99: percentile_sorted(&v, 99.0),
         }
     }
 }
@@ -211,6 +250,19 @@ mod tests {
         assert_eq!(s.n, 100);
         assert!((s.mean - 50.5).abs() < 1e-9);
         assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn quantiles_match_percentile_and_order() {
+        let xs: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        let q = Quantiles::of(&xs);
+        assert_eq!(q.p50, percentile(&xs, 50.0));
+        assert_eq!(q.p95, percentile(&xs, 95.0));
+        assert!(q.p50 <= q.p90 && q.p90 <= q.p95 && q.p95 <= q.p99);
+        assert_eq!(Quantiles::of(&[]), Quantiles::default());
+        let one = Quantiles::of(&[7.5]);
+        assert_eq!(one.p50, 7.5);
+        assert_eq!(one.p99, 7.5);
     }
 
     #[test]

@@ -4,17 +4,11 @@
 //! `make test`, which guarantees it); they are skipped gracefully when
 //! artifacts are absent so `cargo test` works on a fresh checkout too.
 
-use hetumoe::config::{ClusterConfig, GateKind, MoeConfig, TrainConfig};
+use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
 use hetumoe::coordinator::Coordinator;
 use hetumoe::moe::{CommImpl, GateImpl, LayoutImpl, MoeLayerOptions};
-use hetumoe::runtime::RuntimeClient;
 use hetumoe::tensor::Tensor;
-use hetumoe::train::Trainer;
 use hetumoe::util::rng::Rng;
-
-fn artifacts_available() -> bool {
-    std::path::Path::new("artifacts/meta.json").exists()
-}
 
 #[test]
 fn full_pipeline_all_systems_agree_numerically() {
@@ -107,124 +101,136 @@ fn hierarchical_option_equals_flat_option_outputs() {
     }
 }
 
-// ---- artifact-backed (require `make artifacts`) ----
+// ---- artifact-backed (require `make artifacts` + `--features pjrt`) ----
 
-#[test]
-fn runtime_loads_and_runs_gate_scores_artifact() {
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
-    let mut rt = RuntimeClient::cpu("artifacts").unwrap();
-    let gate = rt.runner("gate_scores").unwrap();
-    let t = gate.meta.inputs[0][0];
-    let d = gate.meta.inputs[0][1];
-    let e = gate.meta.attr_usize("num_experts").unwrap();
-    let mut rng = Rng::seed(2);
-    let x = Tensor::randn(&[t, d], &mut rng);
-    let gw = Tensor::randn(&[d, e], &mut rng);
-    let outs = gate.run(&[x.clone(), gw.clone()]).unwrap();
-    assert_eq!(outs.len(), 3);
-    assert_eq!(outs[0].shape(), &[t, e]);
-    // The artifact's Pallas top-1 matches the native top-1.
-    let native_scores = hetumoe::nn::matmul(&x, &gw);
-    assert!(outs[0].allclose(&native_scores, 1e-3));
-    let (ids, _) = hetumoe::gating::topk::topk_rows(&native_scores, 1, 1);
-    for i in 0..t {
-        assert_eq!(ids[i], outs[1].data()[i] as u32, "token {i}");
-    }
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_backed {
+    use super::*;
+    use hetumoe::config::TrainConfig;
+    use hetumoe::runtime::RuntimeClient;
+    use hetumoe::train::Trainer;
 
-#[test]
-fn runtime_shape_validation_errors() {
-    if !artifacts_available() {
-        return;
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/meta.json").exists()
     }
-    let mut rt = RuntimeClient::cpu("artifacts").unwrap();
-    let gate = rt.runner("gate_scores").unwrap();
-    // Wrong arity.
-    assert!(gate.run(&[Tensor::zeros(&[1, 1])]).is_err());
-    // Wrong shape.
-    let bad = vec![Tensor::zeros(&[3, 3]), Tensor::zeros(&[3, 3])];
-    assert!(gate.run(&bad).is_err());
-    // Unknown artifact.
-    assert!(rt.runner("not_an_artifact").is_err());
-}
 
-#[test]
-fn tiny_trainer_reduces_loss_through_pjrt() {
-    if !artifacts_available() {
-        return;
+    #[test]
+    fn runtime_loads_and_runs_gate_scores_artifact() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = RuntimeClient::cpu("artifacts").unwrap();
+        let gate = rt.runner("gate_scores").unwrap();
+        let t = gate.meta.inputs[0][0];
+        let d = gate.meta.inputs[0][1];
+        let e = gate.meta.attr_usize("num_experts").unwrap();
+        let mut rng = Rng::seed(2);
+        let x = Tensor::randn(&[t, d], &mut rng);
+        let gw = Tensor::randn(&[d, e], &mut rng);
+        let outs = gate.run(&[x.clone(), gw.clone()]).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0].shape(), &[t, e]);
+        // The artifact's Pallas top-1 matches the native top-1.
+        let native_scores = hetumoe::nn::matmul(&x, &gw);
+        assert!(outs[0].allclose(&native_scores, 1e-3));
+        let (ids, _) = hetumoe::gating::topk::topk_rows(&native_scores, 1, 1);
+        for i in 0..t {
+            assert_eq!(ids[i], outs[1].data()[i] as u32, "token {i}");
+        }
     }
-    let cfg = TrainConfig {
-        steps: 15,
-        model: "tiny".into(),
-        log_every: 100,
-        ..TrainConfig::default_run()
-    };
-    let mut trainer = Trainer::new(cfg).unwrap();
-    assert!(trainer.num_params() > 50_000);
-    let logs = trainer.run().unwrap();
-    assert_eq!(logs.len(), 15);
-    let first = logs.first().unwrap().loss;
-    let last = logs.last().unwrap().loss;
-    assert!(
-        last < first,
-        "loss must decrease through the artifact path: {first} → {last}"
-    );
-}
 
-#[test]
-fn checkpoint_roundtrip_restores_exact_state() {
-    if !artifacts_available() {
-        return;
+    #[test]
+    fn runtime_shape_validation_errors() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut rt = RuntimeClient::cpu("artifacts").unwrap();
+        let gate = rt.runner("gate_scores").unwrap();
+        // Wrong arity.
+        assert!(gate.run(&[Tensor::zeros(&[1, 1])]).is_err());
+        // Wrong shape.
+        let bad = vec![Tensor::zeros(&[3, 3]), Tensor::zeros(&[3, 3])];
+        assert!(gate.run(&bad).is_err());
+        // Unknown artifact.
+        assert!(rt.runner("not_an_artifact").is_err());
     }
-    let cfg = TrainConfig {
-        steps: 3,
-        model: "tiny".into(),
-        log_every: 100,
-        ..TrainConfig::default_run()
-    };
-    let mut trainer = Trainer::new(cfg).unwrap();
-    trainer.run().unwrap();
-    let ckpt = std::env::temp_dir().join("hetu_test_ckpt.bin");
-    trainer.save_checkpoint(&ckpt).unwrap();
-    // Deterministic batch for the comparison step.
-    let n = trainer.cfg.batch_size * trainer.cfg.seq_len;
-    let x: Vec<u32> = (0..n as u32).map(|i| i % 100).collect();
-    let y: Vec<u32> = (0..n as u32).map(|i| (i + 1) % 100).collect();
-    let loss_a = trainer.train_step(&x, &y).unwrap();
-    trainer.load_checkpoint(&ckpt).unwrap();
-    let loss_b = trainer.train_step(&x, &y).unwrap();
-    assert!((loss_a - loss_b).abs() < 1e-6, "{loss_a} vs {loss_b}");
-    // Wrong-model checkpoints are rejected.
-    let mut other = Trainer::new(TrainConfig {
-        steps: 1,
-        model: "tiny".into(),
-        log_every: 100,
-        ..TrainConfig::default_run()
-    })
-    .unwrap();
-    other.cfg.model = "different".into();
-    assert!(other.load_checkpoint(&ckpt).is_err());
-    std::fs::remove_file(&ckpt).ok();
-}
 
-#[test]
-fn top1_pallas_artifact_matches_rust_kernel() {
-    if !artifacts_available() {
-        return;
+    #[test]
+    fn tiny_trainer_reduces_loss_through_pjrt() {
+        if !artifacts_available() {
+            return;
+        }
+        let cfg = TrainConfig {
+            steps: 15,
+            model: "tiny".into(),
+            log_every: 100,
+            ..TrainConfig::default_run()
+        };
+        let mut trainer = Trainer::new(cfg).unwrap();
+        assert!(trainer.num_params() > 50_000);
+        let logs = trainer.run().unwrap();
+        assert_eq!(logs.len(), 15);
+        let first = logs.first().unwrap().loss;
+        let last = logs.last().unwrap().loss;
+        assert!(
+            last < first,
+            "loss must decrease through the artifact path: {first} → {last}"
+        );
     }
-    let mut rt = RuntimeClient::cpu("artifacts").unwrap();
-    let k = rt.runner("top1_pallas").unwrap();
-    let t = k.meta.inputs[0][0];
-    let e = k.meta.inputs[0][1];
-    let mut rng = Rng::seed(3);
-    let scores = Tensor::randn(&[t, e], &mut rng);
-    let outs = k.run(&[scores.clone()]).unwrap();
-    let (ids, vals) = hetumoe::gating::topk::topk_rows(&scores, 1, 1);
-    for i in 0..t {
-        assert_eq!(outs[1].data()[i] as u32, ids[i], "idx {i}");
-        assert!((outs[0].data()[i] - vals[i]).abs() < 1e-5);
+
+    #[test]
+    fn checkpoint_roundtrip_restores_exact_state() {
+        if !artifacts_available() {
+            return;
+        }
+        let cfg = TrainConfig {
+            steps: 3,
+            model: "tiny".into(),
+            log_every: 100,
+            ..TrainConfig::default_run()
+        };
+        let mut trainer = Trainer::new(cfg).unwrap();
+        trainer.run().unwrap();
+        let ckpt = std::env::temp_dir().join("hetu_test_ckpt.bin");
+        trainer.save_checkpoint(&ckpt).unwrap();
+        // Deterministic batch for the comparison step.
+        let n = trainer.cfg.batch_size * trainer.cfg.seq_len;
+        let x: Vec<u32> = (0..n as u32).map(|i| i % 100).collect();
+        let y: Vec<u32> = (0..n as u32).map(|i| (i + 1) % 100).collect();
+        let loss_a = trainer.train_step(&x, &y).unwrap();
+        trainer.load_checkpoint(&ckpt).unwrap();
+        let loss_b = trainer.train_step(&x, &y).unwrap();
+        assert!((loss_a - loss_b).abs() < 1e-6, "{loss_a} vs {loss_b}");
+        // Wrong-model checkpoints are rejected.
+        let mut other = Trainer::new(TrainConfig {
+            steps: 1,
+            model: "tiny".into(),
+            log_every: 100,
+            ..TrainConfig::default_run()
+        })
+        .unwrap();
+        other.cfg.model = "different".into();
+        assert!(other.load_checkpoint(&ckpt).is_err());
+        std::fs::remove_file(&ckpt).ok();
+    }
+
+    #[test]
+    fn top1_pallas_artifact_matches_rust_kernel() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut rt = RuntimeClient::cpu("artifacts").unwrap();
+        let k = rt.runner("top1_pallas").unwrap();
+        let t = k.meta.inputs[0][0];
+        let e = k.meta.inputs[0][1];
+        let mut rng = Rng::seed(3);
+        let scores = Tensor::randn(&[t, e], &mut rng);
+        let outs = k.run(&[scores.clone()]).unwrap();
+        let (ids, vals) = hetumoe::gating::topk::topk_rows(&scores, 1, 1);
+        for i in 0..t {
+            assert_eq!(outs[1].data()[i] as u32, ids[i], "idx {i}");
+            assert!((outs[0].data()[i] - vals[i]).abs() < 1e-5);
+        }
     }
 }

@@ -1,0 +1,217 @@
+//! Integration tests for the serving subsystem, including the routing
+//! contract against the training pipeline and the comm-equivalence
+//! property the serving router's cost model relies on.
+
+use hetumoe::cluster::NetworkModel;
+use hetumoe::comm::alltoall::{alltoall, alltoallv_timing, flat_alltoall_timing};
+use hetumoe::comm::hierarchical::{
+    hierarchical_alltoall, hierarchical_alltoallv_timing, hierarchical_alltoall_timing,
+};
+use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
+use hetumoe::gating::apply_capacity;
+use hetumoe::moe::{MoeLayer, MoeLayerOptions};
+use hetumoe::serve::{
+    ArrivalProcess, CommChoice, PlacementRouter, ServeConfig, ServeEngine,
+};
+use hetumoe::tensor::Tensor;
+use hetumoe::util::proptest::for_all;
+use hetumoe::util::rng::Rng;
+
+fn cluster(nodes: usize, gpus: usize) -> ClusterConfig {
+    ClusterConfig { nodes, gpus_per_node: gpus, ..ClusterConfig::commodity(nodes) }
+}
+
+/// The acceptance contract: on identical token batches, the serving
+/// router must produce exactly the routing and capacity placement the
+/// training-path `MoeLayer` computes.
+#[test]
+fn serving_routing_agrees_with_training_dispatch() {
+    for gate in [GateKind::Switch, GateKind::GShard, GateKind::TopK { k: 2 }] {
+        let moe = MoeConfig {
+            num_experts: 8,
+            d_model: 16,
+            ffn_hidden: 32,
+            capacity_factor: 1.5,
+            gate: gate.clone(),
+        };
+        let cl = cluster(2, 2);
+        let layer =
+            MoeLayer::native(moe.clone(), cl.clone(), MoeLayerOptions::default(), 11)
+                .unwrap();
+        // Share the training layer's router weight + gate config.
+        let router = PlacementRouter::from_layer(&layer, CommChoice::Auto).unwrap();
+
+        let mut rng = Rng::seed(21);
+        let shard = Tensor::randn(&[24, 16], &mut rng);
+
+        // Training-path routing on the shard.
+        let scores = hetumoe::nn::matmul(&shard, &layer.gate_weight);
+        let expected = layer.gate.route_scores(&scores, 0);
+        let cap = moe.capacity(shard.rows());
+        let expected_plan = apply_capacity(&expected, cap);
+
+        // Serving-path routing on the identical shard.
+        let (routing, plan) = router.route_shard(&shard, 0);
+
+        assert_eq!(routing.expert_ids, expected.expert_ids, "{gate:?}");
+        assert_eq!(routing.weights, expected.weights, "{gate:?}");
+        assert_eq!(plan.dest, expected_plan.dest, "{gate:?}");
+        assert_eq!(plan.kept, expected_plan.kept, "{gate:?}");
+        assert_eq!(plan.capacity, expected_plan.capacity, "{gate:?}");
+    }
+}
+
+/// The batch path must agree with the per-shard path (and therefore
+/// with training) for every full shard of a sharded batch.
+#[test]
+fn batch_routing_decomposes_into_training_shards() {
+    let moe = MoeConfig {
+        num_experts: 8,
+        d_model: 16,
+        ffn_hidden: 32,
+        capacity_factor: 2.0,
+        gate: GateKind::Switch,
+    };
+    let cl = cluster(2, 2);
+    let layer =
+        MoeLayer::native(moe.clone(), cl.clone(), MoeLayerOptions::default(), 5).unwrap();
+    let mut router = PlacementRouter::from_layer(&layer, CommChoice::Auto).unwrap();
+    let mut rng = Rng::seed(31);
+    let batch = Tensor::randn(&[32, 16], &mut rng); // 8 tokens per rank
+    let decision = router.route_batch(&batch, 0);
+    assert_eq!(decision.shards.len(), 4);
+    for (r, (routing, plan)) in decision.shards.iter().enumerate() {
+        let shard = batch.slice_rows(r * 8, (r + 1) * 8);
+        let (exp_routing, exp_plan) = router.route_shard(&shard, 0);
+        assert_eq!(routing.expert_ids, exp_routing.expert_ids, "shard {r}");
+        assert_eq!(plan.dest, exp_plan.dest, "shard {r}");
+    }
+    // Expert counts must match what the training layer reports for the
+    // same shards.
+    let shards: Vec<Tensor> = (0..4).map(|r| batch.slice_rows(r * 8, (r + 1) * 8)).collect();
+    let (_, report) = layer.forward(&shards).unwrap();
+    let demanded: Vec<usize> = report.expert_counts.clone();
+    // The router's counts are post-capacity; every kept count is bounded
+    // by the demanded count and nothing is routed to an expert training
+    // never picked.
+    for (e, (&kept, &demand)) in
+        decision.expert_counts.iter().zip(&demanded).enumerate()
+    {
+        assert!(kept <= demand, "expert {e}: kept {kept} > demanded {demand}");
+        if demand == 0 {
+            assert_eq!(kept, 0, "expert {e} routed without demand");
+        }
+    }
+}
+
+/// Satellite property: hierarchical AllToAll is bit-identical to the
+/// flat permutation across random world sizes and payloads.
+#[test]
+fn hierarchical_matches_flat_bitwise_across_random_worlds() {
+    for_all(24, |g| {
+        let nodes = g.usize_in(1..6);
+        let gpus = g.usize_in(1..6);
+        let chunk = g.usize_in(1..8);
+        let net = NetworkModel::new(cluster(nodes, gpus));
+        let w = nodes * gpus;
+        let mut a: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..w * chunk).map(|_| g.normal()).collect())
+            .collect();
+        let mut b = a.clone();
+        alltoall(&net, &mut a).unwrap();
+        hierarchical_alltoall(&net, &mut b).unwrap();
+        assert_eq!(a, b, "nodes={nodes} gpus={gpus} chunk={chunk}");
+    });
+}
+
+/// The ragged cost models agree with the equal-chunk cost models on
+/// uniform traffic across random worlds (so the serving router's
+/// per-batch scores are consistent with the training-side figures).
+#[test]
+fn ragged_cost_models_reduce_to_uniform_across_random_worlds() {
+    for_all(16, |g| {
+        let nodes = g.usize_in(1..5);
+        let gpus = g.usize_in(1..5);
+        let chunk = g.usize_in(1..512);
+        let net = NetworkModel::new(cluster(nodes, gpus));
+        let w = nodes * gpus;
+        let counts = vec![vec![chunk; w]; w];
+        let flat_v = alltoallv_timing(&net, &counts, 4).total;
+        let flat = flat_alltoall_timing(&net, chunk * 4).total;
+        assert!((flat_v - flat).abs() < 1e-9, "flat {flat} vs ragged {flat_v}");
+        let hier_v = hierarchical_alltoallv_timing(&net, &counts, 4).total;
+        let hier = hierarchical_alltoall_timing(&net, chunk * 4).total;
+        assert!((hier_v - hier).abs() < 1e-9, "hier {hier} vs ragged {hier_v}");
+    });
+}
+
+/// End-to-end serving smoke across gate × comm configurations.
+#[test]
+fn serving_runs_across_gate_and_comm_configs() {
+    for gate in [GateKind::Switch, GateKind::GShard] {
+        for comm in [CommChoice::Flat, CommChoice::Hierarchical, CommChoice::Auto] {
+            let cfg = ServeConfig {
+                moe: MoeConfig {
+                    num_experts: 8,
+                    d_model: 16,
+                    ffn_hidden: 32,
+                    capacity_factor: 1.5,
+                    gate: gate.clone(),
+                },
+                cluster: cluster(2, 2),
+                process: ArrivalProcess::Poisson { rate: 400.0 },
+                comm,
+                duration: 0.25,
+                ..ServeConfig::default_run()
+            };
+            // Ground truth from an identical generator: conservation is
+            // checked against the real arrival count, not the report's
+            // own bookkeeping.
+            let ground_truth = hetumoe::serve::WorkloadGen::new(
+                cfg.process.clone(),
+                cfg.min_tokens,
+                cfg.max_tokens,
+                cfg.slo,
+                cfg.seed,
+            )
+            .generate(cfg.duration)
+            .len();
+            let mut engine = ServeEngine::new(cfg).unwrap();
+            let report = engine.run().unwrap();
+            assert!(report.offered > 0, "{gate:?}/{comm:?}");
+            assert_eq!(
+                report.completed + report.dropped + report.rejected,
+                ground_truth,
+                "{gate:?}/{comm:?}: every generated request must be accounted for"
+            );
+            assert!(report.breakdown.total > 0.0, "{gate:?}/{comm:?}");
+        }
+    }
+}
+
+/// On the NIC-constrained commodity cluster the hierarchical schedule
+/// must outperform flat for serving-sized batches end to end.
+#[test]
+fn hierarchical_beats_flat_under_nic_constrained_load() {
+    let run = |comm: CommChoice| {
+        let cfg = ServeConfig {
+            cluster: ClusterConfig::commodity(2), // 2×8, one NIC per node
+            process: ArrivalProcess::Poisson { rate: 2000.0 },
+            comm,
+            duration: 0.4,
+            seed: 17,
+            ..ServeConfig::default_run()
+        };
+        let mut engine = ServeEngine::new(cfg).unwrap();
+        engine.run().unwrap()
+    };
+    let flat = run(CommChoice::Flat);
+    let hier = run(CommChoice::Hierarchical);
+    assert!(
+        hier.latency.p95 < flat.latency.p95,
+        "hier p95 {} must beat flat p95 {}",
+        hier.latency.p95,
+        flat.latency.p95
+    );
+    assert!(hier.goodput_tps >= flat.goodput_tps);
+}

@@ -1,0 +1,185 @@
+//! API-surface **stub** of the `xla` (PJRT bindings) crate.
+//!
+//! The offline build environment does not vendor the real XLA toolchain,
+//! but the `hetumoe` crate's `pjrt` feature must keep compiling so the
+//! artifact-execution path can be exercised wherever the toolchain *is*
+//! present. This crate declares exactly the types and method signatures
+//! `hetumoe` uses; every entry point that would touch PJRT returns
+//! [`Error::Unavailable`] at runtime. To run real artifacts, point the
+//! `xla` path dependency in `rust/Cargo.toml` at a genuine checkout —
+//! no `hetumoe` source changes are needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub is compiled in; the real PJRT runtime is absent.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT unavailable (the offline `xla` stub is linked; \
+                 point rust/Cargo.toml's `xla` path at a real checkout)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element types transferable to/from device buffers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side literal value (stub: carries no data).
+#[derive(Debug, Default)]
+pub struct Literal {}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal {}
+    }
+
+    /// Reshape to `dims`.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Flatten a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    /// First element of the literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        unavailable("Literal::get_first_element")
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    /// Download the buffer as a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    /// The client that compiled this executable.
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Execute with host literals.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    /// Execute with borrowed device buffers.
+    pub fn execute_b<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    /// Create a CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    /// Upload a host buffer to the device.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("PJRT unavailable"), "{msg}");
+    }
+}
