@@ -4,7 +4,8 @@ use crate::cluster::{GpuModel, NetworkModel};
 use crate::comm::alltoall::flat_alltoall_timing;
 use crate::comm::hierarchical::hierarchical_alltoall_timing;
 use crate::config::{ClusterConfig, GateKind, MoeConfig};
-use crate::moe::{CommImpl, GateImpl, LayoutImpl, MoeLayerOptions};
+use crate::comm::schedule::CommChoice;
+use crate::moe::{CommImpl, DispatchMode, GateImpl, LayoutImpl, MoeLayerOptions};
 
 /// Which system a profile models.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -120,11 +121,21 @@ impl SystemProfile {
     }
 
     /// Options tuple for running this system on the real pipeline.
+    ///
+    /// All four 2022-era systems ran the padded `[E, cap, d]` dispatch,
+    /// so profiles pin [`DispatchMode::Padded`] (and force the ragged
+    /// path's schedule to the profile's AllToAll flavor for callers that
+    /// flip `dispatch` afterwards, e.g. `layer-bench --dispatch ragged`).
     pub fn options(&self, threads: usize) -> MoeLayerOptions {
         MoeLayerOptions {
             gate_impl: self.gate_impl,
             layout_impl: self.layout_impl,
             comm_impl: self.comm_impl,
+            dispatch: DispatchMode::Padded,
+            alltoall: match self.comm_impl {
+                CommImpl::Flat => CommChoice::Flat,
+                CommImpl::Hierarchical => CommChoice::Hierarchical,
+            },
             threads,
         }
     }
@@ -382,5 +393,11 @@ mod tests {
         assert_eq!(o.threads, 2);
         let h = SystemProfile::of(SystemKind::HetuMoE).options(1);
         assert_eq!(h.comm_impl, CommImpl::Hierarchical);
+        // All 2022-era profiles model the padded pipeline, with the
+        // ragged-mode schedule pinned to the profile's flavor.
+        assert_eq!(o.dispatch, DispatchMode::Padded);
+        assert_eq!(o.alltoall, CommChoice::Flat);
+        assert_eq!(h.dispatch, DispatchMode::Padded);
+        assert_eq!(h.alltoall, CommChoice::Hierarchical);
     }
 }

@@ -16,11 +16,15 @@ pub mod allgather;
 pub mod allreduce;
 pub mod alltoall;
 pub mod hierarchical;
+pub mod ragged;
+pub mod schedule;
 
 pub use allgather::{allgather, reduce_scatter};
 pub use allreduce::allreduce;
 pub use alltoall::{alltoall, alltoallv};
 pub use hierarchical::hierarchical_alltoall;
+pub use ragged::{ragged_combine, ragged_dispatch};
+pub use schedule::{pick_schedule, CommChoice, Schedule, SchedulePick};
 
 /// Simulated timing of one collective, with a per-phase breakdown.
 #[derive(Clone, Debug, Default)]

@@ -1,0 +1,360 @@
+//! Ragged (padding-free) token exchange for the MoE dispatch/combine.
+//!
+//! The padded pipeline ships full `[E, cap, d]` buffers — zeros and all —
+//! through both AllToAll legs. The ragged exchange moves **exactly** the
+//! occupied rows: every rank sends, per (destination rank, expert), only
+//! the tokens the capacity rule actually kept, described by the
+//! per-(rank, expert) `kept` matrix from the [`DispatchPlan`]s.
+//!
+//! Receive layout is **expert-major**: at destination rank `r`, rows for
+//! local expert 0 (from every source rank, in rank order) come first,
+//! then local expert 1, … — so each expert's batch is one contiguous
+//! `[n_e, d]` block and the grouped expert GEMM needs no per-source
+//! gather (this is the receive-side layout fold MegaBlocks-style ragged
+//! dispatch performs; a real implementation receives into strided
+//! offsets). [`ragged_combine`] is the exact inverse permutation, with
+//! its timing charged on the transposed rank matrix.
+//!
+//! Timing is charged through the same cost models the serving router
+//! uses ([`alltoallv_timing`] / [`hierarchical_alltoallv_timing`]), so
+//! training and serving score traffic identically.
+//!
+//! [`DispatchPlan`]: crate::gating::DispatchPlan
+//! [`alltoallv_timing`]: crate::comm::alltoall::alltoallv_timing
+//! [`hierarchical_alltoallv_timing`]: crate::comm::hierarchical::hierarchical_alltoallv_timing
+
+use crate::cluster::NetworkModel;
+use crate::comm::alltoall::alltoallv_timing;
+use crate::comm::hierarchical::hierarchical_alltoallv_timing;
+use crate::comm::schedule::{transpose_counts, Schedule};
+use crate::comm::CommTiming;
+use crate::error::Result;
+
+/// Collapse a per-(rank, expert) kept matrix `kept[src][global_expert]`
+/// into the rank-level traffic matrix `counts[src][dst]` (experts are
+/// partitioned contiguously, `experts_per_rank` per rank).
+pub fn rank_counts(kept: &[Vec<usize>], experts_per_rank: usize) -> Vec<Vec<usize>> {
+    let w = kept.len();
+    let mut counts = vec![vec![0usize; w]; w];
+    for (s, row) in kept.iter().enumerate() {
+        for (e, &c) in row.iter().enumerate() {
+            counts[s][e / experts_per_rank] += c;
+        }
+    }
+    counts
+}
+
+/// Bytes that actually cross a rank boundary for one exchange leg
+/// (self-traffic stays local and is excluded).
+pub fn offwire_bytes(counts: &[Vec<usize>], elem_bytes: usize) -> usize {
+    let mut total = 0usize;
+    for (s, row) in counts.iter().enumerate() {
+        for (d, &c) in row.iter().enumerate() {
+            if s != d {
+                total += c * elem_bytes;
+            }
+        }
+    }
+    total
+}
+
+fn validate(
+    net: &NetworkModel,
+    buffers: &[Vec<f32>],
+    kept: &[Vec<usize>],
+) -> Result<(usize, usize)> {
+    let w = buffers.len();
+    if w != net.cfg.world() {
+        return Err(crate::comm_err!(
+            "ragged exchange over {w} buffers but cluster world is {}",
+            net.cfg.world()
+        ));
+    }
+    if kept.len() != w {
+        return Err(crate::comm_err!("kept matrix must have {w} rows"));
+    }
+    let e = kept[0].len();
+    if e == 0 || e % w != 0 || kept.iter().any(|row| row.len() != e) {
+        return Err(crate::comm_err!(
+            "kept rows must all list the same expert count divisible by {w}"
+        ));
+    }
+    Ok((e, e / w))
+}
+
+fn timing_for(
+    net: &NetworkModel,
+    counts: &[Vec<usize>],
+    elem_bytes: usize,
+    schedule: Schedule,
+) -> CommTiming {
+    match schedule {
+        Schedule::Flat => alltoallv_timing(net, counts, elem_bytes),
+        Schedule::Hierarchical => hierarchical_alltoallv_timing(net, counts, elem_bytes),
+    }
+}
+
+/// Dispatch leg: `buffers[s]` holds rank `s`'s ragged layout buffer —
+/// `kept[s][e]` rows of width `d` per global expert `e`, expert-major.
+/// On return `buffers[r]` holds, for each of rank `r`'s local experts in
+/// order, that expert's rows from every source rank (rank order) — each
+/// expert's batch contiguous. Returns the simulated timing of the leg
+/// under `schedule`.
+pub fn ragged_dispatch(
+    net: &NetworkModel,
+    buffers: &mut [Vec<f32>],
+    kept: &[Vec<usize>],
+    d: usize,
+    schedule: Schedule,
+) -> Result<CommTiming> {
+    let (e, epr) = validate(net, buffers, kept)?;
+    let w = buffers.len();
+    for (s, buf) in buffers.iter().enumerate() {
+        let expect: usize = kept[s].iter().sum::<usize>() * d;
+        if buf.len() != expect {
+            return Err(crate::comm_err!(
+                "rank {s}: ragged buffer has {} elements, kept counts say {expect}",
+                buf.len()
+            ));
+        }
+    }
+
+    // Source-side offsets (rows) of each expert block.
+    let offs: Vec<Vec<usize>> = kept
+        .iter()
+        .map(|row| {
+            let mut off = vec![0usize; e + 1];
+            for (i, &c) in row.iter().enumerate() {
+                off[i + 1] = off[i] + c;
+            }
+            off
+        })
+        .collect();
+
+    // ---- data movement: expert-major receive layout ----
+    let mut out: Vec<Vec<f32>> = (0..w)
+        .map(|r| {
+            let total: usize = (0..epr)
+                .map(|le| kept.iter().map(|row| row[r * epr + le]).sum::<usize>())
+                .sum();
+            Vec::with_capacity(total * d)
+        })
+        .collect();
+    for (r, out_r) in out.iter_mut().enumerate() {
+        for le in 0..epr {
+            let ge = r * epr + le;
+            for s in 0..w {
+                let lo = offs[s][ge] * d;
+                let hi = offs[s][ge + 1] * d;
+                out_r.extend_from_slice(&buffers[s][lo..hi]);
+            }
+        }
+    }
+    for (b, o) in buffers.iter_mut().zip(out) {
+        *b = o;
+    }
+
+    let counts = rank_counts(kept, epr);
+    Ok(timing_for(net, &counts, d * 4, schedule))
+}
+
+/// Combine leg: the exact inverse of [`ragged_dispatch`]. `buffers[r]`
+/// holds rank `r`'s expert outputs in the expert-major receive layout;
+/// on return `buffers[s]` is back in rank `s`'s ragged layout order.
+/// Timing is charged on the **transposed** rank matrix (every flow
+/// reverses).
+pub fn ragged_combine(
+    net: &NetworkModel,
+    buffers: &mut [Vec<f32>],
+    kept: &[Vec<usize>],
+    d: usize,
+    schedule: Schedule,
+) -> Result<CommTiming> {
+    let (e, epr) = validate(net, buffers, kept)?;
+    let w = buffers.len();
+    // Offsets (rows) of block (local expert, source) inside each owner
+    // rank's expert-major buffer.
+    let mut block_off: Vec<Vec<usize>> = Vec::with_capacity(w);
+    for r in 0..w {
+        let mut off = vec![0usize; epr * w + 1];
+        for le in 0..epr {
+            for s in 0..w {
+                let i = le * w + s;
+                off[i + 1] = off[i] + kept[s][r * epr + le];
+            }
+        }
+        block_off.push(off);
+    }
+    for (r, buf) in buffers.iter().enumerate() {
+        let expect = block_off[r][epr * w] * d;
+        if buf.len() != expect {
+            return Err(crate::comm_err!(
+                "rank {r}: expert-major buffer has {} elements, kept counts say {expect}",
+                buf.len()
+            ));
+        }
+    }
+
+    // ---- data movement: back to source ragged order ----
+    let mut out: Vec<Vec<f32>> = (0..w)
+        .map(|s| {
+            let total: usize = kept[s].iter().sum();
+            Vec::with_capacity(total * d)
+        })
+        .collect();
+    for (s, out_s) in out.iter_mut().enumerate() {
+        for ge in 0..e {
+            let r = ge / epr;
+            let le = ge % epr;
+            let lo = block_off[r][le * w + s] * d;
+            let hi = block_off[r][le * w + s + 1] * d;
+            out_s.extend_from_slice(&buffers[r][lo..hi]);
+        }
+    }
+    for (b, o) in buffers.iter_mut().zip(out) {
+        *b = o;
+    }
+
+    let counts_t = transpose_counts(&rank_counts(kept, epr));
+    Ok(timing_for(net, &counts_t, d * 4, schedule))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::util::proptest::for_all;
+
+    fn net(nodes: usize, gpus: usize) -> NetworkModel {
+        let mut cfg = ClusterConfig::commodity(nodes);
+        cfg.gpus_per_node = gpus;
+        NetworkModel::new(cfg)
+    }
+
+    /// Buffers where row values encode (source, expert, position) so the
+    /// permutation is fully checkable.
+    fn tagged(kept: &[Vec<usize>], d: usize) -> Vec<Vec<f32>> {
+        kept.iter()
+            .enumerate()
+            .map(|(s, row)| {
+                let mut v = Vec::new();
+                for (e, &c) in row.iter().enumerate() {
+                    for p in 0..c {
+                        let tag = (s * 1_000_000 + e * 1_000 + p) as f32;
+                        for _ in 0..d {
+                            v.push(tag);
+                        }
+                    }
+                }
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dispatch_groups_rows_expert_major() {
+        let m = net(1, 2);
+        // 4 experts over 2 ranks (2 per rank).
+        let kept = vec![vec![2usize, 0, 1, 1], vec![1, 1, 0, 2]];
+        let d = 3;
+        let mut bufs = tagged(&kept, d);
+        ragged_dispatch(&m, &mut bufs, &kept, d, Schedule::Flat).unwrap();
+        // Rank 0 receives expert 0 then expert 1, each source-ordered.
+        let tags0: Vec<f32> = bufs[0].iter().step_by(d).copied().collect();
+        assert_eq!(
+            tags0,
+            vec![0.0, 1.0, 1_000_000.0, 1_001_000.0],
+            "e0: s0p0, s0p1, s1p0; e1: s1p0"
+        );
+        // Rank 1 receives expert 2 then expert 3.
+        let tags1: Vec<f32> = bufs[1].iter().step_by(d).copied().collect();
+        assert_eq!(
+            tags1,
+            vec![2_000.0, 3_000.0, 1_003_000.0, 1_003_001.0],
+            "e2: s0p0; e3: s0p0, s1p0, s1p1"
+        );
+    }
+
+    #[test]
+    fn combine_is_exact_inverse() {
+        for (nodes, gpus) in [(1usize, 2usize), (2, 2), (2, 3)] {
+            let m = net(nodes, gpus);
+            let w = nodes * gpus;
+            let e = 2 * w;
+            let kept: Vec<Vec<usize>> = (0..w)
+                .map(|s| (0..e).map(|ge| (s + ge) % 4).collect())
+                .collect();
+            let d = 2;
+            let mut bufs = tagged(&kept, d);
+            let orig = bufs.clone();
+            ragged_dispatch(&m, &mut bufs, &kept, d, Schedule::Flat).unwrap();
+            ragged_combine(&m, &mut bufs, &kept, d, Schedule::Flat).unwrap();
+            assert_eq!(bufs, orig, "nodes={nodes} gpus={gpus}");
+        }
+    }
+
+    #[test]
+    fn conservation_property() {
+        for_all(16, |g| {
+            let w = 4;
+            let m = net(2, 2);
+            let e = 8;
+            let kept: Vec<Vec<usize>> = (0..w)
+                .map(|_| (0..e).map(|_| g.usize_in(0..5)).collect())
+                .collect();
+            let d = g.usize_in(1..4);
+            let mut bufs = tagged(&kept, d);
+            let before: usize = bufs.iter().map(|b| b.len()).sum();
+            ragged_dispatch(&m, &mut bufs, &kept, d, Schedule::Hierarchical).unwrap();
+            let after: usize = bufs.iter().map(|b| b.len()).sum();
+            assert_eq!(before, after);
+            // Each rank's receive total matches the column sums.
+            let counts = rank_counts(&kept, e / w);
+            for r in 0..w {
+                let col: usize = (0..w).map(|s| counts[s][r]).sum();
+                assert_eq!(bufs[r].len(), col * d);
+            }
+        });
+    }
+
+    #[test]
+    fn timing_matches_cost_models() {
+        let m = net(2, 2);
+        let kept = vec![vec![3usize, 1, 0, 2]; 4];
+        let d = 4;
+        let counts = rank_counts(&kept, 1);
+        let mut bufs = tagged(&kept, d);
+        let t = ragged_dispatch(&m, &mut bufs, &kept, d, Schedule::Flat).unwrap();
+        let expect = alltoallv_timing(&m, &counts, d * 4);
+        assert!((t.total - expect.total).abs() < 1e-15);
+        let t2 = ragged_combine(&m, &mut bufs, &kept, d, Schedule::Hierarchical).unwrap();
+        let expect2 =
+            hierarchical_alltoallv_timing(&m, &transpose_counts(&counts), d * 4);
+        assert!((t2.total - expect2.total).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rank_counts_and_offwire_bytes() {
+        // 4 experts on 2 ranks: experts 0,1 → rank 0; 2,3 → rank 1.
+        let kept = vec![vec![1usize, 2, 3, 4], vec![5, 6, 7, 8]];
+        let counts = rank_counts(&kept, 2);
+        assert_eq!(counts, vec![vec![3, 7], vec![11, 15]]);
+        // Off-wire: 7 + 11 rows cross ranks.
+        assert_eq!(offwire_bytes(&counts, 4), (7 + 11) * 4);
+    }
+
+    #[test]
+    fn validates_shapes() {
+        let m = net(1, 2);
+        let kept = vec![vec![1usize, 0], vec![0, 1]];
+        let mut bad_len = vec![vec![0.0f32; 5], vec![0.0; 2]]; // d=2 → rank 0 needs 2
+        assert!(ragged_dispatch(&m, &mut bad_len, &kept, 2, Schedule::Flat).is_err());
+        let mut ok = vec![vec![0.0f32; 2], vec![0.0; 2]];
+        let bad_kept = vec![vec![1usize, 0, 0], vec![0, 1, 0]]; // 3 % 2 != 0
+        assert!(ragged_dispatch(&m, &mut ok, &bad_kept, 2, Schedule::Flat).is_err());
+        let mut wrong_world = vec![vec![0.0f32; 2]];
+        assert!(
+            ragged_dispatch(&m, &mut wrong_world, &kept[..1], 2, Schedule::Flat).is_err()
+        );
+    }
+}

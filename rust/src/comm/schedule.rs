@@ -1,0 +1,190 @@
+//! Shared AllToAll schedule selection.
+//!
+//! Both the training layer ([`crate::moe::MoeLayer`] in ragged dispatch
+//! mode) and the serving router ([`crate::serve::PlacementRouter`])
+//! face the same decision every step: given the per-(src, dst) rank
+//! traffic matrix of a dispatch plan, is the flat or the hierarchical
+//! AllToAll schedule cheaper *for this step's actual counts*? This
+//! module is the one place that decision lives, so training and serving
+//! can never drift apart: both legs of the round trip are scored (the
+//! combine leg on the **transposed** matrix, since every flow reverses
+//! and expert skew makes the two directions cost very different
+//! amounts), and the cheaper total wins under [`CommChoice::Auto`].
+
+use crate::cluster::NetworkModel;
+use crate::comm::alltoall::alltoallv_timing;
+use crate::comm::hierarchical::hierarchical_alltoallv_timing;
+use crate::error::Result;
+
+/// One concrete AllToAll schedule (the thing actually executed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    Flat,
+    Hierarchical,
+}
+
+impl Schedule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Flat => "flat",
+            Schedule::Hierarchical => "hier",
+        }
+    }
+}
+
+/// AllToAll selection policy: force one schedule, or score both per
+/// step/batch and take the cheaper one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommChoice {
+    Flat,
+    Hierarchical,
+    /// Score both schedules on the step's traffic matrix and take the
+    /// cheaper one.
+    Auto,
+}
+
+impl CommChoice {
+    pub fn parse(s: &str) -> Result<CommChoice> {
+        Ok(match s.to_lowercase().as_str() {
+            "flat" => CommChoice::Flat,
+            "hier" | "hierarchical" => CommChoice::Hierarchical,
+            "auto" => CommChoice::Auto,
+            other => {
+                return Err(crate::config_err!("unknown comm choice '{other}'"));
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommChoice::Flat => "flat",
+            CommChoice::Hierarchical => "hier",
+            CommChoice::Auto => "auto",
+        }
+    }
+}
+
+/// Outcome of scoring one step's traffic matrix under both schedules.
+#[derive(Clone, Debug)]
+pub struct SchedulePick {
+    /// The schedule to execute (forced by the policy, or the cheaper
+    /// round trip under [`CommChoice::Auto`]).
+    pub schedule: Schedule,
+    /// Predicted dispatch-leg time of the chosen schedule.
+    pub dispatch_time: f64,
+    /// Predicted combine-leg time of the chosen schedule (charged on
+    /// the transposed traffic matrix).
+    pub combine_time: f64,
+    /// Round-trip (dispatch + combine) predicted times per schedule.
+    pub flat_time: f64,
+    pub hier_time: f64,
+}
+
+/// Transpose a rank traffic matrix (the combine leg reverses every flow).
+pub fn transpose_counts(counts: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    let w = counts.len();
+    (0..w).map(|d| (0..w).map(|s| counts[s][d]).collect()).collect()
+}
+
+/// Score `counts[src][dst]` rows of `elem_bytes` under both schedules
+/// and pick per `choice` (see module docs). This is the exact decision
+/// procedure of the serving router, shared with the training layer.
+pub fn pick_schedule(
+    net: &NetworkModel,
+    counts: &[Vec<usize>],
+    elem_bytes: usize,
+    choice: CommChoice,
+) -> SchedulePick {
+    let counts_t = transpose_counts(counts);
+    let flat_dispatch = alltoallv_timing(net, counts, elem_bytes).total;
+    let flat_combine = alltoallv_timing(net, &counts_t, elem_bytes).total;
+    let hier_dispatch = hierarchical_alltoallv_timing(net, counts, elem_bytes).total;
+    let hier_combine = hierarchical_alltoallv_timing(net, &counts_t, elem_bytes).total;
+    let flat_time = flat_dispatch + flat_combine;
+    let hier_time = hier_dispatch + hier_combine;
+    let schedule = match choice {
+        CommChoice::Flat => Schedule::Flat,
+        CommChoice::Hierarchical => Schedule::Hierarchical,
+        CommChoice::Auto => {
+            if hier_time < flat_time {
+                Schedule::Hierarchical
+            } else {
+                Schedule::Flat
+            }
+        }
+    };
+    let (dispatch_time, combine_time) = match schedule {
+        Schedule::Flat => (flat_dispatch, flat_combine),
+        Schedule::Hierarchical => (hier_dispatch, hier_combine),
+    };
+    SchedulePick { schedule, dispatch_time, combine_time, flat_time, hier_time }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn net(nodes: usize, gpus: usize) -> NetworkModel {
+        let mut cfg = ClusterConfig::commodity(nodes);
+        cfg.gpus_per_node = gpus;
+        NetworkModel::new(cfg)
+    }
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(CommChoice::parse("flat").unwrap(), CommChoice::Flat);
+        assert_eq!(CommChoice::parse("HIER").unwrap(), CommChoice::Hierarchical);
+        assert_eq!(CommChoice::parse("auto").unwrap(), CommChoice::Auto);
+        assert!(CommChoice::parse("nonsense").is_err());
+        assert_eq!(Schedule::Flat.name(), "flat");
+        assert_eq!(Schedule::Hierarchical.name(), "hier");
+    }
+
+    #[test]
+    fn transpose_is_involution() {
+        let counts: Vec<Vec<usize>> =
+            (0..4).map(|s| (0..4).map(|d| s * 10 + d).collect()).collect();
+        assert_eq!(transpose_counts(&transpose_counts(&counts)), counts);
+        assert_eq!(transpose_counts(&counts)[2][1], counts[1][2]);
+    }
+
+    #[test]
+    fn auto_picks_the_cheaper_round_trip() {
+        let m = net(4, 8);
+        let w = m.cfg.world();
+        // Serving-scale small messages: aggregation must win.
+        let small = vec![vec![2usize; w]; w];
+        let p = pick_schedule(&m, &small, 256, CommChoice::Auto);
+        assert_eq!(p.schedule, Schedule::Hierarchical);
+        assert!(p.hier_time < p.flat_time);
+        assert!((p.dispatch_time + p.combine_time - p.hier_time).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forced_choices_report_their_own_legs() {
+        let m = net(2, 2);
+        let counts = vec![vec![8usize; 4]; 4];
+        let f = pick_schedule(&m, &counts, 64, CommChoice::Flat);
+        assert_eq!(f.schedule, Schedule::Flat);
+        assert!((f.dispatch_time + f.combine_time - f.flat_time).abs() < 1e-12);
+        let h = pick_schedule(&m, &counts, 64, CommChoice::Hierarchical);
+        assert_eq!(h.schedule, Schedule::Hierarchical);
+        assert!((h.dispatch_time + h.combine_time - h.hier_time).abs() < 1e-12);
+        // Both report the same cross-schedule predictions.
+        assert_eq!(f.flat_time, h.flat_time);
+        assert_eq!(f.hier_time, h.hier_time);
+    }
+
+    #[test]
+    fn skewed_traffic_flips_legs() {
+        // Fan-in to one rank: dispatch cheap, combine serializes.
+        let m = net(1, 4);
+        let mut counts = vec![vec![0usize; 4]; 4];
+        counts[1][0] = 50;
+        counts[2][0] = 50;
+        counts[3][0] = 50;
+        let p = pick_schedule(&m, &counts, 256, CommChoice::Flat);
+        assert!(p.combine_time > p.dispatch_time);
+    }
+}

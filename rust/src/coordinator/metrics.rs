@@ -15,6 +15,8 @@ pub struct MetricsAgg {
     pub drop_rate: f64,
     pub padding_waste: f64,
     pub aux_loss: f64,
+    bytes_on_wire: f64,
+    expert_flops: f64,
 }
 
 impl MetricsAgg {
@@ -39,6 +41,8 @@ impl MetricsAgg {
         self.drop_rate += report.drop_rate;
         self.padding_waste += report.padding_waste;
         self.aux_loss += report.aux_loss;
+        self.bytes_on_wire += report.bytes_on_wire as f64;
+        self.expert_flops += report.expert_flops;
     }
 
     pub fn steps(&self) -> usize {
@@ -63,6 +67,8 @@ impl MetricsAgg {
             drop_rate: self.drop_rate / n,
             padding_waste: self.padding_waste / n,
             aux_loss: self.aux_loss / n,
+            bytes_on_wire: self.bytes_on_wire / n,
+            expert_flops: self.expert_flops / n,
         }
     }
 }
@@ -75,6 +81,10 @@ pub struct Breakdown {
     pub drop_rate: f64,
     pub padding_waste: f64,
     pub aux_loss: f64,
+    /// Mean bytes crossing rank boundaries per step (both AllToAll legs).
+    pub bytes_on_wire: f64,
+    /// Mean expert-FFN FLOPs executed per step.
+    pub expert_flops: f64,
 }
 
 impl Breakdown {
@@ -108,6 +118,8 @@ impl Breakdown {
             ("drop_rate", Json::num(self.drop_rate)),
             ("padding_waste", Json::num(self.padding_waste)),
             ("aux_loss", Json::num(self.aux_loss)),
+            ("bytes_on_wire", Json::num(self.bytes_on_wire)),
+            ("expert_flops", Json::num(self.expert_flops)),
         ])
     }
 }
@@ -124,6 +136,9 @@ mod tests {
             padding_waste: 0.2,
             expert_counts: vec![],
             aux_loss: 1.0,
+            bytes_on_wire: 1024,
+            expert_flops: 2048.0,
+            ..Default::default()
         }
     }
 
@@ -138,6 +153,8 @@ mod tests {
         assert!((gate - 0.3).abs() < 1e-12);
         assert!((b.total - (0.3 + 1.0 + 0.5)).abs() < 1e-12);
         assert!((b.drop_rate - 0.1).abs() < 1e-12);
+        assert!((b.bytes_on_wire - 1024.0).abs() < 1e-12);
+        assert!((b.expert_flops - 2048.0).abs() < 1e-12);
     }
 
     #[test]

@@ -55,6 +55,35 @@ impl DispatchPlan {
         let used: usize = self.kept.iter().sum();
         1.0 - used as f64 / self.buffer_rows().max(1) as f64
     }
+
+    /// Rows actually occupied across all experts (`Σ kept` — the ragged
+    /// buffer's total row count).
+    pub fn occupied_rows(&self) -> usize {
+        self.kept.iter().sum()
+    }
+
+    /// Prefix offsets of each expert's kept block in a ragged buffer:
+    /// expert `e` owns rows `offsets[e]..offsets[e+1]` (length `E + 1`).
+    pub fn ragged_offsets(&self) -> Vec<usize> {
+        let mut off = vec![0usize; self.num_experts + 1];
+        for (e, &k) in self.kept.iter().enumerate() {
+            off[e + 1] = off[e] + k;
+        }
+        off
+    }
+
+    /// Kept rows destined to each of `world` ranks under the training
+    /// expert placement (experts partitioned contiguously, `E/world`
+    /// per rank) — one row of the AllToAllv traffic matrix.
+    pub fn rank_counts(&self, world: usize) -> Vec<usize> {
+        debug_assert_eq!(self.num_experts % world, 0);
+        let epr = self.num_experts / world;
+        let mut counts = vec![0usize; world];
+        for (e, &k) in self.kept.iter().enumerate() {
+            counts[e / epr] += k;
+        }
+        counts
+    }
 }
 
 /// Assign buffer positions under capacity `C`.
@@ -174,6 +203,18 @@ mod tests {
                 assert_eq!(p.kept[ex], p.demand[ex].min(cap));
             }
         });
+    }
+
+    #[test]
+    fn ragged_views_of_the_plan() {
+        let r = routing_1slot(&[1, 0, 1, 0, 1, 3], 4);
+        let p = apply_capacity(&r, 4);
+        assert_eq!(p.kept, vec![2, 3, 0, 1]);
+        assert_eq!(p.occupied_rows(), 6);
+        assert_eq!(p.ragged_offsets(), vec![0, 2, 5, 5, 6]);
+        // 4 experts over 2 ranks: experts 0,1 → rank 0; 2,3 → rank 1.
+        assert_eq!(p.rank_counts(2), vec![5, 1]);
+        assert_eq!(p.rank_counts(4), vec![2, 3, 0, 1]);
     }
 
     #[test]

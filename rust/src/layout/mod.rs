@@ -14,7 +14,14 @@
 //!   parallelizable over disjoint token chunks.
 //!
 //! Both produce bit-identical buffers; Fig-4's bench measures the gap.
+//!
+//! [`ragged::ragged_layout`] is the padding-free variant (see
+//! `ragged.rs` and DESIGN.md §"Dispatch pipelines"): same scatter, but
+//! into a [`ragged::RaggedLayoutBuffer`] holding only occupied rows —
+//! no zero-fill, no dead rows through the AllToAlls or the expert GEMMs.
 
+pub mod ragged;
 pub mod transform;
 
+pub use ragged::{ragged_layout, ragged_reverse_layout, RaggedLayoutBuffer};
 pub use transform::{naive_layout, opt_layout, reverse_layout, LayoutBuffer};

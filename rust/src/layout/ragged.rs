@@ -1,0 +1,287 @@
+//! Ragged (padding-free) layout transforms.
+//!
+//! The padded [`LayoutBuffer`] reserves `cap` rows per expert and
+//! zero-fills whatever the capacity rule didn't occupy — at realistic
+//! capacity factors 30–80% of the buffer is dead weight that still
+//! flows through both AllToAll legs and the expert GEMMs. The
+//! [`RaggedLayoutBuffer`] holds **only the occupied rows**, expert-major
+//! with per-expert offsets/counts, so downstream phases touch exactly
+//! the tokens that exist:
+//!
+//! - [`ragged_layout`] — the same single scatter pass as
+//!   [`opt_layout`], minus the zero-fill: destination row for slot
+//!   `(t, j)` is `offsets[e] + position-within-e`, both already in the
+//!   [`DispatchPlan`], so the transform stays `O(T·k)` and race-free.
+//! - [`ragged_reverse_layout`] — gathers each token's expert outputs
+//!   back to its original position, combining with the gate weights
+//!   (same math as [`reverse_layout`], ragged addressing).
+//!
+//! [`LayoutBuffer`]: crate::layout::LayoutBuffer
+//! [`opt_layout`]: crate::layout::opt_layout
+//! [`reverse_layout`]: crate::layout::reverse_layout
+
+use crate::error::Result;
+use crate::gating::DispatchPlan;
+use crate::tensor::Tensor;
+use crate::util::threadpool::parallel_for_chunks;
+
+/// Padding-free expert-major buffer: row `offsets[e] + p` holds the
+/// `p`-th token accepted by expert `e`; there are no other rows.
+#[derive(Clone, Debug)]
+pub struct RaggedLayoutBuffer {
+    /// `[occupied, d]` — every row carries a real token.
+    pub data: Tensor,
+    /// Per-expert start row, length `E + 1` (prefix sums of `counts`).
+    pub offsets: Vec<usize>,
+    /// Kept rows per expert (`counts[e] == offsets[e+1] - offsets[e]`).
+    pub counts: Vec<usize>,
+}
+
+impl RaggedLayoutBuffer {
+    /// Rebuild the buffer around data returned from an exchange (the
+    /// reverse path takes ownership — no clone).
+    pub fn from_plan(data: Vec<f32>, plan: &DispatchPlan, d: usize) -> Result<Self> {
+        let occupied = plan.occupied_rows();
+        let data = Tensor::from_vec(data, &[occupied, d])?;
+        Ok(RaggedLayoutBuffer {
+            data,
+            offsets: plan.ragged_offsets(),
+            counts: plan.kept.clone(),
+        })
+    }
+
+    /// Total occupied rows.
+    pub fn occupied(&self) -> usize {
+        self.data.rows()
+    }
+
+    /// Expert `e`'s rows — always exactly its kept tokens, contiguous.
+    pub fn expert_rows(&self, e: usize) -> &[f32] {
+        let d = self.data.row_len();
+        &self.data.data()[self.offsets[e] * d..self.offsets[e + 1] * d]
+    }
+
+    /// Ragged row index of a padded-buffer destination slot.
+    fn ragged_row(offsets: &[usize], capacity: usize, dest: usize) -> usize {
+        let e = dest / capacity;
+        offsets[e] + (dest - e * capacity)
+    }
+}
+
+/// Forward ragged transform: single scatter pass, no zero-fill at all
+/// (every destination row is written exactly once — FCFS packs each
+/// expert's block 0..kept[e], and the blocks tile 0..occupied).
+pub fn ragged_layout(
+    tokens: &Tensor,
+    plan: &DispatchPlan,
+    threads: usize,
+) -> RaggedLayoutBuffer {
+    let d = tokens.row_len();
+    debug_assert_eq!(tokens.rows(), plan.tokens);
+    let offsets = plan.ragged_offsets();
+    let rows = plan.occupied_rows();
+    let mut data: Vec<f32> = Vec::with_capacity(rows * d);
+    #[allow(clippy::uninit_vec)]
+    // SAFETY: every element is written exactly once by the scatter below.
+    unsafe {
+        data.set_len(rows * d);
+    }
+    let mut out = Tensor::from_vec(data, &[rows, d]).expect("sized above");
+    let out_ptr = out.data_mut().as_mut_ptr() as usize;
+    let k = plan.k;
+    let cap = plan.capacity;
+    let body = |range: std::ops::Range<usize>| {
+        // SAFETY: dest rows are unique across the plan (enforced by
+        // apply_capacity) and the padded→ragged row map is injective,
+        // so concurrent writes never alias.
+        let out_slice =
+            unsafe { std::slice::from_raw_parts_mut(out_ptr as *mut f32, rows * d) };
+        for t in range {
+            let src = tokens.row(t);
+            for j in 0..k {
+                let dest = plan.dest[t * k + j];
+                if dest != u32::MAX {
+                    let o = RaggedLayoutBuffer::ragged_row(&offsets, cap, dest as usize) * d;
+                    out_slice[o..o + d].copy_from_slice(src);
+                }
+            }
+        }
+    };
+    if threads <= 1 {
+        body(0..plan.tokens);
+    } else {
+        parallel_for_chunks(plan.tokens, threads, body);
+    }
+    RaggedLayoutBuffer { data: out, offsets, counts: plan.kept.clone() }
+}
+
+/// Reverse ragged transform: weighted combine of each token's expert
+/// outputs back into `[T, d]`; dropped slots contribute nothing.
+pub fn ragged_reverse_layout(
+    buffer: &RaggedLayoutBuffer,
+    plan: &DispatchPlan,
+    threads: usize,
+) -> Tensor {
+    let d = buffer.data.row_len();
+    let k = plan.k;
+    let cap = plan.capacity;
+    let mut out = Tensor::zeros(&[plan.tokens, d]);
+    let out_ptr = out.data_mut().as_mut_ptr() as usize;
+    let body = |range: std::ops::Range<usize>| {
+        // SAFETY: token chunks are disjoint, each output row is owned by
+        // exactly one chunk.
+        let out_slice = unsafe {
+            std::slice::from_raw_parts_mut(out_ptr as *mut f32, plan.tokens * d)
+        };
+        for t in range {
+            let dst = &mut out_slice[t * d..(t + 1) * d];
+            for j in 0..k {
+                let slot = t * k + j;
+                let dest = plan.dest[slot];
+                if dest == u32::MAX {
+                    continue;
+                }
+                let w = plan.weights[slot];
+                let row =
+                    RaggedLayoutBuffer::ragged_row(&buffer.offsets, cap, dest as usize);
+                let src = buffer.data.row(row);
+                for (o, &s) in dst.iter_mut().zip(src) {
+                    *o += w * s;
+                }
+            }
+        }
+    };
+    if threads <= 1 {
+        body(0..plan.tokens);
+    } else {
+        parallel_for_chunks(plan.tokens, threads, body);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gating::{apply_capacity, Gate, Routing, SwitchGate};
+    use crate::layout::{opt_layout, reverse_layout};
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+
+    fn plan_from(ids: &[u32], e: usize, cap: usize) -> DispatchPlan {
+        let r = Routing {
+            k: 1,
+            tokens: ids.len(),
+            num_experts: e,
+            expert_ids: ids.to_vec(),
+            weights: vec![1.0; ids.len()],
+            aux_loss: 0.0,
+        };
+        apply_capacity(&r, cap)
+    }
+
+    #[test]
+    fn ragged_holds_only_occupied_rows() {
+        let tokens = Tensor::from_vec(
+            vec![
+                1.0, 1.0, // t0 -> e1
+                2.0, 2.0, // t1 -> e0
+                3.0, 3.0, // t2 -> e1
+            ],
+            &[3, 2],
+        )
+        .unwrap();
+        let plan = plan_from(&[1, 0, 1], 2, 8); // padded would be 16 rows
+        let buf = ragged_layout(&tokens, &plan, 1);
+        assert_eq!(buf.occupied(), 3);
+        assert_eq!(buf.offsets, vec![0, 1, 3]);
+        assert_eq!(buf.expert_rows(0), &[2.0, 2.0]);
+        assert_eq!(buf.expert_rows(1), &[1.0, 1.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn ragged_matches_padded_occupied_rows() {
+        let mut rng = Rng::seed(3);
+        for (n, e, cap_frac) in [(64, 8, 1.0), (200, 16, 0.5), (33, 4, 2.0)] {
+            let tokens = Tensor::randn(&[n, 8], &mut rng);
+            let scores = Tensor::randn(&[n, e], &mut rng);
+            let r = SwitchGate::new(e, 1.0).route_scores(&scores, 0);
+            let cap = (((n as f64 / e as f64) * cap_frac).ceil() as usize).max(1);
+            let plan = apply_capacity(&r, cap);
+            let padded = opt_layout(&tokens, &plan, 1);
+            let ragged = ragged_layout(&tokens, &plan, 1);
+            for ex in 0..e {
+                assert_eq!(
+                    ragged.expert_rows(ex),
+                    padded.expert_rows(ex, plan.kept[ex]),
+                    "expert {ex}: ragged rows must equal the padded buffer's occupied rows"
+                );
+            }
+            // And the reverse transforms agree bit-for-bit.
+            let a = reverse_layout(&padded, &plan, 1);
+            let b = ragged_reverse_layout(&ragged, &plan, 1);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::seed(5);
+        let tokens = Tensor::randn(&[301, 16], &mut rng);
+        let scores = Tensor::randn(&[301, 8], &mut rng);
+        let r = SwitchGate::new(8, 1.25).route_scores(&scores, 0);
+        let plan = apply_capacity(&r, 48);
+        let s = ragged_layout(&tokens, &plan, 1);
+        for threads in [2, 4, 8] {
+            let p = ragged_layout(&tokens, &plan, threads);
+            assert_eq!(s.data, p.data, "threads={threads}");
+        }
+        let rs = ragged_reverse_layout(&s, &plan, 1);
+        for threads in [2, 4] {
+            let rp = ragged_reverse_layout(&s, &plan, threads);
+            assert!(rs.allclose(&rp, 0.0));
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        for_all(16, |g| {
+            let e = g.usize_in(2..6);
+            let n = g.usize_in(1..60);
+            let d = g.usize_in(1..8);
+            let ids: Vec<u32> = (0..n).map(|_| g.u32_in(0..e as u32)).collect();
+            let mut rng = Rng::seed(g.case as u64 + 31);
+            let tokens = Tensor::randn(&[n, d], &mut rng);
+            let plan = plan_from(&ids, e, n.max(1)); // no drops
+            let buf = ragged_layout(&tokens, &plan, 1);
+            assert_eq!(buf.occupied(), n, "unbounded capacity keeps every token");
+            let back = ragged_reverse_layout(&buf, &plan, 1);
+            assert!(back.allclose(&tokens, 1e-5));
+        });
+    }
+
+    #[test]
+    fn dropped_tokens_come_back_zero() {
+        let tokens = Tensor::from_vec(vec![1.0, 2.0, 3.0], &[3, 1]).unwrap();
+        let plan = plan_from(&[0, 0, 0], 2, 1);
+        let buf = ragged_layout(&tokens, &plan, 1);
+        assert_eq!(buf.occupied(), 1);
+        let back = ragged_reverse_layout(&buf, &plan, 1);
+        assert_eq!(back.row(0), &[1.0]);
+        assert_eq!(back.row(1), &[0.0]);
+        assert_eq!(back.row(2), &[0.0]);
+    }
+
+    #[test]
+    fn from_plan_roundtrips_exchange_data() {
+        let mut rng = Rng::seed(9);
+        let tokens = Tensor::randn(&[20, 4], &mut rng);
+        let ids: Vec<u32> = (0..20).map(|t| (t % 3) as u32).collect();
+        let plan = plan_from(&ids, 3, 20);
+        let buf = ragged_layout(&tokens, &plan, 1);
+        let rebuilt =
+            RaggedLayoutBuffer::from_plan(buf.data.data().to_vec(), &plan, 4).unwrap();
+        assert_eq!(rebuilt.offsets, buf.offsets);
+        assert_eq!(rebuilt.counts, buf.counts);
+        assert!(rebuilt.data.allclose(&buf.data, 0.0));
+    }
+}

@@ -18,7 +18,7 @@ use hetumoe::comm::hierarchical::hierarchical_alltoall_timing;
 use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
 use hetumoe::coordinator::Coordinator;
 use hetumoe::gating::{make_gate, GateBatch};
-use hetumoe::moe::MoeLayerOptions;
+use hetumoe::moe::DispatchMode;
 use hetumoe::serve::{ArrivalProcess, CommChoice, ServeConfig, ServeEngine};
 use hetumoe::tensor::Tensor;
 use hetumoe::util::rng::Rng;
@@ -45,6 +45,8 @@ const COMMANDS: &[CommandSpec] = &[
             ("steps", "iterations (default 5)"),
             ("nodes", "simulated nodes (default 1)"),
             ("gpus", "GPUs per node (default 2)"),
+            ("dispatch", "padded|ragged pipeline (default: ragged for hetumoe, padded baselines)"),
+            ("alltoall", "auto|flat|hier per-step AllToAll selection in ragged mode (default: auto for hetumoe, else the system's flavor)"),
         ],
     },
     CommandSpec {
@@ -179,11 +181,32 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
     cluster.gpus_per_node = gpus;
     let moe = MoeConfig { gate: parse_gate(args), ..MoeConfig::bench_layer() };
     let threads = hetumoe::util::threadpool::available_parallelism().min(8);
-    let mut coord =
-        Coordinator::new(moe, cluster, profile.options(threads), 32_000, tokens, 0)?;
+    let mut opts = profile.options(threads);
+    if system == SystemKind::HetuMoE {
+        // HetuMoE's modern hot path: padding-free dispatch with per-step
+        // schedule selection (the profile itself pins the paper-era
+        // padded pipeline for Fig-8 comparability).
+        opts.dispatch = DispatchMode::Ragged;
+        opts.alltoall = CommChoice::Auto;
+    }
+    if let Some(v) = args.get("dispatch") {
+        opts.dispatch = DispatchMode::parse(v)?;
+    }
+    if let Some(v) = args.get("alltoall") {
+        opts.alltoall = CommChoice::parse(v)?;
+    }
+    let dispatch = opts.dispatch;
+    let alltoall = opts.alltoall;
+    let mut coord = Coordinator::new(moe, cluster, opts, 32_000, tokens, 0)?;
     let summary = coord.run(steps)?;
     let mut table = Table::new(
-        &format!("{} MoE layer breakdown ({} steps)", system.name(), steps),
+        &format!(
+            "{} MoE layer breakdown ({} steps, {} dispatch, alltoall={})",
+            system.name(),
+            steps,
+            dispatch.name(),
+            alltoall.name()
+        ),
         &["phase", "mean/step", "fraction"],
     );
     for (name, t) in &summary.breakdown.phases {
@@ -200,6 +223,10 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
         summary.breakdown.drop_rate,
         summary.breakdown.padding_waste,
         summary.breakdown.aux_loss
+    );
+    println!(
+        "bytes_on_wire/step={:.0} expert_flops/step={:.3e}",
+        summary.breakdown.bytes_on_wire, summary.breakdown.expert_flops
     );
     Ok(())
 }

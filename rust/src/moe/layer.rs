@@ -5,14 +5,32 @@
 //! six steps, with each implementation choice (gate kernel, layout
 //! kernel, AllToAll flavor) pluggable — the baseline systems of Fig 8
 //! are exactly different option tuples over this one pipeline.
+//!
+//! Two dispatch pipelines share the gate phase (see DESIGN.md §"Dispatch
+//! pipelines"):
+//! - [`DispatchMode::Padded`] — the classic dense `[E, cap, d]` buffers:
+//!   every expert padded to capacity, zeros shipped through both
+//!   AllToAll legs and the expert GEMMs (the Fig-8 baselines).
+//! - [`DispatchMode::Ragged`] — padding-free: only occupied rows are
+//!   laid out ([`RaggedLayoutBuffer`]), exchanged (exact per-(rank,
+//!   expert) counts via the ragged AllToAllv), and computed (one
+//!   `[n_e, d]` FFN batch per expert). The AllToAll schedule (flat vs
+//!   hierarchical) is picked **per step** from the step's own traffic
+//!   matrix through [`crate::comm::schedule`] — the same decision
+//!   procedure the serving router uses.
 
-use crate::comm::{alltoall, hierarchical_alltoall, CommTiming};
 use crate::cluster::NetworkModel;
+use crate::comm::ragged::{offwire_bytes, ragged_combine, ragged_dispatch};
+use crate::comm::schedule::{pick_schedule, CommChoice, Schedule};
+use crate::comm::{alltoall, hierarchical_alltoall, CommTiming};
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
 use crate::gating::topk::{softmax_of_selected, topk_rows_heap};
-use crate::gating::{apply_capacity, DispatchPlan, Gate, GateBatch, Routing};
-use crate::layout::{naive_layout, opt_layout, reverse_layout, LayoutBuffer};
+use crate::gating::{apply_capacity, DispatchPlan, Gate, Routing};
+use crate::layout::{
+    naive_layout, opt_layout, ragged_layout, ragged_reverse_layout, reverse_layout,
+    LayoutBuffer, RaggedLayoutBuffer,
+};
 use crate::moe::expert::ExpertExecutor;
 use crate::nn::matmul;
 use crate::tensor::Tensor;
@@ -28,7 +46,8 @@ pub enum GateImpl {
     Generic,
 }
 
-/// Which layout transform the dispatch uses (Fig 4's comparison).
+/// Which layout transform the padded dispatch uses (Fig 4's comparison;
+/// [`DispatchMode::Ragged`] always uses the single-pass ragged scatter).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LayoutImpl {
     /// Counting-sort scatter (HetuMoE).
@@ -42,11 +61,62 @@ pub enum LayoutImpl {
     DenseEinsum,
 }
 
-/// AllToAll flavor (Fig 5 vs Fig 6).
+/// AllToAll flavor (Fig 5 vs Fig 6) for the padded pipeline, which
+/// exchanges equal chunks and therefore fixes its schedule up front.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommImpl {
     Flat,
     Hierarchical,
+}
+
+impl CommImpl {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommImpl::Flat => Schedule::Flat.name(),
+            CommImpl::Hierarchical => Schedule::Hierarchical.name(),
+        }
+    }
+}
+
+impl From<Schedule> for CommImpl {
+    fn from(s: Schedule) -> CommImpl {
+        match s {
+            Schedule::Flat => CommImpl::Flat,
+            Schedule::Hierarchical => CommImpl::Hierarchical,
+        }
+    }
+}
+
+/// Which dispatch pipeline the forward runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Dense `[E, cap, d]` buffers, zero-padded to capacity — kept as
+    /// the comparison baseline (and what the Fig-8 systems model).
+    Padded,
+    /// Padding-free ragged pipeline: occupied rows only, exact-count
+    /// AllToAllv, grouped per-expert compute (the default).
+    Ragged,
+}
+
+impl DispatchMode {
+    pub fn parse(s: &str) -> Result<DispatchMode> {
+        Ok(match s.to_lowercase().as_str() {
+            "padded" | "dense" => DispatchMode::Padded,
+            "ragged" | "dropless" => DispatchMode::Ragged,
+            other => {
+                return Err(crate::config_err!(
+                    "unknown dispatch mode '{other}' (expected padded|ragged)"
+                ));
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchMode::Padded => "padded",
+            DispatchMode::Ragged => "ragged",
+        }
+    }
 }
 
 /// Pipeline options: a baseline system is a tuple of these.
@@ -54,7 +124,14 @@ pub enum CommImpl {
 pub struct MoeLayerOptions {
     pub gate_impl: GateImpl,
     pub layout_impl: LayoutImpl,
+    /// Fixed AllToAll flavor of the padded pipeline.
     pub comm_impl: CommImpl,
+    /// Which dispatch pipeline to run.
+    pub dispatch: DispatchMode,
+    /// Per-step AllToAll schedule policy of the ragged pipeline
+    /// (`Auto` scores the step's traffic matrix, like the serving
+    /// router does per batch).
+    pub alltoall: CommChoice,
     /// Threads for the parallel kernels (1 = serial).
     pub threads: usize,
 }
@@ -65,6 +142,8 @@ impl Default for MoeLayerOptions {
             gate_impl: GateImpl::Fast,
             layout_impl: LayoutImpl::Optimized,
             comm_impl: CommImpl::Hierarchical,
+            dispatch: DispatchMode::Ragged,
+            alltoall: CommChoice::Auto,
             threads: 1,
         }
     }
@@ -79,12 +158,22 @@ pub struct StepReport {
     pub comm: Vec<(String, f64)>,
     /// Capacity-drop rate across ranks.
     pub drop_rate: f64,
-    /// Padding waste of the dispatch buffers.
+    /// Padding waste of the dispatch buffers (0 in ragged mode — the
+    /// buffers hold only occupied rows).
     pub padding_waste: f64,
     /// Global per-expert token counts.
     pub expert_counts: Vec<usize>,
     /// Mean auxiliary loss across ranks.
     pub aux_loss: f64,
+    /// Bytes crossing rank boundaries over both AllToAll legs
+    /// (self-traffic excluded; padding rows count in padded mode —
+    /// that's the waste the ragged pipeline removes).
+    pub bytes_on_wire: usize,
+    /// Expert-FFN FLOPs actually executed across all ranks (padded mode
+    /// runs capacity rows, occupied or not).
+    pub expert_flops: f64,
+    /// AllToAll schedule this step ran ("flat" | "hier").
+    pub comm_schedule: String,
 }
 
 impl StepReport {
@@ -185,7 +274,6 @@ impl MoeLayer {
         }
         let d = self.cfg.d_model;
         let e = self.cfg.num_experts;
-        let epr = self.experts_per_rank();
         let local_tokens = shards[0].rows();
         for s in shards {
             if s.rows() != local_tokens || s.row_len() != d {
@@ -197,10 +285,8 @@ impl MoeLayer {
         let mut report = StepReport::default();
         let mut expert_counts = vec![0usize; e];
 
-        // ---- Step 1+2 per rank: gate scores, routing, capacity, layout ----
-        let t0 = Instant::now();
+        // ---- Step 1 per rank: gate scores, routing, capacity plan ----
         let mut plans: Vec<DispatchPlan> = Vec::with_capacity(w);
-        let mut routings: Vec<Routing> = Vec::with_capacity(w);
         let mut gate_wall = 0.0f64;
         for shard in shards {
             let g0 = Instant::now();
@@ -213,17 +299,42 @@ impl MoeLayer {
             report.aux_loss += routing.aux_loss as f64 / w as f64;
             let plan = apply_capacity(&routing, cap);
             report.drop_rate += plan.drop_rate() / w as f64;
-            report.padding_waste += plan.padding_waste() / w as f64;
+            if self.opts.dispatch == DispatchMode::Padded {
+                report.padding_waste += plan.padding_waste() / w as f64;
+            }
             plans.push(plan);
-            routings.push(routing);
         }
-        let _ = t0;
         report.wall.push(("gate".into(), gate_wall / w as f64));
 
+        // ---- Steps 2–6: the dispatch pipeline ----
+        let outputs = match self.opts.dispatch {
+            DispatchMode::Padded => self.forward_padded(shards, &plans, &mut report)?,
+            DispatchMode::Ragged => self.forward_ragged(shards, &plans, &mut report)?,
+        };
+
+        report.expert_counts = expert_counts;
+        Ok((outputs, report))
+    }
+
+    /// The classic dense pipeline: padded `[E, cap, d]` buffers through
+    /// equal-chunk AllToAlls, experts run over full capacity slices.
+    fn forward_padded(
+        &self,
+        shards: &[Tensor],
+        plans: &[DispatchPlan],
+        report: &mut StepReport,
+    ) -> Result<Vec<Tensor>> {
+        let w = self.cluster.world();
+        let d = self.cfg.d_model;
+        let e = self.cfg.num_experts;
+        let epr = self.experts_per_rank();
+        let cap = plans[0].capacity;
+
+        // ---- Step 2: layout transform into padded buffers ----
         let l0 = Instant::now();
         let buffers: Vec<LayoutBuffer> = shards
             .iter()
-            .zip(&plans)
+            .zip(plans)
             .map(|(shard, plan)| self.layout_with_impl(shard, plan))
             .collect();
         report
@@ -233,29 +344,44 @@ impl MoeLayer {
         // ---- Step 3: AllToAll dispatch ----
         // Buffer layout per rank: [E, cap, d] = W chunks of [epr, cap, d].
         let mut flat: Vec<Vec<f32>> =
-            buffers.iter().map(|b| b.data.data().to_vec()).collect();
+            buffers.into_iter().map(|b| b.data.into_vec()).collect();
         let timing = self.run_alltoall(&mut flat)?;
         report.comm.push(("alltoall_dispatch".into(), timing.total));
+        report.comm_schedule = self.opts.comm_impl.name().into();
 
         // ---- Step 4: expert compute ----
         // After AllToAll, rank r's buffer is [W, epr, cap, d]: the tokens
         // every source rank sent to r's experts.
         let x0 = Instant::now();
-        for (r, buf) in flat.iter_mut().enumerate() {
-            for le in 0..epr {
-                let global_e = r * epr + le;
-                // Gather this expert's rows from all W source segments.
+        if epr == 1 {
+            // One expert per rank: the whole received buffer [W·cap, d]
+            // is already that expert's contiguous batch — run it in
+            // place, no gather/scatter copies.
+            for (r, buf) in flat.iter_mut().enumerate() {
+                let rows = Tensor::from_vec(std::mem::take(buf), &[w * cap, d])?;
+                let out = self.experts[r].forward(&rows)?;
+                report.expert_flops += self.experts[r].flops(w * cap);
+                *buf = out.into_vec();
+            }
+        } else {
+            for (r, buf) in flat.iter_mut().enumerate() {
+                // One scratch per rank, reused across its local experts.
                 let mut rows = Tensor::zeros(&[w * cap, d]);
-                for src in 0..w {
-                    let off = (src * epr + le) * cap * d;
-                    rows.data_mut()[src * cap * d..(src + 1) * cap * d]
-                        .copy_from_slice(&buf[off..off + cap * d]);
-                }
-                let out = self.experts[global_e].forward(&rows)?;
-                for src in 0..w {
-                    let off = (src * epr + le) * cap * d;
-                    buf[off..off + cap * d]
-                        .copy_from_slice(&out.data()[src * cap * d..(src + 1) * cap * d]);
+                for le in 0..epr {
+                    let global_e = r * epr + le;
+                    // Gather this expert's rows from all W source segments.
+                    for src in 0..w {
+                        let off = (src * epr + le) * cap * d;
+                        rows.data_mut()[src * cap * d..(src + 1) * cap * d]
+                            .copy_from_slice(&buf[off..off + cap * d]);
+                    }
+                    let out = self.experts[global_e].forward(&rows)?;
+                    report.expert_flops += self.experts[global_e].flops(w * cap);
+                    for src in 0..w {
+                        let off = (src * epr + le) * cap * d;
+                        buf[off..off + cap * d]
+                            .copy_from_slice(&out.data()[src * cap * d..(src + 1) * cap * d]);
+                    }
                 }
             }
         }
@@ -266,13 +392,16 @@ impl MoeLayer {
         // ---- Step 5: AllToAll combine (reverse exchange) ----
         let timing2 = self.run_alltoall(&mut flat)?;
         report.comm.push(("alltoall_combine".into(), timing2.total));
+        // Every off-diagonal (src, dst) pair ships one [epr, cap, d]
+        // chunk per leg, padding included.
+        report.bytes_on_wire = 2 * w * w.saturating_sub(1) * epr * cap * d * 4;
 
         // ---- Step 6: reverse layout per rank ----
         let r0 = Instant::now();
         let mut outputs = Vec::with_capacity(w);
         for (rank, plan) in plans.iter().enumerate() {
             let buffer = LayoutBuffer {
-                data: Tensor::from_vec(flat[rank].clone(), &[e * cap, d])?,
+                data: Tensor::from_vec(std::mem::take(&mut flat[rank]), &[e * cap, d])?,
                 capacity: cap,
                 num_experts: e,
             };
@@ -281,9 +410,87 @@ impl MoeLayer {
         report
             .wall
             .push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
+        Ok(outputs)
+    }
 
-        report.expert_counts = expert_counts;
-        Ok((outputs, report))
+    /// The padding-free pipeline: ragged buffers, exact-count AllToAllv
+    /// with per-step schedule selection, grouped expert compute.
+    fn forward_ragged(
+        &self,
+        shards: &[Tensor],
+        plans: &[DispatchPlan],
+        report: &mut StepReport,
+    ) -> Result<Vec<Tensor>> {
+        let w = self.cluster.world();
+        let d = self.cfg.d_model;
+        let epr = self.experts_per_rank();
+
+        // ---- Step 2: ragged layout (occupied rows only, no zero-fill) ----
+        let l0 = Instant::now();
+        let buffers: Vec<RaggedLayoutBuffer> = shards
+            .iter()
+            .zip(plans)
+            .map(|(shard, plan)| ragged_layout(shard, plan, self.opts.threads))
+            .collect();
+        report
+            .wall
+            .push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
+
+        // ---- Schedule selection: the serving router's decision
+        // procedure, applied per training step ----
+        let kept: Vec<Vec<usize>> = plans.iter().map(|p| p.kept.clone()).collect();
+        let counts: Vec<Vec<usize>> =
+            plans.iter().map(|p| p.rank_counts(w)).collect();
+        let row_bytes = d * 4;
+        let pick = pick_schedule(&self.net, &counts, row_bytes, self.opts.alltoall);
+        let schedule = pick.schedule;
+        report.comm_schedule = schedule.name().into();
+
+        // ---- Step 3: ragged AllToAllv dispatch (exact counts) ----
+        let mut flat: Vec<Vec<f32>> =
+            buffers.into_iter().map(|b| b.data.into_vec()).collect();
+        let timing = ragged_dispatch(&self.net, &mut flat, &kept, d, schedule)?;
+        report.comm.push(("alltoall_dispatch".into(), timing.total));
+
+        // ---- Step 4: grouped expert compute over true token counts ----
+        // The exchange delivered each expert's batch contiguous: one
+        // [n_e, d] FFN per expert, no per-source gathers.
+        let x0 = Instant::now();
+        for (r, buf) in flat.iter_mut().enumerate() {
+            let mut off = 0usize;
+            for le in 0..epr {
+                let ge = r * epr + le;
+                let n: usize = kept.iter().map(|row| row[ge]).sum();
+                if n > 0 {
+                    let rows = Tensor::from_vec(buf[off..off + n * d].to_vec(), &[n, d])?;
+                    let out = self.experts[ge].forward(&rows)?;
+                    report.expert_flops += self.experts[ge].flops(n);
+                    buf[off..off + n * d].copy_from_slice(out.data());
+                }
+                off += n * d;
+            }
+        }
+        report
+            .wall
+            .push(("expert".into(), x0.elapsed().as_secs_f64() / w as f64));
+
+        // ---- Step 5: ragged AllToAllv combine (reverse exchange) ----
+        let timing2 = ragged_combine(&self.net, &mut flat, &kept, d, schedule)?;
+        report.comm.push(("alltoall_combine".into(), timing2.total));
+        report.bytes_on_wire = 2 * offwire_bytes(&counts, row_bytes);
+
+        // ---- Step 6: ragged reverse layout (takes ownership — no clone) ----
+        let r0 = Instant::now();
+        let mut outputs = Vec::with_capacity(w);
+        for (rank, plan) in plans.iter().enumerate() {
+            let buffer =
+                RaggedLayoutBuffer::from_plan(std::mem::take(&mut flat[rank]), plan, d)?;
+            outputs.push(ragged_reverse_layout(&buffer, plan, self.opts.threads));
+        }
+        report
+            .wall
+            .push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
+        Ok(outputs)
     }
 
     /// Route scores through the configured kernel implementation.
@@ -450,6 +657,7 @@ mod tests {
         let opts = MoeLayerOptions {
             comm_impl: CommImpl::Flat,
             layout_impl: LayoutImpl::Naive,
+            dispatch: DispatchMode::Padded,
             ..Default::default()
         };
         let mut cfg = tiny_cfg(GateKind::GShard);
@@ -469,7 +677,11 @@ mod tests {
         let shards = shards_for(2, 16, 8, 5);
         let mut outs = Vec::new();
         for layout_impl in [LayoutImpl::Optimized, LayoutImpl::Naive, LayoutImpl::DenseEinsum] {
-            let opts = MoeLayerOptions { layout_impl, ..Default::default() };
+            let opts = MoeLayerOptions {
+                layout_impl,
+                dispatch: DispatchMode::Padded,
+                ..Default::default()
+            };
             let layer =
                 MoeLayer::native(tiny_cfg(GateKind::Switch), cluster.clone(), opts, 9).unwrap();
             let (out, _) = layer.forward(&shards).unwrap();
@@ -480,6 +692,104 @@ mod tests {
                 assert!(a.allclose(b, 1e-4));
             }
         }
+    }
+
+    #[test]
+    fn ragged_matches_padded_bitwise() {
+        for gate in [GateKind::Switch, GateKind::GShard, GateKind::TopK { k: 2 }] {
+            let cluster =
+                ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) };
+            let shards = shards_for(4, 24, 8, 3);
+            let padded_layer = MoeLayer::native(
+                tiny_cfg(gate.clone()),
+                cluster.clone(),
+                MoeLayerOptions { dispatch: DispatchMode::Padded, ..Default::default() },
+                17,
+            )
+            .unwrap();
+            let ragged_layer = MoeLayer::native(
+                tiny_cfg(gate.clone()),
+                cluster,
+                MoeLayerOptions { dispatch: DispatchMode::Ragged, ..Default::default() },
+                17,
+            )
+            .unwrap();
+            let (a, pr) = padded_layer.forward(&shards).unwrap();
+            let (b, rr) = ragged_layer.forward(&shards).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert!(x.allclose(y, 0.0), "{gate:?}: outputs must be bit-identical");
+            }
+            assert_eq!(pr.expert_counts, rr.expert_counts, "{gate:?}");
+            assert_eq!(pr.drop_rate, rr.drop_rate, "{gate:?}");
+        }
+    }
+
+    #[test]
+    fn ragged_moves_fewer_bytes_and_flops() {
+        // capacity_factor 4.0 → heavily padded buffers; ragged must win.
+        let cluster = ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) };
+        let shards = shards_for(4, 32, 8, 23);
+        let padded = MoeLayer::native(
+            tiny_cfg(GateKind::Switch),
+            cluster.clone(),
+            MoeLayerOptions { dispatch: DispatchMode::Padded, ..Default::default() },
+            5,
+        )
+        .unwrap();
+        let ragged = MoeLayer::native(
+            tiny_cfg(GateKind::Switch),
+            cluster,
+            MoeLayerOptions { dispatch: DispatchMode::Ragged, ..Default::default() },
+            5,
+        )
+        .unwrap();
+        let (_, pr) = padded.forward(&shards).unwrap();
+        let (_, rr) = ragged.forward(&shards).unwrap();
+        assert!(pr.padding_waste > 0.0);
+        assert_eq!(rr.padding_waste, 0.0, "ragged buffers carry no padding");
+        assert!(
+            rr.bytes_on_wire < pr.bytes_on_wire,
+            "ragged {} must move fewer bytes than padded {}",
+            rr.bytes_on_wire,
+            pr.bytes_on_wire
+        );
+        assert!(
+            rr.expert_flops < pr.expert_flops,
+            "ragged {} must execute fewer FLOPs than padded {}",
+            rr.expert_flops,
+            pr.expert_flops
+        );
+        assert!(rr.bytes_on_wire > 0);
+        assert!(rr.expert_flops > 0.0);
+    }
+
+    #[test]
+    fn ragged_respects_forced_schedules() {
+        let cluster = ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) };
+        let shards = shards_for(4, 16, 8, 29);
+        for (choice, expect) in
+            [(CommChoice::Flat, "flat"), (CommChoice::Hierarchical, "hier")]
+        {
+            let layer = MoeLayer::native(
+                tiny_cfg(GateKind::Switch),
+                cluster.clone(),
+                MoeLayerOptions { alltoall: choice, ..Default::default() },
+                31,
+            )
+            .unwrap();
+            let (_, report) = layer.forward(&shards).unwrap();
+            assert_eq!(report.comm_schedule, expect);
+        }
+        // Auto picks one of the two.
+        let layer = MoeLayer::native(
+            tiny_cfg(GateKind::Switch),
+            cluster,
+            MoeLayerOptions { alltoall: CommChoice::Auto, ..Default::default() },
+            31,
+        )
+        .unwrap();
+        let (_, report) = layer.forward(&shards).unwrap();
+        assert!(report.comm_schedule == "flat" || report.comm_schedule == "hier");
     }
 
     #[test]
@@ -516,6 +826,16 @@ mod tests {
         let shards = shards_for(1, 64, 8, 17);
         let (_, report) = layer.forward(&shards).unwrap();
         assert!(report.drop_rate > 0.0);
+    }
+
+    #[test]
+    fn dispatch_mode_parsing() {
+        assert_eq!(DispatchMode::parse("padded").unwrap(), DispatchMode::Padded);
+        assert_eq!(DispatchMode::parse("RAGGED").unwrap(), DispatchMode::Ragged);
+        assert_eq!(DispatchMode::parse("dropless").unwrap(), DispatchMode::Ragged);
+        assert!(DispatchMode::parse("sparse?").is_err());
+        assert_eq!(DispatchMode::Padded.name(), "padded");
+        assert_eq!(DispatchMode::Ragged.name(), "ragged");
     }
 
     #[test]

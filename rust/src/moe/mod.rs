@@ -10,4 +10,6 @@ pub mod layer;
 #[cfg(feature = "pjrt")]
 pub use expert::HloExpert;
 pub use expert::{ExpertExecutor, NativeExpert};
-pub use layer::{CommImpl, GateImpl, LayoutImpl, MoeLayer, MoeLayerOptions, StepReport};
+pub use layer::{
+    CommImpl, DispatchMode, GateImpl, LayoutImpl, MoeLayer, MoeLayerOptions, StepReport,
+};

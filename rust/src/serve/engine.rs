@@ -227,6 +227,16 @@ impl ServeEngine {
             padding_waste: decision.padding_waste,
             expert_counts: decision.expert_counts.clone(),
             aux_loss: decision.aux_loss,
+            // Serving ships only kept rows (the router's exact counts)
+            // and runs experts over exactly the kept tokens.
+            bytes_on_wire: 2 * crate::comm::ragged::offwire_bytes(
+                &decision.counts,
+                self.cfg.moe.d_model * 4,
+            ),
+            expert_flops: 4.0
+                * decision.expert_counts.iter().sum::<usize>() as f64
+                * (self.cfg.moe.d_model * self.cfg.moe.ffn_hidden) as f64,
+            comm_schedule: decision.comm.name().into(),
         };
         (total, report)
     }

@@ -16,8 +16,7 @@
 //! operators can see hot/cold experts drift with the workload.
 
 use crate::cluster::NetworkModel;
-use crate::comm::alltoall::alltoallv_timing;
-use crate::comm::hierarchical::hierarchical_alltoallv_timing;
+use crate::comm::schedule::pick_schedule;
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
 use crate::gating::{apply_capacity, make_gate, DispatchPlan, Gate, Routing};
@@ -26,35 +25,10 @@ use crate::nn::matmul;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
-/// AllToAll selection policy.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum CommChoice {
-    Flat,
-    Hierarchical,
-    /// Score both schedules per batch and take the cheaper one.
-    Auto,
-}
-
-impl CommChoice {
-    pub fn parse(s: &str) -> Result<CommChoice> {
-        Ok(match s.to_lowercase().as_str() {
-            "flat" => CommChoice::Flat,
-            "hier" | "hierarchical" => CommChoice::Hierarchical,
-            "auto" => CommChoice::Auto,
-            other => {
-                return Err(crate::config_err!("unknown comm choice '{other}'"));
-            }
-        })
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            CommChoice::Flat => "flat",
-            CommChoice::Hierarchical => "hier",
-            CommChoice::Auto => "auto",
-        }
-    }
-}
+// The AllToAll selection policy lives in `comm::schedule` — the single
+// decision procedure shared with the training layer's ragged pipeline —
+// and is re-exported here for the serving API surface.
+pub use crate::comm::schedule::CommChoice;
 
 /// Routing outcome for one admitted batch.
 #[derive(Clone, Debug)]
@@ -249,37 +223,15 @@ impl PlacementRouter {
         let waste = waste / occupied_f;
         let aux = aux / occupied_f;
 
-        // Score both schedules over the full round trip: the combine
-        // leg is the transpose of the dispatch matrix (every flow
-        // reverses), and under expert skew the two legs cost very
-        // different amounts — a hot expert's rank receives fan-in
-        // cheaply but serializes the whole fan-out on the way back.
-        let counts_t: Vec<Vec<usize>> =
-            (0..w).map(|d| (0..w).map(|s| counts[s][d]).collect()).collect();
+        // Score both schedules over the full round trip via the shared
+        // decision procedure (`comm::schedule`): the combine leg is the
+        // transpose of the dispatch matrix (every flow reverses), and
+        // under expert skew the two legs cost very different amounts —
+        // a hot expert's rank receives fan-in cheaply but serializes
+        // the whole fan-out on the way back.
         let row_bytes = self.cfg.d_model * 4;
-        let flat_dispatch = alltoallv_timing(&self.net, &counts, row_bytes).total;
-        let flat_combine = alltoallv_timing(&self.net, &counts_t, row_bytes).total;
-        let hier_dispatch =
-            hierarchical_alltoallv_timing(&self.net, &counts, row_bytes).total;
-        let hier_combine =
-            hierarchical_alltoallv_timing(&self.net, &counts_t, row_bytes).total;
-        let flat_time = flat_dispatch + flat_combine;
-        let hier_time = hier_dispatch + hier_combine;
-        let comm = match self.choice {
-            CommChoice::Flat => CommImpl::Flat,
-            CommChoice::Hierarchical => CommImpl::Hierarchical,
-            CommChoice::Auto => {
-                if hier_time < flat_time {
-                    CommImpl::Hierarchical
-                } else {
-                    CommImpl::Flat
-                }
-            }
-        };
-        let (dispatch_time, combine_time) = match comm {
-            CommImpl::Flat => (flat_dispatch, flat_combine),
-            CommImpl::Hierarchical => (hier_dispatch, hier_combine),
-        };
+        let pick = pick_schedule(&self.net, &counts, row_bytes, self.choice);
+        let comm = CommImpl::from(pick.schedule);
         match comm {
             CommImpl::Flat => self.flat_chosen += 1,
             CommImpl::Hierarchical => self.hier_chosen += 1,
@@ -291,10 +243,10 @@ impl PlacementRouter {
             counts,
             expert_counts,
             comm,
-            dispatch_time,
-            combine_time,
-            flat_time,
-            hier_time,
+            dispatch_time: pick.dispatch_time,
+            combine_time: pick.combine_time,
+            flat_time: pick.flat_time,
+            hier_time: pick.hier_time,
             drop_rate: dropped as f64 / demanded.max(1) as f64,
             padding_waste: waste,
             aux_loss: aux,

@@ -242,6 +242,7 @@ mod tests {
             padding_waste: 0.0,
             expert_counts: vec![],
             aux_loss: 0.0,
+            ..Default::default()
         }
     }
 

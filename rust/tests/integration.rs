@@ -90,7 +90,9 @@ fn hierarchical_option_equals_flat_option_outputs() {
             comm_impl,
             gate_impl: GateImpl::Fast,
             layout_impl: LayoutImpl::Optimized,
+            dispatch: hetumoe::moe::DispatchMode::Padded,
             threads: 1,
+            ..Default::default()
         };
         let layer =
             hetumoe::moe::MoeLayer::native(moe.clone(), cluster.clone(), opts, 3).unwrap();

@@ -1,0 +1,115 @@
+//! Property tests: the ragged (padding-free) dispatch pipeline is
+//! observationally identical to the padded baseline — bit-identical
+//! outputs, identical routing statistics — while moving strictly fewer
+//! bytes and reporting zero padding waste.
+
+use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
+use hetumoe::moe::{DispatchMode, MoeLayer, MoeLayerOptions};
+use hetumoe::tensor::Tensor;
+use hetumoe::util::proptest::for_all;
+use hetumoe::util::rng::Rng;
+
+fn cluster(nodes: usize, gpus: usize) -> ClusterConfig {
+    ClusterConfig { nodes, gpus_per_node: gpus, ..ClusterConfig::commodity(nodes) }
+}
+
+fn layer(
+    cfg: &MoeConfig,
+    cl: &ClusterConfig,
+    dispatch: DispatchMode,
+    threads: usize,
+    seed: u64,
+) -> MoeLayer {
+    let opts = MoeLayerOptions { dispatch, threads, ..Default::default() };
+    MoeLayer::native(cfg.clone(), cl.clone(), opts, seed).unwrap()
+}
+
+#[test]
+fn ragged_equals_padded_property() {
+    // Random gates, world sizes, capacity factors (drops allowed — both
+    // pipelines share the same capacity plan, so they must agree even
+    // when tokens are dropped).
+    for_all(24, |g| {
+        let nodes = g.usize_in(1..3);
+        let gpus = g.usize_in(1..3);
+        let w = nodes * gpus;
+        let epr = g.usize_in(2..4);
+        let e = w * epr;
+        let d = 4 * g.usize_in(1..3);
+        let tokens = g.usize_in(4..24);
+        let gate = match g.usize_in(0..3) {
+            0 => GateKind::Switch,
+            1 => GateKind::GShard,
+            _ => GateKind::TopK { k: 2 },
+        };
+        let cfg = MoeConfig {
+            num_experts: e,
+            d_model: d,
+            ffn_hidden: 2 * d,
+            capacity_factor: g.f32_in(0.4, 3.0) as f64,
+            gate: gate.clone(),
+        };
+        let cl = cluster(nodes, gpus);
+        let threads = g.usize_in(1..3);
+        let seed = g.case as u64 + 101;
+        let padded = layer(&cfg, &cl, DispatchMode::Padded, 1, seed);
+        let ragged = layer(&cfg, &cl, DispatchMode::Ragged, threads, seed);
+
+        let mut rng = Rng::seed(seed ^ 0xF00D);
+        let shards: Vec<Tensor> =
+            (0..w).map(|_| Tensor::randn(&[tokens, d], &mut rng)).collect();
+        let (a, pr) = padded.forward(&shards).unwrap();
+        let (b, rr) = ragged.forward(&shards).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                x.allclose(y, 0.0),
+                "case {}: {gate:?} {nodes}x{gpus} E={e} outputs diverged by {}",
+                g.case,
+                x.max_abs_diff(y)
+            );
+        }
+        assert_eq!(pr.expert_counts, rr.expert_counts, "case {}", g.case);
+        assert_eq!(pr.drop_rate, rr.drop_rate, "case {}", g.case);
+        assert!(
+            rr.bytes_on_wire <= pr.bytes_on_wire,
+            "case {}: ragged moved {} bytes, padded {}",
+            g.case,
+            rr.bytes_on_wire,
+            pr.bytes_on_wire
+        );
+        assert!(rr.expert_flops <= pr.expert_flops, "case {}", g.case);
+    });
+}
+
+#[test]
+fn ragged_reports_zero_padding_waste_when_capacity_unbounded() {
+    for_all(8, |g| {
+        let nodes = g.usize_in(1..3);
+        let gpus = g.usize_in(1..3);
+        let w = nodes * gpus;
+        let e = 2 * w;
+        let tokens = g.usize_in(4..32);
+        let cfg = MoeConfig {
+            num_experts: e,
+            d_model: 8,
+            ffn_hidden: 16,
+            // cap = ceil(tokens·k/E · cf) ≥ tokens·k: nothing can drop.
+            capacity_factor: e as f64 + 1.0,
+            gate: GateKind::Switch,
+        };
+        let cl = cluster(nodes, gpus);
+        let ragged = layer(&cfg, &cl, DispatchMode::Ragged, 1, g.case as u64);
+        let padded = layer(&cfg, &cl, DispatchMode::Padded, 1, g.case as u64);
+        let mut rng = Rng::seed(g.case as u64 + 7);
+        let shards: Vec<Tensor> =
+            (0..w).map(|_| Tensor::randn(&[tokens, 8], &mut rng)).collect();
+        let (_, rr) = ragged.forward(&shards).unwrap();
+        let (_, pr) = padded.forward(&shards).unwrap();
+        assert_eq!(rr.drop_rate, 0.0, "unbounded capacity must not drop");
+        assert_eq!(rr.padding_waste, 0.0, "ragged buffers hold only occupied rows");
+        assert!(
+            pr.padding_waste > 0.0,
+            "the padded pipeline pads heavily at unbounded capacity"
+        );
+    });
+}

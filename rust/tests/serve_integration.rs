@@ -215,3 +215,37 @@ fn hierarchical_beats_flat_under_nic_constrained_load() {
     );
     assert!(hier.goodput_tps >= flat.goodput_tps);
 }
+
+/// Tentpole contract of the ragged training pipeline: the per-step
+/// AllToAll schedule the training layer picks is the same decision the
+/// serving router makes for the identical traffic — both sides call
+/// `comm::schedule::pick_schedule` on the same counts.
+#[test]
+fn training_ragged_schedule_matches_router_decision() {
+    let moe = MoeConfig {
+        num_experts: 8,
+        d_model: 16,
+        ffn_hidden: 32,
+        capacity_factor: 1.5,
+        gate: GateKind::Switch,
+    };
+    let cl = cluster(2, 2);
+    let layer =
+        MoeLayer::native(moe.clone(), cl.clone(), MoeLayerOptions::default(), 23)
+            .unwrap();
+    let mut router = PlacementRouter::from_layer(&layer, CommChoice::Auto).unwrap();
+
+    let mut rng = Rng::seed(41);
+    let batch = Tensor::randn(&[48, 16], &mut rng); // 12 tokens per rank
+    let shards: Vec<Tensor> =
+        (0..4).map(|r| batch.slice_rows(r * 12, (r + 1) * 12)).collect();
+
+    let (_, report) = layer.forward(&shards).unwrap();
+    let decision = router.route_batch(&batch, 0);
+    let router_schedule = decision.comm.name();
+    assert_eq!(
+        report.comm_schedule, router_schedule,
+        "training (ragged, auto) and serving must pick the same schedule \
+         for the same traffic"
+    );
+}
