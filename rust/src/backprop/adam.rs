@@ -1,0 +1,118 @@
+//! Adam optimizer (Kingma & Ba, 2015) over flat parameter slices.
+//!
+//! The trainer's parameters live in heterogeneous containers (router
+//! weight, expert FFNs, classifier head), so the optimizer works on a
+//! parallel list of `&mut [f32]` slices — one moment pair per tensor,
+//! matched by position. Bias-corrected first/second moments, no
+//! weight decay (the paper's benchmark setup).
+
+/// Adam state for a fixed list of parameter tensors.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    /// Standard hyperparameters (β₁=0.9, β₂=0.999, ε=1e-8) with one
+    /// moment pair per tensor size in `sizes`.
+    pub fn new(lr: f32, sizes: &[usize]) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+            v: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+        }
+    }
+
+    /// Steps taken so far.
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    /// One update: `params[i]` and `grads[i]` must match the sizes the
+    /// optimizer was built with, by position.
+    pub fn step(&mut self, params: &mut [&mut [f32]], grads: &[&[f32]]) {
+        assert_eq!(params.len(), self.m.len(), "param tensor count mismatch");
+        assert_eq!(grads.len(), self.m.len(), "grad tensor count mismatch");
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for (i, p) in params.iter_mut().enumerate() {
+            let g = grads[i];
+            assert_eq!(p.len(), self.m[i].len(), "tensor {i} size mismatch");
+            assert_eq!(g.len(), self.m[i].len(), "grad {i} size mismatch");
+            let m = &mut self.m[i];
+            let v = &mut self.v[i];
+            for j in 0..g.len() {
+                m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * g[j];
+                v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * g[j] * g[j];
+                let mhat = m[j] / bc1;
+                let vhat = v[j] / bc2;
+                p[j] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adam on a convex quadratic must converge to the minimum.
+    #[test]
+    fn minimizes_quadratic() {
+        let mut x = vec![5.0f32, -3.0];
+        let mut opt = Adam::new(0.1, &[2]);
+        for _ in 0..500 {
+            let grads: Vec<f32> = x.iter().map(|&v| 2.0 * v).collect();
+            opt.step(&mut [&mut x], &[&grads]);
+        }
+        assert!(x.iter().all(|&v| v.abs() < 1e-2), "x = {x:?}");
+        assert_eq!(opt.steps(), 500);
+    }
+
+    /// First step moves every coordinate by exactly ±lr (bias-corrected
+    /// Adam's signature property, up to eps).
+    #[test]
+    fn first_step_is_lr_sized() {
+        let mut x = vec![1.0f32, -2.0, 3.0];
+        let grads = [0.5f32, -0.25, 2.0];
+        let mut opt = Adam::new(0.01, &[3]);
+        opt.step(&mut [&mut x], &[&grads[..]]);
+        let expect = [1.0 - 0.01, -2.0 + 0.01, 3.0 - 0.01];
+        for (a, b) in x.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn multiple_tensors_update_independently() {
+        let mut a = vec![1.0f32];
+        let mut b = vec![1.0f32, 1.0];
+        let mut opt = Adam::new(0.5, &[1, 2]);
+        let ga = [1.0f32];
+        let gb = [0.0f32, -1.0];
+        opt.step(&mut [&mut a, &mut b], &[&ga[..], &gb[..]]);
+        assert!(a[0] < 1.0);
+        assert_eq!(b[0], 1.0, "zero grad leaves the param untouched");
+        assert!(b[1] > 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn rejects_mismatched_sizes() {
+        let mut x = vec![0.0f32; 3];
+        let g = [0.0f32; 2];
+        let mut opt = Adam::new(0.1, &[3]);
+        opt.step(&mut [&mut x], &[&g[..]]);
+    }
+}

@@ -1,0 +1,256 @@
+//! Gate backward: combine-weight gradients → score gradients.
+//!
+//! The forward computes combine weights from the score matrix through a
+//! softmax — a *full-row* softmax for Switch (the weight is the
+//! winner's probability over all `E` experts) and a *subset* softmax
+//! for Top-K/GShard (weights renormalized over the selected slots,
+//! which is exactly a softmax restricted to the selected logits). The
+//! expert *selection* itself is discrete and gets the standard
+//! straight-through treatment: no gradient flows through which expert
+//! won, only through the weights. Slots dropped by the capacity rule
+//! contribute no output, so their incoming weight gradient is zero —
+//! but they still sit in the subset softmax's normalization, so their
+//! logits still receive gradient through the kept slots' weights.
+
+use crate::config::GateKind;
+use crate::error::Result;
+use crate::gating::Routing;
+use crate::nn::softmax_rows;
+use crate::tensor::Tensor;
+
+/// Backward of the gate's weight computation plus the auxiliary
+/// load-balancing loss: given `d_weights[t*k + j]` (gradient of the
+/// loss w.r.t. each slot's combine weight — zero for dropped or
+/// inactive slots) and the auxiliary-loss coefficient, produce the
+/// gradient w.r.t. the score matrix `[T, E]`.
+pub fn gate_backward(
+    kind: &GateKind,
+    scores: &Tensor,
+    routing: &Routing,
+    d_weights: &[f32],
+    aux_coef: f32,
+) -> Result<Tensor> {
+    let tokens = routing.tokens;
+    let e = routing.num_experts;
+    let k = routing.k;
+    if d_weights.len() != tokens * k {
+        return Err(crate::shape_err!(
+            "d_weights must be tokens*k = {}, got {}",
+            tokens * k,
+            d_weights.len()
+        ));
+    }
+    let mut probs = scores.clone();
+    softmax_rows(&mut probs);
+    let mut ds = Tensor::zeros(&[tokens, e]);
+    match kind {
+        GateKind::Switch => {
+            // w = p_win over the full row: ds_i = dw·p_win·(δ_{i,win} − p_i).
+            for t in 0..tokens {
+                let dw = d_weights[t];
+                if dw == 0.0 {
+                    continue;
+                }
+                let win = routing.expert_ids[t] as usize;
+                let p_win = routing.weights[t];
+                let prow = probs.row(t);
+                let drow = ds.row_mut(t);
+                for (i, d) in drow.iter_mut().enumerate() {
+                    let indicator = if i == win { 1.0 } else { 0.0 };
+                    *d += dw * p_win * (indicator - prow[i]);
+                }
+            }
+        }
+        GateKind::TopK { .. } | GateKind::GShard => {
+            // Subset softmax over the active slots:
+            // ds_{sel_j} = w_j·(dw_j − Σ_m dw_m·w_m).
+            for t in 0..tokens {
+                let wslots = &routing.weights[t * k..(t + 1) * k];
+                let dslots = &d_weights[t * k..(t + 1) * k];
+                let g: f32 = wslots.iter().zip(dslots).map(|(w, d)| w * d).sum();
+                let drow = ds.row_mut(t);
+                for (j, &w) in wslots.iter().enumerate() {
+                    if w == 0.0 {
+                        continue; // inactive slot (e.g. GShard's dropped 2nd)
+                    }
+                    let ei = routing.expert_ids[t * k + j] as usize;
+                    drow[ei] += w * (dslots[j] - g);
+                }
+            }
+        }
+        other => {
+            return Err(crate::config_err!(
+                "gate backward not implemented for {other:?} (Switch/TopK/GShard only)"
+            ));
+        }
+    }
+    if aux_coef != 0.0 {
+        aux_loss_grad(&mut ds, &probs, routing, aux_coef);
+    }
+    Ok(ds)
+}
+
+/// Gradient of the Switch-style auxiliary load-balancing loss
+/// `L = E · Σ_e (c_e/T)·(P_e/T)` (see [`crate::gating`]'s `aux_loss`),
+/// accumulated into `ds` with coefficient `coef`. The assignment counts
+/// `c_e` are discrete and treated as constants (the standard
+/// straight-through treatment); the router probabilities `P_e`
+/// differentiate through the softmax:
+/// `∂L/∂s_{t,i} = (E/T²)·p_{t,i}·(c_i − Σ_e c_e·p_{t,e})`.
+pub fn aux_loss_grad(ds: &mut Tensor, probs: &Tensor, routing: &Routing, coef: f32) {
+    let tokens = routing.tokens;
+    let e = routing.num_experts;
+    let k = routing.k;
+    if tokens == 0 {
+        return;
+    }
+    // Top-1 assignment counts, matching aux_loss()'s `f` vector.
+    let mut c = vec![0.0f32; e];
+    for t in 0..tokens {
+        c[routing.expert_ids[t * k] as usize] += 1.0;
+    }
+    let scale = coef * e as f32 / (tokens as f32 * tokens as f32);
+    for t in 0..tokens {
+        let prow = probs.row(t);
+        let dot: f32 = prow.iter().zip(&c).map(|(p, ce)| p * ce).sum();
+        let drow = ds.row_mut(t);
+        for (i, d) in drow.iter_mut().enumerate() {
+            *d += scale * prow[i] * (c[i] - dot);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gating::{aux_loss, Gate, SwitchGate, TopKGate};
+    use crate::util::rng::Rng;
+
+    /// Finite-difference check: loss = Σ_slot d_weights[slot]·w(slot)
+    /// so its score gradient is exactly `gate_backward(..., 0.0)`.
+    fn check_weight_grad(gate: &dyn Gate, kind: &GateKind, tokens: usize, e: usize, seed: u64) {
+        let mut rng = Rng::seed(seed);
+        let mut scores = Tensor::randn(&[tokens, e], &mut rng);
+        // Widen the score gaps so the ±eps perturbations cannot cross a
+        // discrete selection boundary (where the weight is continuous
+        // but its derivative jumps).
+        scores.scale(2.0);
+        let routing = gate.route_scores(&scores, 0);
+        let k = routing.k;
+        let d_weights: Vec<f32> = (0..tokens * k).map(|_| rng.normal_f32()).collect();
+        let ds = gate_backward(kind, &scores, &routing, &d_weights, 0.0).unwrap();
+
+        let loss = |s: &Tensor| -> f64 {
+            let r = gate.route_scores(s, 0);
+            r.weights
+                .iter()
+                .zip(&d_weights)
+                .map(|(&w, &d)| w as f64 * d as f64)
+                .sum()
+        };
+        let eps = 1e-3f32;
+        let mut sp = scores.clone();
+        let mut checked = 0usize;
+        for t in 0..tokens {
+            for i in 0..e {
+                let orig = sp.at(t, i);
+                sp.set(t, i, orig + eps);
+                let lp = loss(&sp);
+                let ids_p = gate.route_scores(&sp, 0).expert_ids;
+                sp.set(t, i, orig - eps);
+                let lm = loss(&sp);
+                let ids_m = gate.route_scores(&sp, 0).expert_ids;
+                sp.set(t, i, orig);
+                // Skip entries where the ±eps perturbation flipped the
+                // discrete expert selection (detected exactly).
+                if ids_p != routing.expert_ids || ids_m != routing.expert_ids {
+                    continue;
+                }
+                let numeric = (lp - lm) / (2.0 * eps as f64);
+                let analytic = ds.at(t, i) as f64;
+                let scale = numeric.abs().max(analytic.abs()).max(0.1);
+                assert!(
+                    (numeric - analytic).abs() / scale < 5e-2,
+                    "t={t} i={i}: numeric {numeric} vs analytic {analytic}"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > tokens * e / 2, "too few smooth entries checked");
+    }
+
+    #[test]
+    fn switch_weight_grad_matches_finite_difference() {
+        let gate = SwitchGate::new(6, 1.25);
+        check_weight_grad(&gate, &GateKind::Switch, 12, 6, 11);
+    }
+
+    #[test]
+    fn topk_weight_grad_matches_finite_difference() {
+        let gate = TopKGate::new(6, 3);
+        check_weight_grad(&gate, &GateKind::TopK { k: 3 }, 10, 6, 13);
+    }
+
+    #[test]
+    fn aux_grad_matches_finite_difference() {
+        let e = 5;
+        let tokens = 16;
+        let mut rng = Rng::seed(17);
+        let scores = Tensor::randn(&[tokens, e], &mut rng);
+        let gate = SwitchGate::new(e, 1.0);
+        let routing = gate.route_scores(&scores, 0);
+        let mut ds = Tensor::zeros(&[tokens, e]);
+        let mut probs = scores.clone();
+        softmax_rows(&mut probs);
+        aux_loss_grad(&mut ds, &probs, &routing, 1.0);
+
+        // L(s) with the assignment held fixed at the unperturbed top-1
+        // (the straight-through treatment the gradient implements).
+        let top1: Vec<u32> = (0..tokens).map(|t| routing.expert_ids[t]).collect();
+        let loss = |s: &Tensor| -> f64 {
+            let mut p = s.clone();
+            softmax_rows(&mut p);
+            aux_loss(&p, &top1, e) as f64
+        };
+        let eps = 1e-3f32;
+        let mut sp = scores.clone();
+        for t in 0..tokens {
+            for i in 0..e {
+                let orig = sp.at(t, i);
+                sp.set(t, i, orig + eps);
+                let lp = loss(&sp);
+                sp.set(t, i, orig - eps);
+                let lm = loss(&sp);
+                sp.set(t, i, orig);
+                let numeric = (lp - lm) / (2.0 * eps as f64);
+                let analytic = ds.at(t, i) as f64;
+                assert!(
+                    (numeric - analytic).abs() < 5e-3,
+                    "t={t} i={i}: numeric {numeric} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_slots_get_zero_direct_grad_but_shape_holds() {
+        let gate = SwitchGate::new(4, 1.0);
+        let mut rng = Rng::seed(3);
+        let scores = Tensor::randn(&[8, 4], &mut rng);
+        let routing = gate.route_scores(&scores, 0);
+        // All-zero d_weights (every slot dropped): no weight-path grad.
+        let ds =
+            gate_backward(&GateKind::Switch, &scores, &routing, &[0.0; 8], 0.0).unwrap();
+        assert!(ds.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn unsupported_gate_errors() {
+        let gate = SwitchGate::new(4, 1.0);
+        let mut rng = Rng::seed(4);
+        let scores = Tensor::randn(&[4, 4], &mut rng);
+        let routing = gate.route_scores(&scores, 0);
+        let r = gate_backward(&GateKind::Base, &scores, &routing, &[0.0; 4], 0.0);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,892 @@
+//! The differentiable MoE layer: Algorithm 1 forward with activation
+//! caching, and its exact backward through both dispatch pipelines.
+//!
+//! [`TrainMoeLayer`] owns concrete [`Ffn`] experts (the inference-path
+//! [`crate::moe::MoeLayer`] hides executors behind a trait object, which
+//! cannot expose parameters for updates). Construction from the same
+//! seed replays [`crate::moe::MoeLayer::native`]'s RNG stream, so the
+//! two layers hold identical parameters and the forward outputs are
+//! bit-identical (asserted in tests — the training path can never drift
+//! from the benchmarked pipeline).
+//!
+//! The backward expresses the dispatch/combine gradients as the same
+//! `comm/` exchanges on the transposed traffic: the gradient of the
+//! combine leg travels the forward-dispatch routes (transpose of the
+//! combine matrix), and the gradient of the dispatch leg travels the
+//! forward-combine routes — which is exactly what reusing
+//! [`ragged_dispatch`] + [`ragged_combine`] with the forward `kept`
+//! matrix implements. Timing and bytes are charged through the same
+//! cost models, and the flat-vs-hier schedule is picked per step from
+//! the traffic matrix just like the forward (and the serving router).
+
+use crate::cluster::{ExpertPlacement, NetworkModel};
+use crate::comm::ragged::{offwire_bytes, ragged_combine, ragged_dispatch};
+use crate::comm::schedule::{pick_schedule, Schedule};
+use crate::comm::{alltoall, hierarchical_alltoall, CommTiming};
+use crate::config::{ClusterConfig, MoeConfig};
+use crate::error::Result;
+use crate::gating::{apply_capacity, make_gate, DispatchPlan, Gate, Routing};
+use crate::layout::{gather_expert_slices, scatter_expert_slices};
+use crate::layout::{opt_layout, ragged_layout, ragged_reverse_layout, reverse_layout};
+use crate::layout::{LayoutBuffer, RaggedLayoutBuffer};
+use crate::moe::{CommImpl, DispatchMode, MoeLayerOptions, StepReport};
+use crate::nn::{matmul, matmul_nt, matmul_tn, Ffn, FfnCache};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Parameter gradients of one expert FFN.
+#[derive(Clone, Debug)]
+pub struct ExpertGrads {
+    pub dw1: Tensor, // [d, h]
+    pub db1: Vec<f32>,
+    pub dw2: Tensor, // [h, d]
+    pub db2: Vec<f32>,
+}
+
+impl ExpertGrads {
+    fn zeros(d: usize, h: usize) -> ExpertGrads {
+        ExpertGrads {
+            dw1: Tensor::zeros(&[d, h]),
+            db1: vec![0.0; h],
+            dw2: Tensor::zeros(&[h, d]),
+            db2: vec![0.0; d],
+        }
+    }
+}
+
+/// Gradients of one layer backward pass.
+#[derive(Clone, Debug)]
+pub struct LayerGrads {
+    /// Per-rank router-weight contributions `[d, E]`. The router weight
+    /// is *replicated*, so these must be summed across ranks — the
+    /// trainer charges that through `comm::allreduce`, mirroring the
+    /// dense-gradient AllReduce of real MoE training.
+    pub d_gate_weight: Vec<Tensor>,
+    /// Per-expert parameter grads, index = global expert id. Expert
+    /// parameters are *sharded* (rank `e/(E/W)` owns expert `e`), so no
+    /// reduction is needed — the exchanges already delivered every
+    /// gradient row to the owning rank.
+    pub experts: Vec<ExpertGrads>,
+}
+
+/// Forward activations saved for [`TrainMoeLayer::backward`]. The
+/// input shards themselves are *not* cached — the caller still owns
+/// them and passes them back to `backward` (no per-step copy).
+pub struct TrainCache {
+    /// Per-rank gate scores `[T, E]`.
+    pub scores: Vec<Tensor>,
+    pub routings: Vec<Routing>,
+    pub plans: Vec<DispatchPlan>,
+    /// Per-(rank, expert) kept counts — the exchange's traffic source.
+    pub kept: Vec<Vec<usize>>,
+    /// Per-expert FFN caches over the received batch (None if 0 rows).
+    pub expert_caches: Vec<Option<FfnCache>>,
+    /// Per-rank post-combine buffers in source layout (ragged order, or
+    /// the padded `[E·cap, d]` buffer) — the expert outputs each slot's
+    /// combine-weight gradient dots against.
+    pub expert_out: Vec<Vec<f32>>,
+    /// Schedule the forward exchanges ran. The backward exchanges reuse
+    /// it: gradient rows move along the same routes, so the forward's
+    /// per-step decision (from the same traffic matrix) applies — one
+    /// source of truth, evaluated once.
+    pub schedule: Schedule,
+}
+
+/// The trainable expert-parallel MoE layer.
+pub struct TrainMoeLayer {
+    pub cfg: MoeConfig,
+    pub cluster: ClusterConfig,
+    pub net: NetworkModel,
+    pub gate: Box<dyn Gate>,
+    /// Router weight `[d, E]` (replicated across ranks).
+    pub gate_weight: Tensor,
+    /// All `E` experts, index = global expert id.
+    pub experts: Vec<Ffn>,
+    pub opts: MoeLayerOptions,
+}
+
+impl TrainMoeLayer {
+    /// Build with the exact RNG stream of [`crate::moe::MoeLayer::native`],
+    /// so both layers hold bit-identical parameters for a given seed.
+    pub fn native(
+        cfg: MoeConfig,
+        cluster: ClusterConfig,
+        opts: MoeLayerOptions,
+        seed: u64,
+    ) -> Result<TrainMoeLayer> {
+        cfg.validate()?;
+        let w = cluster.world();
+        if cfg.num_experts % w != 0 {
+            return Err(crate::config_err!(
+                "num_experts {} must divide by world {w}",
+                cfg.num_experts
+            ));
+        }
+        let mut rng = Rng::seed(seed);
+        let experts: Vec<Ffn> = (0..cfg.num_experts)
+            .map(|_| Ffn::init(cfg.d_model, cfg.ffn_hidden, &mut rng))
+            .collect();
+        let mut gate_weight = Tensor::randn(&[cfg.d_model, cfg.num_experts], &mut rng);
+        gate_weight.scale(1.0 / (cfg.d_model as f32).sqrt());
+        let gate = make_gate(&cfg, 1, None)?;
+        let net = NetworkModel::new(cluster.clone());
+        Ok(TrainMoeLayer { cfg, cluster, net, gate, gate_weight, experts, opts })
+    }
+
+    /// The shared expert placement.
+    pub fn placement(&self) -> ExpertPlacement {
+        ExpertPlacement::new(self.cfg.num_experts, self.cluster.world())
+    }
+
+    /// Total trainable parameter count (router + experts).
+    pub fn num_params(&self) -> usize {
+        self.gate_weight.len() + self.experts.iter().map(|f| f.num_params()).sum::<usize>()
+    }
+
+    fn run_alltoall(&self, flat: &mut [Vec<f32>]) -> Result<CommTiming> {
+        match self.opts.comm_impl {
+            CommImpl::Flat => alltoall(&self.net, flat),
+            CommImpl::Hierarchical => hierarchical_alltoall(&self.net, flat),
+        }
+    }
+
+    /// Forward over per-rank token shards `[T, d]`, saving everything the
+    /// backward needs. Outputs are bit-identical to
+    /// [`crate::moe::MoeLayer::forward`] with the same seed and options.
+    pub fn forward_t(
+        &self,
+        shards: &[Tensor],
+        step: u64,
+    ) -> Result<(Vec<Tensor>, StepReport, TrainCache)> {
+        let w = self.cluster.world();
+        if shards.len() != w {
+            return Err(crate::shape_err!("got {} shards for world {w}", shards.len()));
+        }
+        let d = self.cfg.d_model;
+        let local_tokens = shards[0].rows();
+        for s in shards {
+            if s.rows() != local_tokens || s.row_len() != d {
+                return Err(crate::shape_err!("ragged shards"));
+            }
+        }
+        let cap = self.cfg.capacity(local_tokens);
+        let mut report = StepReport::default();
+        let mut expert_counts = vec![0usize; self.cfg.num_experts];
+
+        // ---- Step 1: gate scores, routing, capacity plan ----
+        let mut scores_all = Vec::with_capacity(w);
+        let mut routings = Vec::with_capacity(w);
+        let mut plans: Vec<DispatchPlan> = Vec::with_capacity(w);
+        let g0 = Instant::now();
+        for shard in shards {
+            let scores = matmul(shard, &self.gate_weight);
+            let routing = self.gate.route_scores(&scores, step);
+            for (i, c) in routing.expert_counts().into_iter().enumerate() {
+                expert_counts[i] += c;
+            }
+            report.aux_loss += routing.aux_loss as f64 / w as f64;
+            let plan = apply_capacity(&routing, cap);
+            report.drop_rate += plan.drop_rate() / w as f64;
+            if self.opts.dispatch == DispatchMode::Padded {
+                report.padding_waste += plan.padding_waste() / w as f64;
+            }
+            scores_all.push(scores);
+            routings.push(routing);
+            plans.push(plan);
+        }
+        report.wall.push(("gate".into(), g0.elapsed().as_secs_f64() / w as f64));
+        report.expert_counts = expert_counts;
+
+        let kept: Vec<Vec<usize>> = plans.iter().map(|p| p.kept.clone()).collect();
+        let (outputs, expert_caches, expert_out, schedule) = match self.opts.dispatch {
+            DispatchMode::Ragged => self.forward_ragged(shards, &plans, &kept, &mut report)?,
+            DispatchMode::Padded => self.forward_padded(shards, &plans, &mut report)?,
+        };
+
+        let cache = TrainCache {
+            scores: scores_all,
+            routings,
+            plans,
+            kept,
+            expert_caches,
+            expert_out,
+            schedule,
+        };
+        Ok((outputs, report, cache))
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn forward_ragged(
+        &self,
+        shards: &[Tensor],
+        plans: &[DispatchPlan],
+        kept: &[Vec<usize>],
+        report: &mut StepReport,
+    ) -> Result<(Vec<Tensor>, Vec<Option<FfnCache>>, Vec<Vec<f32>>, Schedule)> {
+        let w = self.cluster.world();
+        let d = self.cfg.d_model;
+        let placement = self.placement();
+        let epr = placement.experts_per_rank();
+
+        // ---- Step 2: ragged layout ----
+        let l0 = Instant::now();
+        let buffers: Vec<RaggedLayoutBuffer> = shards
+            .iter()
+            .zip(plans)
+            .map(|(shard, plan)| ragged_layout(shard, plan, self.opts.threads))
+            .collect();
+        report.wall.push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
+
+        // ---- Schedule selection (shared decision procedure) ----
+        let counts = placement.traffic_matrix(kept);
+        let pick = pick_schedule(&self.net, &counts, d * 4, self.opts.alltoall);
+        let schedule = pick.schedule;
+        report.comm_schedule = schedule.name().into();
+
+        // ---- Step 3: ragged dispatch ----
+        let mut flat: Vec<Vec<f32>> = buffers.into_iter().map(|b| b.data.into_vec()).collect();
+        let timing = ragged_dispatch(&self.net, &mut flat, kept, d, schedule)?;
+        report.comm.push(("alltoall_dispatch".into(), timing.total));
+
+        // ---- Step 4: grouped expert compute, caching activations ----
+        let x0 = Instant::now();
+        let mut expert_caches: Vec<Option<FfnCache>> = Vec::new();
+        expert_caches.resize_with(self.cfg.num_experts, || None);
+        for (r, buf) in flat.iter_mut().enumerate() {
+            let mut off = 0usize;
+            for le in 0..epr {
+                let ge = placement.expert_of(r, le);
+                let n: usize = kept.iter().map(|row| row[ge]).sum();
+                if n > 0 {
+                    let rows = Tensor::from_vec(buf[off..off + n * d].to_vec(), &[n, d])?;
+                    let (out, fcache) = self.experts[ge].forward_cached(&rows);
+                    report.expert_flops += self.experts[ge].flops(n) as f64;
+                    buf[off..off + n * d].copy_from_slice(out.data());
+                    expert_caches[ge] = Some(fcache);
+                }
+                off += n * d;
+            }
+        }
+        report.wall.push(("expert".into(), x0.elapsed().as_secs_f64() / w as f64));
+
+        // ---- Step 5: ragged combine ----
+        let timing2 = ragged_combine(&self.net, &mut flat, kept, d, schedule)?;
+        report.comm.push(("alltoall_combine".into(), timing2.total));
+        report.bytes_on_wire = 2 * offwire_bytes(&counts, d * 4);
+
+        // ---- Step 6: reverse layout, then keep the expert outputs for
+        // the backward's combine-weight gradients (ownership moves
+        // through the reverse buffer and back out — no clone) ----
+        let r0 = Instant::now();
+        let mut outputs = Vec::with_capacity(w);
+        let mut expert_out: Vec<Vec<f32>> = Vec::with_capacity(w);
+        for (rank, plan) in plans.iter().enumerate() {
+            let buffer =
+                RaggedLayoutBuffer::from_plan(std::mem::take(&mut flat[rank]), plan, d)?;
+            outputs.push(ragged_reverse_layout(&buffer, plan, self.opts.threads));
+            expert_out.push(buffer.data.into_vec());
+        }
+        report.wall.push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
+        Ok((outputs, expert_caches, expert_out, schedule))
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn forward_padded(
+        &self,
+        shards: &[Tensor],
+        plans: &[DispatchPlan],
+        report: &mut StepReport,
+    ) -> Result<(Vec<Tensor>, Vec<Option<FfnCache>>, Vec<Vec<f32>>, Schedule)> {
+        let w = self.cluster.world();
+        let d = self.cfg.d_model;
+        let e = self.cfg.num_experts;
+        let placement = self.placement();
+        let epr = placement.experts_per_rank();
+        let cap = plans[0].capacity;
+
+        // ---- Step 2: padded layout ----
+        let l0 = Instant::now();
+        let buffers: Vec<LayoutBuffer> = shards
+            .iter()
+            .zip(plans)
+            .map(|(shard, plan)| opt_layout(shard, plan, self.opts.threads))
+            .collect();
+        report.wall.push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
+
+        // ---- Step 3: equal-chunk AllToAll dispatch ----
+        let mut flat: Vec<Vec<f32>> = buffers.into_iter().map(|b| b.data.into_vec()).collect();
+        let timing = self.run_alltoall(&mut flat)?;
+        report.comm.push(("alltoall_dispatch".into(), timing.total));
+        let schedule = match self.opts.comm_impl {
+            CommImpl::Flat => Schedule::Flat,
+            CommImpl::Hierarchical => Schedule::Hierarchical,
+        };
+        report.comm_schedule = schedule.name().into();
+
+        // ---- Step 4: expert compute over capacity slices, cached ----
+        // After AllToAll rank r's buffer is [W, epr, cap, d]; gather each
+        // local expert's rows source-major (same order as the ragged
+        // receive layout, with padding rows interleaved — the zero rows
+        // drop out of every gradient sum, which is what makes the two
+        // backward paths bit-identical).
+        let x0 = Instant::now();
+        let mut expert_caches: Vec<Option<FfnCache>> = Vec::new();
+        expert_caches.resize_with(e, || None);
+        for (r, buf) in flat.iter_mut().enumerate() {
+            if epr == 1 {
+                // One expert per rank: the received buffer already is
+                // that expert's contiguous batch — run it in place, no
+                // gather/scatter copies (the inference layer's fast
+                // path).
+                let rows = Tensor::from_vec(std::mem::take(buf), &[w * cap, d])?;
+                let (out, fcache) = self.experts[r].forward_cached(&rows);
+                report.expert_flops += self.experts[r].flops(w * cap) as f64;
+                *buf = out.into_vec();
+                expert_caches[r] = Some(fcache);
+                continue;
+            }
+            // One scratch per rank, reused across its local experts.
+            let mut rows = Tensor::zeros(&[w * cap, d]);
+            for le in 0..epr {
+                let ge = placement.expert_of(r, le);
+                gather_expert_slices(buf, &mut rows, w, epr, le, cap);
+                let (out, fcache) = self.experts[ge].forward_cached(&rows);
+                report.expert_flops += self.experts[ge].flops(w * cap) as f64;
+                scatter_expert_slices(buf, out.data(), w, epr, le, cap, d);
+                expert_caches[ge] = Some(fcache);
+            }
+        }
+        report.wall.push(("expert".into(), x0.elapsed().as_secs_f64() / w as f64));
+
+        // ---- Step 5: AllToAll combine ----
+        let timing2 = self.run_alltoall(&mut flat)?;
+        report.comm.push(("alltoall_combine".into(), timing2.total));
+        report.bytes_on_wire = 2 * w * w.saturating_sub(1) * epr * cap * d * 4;
+
+        // ---- Step 6: reverse layout, then keep the expert outputs for
+        // the backward's combine-weight gradients (ownership moves
+        // through the reverse buffer and back out — no clone) ----
+        let r0 = Instant::now();
+        let mut outputs = Vec::with_capacity(w);
+        let mut expert_out: Vec<Vec<f32>> = Vec::with_capacity(w);
+        for (rank, plan) in plans.iter().enumerate() {
+            let buffer = LayoutBuffer {
+                data: Tensor::from_vec(std::mem::take(&mut flat[rank]), &[e * cap, d])?,
+                capacity: cap,
+                num_experts: e,
+            };
+            outputs.push(reverse_layout(&buffer, plan, self.opts.threads));
+            expert_out.push(buffer.data.into_vec());
+        }
+        report.wall.push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
+        Ok((outputs, expert_caches, expert_out, schedule))
+    }
+
+    /// Backward over per-rank upstream gradients `dy [T, d]`. `shards`
+    /// must be the same inputs the forward ran on (the router-weight
+    /// gradient needs them; they are not cached to avoid a per-step
+    /// copy).
+    ///
+    /// Returns the input gradients (per rank), the parameter gradients,
+    /// and a backward [`StepReport`] (wall phases `bwd_*`, comm phases
+    /// `alltoall_*_bwd`, bytes-on-wire and schedule of the backward
+    /// exchanges) to be folded into the forward report via
+    /// [`StepReport::absorb_backward`].
+    pub fn backward(
+        &self,
+        shards: &[Tensor],
+        dy_shards: &[Tensor],
+        cache: &TrainCache,
+        aux_coef: f32,
+    ) -> Result<(Vec<Tensor>, LayerGrads, StepReport)> {
+        let w = self.cluster.world();
+        if dy_shards.len() != w || shards.len() != w {
+            return Err(crate::shape_err!(
+                "got {} shards / {} dy shards for world {w}",
+                shards.len(),
+                dy_shards.len()
+            ));
+        }
+        let d = self.cfg.d_model;
+        let mut report = StepReport::default();
+
+        // ---- Combine backward: slot gradients + weighted dy scatter ----
+        let s0 = Instant::now();
+        let mut d_weights_all: Vec<Vec<f32>> = Vec::with_capacity(w);
+        let mut dbufs: Vec<Vec<f32>> = Vec::with_capacity(w);
+        for rank in 0..w {
+            let plan = &cache.plans[rank];
+            let dy = &dy_shards[rank];
+            if dy.rows() != plan.tokens || dy.row_len() != d {
+                return Err(crate::shape_err!("dy shard {rank} has wrong shape"));
+            }
+            let (dw, dbuf) =
+                scatter_grad(plan, dy, &cache.expert_out[rank], d, self.opts.dispatch);
+            d_weights_all.push(dw);
+            dbufs.push(dbuf);
+        }
+        report.wall.push(("bwd_scatter".into(), s0.elapsed().as_secs_f64() / w as f64));
+
+        // ---- Backward exchanges + expert backward ----
+        let mut grads = LayerGrads {
+            d_gate_weight: Vec::with_capacity(w),
+            experts: self
+                .experts
+                .iter()
+                .map(|f| ExpertGrads::zeros(f.d, f.h))
+                .collect(),
+        };
+        match self.opts.dispatch {
+            DispatchMode::Ragged => {
+                self.backward_exchange_ragged(cache, &mut dbufs, &mut grads, &mut report)?;
+            }
+            DispatchMode::Padded => {
+                self.backward_exchange_padded(cache, &mut dbufs, &mut grads, &mut report)?;
+            }
+        }
+
+        // ---- Reverse scatter: input grads from the expert path ----
+        let r0 = Instant::now();
+        let mut dx_shards: Vec<Tensor> = Vec::with_capacity(w);
+        for rank in 0..w {
+            let plan = &cache.plans[rank];
+            let mut dx = Tensor::zeros(&[plan.tokens, d]);
+            accumulate_input_grad(plan, &dbufs[rank], d, self.opts.dispatch, &mut dx);
+            dx_shards.push(dx);
+        }
+        report.wall.push(("bwd_reverse".into(), r0.elapsed().as_secs_f64() / w as f64));
+
+        // ---- Gate backward: scores → router weight + input grads ----
+        let g0 = Instant::now();
+        for rank in 0..w {
+            let ds = crate::backprop::gate::gate_backward(
+                &self.cfg.gate,
+                &cache.scores[rank],
+                &cache.routings[rank],
+                &d_weights_all[rank],
+                aux_coef,
+            )?;
+            grads.d_gate_weight.push(matmul_tn(&shards[rank], &ds));
+            dx_shards[rank].add_assign(&matmul_nt(&ds, &self.gate_weight));
+        }
+        report.wall.push(("bwd_gate".into(), g0.elapsed().as_secs_f64() / w as f64));
+
+        Ok((dx_shards, grads, report))
+    }
+
+    fn backward_exchange_ragged(
+        &self,
+        cache: &TrainCache,
+        dbufs: &mut [Vec<f32>],
+        grads: &mut LayerGrads,
+        report: &mut StepReport,
+    ) -> Result<()> {
+        let w = self.cluster.world();
+        let d = self.cfg.d_model;
+        let placement = self.placement();
+        let epr = placement.experts_per_rank();
+        let counts = placement.traffic_matrix(&cache.kept);
+
+        // The backward exchanges reuse the forward's per-step schedule
+        // decision: gradient rows travel the same routes, so the same
+        // traffic matrix (and therefore the same `pick_schedule`
+        // outcome) governs both directions.
+        let schedule = cache.schedule;
+        report.comm_schedule = schedule.name().into();
+
+        // The combine-leg gradient travels the forward-dispatch routes.
+        let timing = ragged_dispatch(&self.net, dbufs, &cache.kept, d, schedule)?;
+        report.comm.push(("alltoall_dispatch_bwd".into(), timing.total));
+
+        // Expert backward over each contiguous gradient batch.
+        let x0 = Instant::now();
+        for (r, buf) in dbufs.iter_mut().enumerate() {
+            let mut off = 0usize;
+            for le in 0..epr {
+                let ge = placement.expert_of(r, le);
+                let n: usize = cache.kept.iter().map(|row| row[ge]).sum();
+                if n > 0 {
+                    let dy_e = Tensor::from_vec(buf[off..off + n * d].to_vec(), &[n, d])?;
+                    let fcache = cache.expert_caches[ge]
+                        .as_ref()
+                        .ok_or_else(|| crate::shape_err!("missing cache for expert {ge}"))?;
+                    let fg = self.experts[ge].backward(fcache, &dy_e);
+                    report.expert_flops += 2.0 * self.experts[ge].flops(n) as f64;
+                    buf[off..off + n * d].copy_from_slice(fg.dx.data());
+                    grads.experts[ge] =
+                        ExpertGrads { dw1: fg.dw1, db1: fg.db1, dw2: fg.dw2, db2: fg.db2 };
+                }
+                off += n * d;
+            }
+        }
+        report.wall.push(("bwd_expert".into(), x0.elapsed().as_secs_f64() / w as f64));
+
+        // The dispatch-leg gradient travels the forward-combine routes.
+        let timing2 = ragged_combine(&self.net, dbufs, &cache.kept, d, schedule)?;
+        report.comm.push(("alltoall_combine_bwd".into(), timing2.total));
+        report.bytes_on_wire = 2 * offwire_bytes(&counts, d * 4);
+        Ok(())
+    }
+
+    fn backward_exchange_padded(
+        &self,
+        cache: &TrainCache,
+        dbufs: &mut [Vec<f32>],
+        grads: &mut LayerGrads,
+        report: &mut StepReport,
+    ) -> Result<()> {
+        let w = self.cluster.world();
+        let d = self.cfg.d_model;
+        let placement = self.placement();
+        let epr = placement.experts_per_rank();
+        let cap = cache.plans[0].capacity;
+        report.comm_schedule = self.opts.comm_impl.name().into();
+
+        let timing = self.run_alltoall(dbufs)?;
+        report.comm.push(("alltoall_dispatch_bwd".into(), timing.total));
+
+        let x0 = Instant::now();
+        for (r, buf) in dbufs.iter_mut().enumerate() {
+            if epr == 1 {
+                // In-place fast path, mirroring the forward.
+                let rows = Tensor::from_vec(std::mem::take(buf), &[w * cap, d])?;
+                let fcache = cache.expert_caches[r]
+                    .as_ref()
+                    .ok_or_else(|| crate::shape_err!("missing cache for expert {r}"))?;
+                let fg = self.experts[r].backward(fcache, &rows);
+                report.expert_flops += 2.0 * self.experts[r].flops(w * cap) as f64;
+                *buf = fg.dx.into_vec();
+                grads.experts[r] =
+                    ExpertGrads { dw1: fg.dw1, db1: fg.db1, dw2: fg.dw2, db2: fg.db2 };
+                continue;
+            }
+            // One scratch per rank, reused across its local experts.
+            let mut rows = Tensor::zeros(&[w * cap, d]);
+            for le in 0..epr {
+                let ge = placement.expert_of(r, le);
+                gather_expert_slices(buf, &mut rows, w, epr, le, cap);
+                let fcache = cache.expert_caches[ge]
+                    .as_ref()
+                    .ok_or_else(|| crate::shape_err!("missing cache for expert {ge}"))?;
+                let fg = self.experts[ge].backward(fcache, &rows);
+                report.expert_flops += 2.0 * self.experts[ge].flops(w * cap) as f64;
+                scatter_expert_slices(buf, fg.dx.data(), w, epr, le, cap, d);
+                grads.experts[ge] =
+                    ExpertGrads { dw1: fg.dw1, db1: fg.db1, dw2: fg.dw2, db2: fg.db2 };
+            }
+        }
+        report.wall.push(("bwd_expert".into(), x0.elapsed().as_secs_f64() / w as f64));
+
+        let timing2 = self.run_alltoall(dbufs)?;
+        report.comm.push(("alltoall_combine_bwd".into(), timing2.total));
+        report.bytes_on_wire = 2 * w * w.saturating_sub(1) * epr * cap * d * 4;
+        Ok(())
+    }
+}
+
+/// Combine backward: returns per-slot combine-weight gradients
+/// (`dw_slot = dy_t · expert_out_row`) and the weighted
+/// upstream-gradient buffer (`w_slot · dy_t` at the slot's row), in the
+/// dispatch mode's source layout, ready for the backward dispatch
+/// exchange. In padded mode the untouched padding rows stay zero and
+/// vanish from every downstream gradient sum — the other half of the
+/// padded/ragged bit-identical-gradients invariant.
+fn scatter_grad(
+    plan: &DispatchPlan,
+    dy: &Tensor,
+    expert_out: &[f32],
+    d: usize,
+    mode: DispatchMode,
+) -> (Vec<f32>, Vec<f32>) {
+    let offsets = plan.ragged_offsets();
+    let rows = match mode {
+        DispatchMode::Ragged => plan.occupied_rows(),
+        DispatchMode::Padded => plan.buffer_rows(),
+    };
+    let mut d_weights = vec![0.0f32; plan.tokens * plan.k];
+    let mut dbuf = vec![0.0f32; rows * d];
+    for t in 0..plan.tokens {
+        let dyrow = dy.row(t);
+        for j in 0..plan.k {
+            let slot = t * plan.k + j;
+            let dest = plan.dest[slot];
+            if dest == u32::MAX {
+                continue;
+            }
+            let row = match mode {
+                DispatchMode::Ragged => {
+                    RaggedLayoutBuffer::ragged_row(&offsets, plan.capacity, dest as usize)
+                }
+                DispatchMode::Padded => dest as usize,
+            };
+            let orow = &expert_out[row * d..(row + 1) * d];
+            let mut acc = 0.0f32;
+            for (a, b) in dyrow.iter().zip(orow) {
+                acc += a * b;
+            }
+            d_weights[slot] = acc;
+            let wgt = plan.weights[slot];
+            let drow = &mut dbuf[row * d..(row + 1) * d];
+            for (o, &g) in drow.iter_mut().zip(dyrow) {
+                *o = wgt * g;
+            }
+        }
+    }
+    (d_weights, dbuf)
+}
+
+/// Dispatch backward: gather each token's returned input-row gradients
+/// (weights were already applied on the way out, so the sum here is
+/// unweighted; dropped slots contribute nothing).
+fn accumulate_input_grad(
+    plan: &DispatchPlan,
+    dbuf: &[f32],
+    d: usize,
+    mode: DispatchMode,
+    dx: &mut Tensor,
+) {
+    let offsets = plan.ragged_offsets();
+    for t in 0..plan.tokens {
+        let dst = dx.row_mut(t);
+        for j in 0..plan.k {
+            let slot = t * plan.k + j;
+            let dest = plan.dest[slot];
+            if dest == u32::MAX {
+                continue;
+            }
+            let row = match mode {
+                DispatchMode::Ragged => {
+                    RaggedLayoutBuffer::ragged_row(&offsets, plan.capacity, dest as usize)
+                }
+                DispatchMode::Padded => dest as usize,
+            };
+            let src = &dbuf[row * d..(row + 1) * d];
+            for (o, &g) in dst.iter_mut().zip(src) {
+                *o += g;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GateKind;
+    use crate::moe::MoeLayer;
+
+    fn tiny_cfg(gate: GateKind) -> MoeConfig {
+        MoeConfig {
+            num_experts: 4,
+            d_model: 8,
+            ffn_hidden: 16,
+            capacity_factor: 4.0,
+            gate,
+        }
+    }
+
+    fn small_cluster() -> ClusterConfig {
+        ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) }
+    }
+
+    fn shards_for(world: usize, tokens: usize, d: usize, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::seed(seed);
+        (0..world).map(|_| Tensor::randn(&[tokens, d], &mut rng)).collect()
+    }
+
+    #[test]
+    fn forward_matches_inference_layer_bitwise() {
+        for dispatch in [DispatchMode::Ragged, DispatchMode::Padded] {
+            let opts = MoeLayerOptions { dispatch, ..Default::default() };
+            let layer = MoeLayer::native(
+                tiny_cfg(GateKind::Switch),
+                small_cluster(),
+                opts.clone(),
+                42,
+            )
+            .unwrap();
+            let train =
+                TrainMoeLayer::native(tiny_cfg(GateKind::Switch), small_cluster(), opts, 42)
+                    .unwrap();
+            let shards = shards_for(4, 12, 8, 7);
+            let (a, ra) = layer.forward(&shards).unwrap();
+            let (b, rb, cache) = train.forward_t(&shards, 0).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert!(x.allclose(y, 0.0), "{dispatch:?}: outputs must be bit-identical");
+            }
+            assert_eq!(ra.expert_counts, rb.expert_counts);
+            assert_eq!(ra.comm_schedule, rb.comm_schedule);
+            assert_eq!(cache.plans.len(), 4);
+        }
+    }
+
+    #[test]
+    fn ragged_and_padded_backward_grads_bitwise_equal() {
+        for gate in [GateKind::Switch, GateKind::TopK { k: 2 }, GateKind::GShard] {
+            let mk = |dispatch| {
+                TrainMoeLayer::native(
+                    tiny_cfg(gate.clone()),
+                    small_cluster(),
+                    MoeLayerOptions { dispatch, ..Default::default() },
+                    17,
+                )
+                .unwrap()
+            };
+            let ragged = mk(DispatchMode::Ragged);
+            let padded = mk(DispatchMode::Padded);
+            let shards = shards_for(4, 16, 8, 3);
+            let dy = shards_for(4, 16, 8, 5);
+            let (_, _, rc) = ragged.forward_t(&shards, 0).unwrap();
+            let (_, _, pc) = padded.forward_t(&shards, 0).unwrap();
+            let (rdx, rg, _) = ragged.backward(&shards, &dy, &rc, 0.01).unwrap();
+            let (pdx, pg, _) = padded.backward(&shards, &dy, &pc, 0.01).unwrap();
+            for (a, b) in rdx.iter().zip(&pdx) {
+                assert!(a.allclose(b, 0.0), "{gate:?}: dx must be bit-identical");
+            }
+            for (a, b) in rg.d_gate_weight.iter().zip(&pg.d_gate_weight) {
+                assert!(a.allclose(b, 0.0), "{gate:?}: d_gate_weight");
+            }
+            for (a, b) in rg.experts.iter().zip(&pg.experts) {
+                assert!(a.dw1.allclose(&b.dw1, 0.0), "{gate:?}: dw1");
+                assert!(a.dw2.allclose(&b.dw2, 0.0), "{gate:?}: dw2");
+                assert_eq!(a.db1.len(), b.db1.len());
+                for (x, y) in a.db1.iter().zip(&b.db1) {
+                    assert!((x - y).abs() == 0.0, "{gate:?}: db1");
+                }
+                for (x, y) in a.db2.iter().zip(&b.db2) {
+                    assert!((x - y).abs() == 0.0, "{gate:?}: db2");
+                }
+            }
+        }
+    }
+
+    /// Finite-difference check of the full layer backward: scalar loss
+    /// `L = Σ dy ⊙ Y(θ)` over every rank, checked against a sample of
+    /// router-weight and expert-parameter entries.
+    #[test]
+    fn layer_backward_matches_finite_differences() {
+        let cfg = tiny_cfg(GateKind::Switch);
+        let cluster = small_cluster();
+        let mut train =
+            TrainMoeLayer::native(cfg, cluster, MoeLayerOptions::default(), 9).unwrap();
+        let shards = shards_for(4, 8, 8, 21);
+        let dy = shards_for(4, 8, 8, 23);
+        let loss = |layer: &TrainMoeLayer| -> f64 {
+            let (outs, _, _) = layer.forward_t(&shards, 0).unwrap();
+            outs.iter()
+                .zip(&dy)
+                .map(|(o, g)| {
+                    o.data()
+                        .iter()
+                        .zip(g.data())
+                        .map(|(&a, &b)| a as f64 * b as f64)
+                        .sum::<f64>()
+                })
+                .sum()
+        };
+        let (_, _, cache) = train.forward_t(&shards, 0).unwrap();
+        let (_, grads, _) = train.backward(&shards, &dy, &cache, 0.0).unwrap();
+        // Router weight: per-rank contributions sum to the full grad.
+        let mut d_gw = Tensor::zeros(&[8, 4]);
+        for g in &grads.d_gate_weight {
+            d_gw.add_assign(g);
+        }
+        // The discrete expert selection makes the loss only piecewise
+        // smooth in the router weight: a finite-difference entry is
+        // valid only if the ±eps perturbations leave every token's
+        // selection unchanged (detected exactly, not heuristically).
+        let routing_ids = |layer: &TrainMoeLayer| -> Vec<Vec<u32>> {
+            shards
+                .iter()
+                .map(|s| {
+                    let scores = matmul(s, &layer.gate_weight);
+                    layer.gate.route_scores(&scores, 0).expert_ids
+                })
+                .collect()
+        };
+        let base_ids = routing_ids(&train);
+        let eps = 1e-2f32;
+        let mut checked = 0usize;
+        for idx in [0usize, 3, 5, 9, 13, 18, 22, 27, 30] {
+            let orig = train.gate_weight.data()[idx];
+            train.gate_weight.data_mut()[idx] = orig + eps;
+            let lp = loss(&train);
+            let ids_p = routing_ids(&train);
+            train.gate_weight.data_mut()[idx] = orig - eps;
+            let lm = loss(&train);
+            let ids_m = routing_ids(&train);
+            train.gate_weight.data_mut()[idx] = orig;
+            if ids_p != base_ids || ids_m != base_ids {
+                continue; // perturbation crossed a routing boundary
+            }
+            let numeric = (lp - lm) / (2.0 * eps as f64);
+            let analytic = d_gw.data()[idx] as f64;
+            let scale = numeric.abs().max(analytic.abs()).max(1.0);
+            assert!(
+                (numeric - analytic).abs() / scale < 5e-2,
+                "gate_weight[{idx}]: numeric {numeric} vs analytic {analytic}"
+            );
+            checked += 1;
+        }
+        assert!(checked >= 3, "only {checked} smooth entries found");
+        // Expert 0's first-layer weight.
+        for idx in [0usize, 17, 40] {
+            let orig = train.experts[0].w1.data()[idx];
+            train.experts[0].w1.data_mut()[idx] = orig + eps;
+            let lp = loss(&train);
+            train.experts[0].w1.data_mut()[idx] = orig - eps;
+            let lm = loss(&train);
+            train.experts[0].w1.data_mut()[idx] = orig;
+            let numeric = (lp - lm) / (2.0 * eps as f64);
+            let analytic = grads.experts[0].dw1.data()[idx] as f64;
+            let scale = numeric.abs().max(analytic.abs()).max(1.0);
+            assert!(
+                (numeric - analytic).abs() / scale < 5e-2,
+                "expert0.w1[{idx}]: numeric {numeric} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn backward_report_attributes_comm_like_forward() {
+        let train = TrainMoeLayer::native(
+            tiny_cfg(GateKind::Switch),
+            small_cluster(),
+            MoeLayerOptions::default(),
+            31,
+        )
+        .unwrap();
+        let shards = shards_for(4, 16, 8, 29);
+        let dy = shards_for(4, 16, 8, 33);
+        let (_, mut report, cache) = train.forward_t(&shards, 0).unwrap();
+        let (_, _, bwd) = train.backward(&shards, &dy, &cache, 0.01).unwrap();
+        assert!(bwd.comm.iter().any(|(n, _)| n == "alltoall_dispatch_bwd"));
+        assert!(bwd.comm.iter().any(|(n, _)| n == "alltoall_combine_bwd"));
+        assert!(bwd.bytes_on_wire > 0);
+        // Backward moves the same gradient rows the forward moved tokens:
+        // identical traffic matrix, identical bytes.
+        assert_eq!(bwd.bytes_on_wire, report.bytes_on_wire);
+        assert!(bwd.comm_schedule == "flat" || bwd.comm_schedule == "hier");
+        report.absorb_backward(bwd);
+        assert_eq!(report.bytes_on_wire_bwd, report.bytes_on_wire);
+        assert!(!report.comm_schedule_bwd.is_empty());
+        assert!(report.wall_phase("bwd_expert") >= 0.0);
+    }
+
+    #[test]
+    fn dropped_tokens_block_expert_grads_but_not_gate_path() {
+        let mut cfg = tiny_cfg(GateKind::Switch);
+        cfg.capacity_factor = 0.25; // heavy drops
+        let train =
+            TrainMoeLayer::native(cfg, small_cluster(), MoeLayerOptions::default(), 3).unwrap();
+        let shards = shards_for(4, 32, 8, 41);
+        let dy = shards_for(4, 32, 8, 43);
+        let (_, report, cache) = train.forward_t(&shards, 0).unwrap();
+        assert!(report.drop_rate > 0.0);
+        let (dx, _, _) = train.backward(&shards, &dy, &cache, 0.0).unwrap();
+        // Dropped tokens get no expert-path gradient, but every token
+        // still gets the gate-score path; shapes must hold.
+        assert_eq!(dx.len(), 4);
+        assert_eq!(dx[0].shape(), &[32, 8]);
+    }
+}

@@ -1,0 +1,50 @@
+//! Pure-Rust end-to-end MoE training: the backward pass of the full
+//! Algorithm-1 pipeline, the auxiliary load-balancing loss gradient, an
+//! Adam optimizer, and a native [`NativeTrainer`] loop — no `pjrt`
+//! feature required.
+//!
+//! Gradient flow mirrors the forward pipeline in reverse (DESIGN.md §9):
+//!
+//! 1. **Combine backward** — the upstream gradient `dY` is split per
+//!    routed slot: `d(expert output row) = w_slot · dY_t` (scattered
+//!    with the same [`DispatchPlan`] the forward used; dropped tokens
+//!    contribute nothing), and `d w_slot = dY_t · expert_out_row`.
+//! 2. **Exchange backward** — the slot gradients travel to the expert
+//!    ranks over the *same* routes as the forward dispatch (the
+//!    backward of the combine leg is the transpose of the combine
+//!    traffic, i.e. the forward dispatch matrix), reusing
+//!    [`ragged_dispatch`]/[`ragged_combine`] and the
+//!    `alltoallv_timing` cost models, so backward bytes-on-wire and
+//!    schedule choice are attributed in [`StepReport`] exactly like the
+//!    forward legs.
+//! 3. **Expert backward** — each expert runs its FFN backward over its
+//!    contiguous gradient batch ([`crate::nn::Ffn::backward`]),
+//!    producing parameter grads and input-row grads.
+//! 4. **Gate backward** — combine-weight gradients flow through the
+//!    softmax (full-row for Switch, subset for Top-K/GShard) plus the
+//!    auxiliary load-balancing loss gradient, into the router weight
+//!    and the token inputs.
+//! 5. **Gradient AllReduce** — replicated parameters (router weight,
+//!    classifier head) sum their per-rank contributions through
+//!    [`crate::comm::allreduce`]; expert parameters are sharded and
+//!    need no reduction (that is the point of expert parallelism).
+//!
+//! Both dispatch modes are differentiable, and the ragged and padded
+//! backward produce **bit-identical** gradients (the PR-2 forward
+//! equivalence story extended to the backward pass; asserted in
+//! `tests/backprop_training.rs`).
+//!
+//! [`DispatchPlan`]: crate::gating::DispatchPlan
+//! [`ragged_dispatch`]: crate::comm::ragged::ragged_dispatch
+//! [`ragged_combine`]: crate::comm::ragged::ragged_combine
+//! [`StepReport`]: crate::moe::StepReport
+
+pub mod adam;
+pub mod gate;
+pub mod layer;
+pub mod trainer;
+
+pub use adam::Adam;
+pub use gate::{aux_loss_grad, gate_backward};
+pub use layer::{ExpertGrads, LayerGrads, TrainCache, TrainMoeLayer};
+pub use trainer::{smoothed_losses, NativeTrainer, TrainRunConfig, TrainStepLog, TrainSummary};

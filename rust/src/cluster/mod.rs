@@ -9,8 +9,10 @@
 
 pub mod gpu;
 pub mod network;
+pub mod placement;
 pub mod timeline;
 
 pub use gpu::GpuModel;
 pub use network::{LinkKind, NetworkModel};
+pub use placement::ExpertPlacement;
 pub use timeline::{Event, Timeline};

@@ -1,0 +1,99 @@
+//! Expert placement: which rank hosts which expert.
+//!
+//! HetuMoE partitions the `E` experts contiguously across the `W`
+//! ranks, `E/W` per rank, so expert `e` lives on rank `e / (E/W)`.
+//! Both the training layer and the serving router (and now the backward
+//! pass's traffic-matrix construction) depend on this one formula; it
+//! lives here so the two paths can never disagree about where an
+//! expert is.
+
+/// Contiguous expert partitioning over a world of ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExpertPlacement {
+    pub num_experts: usize,
+    pub world: usize,
+}
+
+impl ExpertPlacement {
+    /// The one constructor every path uses. Divisibility is validated at
+    /// configuration time (`MoeLayer::native` & co. reject indivisible
+    /// `E`/`W` with a config error); here it is a programming-error
+    /// assert, not a recoverable condition.
+    pub fn new(num_experts: usize, world: usize) -> ExpertPlacement {
+        debug_assert!(
+            world > 0 && num_experts > 0 && num_experts % world == 0,
+            "num_experts {num_experts} must be a positive multiple of world {world}"
+        );
+        ExpertPlacement { num_experts, world }
+    }
+
+    /// Experts hosted per rank (`E/W`).
+    pub fn experts_per_rank(&self) -> usize {
+        self.num_experts / self.world
+    }
+
+    /// Rank hosting global expert `e` (the paper's `e / (E/W)`).
+    pub fn rank_of(&self, expert: usize) -> usize {
+        debug_assert!(expert < self.num_experts);
+        expert / self.experts_per_rank()
+    }
+
+    /// Local index of global expert `e` inside its host rank.
+    pub fn local_of(&self, expert: usize) -> usize {
+        expert % self.experts_per_rank()
+    }
+
+    /// Global expert id of rank `r`'s `local`-th expert.
+    pub fn expert_of(&self, rank: usize, local: usize) -> usize {
+        rank * self.experts_per_rank() + local
+    }
+
+    /// Collapse one source rank's per-expert kept counts into its row of
+    /// the rank-level traffic matrix.
+    pub fn rank_counts_row(&self, kept: &[usize]) -> Vec<usize> {
+        debug_assert_eq!(kept.len(), self.num_experts);
+        let mut counts = vec![0usize; self.world];
+        for (e, &c) in kept.iter().enumerate() {
+            counts[self.rank_of(e)] += c;
+        }
+        counts
+    }
+
+    /// Full `counts[src][dst]` traffic matrix from the per-(rank, expert)
+    /// kept matrix (forward dispatch direction; the combine leg is its
+    /// transpose).
+    pub fn traffic_matrix(&self, kept: &[Vec<usize>]) -> Vec<Vec<usize>> {
+        kept.iter().map(|row| self.rank_counts_row(row)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_formula() {
+        let p = ExpertPlacement::new(8, 4);
+        assert_eq!(p.experts_per_rank(), 2);
+        assert_eq!(p.rank_of(0), 0);
+        assert_eq!(p.rank_of(3), 1);
+        assert_eq!(p.rank_of(7), 3);
+        assert_eq!(p.local_of(3), 1);
+        assert_eq!(p.expert_of(3, 1), 7);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "positive multiple")]
+    fn rejects_indivisible() {
+        let _ = ExpertPlacement::new(7, 2);
+    }
+
+    #[test]
+    fn traffic_matrix_matches_manual_collapse() {
+        let p = ExpertPlacement::new(4, 2);
+        let kept = vec![vec![1usize, 2, 3, 4], vec![5, 6, 7, 8]];
+        assert_eq!(p.traffic_matrix(&kept), vec![vec![3, 7], vec![11, 15]]);
+        assert_eq!(p.rank_counts_row(&kept[0]), vec![3, 7]);
+    }
+}

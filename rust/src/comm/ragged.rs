@@ -31,17 +31,17 @@ use crate::comm::CommTiming;
 use crate::error::Result;
 
 /// Collapse a per-(rank, expert) kept matrix `kept[src][global_expert]`
-/// into the rank-level traffic matrix `counts[src][dst]` (experts are
+/// into the rank-level traffic matrix `counts[src][dst]` via the shared
+/// expert placement ([`crate::cluster::ExpertPlacement`]: experts
 /// partitioned contiguously, `experts_per_rank` per rank).
 pub fn rank_counts(kept: &[Vec<usize>], experts_per_rank: usize) -> Vec<Vec<usize>> {
     let w = kept.len();
-    let mut counts = vec![vec![0usize; w]; w];
-    for (s, row) in kept.iter().enumerate() {
-        for (e, &c) in row.iter().enumerate() {
-            counts[s][e / experts_per_rank] += c;
-        }
+    if w == 0 {
+        return Vec::new();
     }
-    counts
+    let placement = crate::cluster::ExpertPlacement::new(experts_per_rank * w, w);
+    debug_assert!(kept.iter().all(|row| row.len() == placement.num_experts));
+    placement.traffic_matrix(kept)
 }
 
 /// Bytes that actually cross a rank boundary for one exchange leg

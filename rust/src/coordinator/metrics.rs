@@ -16,6 +16,7 @@ pub struct MetricsAgg {
     pub padding_waste: f64,
     pub aux_loss: f64,
     bytes_on_wire: f64,
+    bytes_on_wire_bwd: f64,
     expert_flops: f64,
 }
 
@@ -42,6 +43,7 @@ impl MetricsAgg {
         self.padding_waste += report.padding_waste;
         self.aux_loss += report.aux_loss;
         self.bytes_on_wire += report.bytes_on_wire as f64;
+        self.bytes_on_wire_bwd += report.bytes_on_wire_bwd as f64;
         self.expert_flops += report.expert_flops;
     }
 
@@ -68,6 +70,7 @@ impl MetricsAgg {
             padding_waste: self.padding_waste / n,
             aux_loss: self.aux_loss / n,
             bytes_on_wire: self.bytes_on_wire / n,
+            bytes_on_wire_bwd: self.bytes_on_wire_bwd / n,
             expert_flops: self.expert_flops / n,
         }
     }
@@ -83,6 +86,9 @@ pub struct Breakdown {
     pub aux_loss: f64,
     /// Mean bytes crossing rank boundaries per step (both AllToAll legs).
     pub bytes_on_wire: f64,
+    /// Mean bytes on the backward AllToAll legs per step (0 when the run
+    /// is forward-only).
+    pub bytes_on_wire_bwd: f64,
     /// Mean expert-FFN FLOPs executed per step.
     pub expert_flops: f64,
 }
@@ -119,6 +125,7 @@ impl Breakdown {
             ("padding_waste", Json::num(self.padding_waste)),
             ("aux_loss", Json::num(self.aux_loss)),
             ("bytes_on_wire", Json::num(self.bytes_on_wire)),
+            ("bytes_on_wire_bwd", Json::num(self.bytes_on_wire_bwd)),
             ("expert_flops", Json::num(self.expert_flops)),
         ])
     }

@@ -3,8 +3,9 @@
 //!
 //! This is the benchmark-loop analog of the paper's evaluation driver
 //! (the MoE *layer* is what every Fig-8 system comparison times); full
-//! model training with losses runs through [`crate::train::Trainer`] on
-//! the AOT artifacts instead.
+//! model training with losses and gradients runs through the native
+//! [`crate::backprop::NativeTrainer`] (or the artifact-backed
+//! `train::Trainer` behind the `pjrt` feature) instead.
 
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::coordinator::metrics::{Breakdown, MetricsAgg};

@@ -4,4 +4,4 @@ pub mod corpus;
 pub mod synthetic;
 
 pub use corpus::{CharTokenizer, TINY_CORPUS};
-pub use synthetic::{BatchIter, SyntheticLm};
+pub use synthetic::{BatchIter, ClusterTask, SyntheticLm};

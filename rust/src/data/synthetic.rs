@@ -1,7 +1,10 @@
 //! Synthetic language-model data: Zipf-distributed tokens with a
 //! deterministic next-token structure so a model can actually reduce
-//! loss (a pure-noise stream would bottom out at `ln(vocab)`).
+//! loss (a pure-noise stream would bottom out at `ln(vocab)`), plus a
+//! cluster-correlated feature/label task ([`ClusterTask`]) for the
+//! native training loop's loss-curve tests.
 
+use crate::tensor::Tensor;
 use crate::util::rng::{hash_u64, Rng, Zipf};
 
 /// A synthetic LM task: token `x_{t+1}` is a deterministic function of
@@ -74,6 +77,56 @@ impl BatchIter {
     }
 }
 
+/// A *learnable* synthetic classification task: feature vectors drawn
+/// around `num_clusters` seeded centroids (plus isotropic noise), label
+/// = centroid index. Labels correlate with token clusters by
+/// construction, so a model that routes cluster-mates to the same
+/// expert and reads out a linear head must drive the loss down — the
+/// deterministic substrate for the trainer's loss-curve tests.
+///
+/// Cluster frequencies are Zipf-tilted (like real token distributions),
+/// so the MoE router sees realistic load imbalance and the auxiliary
+/// loss has actual work to do.
+#[derive(Clone, Debug)]
+pub struct ClusterTask {
+    /// Centroids `[C, d]`, fixed by the construction seed.
+    pub centers: Tensor,
+    pub num_clusters: usize,
+    pub d: usize,
+    /// Noise scale around each centroid.
+    pub noise: f32,
+    zipf: Zipf,
+}
+
+impl ClusterTask {
+    /// Deterministic per seed: same seed → same centroids and, with the
+    /// same sampling RNG, the same batches.
+    pub fn new(num_clusters: usize, d: usize, noise: f32, seed: u64) -> ClusterTask {
+        let mut rng = Rng::seed(seed ^ 0xC1A5);
+        let mut centers = Tensor::randn(&[num_clusters, d], &mut rng);
+        // Spread the centroids so clusters are separable at noise ~0.3.
+        centers.scale(1.5);
+        ClusterTask { centers, num_clusters, d, noise, zipf: Zipf::new(num_clusters, 1.1) }
+    }
+
+    /// Sample `n` (feature row, label) pairs into a `[n, d]` tensor and
+    /// a label vector, advancing `rng`.
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> (Tensor, Vec<u32>) {
+        let mut x = Tensor::zeros(&[n, self.d]);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = self.zipf.sample(rng);
+            labels.push(c as u32);
+            let center = self.centers.row(c);
+            let row = x.row_mut(i);
+            for (v, &m) in row.iter_mut().zip(center) {
+                *v = m + self.noise * rng.normal_f32();
+            }
+        }
+        (x, labels)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +169,54 @@ mod tests {
         let mut a = BatchIter::new(t1.clone(), 2, 4, 9);
         let mut b = BatchIter::new(t1, 2, 4, 9);
         assert_eq!(a.next_batch(), b.next_batch());
+    }
+
+    #[test]
+    fn cluster_task_is_deterministic_per_seed() {
+        let t1 = ClusterTask::new(4, 8, 0.3, 5);
+        let t2 = ClusterTask::new(4, 8, 0.3, 5);
+        assert_eq!(t1.centers, t2.centers);
+        let mut r1 = Rng::seed(1);
+        let mut r2 = Rng::seed(1);
+        let (x1, y1) = t1.sample(32, &mut r1);
+        let (x2, y2) = t2.sample(32, &mut r2);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        let t3 = ClusterTask::new(4, 8, 0.3, 6);
+        assert_ne!(t1.centers, t3.centers);
+    }
+
+    #[test]
+    fn cluster_features_hug_their_centroid() {
+        let task = ClusterTask::new(4, 16, 0.1, 7);
+        let mut rng = Rng::seed(2);
+        let (x, labels) = task.sample(200, &mut rng);
+        for i in 0..200 {
+            let c = labels[i] as usize;
+            assert!(c < 4);
+            // Distance to own centroid must beat every other centroid.
+            let dist = |center: &[f32], row: &[f32]| -> f32 {
+                row.iter().zip(center).map(|(a, b)| (a - b) * (a - b)).sum()
+            };
+            let own = dist(task.centers.row(c), x.row(i));
+            for other in 0..4 {
+                if other != c {
+                    assert!(own < dist(task.centers.row(other), x.row(i)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_labels_are_zipf_skewed() {
+        let task = ClusterTask::new(8, 4, 0.3, 11);
+        let mut rng = Rng::seed(3);
+        let (_, labels) = task.sample(4000, &mut rng);
+        let mut counts = [0usize; 8];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts[0] > counts[7], "head cluster must dominate: {counts:?}");
+        assert!(counts.iter().all(|&c| c > 0));
     }
 }

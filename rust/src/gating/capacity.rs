@@ -72,17 +72,12 @@ impl DispatchPlan {
         off
     }
 
-    /// Kept rows destined to each of `world` ranks under the training
-    /// expert placement (experts partitioned contiguously, `E/world`
-    /// per rank) — one row of the AllToAllv traffic matrix.
+    /// Kept rows destined to each of `world` ranks under the shared
+    /// expert placement ([`crate::cluster::ExpertPlacement`]) — one row
+    /// of the AllToAllv traffic matrix.
     pub fn rank_counts(&self, world: usize) -> Vec<usize> {
-        debug_assert_eq!(self.num_experts % world, 0);
-        let epr = self.num_experts / world;
-        let mut counts = vec![0usize; world];
-        for (e, &k) in self.kept.iter().enumerate() {
-            counts[e / epr] += k;
-        }
-        counts
+        crate::cluster::ExpertPlacement::new(self.num_experts, world)
+            .rank_counts_row(&self.kept)
     }
 }
 

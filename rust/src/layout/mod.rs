@@ -24,4 +24,7 @@ pub mod ragged;
 pub mod transform;
 
 pub use ragged::{ragged_layout, ragged_reverse_layout, RaggedLayoutBuffer};
-pub use transform::{naive_layout, opt_layout, reverse_layout, LayoutBuffer};
+pub use transform::{
+    gather_expert_slices, naive_layout, opt_layout, reverse_layout, scatter_expert_slices,
+    LayoutBuffer,
+};

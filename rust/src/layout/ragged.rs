@@ -61,8 +61,9 @@ impl RaggedLayoutBuffer {
         &self.data.data()[self.offsets[e] * d..self.offsets[e + 1] * d]
     }
 
-    /// Ragged row index of a padded-buffer destination slot.
-    fn ragged_row(offsets: &[usize], capacity: usize, dest: usize) -> usize {
+    /// Ragged row index of a padded-buffer destination slot (also used
+    /// by the backward pass's gradient scatter in `backprop/`).
+    pub(crate) fn ragged_row(offsets: &[usize], capacity: usize, dest: usize) -> usize {
         let e = dest / capacity;
         offsets[e] + (dest - e * capacity)
     }

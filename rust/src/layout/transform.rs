@@ -23,6 +23,45 @@ impl LayoutBuffer {
     }
 }
 
+/// Gather local expert `le`'s capacity slices from an exchanged padded
+/// buffer `[W, epr, cap, d]` into a caller-provided contiguous
+/// source-major `[W·cap, d]` batch (the same row order as the ragged
+/// receive layout, padding rows interleaved). Shared by the inference
+/// and training padded pipelines so the slicing arithmetic has one
+/// home.
+pub fn gather_expert_slices(
+    buf: &[f32],
+    rows: &mut Tensor,
+    w: usize,
+    epr: usize,
+    le: usize,
+    cap: usize,
+) {
+    let d = rows.row_len();
+    for src in 0..w {
+        let off = (src * epr + le) * cap * d;
+        rows.data_mut()[src * cap * d..(src + 1) * cap * d]
+            .copy_from_slice(&buf[off..off + cap * d]);
+    }
+}
+
+/// Inverse of [`gather_expert_slices`]: scatter a `[W·cap, d]` result
+/// back into the expert's capacity slices of the padded buffer.
+pub fn scatter_expert_slices(
+    buf: &mut [f32],
+    data: &[f32],
+    w: usize,
+    epr: usize,
+    le: usize,
+    cap: usize,
+    d: usize,
+) {
+    for src in 0..w {
+        let off = (src * epr + le) * cap * d;
+        buf[off..off + cap * d].copy_from_slice(&data[src * cap * d..(src + 1) * cap * d]);
+    }
+}
+
 /// HetuMoE's optimized layout transform: single scatter pass driven by
 /// the precomputed destinations in the [`DispatchPlan`]. `threads > 1`
 /// shards the token dimension (destinations are unique, so scatters are

@@ -40,6 +40,7 @@
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-figure reproductions.
 
+pub mod backprop;
 pub mod baselines;
 pub mod benchkit;
 pub mod cli;
@@ -56,7 +57,6 @@ pub mod nn;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;
-#[cfg(feature = "pjrt")]
 pub mod train;
 pub mod util;
 

@@ -27,12 +27,27 @@ use hetumoe::util::stats::{fmt_duration, load_cv, normalized_entropy};
 const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "train",
-        about: "train the MoE transformer on AOT artifacts",
+        about: "end-to-end MoE training (native backward pass; no pjrt needed)",
         options: &[
-            ("config", "JSON config file"),
-            ("model", "artifact variant (default e2e)"),
-            ("steps", "training steps"),
-            ("artifacts", "artifact directory (default artifacts)"),
+            ("backend", "native|pjrt (default native; pjrt needs --features pjrt)"),
+            ("steps", "training steps (default 300)"),
+            ("seed", "model/data seed (default 0)"),
+            ("tokens", "tokens per rank per step (default 64)"),
+            ("nodes", "simulated nodes (default 2)"),
+            ("gpus", "GPUs per node (default 2)"),
+            ("experts", "experts (default 8)"),
+            ("d-model", "model width (default 32)"),
+            ("ffn-hidden", "expert hidden size (default 64)"),
+            ("classes", "synthetic-task classes (default 8)"),
+            ("lr", "Adam learning rate (default 2e-3)"),
+            ("aux-coef", "aux load-balancing loss coefficient (default 0.01)"),
+            ("gate", "switch|gshard|topk gate (default switch)"),
+            ("dispatch", "padded|ragged pipeline (default ragged)"),
+            ("alltoall", "auto|flat|hier schedule selection (default auto)"),
+            ("json", "emit the run summary as JSON (flag)"),
+            ("config", "JSON config file (pjrt backend)"),
+            ("model", "artifact variant (pjrt backend, default e2e)"),
+            ("artifacts", "artifact directory (pjrt backend)"),
         ],
     },
     CommandSpec {
@@ -47,6 +62,8 @@ const COMMANDS: &[CommandSpec] = &[
             ("gpus", "GPUs per node (default 2)"),
             ("dispatch", "padded|ragged pipeline (default: ragged for hetumoe, padded baselines)"),
             ("alltoall", "auto|flat|hier per-step AllToAll selection in ragged mode (default: auto for hetumoe, else the system's flavor)"),
+            ("seed", "model/data seed (default 0)"),
+            ("json", "emit the aggregated StepReport breakdown as JSON (flag)"),
         ],
     },
     CommandSpec {
@@ -114,17 +131,134 @@ fn main() {
     }
 }
 
+fn cmd_train(args: &Args) -> hetumoe::error::Result<()> {
+    match args.str_or("backend", "native") {
+        "native" => cmd_train_native(args),
+        "pjrt" => cmd_train_pjrt(args),
+        other => Err(hetumoe::config_err!("unknown backend '{other}' (expected native|pjrt)")),
+    }
+}
+
+/// The default training path: pure-Rust backward pass + Adam over the
+/// simulated cluster (see `backprop/`). No `pjrt` feature required.
+fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
+    use hetumoe::moe::DispatchMode;
+    use hetumoe::train::{smoothed_losses, NativeTrainer, TrainRunConfig};
+    use hetumoe::util::json::Json;
+
+    let mut cfg = TrainRunConfig::default_run();
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.tokens_per_rank = args.usize_or("tokens", cfg.tokens_per_rank)?;
+    cfg.num_classes = args.usize_or("classes", cfg.num_classes)?;
+    cfg.lr = args.f64_or("lr", cfg.lr as f64)? as f32;
+    cfg.aux_coef = args.f64_or("aux-coef", cfg.aux_coef as f64)? as f32;
+    let nodes = args.usize_or("nodes", cfg.cluster.nodes)?;
+    let gpus = args.usize_or("gpus", cfg.cluster.gpus_per_node)?;
+    cfg.cluster = ClusterConfig { nodes, gpus_per_node: gpus, ..ClusterConfig::commodity(nodes) };
+    cfg.moe.num_experts = args.usize_or("experts", cfg.moe.num_experts)?;
+    cfg.moe.d_model = args.usize_or("d-model", cfg.moe.d_model)?;
+    cfg.moe.ffn_hidden = args.usize_or("ffn-hidden", cfg.moe.ffn_hidden)?;
+    cfg.moe.gate = parse_gate(args)?;
+    if let Some(v) = args.get("dispatch") {
+        cfg.opts.dispatch = DispatchMode::parse(v)?;
+    }
+    if let Some(v) = args.get("alltoall") {
+        cfg.opts.alltoall = CommChoice::parse(v)?;
+    }
+    let json = args.has_flag("json");
+    if json {
+        cfg.log_every = 0;
+    }
+    let mut trainer = NativeTrainer::new(cfg)?;
+    if !json {
+        println!(
+            "native training: {} params | {} experts on {}x{} GPUs | {} dispatch, alltoall={}",
+            trainer.num_params(),
+            trainer.cfg.moe.num_experts,
+            trainer.cfg.cluster.nodes,
+            trainer.cfg.cluster.gpus_per_node,
+            trainer.cfg.opts.dispatch.name(),
+            trainer.cfg.opts.alltoall.name(),
+        );
+    }
+    let summary = trainer.run()?;
+    let losses = trainer.losses();
+    let smooth = smoothed_losses(&losses, 0.1);
+    if json {
+        let j = Json::obj(vec![
+            ("steps", Json::num(summary.steps as f64)),
+            ("final_loss", Json::num(summary.final_loss as f64)),
+            (
+                "smoothed_loss",
+                Json::arr(smooth.iter().map(|&l| Json::num(l))),
+            ),
+            (
+                "fwd_schedules",
+                Json::obj(vec![
+                    ("flat", Json::num(summary.fwd_schedules.0 as f64)),
+                    ("hier", Json::num(summary.fwd_schedules.1 as f64)),
+                ]),
+            ),
+            (
+                "bwd_schedules",
+                Json::obj(vec![
+                    ("flat", Json::num(summary.bwd_schedules.0 as f64)),
+                    ("hier", Json::num(summary.bwd_schedules.1 as f64)),
+                ]),
+            ),
+            ("breakdown", summary.breakdown.to_json()),
+        ]);
+        println!("{}", j.dump());
+        return Ok(());
+    }
+    let first = losses.first().copied().unwrap_or(f32::NAN);
+    println!(
+        "loss: {first:.4} → {:.4} (smoothed {:.4}) over {} steps",
+        summary.final_loss,
+        smooth.last().copied().unwrap_or(f64::NAN),
+        summary.steps
+    );
+    println!(
+        "schedule picks: fwd {}/{} flat/hier, bwd {}/{} flat/hier",
+        summary.fwd_schedules.0,
+        summary.fwd_schedules.1,
+        summary.bwd_schedules.0,
+        summary.bwd_schedules.1
+    );
+    let b = &summary.breakdown;
+    println!(
+        "bytes_on_wire/step: fwd {:.0} bwd {:.0} | expert_flops/step {:.3e}",
+        b.bytes_on_wire, b.bytes_on_wire_bwd, b.expert_flops
+    );
+    let mut table = Table::new(
+        "per-step phase breakdown (fwd + bwd + opt)",
+        &["phase", "mean/step", "fraction"],
+    );
+    for (name, t) in &b.phases {
+        table.row(vec![
+            name.clone(),
+            fmt_duration(*t),
+            format!("{:.1}%", 100.0 * t / b.total),
+        ]);
+    }
+    table.row(vec!["TOTAL".into(), fmt_duration(b.total), "100%".into()]);
+    table.emit(None);
+    Ok(())
+}
+
 #[cfg(not(feature = "pjrt"))]
-fn cmd_train(_args: &Args) -> hetumoe::error::Result<()> {
+fn cmd_train_pjrt(_args: &Args) -> hetumoe::error::Result<()> {
     Err(hetumoe::error::HetuError::Runtime(
-        "the `train` subcommand executes AOT artifacts through PJRT; \
-         rebuild with `cargo build --release --features pjrt`"
+        "the pjrt backend executes AOT artifacts through PJRT; \
+         rebuild with `cargo build --release --features pjrt` \
+         (or drop --backend pjrt to use the native trainer)"
             .into(),
     ))
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_train(args: &Args) -> hetumoe::error::Result<()> {
+fn cmd_train_pjrt(args: &Args) -> hetumoe::error::Result<()> {
     use hetumoe::config::{ConfigFile, TrainConfig};
     use hetumoe::train::Trainer;
 
@@ -160,14 +294,19 @@ fn parse_system(name: &str) -> SystemKind {
     }
 }
 
-fn parse_gate(args: &Args) -> GateKind {
-    match args.str_or("gate", "switch") {
+fn parse_gate(args: &Args) -> hetumoe::error::Result<GateKind> {
+    Ok(match args.str_or("gate", "switch") {
+        "switch" | "top1" => GateKind::Switch,
         "gshard" | "top2" => GateKind::GShard,
         "topk" => GateKind::TopK { k: 4 },
         "base" => GateKind::Base,
         "hash" => GateKind::Hash { scheme: hetumoe::config::HashScheme::Random },
-        _ => GateKind::Switch,
-    }
+        other => {
+            return Err(hetumoe::config_err!(
+                "unknown gate '{other}' (expected switch|gshard|topk|base|hash)"
+            ));
+        }
+    })
 }
 
 fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
@@ -179,7 +318,7 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
     let steps = args.usize_or("steps", 5)?;
     let mut cluster = ClusterConfig::commodity(nodes);
     cluster.gpus_per_node = gpus;
-    let moe = MoeConfig { gate: parse_gate(args), ..MoeConfig::bench_layer() };
+    let moe = MoeConfig { gate: parse_gate(args)?, ..MoeConfig::bench_layer() };
     let threads = hetumoe::util::threadpool::available_parallelism().min(8);
     let mut opts = profile.options(threads);
     if system == SystemKind::HetuMoE {
@@ -197,8 +336,22 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
     }
     let dispatch = opts.dispatch;
     let alltoall = opts.alltoall;
-    let mut coord = Coordinator::new(moe, cluster, opts, 32_000, tokens, 0)?;
+    let seed = args.u64_or("seed", 0)?;
+    let mut coord = Coordinator::new(moe, cluster, opts, 32_000, tokens, seed)?;
     let summary = coord.run(steps)?;
+    if args.has_flag("json") {
+        use hetumoe::util::json::Json;
+        let j = Json::obj(vec![
+            ("system", Json::str(system.name())),
+            ("dispatch", Json::str(dispatch.name())),
+            ("alltoall", Json::str(alltoall.name())),
+            ("steps", Json::num(steps as f64)),
+            ("seed", Json::num(seed as f64)),
+            ("breakdown", summary.breakdown.to_json()),
+        ]);
+        println!("{}", j.dump());
+        return Ok(());
+    }
     let mut table = Table::new(
         &format!(
             "{} MoE layer breakdown ({} steps, {} dispatch, alltoall={})",
@@ -236,7 +389,7 @@ fn cmd_sim(args: &Args) -> hetumoe::error::Result<()> {
     let nodes = args.usize_or("nodes", 1)?;
     let cluster = ClusterConfig::commodity(nodes);
     let gpu = GpuModel::titan_rtx();
-    let moe = MoeConfig { gate: parse_gate(args), ..MoeConfig::paper_layer() };
+    let moe = MoeConfig { gate: parse_gate(args)?, ..MoeConfig::paper_layer() };
     let mut table = Table::new(
         &format!(
             "Simulated MoE-layer iteration time, {} gate, {}x{} GPUs (paper Fig 8 scale)",
@@ -399,7 +552,7 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
         d_model,
         ffn_hidden: 2 * d_model,
         capacity_factor: 1.25,
-        gate: parse_gate(args),
+        gate: parse_gate(args)?,
     };
     let cfg = ServeConfig {
         moe,

@@ -28,8 +28,8 @@ use crate::error::Result;
 use crate::gating::topk::{softmax_of_selected, topk_rows_heap};
 use crate::gating::{apply_capacity, DispatchPlan, Gate, Routing};
 use crate::layout::{
-    naive_layout, opt_layout, ragged_layout, ragged_reverse_layout, reverse_layout,
-    LayoutBuffer, RaggedLayoutBuffer,
+    gather_expert_slices, naive_layout, opt_layout, ragged_layout, ragged_reverse_layout,
+    reverse_layout, scatter_expert_slices, LayoutBuffer, RaggedLayoutBuffer,
 };
 use crate::moe::expert::ExpertExecutor;
 use crate::nn::matmul;
@@ -174,6 +174,12 @@ pub struct StepReport {
     pub expert_flops: f64,
     /// AllToAll schedule this step ran ("flat" | "hier").
     pub comm_schedule: String,
+    /// Bytes crossing rank boundaries over both *backward* AllToAll legs
+    /// (0 for forward-only steps; set by the training backward pass,
+    /// attributed through the same cost models as the forward legs).
+    pub bytes_on_wire_bwd: usize,
+    /// AllToAll schedule the backward legs ran ("" for forward-only).
+    pub comm_schedule_bwd: String,
 }
 
 impl StepReport {
@@ -187,6 +193,19 @@ impl StepReport {
 
     pub fn wall_phase(&self, name: &str) -> f64 {
         self.wall.iter().filter(|(n, _)| n == name).map(|(_, t)| t).sum()
+    }
+
+    /// Fold a backward-pass report into this (forward) step report: wall
+    /// and comm phases are appended, the backward exchange's bytes and
+    /// schedule land in the `_bwd` fields, and FLOPs accumulate.
+    pub fn absorb_backward(&mut self, bwd: StepReport) {
+        self.wall.extend(bwd.wall);
+        self.comm.extend(bwd.comm);
+        self.bytes_on_wire_bwd += bwd.bytes_on_wire;
+        if !bwd.comm_schedule.is_empty() {
+            self.comm_schedule_bwd = bwd.comm_schedule;
+        }
+        self.expert_flops += bwd.expert_flops;
     }
 }
 
@@ -257,9 +276,15 @@ impl MoeLayer {
         Ok(MoeLayer { cfg, cluster, net, gate, experts, gate_weight, opts })
     }
 
+    /// The shared expert-placement map (experts partitioned contiguously,
+    /// `E/W` per rank — the same formula the serving router uses).
+    pub fn placement(&self) -> crate::cluster::ExpertPlacement {
+        crate::cluster::ExpertPlacement::new(self.cfg.num_experts, self.cluster.world())
+    }
+
     /// Experts per rank.
     pub fn experts_per_rank(&self) -> usize {
-        self.cfg.num_experts / self.cluster.world()
+        self.placement().experts_per_rank()
     }
 
     /// Forward over per-rank token shards `[T_r, d]` (all equal length).
@@ -369,19 +394,10 @@ impl MoeLayer {
                 let mut rows = Tensor::zeros(&[w * cap, d]);
                 for le in 0..epr {
                     let global_e = r * epr + le;
-                    // Gather this expert's rows from all W source segments.
-                    for src in 0..w {
-                        let off = (src * epr + le) * cap * d;
-                        rows.data_mut()[src * cap * d..(src + 1) * cap * d]
-                            .copy_from_slice(&buf[off..off + cap * d]);
-                    }
+                    gather_expert_slices(buf, &mut rows, w, epr, le, cap);
                     let out = self.experts[global_e].forward(&rows)?;
                     report.expert_flops += self.experts[global_e].flops(w * cap);
-                    for src in 0..w {
-                        let off = (src * epr + le) * cap * d;
-                        buf[off..off + cap * d]
-                            .copy_from_slice(&out.data()[src * cap * d..(src + 1) * cap * d]);
-                    }
+                    scatter_expert_slices(buf, out.data(), w, epr, le, cap, d);
                 }
             }
         }

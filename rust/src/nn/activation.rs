@@ -7,6 +7,18 @@ pub fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
+/// Derivative of [`gelu`] (the same tanh form, differentiated):
+/// `g'(x) = 0.5·(1 + tanh u) + 0.5·x·(1 − tanh²u)·C·(1 + 3·0.044715·x²)`
+/// with `u = C·(x + 0.044715·x³)`.
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    const A: f32 = 0.044715;
+    let u = C * (x + A * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * A * x * x)
+}
+
 /// ReLU.
 #[inline]
 pub fn relu(x: f32) -> f32 {
@@ -32,6 +44,21 @@ mod tests {
         // Large |x| saturates to identity / zero.
         assert!((gelu(10.0) - 10.0).abs() < 1e-4);
         assert!(gelu(-10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-3.0f32, -1.0, -0.1, 0.0, 0.1, 0.7, 1.5, 4.0] {
+            let eps = 1e-3f32;
+            let numeric = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            let analytic = gelu_grad(x);
+            assert!(
+                (numeric - analytic).abs() < 2e-3,
+                "x={x}: numeric {numeric} vs analytic {analytic}"
+            );
+        }
+        // gelu'(0) = 0.5 exactly in the tanh form.
+        assert!((gelu_grad(0.0) - 0.5).abs() < 1e-7);
     }
 
     #[test]

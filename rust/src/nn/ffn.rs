@@ -5,10 +5,32 @@
 //! expert ([`crate::moe::expert::HloExpert`]) computes the same function
 //! through XLA.
 
-use crate::nn::activation::gelu;
-use crate::nn::matmul::matmul_into;
+use crate::nn::activation::{gelu, gelu_grad};
+use crate::nn::matmul::{matmul_into, matmul_nt, matmul_tn};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// Saved forward activations for [`Ffn::backward`].
+#[derive(Clone, Debug)]
+pub struct FfnCache {
+    /// Input batch `[n, d]`.
+    pub x: Tensor,
+    /// Pre-activation hidden `x·W1 + b1`, `[n, h]`.
+    pub hpre: Tensor,
+    /// Activated hidden `GeLU(hpre)`, `[n, h]`.
+    pub hid: Tensor,
+}
+
+/// Parameter gradients of one [`Ffn`], plus the input gradient.
+#[derive(Clone, Debug)]
+pub struct FfnGrads {
+    pub dw1: Tensor, // [d, h]
+    pub db1: Vec<f32>,
+    pub dw2: Tensor, // [h, d]
+    pub db2: Vec<f32>,
+    /// Gradient w.r.t. the input batch `[n, d]`.
+    pub dx: Tensor,
+}
 
 /// Two-layer FFN expert with GeLU.
 #[derive(Clone, Debug)]
@@ -75,6 +97,69 @@ impl Ffn {
         }
     }
 
+    /// Forward that saves the activations the backward pass needs.
+    /// Produces bit-identical outputs to [`Self::forward`].
+    pub fn forward_cached(&self, x: &Tensor) -> (Tensor, FfnCache) {
+        assert_eq!(x.shape()[1], self.d);
+        let n = x.rows();
+        let mut hpre = Tensor::zeros(&[n, self.h]);
+        matmul_into(x.data(), self.w1.data(), hpre.data_mut(), n, self.d, self.h);
+        for i in 0..n {
+            let row = hpre.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v += self.b1[j];
+            }
+        }
+        let mut hid = hpre.clone();
+        for v in hid.data_mut() {
+            *v = gelu(*v);
+        }
+        let mut out = Tensor::zeros(&[n, self.d]);
+        matmul_into(hid.data(), self.w2.data(), out.data_mut(), n, self.h, self.d);
+        for i in 0..n {
+            let row = out.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v += self.b2[j];
+            }
+        }
+        (out, FfnCache { x: x.clone(), hpre, hid })
+    }
+
+    /// Backward pass: upstream `dy [n, d]` → parameter grads + `dx`.
+    ///
+    /// `db2 = Σ_i dy_i`; `dW2 = hidᵀ·dy`; `d_hid = dy·W2ᵀ`;
+    /// `d_hpre = d_hid ⊙ GeLU'(hpre)`; `db1 = Σ_i d_hpre_i`;
+    /// `dW1 = xᵀ·d_hpre`; `dx = d_hpre·W1ᵀ`.
+    pub fn backward(&self, cache: &FfnCache, dy: &Tensor) -> FfnGrads {
+        let n = dy.rows();
+        assert_eq!(dy.shape()[1], self.d);
+        assert_eq!(cache.x.rows(), n);
+
+        let mut db2 = vec![0.0f32; self.d];
+        for i in 0..n {
+            for (j, &g) in dy.row(i).iter().enumerate() {
+                db2[j] += g;
+            }
+        }
+        let dw2 = matmul_tn(&cache.hid, dy);
+
+        // d_hpre = (dy · W2ᵀ) ⊙ gelu'(hpre)
+        let mut dhpre = matmul_nt(dy, &self.w2);
+        for (v, &p) in dhpre.data_mut().iter_mut().zip(cache.hpre.data()) {
+            *v *= gelu_grad(p);
+        }
+
+        let mut db1 = vec![0.0f32; self.h];
+        for i in 0..n {
+            for (j, &g) in dhpre.row(i).iter().enumerate() {
+                db1[j] += g;
+            }
+        }
+        let dw1 = matmul_tn(&cache.x, &dhpre);
+        let dx = matmul_nt(&dhpre, &self.w1);
+        FfnGrads { dw1, db1, dw2, db2, dx }
+    }
+
     /// Parameter count.
     pub fn num_params(&self) -> usize {
         self.d * self.h + self.h + self.h * self.d + self.d
@@ -123,6 +208,92 @@ mod tests {
         // gelu(0)=0 so output = b2 everywhere.
         for v in y.data() {
             assert!((v - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn forward_cached_matches_forward_bitwise() {
+        let mut rng = Rng::seed(3);
+        let f = Ffn::init(6, 24, &mut rng);
+        let x = Tensor::randn(&[9, 6], &mut rng);
+        let y = f.forward(&x);
+        let (yc, cache) = f.forward_cached(&x);
+        assert!(y.allclose(&yc, 0.0));
+        assert_eq!(cache.x, x);
+        assert_eq!(cache.hpre.shape(), &[9, 24]);
+    }
+
+    /// Finite-difference check of every gradient the backward produces.
+    /// Scalar loss: `L = Σ dy ⊙ y` with a fixed `dy`, so `∂L/∂θ` equals
+    /// the backward's output exactly.
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Rng::seed(4);
+        let mut f = Ffn::init(5, 11, &mut rng);
+        let x = Tensor::randn(&[7, 5], &mut rng);
+        let dy = Tensor::randn(&[7, 5], &mut rng);
+        let loss = |f: &Ffn, x: &Tensor| -> f64 {
+            let y = f.forward(x);
+            y.data().iter().zip(dy.data()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
+        let (_, cache) = f.forward_cached(&x);
+        let grads = f.backward(&cache, &dy);
+
+        let eps = 1e-2f32;
+        let check = |analytic: f32, numeric: f64, what: &str| {
+            let err = (analytic as f64 - numeric).abs();
+            let scale = numeric.abs().max(analytic.abs() as f64).max(1.0);
+            assert!(err / scale < 2e-2, "{what}: analytic {analytic} vs numeric {numeric}");
+        };
+        // Spot-check a handful of entries per tensor (central differences).
+        for idx in [0usize, 7, 23, 41] {
+            let i = idx % (5 * 11);
+            let orig = f.w1.data()[i];
+            f.w1.data_mut()[i] = orig + eps;
+            let lp = loss(&f, &x);
+            f.w1.data_mut()[i] = orig - eps;
+            let lm = loss(&f, &x);
+            f.w1.data_mut()[i] = orig;
+            check(grads.dw1.data()[i], (lp - lm) / (2.0 * eps as f64), "dw1");
+        }
+        for i in [0usize, 4, 10] {
+            let orig = f.b1[i];
+            f.b1[i] = orig + eps;
+            let lp = loss(&f, &x);
+            f.b1[i] = orig - eps;
+            let lm = loss(&f, &x);
+            f.b1[i] = orig;
+            check(grads.db1[i], (lp - lm) / (2.0 * eps as f64), "db1");
+        }
+        for idx in [3usize, 19, 37] {
+            let i = idx % (11 * 5);
+            let orig = f.w2.data()[i];
+            f.w2.data_mut()[i] = orig + eps;
+            let lp = loss(&f, &x);
+            f.w2.data_mut()[i] = orig - eps;
+            let lm = loss(&f, &x);
+            f.w2.data_mut()[i] = orig;
+            check(grads.dw2.data()[i], (lp - lm) / (2.0 * eps as f64), "dw2");
+        }
+        for i in [0usize, 2, 4] {
+            let orig = f.b2[i];
+            f.b2[i] = orig + eps;
+            let lp = loss(&f, &x);
+            f.b2[i] = orig - eps;
+            let lm = loss(&f, &x);
+            f.b2[i] = orig;
+            check(grads.db2[i], (lp - lm) / (2.0 * eps as f64), "db2");
+        }
+        // Input gradient.
+        let mut xp = x.clone();
+        for i in [0usize, 12, 30] {
+            let orig = xp.data()[i];
+            xp.data_mut()[i] = orig + eps;
+            let lp = loss(&f, &xp);
+            xp.data_mut()[i] = orig - eps;
+            let lm = loss(&f, &xp);
+            xp.data_mut()[i] = orig;
+            check(grads.dx.data()[i], (lp - lm) / (2.0 * eps as f64), "dx");
         }
     }
 

@@ -128,6 +128,60 @@ pub fn matmul_dense(a: &Tensor, b: &Tensor) -> Tensor {
     out
 }
 
+/// `Aᵀ[m,l]ᵀ · B[l,n]` → `C[m,n]` where `A` is `[l, m]` — the
+/// weight-gradient kernel (`dW = xᵀ · dy` sums outer products over the
+/// batch rows). Rows are accumulated in increasing row order and
+/// all-zero rows are skipped, so inserting zero rows (padded-mode
+/// buffers) leaves the result bit-identical — the property the
+/// padded-vs-ragged backward equivalence rests on.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (l, m) = (a.shape()[0], a.shape()[1]);
+    let (l2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(l, l2, "matmul_tn row dims: {l} vs {l2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let (adata, bdata) = (a.data(), b.data());
+    let cdata = out.data_mut();
+    for i in 0..l {
+        let arow = &adata[i * m..i * m + m];
+        let brow = &bdata[i * n..i * n + n];
+        for (j, &aij) in arow.iter().enumerate() {
+            if aij == 0.0 {
+                continue; // zero rows (padding) contribute nothing
+            }
+            let crow = &mut cdata[j * n..j * n + n];
+            for (k, &bik) in brow.iter().enumerate() {
+                crow[k] += aij * bik;
+            }
+        }
+    }
+    out
+}
+
+/// `A[m,l] · B[n,l]ᵀ` → `C[m,n]` — the input-gradient kernel
+/// (`dx = dy · Wᵀ`). Each output row depends only on its own input row,
+/// so per-row results are independent of batch composition.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, l) = (a.shape()[0], a.shape()[1]);
+    let (n, l2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(l, l2, "matmul_nt inner dims: {l} vs {l2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let (adata, bdata) = (a.data(), b.data());
+    let cdata = out.data_mut();
+    for i in 0..m {
+        let arow = &adata[i * l..i * l + l];
+        let crow = &mut cdata[i * n..i * n + n];
+        for (j, cj) in crow.iter_mut().enumerate() {
+            let brow = &bdata[j * l..j * l + l];
+            let mut acc = 0.0f32;
+            for k in 0..l {
+                acc += arow[k] * brow[k];
+            }
+            *cj = acc;
+        }
+    }
+    out
+}
+
 /// Naive triple loop for testing the blocked kernels.
 pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
@@ -211,6 +265,49 @@ mod tests {
             rhs.add_assign(&matmul(&a2, &b));
             assert!(lhs.allclose(&rhs, 1e-4));
         });
+    }
+
+    #[test]
+    fn tn_matches_explicit_transpose() {
+        let mut rng = Rng::seed(5);
+        let a = Tensor::randn(&[9, 4], &mut rng);
+        let b = Tensor::randn(&[9, 6], &mut rng);
+        let fast = matmul_tn(&a, &b);
+        let slow = matmul_naive(&a.transpose(), &b);
+        assert!(fast.allclose(&slow, 1e-4), "diff={}", fast.max_abs_diff(&slow));
+    }
+
+    #[test]
+    fn nt_matches_explicit_transpose() {
+        let mut rng = Rng::seed(6);
+        let a = Tensor::randn(&[5, 8], &mut rng);
+        let b = Tensor::randn(&[7, 8], &mut rng);
+        let fast = matmul_nt(&a, &b);
+        let slow = matmul_naive(&a, &b.transpose());
+        assert!(fast.allclose(&slow, 1e-4), "diff={}", fast.max_abs_diff(&slow));
+    }
+
+    #[test]
+    fn tn_ignores_interleaved_zero_rows() {
+        // The bit-exactness property the padded-vs-ragged backward
+        // equivalence needs: adding zero rows anywhere leaves dW
+        // bit-identical.
+        let mut rng = Rng::seed(7);
+        let a = Tensor::randn(&[4, 3], &mut rng);
+        let b = Tensor::randn(&[4, 5], &mut rng);
+        let compact = matmul_tn(&a, &b);
+        // Interleave zero rows: rows 0, z, 1, z, 2, 3, z.
+        let order = [Some(0), None, Some(1), None, Some(2), Some(3), None];
+        let mut ap = Tensor::zeros(&[order.len(), 3]);
+        let mut bp = Tensor::zeros(&[order.len(), 5]);
+        for (i, slot) in order.iter().enumerate() {
+            if let Some(src) = slot {
+                ap.row_mut(i).copy_from_slice(a.row(*src));
+                bp.row_mut(i).copy_from_slice(b.row(*src));
+            }
+        }
+        let padded = matmul_tn(&ap, &bp);
+        assert!(compact.allclose(&padded, 0.0));
     }
 
     #[test]

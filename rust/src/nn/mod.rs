@@ -14,7 +14,7 @@ pub mod ffn;
 pub mod matmul;
 pub mod ops;
 
-pub use activation::{gelu, relu};
-pub use ffn::Ffn;
-pub use matmul::{matmul, matmul_into, matmul_par};
+pub use activation::{gelu, gelu_grad, relu};
+pub use ffn::{Ffn, FfnCache, FfnGrads};
+pub use matmul::{matmul, matmul_into, matmul_nt, matmul_par, matmul_tn};
 pub use ops::{cross_entropy, layernorm, log_softmax, softmax_rows};

@@ -237,6 +237,8 @@ impl ServeEngine {
                 * decision.expert_counts.iter().sum::<usize>() as f64
                 * (self.cfg.moe.d_model * self.cfg.moe.ffn_hidden) as f64,
             comm_schedule: decision.comm.name().into(),
+            // Serving is forward-only: no backward legs.
+            ..Default::default()
         };
         (total, report)
     }

@@ -143,14 +143,20 @@ impl PlacementRouter {
         })
     }
 
+    /// The shared expert-placement map (identical to the training
+    /// layer's — see [`crate::cluster::ExpertPlacement`]).
+    pub fn placement(&self) -> crate::cluster::ExpertPlacement {
+        crate::cluster::ExpertPlacement::new(self.cfg.num_experts, self.cluster.world())
+    }
+
     /// Experts hosted per rank.
     pub fn experts_per_rank(&self) -> usize {
-        self.cfg.num_experts / self.cluster.world()
+        self.placement().experts_per_rank()
     }
 
     /// Rank hosting a global expert id (the training-path placement).
     pub fn rank_of_expert(&self, expert: usize) -> usize {
-        expert / self.experts_per_rank()
+        self.placement().rank_of(expert)
     }
 
     /// Route one per-rank shard exactly like the training pipeline:

@@ -1,14 +1,25 @@
-//! End-to-end training over the AOT artifacts (L2/L1 compute).
+//! End-to-end training.
 //!
-//! `python/compile/aot.py` lowers two functions per model variant:
-//! - `<model>_init(seed) → params…` — parameter initialization;
-//! - `<model>_step(params…, tokens, targets) → (params…, loss)` — one
-//!   fused forward/backward/Adam step.
+//! Two backends:
 //!
-//! The trainer loads both once, keeps parameters as host literals, and
-//! loops: feed params + batch → receive new params + loss. Python is
-//! never involved at run time.
+//! - **Native (default)** — the pure-Rust backward pass, Adam and
+//!   training loop in [`crate::backprop`] ([`NativeTrainer`]). Runs the
+//!   full Algorithm-1 pipeline forward *and* backward on the simulated
+//!   cluster with no external toolchain; this is what the `train`
+//!   subcommand drives.
+//! - **PJRT artifacts** (feature `pjrt`) — the AOT-compiled XLA path:
+//!   `python/compile/aot.py` lowers `<model>_init(seed) → params…` and
+//!   `<model>_step(params…, tokens, targets) → (params…, loss)` once;
+//!   [`Trainer`] loops the fused step executable. Python is never
+//!   involved at run time. Still gated because the `xla` crate needs an
+//!   XLA toolchain at link time (the offline stub only compiles).
 
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
+#[cfg(feature = "pjrt")]
 pub use trainer::{TrainLog, Trainer};
+
+pub use crate::backprop::{
+    smoothed_losses, NativeTrainer, TrainRunConfig, TrainStepLog, TrainSummary,
+};

@@ -1,0 +1,184 @@
+//! End-to-end native-training integration tests: the seeded loss-curve
+//! guarantee, the padded-vs-ragged backward equivalence, and the
+//! trainer-level consequence of that equivalence (identical training
+//! trajectories in both dispatch modes).
+
+use hetumoe::backprop::{smoothed_losses, NativeTrainer, TrainMoeLayer, TrainRunConfig};
+use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
+use hetumoe::moe::{DispatchMode, MoeLayerOptions};
+use hetumoe::tensor::Tensor;
+use hetumoe::util::proptest::for_all;
+use hetumoe::util::rng::Rng;
+
+fn small_cluster() -> ClusterConfig {
+    ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) }
+}
+
+/// The acceptance-criteria run: a seeded synthetic task whose labels
+/// correlate with token clusters must show monotonically decreasing
+/// smoothed loss over 200+ steps, with expert balance not degrading.
+#[test]
+fn seeded_loss_curve_decreases_over_200_steps() {
+    let cfg = TrainRunConfig {
+        moe: MoeConfig {
+            num_experts: 4,
+            d_model: 16,
+            ffn_hidden: 32,
+            capacity_factor: 2.0,
+            gate: GateKind::Switch,
+        },
+        cluster: small_cluster(),
+        opts: MoeLayerOptions::default(),
+        steps: 220,
+        tokens_per_rank: 32,
+        num_classes: 4,
+        lr: 3e-3,
+        aux_coef: 1e-2,
+        noise: 0.3,
+        seed: 0,
+        log_every: 0,
+    };
+    let mut t = NativeTrainer::new(cfg).unwrap();
+    let summary = t.run().unwrap();
+    assert_eq!(summary.steps, 220);
+    let losses = t.losses();
+    let smooth = smoothed_losses(&losses, 0.1);
+    // Smoothed loss strictly decreases across checkpoints.
+    let checkpoints = [20usize, 70, 120, 170, 219];
+    for w in checkpoints.windows(2) {
+        assert!(
+            smooth[w[1]] < smooth[w[0]],
+            "smoothed loss must strictly decrease: step {} = {:.4} vs step {} = {:.4}",
+            w[0],
+            smooth[w[0]],
+            w[1],
+            smooth[w[1]]
+        );
+    }
+    assert!(
+        smooth[219] < 0.7 * smooth[20],
+        "improvement must be substantial: {:.4} → {:.4}",
+        smooth[20],
+        smooth[219]
+    );
+    // Expert balance must not degrade while the loss falls (the aux
+    // term actively pushes toward balance).
+    let cv_first: f64 = t.logs[..50].iter().map(|l| l.load_cv).sum::<f64>() / 50.0;
+    let cv_last: f64 = t.logs[170..].iter().map(|l| l.load_cv).sum::<f64>() / 50.0;
+    assert!(
+        cv_last <= cv_first + 0.10,
+        "expert balance must not degrade: load CV {cv_first:.3} → {cv_last:.3}"
+    );
+    // Backward attribution present on every step.
+    for log in &t.logs {
+        assert!(log.report.bytes_on_wire_bwd > 0);
+        assert!(!log.report.comm_schedule_bwd.is_empty());
+    }
+}
+
+/// Ragged and padded backward produce bit-identical gradients across
+/// gates, capacity regimes (including heavy drops) and batch shapes.
+#[test]
+fn backward_grads_bitwise_equal_across_modes_property() {
+    for_all(10, |g| {
+        let gates = [GateKind::Switch, GateKind::TopK { k: 2 }, GateKind::GShard];
+        let gate = g.choose(&gates).clone();
+        let cf = *g.choose(&[0.5f64, 1.0, 2.0, 4.0]);
+        let cfg = MoeConfig {
+            num_experts: 4,
+            d_model: 8,
+            ffn_hidden: 16,
+            capacity_factor: cf,
+            gate,
+        };
+        let tokens = g.usize_in(4..24);
+        let seed = g.case as u64;
+        let mk = |dispatch| {
+            TrainMoeLayer::native(
+                cfg.clone(),
+                small_cluster(),
+                MoeLayerOptions { dispatch, ..Default::default() },
+                seed,
+            )
+            .unwrap()
+        };
+        let ragged = mk(DispatchMode::Ragged);
+        let padded = mk(DispatchMode::Padded);
+        let mut rng = Rng::seed(seed ^ 0x5EED);
+        let shards: Vec<Tensor> =
+            (0..4).map(|_| Tensor::randn(&[tokens, 8], &mut rng)).collect();
+        let dy: Vec<Tensor> = (0..4).map(|_| Tensor::randn(&[tokens, 8], &mut rng)).collect();
+        let (ro, _, rc) = ragged.forward_t(&shards, 0).unwrap();
+        let (po, _, pc) = padded.forward_t(&shards, 0).unwrap();
+        for (a, b) in ro.iter().zip(&po) {
+            assert!(a.allclose(b, 0.0), "forward outputs must be bit-identical");
+        }
+        let (rdx, rg, _) = ragged.backward(&shards, &dy, &rc, 0.01).unwrap();
+        let (pdx, pg, _) = padded.backward(&shards, &dy, &pc, 0.01).unwrap();
+        for (a, b) in rdx.iter().zip(&pdx) {
+            assert!(a.allclose(b, 0.0), "dx must be bit-identical (cf={cf})");
+        }
+        for (a, b) in rg.d_gate_weight.iter().zip(&pg.d_gate_weight) {
+            assert!(a.allclose(b, 0.0), "d_gate_weight must be bit-identical (cf={cf})");
+        }
+        for (a, b) in rg.experts.iter().zip(&pg.experts) {
+            assert!(a.dw1.allclose(&b.dw1, 0.0), "dw1 (cf={cf})");
+            assert!(a.dw2.allclose(&b.dw2, 0.0), "dw2 (cf={cf})");
+            for (x, y) in a.db1.iter().zip(&b.db1) {
+                assert!((x - y).abs() == 0.0, "db1 (cf={cf})");
+            }
+            for (x, y) in a.db2.iter().zip(&b.db2) {
+                assert!((x - y).abs() == 0.0, "db2 (cf={cf})");
+            }
+        }
+    });
+}
+
+/// The trainer-level consequence: with bit-identical gradients, whole
+/// training trajectories coincide exactly between dispatch modes.
+#[test]
+fn training_trajectories_identical_across_dispatch_modes() {
+    let base = TrainRunConfig {
+        moe: MoeConfig {
+            num_experts: 4,
+            d_model: 16,
+            ffn_hidden: 32,
+            // Generous capacity: padded buffers carry real padding, so
+            // the strict bytes-on-wire comparison below always holds.
+            capacity_factor: 2.0,
+            gate: GateKind::Switch,
+        },
+        cluster: small_cluster(),
+        opts: MoeLayerOptions::default(),
+        steps: 10,
+        tokens_per_rank: 16,
+        num_classes: 4,
+        lr: 5e-3,
+        aux_coef: 1e-2,
+        noise: 0.3,
+        seed: 7,
+        log_every: 0,
+    };
+    let mut ragged = NativeTrainer::new(TrainRunConfig {
+        opts: MoeLayerOptions { dispatch: DispatchMode::Ragged, ..Default::default() },
+        ..base.clone()
+    })
+    .unwrap();
+    let mut padded = NativeTrainer::new(TrainRunConfig {
+        opts: MoeLayerOptions { dispatch: DispatchMode::Padded, ..Default::default() },
+        ..base
+    })
+    .unwrap();
+    for _ in 0..10 {
+        let lr = ragged.step().unwrap();
+        let lp = padded.step().unwrap();
+        assert_eq!(lr.loss, lp.loss, "step {}: losses must be bitwise equal", lr.step);
+        assert_eq!(lr.report.expert_counts, lp.report.expert_counts);
+    }
+    // But the padded mode pays for it: more bytes on the wire in both
+    // directions whenever there is padding.
+    let lr = ragged.logs.last().unwrap();
+    let lp = padded.logs.last().unwrap();
+    assert!(lr.report.bytes_on_wire < lp.report.bytes_on_wire);
+    assert!(lr.report.bytes_on_wire_bwd < lp.report.bytes_on_wire_bwd);
+}

@@ -1,0 +1,126 @@
+//! Property tests for the AllToAllv timing cost models.
+//!
+//! The backward pass charges its exchanges on the *transposed* traffic
+//! matrix through the same `alltoallv_timing` /
+//! `hierarchical_alltoallv_timing` models the forward and the serving
+//! router use, so these models carry real weight: they decide the
+//! per-step flat-vs-hier schedule in both directions. Two properties
+//! pin them down:
+//!
+//! 1. **Monotonicity** — adding traffic to any (src, dst) pair can
+//!    never make the predicted exchange faster.
+//! 2. **Uniform reduction** — on a uniform traffic matrix they reduce
+//!    exactly to the equal-chunk formulas (`flat_alltoall_timing` /
+//!    `hierarchical_alltoall_timing`).
+
+use hetumoe::cluster::NetworkModel;
+use hetumoe::comm::alltoall::{alltoallv_timing, flat_alltoall_timing};
+use hetumoe::comm::hierarchical::{hierarchical_alltoall_timing, hierarchical_alltoallv_timing};
+use hetumoe::comm::schedule::transpose_counts;
+use hetumoe::config::ClusterConfig;
+use hetumoe::util::proptest::for_all;
+
+fn net(nodes: usize, gpus: usize) -> NetworkModel {
+    let mut cfg = ClusterConfig::commodity(nodes);
+    cfg.gpus_per_node = gpus;
+    NetworkModel::new(cfg)
+}
+
+fn random_counts(g: &mut hetumoe::util::proptest::Gen, w: usize, max: usize) -> Vec<Vec<usize>> {
+    (0..w).map(|_| (0..w).map(|_| g.usize_in(0..max)).collect()).collect()
+}
+
+#[test]
+fn flat_timing_is_monotone_in_the_traffic_matrix() {
+    for_all(48, |g| {
+        let nodes = g.usize_in(1..4);
+        let gpus = g.usize_in(1..4);
+        let m = net(nodes, gpus);
+        let w = nodes * gpus;
+        let counts = random_counts(g, w, 32);
+        let elem = 4 * g.usize_in(1..64);
+        let base = alltoallv_timing(&m, &counts, elem).total;
+        // Bump one random entry; the prediction must not decrease.
+        let mut bumped = counts.clone();
+        let s = g.usize_in(0..w);
+        let d = g.usize_in(0..w);
+        bumped[s][d] += g.usize_in(1..16);
+        let after = alltoallv_timing(&m, &bumped, elem).total;
+        assert!(
+            after >= base - 1e-15,
+            "flat: bumping ({s},{d}) lowered {base} to {after}"
+        );
+    });
+}
+
+#[test]
+fn hierarchical_timing_is_monotone_in_the_traffic_matrix() {
+    for_all(48, |g| {
+        let nodes = g.usize_in(1..4);
+        let gpus = g.usize_in(1..4);
+        let m = net(nodes, gpus);
+        let w = nodes * gpus;
+        let counts = random_counts(g, w, 32);
+        let elem = 4 * g.usize_in(1..64);
+        let base = hierarchical_alltoallv_timing(&m, &counts, elem).total;
+        let mut bumped = counts.clone();
+        let s = g.usize_in(0..w);
+        let d = g.usize_in(0..w);
+        bumped[s][d] += g.usize_in(1..16);
+        let after = hierarchical_alltoallv_timing(&m, &bumped, elem).total;
+        assert!(
+            after >= base - 1e-15,
+            "hier: bumping ({s},{d}) lowered {base} to {after}"
+        );
+    });
+}
+
+#[test]
+fn uniform_counts_reduce_to_equal_chunk_formulas() {
+    for_all(32, |g| {
+        let nodes = g.usize_in(1..5);
+        let gpus = g.usize_in(1..5);
+        let m = net(nodes, gpus);
+        let w = nodes * gpus;
+        let chunk = g.usize_in(1..512);
+        let counts = vec![vec![chunk; w]; w];
+        let flat_v = alltoallv_timing(&m, &counts, 4).total;
+        let flat_eq = flat_alltoall_timing(&m, chunk * 4).total;
+        assert!(
+            (flat_v - flat_eq).abs() < 1e-12,
+            "flat: {flat_v} vs equal-chunk {flat_eq} (n={nodes} g={gpus} c={chunk})"
+        );
+        let hier_v = hierarchical_alltoallv_timing(&m, &counts, 4).total;
+        let hier_eq = hierarchical_alltoall_timing(&m, chunk * 4).total;
+        assert!(
+            (hier_v - hier_eq).abs() < 1e-12,
+            "hier: {hier_v} vs equal-chunk {hier_eq} (n={nodes} g={gpus} c={chunk})"
+        );
+    });
+}
+
+#[test]
+fn transpose_preserves_total_traffic_but_not_time() {
+    // The combine/backward legs charge the transposed matrix; the
+    // transpose moves the same bytes but may cost a very different
+    // time (fan-in vs fan-out). Totals must stay monotone-consistent:
+    // both directions are >= the empty matrix's cost.
+    for_all(24, |g| {
+        let m = net(2, g.usize_in(1..4));
+        let w = m.cfg.world();
+        let counts = random_counts(g, w, 24);
+        let t_fwd = alltoallv_timing(&m, &counts, 64).total;
+        let t_bwd = alltoallv_timing(&m, &transpose_counts(&counts), 64).total;
+        let total: usize = counts.iter().flatten().sum();
+        if total == 0 {
+            assert_eq!(t_fwd, 0.0);
+            assert_eq!(t_bwd, 0.0);
+        } else {
+            assert!(t_fwd >= 0.0 && t_bwd >= 0.0);
+        }
+        // Transposing twice is the identity on the prediction.
+        let t_round =
+            alltoallv_timing(&m, &transpose_counts(&transpose_counts(&counts)), 64).total;
+        assert_eq!(t_fwd, t_round);
+    });
+}
