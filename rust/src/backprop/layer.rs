@@ -1,13 +1,16 @@
-//! The differentiable MoE layer: Algorithm 1 forward with activation
-//! caching, and its exact backward through both dispatch pipelines.
+//! The differentiable MoE layer: the shared staged pipeline's cached
+//! forward, and its exact backward through both dispatch pipelines.
 //!
 //! [`TrainMoeLayer`] owns concrete [`Ffn`] experts (the inference-path
 //! [`crate::moe::MoeLayer`] hides executors behind a trait object, which
 //! cannot expose parameters for updates). Construction from the same
 //! seed replays [`crate::moe::MoeLayer::native`]'s RNG stream, so the
-//! two layers hold identical parameters and the forward outputs are
-//! bit-identical (asserted in tests — the training path can never drift
-//! from the benchmarked pipeline).
+//! two layers hold identical parameters — and since **both layers now
+//! consume the same [`crate::pipeline::StepExecutor`]** (this file no
+//! longer carries its own copy of the six-step forward), the forward
+//! outputs are bit-identical by construction *and* asserted in tests.
+//! `forward_t` simply runs the executor's forward + cache flavor; the
+//! returned [`TrainCache`] is the pipeline's [`ForwardCache`].
 //!
 //! The backward expresses the dispatch/combine gradients as the same
 //! `comm/` exchanges on the transposed traffic: the gradient of the
@@ -16,23 +19,26 @@
 //! forward-combine routes — which is exactly what reusing
 //! [`ragged_dispatch`] + [`ragged_combine`] with the forward `kept`
 //! matrix implements. Timing and bytes are charged through the same
-//! cost models, and the flat-vs-hier schedule is picked per step from
-//! the traffic matrix just like the forward (and the serving router).
+//! cost models, the flat-vs-hier schedule is the forward's per-step
+//! decision, and the backward exchanges get the same micro-chunked
+//! comm/compute overlap as the forward: dispatch-of-chunk-*i* overlaps
+//! FFN-backward-of-chunk-*i − 1*, with the chunk count re-picked from
+//! the (identical) traffic matrix and the measured backward walls.
 
 use crate::cluster::{ExpertPlacement, NetworkModel};
 use crate::comm::ragged::{offwire_bytes, ragged_combine, ragged_dispatch};
-use crate::comm::schedule::{pick_schedule, Schedule};
 use crate::comm::{alltoall, hierarchical_alltoall, CommTiming};
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
-use crate::gating::{apply_capacity, make_gate, DispatchPlan, Gate, Routing};
-use crate::layout::{gather_expert_slices, scatter_expert_slices};
-use crate::layout::{opt_layout, ragged_layout, ragged_reverse_layout, reverse_layout};
-use crate::layout::{LayoutBuffer, RaggedLayoutBuffer};
+use crate::gating::{make_gate, DispatchPlan, Gate};
+use crate::layout::{gather_expert_slices, scatter_expert_slices, RaggedLayoutBuffer};
 use crate::moe::{CommImpl, DispatchMode, MoeLayerOptions, StepReport};
-use crate::nn::{matmul, matmul_nt, matmul_tn, Ffn, FfnCache};
+use crate::nn::{matmul_nt, matmul_tn, Ffn, FfnGrads};
+use crate::pipeline::executor::rank_expert_jobs;
+use crate::pipeline::{ExpertBank, ForwardCache, OverlapTiming, StagePlan, StepExecutor};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+use crate::util::threadpool;
 use std::time::Instant;
 
 /// Parameter gradients of one expert FFN.
@@ -70,28 +76,11 @@ pub struct LayerGrads {
     pub experts: Vec<ExpertGrads>,
 }
 
-/// Forward activations saved for [`TrainMoeLayer::backward`]. The
+/// Forward activations saved for [`TrainMoeLayer::backward`] — the
+/// shared pipeline's cached-forward output ([`ForwardCache`]). The
 /// input shards themselves are *not* cached — the caller still owns
 /// them and passes them back to `backward` (no per-step copy).
-pub struct TrainCache {
-    /// Per-rank gate scores `[T, E]`.
-    pub scores: Vec<Tensor>,
-    pub routings: Vec<Routing>,
-    pub plans: Vec<DispatchPlan>,
-    /// Per-(rank, expert) kept counts — the exchange's traffic source.
-    pub kept: Vec<Vec<usize>>,
-    /// Per-expert FFN caches over the received batch (None if 0 rows).
-    pub expert_caches: Vec<Option<FfnCache>>,
-    /// Per-rank post-combine buffers in source layout (ragged order, or
-    /// the padded `[E·cap, d]` buffer) — the expert outputs each slot's
-    /// combine-weight gradient dots against.
-    pub expert_out: Vec<Vec<f32>>,
-    /// Schedule the forward exchanges ran. The backward exchanges reuse
-    /// it: gradient rows move along the same routes, so the forward's
-    /// per-step decision (from the same traffic matrix) applies — one
-    /// source of truth, evaluated once.
-    pub schedule: Schedule,
-}
+pub type TrainCache = ForwardCache;
 
 /// The trainable expert-parallel MoE layer.
 pub struct TrainMoeLayer {
@@ -152,235 +141,27 @@ impl TrainMoeLayer {
     }
 
     /// Forward over per-rank token shards `[T, d]`, saving everything the
-    /// backward needs. Outputs are bit-identical to
-    /// [`crate::moe::MoeLayer::forward`] with the same seed and options.
+    /// backward needs — the shared pipeline's forward + cache flavor.
+    /// Outputs are bit-identical to [`crate::moe::MoeLayer::forward`]
+    /// with the same seed and options (same executor, same RNG stream).
     pub fn forward_t(
         &self,
         shards: &[Tensor],
         step: u64,
     ) -> Result<(Vec<Tensor>, StepReport, TrainCache)> {
-        let w = self.cluster.world();
-        if shards.len() != w {
-            return Err(crate::shape_err!("got {} shards for world {w}", shards.len()));
-        }
-        let d = self.cfg.d_model;
-        let local_tokens = shards[0].rows();
-        for s in shards {
-            if s.rows() != local_tokens || s.row_len() != d {
-                return Err(crate::shape_err!("ragged shards"));
-            }
-        }
-        let cap = self.cfg.capacity(local_tokens);
-        let mut report = StepReport::default();
-        let mut expert_counts = vec![0usize; self.cfg.num_experts];
-
-        // ---- Step 1: gate scores, routing, capacity plan ----
-        let mut scores_all = Vec::with_capacity(w);
-        let mut routings = Vec::with_capacity(w);
-        let mut plans: Vec<DispatchPlan> = Vec::with_capacity(w);
-        let g0 = Instant::now();
-        for shard in shards {
-            let scores = matmul(shard, &self.gate_weight);
-            let routing = self.gate.route_scores(&scores, step);
-            for (i, c) in routing.expert_counts().into_iter().enumerate() {
-                expert_counts[i] += c;
-            }
-            report.aux_loss += routing.aux_loss as f64 / w as f64;
-            let plan = apply_capacity(&routing, cap);
-            report.drop_rate += plan.drop_rate() / w as f64;
-            if self.opts.dispatch == DispatchMode::Padded {
-                report.padding_waste += plan.padding_waste() / w as f64;
-            }
-            scores_all.push(scores);
-            routings.push(routing);
-            plans.push(plan);
-        }
-        report.wall.push(("gate".into(), g0.elapsed().as_secs_f64() / w as f64));
-        report.expert_counts = expert_counts;
-
-        let kept: Vec<Vec<usize>> = plans.iter().map(|p| p.kept.clone()).collect();
-        let (outputs, expert_caches, expert_out, schedule) = match self.opts.dispatch {
-            DispatchMode::Ragged => self.forward_ragged(shards, &plans, &kept, &mut report)?,
-            DispatchMode::Padded => self.forward_padded(shards, &plans, &mut report)?,
+        let route = |scores: &Tensor| self.gate.route_scores(scores, step);
+        let exec = StepExecutor {
+            cfg: &self.cfg,
+            cluster: &self.cluster,
+            net: &self.net,
+            opts: &self.opts,
+            gate_weight: &self.gate_weight,
+            experts: ExpertBank::Train(&self.experts),
+            route: &route,
         };
-
-        let cache = TrainCache {
-            scores: scores_all,
-            routings,
-            plans,
-            kept,
-            expert_caches,
-            expert_out,
-            schedule,
-        };
-        Ok((outputs, report, cache))
-    }
-
-    #[allow(clippy::type_complexity)]
-    fn forward_ragged(
-        &self,
-        shards: &[Tensor],
-        plans: &[DispatchPlan],
-        kept: &[Vec<usize>],
-        report: &mut StepReport,
-    ) -> Result<(Vec<Tensor>, Vec<Option<FfnCache>>, Vec<Vec<f32>>, Schedule)> {
-        let w = self.cluster.world();
-        let d = self.cfg.d_model;
-        let placement = self.placement();
-        let epr = placement.experts_per_rank();
-
-        // ---- Step 2: ragged layout ----
-        let l0 = Instant::now();
-        let buffers: Vec<RaggedLayoutBuffer> = shards
-            .iter()
-            .zip(plans)
-            .map(|(shard, plan)| ragged_layout(shard, plan, self.opts.threads))
-            .collect();
-        report.wall.push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
-
-        // ---- Schedule selection (shared decision procedure) ----
-        let counts = placement.traffic_matrix(kept);
-        let pick = pick_schedule(&self.net, &counts, d * 4, self.opts.alltoall);
-        let schedule = pick.schedule;
-        report.comm_schedule = schedule.name().into();
-
-        // ---- Step 3: ragged dispatch ----
-        let mut flat: Vec<Vec<f32>> = buffers.into_iter().map(|b| b.data.into_vec()).collect();
-        let timing = ragged_dispatch(&self.net, &mut flat, kept, d, schedule)?;
-        report.comm.push(("alltoall_dispatch".into(), timing.total));
-
-        // ---- Step 4: grouped expert compute, caching activations ----
-        let x0 = Instant::now();
-        let mut expert_caches: Vec<Option<FfnCache>> = Vec::new();
-        expert_caches.resize_with(self.cfg.num_experts, || None);
-        for (r, buf) in flat.iter_mut().enumerate() {
-            let mut off = 0usize;
-            for le in 0..epr {
-                let ge = placement.expert_of(r, le);
-                let n: usize = kept.iter().map(|row| row[ge]).sum();
-                if n > 0 {
-                    let rows = Tensor::from_vec(buf[off..off + n * d].to_vec(), &[n, d])?;
-                    let (out, fcache) = self.experts[ge].forward_cached(&rows);
-                    report.expert_flops += self.experts[ge].flops(n) as f64;
-                    buf[off..off + n * d].copy_from_slice(out.data());
-                    expert_caches[ge] = Some(fcache);
-                }
-                off += n * d;
-            }
-        }
-        report.wall.push(("expert".into(), x0.elapsed().as_secs_f64() / w as f64));
-
-        // ---- Step 5: ragged combine ----
-        let timing2 = ragged_combine(&self.net, &mut flat, kept, d, schedule)?;
-        report.comm.push(("alltoall_combine".into(), timing2.total));
-        report.bytes_on_wire = 2 * offwire_bytes(&counts, d * 4);
-
-        // ---- Step 6: reverse layout, then keep the expert outputs for
-        // the backward's combine-weight gradients (ownership moves
-        // through the reverse buffer and back out — no clone) ----
-        let r0 = Instant::now();
-        let mut outputs = Vec::with_capacity(w);
-        let mut expert_out: Vec<Vec<f32>> = Vec::with_capacity(w);
-        for (rank, plan) in plans.iter().enumerate() {
-            let buffer =
-                RaggedLayoutBuffer::from_plan(std::mem::take(&mut flat[rank]), plan, d)?;
-            outputs.push(ragged_reverse_layout(&buffer, plan, self.opts.threads));
-            expert_out.push(buffer.data.into_vec());
-        }
-        report.wall.push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
-        Ok((outputs, expert_caches, expert_out, schedule))
-    }
-
-    #[allow(clippy::type_complexity)]
-    fn forward_padded(
-        &self,
-        shards: &[Tensor],
-        plans: &[DispatchPlan],
-        report: &mut StepReport,
-    ) -> Result<(Vec<Tensor>, Vec<Option<FfnCache>>, Vec<Vec<f32>>, Schedule)> {
-        let w = self.cluster.world();
-        let d = self.cfg.d_model;
-        let e = self.cfg.num_experts;
-        let placement = self.placement();
-        let epr = placement.experts_per_rank();
-        let cap = plans[0].capacity;
-
-        // ---- Step 2: padded layout ----
-        let l0 = Instant::now();
-        let buffers: Vec<LayoutBuffer> = shards
-            .iter()
-            .zip(plans)
-            .map(|(shard, plan)| opt_layout(shard, plan, self.opts.threads))
-            .collect();
-        report.wall.push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
-
-        // ---- Step 3: equal-chunk AllToAll dispatch ----
-        let mut flat: Vec<Vec<f32>> = buffers.into_iter().map(|b| b.data.into_vec()).collect();
-        let timing = self.run_alltoall(&mut flat)?;
-        report.comm.push(("alltoall_dispatch".into(), timing.total));
-        let schedule = match self.opts.comm_impl {
-            CommImpl::Flat => Schedule::Flat,
-            CommImpl::Hierarchical => Schedule::Hierarchical,
-        };
-        report.comm_schedule = schedule.name().into();
-
-        // ---- Step 4: expert compute over capacity slices, cached ----
-        // After AllToAll rank r's buffer is [W, epr, cap, d]; gather each
-        // local expert's rows source-major (same order as the ragged
-        // receive layout, with padding rows interleaved — the zero rows
-        // drop out of every gradient sum, which is what makes the two
-        // backward paths bit-identical).
-        let x0 = Instant::now();
-        let mut expert_caches: Vec<Option<FfnCache>> = Vec::new();
-        expert_caches.resize_with(e, || None);
-        for (r, buf) in flat.iter_mut().enumerate() {
-            if epr == 1 {
-                // One expert per rank: the received buffer already is
-                // that expert's contiguous batch — run it in place, no
-                // gather/scatter copies (the inference layer's fast
-                // path).
-                let rows = Tensor::from_vec(std::mem::take(buf), &[w * cap, d])?;
-                let (out, fcache) = self.experts[r].forward_cached(&rows);
-                report.expert_flops += self.experts[r].flops(w * cap) as f64;
-                *buf = out.into_vec();
-                expert_caches[r] = Some(fcache);
-                continue;
-            }
-            // One scratch per rank, reused across its local experts.
-            let mut rows = Tensor::zeros(&[w * cap, d]);
-            for le in 0..epr {
-                let ge = placement.expert_of(r, le);
-                gather_expert_slices(buf, &mut rows, w, epr, le, cap);
-                let (out, fcache) = self.experts[ge].forward_cached(&rows);
-                report.expert_flops += self.experts[ge].flops(w * cap) as f64;
-                scatter_expert_slices(buf, out.data(), w, epr, le, cap, d);
-                expert_caches[ge] = Some(fcache);
-            }
-        }
-        report.wall.push(("expert".into(), x0.elapsed().as_secs_f64() / w as f64));
-
-        // ---- Step 5: AllToAll combine ----
-        let timing2 = self.run_alltoall(&mut flat)?;
-        report.comm.push(("alltoall_combine".into(), timing2.total));
-        report.bytes_on_wire = 2 * w * w.saturating_sub(1) * epr * cap * d * 4;
-
-        // ---- Step 6: reverse layout, then keep the expert outputs for
-        // the backward's combine-weight gradients (ownership moves
-        // through the reverse buffer and back out — no clone) ----
-        let r0 = Instant::now();
-        let mut outputs = Vec::with_capacity(w);
-        let mut expert_out: Vec<Vec<f32>> = Vec::with_capacity(w);
-        for (rank, plan) in plans.iter().enumerate() {
-            let buffer = LayoutBuffer {
-                data: Tensor::from_vec(std::mem::take(&mut flat[rank]), &[e * cap, d])?,
-                capacity: cap,
-                num_experts: e,
-            };
-            outputs.push(reverse_layout(&buffer, plan, self.opts.threads));
-            expert_out.push(buffer.data.into_vec());
-        }
-        report.wall.push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
-        Ok((outputs, expert_caches, expert_out, schedule))
+        let out = exec.run(shards, true)?;
+        let cache = out.cache.expect("cached flavor always returns a cache");
+        Ok((out.outputs, out.report, cache))
     }
 
     /// Backward over per-rank upstream gradients `dy [T, d]`. `shards`
@@ -390,9 +171,9 @@ impl TrainMoeLayer {
     ///
     /// Returns the input gradients (per rank), the parameter gradients,
     /// and a backward [`StepReport`] (wall phases `bwd_*`, comm phases
-    /// `alltoall_*_bwd`, bytes-on-wire and schedule of the backward
-    /// exchanges) to be folded into the forward report via
-    /// [`StepReport::absorb_backward`].
+    /// `alltoall_*_bwd`, bytes-on-wire, schedule and overlap accounting
+    /// of the backward exchanges) to be folded into the forward report
+    /// via [`StepReport::absorb_backward`].
     pub fn backward(
         &self,
         shards: &[Tensor],
@@ -485,7 +266,6 @@ impl TrainMoeLayer {
         let w = self.cluster.world();
         let d = self.cfg.d_model;
         let placement = self.placement();
-        let epr = placement.experts_per_rank();
         let counts = placement.traffic_matrix(&cache.kept);
 
         // The backward exchanges reuse the forward's per-step schedule
@@ -493,40 +273,81 @@ impl TrainMoeLayer {
         // traffic matrix (and therefore the same `pick_schedule`
         // outcome) governs both directions.
         let schedule = cache.schedule;
-        report.comm_schedule = schedule.name().into();
 
-        // The combine-leg gradient travels the forward-dispatch routes.
-        let timing = ragged_dispatch(&self.net, dbufs, &cache.kept, d, schedule)?;
-        report.comm.push(("alltoall_dispatch_bwd".into(), timing.total));
+        // The combine-leg gradient travels the forward-dispatch routes
+        // (data movement; timing is attributed per chunk below, so the
+        // chunked backward is bit-identical by construction).
+        ragged_dispatch(&self.net, dbufs, &cache.kept, d, schedule)?;
 
-        // Expert backward over each contiguous gradient batch.
-        let x0 = Instant::now();
+        // Expert backward over each contiguous gradient batch; one
+        // rank's batches run on the shared pool (disjoint outputs →
+        // bit-identical to serial), wall measured per rank for the
+        // overlap model's compute profile. The gradient buffers have
+        // the forward receive layout, so the job scan is the forward's.
+        let mut rank_wall = vec![0.0f64; w];
         for (r, buf) in dbufs.iter_mut().enumerate() {
-            let mut off = 0usize;
-            for le in 0..epr {
-                let ge = placement.expert_of(r, le);
-                let n: usize = cache.kept.iter().map(|row| row[ge]).sum();
-                if n > 0 {
-                    let dy_e = Tensor::from_vec(buf[off..off + n * d].to_vec(), &[n, d])?;
-                    let fcache = cache.expert_caches[ge]
-                        .as_ref()
-                        .ok_or_else(|| crate::shape_err!("missing cache for expert {ge}"))?;
-                    let fg = self.experts[ge].backward(fcache, &dy_e);
-                    report.expert_flops += 2.0 * self.experts[ge].flops(n) as f64;
-                    buf[off..off + n * d].copy_from_slice(fg.dx.data());
-                    grads.experts[ge] =
-                        ExpertGrads { dw1: fg.dw1, db1: fg.db1, dw2: fg.dw2, db2: fg.db2 };
-                }
-                off += n * d;
+            let jobs = rank_expert_jobs(&placement, &cache.kept, r, d);
+            let x0 = Instant::now();
+            let results = self.run_backward_jobs(&jobs, &buf[..], cache)?;
+            for ((ge, off, n), fg) in jobs.into_iter().zip(results) {
+                report.expert_flops += 2.0 * self.experts[ge].flops(n) as f64;
+                buf[off..off + n * d].copy_from_slice(fg.dx.data());
+                grads.experts[ge] =
+                    ExpertGrads { dw1: fg.dw1, db1: fg.db1, dw2: fg.dw2, db2: fg.db2 };
             }
+            rank_wall[r] = x0.elapsed().as_secs_f64();
         }
-        report.wall.push(("bwd_expert".into(), x0.elapsed().as_secs_f64() / w as f64));
+        report.wall.push(("bwd_expert".into(), rank_wall.iter().sum::<f64>() / w as f64));
+
+        // ---- Chunked overlap on the transposed exchanges (the
+        // StagePlan's chunk half): the backward region has the same
+        // dispatch → expert → combine shape on the same traffic matrix,
+        // so the same model applies. ----
+        let compute_per_rank: Vec<f64> =
+            rank_wall.iter().map(|t| t / w as f64).collect();
+        let (stage_plan, overlap) = StagePlan::for_schedule(
+            &self.net,
+            &counts,
+            d * 4,
+            schedule,
+            self.opts.chunks,
+            &compute_per_rank,
+        );
+        report.comm_schedule = stage_plan.schedule.name().into();
+        report.comm.push(("alltoall_dispatch_bwd".into(), overlap.dispatch_total()));
 
         // The dispatch-leg gradient travels the forward-combine routes.
-        let timing2 = ragged_combine(&self.net, dbufs, &cache.kept, d, schedule)?;
-        report.comm.push(("alltoall_combine_bwd".into(), timing2.total));
+        ragged_combine(&self.net, dbufs, &cache.kept, d, schedule)?;
+        report.comm.push(("alltoall_combine_bwd".into(), overlap.combine_total()));
         report.bytes_on_wire = 2 * offwire_bytes(&counts, d * 4);
+        report.apply_overlap(&overlap);
         Ok(())
+    }
+
+    /// Run one rank's per-expert FFN backward batches: `jobs` are
+    /// disjoint `(global expert, element offset, rows)` regions of
+    /// `buf`. Pool-parallel when `opts.threads > 1` — bit-identical to
+    /// serial, each batch is an independent pure function.
+    fn run_backward_jobs(
+        &self,
+        jobs: &[(usize, usize, usize)],
+        buf: &[f32],
+        cache: &TrainCache,
+    ) -> Result<Vec<FfnGrads>> {
+        let d = self.cfg.d_model;
+        let run_one = |ge: usize, off: usize, n: usize| -> Result<FfnGrads> {
+            let dy_e = Tensor::from_vec(buf[off..off + n * d].to_vec(), &[n, d])?;
+            let fcache = cache.expert_caches[ge]
+                .as_ref()
+                .ok_or_else(|| crate::shape_err!("missing cache for expert {ge}"))?;
+            Ok(self.experts[ge].backward(fcache, &dy_e))
+        };
+        threadpool::pooled(self.opts.threads, jobs.len(), |j| {
+            let (ge, off, n) = jobs[j];
+            run_one(ge, off, n)
+        })
+        .into_iter()
+        .collect()
     }
 
     fn backward_exchange_padded(
@@ -576,11 +397,20 @@ impl TrainMoeLayer {
                     ExpertGrads { dw1: fg.dw1, db1: fg.db1, dw2: fg.dw2, db2: fg.db2 };
             }
         }
-        report.wall.push(("bwd_expert".into(), x0.elapsed().as_secs_f64() / w as f64));
+        let bwd_expert_wall = x0.elapsed().as_secs_f64() / w as f64;
+        report.wall.push(("bwd_expert".into(), bwd_expert_wall));
 
         let timing2 = self.run_alltoall(dbufs)?;
         report.comm.push(("alltoall_combine_bwd".into(), timing2.total));
         report.bytes_on_wire = 2 * w * w.saturating_sub(1) * epr * cap * d * 4;
+        // Equal-chunk exchanges are never chunked: one-chunk overlap
+        // model, fully exposed.
+        report.apply_overlap(&OverlapTiming {
+            dispatch: vec![timing.total],
+            compute: vec![bwd_expert_wall],
+            combine: vec![timing2.total],
+            critical_path: timing.total + bwd_expert_wall + timing2.total,
+        });
         Ok(())
     }
 }
@@ -674,6 +504,7 @@ mod tests {
     use super::*;
     use crate::config::GateKind;
     use crate::moe::MoeLayer;
+    use crate::nn::matmul;
 
     fn tiny_cfg(gate: GateKind) -> MoeConfig {
         MoeConfig {
@@ -867,9 +698,13 @@ mod tests {
         // identical traffic matrix, identical bytes.
         assert_eq!(bwd.bytes_on_wire, report.bytes_on_wire);
         assert!(bwd.comm_schedule == "flat" || bwd.comm_schedule == "hier");
+        // The backward region carries its own overlap accounting.
+        assert!(bwd.n_chunks >= 1);
+        assert!(bwd.critical_path > 0.0);
         report.absorb_backward(bwd);
         assert_eq!(report.bytes_on_wire_bwd, report.bytes_on_wire);
         assert!(!report.comm_schedule_bwd.is_empty());
+        assert!(report.n_chunks_bwd >= 1);
         assert!(report.wall_phase("bwd_expert") >= 0.0);
     }
 

@@ -6,6 +6,7 @@ use crate::comm::hierarchical::hierarchical_alltoall_timing;
 use crate::config::{ClusterConfig, GateKind, MoeConfig};
 use crate::comm::schedule::CommChoice;
 use crate::moe::{CommImpl, DispatchMode, GateImpl, LayoutImpl, MoeLayerOptions};
+use crate::pipeline::ChunkChoice;
 
 /// Which system a profile models.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -136,6 +137,9 @@ impl SystemProfile {
                 CommImpl::Flat => CommChoice::Flat,
                 CommImpl::Hierarchical => CommChoice::Hierarchical,
             },
+            // 2022-era systems ran their exchanges back-to-back with the
+            // expert compute; no overlap.
+            chunks: ChunkChoice::Fixed(1),
             threads,
         }
     }

@@ -18,6 +18,10 @@ pub struct MetricsAgg {
     bytes_on_wire: f64,
     bytes_on_wire_bwd: f64,
     expert_flops: f64,
+    critical_path: f64,
+    comm_exposed: f64,
+    compute_exposed: f64,
+    comm_hidden: f64,
 }
 
 impl MetricsAgg {
@@ -45,6 +49,10 @@ impl MetricsAgg {
         self.bytes_on_wire += report.bytes_on_wire as f64;
         self.bytes_on_wire_bwd += report.bytes_on_wire_bwd as f64;
         self.expert_flops += report.expert_flops;
+        self.critical_path += report.critical_path;
+        self.comm_exposed += report.comm_exposed;
+        self.compute_exposed += report.compute_exposed;
+        self.comm_hidden += report.comm_hidden;
     }
 
     pub fn steps(&self) -> usize {
@@ -63,6 +71,7 @@ impl MetricsAgg {
             phases.push((name.clone(), self.comm[name] / n));
         }
         let total: f64 = phases.iter().map(|(_, t)| t).sum();
+        let exchange = self.comm_hidden + self.comm_exposed;
         Breakdown {
             phases,
             total,
@@ -72,6 +81,15 @@ impl MetricsAgg {
             bytes_on_wire: self.bytes_on_wire / n,
             bytes_on_wire_bwd: self.bytes_on_wire_bwd / n,
             expert_flops: self.expert_flops / n,
+            critical_path: self.critical_path / n,
+            comm_exposed: self.comm_exposed / n,
+            compute_exposed: self.compute_exposed / n,
+            comm_hidden: self.comm_hidden / n,
+            overlap_efficiency: if exchange > 0.0 {
+                self.comm_hidden / exchange
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -91,6 +109,18 @@ pub struct Breakdown {
     pub bytes_on_wire_bwd: f64,
     /// Mean expert-FFN FLOPs executed per step.
     pub expert_flops: f64,
+    /// Mean modeled critical-path wall of the overlapped exchange/
+    /// compute regions per step (see `StepReport::critical_path`).
+    pub critical_path: f64,
+    /// Mean exchange time left on the critical path per step.
+    pub comm_exposed: f64,
+    /// Mean expert compute left on the critical path per step.
+    pub compute_exposed: f64,
+    /// Mean exchange time hidden under expert compute per step.
+    pub comm_hidden: f64,
+    /// Fraction of all exchange time hidden under expert compute over
+    /// the whole run (0 when every step ran unchunked).
+    pub overlap_efficiency: f64,
 }
 
 impl Breakdown {
@@ -127,6 +157,11 @@ impl Breakdown {
             ("bytes_on_wire", Json::num(self.bytes_on_wire)),
             ("bytes_on_wire_bwd", Json::num(self.bytes_on_wire_bwd)),
             ("expert_flops", Json::num(self.expert_flops)),
+            ("critical_path", Json::num(self.critical_path)),
+            ("comm_exposed", Json::num(self.comm_exposed)),
+            ("compute_exposed", Json::num(self.compute_exposed)),
+            ("comm_hidden", Json::num(self.comm_hidden)),
+            ("overlap_efficiency", Json::num(self.overlap_efficiency)),
         ])
     }
 }
@@ -165,6 +200,29 @@ mod tests {
     }
 
     #[test]
+    fn aggregates_overlap_accounting() {
+        let mut agg = MetricsAgg::new();
+        let mut a = report(0.1, 0.5);
+        a.comm_exposed = 0.2;
+        a.comm_hidden = 0.3;
+        a.compute_exposed = 1.0;
+        a.critical_path = 1.2;
+        let mut b = report(0.1, 0.5);
+        b.comm_exposed = 0.5;
+        b.comm_hidden = 0.0;
+        b.compute_exposed = 1.0;
+        b.critical_path = 1.5;
+        agg.push(&a);
+        agg.push(&b);
+        let bd = agg.breakdown();
+        assert!((bd.comm_exposed - 0.35).abs() < 1e-12);
+        assert!((bd.comm_hidden - 0.15).abs() < 1e-12);
+        assert!((bd.critical_path - 1.35).abs() < 1e-12);
+        // Run-level efficiency = total hidden / total exchange time.
+        assert!((bd.overlap_efficiency - 0.3 / 1.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn fractions() {
         let mut agg = MetricsAgg::new();
         agg.push(&report(1.0, 2.0)); // gate 1, expert 1, a2a 2 → total 4
@@ -181,5 +239,10 @@ mod tests {
         let j = agg.breakdown().to_json();
         assert!(j.get("phases").is_some());
         assert!(j.f64_field("total").unwrap() > 0.0);
+        // The overlap metrics ride along in every JSON export (`train
+        // --json`, `layer-bench --json`).
+        assert!(j.get("comm_exposed").is_some());
+        assert!(j.get("compute_exposed").is_some());
+        assert!(j.get("overlap_efficiency").is_some());
     }
 }

@@ -19,6 +19,7 @@ use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
 use hetumoe::coordinator::Coordinator;
 use hetumoe::gating::{make_gate, GateBatch};
 use hetumoe::moe::DispatchMode;
+use hetumoe::pipeline::ChunkChoice;
 use hetumoe::serve::{ArrivalProcess, CommChoice, ServeConfig, ServeEngine};
 use hetumoe::tensor::Tensor;
 use hetumoe::util::rng::Rng;
@@ -44,6 +45,7 @@ const COMMANDS: &[CommandSpec] = &[
             ("gate", "switch|gshard|topk gate (default switch)"),
             ("dispatch", "padded|ragged pipeline (default ragged)"),
             ("alltoall", "auto|flat|hier schedule selection (default auto)"),
+            ("chunks", "auto|N exchange chunks for comm/compute overlap (default auto)"),
             ("json", "emit the run summary as JSON (flag)"),
             ("config", "JSON config file (pjrt backend)"),
             ("model", "artifact variant (pjrt backend, default e2e)"),
@@ -62,6 +64,7 @@ const COMMANDS: &[CommandSpec] = &[
             ("gpus", "GPUs per node (default 2)"),
             ("dispatch", "padded|ragged pipeline (default: ragged for hetumoe, padded baselines)"),
             ("alltoall", "auto|flat|hier per-step AllToAll selection in ragged mode (default: auto for hetumoe, else the system's flavor)"),
+            ("chunks", "auto|N exchange chunks for comm/compute overlap (default: auto for hetumoe, 1 for the 2022-era baselines)"),
             ("seed", "model/data seed (default 0)"),
             ("json", "emit the aggregated StepReport breakdown as JSON (flag)"),
         ],
@@ -97,6 +100,7 @@ const COMMANDS: &[CommandSpec] = &[
             ("slo-ms", "per-request latency SLO in ms (default 50)"),
             ("gate", "switch|gshard|topk|... (default switch)"),
             ("comm", "flat|hier|auto AllToAll selection (default auto)"),
+            ("chunks", "auto|N exchange chunks for comm/compute overlap (default auto)"),
             ("workload", "poisson|bursty arrivals (default poisson)"),
             ("nodes", "simulated nodes (default 2)"),
             ("gpus", "GPUs per node (default 8)"),
@@ -166,6 +170,11 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
     if let Some(v) = args.get("alltoall") {
         cfg.opts.alltoall = CommChoice::parse(v)?;
     }
+    if let Some(v) = args.get("chunks") {
+        cfg.opts.chunks = ChunkChoice::parse(v)?;
+    }
+    // The pipeline's per-expert FFN batches run on the shared pool.
+    cfg.opts.threads = hetumoe::util::threadpool::available_parallelism().min(8);
     let json = args.has_flag("json");
     if json {
         cfg.log_every = 0;
@@ -207,6 +216,8 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
                     ("hier", Json::num(summary.bwd_schedules.1 as f64)),
                 ]),
             ),
+            // `overlap_efficiency` (plus comm/compute exposure) rides
+            // inside the breakdown object.
             ("breakdown", summary.breakdown.to_json()),
         ]);
         println!("{}", j.dump());
@@ -230,6 +241,13 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
     println!(
         "bytes_on_wire/step: fwd {:.0} bwd {:.0} | expert_flops/step {:.3e}",
         b.bytes_on_wire, b.bytes_on_wire_bwd, b.expert_flops
+    );
+    println!(
+        "overlap: critical_path/step={} comm_exposed={} compute_exposed={} efficiency={:.1}%",
+        fmt_duration(b.critical_path),
+        fmt_duration(b.comm_exposed),
+        fmt_duration(b.compute_exposed),
+        100.0 * b.overlap_efficiency
     );
     let mut table = Table::new(
         "per-step phase breakdown (fwd + bwd + opt)",
@@ -323,10 +341,11 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
     let mut opts = profile.options(threads);
     if system == SystemKind::HetuMoE {
         // HetuMoE's modern hot path: padding-free dispatch with per-step
-        // schedule selection (the profile itself pins the paper-era
-        // padded pipeline for Fig-8 comparability).
+        // schedule + chunk-count selection (the profile itself pins the
+        // paper-era padded pipeline for Fig-8 comparability).
         opts.dispatch = DispatchMode::Ragged;
         opts.alltoall = CommChoice::Auto;
+        opts.chunks = ChunkChoice::Auto;
     }
     if let Some(v) = args.get("dispatch") {
         opts.dispatch = DispatchMode::parse(v)?;
@@ -334,8 +353,12 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
     if let Some(v) = args.get("alltoall") {
         opts.alltoall = CommChoice::parse(v)?;
     }
+    if let Some(v) = args.get("chunks") {
+        opts.chunks = ChunkChoice::parse(v)?;
+    }
     let dispatch = opts.dispatch;
     let alltoall = opts.alltoall;
+    let chunks = opts.chunks;
     let seed = args.u64_or("seed", 0)?;
     let mut coord = Coordinator::new(moe, cluster, opts, 32_000, tokens, seed)?;
     let summary = coord.run(steps)?;
@@ -345,6 +368,7 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
             ("system", Json::str(system.name())),
             ("dispatch", Json::str(dispatch.name())),
             ("alltoall", Json::str(alltoall.name())),
+            ("chunks", Json::str(chunks.name())),
             ("steps", Json::num(steps as f64)),
             ("seed", Json::num(seed as f64)),
             ("breakdown", summary.breakdown.to_json()),
@@ -354,11 +378,12 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
     }
     let mut table = Table::new(
         &format!(
-            "{} MoE layer breakdown ({} steps, {} dispatch, alltoall={})",
+            "{} MoE layer breakdown ({} steps, {} dispatch, alltoall={}, chunks={})",
             system.name(),
             steps,
             dispatch.name(),
-            alltoall.name()
+            alltoall.name(),
+            chunks.name()
         ),
         &["phase", "mean/step", "fraction"],
     );
@@ -380,6 +405,13 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
     println!(
         "bytes_on_wire/step={:.0} expert_flops/step={:.3e}",
         summary.breakdown.bytes_on_wire, summary.breakdown.expert_flops
+    );
+    println!(
+        "overlap: critical_path/step={} comm_exposed={} compute_exposed={} efficiency={:.1}%",
+        fmt_duration(summary.breakdown.critical_path),
+        fmt_duration(summary.breakdown.comm_exposed),
+        fmt_duration(summary.breakdown.compute_exposed),
+        100.0 * summary.breakdown.overlap_efficiency
     );
     Ok(())
 }
@@ -527,6 +559,7 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
     let max_tokens = args.usize_or("max-tokens", 64)?;
     let seed = args.u64_or("seed", 0)?;
     let comm = CommChoice::parse(args.str_or("comm", "auto"))?;
+    let chunks = ChunkChoice::parse(args.str_or("chunks", "auto"))?;
     let workload = args.str_or("workload", "poisson");
     let process = match workload {
         // Calibrated so the long-run mean equals --rate:
@@ -559,6 +592,7 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
         cluster,
         process,
         comm,
+        chunks,
         slo,
         duration,
         max_tokens,

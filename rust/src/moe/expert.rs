@@ -24,6 +24,13 @@ pub trait ExpertExecutor {
     fn d_model(&self) -> usize;
     /// FLOPs of a forward over `n` rows (for the roofline model).
     fn flops(&self, n: usize) -> f64;
+    /// The concrete [`Ffn`] behind this executor, if it has one. The
+    /// pipeline's expert stage uses this to run per-expert batches on
+    /// the shared thread pool (`Ffn` is plain data and `Sync`; opaque
+    /// executors — e.g. PJRT-backed — return `None` and run serially).
+    fn as_ffn(&self) -> Option<&Ffn> {
+        None
+    }
 }
 
 /// Pure-Rust FFN expert.
@@ -52,6 +59,10 @@ impl ExpertExecutor for NativeExpert {
 
     fn flops(&self, n: usize) -> f64 {
         self.ffn.flops(n) as f64
+    }
+
+    fn as_ffn(&self) -> Option<&Ffn> {
+        Some(&self.ffn)
     }
 }
 

@@ -6,36 +6,27 @@
 //! kernel, AllToAll flavor) pluggable — the baseline systems of Fig 8
 //! are exactly different option tuples over this one pipeline.
 //!
-//! Two dispatch pipelines share the gate phase (see DESIGN.md §"Dispatch
-//! pipelines"):
-//! - [`DispatchMode::Padded`] — the classic dense `[E, cap, d]` buffers:
-//!   every expert padded to capacity, zeros shipped through both
-//!   AllToAll legs and the expert GEMMs (the Fig-8 baselines).
-//! - [`DispatchMode::Ragged`] — padding-free: only occupied rows are
-//!   laid out ([`RaggedLayoutBuffer`]), exchanged (exact per-(rank,
-//!   expert) counts via the ragged AllToAllv), and computed (one
-//!   `[n_e, d]` FFN batch per expert). The AllToAll schedule (flat vs
-//!   hierarchical) is picked **per step** from the step's own traffic
-//!   matrix through [`crate::comm::schedule`] — the same decision
-//!   procedure the serving router uses.
+//! The six steps themselves are **not** implemented here anymore: this
+//! layer (like the training layer and, through the timing model, the
+//! serving engine) consumes the shared staged pipeline in
+//! [`crate::pipeline`] — `MoeLayer::forward` binds its gate kernel and
+//! expert executors into a [`crate::pipeline::StepExecutor`] and runs
+//! the forward-only flavor. See DESIGN.md §10 for the stage graph and
+//! the chunked comm/compute-overlap model that replaced the
+//! sum-of-phases wall clock.
 
 use crate::cluster::NetworkModel;
-use crate::comm::ragged::{offwire_bytes, ragged_combine, ragged_dispatch};
-use crate::comm::schedule::{pick_schedule, CommChoice, Schedule};
-use crate::comm::{alltoall, hierarchical_alltoall, CommTiming};
+use crate::comm::schedule::{CommChoice, Schedule};
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
 use crate::gating::topk::{softmax_of_selected, topk_rows_heap};
 use crate::gating::{apply_capacity, DispatchPlan, Gate, Routing};
-use crate::layout::{
-    gather_expert_slices, naive_layout, opt_layout, ragged_layout, ragged_reverse_layout,
-    reverse_layout, scatter_expert_slices, LayoutBuffer, RaggedLayoutBuffer,
-};
+use crate::layout::LayoutBuffer;
 use crate::moe::expert::ExpertExecutor;
 use crate::nn::matmul;
+use crate::pipeline::{ChunkChoice, ExpertBank, OverlapTiming, StepExecutor};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
-use std::time::Instant;
 
 /// Which top-k kernel the gate phase uses (Fig 3's comparison).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -132,6 +123,10 @@ pub struct MoeLayerOptions {
     /// (`Auto` scores the step's traffic matrix, like the serving
     /// router does per batch).
     pub alltoall: CommChoice,
+    /// Chunk count of the ragged exchanges for comm/compute overlap
+    /// (`Auto` = picked per step alongside the schedule, from the same
+    /// traffic matrix; the padded pipeline is never chunked).
+    pub chunks: ChunkChoice,
     /// Threads for the parallel kernels (1 = serial).
     pub threads: usize,
 }
@@ -144,6 +139,7 @@ impl Default for MoeLayerOptions {
             comm_impl: CommImpl::Hierarchical,
             dispatch: DispatchMode::Ragged,
             alltoall: CommChoice::Auto,
+            chunks: ChunkChoice::Auto,
             threads: 1,
         }
     }
@@ -154,7 +150,9 @@ impl Default for MoeLayerOptions {
 pub struct StepReport {
     /// Measured wall seconds per local phase, averaged per rank.
     pub wall: Vec<(String, f64)>,
-    /// Simulated communication timings.
+    /// Simulated communication timings (chunked exchanges report the
+    /// sum of their chunk legs; the overlap fields below carry the
+    /// critical-path view).
     pub comm: Vec<(String, f64)>,
     /// Capacity-drop rate across ranks.
     pub drop_rate: f64,
@@ -180,6 +178,25 @@ pub struct StepReport {
     pub bytes_on_wire_bwd: usize,
     /// AllToAll schedule the backward legs ran ("" for forward-only).
     pub comm_schedule_bwd: String,
+    /// Chunk count of the forward exchanges (1 = unchunked; the padded
+    /// pipeline is always 1).
+    pub n_chunks: usize,
+    /// Chunk count of the backward exchanges (0 for forward-only steps).
+    pub n_chunks_bwd: usize,
+    /// Modeled critical-path wall of the overlapped `dispatch → expert
+    /// → combine` region(s) — forward plus any absorbed backward. This
+    /// replaces the sum-of-phases view: the step's modeled wall is
+    /// [`Self::critical_wall`], not [`Self::wall_total`] +
+    /// [`Self::comm_total`].
+    pub critical_path: f64,
+    /// Exchange time left on the critical path (not hidden under
+    /// expert compute).
+    pub comm_exposed: f64,
+    /// Expert compute left on the critical path (not hidden under the
+    /// exchanges).
+    pub compute_exposed: f64,
+    /// Exchange time hidden under expert compute.
+    pub comm_hidden: f64,
 }
 
 impl StepReport {
@@ -195,9 +212,38 @@ impl StepReport {
         self.wall.iter().filter(|(n, _)| n == name).map(|(_, t)| t).sum()
     }
 
+    /// Fraction of the exchange time hidden under expert compute
+    /// (0 when unchunked — nothing overlaps).
+    pub fn overlap_efficiency(&self) -> f64 {
+        let total = self.comm_hidden + self.comm_exposed;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.comm_hidden / total
+        }
+    }
+
+    /// The step's modeled wall under the critical-path model: the
+    /// measured local phases plus the overlapped exchange/compute
+    /// region(s), instead of the plain sum of all phases.
+    pub fn critical_wall(&self) -> f64 {
+        self.wall_total() - self.wall_phase("expert") - self.wall_phase("bwd_expert")
+            + self.critical_path
+    }
+
+    /// Fold one overlapped-exchange round into this report.
+    pub fn apply_overlap(&mut self, o: &OverlapTiming) {
+        self.n_chunks = o.n_chunks();
+        self.critical_path += o.critical_path;
+        self.comm_exposed += o.comm_exposed();
+        self.compute_exposed += o.compute_exposed();
+        self.comm_hidden += o.comm_hidden();
+    }
+
     /// Fold a backward-pass report into this (forward) step report: wall
-    /// and comm phases are appended, the backward exchange's bytes and
-    /// schedule land in the `_bwd` fields, and FLOPs accumulate.
+    /// and comm phases are appended, the backward exchange's bytes,
+    /// schedule and chunk count land in the `_bwd` fields, and FLOPs and
+    /// the overlap accounting accumulate.
     pub fn absorb_backward(&mut self, bwd: StepReport) {
         self.wall.extend(bwd.wall);
         self.comm.extend(bwd.comm);
@@ -206,6 +252,11 @@ impl StepReport {
             self.comm_schedule_bwd = bwd.comm_schedule;
         }
         self.expert_flops += bwd.expert_flops;
+        self.n_chunks_bwd = bwd.n_chunks;
+        self.critical_path += bwd.critical_path;
+        self.comm_exposed += bwd.comm_exposed;
+        self.compute_exposed += bwd.compute_exposed;
+        self.comm_hidden += bwd.comm_hidden;
     }
 }
 
@@ -289,224 +340,24 @@ impl MoeLayer {
 
     /// Forward over per-rank token shards `[T_r, d]` (all equal length).
     /// Returns per-rank outputs (same shapes) and the step report.
+    ///
+    /// This is the forward-only flavor of the shared
+    /// [`crate::pipeline::StepExecutor`]; the training layer runs the
+    /// same executor in its forward + cache flavor, so the two can
+    /// never drift apart.
     pub fn forward(&self, shards: &[Tensor]) -> Result<(Vec<Tensor>, StepReport)> {
-        let w = self.cluster.world();
-        if shards.len() != w {
-            return Err(crate::shape_err!(
-                "got {} shards for world {w}",
-                shards.len()
-            ));
-        }
-        let d = self.cfg.d_model;
-        let e = self.cfg.num_experts;
-        let local_tokens = shards[0].rows();
-        for s in shards {
-            if s.rows() != local_tokens || s.row_len() != d {
-                return Err(crate::shape_err!("ragged shards"));
-            }
-        }
-        // Per-rank, per-expert capacity.
-        let cap = self.cfg.capacity(local_tokens);
-        let mut report = StepReport::default();
-        let mut expert_counts = vec![0usize; e];
-
-        // ---- Step 1 per rank: gate scores, routing, capacity plan ----
-        let mut plans: Vec<DispatchPlan> = Vec::with_capacity(w);
-        let mut gate_wall = 0.0f64;
-        for shard in shards {
-            let g0 = Instant::now();
-            let scores = matmul(shard, &self.gate_weight);
-            let routing = self.route_with_impl(&scores);
-            gate_wall += g0.elapsed().as_secs_f64();
-            for (i, c) in routing.expert_counts().into_iter().enumerate() {
-                expert_counts[i] += c;
-            }
-            report.aux_loss += routing.aux_loss as f64 / w as f64;
-            let plan = apply_capacity(&routing, cap);
-            report.drop_rate += plan.drop_rate() / w as f64;
-            if self.opts.dispatch == DispatchMode::Padded {
-                report.padding_waste += plan.padding_waste() / w as f64;
-            }
-            plans.push(plan);
-        }
-        report.wall.push(("gate".into(), gate_wall / w as f64));
-
-        // ---- Steps 2–6: the dispatch pipeline ----
-        let outputs = match self.opts.dispatch {
-            DispatchMode::Padded => self.forward_padded(shards, &plans, &mut report)?,
-            DispatchMode::Ragged => self.forward_ragged(shards, &plans, &mut report)?,
+        let route = |scores: &Tensor| self.route_with_impl(scores);
+        let exec = StepExecutor {
+            cfg: &self.cfg,
+            cluster: &self.cluster,
+            net: &self.net,
+            opts: &self.opts,
+            gate_weight: &self.gate_weight,
+            experts: ExpertBank::Infer(&self.experts),
+            route: &route,
         };
-
-        report.expert_counts = expert_counts;
-        Ok((outputs, report))
-    }
-
-    /// The classic dense pipeline: padded `[E, cap, d]` buffers through
-    /// equal-chunk AllToAlls, experts run over full capacity slices.
-    fn forward_padded(
-        &self,
-        shards: &[Tensor],
-        plans: &[DispatchPlan],
-        report: &mut StepReport,
-    ) -> Result<Vec<Tensor>> {
-        let w = self.cluster.world();
-        let d = self.cfg.d_model;
-        let e = self.cfg.num_experts;
-        let epr = self.experts_per_rank();
-        let cap = plans[0].capacity;
-
-        // ---- Step 2: layout transform into padded buffers ----
-        let l0 = Instant::now();
-        let buffers: Vec<LayoutBuffer> = shards
-            .iter()
-            .zip(plans)
-            .map(|(shard, plan)| self.layout_with_impl(shard, plan))
-            .collect();
-        report
-            .wall
-            .push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
-
-        // ---- Step 3: AllToAll dispatch ----
-        // Buffer layout per rank: [E, cap, d] = W chunks of [epr, cap, d].
-        let mut flat: Vec<Vec<f32>> =
-            buffers.into_iter().map(|b| b.data.into_vec()).collect();
-        let timing = self.run_alltoall(&mut flat)?;
-        report.comm.push(("alltoall_dispatch".into(), timing.total));
-        report.comm_schedule = self.opts.comm_impl.name().into();
-
-        // ---- Step 4: expert compute ----
-        // After AllToAll, rank r's buffer is [W, epr, cap, d]: the tokens
-        // every source rank sent to r's experts.
-        let x0 = Instant::now();
-        if epr == 1 {
-            // One expert per rank: the whole received buffer [W·cap, d]
-            // is already that expert's contiguous batch — run it in
-            // place, no gather/scatter copies.
-            for (r, buf) in flat.iter_mut().enumerate() {
-                let rows = Tensor::from_vec(std::mem::take(buf), &[w * cap, d])?;
-                let out = self.experts[r].forward(&rows)?;
-                report.expert_flops += self.experts[r].flops(w * cap);
-                *buf = out.into_vec();
-            }
-        } else {
-            for (r, buf) in flat.iter_mut().enumerate() {
-                // One scratch per rank, reused across its local experts.
-                let mut rows = Tensor::zeros(&[w * cap, d]);
-                for le in 0..epr {
-                    let global_e = r * epr + le;
-                    gather_expert_slices(buf, &mut rows, w, epr, le, cap);
-                    let out = self.experts[global_e].forward(&rows)?;
-                    report.expert_flops += self.experts[global_e].flops(w * cap);
-                    scatter_expert_slices(buf, out.data(), w, epr, le, cap, d);
-                }
-            }
-        }
-        report
-            .wall
-            .push(("expert".into(), x0.elapsed().as_secs_f64() / w as f64));
-
-        // ---- Step 5: AllToAll combine (reverse exchange) ----
-        let timing2 = self.run_alltoall(&mut flat)?;
-        report.comm.push(("alltoall_combine".into(), timing2.total));
-        // Every off-diagonal (src, dst) pair ships one [epr, cap, d]
-        // chunk per leg, padding included.
-        report.bytes_on_wire = 2 * w * w.saturating_sub(1) * epr * cap * d * 4;
-
-        // ---- Step 6: reverse layout per rank ----
-        let r0 = Instant::now();
-        let mut outputs = Vec::with_capacity(w);
-        for (rank, plan) in plans.iter().enumerate() {
-            let buffer = LayoutBuffer {
-                data: Tensor::from_vec(std::mem::take(&mut flat[rank]), &[e * cap, d])?,
-                capacity: cap,
-                num_experts: e,
-            };
-            outputs.push(reverse_layout(&buffer, plan, self.opts.threads));
-        }
-        report
-            .wall
-            .push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
-        Ok(outputs)
-    }
-
-    /// The padding-free pipeline: ragged buffers, exact-count AllToAllv
-    /// with per-step schedule selection, grouped expert compute.
-    fn forward_ragged(
-        &self,
-        shards: &[Tensor],
-        plans: &[DispatchPlan],
-        report: &mut StepReport,
-    ) -> Result<Vec<Tensor>> {
-        let w = self.cluster.world();
-        let d = self.cfg.d_model;
-        let epr = self.experts_per_rank();
-
-        // ---- Step 2: ragged layout (occupied rows only, no zero-fill) ----
-        let l0 = Instant::now();
-        let buffers: Vec<RaggedLayoutBuffer> = shards
-            .iter()
-            .zip(plans)
-            .map(|(shard, plan)| ragged_layout(shard, plan, self.opts.threads))
-            .collect();
-        report
-            .wall
-            .push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
-
-        // ---- Schedule selection: the serving router's decision
-        // procedure, applied per training step ----
-        let kept: Vec<Vec<usize>> = plans.iter().map(|p| p.kept.clone()).collect();
-        let counts: Vec<Vec<usize>> =
-            plans.iter().map(|p| p.rank_counts(w)).collect();
-        let row_bytes = d * 4;
-        let pick = pick_schedule(&self.net, &counts, row_bytes, self.opts.alltoall);
-        let schedule = pick.schedule;
-        report.comm_schedule = schedule.name().into();
-
-        // ---- Step 3: ragged AllToAllv dispatch (exact counts) ----
-        let mut flat: Vec<Vec<f32>> =
-            buffers.into_iter().map(|b| b.data.into_vec()).collect();
-        let timing = ragged_dispatch(&self.net, &mut flat, &kept, d, schedule)?;
-        report.comm.push(("alltoall_dispatch".into(), timing.total));
-
-        // ---- Step 4: grouped expert compute over true token counts ----
-        // The exchange delivered each expert's batch contiguous: one
-        // [n_e, d] FFN per expert, no per-source gathers.
-        let x0 = Instant::now();
-        for (r, buf) in flat.iter_mut().enumerate() {
-            let mut off = 0usize;
-            for le in 0..epr {
-                let ge = r * epr + le;
-                let n: usize = kept.iter().map(|row| row[ge]).sum();
-                if n > 0 {
-                    let rows = Tensor::from_vec(buf[off..off + n * d].to_vec(), &[n, d])?;
-                    let out = self.experts[ge].forward(&rows)?;
-                    report.expert_flops += self.experts[ge].flops(n);
-                    buf[off..off + n * d].copy_from_slice(out.data());
-                }
-                off += n * d;
-            }
-        }
-        report
-            .wall
-            .push(("expert".into(), x0.elapsed().as_secs_f64() / w as f64));
-
-        // ---- Step 5: ragged AllToAllv combine (reverse exchange) ----
-        let timing2 = ragged_combine(&self.net, &mut flat, &kept, d, schedule)?;
-        report.comm.push(("alltoall_combine".into(), timing2.total));
-        report.bytes_on_wire = 2 * offwire_bytes(&counts, row_bytes);
-
-        // ---- Step 6: ragged reverse layout (takes ownership — no clone) ----
-        let r0 = Instant::now();
-        let mut outputs = Vec::with_capacity(w);
-        for (rank, plan) in plans.iter().enumerate() {
-            let buffer =
-                RaggedLayoutBuffer::from_plan(std::mem::take(&mut flat[rank]), plan, d)?;
-            outputs.push(ragged_reverse_layout(&buffer, plan, self.opts.threads));
-        }
-        report
-            .wall
-            .push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
-        Ok(outputs)
+        let out = exec.run(shards, false)?;
+        Ok((out.outputs, out.report))
     }
 
     /// Route scores through the configured kernel implementation.
@@ -553,23 +404,6 @@ impl MoeLayer {
                     self.gate.route_scores(scores, 0)
                 }
             }
-        }
-    }
-
-    /// Dispatch tokens into the padded buffer through the configured
-    /// layout implementation.
-    fn layout_with_impl(&self, shard: &Tensor, plan: &DispatchPlan) -> LayoutBuffer {
-        match self.opts.layout_impl {
-            LayoutImpl::Optimized => opt_layout(shard, plan, self.opts.threads),
-            LayoutImpl::Naive => naive_layout(shard, plan),
-            LayoutImpl::DenseEinsum => dense_einsum_layout(shard, plan),
-        }
-    }
-
-    fn run_alltoall(&self, flat: &mut [Vec<f32>]) -> Result<CommTiming> {
-        match self.opts.comm_impl {
-            CommImpl::Flat => alltoall(&self.net, flat),
-            CommImpl::Hierarchical => hierarchical_alltoall(&self.net, flat),
         }
     }
 
@@ -665,6 +499,10 @@ mod tests {
         assert_eq!(report.expert_counts.iter().sum::<usize>(), 48);
         assert!(report.comm_total() > 0.0);
         assert!(report.wall_total() > 0.0);
+        // The overlap model is always filled in.
+        assert!(report.n_chunks >= 1);
+        assert!(report.critical_path > 0.0);
+        assert!(report.critical_wall() > 0.0);
     }
 
     #[test]
@@ -680,11 +518,15 @@ mod tests {
         cfg.capacity_factor = 8.0;
         let layer = MoeLayer::native(cfg, cluster, opts, 3).unwrap();
         let shards = shards_for(4, 10, 8, 11);
-        let (out, _) = layer.forward(&shards).unwrap();
+        let (out, report) = layer.forward(&shards).unwrap();
         let reference = layer.reference_forward(&shards).unwrap();
         for (o, r) in out.iter().zip(&reference) {
             assert!(o.allclose(r, 1e-4));
         }
+        // The padded pipeline never chunks: everything is exposed.
+        assert_eq!(report.n_chunks, 1);
+        assert_eq!(report.comm_hidden, 0.0);
+        assert_eq!(report.overlap_efficiency(), 0.0);
     }
 
     #[test]
@@ -806,6 +648,34 @@ mod tests {
         .unwrap();
         let (_, report) = layer.forward(&shards).unwrap();
         assert!(report.comm_schedule == "flat" || report.comm_schedule == "hier");
+    }
+
+    #[test]
+    fn forced_chunk_counts_are_reported_and_bit_identical() {
+        let cluster = ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) };
+        let shards = shards_for(4, 16, 8, 37);
+        let mk = |chunks| {
+            MoeLayer::native(
+                tiny_cfg(GateKind::Switch),
+                cluster.clone(),
+                MoeLayerOptions { chunks, ..Default::default() },
+                13,
+            )
+            .unwrap()
+        };
+        let (base_out, base_rep) = mk(ChunkChoice::Fixed(1)).forward(&shards).unwrap();
+        assert_eq!(base_rep.n_chunks, 1);
+        assert_eq!(base_rep.comm_hidden, 0.0);
+        for n in [2usize, 4] {
+            let (out, rep) = mk(ChunkChoice::Fixed(n)).forward(&shards).unwrap();
+            assert_eq!(rep.n_chunks, n);
+            for (a, b) in base_out.iter().zip(&out) {
+                assert!(a.allclose(b, 0.0), "chunking must not change outputs");
+            }
+            // Critical path never exceeds the serial sum of the region.
+            let serial = rep.wall_phase("expert") + rep.comm_total();
+            assert!(rep.critical_path <= serial + 1e-9);
+        }
     }
 
     #[test]

@@ -1,0 +1,488 @@
+//! The staged step executor: one implementation of Algorithm 1's six
+//! steps shared by every consumer.
+//!
+//! [`StepExecutor::run`] drives the stages
+//!
+//! ```text
+//!   StageGate → StageLayout → StageDispatch → StageExpert → StageCombine
+//!   (scores,      padded or      ragged/equal    per-expert     reverse
+//!    routing,     ragged         chunk exchange   FFN batches    exchange +
+//!    capacity)    buffers)                        on the pool)   reverse layout
+//! ```
+//!
+//! in two flavors selected by the `collect_cache` flag:
+//!
+//! - **forward-only** — what [`crate::moe::MoeLayer::forward`] (and,
+//!   via the timing model, the serving engine) consumes;
+//! - **forward + cache** — additionally saves scores, routings, plans,
+//!   per-expert FFN activation caches and the pre-reverse expert
+//!   outputs, exactly what the training backward pass needs
+//!   ([`crate::backprop::TrainMoeLayer`] consumes this flavor; the old
+//!   duplicated six-step forward in `backprop/layer.rs` is gone).
+//!
+//! The expert stage runs each rank's per-expert ragged batches on the
+//! shared [`crate::util::threadpool`] when `opts.threads > 1` and the
+//! expert bank exposes concrete FFNs; outputs are bit-identical to
+//! serial execution because every batch is an independent pure function
+//! writing a disjoint buffer region. Exchange timing is attributed by
+//! the chunked overlap model ([`crate::pipeline::overlap`]): the
+//! per-step schedule still comes from the shared
+//! [`crate::comm::schedule::pick_schedule`] decision (so training and
+//! serving can never disagree), and the chunk count is then chosen from
+//! the same traffic matrix plus the measured per-rank expert walls.
+
+use crate::cluster::{ExpertPlacement, NetworkModel};
+use crate::comm::ragged::{offwire_bytes, ragged_combine, ragged_dispatch};
+use crate::comm::schedule::{pick_schedule, Schedule};
+use crate::comm::{alltoall, hierarchical_alltoall, CommTiming};
+use crate::config::{ClusterConfig, MoeConfig};
+use crate::error::Result;
+use crate::gating::{apply_capacity, DispatchPlan, Routing};
+use crate::layout::{
+    gather_expert_slices, naive_layout, opt_layout, ragged_layout, ragged_reverse_layout,
+    reverse_layout, scatter_expert_slices, LayoutBuffer, RaggedLayoutBuffer,
+};
+use crate::moe::expert::ExpertExecutor;
+use crate::moe::layer::dense_einsum_layout;
+use crate::moe::{CommImpl, DispatchMode, LayoutImpl, MoeLayerOptions, StepReport};
+use crate::nn::{matmul, Ffn, FfnCache};
+use crate::pipeline::{OverlapTiming, StagePlan};
+use crate::tensor::Tensor;
+use crate::util::threadpool;
+use std::time::Instant;
+
+/// The expert substrate the pipeline's expert stage runs on.
+pub enum ExpertBank<'a> {
+    /// Trait-object executors (the inference layer; may be
+    /// artifact-backed). Runs serially unless every executor exposes a
+    /// concrete [`Ffn`] through [`ExpertExecutor::as_ffn`].
+    Infer(&'a [Box<dyn ExpertExecutor>]),
+    /// Concrete FFNs that can cache activations (the training layer).
+    Train(&'a [Ffn]),
+}
+
+impl<'a> ExpertBank<'a> {
+    fn flops(&self, ge: usize, n: usize) -> f64 {
+        match self {
+            ExpertBank::Infer(ex) => ex[ge].flops(n),
+            ExpertBank::Train(ffns) => ffns[ge].flops(n) as f64,
+        }
+    }
+
+    /// Concrete FFN views when every expert exposes one (enables the
+    /// pool-parallel expert stage); `None` if any executor is opaque.
+    fn ffns(&self) -> Option<Vec<&'a Ffn>> {
+        match self {
+            ExpertBank::Train(ffns) => Some(ffns.iter().collect()),
+            ExpertBank::Infer(ex) => ex.iter().map(|e| e.as_ffn()).collect(),
+        }
+    }
+
+    fn run_serial(
+        &self,
+        ge: usize,
+        rows: &Tensor,
+        want_cache: bool,
+    ) -> Result<(Tensor, Option<FfnCache>)> {
+        match self {
+            ExpertBank::Infer(ex) => Ok((ex[ge].forward(rows)?, None)),
+            ExpertBank::Train(ffns) => {
+                if want_cache {
+                    let (out, cache) = ffns[ge].forward_cached(rows);
+                    Ok((out, Some(cache)))
+                } else {
+                    Ok((ffns[ge].forward(rows), None))
+                }
+            }
+        }
+    }
+}
+
+/// `(global expert, element offset, rows)` of each non-empty local
+/// batch in rank `r`'s expert-major receive buffer. Shared with the
+/// backward pass, whose gradient buffers have the identical layout —
+/// one scan, two consumers.
+pub(crate) fn rank_expert_jobs(
+    placement: &ExpertPlacement,
+    kept: &[Vec<usize>],
+    r: usize,
+    d: usize,
+) -> Vec<(usize, usize, usize)> {
+    let epr = placement.experts_per_rank();
+    let mut jobs = Vec::with_capacity(epr);
+    let mut off = 0usize;
+    for le in 0..epr {
+        let ge = placement.expert_of(r, le);
+        let n: usize = kept.iter().map(|row| row[ge]).sum();
+        if n > 0 {
+            jobs.push((ge, off, n));
+        }
+        off += n * d;
+    }
+    jobs
+}
+
+/// Forward activations saved by the cached flavor for the backward
+/// pass (the training layer's `TrainCache`).
+pub struct ForwardCache {
+    /// Per-rank gate scores `[T, E]`.
+    pub scores: Vec<Tensor>,
+    pub routings: Vec<Routing>,
+    pub plans: Vec<DispatchPlan>,
+    /// Per-(rank, expert) kept counts — the exchange's traffic source.
+    pub kept: Vec<Vec<usize>>,
+    /// Per-expert FFN caches over the received batch (None if 0 rows).
+    pub expert_caches: Vec<Option<FfnCache>>,
+    /// Per-rank post-combine buffers in source layout — the expert
+    /// outputs each slot's combine-weight gradient dots against.
+    pub expert_out: Vec<Vec<f32>>,
+    /// Schedule the forward exchanges ran; the backward exchanges reuse
+    /// it (same traffic matrix, same decision).
+    pub schedule: Schedule,
+}
+
+/// Everything one pipeline run produces.
+pub struct StepOutput {
+    pub outputs: Vec<Tensor>,
+    pub report: StepReport,
+    /// Present iff the run was the forward + cache flavor.
+    pub cache: Option<ForwardCache>,
+}
+
+/// The unified staged step pipeline (see module docs).
+pub struct StepExecutor<'a> {
+    pub cfg: &'a MoeConfig,
+    pub cluster: &'a ClusterConfig,
+    pub net: &'a NetworkModel,
+    pub opts: &'a MoeLayerOptions,
+    /// Router weight `[d, E]`.
+    pub gate_weight: &'a Tensor,
+    pub experts: ExpertBank<'a>,
+    /// Routing kernel: scores `[T, E]` → routing. The caller binds the
+    /// gate implementation and the training step here.
+    pub route: &'a dyn Fn(&Tensor) -> Routing,
+}
+
+impl<'a> StepExecutor<'a> {
+    fn placement(&self) -> ExpertPlacement {
+        ExpertPlacement::new(self.cfg.num_experts, self.cluster.world())
+    }
+
+    /// Run the pipeline over per-rank token shards `[T, d]` (all equal
+    /// length). `collect_cache` selects the forward + cache flavor.
+    pub fn run(&self, shards: &[Tensor], collect_cache: bool) -> Result<StepOutput> {
+        let w = self.cluster.world();
+        if shards.len() != w {
+            return Err(crate::shape_err!("got {} shards for world {w}", shards.len()));
+        }
+        let d = self.cfg.d_model;
+        let local_tokens = shards[0].rows();
+        for s in shards {
+            if s.rows() != local_tokens || s.row_len() != d {
+                return Err(crate::shape_err!("ragged shards"));
+            }
+        }
+        let cap = self.cfg.capacity(local_tokens);
+        let mut report = StepReport::default();
+        let mut expert_counts = vec![0usize; self.cfg.num_experts];
+
+        // ---- StageGate: scores, routing, capacity plan per rank ----
+        let g0 = Instant::now();
+        let mut scores_all = Vec::with_capacity(w);
+        let mut routings = Vec::with_capacity(w);
+        let mut plans: Vec<DispatchPlan> = Vec::with_capacity(w);
+        for shard in shards {
+            let scores = matmul(shard, self.gate_weight);
+            let routing = (self.route)(&scores);
+            for (i, c) in routing.expert_counts().into_iter().enumerate() {
+                expert_counts[i] += c;
+            }
+            report.aux_loss += routing.aux_loss as f64 / w as f64;
+            let plan = apply_capacity(&routing, cap);
+            report.drop_rate += plan.drop_rate() / w as f64;
+            if self.opts.dispatch == DispatchMode::Padded {
+                report.padding_waste += plan.padding_waste() / w as f64;
+            }
+            scores_all.push(scores);
+            routings.push(routing);
+            plans.push(plan);
+        }
+        report.wall.push(("gate".into(), g0.elapsed().as_secs_f64() / w as f64));
+        report.expert_counts = expert_counts;
+
+        let kept: Vec<Vec<usize>> = plans.iter().map(|p| p.kept.clone()).collect();
+        let (outputs, expert_caches, expert_out, schedule) = match self.opts.dispatch {
+            DispatchMode::Ragged => {
+                self.run_ragged(shards, &plans, &kept, collect_cache, &mut report)?
+            }
+            DispatchMode::Padded => {
+                self.run_padded(shards, &plans, collect_cache, &mut report)?
+            }
+        };
+
+        let cache = if collect_cache {
+            Some(ForwardCache {
+                scores: scores_all,
+                routings,
+                plans,
+                kept,
+                expert_caches,
+                expert_out,
+                schedule,
+            })
+        } else {
+            None
+        };
+        Ok(StepOutput { outputs, report, cache })
+    }
+
+    /// The padding-free pipeline with chunked comm/compute overlap.
+    #[allow(clippy::type_complexity)]
+    fn run_ragged(
+        &self,
+        shards: &[Tensor],
+        plans: &[DispatchPlan],
+        kept: &[Vec<usize>],
+        collect_cache: bool,
+        report: &mut StepReport,
+    ) -> Result<(Vec<Tensor>, Vec<Option<FfnCache>>, Vec<Vec<f32>>, Schedule)> {
+        let w = self.cluster.world();
+        let d = self.cfg.d_model;
+        let placement = self.placement();
+
+        // ---- StageLayout: ragged (occupied rows only, no zero-fill) ----
+        let l0 = Instant::now();
+        let buffers: Vec<RaggedLayoutBuffer> = shards
+            .iter()
+            .zip(plans)
+            .map(|(shard, plan)| ragged_layout(shard, plan, self.opts.threads))
+            .collect();
+        report.wall.push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
+
+        // ---- Schedule selection: the decision procedure shared with
+        // the serving router ----
+        let counts = placement.traffic_matrix(kept);
+        let row_bytes = d * 4;
+        let pick = pick_schedule(self.net, &counts, row_bytes, self.opts.alltoall);
+        let schedule = pick.schedule;
+
+        // ---- StageDispatch: exact-count exchange. The permutation is
+        // applied once; timing is attributed per chunk by the overlap
+        // model below, so chunked and unchunked execution are
+        // bit-identical by construction. ----
+        let mut flat: Vec<Vec<f32>> =
+            buffers.into_iter().map(|b| b.data.into_vec()).collect();
+        ragged_dispatch(self.net, &mut flat, kept, d, schedule)?;
+
+        // ---- StageExpert: grouped per-expert batches, wall measured
+        // per destination rank (the overlap model's compute profile) ----
+        let mut expert_caches: Vec<Option<FfnCache>> = Vec::new();
+        expert_caches.resize_with(self.cfg.num_experts, || None);
+        let mut rank_wall = vec![0.0f64; w];
+        for (r, buf) in flat.iter_mut().enumerate() {
+            let jobs = rank_expert_jobs(&placement, kept, r, d);
+            let x0 = Instant::now();
+            let results = self.run_expert_jobs(&jobs, &buf[..], collect_cache)?;
+            for ((ge, off, n), (out, fcache)) in jobs.into_iter().zip(results) {
+                report.expert_flops += self.experts.flops(ge, n);
+                buf[off..off + n * d].copy_from_slice(out.data());
+                if let Some(c) = fcache {
+                    expert_caches[ge] = Some(c);
+                }
+            }
+            rank_wall[r] = x0.elapsed().as_secs_f64();
+        }
+        report.wall.push(("expert".into(), rank_wall.iter().sum::<f64>() / w as f64));
+
+        // ---- Overlap model (the StagePlan's chunk half): chunk count
+        // from the same traffic matrix, per-rank compute in the
+        // report's per-rank-mean convention ----
+        let compute_per_rank: Vec<f64> =
+            rank_wall.iter().map(|t| t / w as f64).collect();
+        let (stage_plan, overlap) = StagePlan::for_schedule(
+            self.net,
+            &counts,
+            row_bytes,
+            schedule,
+            self.opts.chunks,
+            &compute_per_rank,
+        );
+        report.comm_schedule = stage_plan.schedule.name().into();
+        report.comm.push(("alltoall_dispatch".into(), overlap.dispatch_total()));
+
+        // ---- StageCombine: exact inverse exchange + reverse layout ----
+        ragged_combine(self.net, &mut flat, kept, d, schedule)?;
+        report.comm.push(("alltoall_combine".into(), overlap.combine_total()));
+        report.bytes_on_wire = 2 * offwire_bytes(&counts, row_bytes);
+        report.apply_overlap(&overlap);
+
+        let r0 = Instant::now();
+        let mut outputs = Vec::with_capacity(w);
+        let mut expert_out: Vec<Vec<f32>> = Vec::new();
+        for (rank, plan) in plans.iter().enumerate() {
+            let buffer =
+                RaggedLayoutBuffer::from_plan(std::mem::take(&mut flat[rank]), plan, d)?;
+            outputs.push(ragged_reverse_layout(&buffer, plan, self.opts.threads));
+            if collect_cache {
+                expert_out.push(buffer.data.into_vec());
+            }
+        }
+        report
+            .wall
+            .push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
+        Ok((outputs, expert_caches, expert_out, schedule))
+    }
+
+    /// The classic dense pipeline: padded `[E, cap, d]` buffers through
+    /// equal-chunk AllToAlls (fixed schedule, never chunked — the
+    /// comparison baseline the Fig-8 systems model).
+    #[allow(clippy::type_complexity)]
+    fn run_padded(
+        &self,
+        shards: &[Tensor],
+        plans: &[DispatchPlan],
+        collect_cache: bool,
+        report: &mut StepReport,
+    ) -> Result<(Vec<Tensor>, Vec<Option<FfnCache>>, Vec<Vec<f32>>, Schedule)> {
+        let w = self.cluster.world();
+        let d = self.cfg.d_model;
+        let e = self.cfg.num_experts;
+        let placement = self.placement();
+        let epr = placement.experts_per_rank();
+        let cap = plans[0].capacity;
+
+        // ---- StageLayout: padded, through the configured transform ----
+        let l0 = Instant::now();
+        let buffers: Vec<LayoutBuffer> = shards
+            .iter()
+            .zip(plans)
+            .map(|(shard, plan)| match self.opts.layout_impl {
+                LayoutImpl::Optimized => opt_layout(shard, plan, self.opts.threads),
+                LayoutImpl::Naive => naive_layout(shard, plan),
+                LayoutImpl::DenseEinsum => dense_einsum_layout(shard, plan),
+            })
+            .collect();
+        report.wall.push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
+
+        // ---- StageDispatch: equal-chunk AllToAll ----
+        let mut flat: Vec<Vec<f32>> =
+            buffers.into_iter().map(|b| b.data.into_vec()).collect();
+        let timing = self.run_alltoall(&mut flat)?;
+        report.comm.push(("alltoall_dispatch".into(), timing.total));
+        let schedule = match self.opts.comm_impl {
+            CommImpl::Flat => Schedule::Flat,
+            CommImpl::Hierarchical => Schedule::Hierarchical,
+        };
+        report.comm_schedule = schedule.name().into();
+
+        // ---- StageExpert: capacity slices per local expert ----
+        // After AllToAll, rank r's buffer is [W, epr, cap, d]; gather
+        // each local expert's rows source-major (same order as the
+        // ragged receive layout, padding rows interleaved — the zero
+        // rows drop out of every gradient sum, which is what keeps the
+        // two backward paths bit-identical).
+        let mut expert_caches: Vec<Option<FfnCache>> = Vec::new();
+        expert_caches.resize_with(e, || None);
+        let x0 = Instant::now();
+        for (r, buf) in flat.iter_mut().enumerate() {
+            if epr == 1 {
+                // One expert per rank: the received buffer already is
+                // that expert's contiguous batch — run it in place, no
+                // gather/scatter copies.
+                let rows = Tensor::from_vec(std::mem::take(buf), &[w * cap, d])?;
+                let (out, fcache) = self.experts.run_serial(r, &rows, collect_cache)?;
+                report.expert_flops += self.experts.flops(r, w * cap);
+                *buf = out.into_vec();
+                expert_caches[r] = fcache;
+                continue;
+            }
+            // One scratch per rank, reused across its local experts.
+            let mut rows = Tensor::zeros(&[w * cap, d]);
+            for le in 0..epr {
+                let ge = placement.expert_of(r, le);
+                gather_expert_slices(buf, &mut rows, w, epr, le, cap);
+                let (out, fcache) = self.experts.run_serial(ge, &rows, collect_cache)?;
+                report.expert_flops += self.experts.flops(ge, w * cap);
+                scatter_expert_slices(buf, out.data(), w, epr, le, cap, d);
+                expert_caches[ge] = fcache;
+            }
+        }
+        let expert_wall = x0.elapsed().as_secs_f64() / w as f64;
+        report.wall.push(("expert".into(), expert_wall));
+
+        // ---- StageCombine: reverse AllToAll + reverse layout ----
+        let timing2 = self.run_alltoall(&mut flat)?;
+        report.comm.push(("alltoall_combine".into(), timing2.total));
+        // Every off-diagonal (src, dst) pair ships one [epr, cap, d]
+        // chunk per leg, padding included.
+        report.bytes_on_wire = 2 * w * w.saturating_sub(1) * epr * cap * d * 4;
+        // The equal-chunk exchange is never chunked: one-chunk overlap
+        // model, whole round trip exposed on the critical path.
+        report.apply_overlap(&OverlapTiming {
+            dispatch: vec![timing.total],
+            compute: vec![expert_wall],
+            combine: vec![timing2.total],
+            critical_path: timing.total + expert_wall + timing2.total,
+        });
+
+        let r0 = Instant::now();
+        let mut outputs = Vec::with_capacity(w);
+        let mut expert_out: Vec<Vec<f32>> = Vec::new();
+        for (rank, plan) in plans.iter().enumerate() {
+            let buffer = LayoutBuffer {
+                data: Tensor::from_vec(std::mem::take(&mut flat[rank]), &[e * cap, d])?,
+                capacity: cap,
+                num_experts: e,
+            };
+            outputs.push(reverse_layout(&buffer, plan, self.opts.threads));
+            if collect_cache {
+                expert_out.push(buffer.data.into_vec());
+            }
+        }
+        report
+            .wall
+            .push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
+        Ok((outputs, expert_caches, expert_out, schedule))
+    }
+
+    /// Run one rank's per-expert FFN batches: `jobs` are disjoint
+    /// `(global expert, element offset, rows)` regions of `buf`. Runs
+    /// on the shared pool when the bank exposes concrete FFNs and
+    /// `opts.threads > 1`; serial otherwise. Outputs are bit-identical
+    /// either way — each batch is an independent pure function.
+    fn run_expert_jobs(
+        &self,
+        jobs: &[(usize, usize, usize)],
+        buf: &[f32],
+        want_cache: bool,
+    ) -> Result<Vec<(Tensor, Option<FfnCache>)>> {
+        let d = self.cfg.d_model;
+        if let Some(ffns) = self.experts.ffns() {
+            return Ok(threadpool::pooled(self.opts.threads, jobs.len(), |j| {
+                let (ge, off, n) = jobs[j];
+                let rows = Tensor::from_vec(buf[off..off + n * d].to_vec(), &[n, d])
+                    .expect("job region sized by kept counts");
+                if want_cache {
+                    let (out, cache) = ffns[ge].forward_cached(&rows);
+                    (out, Some(cache))
+                } else {
+                    (ffns[ge].forward(&rows), None)
+                }
+            }));
+        }
+        // Opaque executors (e.g. artifact-backed): serial trait-object path.
+        let mut out = Vec::with_capacity(jobs.len());
+        for &(ge, off, n) in jobs {
+            let rows = Tensor::from_vec(buf[off..off + n * d].to_vec(), &[n, d])?;
+            out.push(self.experts.run_serial(ge, &rows, want_cache)?);
+        }
+        Ok(out)
+    }
+
+    fn run_alltoall(&self, flat: &mut [Vec<f32>]) -> Result<CommTiming> {
+        match self.opts.comm_impl {
+            CommImpl::Flat => alltoall(self.net, flat),
+            CommImpl::Hierarchical => hierarchical_alltoall(self.net, flat),
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! The unified staged step pipeline (and its chunked-overlap timing
+//! model).
+//!
+//! HetuMoE's speedups come from treating the MoE step as *one* pipeline
+//! whose phases can each be specialized; this module is where that
+//! pipeline now lives, once, instead of being written out separately by
+//! the inference layer, the training layer and the serving engine:
+//!
+//! - [`StepExecutor`] — the staged execution of Algorithm 1
+//!   (`StageGate → StageLayout → StageDispatch → StageExpert →
+//!   StageCombine`), in a forward-only and a forward + cache flavor.
+//!   [`crate::moe::MoeLayer`] and [`crate::backprop::TrainMoeLayer`]
+//!   both consume it; the serving engine consumes the same stage
+//!   structure through the timing model.
+//! - [`overlap`] — micro-chunked comm/compute overlap: each ragged
+//!   exchange is split into chunks along the destination-rank axis so
+//!   dispatch-of-chunk-*i* overlaps expert-FFN-of-chunk-*i − 1* (and
+//!   symmetrically on combine and on the backward's transposed
+//!   exchanges). The sum-of-phases wall is replaced by a critical-path
+//!   model with a `comm_exposed` / `compute_exposed` breakdown and an
+//!   `overlap_efficiency` metric (surfaced through
+//!   [`crate::coordinator::metrics`]).
+//! - [`StagePlan`] — the per-step exchange decision: the flat-vs-hier
+//!   schedule (via the shared [`pick_schedule`] procedure, so training
+//!   and serving still agree) *and* the chunk count, chosen together
+//!   from the step's traffic matrix.
+//!
+//! Chunked and unchunked execution are bit-identical (same outputs,
+//! same gradients) — property-tested in `tests/overlap_equivalence.rs`;
+//! `benches/fig12_overlap.rs` measures exposed comm across chunk
+//! counts, batch sizes and schedules.
+
+pub mod executor;
+pub mod overlap;
+
+pub use executor::{ExpertBank, ForwardCache, StepExecutor, StepOutput};
+pub use overlap::{
+    chunk_ranges, pipe_critical_path, plan_overlap, ChunkChoice, OverlapTiming,
+};
+
+use crate::cluster::NetworkModel;
+use crate::comm::schedule::{pick_schedule, CommChoice, Schedule};
+
+/// One step's exchange plan: which AllToAll schedule runs and into how
+/// many destination-rank chunks each leg is split.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StagePlan {
+    pub schedule: Schedule,
+    pub n_chunks: usize,
+}
+
+impl StagePlan {
+    /// The chunk half of the per-step decision, for callers that
+    /// already hold the schedule (the executor picks it once via
+    /// [`pick_schedule`]; the serving engine gets it from the router's
+    /// identical decision): the chunk count minimizing the modeled
+    /// critical path under that schedule, from the step's traffic
+    /// matrix and compute profile. Returns the plan plus the winning
+    /// [`OverlapTiming`].
+    pub fn for_schedule(
+        net: &NetworkModel,
+        counts: &[Vec<usize>],
+        elem_bytes: usize,
+        schedule: Schedule,
+        chunks: ChunkChoice,
+        compute_per_rank: &[f64],
+    ) -> (StagePlan, OverlapTiming) {
+        let overlap =
+            plan_overlap(net, counts, elem_bytes, schedule, compute_per_rank, chunks);
+        (StagePlan { schedule, n_chunks: overlap.n_chunks() }, overlap)
+    }
+
+    /// The joint per-step decision in one call: flat-vs-hier via the
+    /// shared [`pick_schedule`] round-trip comparison (identical to the
+    /// serving router's — chunking preserves total traffic, so the
+    /// schedule ranking is decided on the unchunked round trip), then
+    /// [`Self::for_schedule`] for the chunk count.
+    pub fn pick(
+        net: &NetworkModel,
+        counts: &[Vec<usize>],
+        elem_bytes: usize,
+        choice: CommChoice,
+        chunks: ChunkChoice,
+        compute_per_rank: &[f64],
+    ) -> (StagePlan, OverlapTiming) {
+        let pick = pick_schedule(net, counts, elem_bytes, choice);
+        StagePlan::for_schedule(net, counts, elem_bytes, pick.schedule, chunks, compute_per_rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    #[test]
+    fn stage_plan_pick_is_consistent_with_its_parts() {
+        let mut cfg = ClusterConfig::commodity(2);
+        cfg.gpus_per_node = 2;
+        let net = NetworkModel::new(cfg);
+        let counts: Vec<Vec<usize>> =
+            (0..4).map(|s| (0..4).map(|d| 4 + s + d).collect()).collect();
+        let compute = vec![0.05f64; 4];
+        let (plan, overlap) = StagePlan::pick(
+            &net,
+            &counts,
+            64,
+            CommChoice::Auto,
+            ChunkChoice::Auto,
+            &compute,
+        );
+        // Same schedule as the bare shared decision.
+        let bare = pick_schedule(&net, &counts, 64, CommChoice::Auto);
+        assert_eq!(plan.schedule, bare.schedule);
+        assert_eq!(plan.n_chunks, overlap.n_chunks());
+        assert!(plan.n_chunks >= 1 && plan.n_chunks <= 4);
+        // Forced schedules pass through.
+        let (flat, _) = StagePlan::pick(
+            &net,
+            &counts,
+            64,
+            CommChoice::Flat,
+            ChunkChoice::Fixed(2),
+            &compute,
+        );
+        assert_eq!(flat.schedule, Schedule::Flat);
+        assert_eq!(flat.n_chunks, 2);
+    }
+}

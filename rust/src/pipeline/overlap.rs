@@ -1,0 +1,447 @@
+//! Micro-chunked comm/compute overlap: the critical-path timing model.
+//!
+//! The ragged exchanges are split into `n` chunks along the
+//! **destination-rank axis**: chunk `c` carries every row whose
+//! destination rank falls in a contiguous group of ranks. Because the
+//! receive layout is expert-major per destination rank, a destination
+//! group's expert batches are complete as soon as *its* chunk lands —
+//! so expert FFNs of chunk `c − 1` can run while chunk `c` is still on
+//! the wire, and symmetrically each group's combine leg can return
+//! while later groups are still computing (the MegaScale-MoE-style
+//! overlap on top of an X-MoE-style padding-free substrate).
+//!
+//! The model treats the network as one serialized resource (it executes
+//! `dispatch[0..n]` then `combine[0..n]` in order) and the expert
+//! compute as another (chunks compute back-to-back):
+//!
+//! - dispatch chunk `c` starts when the network is free;
+//! - compute chunk `c` starts when its dispatch landed **and** the
+//!   previous compute chunk finished;
+//! - combine chunk `c` starts when its compute finished **and** the
+//!   network is free.
+//!
+//! With `n = 1` the critical path reduces exactly to
+//! `dispatch + compute + combine` — the old sum-of-phases wall — and
+//! for any `n` it is bounded by that sum (overlap can only hide time),
+//! while the per-chunk comm times sum to *at least* the unchunked time
+//! (splitting a collective loses cross-rank pipelining inside the
+//! collective — chunking is only a win when compute hides the loss).
+//! [`plan_overlap`] evaluates candidate chunk counts against the step's
+//! own traffic matrix and compute profile and keeps the best.
+
+use crate::cluster::NetworkModel;
+use crate::comm::alltoall::alltoallv_timing;
+use crate::comm::hierarchical::hierarchical_alltoallv_timing;
+use crate::comm::schedule::{transpose_counts, Schedule};
+use crate::error::Result;
+use std::ops::Range;
+
+/// How many chunks the ragged exchanges are split into.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkChoice {
+    /// Evaluate candidate counts on the step's traffic matrix and
+    /// compute profile; keep the one minimizing the modeled critical
+    /// path (never worse than unchunked — `1` is always a candidate).
+    Auto,
+    /// Force a chunk count (clamped to `[1, world]`).
+    Fixed(usize),
+}
+
+impl ChunkChoice {
+    pub fn parse(s: &str) -> Result<ChunkChoice> {
+        let t = s.to_lowercase();
+        if t == "auto" {
+            return Ok(ChunkChoice::Auto);
+        }
+        match t.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(ChunkChoice::Fixed(n)),
+            _ => Err(crate::config_err!(
+                "chunk choice expects 'auto' or a positive integer, got '{s}'"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ChunkChoice::Auto => "auto".into(),
+            ChunkChoice::Fixed(n) => n.to_string(),
+        }
+    }
+}
+
+/// Contiguous destination-rank groups for `n` chunks over `w` ranks
+/// (the effective chunk count is `out.len() ≤ n`).
+pub fn chunk_ranges(w: usize, n: usize) -> Vec<Range<usize>> {
+    let n = n.clamp(1, w.max(1));
+    let per = w.div_ceil(n);
+    let mut out = Vec::new();
+    let mut lo = 0usize;
+    while lo < w {
+        let hi = (lo + per).min(w);
+        out.push(lo..hi);
+        lo = hi;
+    }
+    out
+}
+
+fn leg_time(
+    net: &NetworkModel,
+    counts: &[Vec<usize>],
+    elem_bytes: usize,
+    schedule: Schedule,
+) -> f64 {
+    match schedule {
+        Schedule::Flat => alltoallv_timing(net, counts, elem_bytes).total,
+        Schedule::Hierarchical => {
+            hierarchical_alltoallv_timing(net, counts, elem_bytes).total
+        }
+    }
+}
+
+/// Per-chunk timings of both exchange legs. Dispatch chunk `c` carries
+/// the columns (destination ranks) of `counts` inside `ranges[c]`; its
+/// combine leg is the transpose — those ranks' rows on the way back.
+pub fn chunk_comm_times(
+    net: &NetworkModel,
+    counts: &[Vec<usize>],
+    elem_bytes: usize,
+    schedule: Schedule,
+    ranges: &[Range<usize>],
+) -> (Vec<f64>, Vec<f64>) {
+    let mut dispatch = Vec::with_capacity(ranges.len());
+    let mut combine = Vec::with_capacity(ranges.len());
+    for range in ranges {
+        let masked: Vec<Vec<usize>> = counts
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .map(|(dst, &c)| if range.contains(&dst) { c } else { 0 })
+                    .collect()
+            })
+            .collect();
+        dispatch.push(leg_time(net, &masked, elem_bytes, schedule));
+        combine.push(leg_time(net, &transpose_counts(&masked), elem_bytes, schedule));
+    }
+    (dispatch, combine)
+}
+
+/// Critical path of the chunked `dispatch → expert → combine` region
+/// (see module docs for the resource model).
+pub fn pipe_critical_path(dispatch: &[f64], compute: &[f64], combine: &[f64]) -> f64 {
+    let n = dispatch.len();
+    debug_assert!(compute.len() == n && combine.len() == n);
+    let mut net_free = 0.0f64;
+    let mut d_done = Vec::with_capacity(n);
+    for &d in dispatch {
+        net_free += d;
+        d_done.push(net_free);
+    }
+    let mut e_prev = 0.0f64;
+    let mut e_done = Vec::with_capacity(n);
+    for (c, &e) in compute.iter().enumerate() {
+        let start = if d_done[c] > e_prev { d_done[c] } else { e_prev };
+        e_prev = start + e;
+        e_done.push(e_prev);
+    }
+    for (c, &cb) in combine.iter().enumerate() {
+        if e_done[c] > net_free {
+            net_free = e_done[c];
+        }
+        net_free += cb;
+    }
+    net_free
+}
+
+/// One modeled execution of the overlapped region: per-chunk leg times,
+/// per-chunk expert compute, and the resulting critical path.
+#[derive(Clone, Debug, Default)]
+pub struct OverlapTiming {
+    pub dispatch: Vec<f64>,
+    pub compute: Vec<f64>,
+    pub combine: Vec<f64>,
+    /// Modeled wall of the whole `dispatch → expert → combine` region.
+    pub critical_path: f64,
+}
+
+impl OverlapTiming {
+    pub fn n_chunks(&self) -> usize {
+        self.dispatch.len()
+    }
+
+    pub fn dispatch_total(&self) -> f64 {
+        self.dispatch.iter().sum()
+    }
+
+    pub fn combine_total(&self) -> f64 {
+        self.combine.iter().sum()
+    }
+
+    pub fn comm_total(&self) -> f64 {
+        self.dispatch_total() + self.combine_total()
+    }
+
+    pub fn compute_total(&self) -> f64 {
+        self.compute.iter().sum()
+    }
+
+    /// Exchange time left on the critical path (not hidden under
+    /// expert compute). With one chunk nothing overlaps, so this is
+    /// *exactly* the whole exchange.
+    pub fn comm_exposed(&self) -> f64 {
+        if self.n_chunks() <= 1 {
+            return self.comm_total();
+        }
+        (self.critical_path - self.compute_total()).max(0.0)
+    }
+
+    /// Expert compute left on the critical path (not hidden under the
+    /// exchanges).
+    pub fn compute_exposed(&self) -> f64 {
+        if self.n_chunks() <= 1 {
+            return self.compute_total();
+        }
+        (self.critical_path - self.comm_total()).max(0.0)
+    }
+
+    /// Exchange time hidden under expert compute: the serial
+    /// sum-of-phases of the region minus its critical path (exactly 0
+    /// with one chunk — nothing overlaps).
+    pub fn comm_hidden(&self) -> f64 {
+        if self.n_chunks() <= 1 {
+            return 0.0;
+        }
+        (self.comm_total() + self.compute_total() - self.critical_path).max(0.0)
+    }
+
+    /// Fraction of the exchange time hidden under expert compute.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let total = self.comm_total();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.comm_hidden() / total
+        }
+    }
+}
+
+/// Build the overlap model for one exchange round and pick the chunk
+/// count per `choice`.
+///
+/// `compute_per_rank[r]` is the expert-compute wall attributed to
+/// destination rank `r` *in the report's per-rank-mean convention* (the
+/// values sum to the step's `expert` wall phase); a chunk's compute is
+/// the sum over its ranks, so totals are conserved for every chunk
+/// count and `n = 1` reproduces the unchunked phases exactly.
+pub fn plan_overlap(
+    net: &NetworkModel,
+    counts: &[Vec<usize>],
+    elem_bytes: usize,
+    schedule: Schedule,
+    compute_per_rank: &[f64],
+    choice: ChunkChoice,
+) -> OverlapTiming {
+    let w = counts.len();
+    debug_assert_eq!(compute_per_rank.len(), w);
+    let build = |n: usize| -> OverlapTiming {
+        let ranges = chunk_ranges(w, n);
+        let (dispatch, combine) =
+            chunk_comm_times(net, counts, elem_bytes, schedule, &ranges);
+        let compute: Vec<f64> = ranges
+            .iter()
+            .map(|r| compute_per_rank[r.start..r.end].iter().sum::<f64>())
+            .collect();
+        let critical_path = pipe_critical_path(&dispatch, &compute, &combine);
+        OverlapTiming { dispatch, compute, combine, critical_path }
+    };
+    match choice {
+        ChunkChoice::Fixed(n) => build(n),
+        ChunkChoice::Auto => {
+            // Candidates: powers of two up to the world size, plus the
+            // world size itself (one destination rank per chunk).
+            let mut best = build(1);
+            let mut n = 2usize;
+            while n <= w {
+                let cand = build(n);
+                if cand.critical_path < best.critical_path {
+                    best = cand;
+                }
+                n *= 2;
+            }
+            if w > 1 && !w.is_power_of_two() {
+                let cand = build(w);
+                if cand.critical_path < best.critical_path {
+                    best = cand;
+                }
+            }
+            best
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn net(nodes: usize, gpus: usize) -> NetworkModel {
+        let mut cfg = ClusterConfig::commodity(nodes);
+        cfg.gpus_per_node = gpus;
+        NetworkModel::new(cfg)
+    }
+
+    fn skewed_counts(w: usize) -> Vec<Vec<usize>> {
+        (0..w).map(|s| (0..w).map(|d| 8 + 3 * s + d).collect()).collect()
+    }
+
+    #[test]
+    fn chunk_ranges_tile_the_world() {
+        for w in 1..9usize {
+            for n in 1..10usize {
+                let ranges = chunk_ranges(w, n);
+                assert!(ranges.len() <= n.min(w).max(1));
+                assert_eq!(ranges[0].start, 0);
+                assert_eq!(ranges.last().unwrap().end, w);
+                for pair in ranges.windows(2) {
+                    assert_eq!(pair[0].end, pair[1].start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_chunk_matches_unchunked_legs() {
+        let m = net(2, 2);
+        let counts = skewed_counts(4);
+        for schedule in [Schedule::Flat, Schedule::Hierarchical] {
+            let ranges = chunk_ranges(4, 1);
+            let (d, c) = chunk_comm_times(&m, &counts, 8, schedule, &ranges);
+            assert_eq!(d.len(), 1);
+            assert!((d[0] - leg_time(&m, &counts, 8, schedule)).abs() < 1e-15);
+            let t = transpose_counts(&counts);
+            assert!((c[0] - leg_time(&m, &t, 8, schedule)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn chunked_comm_sums_at_least_unchunked() {
+        // Splitting a collective loses cross-rank pipelining inside the
+        // collective: per-chunk sums can only grow.
+        let m = net(2, 4);
+        let counts = skewed_counts(8);
+        for schedule in [Schedule::Flat, Schedule::Hierarchical] {
+            let full = leg_time(&m, &counts, 16, schedule);
+            for n in [2usize, 4, 8] {
+                let ranges = chunk_ranges(8, n);
+                let (d, _) = chunk_comm_times(&m, &counts, 16, schedule, &ranges);
+                let sum: f64 = d.iter().sum();
+                assert!(
+                    sum >= full - 1e-12,
+                    "{schedule:?} n={n}: chunk sum {sum} < unchunked {full}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipe_reduces_to_sum_of_phases_at_one_chunk() {
+        let p = pipe_critical_path(&[0.3], &[0.5], &[0.2]);
+        assert!((p - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pipe_never_exceeds_sum_and_never_undershoots_busy_resources() {
+        let d = [0.1, 0.2, 0.15, 0.05];
+        let e = [0.3, 0.1, 0.25, 0.2];
+        let c = [0.05, 0.1, 0.2, 0.1];
+        let p = pipe_critical_path(&d, &e, &c);
+        let sum: f64 =
+            d.iter().sum::<f64>() + e.iter().sum::<f64>() + c.iter().sum::<f64>();
+        let comm: f64 = d.iter().sum::<f64>() + c.iter().sum::<f64>();
+        let compute: f64 = e.iter().sum();
+        assert!(p <= sum + 1e-12);
+        assert!(p >= comm - 1e-12, "network busy time bounds the wall");
+        assert!(p >= compute - 1e-12, "compute busy time bounds the wall");
+    }
+
+    #[test]
+    fn compute_dominated_steps_hide_comm() {
+        // Expert compute far above comm: chunking must hide most of the
+        // exchange time and Auto must prefer a chunked plan.
+        let m = net(2, 2);
+        let counts = skewed_counts(4);
+        let compute = vec![0.25f64; 4]; // seconds per rank, >> comm
+        let unchunked = plan_overlap(
+            &m,
+            &counts,
+            256,
+            Schedule::Flat,
+            &compute,
+            ChunkChoice::Fixed(1),
+        );
+        assert_eq!(unchunked.n_chunks(), 1);
+        assert_eq!(unchunked.comm_hidden(), 0.0);
+        assert!(
+            (unchunked.comm_exposed() - unchunked.comm_total()).abs() < 1e-12,
+            "one chunk exposes the whole exchange"
+        );
+        let auto =
+            plan_overlap(&m, &counts, 256, Schedule::Flat, &compute, ChunkChoice::Auto);
+        assert!(auto.n_chunks() > 1, "auto must chunk a compute-dominated step");
+        assert!(auto.comm_hidden() > 0.0);
+        assert!(auto.critical_path < unchunked.critical_path);
+        assert!(auto.comm_exposed() < unchunked.comm_exposed());
+        assert!(auto.overlap_efficiency() > 0.0 && auto.overlap_efficiency() <= 1.0);
+    }
+
+    #[test]
+    fn auto_never_models_worse_than_unchunked() {
+        let m = net(2, 4);
+        let counts = skewed_counts(8);
+        for compute_scale in [0.0f64, 1e-7, 1e-3] {
+            let compute = vec![compute_scale; 8];
+            for schedule in [Schedule::Flat, Schedule::Hierarchical] {
+                let one = plan_overlap(
+                    &m,
+                    &counts,
+                    64,
+                    schedule,
+                    &compute,
+                    ChunkChoice::Fixed(1),
+                );
+                let auto =
+                    plan_overlap(&m, &counts, 64, schedule, &compute, ChunkChoice::Auto);
+                assert!(auto.critical_path <= one.critical_path + 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_is_clamped_and_totals_conserved() {
+        let m = net(1, 3);
+        let counts = skewed_counts(3);
+        let compute = vec![0.01f64, 0.02, 0.03];
+        let o = plan_overlap(
+            &m,
+            &counts,
+            32,
+            Schedule::Flat,
+            &compute,
+            ChunkChoice::Fixed(99),
+        );
+        assert_eq!(o.n_chunks(), 3, "fixed counts clamp to the world size");
+        assert!((o.compute_total() - 0.06).abs() < 1e-12, "compute is conserved");
+    }
+
+    #[test]
+    fn chunk_choice_parsing() {
+        assert_eq!(ChunkChoice::parse("auto").unwrap(), ChunkChoice::Auto);
+        assert_eq!(ChunkChoice::parse("AUTO").unwrap(), ChunkChoice::Auto);
+        assert_eq!(ChunkChoice::parse("4").unwrap(), ChunkChoice::Fixed(4));
+        assert!(ChunkChoice::parse("0").is_err());
+        assert!(ChunkChoice::parse("-2").is_err());
+        assert!(ChunkChoice::parse("lots").is_err());
+        assert_eq!(ChunkChoice::Auto.name(), "auto");
+        assert_eq!(ChunkChoice::Fixed(2).name(), "2");
+    }
+}

@@ -14,7 +14,9 @@
 use crate::cluster::GpuModel;
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
-use crate::moe::StepReport;
+use crate::comm::schedule::Schedule;
+use crate::moe::{CommImpl, StepReport};
+use crate::pipeline::{ChunkChoice, StagePlan};
 use crate::serve::router::{CommChoice, PlacementRouter, RouteDecision};
 use crate::serve::scheduler::{ContinuousBatcher, SchedulerConfig};
 use crate::serve::slo::{SloReport, SloTracker};
@@ -30,6 +32,9 @@ pub struct ServeConfig {
     pub gpu: GpuModel,
     pub process: ArrivalProcess,
     pub comm: CommChoice,
+    /// Exchange chunking for comm/compute overlap (`Auto` = picked per
+    /// batch from its traffic matrix, like the training pipeline).
+    pub chunks: ChunkChoice,
     /// Per-request latency SLO, seconds.
     pub slo: f64,
     /// Simulated seconds of offered traffic.
@@ -60,6 +65,7 @@ impl ServeConfig {
             gpu: GpuModel::titan_rtx(),
             process: ArrivalProcess::Poisson { rate: 2000.0 },
             comm: CommChoice::Auto,
+            chunks: ChunkChoice::Auto,
             slo: 0.05,
             duration: 2.0,
             min_tokens: 8,
@@ -91,6 +97,10 @@ fn max_tokens_under_budgets(cfg: &ServeConfig, router: &PlacementRouter) -> usiz
 }
 
 /// Uniform-routing service estimate behind [`ServeEngine::service_estimate`].
+/// Charges the same chunked critical path real iterations are charged
+/// (the full [`StagePlan`] decision on the uniform traffic matrix), so
+/// the admission budget reaches the throughput the overlap actually
+/// buys instead of sizing against the pre-overlap sum of phases.
 fn service_estimate_for(cfg: &ServeConfig, router: &PlacementRouter, tokens: usize) -> f64 {
     let w = cfg.cluster.world();
     let k = router.gate.k();
@@ -98,18 +108,18 @@ fn service_estimate_for(cfg: &ServeConfig, router: &PlacementRouter, tokens: usi
     let kept_per_pair = (per * k).div_ceil(w);
     let counts = vec![vec![kept_per_pair; w]; w];
     let row_bytes = cfg.moe.d_model * 4;
-    let flat = crate::comm::alltoall::alltoallv_timing(&router.net, &counts, row_bytes).total;
-    let hier =
-        crate::comm::hierarchical::hierarchical_alltoallv_timing(&router.net, &counts, row_bytes)
-            .total;
-    let comm = match cfg.comm {
-        CommChoice::Flat => flat,
-        CommChoice::Hierarchical => hier,
-        CommChoice::Auto => flat.min(hier),
-    };
     let (gate, layout, expert, reverse) = phase_times_for(cfg, k, per, per * k);
-    // Uniform traffic is transpose-symmetric, so both legs cost `comm`.
-    gate + layout + expert + reverse + 2.0 * comm
+    // Uniform routing: compute splits evenly across destination ranks.
+    let compute_per_rank = vec![expert / w as f64; w];
+    let (_, overlap) = StagePlan::pick(
+        &router.net,
+        &counts,
+        row_bytes,
+        cfg.comm,
+        cfg.chunks,
+        &compute_per_rank,
+    );
+    gate + layout + overlap.critical_path + reverse
 }
 
 /// Roofline times of the per-rank compute phases — `(gate, layout,
@@ -200,19 +210,49 @@ impl ServeEngine {
     /// Simulated service time + phase report for a routed batch. The
     /// expert phase is charged on the *straggler* rank (most received
     /// rows), so routing skew lengthens service like it would on real
-    /// hardware.
+    /// hardware. Service time is the **pipeline's critical path**:
+    /// the exchange legs are chunked along the destination-rank axis
+    /// (same [`crate::pipeline::StagePlan`] decision as the training
+    /// pipeline, same traffic matrix) so dispatch-of-chunk-*i* hides under
+    /// expert-FFN-of-chunk-*i − 1*; with one chunk this reduces exactly
+    /// to the old sum of phases.
     fn step_time(&self, decision: &RouteDecision, batch_tokens: usize) -> (f64, StepReport) {
         let w = self.cfg.cluster.world();
         let per = batch_tokens.div_ceil(w);
         let (gate, layout, expert, reverse) =
             self.phase_times(per, decision.max_rank_rows());
-        let total = gate
-            + layout
-            + decision.dispatch_time
-            + expert
-            + decision.combine_time
-            + reverse;
-        let report = StepReport {
+        // The straggler-charged expert time, distributed across
+        // destination ranks in proportion to the rows each actually
+        // received — a hot expert's rank concentrates compute in its
+        // chunk and delays that chunk's combine leg, exactly the skew
+        // the straggler model exists to capture (totals sum back to
+        // `expert`; uniform fallback when the batch kept nothing). The
+        // flat-vs-hier half of the StagePlan decision already happened
+        // in the router (same shared `pick_schedule`, same counts), so
+        // only the chunk half runs here.
+        let rows_per_rank: Vec<f64> = (0..w)
+            .map(|dst| (0..w).map(|src| decision.counts[src][dst]).sum::<usize>() as f64)
+            .collect();
+        let total_rows: f64 = rows_per_rank.iter().sum();
+        let compute_per_rank: Vec<f64> = if total_rows > 0.0 {
+            rows_per_rank.iter().map(|&r| expert * r / total_rows).collect()
+        } else {
+            vec![expert / w as f64; w]
+        };
+        let schedule = match decision.comm {
+            CommImpl::Flat => Schedule::Flat,
+            CommImpl::Hierarchical => Schedule::Hierarchical,
+        };
+        let (stage_plan, overlap) = StagePlan::for_schedule(
+            &self.router.net,
+            &decision.counts,
+            self.cfg.moe.d_model * 4,
+            schedule,
+            self.cfg.chunks,
+            &compute_per_rank,
+        );
+        let total = gate + layout + overlap.critical_path + reverse;
+        let mut report = StepReport {
             wall: vec![
                 ("gate".into(), gate),
                 ("layout".into(), layout),
@@ -220,8 +260,8 @@ impl ServeEngine {
                 ("reverse_layout".into(), reverse),
             ],
             comm: vec![
-                ("alltoall_dispatch".into(), decision.dispatch_time),
-                ("alltoall_combine".into(), decision.combine_time),
+                ("alltoall_dispatch".into(), overlap.dispatch_total()),
+                ("alltoall_combine".into(), overlap.combine_total()),
             ],
             drop_rate: decision.drop_rate,
             padding_waste: decision.padding_waste,
@@ -236,10 +276,11 @@ impl ServeEngine {
             expert_flops: 4.0
                 * decision.expert_counts.iter().sum::<usize>() as f64
                 * (self.cfg.moe.d_model * self.cfg.moe.ffn_hidden) as f64,
-            comm_schedule: decision.comm.name().into(),
+            comm_schedule: stage_plan.schedule.name().into(),
             // Serving is forward-only: no backward legs.
             ..Default::default()
         };
+        report.apply_overlap(&overlap);
         (total, report)
     }
 

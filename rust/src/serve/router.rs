@@ -41,11 +41,14 @@ pub struct RouteDecision {
     pub expert_counts: Vec<usize>,
     /// Chosen schedule.
     pub comm: CommImpl,
-    /// Predicted dispatch-leg time of the chosen schedule.
+    /// Predicted *unchunked* dispatch-leg time of the chosen schedule
+    /// (diagnostic: the engine charges service time through the chunked
+    /// overlap model in `pipeline/`, not from this field).
     pub dispatch_time: f64,
-    /// Predicted combine-leg time of the chosen schedule — charged on
-    /// the **transposed** traffic matrix, since the return exchange
-    /// reverses every flow (a hot expert's rank serializes the sends).
+    /// Predicted *unchunked* combine-leg time of the chosen schedule —
+    /// charged on the **transposed** traffic matrix, since the return
+    /// exchange reverses every flow (a hot expert's rank serializes the
+    /// sends). Diagnostic, like `dispatch_time`.
     pub combine_time: f64,
     /// Round-trip (dispatch + combine) predicted times per schedule.
     pub flat_time: f64,

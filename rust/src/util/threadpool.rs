@@ -1,24 +1,26 @@
 //! A small scoped thread pool.
 //!
-//! `rayon`/`tokio` are not vendored in this environment, so the coordinator
-//! and the optimized layout-transform kernels use this pool: fixed worker
-//! threads, a shared injector queue, and a scoped `parallel_for` that
-//! borrows from the caller's stack (via `std::thread::scope` semantics
-//! implemented with raw scope-bound closures and a completion latch).
+//! `rayon`/`tokio` are not vendored in this environment, so the coordinator,
+//! the optimized layout-transform kernels and the pipeline's per-expert FFN
+//! stage use this pool: fixed worker threads, a shared FIFO injector queue,
+//! and a scoped [`ThreadPool::parallel_for`] that borrows from the caller's
+//! stack (the call blocks on a completion latch, so the borrow outlives
+//! every job).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Shared {
-    queue: Mutex<Vec<Job>>,
+    queue: Mutex<VecDeque<Job>>,
     cv: Condvar,
     shutdown: Mutex<bool>,
 }
 
-/// Fixed-size thread pool with FIFO-ish job execution.
+/// Fixed-size thread pool with FIFO job execution (submission order).
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<thread::JoinHandle<()>>,
@@ -30,7 +32,7 @@ impl ThreadPool {
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(Vec::new()),
+            queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: Mutex::new(false),
         });
@@ -57,12 +59,122 @@ impl ThreadPool {
         self.size
     }
 
-    /// Submit a job (fire and forget).
+    /// Submit a job (fire and forget). Jobs run in submission order
+    /// (FIFO) — chunked pipeline stages rely on early-submitted chunk
+    /// jobs not being starved by later ones.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         let mut q = self.shared.queue.lock().unwrap();
-        q.push(Box::new(f));
+        q.push_back(Box::new(f));
         drop(q);
         self.shared.cv.notify_one();
+    }
+
+    /// Scoped data-parallel for: runs `f(i)` for every `i in 0..n` on
+    /// the pool's workers and returns once all indices completed. `f`
+    /// may borrow from the caller's stack — the call blocks on a
+    /// completion latch, so the borrow outlives every job. Indices are
+    /// claimed atomically, so work stays balanced under uneven job
+    /// sizes. Must not be called from inside a pool job (a waiting
+    /// inner call could deadlock a fully busy pool).
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.parallel_for_capped(self.size, n, f)
+    }
+
+    /// [`Self::parallel_for`] with at most `cap` jobs in flight, so a
+    /// caller-facing thread budget (e.g. `MoeLayerOptions::threads`)
+    /// bounds concurrency even on the shared all-cores pool.
+    pub fn parallel_for_capped<F>(&self, cap: usize, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let workers = cap.min(self.size).min(n);
+        if workers <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        struct Latch {
+            done: Mutex<usize>,
+            cv: Condvar,
+        }
+        let latch = Arc::new(Latch { done: Mutex::new(0), cv: Condvar::new() });
+        let next = Arc::new(AtomicUsize::new(0));
+        let poisoned = Arc::new(AtomicBool::new(false));
+        // SAFETY: the lifetime-erased reference lets the 'static job
+        // closures reach the stack-borrowed `f`; `parallel_for` blocks
+        // until every job has signalled the latch, so `f` outlives every
+        // call through it. (`&dyn` rather than `*const F` so the job
+        // closure's type does not mention `F` and `f` needn't be
+        // 'static itself.)
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        for _ in 0..workers {
+            let latch = Arc::clone(&latch);
+            let next = Arc::clone(&next);
+            let poisoned = Arc::clone(&poisoned);
+            self.execute(move || {
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || f_static(i),
+                    ))
+                    .is_ok();
+                    if !ok {
+                        poisoned.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+                let mut done = latch.done.lock().unwrap();
+                *done += 1;
+                latch.cv.notify_all();
+            });
+        }
+        let mut done = latch.done.lock().unwrap();
+        while *done < workers {
+            done = latch.cv.wait(done).unwrap();
+        }
+        drop(done);
+        if poisoned.load(Ordering::SeqCst) {
+            panic!("ThreadPool::parallel_for: a job panicked");
+        }
+    }
+
+    /// Ordered parallel map on the pool: `out[i] = f(i)` for `i in
+    /// 0..n`, with the same scoped-borrow contract as
+    /// [`Self::parallel_for`].
+    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.parallel_map_capped(self.size, n, f)
+    }
+
+    /// [`Self::parallel_map`] with at most `cap` jobs in flight.
+    pub fn parallel_map_capped<T, F>(&self, cap: usize, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.parallel_for_capped(cap, n, |i| {
+            *slots[i].lock().unwrap() = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("slot filled"))
+            .collect()
     }
 }
 
@@ -81,7 +193,7 @@ fn worker_loop(shared: Arc<Shared>) {
         let job = {
             let mut q = shared.queue.lock().unwrap();
             loop {
-                if let Some(j) = q.pop() {
+                if let Some(j) = q.pop_front() {
                     break Some(j);
                 }
                 if *shared.shutdown.lock().unwrap() {
@@ -94,6 +206,33 @@ fn worker_loop(shared: Arc<Shared>) {
             Some(j) => j(),
             None => return,
         }
+    }
+}
+
+/// Process-wide shared pool (one worker per core), created on first
+/// use. The unified step pipeline runs its per-expert FFN batches here
+/// so chunked expert compute does not pay pool construction per step.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(ThreadPool::with_cores)
+}
+
+/// The pipeline's pool policy in one place (shared by the forward and
+/// backward expert stages): run `f(i)` for `i in 0..n` on the global
+/// pool when `threads > 1` and there is more than one job — capped at
+/// `threads` jobs in flight, so the caller's thread budget is honored
+/// even though the shared pool has one worker per core — inline
+/// otherwise. Results are ordered and identical either way — each job
+/// must be an independent pure function.
+pub fn pooled<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads > 1 && n > 1 {
+        global().parallel_map_capped(threads, n, f)
+    } else {
+        (0..n).map(f).collect()
     }
 }
 
@@ -196,10 +335,84 @@ mod tests {
     }
 
     #[test]
+    fn jobs_run_in_submission_order() {
+        // One worker: execution order must equal submission order — the
+        // queue is FIFO, not a LIFO stack that starves early jobs.
+        let pool = ThreadPool::new(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let latch = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let n = 64usize;
+        for i in 0..n {
+            let order = Arc::clone(&order);
+            let latch = Arc::clone(&latch);
+            pool.execute(move || {
+                order.lock().unwrap().push(i);
+                let (m, cv) = &*latch;
+                *m.lock().unwrap() += 1;
+                cv.notify_all();
+            });
+        }
+        let (m, cv) = &*latch;
+        let mut done = m.lock().unwrap();
+        while *done < n {
+            done = cv.wait(done).unwrap();
+        }
+        drop(done);
+        let got = order.lock().unwrap().clone();
+        let expect: Vec<usize> = (0..n).collect();
+        assert_eq!(got, expect, "FIFO queue must preserve submission order");
+    }
+
+    #[test]
     fn drop_joins_cleanly() {
         let pool = ThreadPool::new(2);
         pool.execute(|| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn pool_parallel_for_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        let n = 257usize;
+        // Borrows from the caller's stack — the scoped contract.
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // Edge cases: empty and single-index runs execute inline.
+        pool.parallel_for(0, |_| unreachable!("no indices"));
+        let one = AtomicUsize::new(0);
+        pool.parallel_for(1, |_| {
+            one.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(one.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn capped_parallel_map_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        let out = pool.parallel_map_capped(2, 33, |i| i * 3);
+        let expect: Vec<usize> = (0..33).map(|i| i * 3).collect();
+        assert_eq!(out, expect);
+        // The pooled policy gives identical ordered results inline
+        // (threads = 1) and pooled (threads > 1).
+        let a = pooled(1, 17, |i| i + 1);
+        let b = pooled(3, 17, |i| i + 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_usable() {
+        let a = global() as *const ThreadPool;
+        let b = global() as *const ThreadPool;
+        assert_eq!(a, b);
+        let n = 32usize;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        global().parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
     #[test]
