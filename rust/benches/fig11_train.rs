@@ -7,8 +7,10 @@
 //! communication bill that the forward-only benches cannot see.
 //!
 //! Asserts the training invariants this PR rests on: the loss moves
-//! down, the backward legs move the same bytes as the forward legs
-//! (gradient rows retrace the token routes), and every step picks a
+//! down, the backward legs retrace the forward routes (identical
+//! intra-node bytes; NIC bytes identical on flat steps and never
+//! *larger* on hierarchical ones, where the backward return leg
+//! pre-sums per-token partial gradients), and every step picks a
 //! schedule for both directions.
 
 use hetumoe::backprop::{smoothed_losses, NativeTrainer, TrainRunConfig};
@@ -64,8 +66,8 @@ fn main() {
     let (ff, fh) = summary.fwd_schedules;
     let (bf, bh) = summary.bwd_schedules;
     println!(
-        "bytes_on_wire/step: fwd {:.0} | bwd {:.0} (backward pays the same wire bill)",
-        b.bytes_on_wire, b.bytes_on_wire_bwd
+        "bytes_on_wire/step (NIC): fwd {:.0} | bwd {:.0} | intra-node: fwd {:.0} | bwd {:.0}",
+        b.bytes_on_wire, b.bytes_on_wire_bwd, b.bytes_intra_node, b.bytes_intra_node_bwd
     );
     println!("schedule picks: fwd flat={ff} hier={fh} | bwd flat={bf} hier={bh}");
 
@@ -79,9 +81,19 @@ fn main() {
         smooth[39]
     );
     assert!(b.bytes_on_wire_bwd > 0.0, "backward must move bytes every step");
+    // Backward gradient rows retrace the forward routes: same traffic
+    // matrix, so same NIC bytes on flat steps — and on hierarchical
+    // steps the backward's pre-summed return leg can only shave bytes
+    // off the forward's full-rate combine, never add.
     assert!(
-        (b.bytes_on_wire_bwd - b.bytes_on_wire).abs() < 1e-6,
-        "backward gradient rows retrace the forward routes byte-for-byte"
+        b.bytes_on_wire_bwd <= b.bytes_on_wire + 1e-6,
+        "backward NIC bytes must never exceed the forward's: bwd {:.0} vs fwd {:.0}",
+        b.bytes_on_wire_bwd,
+        b.bytes_on_wire
+    );
+    assert!(
+        (b.bytes_intra_node_bwd - b.bytes_intra_node).abs() < 1e-6,
+        "backward intra-node traffic retraces the forward's byte-for-byte"
     );
     assert_eq!(ff + fh, 40, "every step picks a forward schedule");
     assert_eq!(bf + bh, 40, "every step picks a backward schedule");

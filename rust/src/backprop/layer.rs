@@ -26,8 +26,13 @@
 //! the (identical) traffic matrix and the measured backward walls.
 
 use crate::cluster::{ExpertPlacement, NetworkModel};
-use crate::comm::ragged::{offwire_bytes, ragged_combine, ragged_dispatch};
-use crate::comm::{alltoall, hierarchical_alltoall, CommTiming};
+use crate::comm::hier_ragged::{
+    dedup_traffic, hier_ragged_combine, hier_ragged_dispatch, row_meta, DedupMeta,
+    DedupTraffic, PresumMeta, RowMeta,
+};
+use crate::comm::ragged::{ragged_combine, ragged_dispatch, split_wire_bytes};
+use crate::comm::schedule::{transpose_counts, Schedule};
+use crate::comm::{alltoall, hierarchical_alltoall, CommTiming, WireBytes};
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
 use crate::gating::{make_gate, DispatchPlan, Gate};
@@ -220,7 +225,13 @@ impl TrainMoeLayer {
         };
         match self.opts.dispatch {
             DispatchMode::Ragged => {
-                self.backward_exchange_ragged(cache, &mut dbufs, &mut grads, &mut report)?;
+                self.backward_exchange_ragged(
+                    cache,
+                    dy_shards,
+                    &mut dbufs,
+                    &mut grads,
+                    &mut report,
+                )?;
             }
             DispatchMode::Padded => {
                 self.backward_exchange_padded(cache, &mut dbufs, &mut grads, &mut report)?;
@@ -259,12 +270,14 @@ impl TrainMoeLayer {
     fn backward_exchange_ragged(
         &self,
         cache: &TrainCache,
+        dy_shards: &[Tensor],
         dbufs: &mut [Vec<f32>],
         grads: &mut LayerGrads,
         report: &mut StepReport,
     ) -> Result<()> {
         let w = self.cluster.world();
         let d = self.cfg.d_model;
+        let g = self.cluster.gpus_per_node;
         let placement = self.placement();
         let counts = placement.traffic_matrix(&cache.kept);
 
@@ -273,11 +286,45 @@ impl TrainMoeLayer {
         // traffic matrix (and therefore the same `pick_schedule`
         // outcome) governs both directions.
         let schedule = cache.schedule;
+        let dedup: Option<DedupTraffic> = self
+            .opts
+            .dedup
+            .then(|| dedup_traffic(cache.plans.iter(), &placement, &self.cluster));
+        // Row metadata describes dedup groups and pre-sum runs; it is
+        // only consumed when both the hierarchical schedule runs and
+        // dedup is on.
+        let metas: Vec<RowMeta> = match schedule {
+            Schedule::Hierarchical if self.opts.dedup => {
+                cache.plans.iter().map(|p| row_meta(p, &placement, g)).collect()
+            }
+            _ => Vec::new(),
+        };
+        let mut rows_deduped = 0usize;
 
         // The combine-leg gradient travels the forward-dispatch routes
         // (data movement; timing is attributed per chunk below, so the
-        // chunked backward is bit-identical by construction).
-        ragged_dispatch(&self.net, dbufs, &cache.kept, d, schedule)?;
+        // chunked backward is bit-identical by construction). Under the
+        // hierarchical schedule this runs the real four-phase path;
+        // with dedup, a token routed k ≥ 2 times to one node ships its
+        // `dy` row once plus the slot weights, and the destination
+        // leader re-applies `w · dy` — bit-identical to the source-side
+        // multiply `scatter_grad` performed.
+        let dispatch_wire: WireBytes = match schedule {
+            Schedule::Flat => {
+                ragged_dispatch(&self.net, dbufs, &cache.kept, d, schedule)?;
+                split_wire_bytes(&counts, d * 4, g)
+            }
+            Schedule::Hierarchical => {
+                let dm = self
+                    .opts
+                    .dedup
+                    .then(|| DedupMeta { rows: &metas, payloads: dy_shards, scaled: true });
+                let leg =
+                    hier_ragged_dispatch(&self.net, dbufs, &cache.kept, d, dm.as_ref())?;
+                rows_deduped += leg.rows_saved;
+                leg.wire
+            }
+        };
 
         // Expert backward over each contiguous gradient batch; one
         // rank's batches run on the shared pool (disjoint outputs →
@@ -312,14 +359,35 @@ impl TrainMoeLayer {
             schedule,
             self.opts.chunks,
             &compute_per_rank,
+            dedup.as_ref(),
+            self.opts.dedup,
         );
         report.comm_schedule = stage_plan.schedule.name().into();
         report.comm.push(("alltoall_dispatch_bwd".into(), overlap.dispatch_total()));
 
         // The dispatch-leg gradient travels the forward-combine routes.
-        ragged_combine(&self.net, dbufs, &cache.kept, d, schedule)?;
+        // Under the hierarchical schedule with dedup, per-token partial
+        // input gradients of one slot-run are pre-summed at the expert
+        // node's leader before the return leg (the run total lands at
+        // the head row, members arrive zero — the downstream per-slot
+        // accumulation performs the flat path's exact addition order).
+        let combine_wire: WireBytes = match schedule {
+            Schedule::Flat => {
+                ragged_combine(&self.net, dbufs, &cache.kept, d, schedule)?;
+                split_wire_bytes(&transpose_counts(&counts), d * 4, g)
+            }
+            Schedule::Hierarchical => {
+                let pm = self.opts.dedup.then(|| PresumMeta { rows: &metas });
+                let leg =
+                    hier_ragged_combine(&self.net, dbufs, &cache.kept, d, pm.as_ref())?;
+                rows_deduped += leg.rows_saved;
+                leg.wire
+            }
+        };
         report.comm.push(("alltoall_combine_bwd".into(), overlap.combine_total()));
-        report.bytes_on_wire = 2 * offwire_bytes(&counts, d * 4);
+        report.bytes_on_wire = dispatch_wire.inter + combine_wire.inter;
+        report.bytes_intra_node = dispatch_wire.intra + combine_wire.intra;
+        report.rows_deduped = rows_deduped;
         report.apply_overlap(&overlap);
         Ok(())
     }
@@ -402,7 +470,11 @@ impl TrainMoeLayer {
 
         let timing2 = self.run_alltoall(dbufs)?;
         report.comm.push(("alltoall_combine_bwd".into(), timing2.total));
-        report.bytes_on_wire = 2 * w * w.saturating_sub(1) * epr * cap * d * 4;
+        // Placement-aware closed-form split, mirroring the forward's.
+        let (nodes, g) = (self.cluster.nodes, self.cluster.gpus_per_node);
+        let chunk_bytes = epr * cap * d * 4;
+        report.bytes_on_wire = 2 * (w * w - nodes * g * g) * chunk_bytes;
+        report.bytes_intra_node = 2 * nodes * g * g.saturating_sub(1) * chunk_bytes;
         // Equal-chunk exchanges are never chunked: one-chunk overlap
         // model, fully exposed.
         report.apply_overlap(&OverlapTiming {
@@ -694,15 +766,23 @@ mod tests {
         assert!(bwd.comm.iter().any(|(n, _)| n == "alltoall_dispatch_bwd"));
         assert!(bwd.comm.iter().any(|(n, _)| n == "alltoall_combine_bwd"));
         assert!(bwd.bytes_on_wire > 0);
-        // Backward moves the same gradient rows the forward moved tokens:
-        // identical traffic matrix, identical bytes.
-        assert_eq!(bwd.bytes_on_wire, report.bytes_on_wire);
+        // Backward moves the same gradient rows the forward moved
+        // tokens: identical traffic matrix. NIC bytes are equal on the
+        // flat schedule; under hierarchical + dedup the backward's
+        // pre-summed return leg can only *shave* bytes off the
+        // forward's full-rate combine.
+        assert!(bwd.bytes_on_wire <= report.bytes_on_wire);
+        assert_eq!(bwd.bytes_intra_node, report.bytes_intra_node);
+        if report.comm_schedule == "flat" {
+            assert_eq!(bwd.bytes_on_wire, report.bytes_on_wire);
+        }
         assert!(bwd.comm_schedule == "flat" || bwd.comm_schedule == "hier");
         // The backward region carries its own overlap accounting.
         assert!(bwd.n_chunks >= 1);
         assert!(bwd.critical_path > 0.0);
         report.absorb_backward(bwd);
-        assert_eq!(report.bytes_on_wire_bwd, report.bytes_on_wire);
+        assert!(report.bytes_on_wire_bwd <= report.bytes_on_wire);
+        assert!(report.bytes_on_wire_bwd > 0);
         assert!(!report.comm_schedule_bwd.is_empty());
         assert!(report.n_chunks_bwd >= 1);
         assert!(report.wall_phase("bwd_expert") >= 0.0);

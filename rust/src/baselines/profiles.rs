@@ -138,8 +138,10 @@ impl SystemProfile {
                 CommImpl::Hierarchical => CommChoice::Hierarchical,
             },
             // 2022-era systems ran their exchanges back-to-back with the
-            // expert compute; no overlap.
+            // expert compute; no overlap, and no top-k dedup on the
+            // hierarchical inter-node legs (HierMoE-era technique).
             chunks: ChunkChoice::Fixed(1),
+            dedup: false,
             threads,
         }
     }

@@ -37,6 +37,12 @@ pub fn hierarchical_alltoall(
             cfg.world()
         ));
     }
+    if len == 0 {
+        // Zero-count ranks are first-class: an empty exchange moves
+        // nothing, allocates nothing, and costs nothing (the ragged
+        // pipeline routinely produces empty (src, dst) payloads).
+        return Ok(CommTiming::default());
+    }
     if len % w != 0 {
         return Err(crate::comm_err!("buffer len {len} not divisible by world {w}"));
     }
@@ -151,6 +157,21 @@ pub fn hierarchical_alltoallv_timing(
     counts: &[Vec<usize>],
     elem_bytes: usize,
 ) -> CommTiming {
+    hierarchical_alltoallv_timing_with(net, counts, elem_bytes, None)
+}
+
+/// [`hierarchical_alltoallv_timing`] with an optional per-(node, node)
+/// override of the inter-leg message bytes — how the dedup-aware cost
+/// model charges the NIC for what a deduplicated leader block *actually*
+/// ships (payload rows + replication index) instead of every replica
+/// row. Gather/layout/scatter phases are unchanged: full rows always
+/// move inside the node.
+pub fn hierarchical_alltoallv_timing_with(
+    net: &NetworkModel,
+    counts: &[Vec<usize>],
+    elem_bytes: usize,
+    inter_bytes: Option<&[Vec<f64>]>,
+) -> CommTiming {
     let cfg = &net.cfg;
     let (n, g) = (cfg.nodes, cfg.gpus_per_node);
     let w = n * g;
@@ -199,15 +220,20 @@ pub fn hierarchical_alltoallv_timing(
             if dest_node == node {
                 continue;
             }
-            let mut msg = 0usize;
-            for local in 0..g {
-                let s = node * g + local;
-                for dest_local in 0..g {
-                    msg += counts[s][dest_node * g + dest_local];
+            let bytes = match inter_bytes {
+                Some(m) => m[node][dest_node],
+                None => {
+                    let mut msg = 0usize;
+                    for local in 0..g {
+                        let s = node * g + local;
+                        for dest_local in 0..g {
+                            msg += counts[s][dest_node * g + dest_local];
+                        }
+                    }
+                    msg as f64 * eb
                 }
-            }
-            if msg > 0 {
-                let bytes = msg as f64 * eb;
+            };
+            if bytes > 0.0 {
                 nic_time += cfg.inter_lat + bytes / net.eff_bw(cfg.inter_bw, bytes);
             }
         }
@@ -347,6 +373,45 @@ mod tests {
         let m = net(2, 2);
         let mut bad = vec![vec![0.0; 8]; 3];
         assert!(hierarchical_alltoall(&m, &mut bad).is_err());
+    }
+
+    #[test]
+    fn empty_exchange_is_first_class() {
+        // Zero-length buffers (the ragged path's empty steps) must be a
+        // no-op: no error, no allocation, zero cost.
+        let m = net(2, 2);
+        let mut bufs: Vec<Vec<f32>> = vec![Vec::new(); 4];
+        let t = hierarchical_alltoall(&m, &mut bufs).unwrap();
+        assert_eq!(t.total, 0.0);
+        assert!(bufs.iter().all(|b| b.is_empty()));
+        let mut bufs2: Vec<Vec<f32>> = vec![Vec::new(); 4];
+        let t2 = alltoall(&m, &mut bufs2).unwrap();
+        assert_eq!(t2.total, 0.0);
+        // Non-empty lengths that don't divide by the world still error.
+        let mut bad = vec![vec![0.0f32; 3]; 4];
+        assert!(hierarchical_alltoall(&m, &mut bad).is_err());
+    }
+
+    #[test]
+    fn inter_bytes_override_changes_only_the_inter_phase() {
+        let m = net(2, 2);
+        let counts = vec![vec![8usize; 4]; 4];
+        let base = hierarchical_alltoallv_timing(&m, &counts, 64);
+        // Halve the NIC bytes (what dedup does); every other phase must
+        // be untouched and the inter phase must strictly shrink.
+        let mut override_bytes = vec![vec![0.0f64; 2]; 2];
+        override_bytes[0][1] = 8.0 * 2.0 * 2.0 * 64.0 / 2.0;
+        override_bytes[1][0] = override_bytes[0][1];
+        let cut =
+            hierarchical_alltoallv_timing_with(&m, &counts, 64, Some(&override_bytes));
+        assert!(cut.phase("inter") < base.phase("inter"));
+        for phase in ["gather", "layout", "layout2", "scatter"] {
+            assert_eq!(cut.phase(phase), base.phase(phase), "{phase}");
+        }
+        // Zero override drops the inter phase entirely.
+        let zero = vec![vec![0.0f64; 2]; 2];
+        let none = hierarchical_alltoallv_timing_with(&m, &counts, 64, Some(&zero));
+        assert_eq!(none.phase("inter"), 0.0);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 pub mod allgather;
 pub mod allreduce;
 pub mod alltoall;
+pub mod hier_ragged;
 pub mod hierarchical;
 pub mod ragged;
 pub mod schedule;
@@ -22,9 +23,40 @@ pub mod schedule;
 pub use allgather::{allgather, reduce_scatter};
 pub use allreduce::allreduce;
 pub use alltoall::{alltoall, alltoallv};
+pub use hier_ragged::{
+    dedup_traffic, hier_ragged_combine, hier_ragged_dispatch, row_meta, DedupMeta,
+    DedupTraffic, HierLeg, PresumMeta, RowMeta,
+};
 pub use hierarchical::hierarchical_alltoall;
-pub use ragged::{ragged_combine, ragged_dispatch};
-pub use schedule::{pick_schedule, CommChoice, Schedule, SchedulePick};
+pub use ragged::{ragged_combine, ragged_dispatch, split_wire_bytes};
+pub use schedule::{
+    pick_schedule, pick_schedule_dedup, CommChoice, Schedule, SchedulePick,
+};
+
+/// Bytes one exchange leg moves, split by the link they actually cross:
+/// `inter` is NIC traffic between nodes (the paper's scarce resource),
+/// `intra` is node-fabric traffic between GPUs of one node (direct
+/// same-node rows under the flat schedule; leader gather + scatter
+/// relays under the hierarchical schedule). Self-traffic (a rank's rows
+/// to itself) crosses nothing and is counted in neither.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireBytes {
+    pub inter: usize,
+    pub intra: usize,
+}
+
+impl WireBytes {
+    pub fn total(&self) -> usize {
+        self.inter + self.intra
+    }
+}
+
+impl std::ops::Add for WireBytes {
+    type Output = WireBytes;
+    fn add(self, o: WireBytes) -> WireBytes {
+        WireBytes { inter: self.inter + o.inter, intra: self.intra + o.intra }
+    }
+}
 
 /// Simulated timing of one collective, with a per-phase breakdown.
 #[derive(Clone, Debug, Default)]

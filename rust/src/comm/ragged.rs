@@ -44,18 +44,33 @@ pub fn rank_counts(kept: &[Vec<usize>], experts_per_rank: usize) -> Vec<Vec<usiz
     placement.traffic_matrix(kept)
 }
 
-/// Bytes that actually cross a rank boundary for one exchange leg
-/// (self-traffic stays local and is excluded).
-pub fn offwire_bytes(counts: &[Vec<usize>], elem_bytes: usize) -> usize {
-    let mut total = 0usize;
+/// Placement-aware byte split of one **flat** exchange leg: a
+/// cross-rank row is NIC traffic only when source and destination GPUs
+/// sit on *different nodes*; same-node cross-rank rows ride the node
+/// fabric and land in `intra`. (The old `offwire_bytes` charged both as
+/// NIC traffic, which inflated `bytes_on_wire` by exactly the traffic
+/// the hierarchical schedule's aggregation is about.) Self-traffic is
+/// counted in neither.
+pub fn split_wire_bytes(
+    counts: &[Vec<usize>],
+    elem_bytes: usize,
+    gpus_per_node: usize,
+) -> crate::comm::WireBytes {
+    let g = gpus_per_node.max(1);
+    let mut wb = crate::comm::WireBytes::default();
     for (s, row) in counts.iter().enumerate() {
         for (d, &c) in row.iter().enumerate() {
-            if s != d {
-                total += c * elem_bytes;
+            if s == d {
+                continue;
+            }
+            if s / g == d / g {
+                wb.intra += c * elem_bytes;
+            } else {
+                wb.inter += c * elem_bytes;
             }
         }
     }
-    total
+    wb
 }
 
 fn validate(
@@ -334,13 +349,34 @@ mod tests {
     }
 
     #[test]
-    fn rank_counts_and_offwire_bytes() {
+    fn rank_counts_and_wire_byte_split() {
         // 4 experts on 2 ranks: experts 0,1 → rank 0; 2,3 → rank 1.
         let kept = vec![vec![1usize, 2, 3, 4], vec![5, 6, 7, 8]];
         let counts = rank_counts(&kept, 2);
         assert_eq!(counts, vec![vec![3, 7], vec![11, 15]]);
-        // Off-wire: 7 + 11 rows cross ranks.
-        assert_eq!(offwire_bytes(&counts, 4), (7 + 11) * 4);
+        // 7 + 11 rows cross ranks. With one node they are all node
+        // fabric; with one GPU per node they all cross the NIC.
+        let same_node = split_wire_bytes(&counts, 4, 2);
+        assert_eq!(same_node.intra, (7 + 11) * 4);
+        assert_eq!(same_node.inter, 0);
+        let cross_node = split_wire_bytes(&counts, 4, 1);
+        assert_eq!(cross_node.inter, (7 + 11) * 4);
+        assert_eq!(cross_node.intra, 0);
+        assert_eq!(same_node.total(), cross_node.total());
+    }
+
+    #[test]
+    fn wire_split_mixed_topology() {
+        // 2 nodes × 2 GPUs: (0→1) intra, (0→2), (0→3), (1→2)… inter.
+        let mut counts = vec![vec![0usize; 4]; 4];
+        counts[0][0] = 100; // self: counted nowhere
+        counts[0][1] = 3;
+        counts[0][2] = 5;
+        counts[3][2] = 7;
+        counts[3][0] = 2;
+        let wb = split_wire_bytes(&counts, 2, 2);
+        assert_eq!(wb.intra, (3 + 7) * 2);
+        assert_eq!(wb.inter, (5 + 2) * 2);
     }
 
     #[test]

@@ -13,7 +13,10 @@
 
 use crate::cluster::NetworkModel;
 use crate::comm::alltoall::alltoallv_timing;
-use crate::comm::hierarchical::hierarchical_alltoallv_timing;
+use crate::comm::hier_ragged::DedupTraffic;
+use crate::comm::hierarchical::{
+    hierarchical_alltoallv_timing, hierarchical_alltoallv_timing_with,
+};
 use crate::error::Result;
 
 /// One concrete AllToAll schedule (the thing actually executed).
@@ -89,22 +92,56 @@ pub fn transpose_counts(counts: &[Vec<usize>]) -> Vec<Vec<usize>> {
 /// Score `counts[src][dst]` rows of `elem_bytes` under both schedules
 /// and pick per `choice` (see module docs). This is the exact decision
 /// procedure of the serving router, shared with the training layer.
+///
+/// **Tie-break (normative):** the hierarchical schedule wins only on a
+/// *strictly* lower round-trip prediction; an exact cost tie picks
+/// `Flat`. The rule matters because training and serving evaluate this
+/// function independently on the same counts — with a deterministic
+/// tie-break the two picks can never disagree on a tied step (the
+/// single-node degenerate case, where both schedules reduce to the same
+/// intra-node exchange, ties on every step).
 pub fn pick_schedule(
     net: &NetworkModel,
     counts: &[Vec<usize>],
     elem_bytes: usize,
     choice: CommChoice,
 ) -> SchedulePick {
+    pick_schedule_dedup(net, counts, elem_bytes, choice, None)
+}
+
+/// [`pick_schedule`] with dedup-aware hierarchical costing: when the
+/// step's [`DedupTraffic`] is provided, the hierarchical dispatch leg is
+/// charged for what the deduplicated leader blocks actually push through
+/// the NIC (unique payload rows + replication index, adaptively per
+/// block) instead of every replica row. The combine leg stays full-rate
+/// — the forward return carries distinct per-slot expert outputs (see
+/// `comm::hier_ragged` module docs). Flat costing never changes: the
+/// flat schedule ships replicas point-to-point and has no aggregation
+/// point to dedup at. Same tie-break as [`pick_schedule`].
+pub fn pick_schedule_dedup(
+    net: &NetworkModel,
+    counts: &[Vec<usize>],
+    elem_bytes: usize,
+    choice: CommChoice,
+    dedup: Option<&DedupTraffic>,
+) -> SchedulePick {
     let counts_t = transpose_counts(counts);
     let flat_dispatch = alltoallv_timing(net, counts, elem_bytes).total;
     let flat_combine = alltoallv_timing(net, &counts_t, elem_bytes).total;
-    let hier_dispatch = hierarchical_alltoallv_timing(net, counts, elem_bytes).total;
+    let hier_dispatch = match dedup {
+        Some(t) => {
+            let inter = t.dispatch_inter_bytes(elem_bytes);
+            hierarchical_alltoallv_timing_with(net, counts, elem_bytes, Some(&inter)).total
+        }
+        None => hierarchical_alltoallv_timing(net, counts, elem_bytes).total,
+    };
     let hier_combine = hierarchical_alltoallv_timing(net, &counts_t, elem_bytes).total;
     let flat_time = flat_dispatch + flat_combine;
     let hier_time = hier_dispatch + hier_combine;
     let schedule = match choice {
         CommChoice::Flat => Schedule::Flat,
         CommChoice::Hierarchical => Schedule::Hierarchical,
+        // Strictly-less: ties resolve to Flat, deterministically.
         CommChoice::Auto => {
             if hier_time < flat_time {
                 Schedule::Hierarchical
@@ -174,6 +211,50 @@ mod tests {
         // Both report the same cross-schedule predictions.
         assert_eq!(f.flat_time, h.flat_time);
         assert_eq!(f.hier_time, h.hier_time);
+    }
+
+    #[test]
+    fn tie_breaks_to_flat_deterministically() {
+        // Single node: both schedules degenerate to the identical
+        // intra-node exchange — an exact cost tie on every step. The
+        // documented tie-break must pick Flat, always.
+        let m = net(1, 4);
+        let counts = vec![vec![16usize; 4]; 4];
+        let p = pick_schedule(&m, &counts, 256, CommChoice::Auto);
+        assert!(
+            (p.flat_time - p.hier_time).abs() < 1e-15,
+            "single node must tie: flat {} vs hier {}",
+            p.flat_time,
+            p.hier_time
+        );
+        assert_eq!(p.schedule, Schedule::Flat, "ties resolve to Flat");
+        // And the tie-break is stable across repeated evaluation (the
+        // training layer and the serving router call this separately).
+        for _ in 0..8 {
+            assert_eq!(
+                pick_schedule(&m, &counts, 256, CommChoice::Auto).schedule,
+                Schedule::Flat
+            );
+        }
+    }
+
+    #[test]
+    fn dedup_costing_lowers_only_the_hier_side() {
+        use crate::comm::hier_ragged::DedupTraffic;
+        let m = net(2, 2);
+        let counts = vec![vec![6usize; 4]; 4];
+        let base = pick_schedule(&m, &counts, 256, CommChoice::Auto);
+        // Node-level summary consistent with `counts` (24 rows per node
+        // pair) where half the replica rows dedup away.
+        let t = DedupTraffic {
+            gpus_per_node: 2,
+            rows: vec![vec![24, 24], vec![24, 24]],
+            payloads: vec![vec![12, 12], vec![12, 12]],
+            heads: vec![vec![24, 24], vec![24, 24]],
+        };
+        let deduped = pick_schedule_dedup(&m, &counts, 256, CommChoice::Auto, Some(&t));
+        assert_eq!(deduped.flat_time, base.flat_time, "flat never dedups");
+        assert!(deduped.hier_time < base.hier_time, "dedup must cut the hier cost");
     }
 
     #[test]

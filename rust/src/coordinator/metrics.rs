@@ -17,6 +17,9 @@ pub struct MetricsAgg {
     pub aux_loss: f64,
     bytes_on_wire: f64,
     bytes_on_wire_bwd: f64,
+    bytes_intra_node: f64,
+    bytes_intra_node_bwd: f64,
+    rows_deduped: f64,
     expert_flops: f64,
     critical_path: f64,
     comm_exposed: f64,
@@ -48,6 +51,9 @@ impl MetricsAgg {
         self.aux_loss += report.aux_loss;
         self.bytes_on_wire += report.bytes_on_wire as f64;
         self.bytes_on_wire_bwd += report.bytes_on_wire_bwd as f64;
+        self.bytes_intra_node += report.bytes_intra_node as f64;
+        self.bytes_intra_node_bwd += report.bytes_intra_node_bwd as f64;
+        self.rows_deduped += report.rows_deduped as f64;
         self.expert_flops += report.expert_flops;
         self.critical_path += report.critical_path;
         self.comm_exposed += report.comm_exposed;
@@ -80,6 +86,9 @@ impl MetricsAgg {
             aux_loss: self.aux_loss / n,
             bytes_on_wire: self.bytes_on_wire / n,
             bytes_on_wire_bwd: self.bytes_on_wire_bwd / n,
+            bytes_intra_node: self.bytes_intra_node / n,
+            bytes_intra_node_bwd: self.bytes_intra_node_bwd / n,
+            rows_deduped: self.rows_deduped / n,
             expert_flops: self.expert_flops / n,
             critical_path: self.critical_path / n,
             comm_exposed: self.comm_exposed / n,
@@ -102,11 +111,21 @@ pub struct Breakdown {
     pub drop_rate: f64,
     pub padding_waste: f64,
     pub aux_loss: f64,
-    /// Mean bytes crossing rank boundaries per step (both AllToAll legs).
+    /// Mean NIC (inter-node) bytes per step over both AllToAll legs —
+    /// placement-aware: same-node cross-rank rows are *not* counted
+    /// here (see `bytes_intra_node`); under hierarchical + dedup this
+    /// is the post-deduplication figure.
     pub bytes_on_wire: f64,
-    /// Mean bytes on the backward AllToAll legs per step (0 when the run
-    /// is forward-only).
+    /// Mean NIC bytes on the backward AllToAll legs per step (0 when
+    /// the run is forward-only).
     pub bytes_on_wire_bwd: f64,
+    /// Mean intra-node fabric bytes per step over both forward legs.
+    pub bytes_intra_node: f64,
+    /// Mean intra-node fabric bytes per step over both backward legs.
+    pub bytes_intra_node_bwd: f64,
+    /// Mean replica rows per step the hierarchical dedup/pre-summation
+    /// kept off the NIC (0 on flat schedules or with dedup off).
+    pub rows_deduped: f64,
     /// Mean expert-FFN FLOPs executed per step.
     pub expert_flops: f64,
     /// Mean modeled critical-path wall of the overlapped exchange/
@@ -156,6 +175,9 @@ impl Breakdown {
             ("aux_loss", Json::num(self.aux_loss)),
             ("bytes_on_wire", Json::num(self.bytes_on_wire)),
             ("bytes_on_wire_bwd", Json::num(self.bytes_on_wire_bwd)),
+            ("bytes_intra_node", Json::num(self.bytes_intra_node)),
+            ("bytes_intra_node_bwd", Json::num(self.bytes_intra_node_bwd)),
+            ("rows_deduped", Json::num(self.rows_deduped)),
             ("expert_flops", Json::num(self.expert_flops)),
             ("critical_path", Json::num(self.critical_path)),
             ("comm_exposed", Json::num(self.comm_exposed)),
@@ -179,6 +201,8 @@ mod tests {
             expert_counts: vec![],
             aux_loss: 1.0,
             bytes_on_wire: 1024,
+            bytes_intra_node: 512,
+            rows_deduped: 3,
             expert_flops: 2048.0,
             ..Default::default()
         }
@@ -196,6 +220,8 @@ mod tests {
         assert!((b.total - (0.3 + 1.0 + 0.5)).abs() < 1e-12);
         assert!((b.drop_rate - 0.1).abs() < 1e-12);
         assert!((b.bytes_on_wire - 1024.0).abs() < 1e-12);
+        assert!((b.bytes_intra_node - 512.0).abs() < 1e-12);
+        assert!((b.rows_deduped - 3.0).abs() < 1e-12);
         assert!((b.expert_flops - 2048.0).abs() < 1e-12);
     }
 
@@ -244,5 +270,9 @@ mod tests {
         assert!(j.get("comm_exposed").is_some());
         assert!(j.get("compute_exposed").is_some());
         assert!(j.get("overlap_efficiency").is_some());
+        // The honest traffic split rides along in every JSON export.
+        assert!(j.get("bytes_intra_node").is_some());
+        assert!(j.get("bytes_intra_node_bwd").is_some());
+        assert!(j.get("rows_deduped").is_some());
     }
 }

@@ -46,6 +46,7 @@ const COMMANDS: &[CommandSpec] = &[
             ("dispatch", "padded|ragged pipeline (default ragged)"),
             ("alltoall", "auto|flat|hier schedule selection (default auto)"),
             ("chunks", "auto|N exchange chunks for comm/compute overlap (default auto)"),
+            ("dedup", "on|off top-k token dedup on the hierarchical inter-node legs (default on)"),
             ("json", "emit the run summary as JSON (flag)"),
             ("config", "JSON config file (pjrt backend)"),
             ("model", "artifact variant (pjrt backend, default e2e)"),
@@ -65,6 +66,7 @@ const COMMANDS: &[CommandSpec] = &[
             ("dispatch", "padded|ragged pipeline (default: ragged for hetumoe, padded baselines)"),
             ("alltoall", "auto|flat|hier per-step AllToAll selection in ragged mode (default: auto for hetumoe, else the system's flavor)"),
             ("chunks", "auto|N exchange chunks for comm/compute overlap (default: auto for hetumoe, 1 for the 2022-era baselines)"),
+            ("dedup", "on|off top-k token dedup on the hierarchical inter-node legs (default on)"),
             ("seed", "model/data seed (default 0)"),
             ("json", "emit the aggregated StepReport breakdown as JSON (flag)"),
         ],
@@ -101,6 +103,7 @@ const COMMANDS: &[CommandSpec] = &[
             ("gate", "switch|gshard|topk|... (default switch)"),
             ("comm", "flat|hier|auto AllToAll selection (default auto)"),
             ("chunks", "auto|N exchange chunks for comm/compute overlap (default auto)"),
+            ("dedup", "on|off top-k token dedup on the hierarchical inter-node legs (default on)"),
             ("workload", "poisson|bursty arrivals (default poisson)"),
             ("nodes", "simulated nodes (default 2)"),
             ("gpus", "GPUs per node (default 8)"),
@@ -173,6 +176,9 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
     if let Some(v) = args.get("chunks") {
         cfg.opts.chunks = ChunkChoice::parse(v)?;
     }
+    if let Some(dedup) = parse_dedup(args)? {
+        cfg.opts.dedup = dedup;
+    }
     // The pipeline's per-expert FFN batches run on the shared pool.
     cfg.opts.threads = hetumoe::util::threadpool::available_parallelism().min(8);
     let json = args.has_flag("json");
@@ -239,8 +245,14 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
     );
     let b = &summary.breakdown;
     println!(
-        "bytes_on_wire/step: fwd {:.0} bwd {:.0} | expert_flops/step {:.3e}",
-        b.bytes_on_wire, b.bytes_on_wire_bwd, b.expert_flops
+        "bytes_on_wire/step (NIC): fwd {:.0} bwd {:.0} | intra-node: fwd {:.0} bwd {:.0} | \
+         rows_deduped/step {:.1} | expert_flops/step {:.3e}",
+        b.bytes_on_wire,
+        b.bytes_on_wire_bwd,
+        b.bytes_intra_node,
+        b.bytes_intra_node_bwd,
+        b.rows_deduped,
+        b.expert_flops
     );
     println!(
         "overlap: critical_path/step={} comm_exposed={} compute_exposed={} efficiency={:.1}%",
@@ -312,6 +324,22 @@ fn parse_system(name: &str) -> SystemKind {
     }
 }
 
+/// `--dedup on|off` (None = keep the option struct's default).
+fn parse_dedup(args: &Args) -> hetumoe::error::Result<Option<bool>> {
+    Ok(match args.get("dedup") {
+        None => None,
+        Some(v) => match v.to_lowercase().as_str() {
+            "on" | "true" | "1" => Some(true),
+            "off" | "false" | "0" => Some(false),
+            other => {
+                return Err(hetumoe::config_err!(
+                    "--dedup expects on|off, got '{other}'"
+                ));
+            }
+        },
+    })
+}
+
 fn parse_gate(args: &Args) -> hetumoe::error::Result<GateKind> {
     Ok(match args.str_or("gate", "switch") {
         "switch" | "top1" => GateKind::Switch,
@@ -346,6 +374,7 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
         opts.dispatch = DispatchMode::Ragged;
         opts.alltoall = CommChoice::Auto;
         opts.chunks = ChunkChoice::Auto;
+        opts.dedup = true;
     }
     if let Some(v) = args.get("dispatch") {
         opts.dispatch = DispatchMode::parse(v)?;
@@ -355,6 +384,9 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
     }
     if let Some(v) = args.get("chunks") {
         opts.chunks = ChunkChoice::parse(v)?;
+    }
+    if let Some(dedup) = parse_dedup(args)? {
+        opts.dedup = dedup;
     }
     let dispatch = opts.dispatch;
     let alltoall = opts.alltoall;
@@ -403,8 +435,12 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
         summary.breakdown.aux_loss
     );
     println!(
-        "bytes_on_wire/step={:.0} expert_flops/step={:.3e}",
-        summary.breakdown.bytes_on_wire, summary.breakdown.expert_flops
+        "bytes_on_wire/step={:.0} (NIC) bytes_intra_node/step={:.0} rows_deduped/step={:.1} \
+         expert_flops/step={:.3e}",
+        summary.breakdown.bytes_on_wire,
+        summary.breakdown.bytes_intra_node,
+        summary.breakdown.rows_deduped,
+        summary.breakdown.expert_flops
     );
     println!(
         "overlap: critical_path/step={} comm_exposed={} compute_exposed={} efficiency={:.1}%",
@@ -560,6 +596,7 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
     let seed = args.u64_or("seed", 0)?;
     let comm = CommChoice::parse(args.str_or("comm", "auto"))?;
     let chunks = ChunkChoice::parse(args.str_or("chunks", "auto"))?;
+    let dedup = parse_dedup(args)?.unwrap_or(true);
     let workload = args.str_or("workload", "poisson");
     let process = match workload {
         // Calibrated so the long-run mean equals --rate:
@@ -593,6 +630,7 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
         process,
         comm,
         chunks,
+        dedup,
         slo,
         duration,
         max_tokens,

@@ -127,6 +127,14 @@ pub struct MoeLayerOptions {
     /// (`Auto` = picked per step alongside the schedule, from the same
     /// traffic matrix; the padded pipeline is never chunked).
     pub chunks: ChunkChoice,
+    /// Top-k token deduplication on the hierarchical schedule's
+    /// inter-node legs: a token routed to several experts on one remote
+    /// node ships once plus a replication index, and the backward's
+    /// return leg pre-sums per-token partial gradients at the expert
+    /// node (both bit-identical to the flat exchange; see
+    /// `comm::hier_ragged`). Also makes the shared schedule pick score
+    /// the deduplicated NIC bytes.
+    pub dedup: bool,
     /// Threads for the parallel kernels (1 = serial).
     pub threads: usize,
 }
@@ -140,6 +148,7 @@ impl Default for MoeLayerOptions {
             dispatch: DispatchMode::Ragged,
             alltoall: CommChoice::Auto,
             chunks: ChunkChoice::Auto,
+            dedup: true,
             threads: 1,
         }
     }
@@ -163,19 +172,33 @@ pub struct StepReport {
     pub expert_counts: Vec<usize>,
     /// Mean auxiliary loss across ranks.
     pub aux_loss: f64,
-    /// Bytes crossing rank boundaries over both AllToAll legs
-    /// (self-traffic excluded; padding rows count in padded mode —
-    /// that's the waste the ragged pipeline removes).
+    /// Bytes crossing a **node boundary** (NIC traffic) over both
+    /// AllToAll legs — placement-aware: a cross-rank row whose source
+    /// and destination GPUs share a node is *not* counted here (it
+    /// never touches the NIC); under the hierarchical schedule with
+    /// dedup this is the post-deduplication figure, replication-index
+    /// overhead included. Padding rows count in padded mode — that's
+    /// the waste the ragged pipeline removes.
     pub bytes_on_wire: usize,
+    /// Bytes moved over the intra-node fabric on both AllToAll legs:
+    /// direct same-node cross-rank rows under the flat schedule, the
+    /// leader gather + scatter relays under the hierarchical schedule.
+    pub bytes_intra_node: usize,
+    /// Replica rows the hierarchical dedup/pre-summation kept off the
+    /// NIC this step (forward + absorbed backward legs; 0 when the flat
+    /// schedule ran or dedup is off).
+    pub rows_deduped: usize,
     /// Expert-FFN FLOPs actually executed across all ranks (padded mode
     /// runs capacity rows, occupied or not).
     pub expert_flops: f64,
     /// AllToAll schedule this step ran ("flat" | "hier").
     pub comm_schedule: String,
-    /// Bytes crossing rank boundaries over both *backward* AllToAll legs
-    /// (0 for forward-only steps; set by the training backward pass,
-    /// attributed through the same cost models as the forward legs).
+    /// NIC bytes over both *backward* AllToAll legs (0 for forward-only
+    /// steps; set by the training backward pass, attributed through the
+    /// same placement-aware split as the forward legs).
     pub bytes_on_wire_bwd: usize,
+    /// Intra-node fabric bytes over both backward AllToAll legs.
+    pub bytes_intra_node_bwd: usize,
     /// AllToAll schedule the backward legs ran ("" for forward-only).
     pub comm_schedule_bwd: String,
     /// Chunk count of the forward exchanges (1 = unchunked; the padded
@@ -248,6 +271,8 @@ impl StepReport {
         self.wall.extend(bwd.wall);
         self.comm.extend(bwd.comm);
         self.bytes_on_wire_bwd += bwd.bytes_on_wire;
+        self.bytes_intra_node_bwd += bwd.bytes_intra_node;
+        self.rows_deduped += bwd.rows_deduped;
         if !bwd.comm_schedule.is_empty() {
             self.comm_schedule_bwd = bwd.comm_schedule;
         }
@@ -654,11 +679,15 @@ mod tests {
     fn forced_chunk_counts_are_reported_and_bit_identical() {
         let cluster = ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) };
         let shards = shards_for(4, 16, 8, 37);
+        // Flat schedule: chunks tile the destination-*rank* axis, so a
+        // requested count up to the world size is honored exactly (the
+        // hierarchical schedule tiles destination *nodes* — checked
+        // separately below).
         let mk = |chunks| {
             MoeLayer::native(
                 tiny_cfg(GateKind::Switch),
                 cluster.clone(),
-                MoeLayerOptions { chunks, ..Default::default() },
+                MoeLayerOptions { chunks, alltoall: CommChoice::Flat, ..Default::default() },
                 13,
             )
             .unwrap()
@@ -675,6 +704,25 @@ mod tests {
             // Critical path never exceeds the serial sum of the region.
             let serial = rep.wall_phase("expert") + rep.comm_total();
             assert!(rep.critical_path <= serial + 1e-9);
+        }
+        // Hierarchical schedule: chunks tile destination *nodes* (the
+        // aggregated inter-node messages stay whole), so Fixed(4) on a
+        // 2-node cluster clamps to 2 node-aligned chunks.
+        let hier = MoeLayer::native(
+            tiny_cfg(GateKind::Switch),
+            cluster,
+            MoeLayerOptions {
+                chunks: ChunkChoice::Fixed(4),
+                alltoall: CommChoice::Hierarchical,
+                ..Default::default()
+            },
+            13,
+        )
+        .unwrap();
+        let (out, rep) = hier.forward(&shards).unwrap();
+        assert_eq!(rep.n_chunks, 2, "hier chunking is node-axis");
+        for (a, b) in base_out.iter().zip(&out) {
+            assert!(a.allclose(b, 0.0), "schedule + chunking must not change outputs");
         }
     }
 

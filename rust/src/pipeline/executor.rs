@@ -32,9 +32,13 @@
 //! the same traffic matrix plus the measured per-rank expert walls.
 
 use crate::cluster::{ExpertPlacement, NetworkModel};
-use crate::comm::ragged::{offwire_bytes, ragged_combine, ragged_dispatch};
-use crate::comm::schedule::{pick_schedule, Schedule};
-use crate::comm::{alltoall, hierarchical_alltoall, CommTiming};
+use crate::comm::hier_ragged::{
+    dedup_traffic, hier_ragged_combine, hier_ragged_dispatch, row_meta, DedupMeta,
+    DedupTraffic, RowMeta,
+};
+use crate::comm::ragged::{ragged_combine, ragged_dispatch, split_wire_bytes};
+use crate::comm::schedule::{pick_schedule_dedup, transpose_counts, Schedule};
+use crate::comm::{alltoall, hierarchical_alltoall, CommTiming, WireBytes};
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
 use crate::gating::{apply_capacity, DispatchPlan, Routing};
@@ -260,19 +264,56 @@ impl<'a> StepExecutor<'a> {
         report.wall.push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
 
         // ---- Schedule selection: the decision procedure shared with
-        // the serving router ----
+        // the serving router, scoring the dedup-aware NIC bytes when
+        // dedup is on (the router scores the identical summary) ----
         let counts = placement.traffic_matrix(kept);
         let row_bytes = d * 4;
-        let pick = pick_schedule(self.net, &counts, row_bytes, self.opts.alltoall);
+        let g = self.cluster.gpus_per_node;
+        let dedup: Option<DedupTraffic> = self
+            .opts
+            .dedup
+            .then(|| dedup_traffic(plans.iter(), &placement, self.cluster));
+        let pick = pick_schedule_dedup(
+            self.net,
+            &counts,
+            row_bytes,
+            self.opts.alltoall,
+            dedup.as_ref(),
+        );
         let schedule = pick.schedule;
 
-        // ---- StageDispatch: exact-count exchange. The permutation is
-        // applied once; timing is attributed per chunk by the overlap
-        // model below, so chunked and unchunked execution are
-        // bit-identical by construction. ----
+        // ---- StageDispatch: exact-count exchange. Under the
+        // hierarchical schedule this *executes* the four-phase data
+        // path (gather → leader aggregation/dedup → inter-node
+        // AllToAllv → expansion/scatter), not just the timing charge;
+        // final buffers are bit-identical to the flat exchange either
+        // way. The permutation is applied once; timing is attributed
+        // per chunk by the overlap model below, so chunked and
+        // unchunked execution are bit-identical by construction. ----
         let mut flat: Vec<Vec<f32>> =
             buffers.into_iter().map(|b| b.data.into_vec()).collect();
-        ragged_dispatch(self.net, &mut flat, kept, d, schedule)?;
+        let mut rows_deduped = 0usize;
+        let dispatch_wire: WireBytes = match schedule {
+            Schedule::Flat => {
+                ragged_dispatch(self.net, &mut flat, kept, d, schedule)?;
+                split_wire_bytes(&counts, row_bytes, g)
+            }
+            Schedule::Hierarchical => {
+                // Row metadata is only needed to describe dedup groups.
+                let metas: Vec<RowMeta> = if self.opts.dedup {
+                    plans.iter().map(|p| row_meta(p, &placement, g)).collect()
+                } else {
+                    Vec::new()
+                };
+                let dm = self
+                    .opts
+                    .dedup
+                    .then(|| DedupMeta { rows: &metas, payloads: shards, scaled: false });
+                let leg = hier_ragged_dispatch(self.net, &mut flat, kept, d, dm.as_ref())?;
+                rows_deduped += leg.rows_saved;
+                leg.wire
+            }
+        };
 
         // ---- StageExpert: grouped per-expert batches, wall measured
         // per destination rank (the overlap model's compute profile) ----
@@ -306,14 +347,29 @@ impl<'a> StepExecutor<'a> {
             schedule,
             self.opts.chunks,
             &compute_per_rank,
+            dedup.as_ref(),
+            false,
         );
         report.comm_schedule = stage_plan.schedule.name().into();
         report.comm.push(("alltoall_dispatch".into(), overlap.dispatch_total()));
 
-        // ---- StageCombine: exact inverse exchange + reverse layout ----
-        ragged_combine(self.net, &mut flat, kept, d, schedule)?;
+        // ---- StageCombine: exact inverse exchange + reverse layout.
+        // The forward return carries distinct per-slot expert outputs
+        // (the combine-weight gradient needs them token-side), so it is
+        // never pre-summed — full rows on either schedule. ----
+        let combine_wire: WireBytes = match schedule {
+            Schedule::Flat => {
+                ragged_combine(self.net, &mut flat, kept, d, schedule)?;
+                split_wire_bytes(&transpose_counts(&counts), row_bytes, g)
+            }
+            Schedule::Hierarchical => {
+                hier_ragged_combine(self.net, &mut flat, kept, d, None)?.wire
+            }
+        };
         report.comm.push(("alltoall_combine".into(), overlap.combine_total()));
-        report.bytes_on_wire = 2 * offwire_bytes(&counts, row_bytes);
+        report.bytes_on_wire = dispatch_wire.inter + combine_wire.inter;
+        report.bytes_intra_node = dispatch_wire.intra + combine_wire.intra;
+        report.rows_deduped = rows_deduped;
         report.apply_overlap(&overlap);
 
         let r0 = Instant::now();
@@ -414,8 +470,15 @@ impl<'a> StepExecutor<'a> {
         let timing2 = self.run_alltoall(&mut flat)?;
         report.comm.push(("alltoall_combine".into(), timing2.total));
         // Every off-diagonal (src, dst) pair ships one [epr, cap, d]
-        // chunk per leg, padding included.
-        report.bytes_on_wire = 2 * w * w.saturating_sub(1) * epr * cap * d * 4;
+        // chunk per leg, padding included — split placement-aware:
+        // only cross-node pairs touch a NIC, same-node cross-rank
+        // pairs ride the node fabric.
+        let (nodes, g) = (self.cluster.nodes, self.cluster.gpus_per_node);
+        let chunk_bytes = epr * cap * d * 4;
+        let inter_pairs = w * w - nodes * g * g;
+        let intra_pairs = nodes * g * g.saturating_sub(1);
+        report.bytes_on_wire = 2 * inter_pairs * chunk_bytes;
+        report.bytes_intra_node = 2 * intra_pairs * chunk_bytes;
         // The equal-chunk exchange is never chunked: one-chunk overlap
         // model, whole round trip exposed on the critical path.
         report.apply_overlap(&OverlapTiming {

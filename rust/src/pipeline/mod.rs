@@ -35,11 +35,13 @@ pub mod overlap;
 
 pub use executor::{ExpertBank, ForwardCache, StepExecutor, StepOutput};
 pub use overlap::{
-    chunk_ranges, pipe_critical_path, plan_overlap, ChunkChoice, OverlapTiming,
+    chunk_ranges, pipe_critical_path, plan_overlap, schedule_chunk_ranges, ChunkChoice,
+    OverlapTiming,
 };
 
 use crate::cluster::NetworkModel;
-use crate::comm::schedule::{pick_schedule, CommChoice, Schedule};
+use crate::comm::hier_ragged::DedupTraffic;
+use crate::comm::schedule::{pick_schedule_dedup, CommChoice, Schedule};
 
 /// One step's exchange plan: which AllToAll schedule runs and into how
 /// many destination-rank chunks each leg is split.
@@ -57,6 +59,13 @@ impl StagePlan {
     /// critical path under that schedule, from the step's traffic
     /// matrix and compute profile. Returns the plan plus the winning
     /// [`OverlapTiming`].
+    /// `dedup` is the step's node-level traffic summary (None = dedup
+    /// off): hierarchical dispatch legs are charged the deduplicated
+    /// NIC bytes, and `presum_combine` additionally charges the combine
+    /// leg for pre-summed return blocks (the backward's transposed
+    /// exchanges). The hierarchical schedule chunks along the
+    /// destination-node axis (see [`schedule_chunk_ranges`]).
+    #[allow(clippy::too_many_arguments)]
     pub fn for_schedule(
         net: &NetworkModel,
         counts: &[Vec<usize>],
@@ -64,17 +73,28 @@ impl StagePlan {
         schedule: Schedule,
         chunks: ChunkChoice,
         compute_per_rank: &[f64],
+        dedup: Option<&DedupTraffic>,
+        presum_combine: bool,
     ) -> (StagePlan, OverlapTiming) {
-        let overlap =
-            plan_overlap(net, counts, elem_bytes, schedule, compute_per_rank, chunks);
+        let overlap = plan_overlap(
+            net,
+            counts,
+            elem_bytes,
+            schedule,
+            compute_per_rank,
+            chunks,
+            dedup,
+            presum_combine,
+        );
         (StagePlan { schedule, n_chunks: overlap.n_chunks() }, overlap)
     }
 
     /// The joint per-step decision in one call: flat-vs-hier via the
-    /// shared [`pick_schedule`] round-trip comparison (identical to the
-    /// serving router's — chunking preserves total traffic, so the
-    /// schedule ranking is decided on the unchunked round trip), then
-    /// [`Self::for_schedule`] for the chunk count.
+    /// shared [`pick_schedule_dedup`] round-trip comparison (identical
+    /// to the serving router's — chunking preserves total traffic, so
+    /// the schedule ranking is decided on the unchunked round trip),
+    /// then [`Self::for_schedule`] for the chunk count.
+    #[allow(clippy::too_many_arguments)]
     pub fn pick(
         net: &NetworkModel,
         counts: &[Vec<usize>],
@@ -82,9 +102,20 @@ impl StagePlan {
         choice: CommChoice,
         chunks: ChunkChoice,
         compute_per_rank: &[f64],
+        dedup: Option<&DedupTraffic>,
+        presum_combine: bool,
     ) -> (StagePlan, OverlapTiming) {
-        let pick = pick_schedule(net, counts, elem_bytes, choice);
-        StagePlan::for_schedule(net, counts, elem_bytes, pick.schedule, chunks, compute_per_rank)
+        let pick = pick_schedule_dedup(net, counts, elem_bytes, choice, dedup);
+        StagePlan::for_schedule(
+            net,
+            counts,
+            elem_bytes,
+            pick.schedule,
+            chunks,
+            compute_per_rank,
+            dedup,
+            presum_combine,
+        )
     }
 }
 
@@ -108,9 +139,11 @@ mod tests {
             CommChoice::Auto,
             ChunkChoice::Auto,
             &compute,
+            None,
+            false,
         );
         // Same schedule as the bare shared decision.
-        let bare = pick_schedule(&net, &counts, 64, CommChoice::Auto);
+        let bare = crate::comm::schedule::pick_schedule(&net, &counts, 64, CommChoice::Auto);
         assert_eq!(plan.schedule, bare.schedule);
         assert_eq!(plan.n_chunks, overlap.n_chunks());
         assert!(plan.n_chunks >= 1 && plan.n_chunks <= 4);
@@ -122,6 +155,8 @@ mod tests {
             CommChoice::Flat,
             ChunkChoice::Fixed(2),
             &compute,
+            None,
+            false,
         );
         assert_eq!(flat.schedule, Schedule::Flat);
         assert_eq!(flat.n_chunks, 2);

@@ -31,7 +31,8 @@
 
 use crate::cluster::NetworkModel;
 use crate::comm::alltoall::alltoallv_timing;
-use crate::comm::hierarchical::hierarchical_alltoallv_timing;
+use crate::comm::hier_ragged::DedupTraffic;
+use crate::comm::hierarchical::hierarchical_alltoallv_timing_with;
 use crate::comm::schedule::{transpose_counts, Schedule};
 use crate::error::Result;
 use std::ops::Range;
@@ -84,16 +85,26 @@ pub fn chunk_ranges(w: usize, n: usize) -> Vec<Range<usize>> {
     out
 }
 
-fn leg_time(
-    net: &NetworkModel,
-    counts: &[Vec<usize>],
-    elem_bytes: usize,
+/// Destination groups for `n` chunks under a given schedule: the flat
+/// schedule chunks along the destination-**rank** axis; the
+/// hierarchical schedule chunks along the destination-**node** axis
+/// (ranges are node-aligned), so the leaders' aggregated inter-node
+/// messages stay whole and a dedup group — one token's replicas on one
+/// node — never straddles two chunks.
+pub fn schedule_chunk_ranges(
+    w: usize,
+    gpus_per_node: usize,
     schedule: Schedule,
-) -> f64 {
+    n: usize,
+) -> Vec<Range<usize>> {
     match schedule {
-        Schedule::Flat => alltoallv_timing(net, counts, elem_bytes).total,
+        Schedule::Flat => chunk_ranges(w, n),
         Schedule::Hierarchical => {
-            hierarchical_alltoallv_timing(net, counts, elem_bytes).total
+            let g = gpus_per_node.max(1);
+            chunk_ranges(w / g, n)
+                .into_iter()
+                .map(|r| r.start * g..r.end * g)
+                .collect()
         }
     }
 }
@@ -101,13 +112,23 @@ fn leg_time(
 /// Per-chunk timings of both exchange legs. Dispatch chunk `c` carries
 /// the columns (destination ranks) of `counts` inside `ranges[c]`; its
 /// combine leg is the transpose — those ranks' rows on the way back.
+///
+/// With a [`DedupTraffic`] and the hierarchical schedule, each chunk's
+/// dispatch leg is charged the deduplicated NIC bytes of its
+/// destination nodes (ranges must be node-aligned — non-aligned ranges
+/// fall back to raw costing, since a split node would break the dedup
+/// groups); `presum_combine` additionally charges the combine leg for
+/// the pre-summed return blocks (the backward's transposed exchanges).
 pub fn chunk_comm_times(
     net: &NetworkModel,
     counts: &[Vec<usize>],
     elem_bytes: usize,
     schedule: Schedule,
     ranges: &[Range<usize>],
+    dedup: Option<&DedupTraffic>,
+    presum_combine: bool,
 ) -> (Vec<f64>, Vec<f64>) {
+    let g = net.cfg.gpus_per_node.max(1);
     let mut dispatch = Vec::with_capacity(ranges.len());
     let mut combine = Vec::with_capacity(ranges.len());
     for range in ranges {
@@ -120,8 +141,47 @@ pub fn chunk_comm_times(
                     .collect()
             })
             .collect();
-        dispatch.push(leg_time(net, &masked, elem_bytes, schedule));
-        combine.push(leg_time(net, &transpose_counts(&masked), elem_bytes, schedule));
+        let masked_t = transpose_counts(&masked);
+        match schedule {
+            Schedule::Flat => {
+                dispatch.push(alltoallv_timing(net, &masked, elem_bytes).total);
+                combine.push(alltoallv_timing(net, &masked_t, elem_bytes).total);
+            }
+            Schedule::Hierarchical => {
+                let aligned = range.start % g == 0 && range.end % g == 0;
+                let masked_dedup = match dedup {
+                    Some(t) if aligned => {
+                        Some(t.mask_dst_nodes(range.start / g, range.end / g))
+                    }
+                    _ => None,
+                };
+                let d_inter =
+                    masked_dedup.as_ref().map(|t| t.dispatch_inter_bytes(elem_bytes));
+                dispatch.push(
+                    hierarchical_alltoallv_timing_with(
+                        net,
+                        &masked,
+                        elem_bytes,
+                        d_inter.as_deref(),
+                    )
+                    .total,
+                );
+                let c_inter = if presum_combine {
+                    masked_dedup.as_ref().map(|t| t.presum_inter_bytes_t(elem_bytes))
+                } else {
+                    None
+                };
+                combine.push(
+                    hierarchical_alltoallv_timing_with(
+                        net,
+                        &masked_t,
+                        elem_bytes,
+                        c_inter.as_deref(),
+                    )
+                    .total,
+                );
+            }
+        }
     }
     (dispatch, combine)
 }
@@ -233,6 +293,7 @@ impl OverlapTiming {
 /// values sum to the step's `expert` wall phase); a chunk's compute is
 /// the sum over its ranks, so totals are conserved for every chunk
 /// count and `n = 1` reproduces the unchunked phases exactly.
+#[allow(clippy::too_many_arguments)]
 pub fn plan_overlap(
     net: &NetworkModel,
     counts: &[Vec<usize>],
@@ -240,13 +301,29 @@ pub fn plan_overlap(
     schedule: Schedule,
     compute_per_rank: &[f64],
     choice: ChunkChoice,
+    dedup: Option<&DedupTraffic>,
+    presum_combine: bool,
 ) -> OverlapTiming {
     let w = counts.len();
     debug_assert_eq!(compute_per_rank.len(), w);
+    let g = net.cfg.gpus_per_node.max(1);
+    // Chunkable units: destination ranks (flat) or destination nodes
+    // (hierarchical — the inter leg's aggregated messages stay whole).
+    let units = match schedule {
+        Schedule::Flat => w,
+        Schedule::Hierarchical => w / g,
+    };
     let build = |n: usize| -> OverlapTiming {
-        let ranges = chunk_ranges(w, n);
-        let (dispatch, combine) =
-            chunk_comm_times(net, counts, elem_bytes, schedule, &ranges);
+        let ranges = schedule_chunk_ranges(w, g, schedule, n);
+        let (dispatch, combine) = chunk_comm_times(
+            net,
+            counts,
+            elem_bytes,
+            schedule,
+            &ranges,
+            dedup,
+            presum_combine,
+        );
         let compute: Vec<f64> = ranges
             .iter()
             .map(|r| compute_per_rank[r.start..r.end].iter().sum::<f64>())
@@ -257,19 +334,19 @@ pub fn plan_overlap(
     match choice {
         ChunkChoice::Fixed(n) => build(n),
         ChunkChoice::Auto => {
-            // Candidates: powers of two up to the world size, plus the
-            // world size itself (one destination rank per chunk).
+            // Candidates: powers of two up to the unit count, plus the
+            // unit count itself (one destination rank/node per chunk).
             let mut best = build(1);
             let mut n = 2usize;
-            while n <= w {
+            while n <= units {
                 let cand = build(n);
                 if cand.critical_path < best.critical_path {
                     best = cand;
                 }
                 n *= 2;
             }
-            if w > 1 && !w.is_power_of_two() {
-                let cand = build(w);
+            if units > 1 && !units.is_power_of_two() {
+                let cand = build(units);
                 if cand.critical_path < best.critical_path {
                     best = cand;
                 }
@@ -282,6 +359,7 @@ pub fn plan_overlap(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::hierarchical::hierarchical_alltoallv_timing;
     use crate::config::ClusterConfig;
 
     fn net(nodes: usize, gpus: usize) -> NetworkModel {
@@ -292,6 +370,20 @@ mod tests {
 
     fn skewed_counts(w: usize) -> Vec<Vec<usize>> {
         (0..w).map(|s| (0..w).map(|d| 8 + 3 * s + d).collect()).collect()
+    }
+
+    fn leg_time(
+        net: &NetworkModel,
+        counts: &[Vec<usize>],
+        elem_bytes: usize,
+        schedule: Schedule,
+    ) -> f64 {
+        match schedule {
+            Schedule::Flat => alltoallv_timing(net, counts, elem_bytes).total,
+            Schedule::Hierarchical => {
+                hierarchical_alltoallv_timing(net, counts, elem_bytes).total
+            }
+        }
     }
 
     #[test]
@@ -314,8 +406,8 @@ mod tests {
         let m = net(2, 2);
         let counts = skewed_counts(4);
         for schedule in [Schedule::Flat, Schedule::Hierarchical] {
-            let ranges = chunk_ranges(4, 1);
-            let (d, c) = chunk_comm_times(&m, &counts, 8, schedule, &ranges);
+            let ranges = schedule_chunk_ranges(4, 2, schedule, 1);
+            let (d, c) = chunk_comm_times(&m, &counts, 8, schedule, &ranges, None, false);
             assert_eq!(d.len(), 1);
             assert!((d[0] - leg_time(&m, &counts, 8, schedule)).abs() < 1e-15);
             let t = transpose_counts(&counts);
@@ -332,14 +424,86 @@ mod tests {
         for schedule in [Schedule::Flat, Schedule::Hierarchical] {
             let full = leg_time(&m, &counts, 16, schedule);
             for n in [2usize, 4, 8] {
-                let ranges = chunk_ranges(8, n);
-                let (d, _) = chunk_comm_times(&m, &counts, 16, schedule, &ranges);
+                let ranges = schedule_chunk_ranges(8, 4, schedule, n);
+                let (d, _) =
+                    chunk_comm_times(&m, &counts, 16, schedule, &ranges, None, false);
                 let sum: f64 = d.iter().sum();
                 assert!(
                     sum >= full - 1e-12,
                     "{schedule:?} n={n}: chunk sum {sum} < unchunked {full}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn hier_chunks_are_node_aligned() {
+        // 3 nodes × 2 GPUs: hierarchical ranges must sit on node
+        // boundaries so dedup groups and aggregated messages stay whole.
+        for n in 1..7usize {
+            let ranges = schedule_chunk_ranges(6, 2, Schedule::Hierarchical, n);
+            assert!(ranges.len() <= 3.min(n.max(1)));
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, 6);
+            for r in &ranges {
+                assert_eq!(r.start % 2, 0, "n={n}: chunk splits a node");
+                assert_eq!(r.end % 2, 0, "n={n}: chunk splits a node");
+            }
+        }
+        // Flat ranges are unchanged rank tiling.
+        assert_eq!(schedule_chunk_ranges(6, 2, Schedule::Flat, 6).len(), 6);
+    }
+
+    #[test]
+    fn dedup_lowers_chunked_hier_dispatch_times() {
+        use crate::comm::hier_ragged::DedupTraffic;
+        let m = net(2, 2);
+        let counts = vec![vec![16usize; 4]; 4];
+        // 64 rows per node pair, half of them dedup away.
+        let t = DedupTraffic {
+            gpus_per_node: 2,
+            rows: vec![vec![64, 64], vec![64, 64]],
+            payloads: vec![vec![32, 32], vec![32, 32]],
+            heads: vec![vec![40, 40], vec![40, 40]],
+        };
+        let ranges = schedule_chunk_ranges(4, 2, Schedule::Hierarchical, 2);
+        let (raw, raw_c) = chunk_comm_times(
+            &m,
+            &counts,
+            256,
+            Schedule::Hierarchical,
+            &ranges,
+            None,
+            false,
+        );
+        let (ded, ded_c) = chunk_comm_times(
+            &m,
+            &counts,
+            256,
+            Schedule::Hierarchical,
+            &ranges,
+            Some(&t),
+            false,
+        );
+        for (a, b) in raw.iter().zip(&ded) {
+            assert!(b < a, "dedup must cut each chunk's dispatch leg: {b} vs {a}");
+        }
+        // Without presum the combine legs are identical.
+        for (a, b) in raw_c.iter().zip(&ded_c) {
+            assert!((a - b).abs() < 1e-15);
+        }
+        // With presum the combine legs shrink too.
+        let (_, pre_c) = chunk_comm_times(
+            &m,
+            &counts,
+            256,
+            Schedule::Hierarchical,
+            &ranges,
+            Some(&t),
+            true,
+        );
+        for (a, b) in raw_c.iter().zip(&pre_c) {
+            assert!(b < a, "presum must cut each chunk's combine leg: {b} vs {a}");
         }
     }
 
@@ -378,6 +542,8 @@ mod tests {
             Schedule::Flat,
             &compute,
             ChunkChoice::Fixed(1),
+            None,
+            false,
         );
         assert_eq!(unchunked.n_chunks(), 1);
         assert_eq!(unchunked.comm_hidden(), 0.0);
@@ -385,8 +551,16 @@ mod tests {
             (unchunked.comm_exposed() - unchunked.comm_total()).abs() < 1e-12,
             "one chunk exposes the whole exchange"
         );
-        let auto =
-            plan_overlap(&m, &counts, 256, Schedule::Flat, &compute, ChunkChoice::Auto);
+        let auto = plan_overlap(
+            &m,
+            &counts,
+            256,
+            Schedule::Flat,
+            &compute,
+            ChunkChoice::Auto,
+            None,
+            false,
+        );
         assert!(auto.n_chunks() > 1, "auto must chunk a compute-dominated step");
         assert!(auto.comm_hidden() > 0.0);
         assert!(auto.critical_path < unchunked.critical_path);
@@ -408,9 +582,19 @@ mod tests {
                     schedule,
                     &compute,
                     ChunkChoice::Fixed(1),
+                    None,
+                    false,
                 );
-                let auto =
-                    plan_overlap(&m, &counts, 64, schedule, &compute, ChunkChoice::Auto);
+                let auto = plan_overlap(
+                    &m,
+                    &counts,
+                    64,
+                    schedule,
+                    &compute,
+                    ChunkChoice::Auto,
+                    None,
+                    false,
+                );
                 assert!(auto.critical_path <= one.critical_path + 1e-15);
             }
         }
@@ -428,6 +612,8 @@ mod tests {
             Schedule::Flat,
             &compute,
             ChunkChoice::Fixed(99),
+            None,
+            false,
         );
         assert_eq!(o.n_chunks(), 3, "fixed counts clamp to the world size");
         assert!((o.compute_total() - 0.06).abs() < 1e-12, "compute is conserved");

@@ -14,7 +14,9 @@
 use crate::cluster::GpuModel;
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
-use crate::comm::schedule::Schedule;
+use crate::comm::hier_ragged::hier_leg_wire_bytes;
+use crate::comm::ragged::split_wire_bytes;
+use crate::comm::schedule::{transpose_counts, Schedule};
 use crate::moe::{CommImpl, StepReport};
 use crate::pipeline::{ChunkChoice, StagePlan};
 use crate::serve::router::{CommChoice, PlacementRouter, RouteDecision};
@@ -35,6 +37,10 @@ pub struct ServeConfig {
     /// Exchange chunking for comm/compute overlap (`Auto` = picked per
     /// batch from its traffic matrix, like the training pipeline).
     pub chunks: ChunkChoice,
+    /// Score and charge the hierarchical schedule with top-k token
+    /// dedup (mirrors the training side's `MoeLayerOptions::dedup`;
+    /// default on).
+    pub dedup: bool,
     /// Per-request latency SLO, seconds.
     pub slo: f64,
     /// Simulated seconds of offered traffic.
@@ -66,6 +72,7 @@ impl ServeConfig {
             process: ArrivalProcess::Poisson { rate: 2000.0 },
             comm: CommChoice::Auto,
             chunks: ChunkChoice::Auto,
+            dedup: true,
             slo: 0.05,
             duration: 2.0,
             min_tokens: 8,
@@ -118,6 +125,8 @@ fn service_estimate_for(cfg: &ServeConfig, router: &PlacementRouter, tokens: usi
         cfg.comm,
         cfg.chunks,
         &compute_per_rank,
+        None,
+        false,
     );
     gate + layout + overlap.critical_path + reverse
 }
@@ -164,12 +173,13 @@ pub struct ServeEngine {
 
 impl ServeEngine {
     pub fn new(cfg: ServeConfig) -> Result<ServeEngine> {
-        let router = PlacementRouter::new(
+        let mut router = PlacementRouter::new(
             cfg.moe.clone(),
             cfg.cluster.clone(),
             cfg.comm,
             cfg.seed,
         )?;
+        router.dedup = cfg.dedup;
         let mut rng = Rng::seed(cfg.seed ^ 0xE4B);
         let mut embedding = Tensor::randn(&[cfg.vocab, cfg.moe.d_model], &mut rng);
         embedding.scale(1.0 / (cfg.moe.d_model as f32).sqrt());
@@ -243,6 +253,35 @@ impl ServeEngine {
             CommImpl::Flat => Schedule::Flat,
             CommImpl::Hierarchical => Schedule::Hierarchical,
         };
+        // Placement-aware wire split for both legs (the forward combine
+        // is never deduplicated — it returns distinct per-slot expert
+        // outputs — so only the dispatch leg carries the dedup figure).
+        let row_bytes = self.cfg.moe.d_model * 4;
+        let g = self.cfg.cluster.gpus_per_node;
+        let counts_t = transpose_counts(&decision.counts);
+        let (wire_fwd, wire_cmb, rows_deduped) = match schedule {
+            Schedule::Flat => (
+                split_wire_bytes(&decision.counts, row_bytes, g),
+                split_wire_bytes(&counts_t, row_bytes, g),
+                0usize,
+            ),
+            Schedule::Hierarchical => {
+                let inter = self
+                    .cfg
+                    .dedup
+                    .then(|| decision.dedup.dispatch_inter_total(row_bytes));
+                (
+                    hier_leg_wire_bytes(&decision.counts, row_bytes, g, inter),
+                    hier_leg_wire_bytes(&counts_t, row_bytes, g, None),
+                    if self.cfg.dedup {
+                        decision.dedup.dispatch_rows_saved(row_bytes)
+                    } else {
+                        0
+                    },
+                )
+            }
+        };
+        let dedup = if self.cfg.dedup { Some(&decision.dedup) } else { None };
         let (stage_plan, overlap) = StagePlan::for_schedule(
             &self.router.net,
             &decision.counts,
@@ -250,6 +289,8 @@ impl ServeEngine {
             schedule,
             self.cfg.chunks,
             &compute_per_rank,
+            dedup,
+            false,
         );
         let total = gate + layout + overlap.critical_path + reverse;
         let mut report = StepReport {
@@ -268,11 +309,12 @@ impl ServeEngine {
             expert_counts: decision.expert_counts.clone(),
             aux_loss: decision.aux_loss,
             // Serving ships only kept rows (the router's exact counts)
-            // and runs experts over exactly the kept tokens.
-            bytes_on_wire: 2 * crate::comm::ragged::offwire_bytes(
-                &decision.counts,
-                self.cfg.moe.d_model * 4,
-            ),
+            // and runs experts over exactly the kept tokens. Bytes are
+            // split placement-aware through the same helpers the
+            // training data path reports from.
+            bytes_on_wire: wire_fwd.inter + wire_cmb.inter,
+            bytes_intra_node: wire_fwd.intra + wire_cmb.intra,
+            rows_deduped,
             expert_flops: 4.0
                 * decision.expert_counts.iter().sum::<usize>() as f64
                 * (self.cfg.moe.d_model * self.cfg.moe.ffn_hidden) as f64,

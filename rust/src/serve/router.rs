@@ -16,7 +16,8 @@
 //! operators can see hot/cold experts drift with the workload.
 
 use crate::cluster::NetworkModel;
-use crate::comm::schedule::pick_schedule;
+use crate::comm::hier_ragged::{dedup_traffic, DedupTraffic};
+use crate::comm::schedule::pick_schedule_dedup;
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
 use crate::gating::{apply_capacity, make_gate, DispatchPlan, Gate, Routing};
@@ -37,6 +38,11 @@ pub struct RouteDecision {
     pub shards: Vec<(Routing, DispatchPlan)>,
     /// `counts[src][dst]`: kept token rows rank `src` ships to `dst`.
     pub counts: Vec<Vec<usize>>,
+    /// Node-level dedup summary of the same plans (replica rows, unique
+    /// payloads, pre-summable runs per node pair) — the dedup-aware
+    /// counts the schedule pick scored, identical to what the training
+    /// executor derives from the same plans.
+    pub dedup: DedupTraffic,
     /// Global per-expert kept token counts.
     pub expert_counts: Vec<usize>,
     /// Chosen schedule.
@@ -82,6 +88,10 @@ pub struct PlacementRouter {
     /// Router weight `[d, E]` — identical to the training layer's.
     pub gate_weight: Tensor,
     choice: CommChoice,
+    /// Score the hierarchical schedule with top-k dedup (must match the
+    /// training side's `MoeLayerOptions::dedup` for the shared per-step
+    /// decision to stay identical; both default to on).
+    pub dedup: bool,
     /// EWMA of per-expert kept-token load.
     load_ewma: Vec<f64>,
     ewma_alpha: f64,
@@ -106,14 +116,19 @@ impl PlacementRouter {
     }
 
     /// Build sharing an existing training layer's gate config and router
-    /// weight — the serving path then routes exactly as training does.
+    /// weight — the serving path then routes exactly as training does,
+    /// including scoring (or not scoring) dedup-aware NIC bytes: the
+    /// layer's `dedup` option is mirrored so the shared per-step
+    /// schedule decision sees identical inputs on both sides.
     pub fn from_layer(layer: &MoeLayer, choice: CommChoice) -> Result<PlacementRouter> {
-        Self::with_weight(
+        let mut router = Self::with_weight(
             layer.cfg.clone(),
             layer.cluster.clone(),
             choice,
             layer.gate_weight.clone(),
-        )
+        )?;
+        router.dedup = layer.opts.dedup;
+        Ok(router)
     }
 
     fn with_weight(
@@ -139,6 +154,7 @@ impl PlacementRouter {
             gate,
             gate_weight,
             choice,
+            dedup: true,
             load_ewma: vec![0.0; e],
             ewma_alpha: 0.2,
             flat_chosen: 0,
@@ -237,9 +253,25 @@ impl PlacementRouter {
         // transpose of the dispatch matrix (every flow reverses), and
         // under expert skew the two legs cost very different amounts —
         // a hot expert's rank receives fan-in cheaply but serializes
-        // the whole fan-out on the way back.
+        // the whole fan-out on the way back. The hierarchical side is
+        // scored on the dedup-aware node-level counts — the identical
+        // summary the training executor derives from the same plans.
+        let placement = self.placement();
+        let dedup = if self.dedup {
+            dedup_traffic(shards.iter().map(|(_, p)| p), &placement, &self.cluster)
+        } else {
+            // Dedup off: skip the per-slot scan — the summary is never
+            // scored and the engine ignores it.
+            DedupTraffic::empty(&self.cluster)
+        };
         let row_bytes = self.cfg.d_model * 4;
-        let pick = pick_schedule(&self.net, &counts, row_bytes, self.choice);
+        let pick = pick_schedule_dedup(
+            &self.net,
+            &counts,
+            row_bytes,
+            self.choice,
+            self.dedup.then_some(&dedup),
+        );
         let comm = CommImpl::from(pick.schedule);
         match comm {
             CommImpl::Flat => self.flat_chosen += 1,
@@ -250,6 +282,7 @@ impl PlacementRouter {
         RouteDecision {
             shards,
             counts,
+            dedup,
             expert_counts,
             comm,
             dispatch_time: pick.dispatch_time,

@@ -1,0 +1,271 @@
+//! Property tests for the real four-phase ragged hierarchical
+//! AllToAllv: with `Schedule::Hierarchical` the pipeline now *executes*
+//! gather → leader aggregation/dedup → exact-count inter-node exchange
+//! → expansion/scatter, and everything it produces must be bit-identical
+//! to the flat ragged exchange — outputs, gradients, expert counts and
+//! drop rates — across (nodes, gpus_per_node) grids, every gate family
+//! including k ≥ 2, chunked and unchunked execution, drop and no-drop
+//! regimes, dedup on and off.
+
+use hetumoe::backprop::TrainMoeLayer;
+use hetumoe::comm::schedule::CommChoice;
+use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
+use hetumoe::moe::{MoeLayer, MoeLayerOptions};
+use hetumoe::pipeline::ChunkChoice;
+use hetumoe::tensor::Tensor;
+use hetumoe::util::proptest::for_all;
+use hetumoe::util::rng::Rng;
+
+fn cluster(nodes: usize, gpus: usize) -> ClusterConfig {
+    ClusterConfig { nodes, gpus_per_node: gpus, ..ClusterConfig::commodity(nodes) }
+}
+
+/// A gate family valid for `e` experts (gshard needs ≥ 2, top-k needs
+/// k ≤ E), covering k ∈ {1, 2, 4} as `e` allows.
+fn gate_for(i: usize, e: usize) -> GateKind {
+    match i % 4 {
+        1 if e >= 2 => GateKind::GShard,        // k = 2
+        2 if e >= 2 => GateKind::TopK { k: 2 }, // k = 2
+        3 if e >= 4 => GateKind::TopK { k: 4 }, // k = 4
+        _ => GateKind::Switch,                  // k = 1
+    }
+}
+
+/// Forward path: forced-hierarchical (dedup on and off, chunked and
+/// unchunked) must be bit-identical to forced-flat on every output and
+/// routing statistic, across topology/gate/capacity grids.
+#[test]
+fn hier_ragged_forward_is_bit_identical_to_flat() {
+    for_all(16, |g| {
+        let nodes = g.usize_in(1..4);
+        let gpus = g.usize_in(1..4);
+        let w = nodes * gpus;
+        let epr = g.usize_in(1..3);
+        let e = w * epr;
+        let d = 4 * g.usize_in(1..3);
+        let tokens = g.usize_in(4..24);
+        let gate = gate_for(g.usize_in(0..4), e);
+        let cfg = MoeConfig {
+            num_experts: e,
+            d_model: d,
+            ffn_hidden: 2 * d,
+            // Drop and no-drop regimes.
+            capacity_factor: g.f32_in(0.4, 3.0) as f64,
+            gate: gate.clone(),
+        };
+        let cl = cluster(nodes, gpus);
+        let seed = g.case as u64 + 1013;
+        let mk = |alltoall, dedup, chunks| {
+            MoeLayer::native(
+                cfg.clone(),
+                cl.clone(),
+                MoeLayerOptions { alltoall, dedup, chunks, ..Default::default() },
+                seed,
+            )
+            .unwrap()
+        };
+        let mut rng = Rng::seed(seed ^ 0x5EED);
+        let shards: Vec<Tensor> =
+            (0..w).map(|_| Tensor::randn(&[tokens, d], &mut rng)).collect();
+
+        let flat = mk(CommChoice::Flat, false, ChunkChoice::Fixed(1));
+        let (fo, fr) = flat.forward(&shards).unwrap();
+        for (dedup, chunks) in [
+            (false, ChunkChoice::Fixed(1)),
+            (true, ChunkChoice::Fixed(1)),
+            (true, ChunkChoice::Fixed(3)),
+            (true, ChunkChoice::Auto),
+        ] {
+            let hier = mk(CommChoice::Hierarchical, dedup, chunks);
+            let (ho, hr) = hier.forward(&shards).unwrap();
+            for (x, y) in fo.iter().zip(&ho) {
+                assert!(
+                    x.allclose(y, 0.0),
+                    "case {}: {gate:?} nodes={nodes} gpus={gpus} dedup={dedup}: \
+                     hierarchical output diverged by {}",
+                    g.case,
+                    x.max_abs_diff(y)
+                );
+            }
+            assert_eq!(fr.expert_counts, hr.expert_counts, "case {}", g.case);
+            assert_eq!(fr.drop_rate, hr.drop_rate, "case {}", g.case);
+            assert_eq!(hr.comm_schedule, "hier", "case {}", g.case);
+            // Honest split: flat and hier move the same *total* rows,
+            // but hier routes same-node rows through the leader (two
+            // intra hops) and dedup can only shave NIC bytes.
+            assert!(
+                hr.bytes_on_wire <= fr.bytes_on_wire,
+                "case {}: hier NIC bytes {} must never exceed flat's {} \
+                 (aggregation + dedup only remove NIC traffic)",
+                g.case,
+                hr.bytes_on_wire,
+                fr.bytes_on_wire
+            );
+            if !dedup && nodes > 1 {
+                // Without dedup every cross-node row crosses once under
+                // either schedule: identical NIC bytes.
+                assert_eq!(hr.bytes_on_wire, fr.bytes_on_wire, "case {}", g.case);
+            }
+            if nodes == 1 {
+                assert_eq!(hr.bytes_on_wire, 0, "case {}: single node has no NIC", g.case);
+                assert_eq!(fr.bytes_on_wire, 0, "case {}", g.case);
+            }
+        }
+    });
+}
+
+/// Training path: gradients through the hierarchical transposed
+/// exchanges (dy-dispatch dedup + dx-combine pre-summation) must match
+/// the flat backward exactly — dx, router grads and every expert
+/// parameter grad — including drop regimes and k ≥ 2 gates.
+#[test]
+fn hier_ragged_gradients_are_bit_identical_to_flat() {
+    for_all(12, |g| {
+        let nodes = g.usize_in(1..3) + 1; // 2..3 nodes: real NIC traffic
+        let gpus = g.usize_in(1..3);
+        let w = nodes * gpus;
+        let epr = g.usize_in(1..3);
+        let e = w * epr;
+        let d = 8;
+        let tokens = g.usize_in(4..20);
+        let gate = gate_for(g.usize_in(0..4), e);
+        let cf = *g.choose(&[0.5f64, 1.0, 2.0, 4.0]);
+        let cfg = MoeConfig {
+            num_experts: e,
+            d_model: d,
+            ffn_hidden: 16,
+            capacity_factor: cf,
+            gate: gate.clone(),
+        };
+        let cl = cluster(nodes, gpus);
+        let seed = g.case as u64 + 4021;
+        let mk = |alltoall, dedup, chunks| {
+            TrainMoeLayer::native(
+                cfg.clone(),
+                cl.clone(),
+                MoeLayerOptions { alltoall, dedup, chunks, ..Default::default() },
+                seed,
+            )
+            .unwrap()
+        };
+        let mut rng = Rng::seed(seed ^ 0xFADE);
+        let shards: Vec<Tensor> =
+            (0..w).map(|_| Tensor::randn(&[tokens, d], &mut rng)).collect();
+        let dy: Vec<Tensor> =
+            (0..w).map(|_| Tensor::randn(&[tokens, d], &mut rng)).collect();
+
+        let flat = mk(CommChoice::Flat, false, ChunkChoice::Fixed(1));
+        let (fo, _, fc) = flat.forward_t(&shards, 0).unwrap();
+        let (fdx, fg, fbwd) = flat.backward(&shards, &dy, &fc, 0.01).unwrap();
+
+        for (dedup, chunks) in [
+            (false, ChunkChoice::Fixed(1)),
+            (true, ChunkChoice::Fixed(1)),
+            (true, ChunkChoice::Auto),
+        ] {
+            let hier = mk(CommChoice::Hierarchical, dedup, chunks);
+            let (ho, _, hc) = hier.forward_t(&shards, 0).unwrap();
+            for (x, y) in fo.iter().zip(&ho) {
+                assert!(x.allclose(y, 0.0), "case {}: {gate:?} fwd dedup={dedup}", g.case);
+            }
+            let (hdx, hg, hbwd) = hier.backward(&shards, &dy, &hc, 0.01).unwrap();
+            for (x, y) in fdx.iter().zip(&hdx) {
+                assert!(
+                    x.allclose(y, 0.0),
+                    "case {}: {gate:?} cf={cf} dedup={dedup}: dx diverged by {}",
+                    g.case,
+                    x.max_abs_diff(y)
+                );
+            }
+            for (x, y) in fg.d_gate_weight.iter().zip(&hg.d_gate_weight) {
+                assert!(x.allclose(y, 0.0), "case {}: {gate:?}: d_gate_weight", g.case);
+            }
+            for (x, y) in fg.experts.iter().zip(&hg.experts) {
+                assert!(x.dw1.allclose(&y.dw1, 0.0), "case {}: {gate:?}: dw1", g.case);
+                assert!(x.dw2.allclose(&y.dw2, 0.0), "case {}: {gate:?}: dw2", g.case);
+                for (u, v) in x.db1.iter().zip(&y.db1) {
+                    assert!((u - v).abs() == 0.0, "case {}: {gate:?}: db1", g.case);
+                }
+                for (u, v) in x.db2.iter().zip(&y.db2) {
+                    assert!((u - v).abs() == 0.0, "case {}: {gate:?}: db2", g.case);
+                }
+            }
+            // The backward exchanges never cross more NIC bytes than
+            // the flat backward (pre-summation only removes traffic).
+            assert!(hbwd.bytes_on_wire <= fbwd.bytes_on_wire, "case {}", g.case);
+        }
+    });
+}
+
+/// The inference layer and the training layer keep agreeing bitwise
+/// when the hierarchical data path runs (same executor, same RNG
+/// stream) — the dedup machinery must not split the two paths.
+#[test]
+fn inference_and_training_forward_agree_under_hier_dedup() {
+    let cfg = MoeConfig {
+        num_experts: 8,
+        d_model: 16,
+        ffn_hidden: 32,
+        capacity_factor: 1.5,
+        gate: GateKind::GShard,
+    };
+    let cl = cluster(2, 2);
+    let opts = MoeLayerOptions {
+        alltoall: CommChoice::Hierarchical,
+        dedup: true,
+        ..Default::default()
+    };
+    let layer = MoeLayer::native(cfg.clone(), cl.clone(), opts.clone(), 99).unwrap();
+    let train = TrainMoeLayer::native(cfg, cl, opts, 99).unwrap();
+    let mut rng = Rng::seed(313);
+    let shards: Vec<Tensor> = (0..4).map(|_| Tensor::randn(&[12, 16], &mut rng)).collect();
+    let (a, ra) = layer.forward(&shards).unwrap();
+    let (b, rb, _) = train.forward_t(&shards, 0).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert!(x.allclose(y, 0.0));
+    }
+    assert_eq!(ra.comm_schedule, rb.comm_schedule);
+    assert_eq!(ra.bytes_on_wire, rb.bytes_on_wire);
+    assert_eq!(ra.bytes_intra_node, rb.bytes_intra_node);
+}
+
+/// k ≥ 2 with co-located replicas: dedup must strictly cut the NIC
+/// bytes the step reports, while staying bit-identical (covered above).
+#[test]
+fn dedup_strictly_reduces_nic_bytes_for_k2() {
+    let cfg = MoeConfig {
+        num_experts: 8,
+        d_model: 64,
+        ffn_hidden: 64,
+        capacity_factor: 4.0,
+        gate: GateKind::GShard, // top-2
+    };
+    let cl = cluster(2, 2); // 4 experts per node: replicas often co-locate
+    let mk = |dedup| {
+        MoeLayer::native(
+            cfg.clone(),
+            cl.clone(),
+            MoeLayerOptions {
+                alltoall: CommChoice::Hierarchical,
+                dedup,
+                ..Default::default()
+            },
+            7,
+        )
+        .unwrap()
+    };
+    let mut rng = Rng::seed(55);
+    let shards: Vec<Tensor> = (0..4).map(|_| Tensor::randn(&[64, 64], &mut rng)).collect();
+    let (_, raw) = mk(false).forward(&shards).unwrap();
+    let (_, ded) = mk(true).forward(&shards).unwrap();
+    assert_eq!(raw.rows_deduped, 0);
+    assert!(ded.rows_deduped > 0, "top-2 over 2 nodes must co-locate some replicas");
+    assert!(
+        ded.bytes_on_wire < raw.bytes_on_wire,
+        "dedup must strictly cut NIC bytes: {} vs {}",
+        ded.bytes_on_wire,
+        raw.bytes_on_wire
+    );
+    // Intra-node traffic (gather/scatter of full rows) is untouched.
+    assert_eq!(ded.bytes_intra_node, raw.bytes_intra_node);
+}

@@ -122,10 +122,14 @@ fn chunked_forward_is_bit_identical_and_critical_path_bounded() {
             // The padded pipeline is never chunked.
             assert_eq!(rb.n_chunks, 1, "case {}", g.case);
         } else {
-            // Effective chunk count after clamping to the world size and
-            // tiling the ranks into equal contiguous groups.
-            let per = w.div_ceil(n_chunks.clamp(1, w));
-            assert_eq!(rb.n_chunks, w.div_ceil(per), "case {}", g.case);
+            // Effective chunk count after clamping to the chunkable
+            // units and tiling them into equal contiguous groups: ranks
+            // under the flat schedule, nodes under the hierarchical one
+            // (node-axis chunking keeps the aggregated inter-node
+            // messages and dedup groups whole).
+            let units = if rb.comm_schedule == "hier" { nodes } else { w };
+            let per = units.div_ceil(n_chunks.clamp(1, units));
+            assert_eq!(rb.n_chunks, units.div_ceil(per), "case {}", g.case);
         }
     });
 }

@@ -4,6 +4,7 @@
 
 use hetumoe::cluster::NetworkModel;
 use hetumoe::comm::alltoall::{alltoall, alltoallv_timing, flat_alltoall_timing};
+use hetumoe::comm::hier_ragged::dedup_traffic;
 use hetumoe::comm::hierarchical::{
     hierarchical_alltoall, hierarchical_alltoallv_timing, hierarchical_alltoall_timing,
 };
@@ -248,4 +249,75 @@ fn training_ragged_schedule_matches_router_decision() {
         "training (ragged, auto) and serving must pick the same schedule \
          for the same traffic"
     );
+}
+
+/// Satellite contract of the dedup-aware schedule pick: the node-level
+/// dedup counts the serving router scores are *exactly* what the
+/// training side derives from the identical plans — same replica rows,
+/// same unique payloads, same pre-summable runs — so the two
+/// `pick_schedule_dedup` evaluations can never see different inputs
+/// (and the documented flat tie-break makes equal inputs imply equal
+/// picks, asserted above and re-asserted here under k = 2).
+#[test]
+fn dedup_aware_counts_are_what_both_sides_score() {
+    let moe = MoeConfig {
+        num_experts: 8,
+        d_model: 16,
+        ffn_hidden: 32,
+        capacity_factor: 2.0,
+        gate: GateKind::GShard, // k = 2: dedup actually has replicas
+    };
+    let cl = cluster(2, 2);
+    let layer =
+        MoeLayer::native(moe.clone(), cl.clone(), MoeLayerOptions::default(), 61).unwrap();
+    assert!(layer.opts.dedup, "training scores dedup-aware counts by default");
+    let mut router = PlacementRouter::from_layer(&layer, CommChoice::Auto).unwrap();
+    assert!(router.dedup, "serving scores dedup-aware counts by default");
+
+    let mut rng = Rng::seed(71);
+    let batch = Tensor::randn(&[96, 16], &mut rng); // 24 tokens per rank
+    let decision = router.route_batch(&batch, 0);
+
+    // Training-side derivation from the identical routing: route every
+    // shard exactly like the training pipeline, then collapse the plans
+    // through the same `dedup_traffic` the executor uses.
+    let placement = layer.placement();
+    let plans: Vec<_> = (0..4)
+        .map(|r| {
+            let shard = batch.slice_rows(r * 24, (r + 1) * 24);
+            let scores = hetumoe::nn::matmul(&shard, &layer.gate_weight);
+            let routing = layer.gate.route_scores(&scores, 0);
+            apply_capacity(&routing, moe.capacity(24))
+        })
+        .collect();
+    let training_side = dedup_traffic(plans.iter(), &placement, &cl);
+    assert_eq!(
+        decision.dedup, training_side,
+        "router and training executor must derive identical dedup counts"
+    );
+    // The summary is internally consistent: payloads ≤ heads ≤ rows,
+    // and with k = 2 over 2 nodes some replicas must have co-located.
+    let mut total_rows = 0usize;
+    let mut total_payloads = 0usize;
+    for sn in 0..2 {
+        for dn in 0..2 {
+            assert!(decision.dedup.payloads[sn][dn] <= decision.dedup.heads[sn][dn]);
+            assert!(decision.dedup.heads[sn][dn] <= decision.dedup.rows[sn][dn]);
+            total_rows += decision.dedup.rows[sn][dn];
+            total_payloads += decision.dedup.payloads[sn][dn];
+        }
+    }
+    let kept_total: usize =
+        decision.shards.iter().map(|(_, p)| p.kept.iter().sum::<usize>()).sum();
+    assert_eq!(total_rows, kept_total, "every kept row appears in the summary");
+    assert!(total_payloads < total_rows, "top-2 routing must co-locate some replicas");
+
+    // And the schedule pick still agrees with training under dedup.
+    let shards: Vec<Tensor> =
+        (0..4).map(|r| batch.slice_rows(r * 24, (r + 1) * 24)).collect();
+    let (_, report) = layer.forward(&shards).unwrap();
+    assert_eq!(report.comm_schedule, decision.comm.name());
+    // StepReport's expert_counts are pre-capacity demand; the summary
+    // counts kept rows only.
+    assert!(report.expert_counts.iter().sum::<usize>() >= kept_total);
 }
