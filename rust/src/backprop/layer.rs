@@ -39,6 +39,7 @@ use crate::gating::{make_gate, DispatchPlan, Gate};
 use crate::layout::{gather_expert_slices, scatter_expert_slices, RaggedLayoutBuffer};
 use crate::moe::{CommImpl, DispatchMode, MoeLayerOptions, StepReport};
 use crate::nn::{matmul_nt, matmul_tn, Ffn, FfnGrads};
+use crate::obs::trace;
 use crate::pipeline::executor::rank_expert_jobs;
 use crate::pipeline::{ExpertBank, ForwardCache, OverlapTiming, StagePlan, StepExecutor};
 use crate::tensor::Tensor;
@@ -196,9 +197,11 @@ impl TrainMoeLayer {
         }
         let d = self.cfg.d_model;
         let mut report = StepReport::default();
+        let mut step_span = trace::span("bwd_step");
 
         // ---- Combine backward: slot gradients + weighted dy scatter ----
         let s0 = Instant::now();
+        let scatter_span = trace::span("bwd_scatter");
         let mut d_weights_all: Vec<Vec<f32>> = Vec::with_capacity(w);
         let mut dbufs: Vec<Vec<f32>> = Vec::with_capacity(w);
         for rank in 0..w {
@@ -212,6 +215,7 @@ impl TrainMoeLayer {
             d_weights_all.push(dw);
             dbufs.push(dbuf);
         }
+        drop(scatter_span);
         report.wall.push(("bwd_scatter".into(), s0.elapsed().as_secs_f64() / w as f64));
 
         // ---- Backward exchanges + expert backward ----
@@ -240,6 +244,7 @@ impl TrainMoeLayer {
 
         // ---- Reverse scatter: input grads from the expert path ----
         let r0 = Instant::now();
+        let reverse_span = trace::span("bwd_reverse");
         let mut dx_shards: Vec<Tensor> = Vec::with_capacity(w);
         for rank in 0..w {
             let plan = &cache.plans[rank];
@@ -247,10 +252,12 @@ impl TrainMoeLayer {
             accumulate_input_grad(plan, &dbufs[rank], d, self.opts.dispatch, &mut dx);
             dx_shards.push(dx);
         }
+        drop(reverse_span);
         report.wall.push(("bwd_reverse".into(), r0.elapsed().as_secs_f64() / w as f64));
 
         // ---- Gate backward: scores → router weight + input grads ----
         let g0 = Instant::now();
+        let gate_span = trace::span("bwd_gate");
         for rank in 0..w {
             let ds = crate::backprop::gate::gate_backward(
                 &self.cfg.gate,
@@ -262,8 +269,14 @@ impl TrainMoeLayer {
             grads.d_gate_weight.push(matmul_tn(&shards[rank], &ds));
             dx_shards[rank].add_assign(&matmul_nt(&ds, &self.gate_weight));
         }
+        drop(gate_span);
         report.wall.push(("bwd_gate".into(), g0.elapsed().as_secs_f64() / w as f64));
 
+        step_span.arg("comm_schedule", report.comm_schedule.as_str());
+        step_span.arg("n_chunks", report.n_chunks);
+        step_span.arg("bytes_on_wire", report.bytes_on_wire);
+        step_span.arg("bytes_intra_node", report.bytes_intra_node);
+        step_span.arg("rows_deduped", report.rows_deduped);
         Ok((dx_shards, grads, report))
     }
 
@@ -309,6 +322,8 @@ impl TrainMoeLayer {
         // `dy` row once plus the slot weights, and the destination
         // leader re-applies `w · dy` — bit-identical to the source-side
         // multiply `scatter_grad` performed.
+        let mut dispatch_span = trace::span("bwd_dispatch_data");
+        dispatch_span.arg("schedule", schedule.name());
         let dispatch_wire: WireBytes = match schedule {
             Schedule::Flat => {
                 ragged_dispatch(&self.net, dbufs, &cache.kept, d, schedule)?;
@@ -325,12 +340,17 @@ impl TrainMoeLayer {
                 leg.wire
             }
         };
+        dispatch_span.arg("bytes_on_wire", dispatch_wire.inter);
+        dispatch_span.arg("bytes_intra_node", dispatch_wire.intra);
+        dispatch_span.arg("rows_deduped", rows_deduped);
+        drop(dispatch_span);
 
         // Expert backward over each contiguous gradient batch; one
         // rank's batches run on the shared pool (disjoint outputs →
         // bit-identical to serial), wall measured per rank for the
         // overlap model's compute profile. The gradient buffers have
         // the forward receive layout, so the job scan is the forward's.
+        let expert_span = trace::span("bwd_expert");
         let mut rank_wall = vec![0.0f64; w];
         for (r, buf) in dbufs.iter_mut().enumerate() {
             let jobs = rank_expert_jobs(&placement, &cache.kept, r, d);
@@ -344,6 +364,7 @@ impl TrainMoeLayer {
             }
             rank_wall[r] = x0.elapsed().as_secs_f64();
         }
+        drop(expert_span);
         report.wall.push(("bwd_expert".into(), rank_wall.iter().sum::<f64>() / w as f64));
 
         // ---- Chunked overlap on the transposed exchanges (the
@@ -371,6 +392,7 @@ impl TrainMoeLayer {
         // node's leader before the return leg (the run total lands at
         // the head row, members arrive zero — the downstream per-slot
         // accumulation performs the flat path's exact addition order).
+        let combine_span = trace::span("bwd_combine_data");
         let combine_wire: WireBytes = match schedule {
             Schedule::Flat => {
                 ragged_combine(&self.net, dbufs, &cache.kept, d, schedule)?;
@@ -384,11 +406,26 @@ impl TrainMoeLayer {
                 leg.wire
             }
         };
+        drop(combine_span);
         report.comm.push(("alltoall_combine_bwd".into(), overlap.combine_total()));
         report.bytes_on_wire = dispatch_wire.inter + combine_wire.inter;
         report.bytes_intra_node = dispatch_wire.intra + combine_wire.intra;
         report.rows_deduped = rows_deduped;
         report.apply_overlap(&overlap);
+        if trace::enabled() {
+            let at = trace::model_window(overlap.critical_path);
+            trace::model_overlap(
+                at,
+                "bwd_",
+                &overlap,
+                vec![
+                    ("schedule".into(), schedule.name().into()),
+                    ("bytes_on_wire".into(), report.bytes_on_wire.into()),
+                    ("bytes_intra_node".into(), report.bytes_intra_node.into()),
+                    ("rows_deduped".into(), rows_deduped.into()),
+                ],
+            );
+        }
         Ok(())
     }
 
@@ -432,10 +469,13 @@ impl TrainMoeLayer {
         let cap = cache.plans[0].capacity;
         report.comm_schedule = self.opts.comm_impl.name().into();
 
+        let dispatch_span = trace::span("bwd_dispatch_data");
         let timing = self.run_alltoall(dbufs)?;
+        drop(dispatch_span);
         report.comm.push(("alltoall_dispatch_bwd".into(), timing.total));
 
         let x0 = Instant::now();
+        let expert_span = trace::span("bwd_expert");
         for (r, buf) in dbufs.iter_mut().enumerate() {
             if epr == 1 {
                 // In-place fast path, mirroring the forward.
@@ -465,10 +505,13 @@ impl TrainMoeLayer {
                     ExpertGrads { dw1: fg.dw1, db1: fg.db1, dw2: fg.dw2, db2: fg.db2 };
             }
         }
+        drop(expert_span);
         let bwd_expert_wall = x0.elapsed().as_secs_f64() / w as f64;
         report.wall.push(("bwd_expert".into(), bwd_expert_wall));
 
+        let combine_span = trace::span("bwd_combine_data");
         let timing2 = self.run_alltoall(dbufs)?;
+        drop(combine_span);
         report.comm.push(("alltoall_combine_bwd".into(), timing2.total));
         // Placement-aware closed-form split, mirroring the forward's.
         let (nodes, g) = (self.cluster.nodes, self.cluster.gpus_per_node);
@@ -477,12 +520,26 @@ impl TrainMoeLayer {
         report.bytes_intra_node = 2 * nodes * g * g.saturating_sub(1) * chunk_bytes;
         // Equal-chunk exchanges are never chunked: one-chunk overlap
         // model, fully exposed.
-        report.apply_overlap(&OverlapTiming {
+        let overlap = OverlapTiming {
             dispatch: vec![timing.total],
             compute: vec![bwd_expert_wall],
             combine: vec![timing2.total],
             critical_path: timing.total + bwd_expert_wall + timing2.total,
-        });
+        };
+        report.apply_overlap(&overlap);
+        if trace::enabled() {
+            let at = trace::model_window(overlap.critical_path);
+            trace::model_overlap(
+                at,
+                "bwd_",
+                &overlap,
+                vec![
+                    ("schedule".into(), self.opts.comm_impl.name().into()),
+                    ("bytes_on_wire".into(), report.bytes_on_wire.into()),
+                    ("bytes_intra_node".into(), report.bytes_intra_node.into()),
+                ],
+            );
+        }
         Ok(())
     }
 }

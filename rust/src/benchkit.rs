@@ -31,6 +31,13 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// JSON export via the canonical schema module (see `obs::schema`),
+    /// so the `metrics` harness and any `--json` surface agree on
+    /// field names.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::obs::schema::bench_result_json(self)
+    }
+
     pub fn display(&self) -> String {
         format!(
             "{}: {} ± {} (n={})",

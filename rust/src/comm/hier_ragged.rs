@@ -71,6 +71,7 @@ use crate::comm::{CommTiming, WireBytes};
 use crate::config::ClusterConfig;
 use crate::error::Result;
 use crate::gating::DispatchPlan;
+use crate::obs::trace;
 use crate::tensor::Tensor;
 use std::collections::{HashMap, HashSet};
 
@@ -556,12 +557,14 @@ pub fn hier_ragged_dispatch(
         }
     }
     let offs = expert_offsets(kept, e);
+    let mut leg_span = trace::span("hier_dispatch_leg");
 
     // Phases 1+2 (gather at the leader, aggregate by destination node):
     // build one message block per (src node, dst node). Canonical block
     // row order: dst_local → local expert → src_local → rows of
     // (src rank, global expert) in buffer order — so the destination
     // leader's per-rank assembly reads contiguous segments.
+    let gather_span = trace::span("hier_gather_agg");
     let mut inter_bytes = 0usize;
     let mut rows_saved = 0usize;
     let mut inter_override = vec![vec![0.0f64; n]; n];
@@ -658,10 +661,12 @@ pub fn hier_ragged_dispatch(
         }
         expanded.push(per_dst);
     }
+    drop(gather_span);
 
     // Phase 4 (expansion happened above; assemble + scatter): each
     // destination rank's expert-major receive buffer reads, per local
     // expert, one contiguous segment from every source node's block.
+    let scatter_span = trace::span("hier_expand_scatter");
     let counts = rank_counts(kept, epr);
     let mut cursors = vec![vec![0usize; n]; n]; // [sn][dn] read position
     let mut out: Vec<Vec<f32>> = Vec::with_capacity(w);
@@ -686,10 +691,14 @@ pub fn hier_ragged_dispatch(
     for (b, o) in buffers.iter_mut().zip(out) {
         *b = o;
     }
+    drop(scatter_span);
 
     let timing =
         hierarchical_alltoallv_timing_with(net, &counts, d * 4, Some(&inter_override));
     let wire = hier_leg_wire_bytes(&counts, d * 4, g, Some(inter_bytes));
+    leg_span.arg("rows_saved", rows_saved);
+    leg_span.arg("bytes_inter", wire.inter);
+    leg_span.arg("bytes_intra", wire.intra);
     Ok(HierLeg { timing, wire, rows_saved })
 }
 
@@ -740,11 +749,13 @@ pub fn hier_ragged_combine(
         }
     }
     let offs = expert_offsets(kept, e); // source-side ragged row offsets
+    let mut leg_span = trace::span("hier_combine_leg");
 
     // Phases 1+2 at the *expert* side: gather each node's expert-major
     // buffers at the leader and aggregate per destination (token) node.
     // Canonical block (m → q) row order: dst_local (token rank) →
     // expert rank within m → local expert → rows of (s, ge) in order.
+    let gather_span = trace::span("hier_gather_presum");
     let mut inter_bytes = 0usize;
     let mut rows_saved = 0usize;
     let mut inter_override = vec![vec![0.0f64; n]; n]; // [m][q]
@@ -839,9 +850,11 @@ pub fn hier_ragged_combine(
         }
         expanded.push(per_dst);
     }
+    drop(gather_span);
 
     // Phase 4: the token-side leader assembles each local rank's source
     // ragged buffer from the expanded blocks and scatters it.
+    let scatter_span = trace::span("hier_expand_scatter");
     let mut cursors = vec![vec![0usize; n]; n]; // [m][q] read position (elems)
     let mut out: Vec<Vec<f32>> = Vec::with_capacity(w);
     for q in 0..n {
@@ -863,6 +876,7 @@ pub fn hier_ragged_combine(
     for (b, o) in buffers.iter_mut().zip(out) {
         *b = o;
     }
+    drop(scatter_span);
 
     // The combine leg's timing is charged on the transposed rank
     // matrix; `inter_override` is already in the (expert node → token
@@ -871,6 +885,9 @@ pub fn hier_ragged_combine(
     let timing =
         hierarchical_alltoallv_timing_with(net, &counts_t, d * 4, Some(&inter_override));
     let wire = hier_leg_wire_bytes(&counts_t, d * 4, g, Some(inter_bytes));
+    leg_span.arg("rows_saved", rows_saved);
+    leg_span.arg("bytes_inter", wire.inter);
+    leg_span.arg("bytes_intra", wire.intra);
     Ok(HierLeg { timing, wire, rows_saved })
 }
 

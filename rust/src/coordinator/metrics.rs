@@ -25,6 +25,13 @@ pub struct MetricsAgg {
     comm_exposed: f64,
     compute_exposed: f64,
     comm_hidden: f64,
+    // Per-step extremes (means average away burst regressions, so the
+    // aggregation keeps min/max too; not Welford, whose derived
+    // Default would seed min/max at 0.0).
+    critical_path_min: f64,
+    critical_path_max: f64,
+    comm_exposed_min: f64,
+    comm_exposed_max: f64,
 }
 
 impl MetricsAgg {
@@ -33,6 +40,17 @@ impl MetricsAgg {
     }
 
     pub fn push(&mut self, report: &StepReport) {
+        if self.steps == 0 {
+            self.critical_path_min = report.critical_path;
+            self.critical_path_max = report.critical_path;
+            self.comm_exposed_min = report.comm_exposed;
+            self.comm_exposed_max = report.comm_exposed;
+        } else {
+            self.critical_path_min = self.critical_path_min.min(report.critical_path);
+            self.critical_path_max = self.critical_path_max.max(report.critical_path);
+            self.comm_exposed_min = self.comm_exposed_min.min(report.comm_exposed);
+            self.comm_exposed_max = self.comm_exposed_max.max(report.comm_exposed);
+        }
         self.steps += 1;
         for (name, t) in &report.wall {
             if !self.wall.contains_key(name) {
@@ -91,7 +109,11 @@ impl MetricsAgg {
             rows_deduped: self.rows_deduped / n,
             expert_flops: self.expert_flops / n,
             critical_path: self.critical_path / n,
+            critical_path_min: self.critical_path_min,
+            critical_path_max: self.critical_path_max,
             comm_exposed: self.comm_exposed / n,
+            comm_exposed_min: self.comm_exposed_min,
+            comm_exposed_max: self.comm_exposed_max,
             compute_exposed: self.compute_exposed / n,
             comm_hidden: self.comm_hidden / n,
             overlap_efficiency: if exchange > 0.0 {
@@ -131,8 +153,17 @@ pub struct Breakdown {
     /// Mean modeled critical-path wall of the overlapped exchange/
     /// compute regions per step (see `StepReport::critical_path`).
     pub critical_path: f64,
+    /// Fastest single step's critical path (0 on an empty run).
+    pub critical_path_min: f64,
+    /// Slowest single step's critical path — a burst that the mean
+    /// averages away shows up here.
+    pub critical_path_max: f64,
     /// Mean exchange time left on the critical path per step.
     pub comm_exposed: f64,
+    /// Best single step's exposed-communication time.
+    pub comm_exposed_min: f64,
+    /// Worst single step's exposed-communication time.
+    pub comm_exposed_max: f64,
     /// Mean expert compute left on the critical path per step.
     pub compute_exposed: f64,
     /// Mean exchange time hidden under expert compute per step.
@@ -158,33 +189,11 @@ impl Breakdown {
         t / self.total
     }
 
+    /// JSON export via the canonical schema module — every consumer
+    /// (`--json` flags, the `metrics` harness, `BENCH_*.json`) sees the
+    /// same field names (see `obs::schema`).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            (
-                "phases",
-                Json::Obj(
-                    self.phases
-                        .iter()
-                        .map(|(n, t)| (n.clone(), Json::num(*t)))
-                        .collect(),
-                ),
-            ),
-            ("total", Json::num(self.total)),
-            ("drop_rate", Json::num(self.drop_rate)),
-            ("padding_waste", Json::num(self.padding_waste)),
-            ("aux_loss", Json::num(self.aux_loss)),
-            ("bytes_on_wire", Json::num(self.bytes_on_wire)),
-            ("bytes_on_wire_bwd", Json::num(self.bytes_on_wire_bwd)),
-            ("bytes_intra_node", Json::num(self.bytes_intra_node)),
-            ("bytes_intra_node_bwd", Json::num(self.bytes_intra_node_bwd)),
-            ("rows_deduped", Json::num(self.rows_deduped)),
-            ("expert_flops", Json::num(self.expert_flops)),
-            ("critical_path", Json::num(self.critical_path)),
-            ("comm_exposed", Json::num(self.comm_exposed)),
-            ("compute_exposed", Json::num(self.compute_exposed)),
-            ("comm_hidden", Json::num(self.comm_hidden)),
-            ("overlap_efficiency", Json::num(self.overlap_efficiency)),
-        ])
+        crate::obs::schema::breakdown_json(self)
     }
 }
 
@@ -246,6 +255,34 @@ mod tests {
         assert!((bd.critical_path - 1.35).abs() < 1e-12);
         // Run-level efficiency = total hidden / total exchange time.
         assert!((bd.overlap_efficiency - 0.3 / 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_max_survive_skewed_sequence() {
+        // Nine fast steps and one burst: the mean hides the burst, the
+        // max must not.
+        let mut agg = MetricsAgg::new();
+        for _ in 0..9 {
+            let mut r = report(0.1, 0.5);
+            r.critical_path = 1.0;
+            r.comm_exposed = 0.1;
+            agg.push(&r);
+        }
+        let mut burst = report(0.1, 0.5);
+        burst.critical_path = 10.0;
+        burst.comm_exposed = 4.0;
+        agg.push(&burst);
+        let b = agg.breakdown();
+        assert!((b.critical_path - 1.9).abs() < 1e-12);
+        assert_eq!(b.critical_path_min, 1.0);
+        assert_eq!(b.critical_path_max, 10.0);
+        assert!((b.comm_exposed - 0.49).abs() < 1e-12);
+        assert_eq!(b.comm_exposed_min, 0.1);
+        assert_eq!(b.comm_exposed_max, 4.0);
+        // Empty run: extremes stay at their 0.0 defaults, not ±inf.
+        let empty = MetricsAgg::new().breakdown();
+        assert_eq!(empty.critical_path_min, 0.0);
+        assert_eq!(empty.critical_path_max, 0.0);
     }
 
     #[test]

@@ -54,6 +54,7 @@ pub mod gating;
 pub mod layout;
 pub mod moe;
 pub mod nn;
+pub mod obs;
 pub mod pipeline;
 pub mod runtime;
 pub mod serve;

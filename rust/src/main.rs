@@ -7,6 +7,7 @@
 //! - `gate-stats`   — routing/load-balance diagnostics for every gate
 //! - `alltoall`     — compare flat vs hierarchical AllToAll
 //! - `serve`        — online inference serving on the simulated cluster
+//! - `metrics`      — pinned fig benches → `BENCH_<n>.json` + regression gate
 //! - `info`         — artifact + platform inventory
 
 use hetumoe::baselines::{sim_step, SystemKind, SystemProfile};
@@ -48,6 +49,7 @@ const COMMANDS: &[CommandSpec] = &[
             ("chunks", "auto|N exchange chunks for comm/compute overlap (default auto)"),
             ("dedup", "on|off top-k token dedup on the hierarchical inter-node legs (default on)"),
             ("json", "emit the run summary as JSON (flag)"),
+            ("trace-out", "write a Chrome trace of the run (open in Perfetto)"),
             ("config", "JSON config file (pjrt backend)"),
             ("model", "artifact variant (pjrt backend, default e2e)"),
             ("artifacts", "artifact directory (pjrt backend)"),
@@ -69,6 +71,7 @@ const COMMANDS: &[CommandSpec] = &[
             ("dedup", "on|off top-k token dedup on the hierarchical inter-node legs (default on)"),
             ("seed", "model/data seed (default 0)"),
             ("json", "emit the aggregated StepReport breakdown as JSON (flag)"),
+            ("trace-out", "write a Chrome trace of the run (open in Perfetto)"),
         ],
     },
     CommandSpec {
@@ -111,6 +114,19 @@ const COMMANDS: &[CommandSpec] = &[
             ("d-model", "model width (default 64)"),
             ("max-tokens", "max tokens per request (default 64)"),
             ("seed", "workload/model seed (default 0)"),
+            ("json", "emit the SLO report as JSON (flag)"),
+            ("trace-out", "write a Chrome trace of the run (open in Perfetto)"),
+        ],
+    },
+    CommandSpec {
+        name: "metrics",
+        about: "run the pinned fig benches, append BENCH_<n>.json, gate on regressions",
+        options: &[
+            ("dry-run", "run + compare, but do not write the repo-root record (flag)"),
+            ("dir", "directory holding BENCH_*.json records (default .)"),
+            ("out", "also write the record to this path (e.g. a CI artifact)"),
+            ("trace-out", "write a Chrome trace of the fig runs (open in Perfetto)"),
+            ("threshold", "fail when a wall metric exceeds previous × this (default 2.0)"),
         ],
     },
     CommandSpec { name: "info", about: "platform + artifact inventory", options: &[] },
@@ -125,6 +141,7 @@ fn main() {
         Some("gate-stats") => cmd_gate_stats(&args),
         Some("alltoall") => cmd_alltoall(&args),
         Some("serve") => cmd_serve(&args),
+        Some("metrics") => cmd_metrics(&args),
         Some("info") => cmd_info(&args),
         _ => {
             println!("hetumoe {} — MoE distributed training (HetuMoE reproduction)", hetumoe::version());
@@ -136,6 +153,26 @@ fn main() {
         eprintln!("error: {e}");
         std::process::exit(1);
     }
+}
+
+/// Start the global recorder when `--trace-out <path>` was given;
+/// returns the path to hand back to [`trace_finish`] after the run.
+fn trace_start(args: &Args) -> Option<String> {
+    let path = args.get("trace-out")?.to_string();
+    hetumoe::obs::TraceRecorder::start();
+    Some(path)
+}
+
+/// Stop the recorder and write the Chrome-trace JSON (no-op when
+/// tracing was never started). Goes to stderr so `--json` stdout stays
+/// machine-parseable.
+fn trace_finish(path: Option<String>) -> hetumoe::error::Result<()> {
+    if let Some(path) = path {
+        let trace = hetumoe::obs::TraceRecorder::stop();
+        trace.write(&path)?;
+        eprintln!("trace written to {path} (open in Perfetto or chrome://tracing)");
+    }
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> hetumoe::error::Result<()> {
@@ -197,7 +234,9 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
             trainer.cfg.opts.alltoall.name(),
         );
     }
+    let trace = trace_start(args);
     let summary = trainer.run()?;
+    trace_finish(trace)?;
     let losses = trainer.losses();
     let smooth = smoothed_losses(&losses, 0.1);
     if json {
@@ -393,7 +432,9 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
     let chunks = opts.chunks;
     let seed = args.u64_or("seed", 0)?;
     let mut coord = Coordinator::new(moe, cluster, opts, 32_000, tokens, seed)?;
+    let trace = trace_start(args);
     let summary = coord.run(steps)?;
+    trace_finish(trace)?;
     if args.has_flag("json") {
         use hetumoe::util::json::Json;
         let j = Json::obj(vec![
@@ -637,15 +678,24 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
         seed,
         ..ServeConfig::default_run()
     };
-    println!(
-        "serving {} gate on {nodes}x{gpus} GPUs | {rate:.0} req/s {workload} arrivals | \
-         comm={} | SLO {:.0} ms",
-        cfg.moe.gate.name(),
-        cfg.comm.name(),
-        slo * 1e3,
-    );
+    let json = args.has_flag("json");
+    if !json {
+        println!(
+            "serving {} gate on {nodes}x{gpus} GPUs | {rate:.0} req/s {workload} arrivals | \
+             comm={} | SLO {:.0} ms",
+            cfg.moe.gate.name(),
+            cfg.comm.name(),
+            slo * 1e3,
+        );
+    }
     let mut engine = ServeEngine::new(cfg)?;
+    let trace = trace_start(args);
     let report = engine.run()?;
+    trace_finish(trace)?;
+    if json {
+        println!("{}", report.to_json().dump());
+        return Ok(());
+    }
     report.emit();
     let (flat_n, hier_n) = engine.router.comm_decisions();
     println!("comm decisions: {flat_n} flat / {hier_n} hierarchical batches");
@@ -654,6 +704,61 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
         println!("hot experts: none (load within 1.5x of mean)");
     } else {
         println!("hot experts (>1.5x mean load): {hot:?}");
+    }
+    Ok(())
+}
+
+/// The perf-trajectory harness: run the pinned fig subset, compare
+/// against the newest committed `BENCH_<n>.json`, fail on wall
+/// regressions, and (unless `--dry-run`) append this PR's record.
+fn cmd_metrics(args: &Args) -> hetumoe::error::Result<()> {
+    use hetumoe::obs::metrics;
+    use hetumoe::util::json::Json;
+
+    let threshold = args.f64_or("threshold", metrics::DEFAULT_THRESHOLD)?;
+    let dir = std::path::PathBuf::from(args.str_or("dir", "."));
+    let trace = trace_start(args);
+    println!("running the pinned fig subset (fixed seeds and configs)...");
+    let figs = metrics::run_figs()?;
+    trace_finish(trace)?;
+    let rec = metrics::record(figs);
+
+    let regressions = match metrics::previous_bench(&dir) {
+        Some((n, path)) => {
+            let prev = Json::from_file(&path)?;
+            let rows = metrics::compare(&prev, &rec, threshold);
+            metrics::emit_comparison(&rows, &format!("BENCH_{n}.json"), threshold)
+        }
+        None => {
+            println!(
+                "no previous BENCH_*.json in {} — this record is the baseline",
+                dir.display()
+            );
+            0
+        }
+    };
+
+    if let Some(out) = args.get("out") {
+        if let Some(parent) = std::path::Path::new(out).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(out, rec.pretty())?;
+        println!("record written to {out}");
+    }
+    if regressions > 0 {
+        return Err(hetumoe::error::HetuError::Runtime(format!(
+            "{regressions} wall metric(s) regressed beyond {threshold:.2}× \
+             (see the delta table above); record NOT appended"
+        )));
+    }
+    if args.has_flag("dry-run") {
+        println!("dry run: BENCH_{}.json not written", metrics::BENCH_ID);
+    } else {
+        let dest = dir.join(format!("BENCH_{}.json", metrics::BENCH_ID));
+        std::fs::write(&dest, rec.pretty())?;
+        println!("perf record written to {}", dest.display());
     }
     Ok(())
 }

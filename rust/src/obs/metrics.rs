@@ -1,0 +1,508 @@
+//! The `metrics` perf-trajectory harness: pinned fig benches →
+//! `BENCH_<n>.json` → regression gate.
+//!
+//! Runs a fixed-seed, fixed-config subset of the fig benches (fig10
+//! ragged, fig12 overlap, fig13 hier+dedup, fig11 train, fig9 serving)
+//! and assembles one durable record — host, git revision, timestamp,
+//! per-fig walls and the model-level metrics (`comm_exposed`,
+//! `overlap_efficiency`, NIC/intra-node bytes, serving tail latencies).
+//! The record is appended at the repo root as `BENCH_<n>.json`, one per
+//! PR, following the persistent-metrics pattern of rust-analyzer's
+//! xtask. A comparator loads the previous record and fails with a
+//! per-metric delta table when any `wall*` metric regresses beyond a
+//! threshold — everything else (bytes, quantiles, losses) is
+//! informational trajectory data.
+//!
+//! All numbers here flow through the same schema module as the `--json`
+//! flags ([`crate::obs::schema`]), so field names cannot drift between
+//! the CLI surfaces and the perf history.
+
+use crate::benchkit::{bench, black_box, BenchOpts, Table};
+use crate::comm::schedule::CommChoice;
+use crate::config::{ClusterConfig, GateKind, MoeConfig};
+use crate::error::Result;
+use crate::moe::{DispatchMode, MoeLayer, MoeLayerOptions};
+use crate::obs::schema::WALL_PREFIX;
+use crate::pipeline::ChunkChoice;
+use crate::serve::{ArrivalProcess, ServeConfig, ServeEngine};
+use crate::tensor::Tensor;
+use crate::train::{NativeTrainer, TrainRunConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// This PR's ordinal — the record is written as `BENCH_<BENCH_ID>.json`.
+pub const BENCH_ID: u32 = 6;
+
+/// Version of the record layout (bump when fig entries change shape).
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Default wall-regression threshold: fail when a wall metric exceeds
+/// the previous record's by this factor. Generous on purpose — records
+/// are produced on whatever host ran the PR, so only step-function
+/// regressions (an accidentally serialized overlap loop, a dropped
+/// dedup) should trip it, not run-to-run noise. CI overrides with
+/// `--threshold` for its shared-runner variance.
+pub const DEFAULT_THRESHOLD: f64 = 2.0;
+
+/// One comparator row: a wall metric in both records.
+#[derive(Clone, Debug)]
+pub struct DeltaRow {
+    pub fig: String,
+    pub metric: String,
+    pub prev: f64,
+    pub cur: f64,
+    /// `cur / prev` (infinite when prev is 0).
+    pub ratio: f64,
+    pub regressed: bool,
+}
+
+/// Run the pinned fig subset. Each entry is `(fig name, metrics
+/// object)`; metrics whose key starts with [`WALL_PREFIX`] are
+/// regression-gated, the rest are trajectory data.
+pub fn run_figs() -> Result<Vec<(String, Json)>> {
+    Ok(vec![
+        ("fig10_ragged".into(), fig10_ragged()?),
+        ("fig12_overlap".into(), fig12_overlap()?),
+        ("fig13_hier_dedup".into(), fig13_hier_dedup()?),
+        ("fig11_train".into(), fig11_train()?),
+        ("fig9_serving".into(), fig9_serving()?),
+    ])
+}
+
+/// Fig 10 pin: padded vs ragged forward, cf 2.0, 16 experts, 2×2 GPUs,
+/// 256 tokens/rank, layer seed 42, data seed 7.
+fn fig10_ragged() -> Result<Json> {
+    let cluster = ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) };
+    let world = cluster.world();
+    let d = 64usize;
+    let cfg = MoeConfig {
+        num_experts: 16,
+        d_model: d,
+        ffn_hidden: 2 * d,
+        capacity_factor: 2.0,
+        gate: GateKind::Switch,
+    };
+    let padded = MoeLayer::native(
+        cfg.clone(),
+        cluster.clone(),
+        MoeLayerOptions { dispatch: DispatchMode::Padded, ..Default::default() },
+        42,
+    )?;
+    let ragged = MoeLayer::native(
+        cfg,
+        cluster,
+        MoeLayerOptions { dispatch: DispatchMode::Ragged, ..Default::default() },
+        42,
+    )?;
+    let mut rng = Rng::seed(7);
+    let shards: Vec<Tensor> = (0..world).map(|_| Tensor::randn(&[256, d], &mut rng)).collect();
+    let (_, rep_p) = padded.forward(&shards)?;
+    let (_, rep_r) = ragged.forward(&shards)?;
+    let opts = BenchOpts::quick();
+    let wall_p = bench("fig10 padded", &opts, || {
+        black_box(padded.forward(black_box(&shards)).unwrap());
+    });
+    let wall_r = bench("fig10 ragged", &opts, || {
+        black_box(ragged.forward(black_box(&shards)).unwrap());
+    });
+    Ok(Json::obj(vec![
+        ("wall_padded", Json::num(wall_p.median)),
+        ("wall_ragged", Json::num(wall_r.median)),
+        ("bytes_on_wire_padded", Json::num(rep_p.bytes_on_wire as f64)),
+        ("bytes_on_wire_ragged", Json::num(rep_r.bytes_on_wire as f64)),
+        (
+            "bytes_saved_frac",
+            Json::num(1.0 - rep_r.bytes_on_wire as f64 / rep_p.bytes_on_wire.max(1) as f64),
+        ),
+        ("flops_saved_frac", Json::num(1.0 - rep_r.expert_flops / rep_p.expert_flops.max(1.0))),
+    ]))
+}
+
+/// Fig 12 pin: auto-chunked overlap vs unchunked baseline — 16 experts,
+/// ffn 512, cf 2.0, 1024 tokens/rank, serial experts, auto schedule.
+fn fig12_overlap() -> Result<Json> {
+    let cluster = ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) };
+    let world = cluster.world();
+    let d = 64usize;
+    let cfg = MoeConfig {
+        num_experts: 16,
+        d_model: d,
+        ffn_hidden: 8 * d,
+        capacity_factor: 2.0,
+        gate: GateKind::Switch,
+    };
+    let layer_of = |chunks: ChunkChoice| {
+        MoeLayer::native(
+            cfg.clone(),
+            cluster.clone(),
+            MoeLayerOptions {
+                alltoall: CommChoice::Auto,
+                chunks,
+                threads: 1,
+                ..Default::default()
+            },
+            42,
+        )
+    };
+    let base = layer_of(ChunkChoice::Fixed(1))?;
+    let auto = layer_of(ChunkChoice::Auto)?;
+    let mut rng = Rng::seed(7);
+    let shards: Vec<Tensor> = (0..world).map(|_| Tensor::randn(&[1024, d], &mut rng)).collect();
+    let (_, rep_base) = base.forward(&shards)?;
+    let (_, rep) = auto.forward(&shards)?;
+    let wall = bench("fig12 auto-chunked", &BenchOpts::quick(), || {
+        black_box(auto.forward(black_box(&shards)).unwrap());
+    });
+    Ok(Json::obj(vec![
+        ("wall_step", Json::num(wall.median)),
+        ("n_chunks", Json::num(rep.n_chunks as f64)),
+        ("comm_exposed_unchunked", Json::num(rep_base.comm_exposed)),
+        ("comm_exposed", Json::num(rep.comm_exposed)),
+        ("comm_hidden", Json::num(rep.comm_hidden)),
+        ("overlap_efficiency", Json::num(rep.overlap_efficiency())),
+        ("critical_path", Json::num(rep.critical_path)),
+    ]))
+}
+
+/// Skewed batch aligned with adjacent expert pairs — the co-located-
+/// replica regime where dedup pays (fig13's construction, pinned to the
+/// GShard point).
+fn skewed_shards(gate: &Tensor, w: usize, tokens: usize, d: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::seed(seed);
+    let e = gate.row_len();
+    let centroids: Vec<Vec<f32>> = (0..3)
+        .map(|c| {
+            let (e1, e2) = ((2 * c) % e, (2 * c + 1) % e);
+            (0..d).map(|i| 3.0 * (gate.row(i)[e1] + gate.row(i)[e2])).collect()
+        })
+        .collect();
+    (0..w)
+        .map(|_| {
+            let mut x = Tensor::zeros(&[tokens, d]);
+            for t in 0..tokens {
+                let c = &centroids[t % centroids.len()];
+                for (i, v) in x.row_mut(t).iter_mut().enumerate() {
+                    *v = c[i] + 0.1 * rng.normal_f32();
+                }
+            }
+            x
+        })
+        .collect()
+}
+
+/// Fig 13 pin: flat vs hier vs hier+dedup NIC bytes on a skewed GShard
+/// (k=2) batch — 16 experts, cf 4.0, 2×2 GPUs, 128 tokens/rank.
+fn fig13_hier_dedup() -> Result<Json> {
+    let cluster = ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) };
+    let w = cluster.world();
+    let d = 64usize;
+    let cfg = MoeConfig {
+        num_experts: 16,
+        d_model: d,
+        ffn_hidden: 2 * d,
+        capacity_factor: 4.0,
+        gate: GateKind::GShard,
+    };
+    let layer_of = |alltoall: CommChoice, dedup: bool| {
+        MoeLayer::native(
+            cfg.clone(),
+            cluster.clone(),
+            MoeLayerOptions {
+                alltoall,
+                dedup,
+                chunks: ChunkChoice::Fixed(1),
+                threads: 1,
+                ..Default::default()
+            },
+            42,
+        )
+    };
+    let probe = MoeLayer::native(cfg.clone(), cluster.clone(), Default::default(), 42)?;
+    let shards = skewed_shards(&probe.gate_weight, w, 128, d, 9);
+    let flat = layer_of(CommChoice::Flat, false)?;
+    let hier = layer_of(CommChoice::Hierarchical, false)?;
+    let ded = layer_of(CommChoice::Hierarchical, true)?;
+    let (_, rep_flat) = flat.forward(&shards)?;
+    let (_, rep_hier) = hier.forward(&shards)?;
+    let (_, rep_ded) = ded.forward(&shards)?;
+    let wall = bench("fig13 hier+dedup", &BenchOpts::quick(), || {
+        black_box(ded.forward(black_box(&shards)).unwrap());
+    });
+    Ok(Json::obj(vec![
+        ("wall_step", Json::num(wall.median)),
+        ("bytes_nic_flat", Json::num(rep_flat.bytes_on_wire as f64)),
+        ("bytes_nic_hier", Json::num(rep_hier.bytes_on_wire as f64)),
+        ("bytes_nic_dedup", Json::num(rep_ded.bytes_on_wire as f64)),
+        ("bytes_intra_dedup", Json::num(rep_ded.bytes_intra_node as f64)),
+        ("rows_deduped", Json::num(rep_ded.rows_deduped as f64)),
+        ("exchange_hier", Json::num(rep_hier.comm_total())),
+        ("exchange_dedup", Json::num(rep_ded.comm_total())),
+    ]))
+}
+
+/// Fig 11 pin: 30 native training steps on the default run config.
+fn fig11_train() -> Result<Json> {
+    let mut cfg = TrainRunConfig::default_run();
+    cfg.steps = 30;
+    cfg.log_every = 0;
+    let mut trainer = NativeTrainer::new(cfg)?;
+    let t0 = Instant::now();
+    let summary = trainer.run()?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let b = &summary.breakdown;
+    Ok(Json::obj(vec![
+        ("wall_per_step", Json::num(elapsed / 30.0)),
+        ("final_loss", Json::num(summary.final_loss as f64)),
+        ("comm_exposed", Json::num(b.comm_exposed)),
+        ("comm_exposed_max", Json::num(b.comm_exposed_max)),
+        ("overlap_efficiency", Json::num(b.overlap_efficiency)),
+        ("bytes_on_wire", Json::num(b.bytes_on_wire)),
+        ("bytes_on_wire_bwd", Json::num(b.bytes_on_wire_bwd)),
+        ("bytes_intra_node", Json::num(b.bytes_intra_node)),
+        ("critical_path", Json::num(b.critical_path)),
+        ("critical_path_max", Json::num(b.critical_path_max)),
+    ]))
+}
+
+/// Fig 9 pin: serving under Poisson 2000 req/s, switch gate, auto
+/// schedule, 0.5 simulated seconds, seed 42.
+fn fig9_serving() -> Result<Json> {
+    let cfg = ServeConfig {
+        moe: MoeConfig {
+            num_experts: 16,
+            d_model: 64,
+            ffn_hidden: 128,
+            capacity_factor: 1.25,
+            gate: GateKind::Switch,
+        },
+        cluster: ClusterConfig::commodity(2),
+        process: ArrivalProcess::Poisson { rate: 2000.0 },
+        comm: CommChoice::Auto,
+        slo: 0.05,
+        duration: 0.5,
+        seed: 42,
+        ..ServeConfig::default_run()
+    };
+    let mut engine = ServeEngine::new(cfg)?;
+    let t0 = Instant::now();
+    let report = engine.run()?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut fields: Vec<(String, Json)> = vec![
+        ("wall_run".into(), Json::num(elapsed)),
+        ("completed".into(), Json::num(report.completed as f64)),
+    ];
+    fields.extend(crate::obs::schema::quantile_fields("latency", &report.latency));
+    fields.extend(crate::obs::schema::quantile_fields("latency_window", &report.latency_window));
+    fields.push(("goodput_tps".into(), Json::num(report.goodput_tps)));
+    fields.push(("drop_rate".into(), Json::num(report.drop_rate)));
+    Ok(Json::Obj(fields))
+}
+
+fn host_json() -> Json {
+    let cores =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    Json::obj(vec![
+        ("os", Json::str(std::env::consts::OS)),
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("cores", Json::num(cores as f64)),
+    ])
+}
+
+fn git_revision() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+fn unix_timestamp() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0)
+}
+
+/// Assemble the full `BENCH_<n>.json` record from the fig entries.
+pub fn record(figs: Vec<(String, Json)>) -> Json {
+    Json::obj(vec![
+        ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+        ("bench_id", Json::num(BENCH_ID as f64)),
+        ("revision", Json::str(git_revision())),
+        ("timestamp", Json::num(unix_timestamp())),
+        ("host", host_json()),
+        ("figs", Json::Obj(figs)),
+    ])
+}
+
+/// Find the newest `BENCH_<n>.json` in `dir` (highest `n`). This is
+/// the comparison baseline; on a re-run it can be this PR's own record.
+pub fn previous_bench(dir: &Path) -> Option<(u32, PathBuf)> {
+    let mut best: Option<(u32, PathBuf)> = None;
+    for entry in std::fs::read_dir(dir).ok()? {
+        let Ok(entry) = entry else { continue };
+        let path = entry.path();
+        let Some(n) = path.file_name().and_then(|s| s.to_str()).and_then(|name| {
+            name.strip_prefix("BENCH_")?.strip_suffix(".json")?.parse::<u32>().ok()
+        }) else {
+            continue;
+        };
+        if best.as_ref().is_none_or(|(b, _)| n > *b) {
+            best = Some((n, path));
+        }
+    }
+    best
+}
+
+/// Compare every wall metric present in both records. A row regresses
+/// when `cur > prev * threshold`.
+pub fn compare(prev: &Json, cur: &Json, threshold: f64) -> Vec<DeltaRow> {
+    let mut rows = Vec::new();
+    let (Some(Json::Obj(cur_figs)), Some(prev_figs)) = (cur.get("figs"), prev.get("figs")) else {
+        return rows;
+    };
+    for (fig, metrics) in cur_figs {
+        let Json::Obj(fields) = metrics else { continue };
+        let Some(prev_metrics) = prev_figs.get(fig) else { continue };
+        for (key, val) in fields {
+            if !key.starts_with(WALL_PREFIX) {
+                continue;
+            }
+            let (Some(cur_v), Some(prev_v)) =
+                (val.as_f64(), prev_metrics.get(key).and_then(Json::as_f64))
+            else {
+                continue;
+            };
+            let ratio = if prev_v > 0.0 { cur_v / prev_v } else { f64::INFINITY };
+            rows.push(DeltaRow {
+                fig: fig.clone(),
+                metric: key.clone(),
+                prev: prev_v,
+                cur: cur_v,
+                ratio,
+                regressed: cur_v > prev_v * threshold,
+            });
+        }
+    }
+    rows
+}
+
+/// Print the per-metric delta table and return the regression count.
+pub fn emit_comparison(rows: &[DeltaRow], baseline: &str, threshold: f64) -> usize {
+    use crate::util::stats::fmt_duration;
+    let mut t = Table::new(
+        &format!("Wall-time trajectory vs {baseline} (fail ratio > {threshold:.2})"),
+        &["fig", "metric", "previous", "current", "ratio", "verdict"],
+    );
+    let mut regressions = 0usize;
+    for r in rows {
+        if r.regressed {
+            regressions += 1;
+        }
+        t.row(vec![
+            r.fig.clone(),
+            r.metric.clone(),
+            fmt_duration(r.prev),
+            fmt_duration(r.cur),
+            format!("{:.2}×", r.ratio),
+            if r.regressed { "REGRESSED".into() } else { "ok".into() },
+        ]);
+    }
+    t.emit(None);
+    regressions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(figs: Vec<(&str, Vec<(&str, f64)>)>) -> Json {
+        Json::obj(vec![(
+            "figs",
+            Json::Obj(
+                figs.into_iter()
+                    .map(|(f, ms)| {
+                        (
+                            f.to_string(),
+                            Json::Obj(
+                                ms.into_iter()
+                                    .map(|(k, v)| (k.to_string(), Json::num(v)))
+                                    .collect(),
+                            ),
+                        )
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    #[test]
+    fn comparator_flags_injected_regression() {
+        let prev = rec(vec![
+            ("fig10_ragged", vec![("wall_ragged", 0.010), ("bytes_on_wire_ragged", 1000.0)]),
+            ("fig11_train", vec![("wall_per_step", 0.020)]),
+        ]);
+        // wall_ragged regresses 3×, wall_per_step improves; the bytes
+        // field is informational and must not be gated.
+        let cur = rec(vec![
+            ("fig10_ragged", vec![("wall_ragged", 0.030), ("bytes_on_wire_ragged", 9999.0)]),
+            ("fig11_train", vec![("wall_per_step", 0.010)]),
+        ]);
+        let rows = compare(&prev, &cur, DEFAULT_THRESHOLD);
+        assert_eq!(rows.len(), 2);
+        let bad = rows.iter().find(|r| r.metric == "wall_ragged").unwrap();
+        assert!(bad.regressed);
+        assert!((bad.ratio - 3.0).abs() < 1e-12);
+        let good = rows.iter().find(|r| r.metric == "wall_per_step").unwrap();
+        assert!(!good.regressed);
+        assert_eq!(rows.iter().filter(|r| r.regressed).count(), 1);
+    }
+
+    #[test]
+    fn comparator_tolerates_missing_and_new_figs() {
+        let prev = rec(vec![("fig10_ragged", vec![("wall_ragged", 0.010)])]);
+        let cur = rec(vec![
+            ("fig10_ragged", vec![("wall_ragged", 0.011), ("wall_new_metric", 5.0)]),
+            ("fig99_future", vec![("wall_x", 1.0)]),
+        ]);
+        // Only metrics present in BOTH records produce rows: new figs
+        // and new walls establish their baseline silently.
+        let rows = compare(&prev, &cur, DEFAULT_THRESHOLD);
+        assert_eq!(rows.len(), 1);
+        assert!(!rows[0].regressed);
+    }
+
+    #[test]
+    fn previous_bench_picks_highest_ordinal() {
+        let dir = std::env::temp_dir()
+            .join(format!("hetumoe-bench-scan-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ["BENCH_2.json", "BENCH_10.json", "BENCH_bad.json", "notes.txt"] {
+            std::fs::write(dir.join(name), "{}").unwrap();
+        }
+        let (n, path) = previous_bench(&dir).unwrap();
+        assert_eq!(n, 10);
+        assert!(path.ends_with("BENCH_10.json"));
+        std::fs::remove_dir_all(&dir).unwrap();
+        assert!(previous_bench(Path::new("/nonexistent-hetumoe")).is_none());
+    }
+
+    #[test]
+    fn record_shape_is_stable() {
+        let figs = vec![("fig10_ragged".to_string(), Json::obj(vec![("wall_x", Json::num(1.0))]))];
+        let r = record(figs);
+        assert_eq!(r.f64_field("schema_version").unwrap(), SCHEMA_VERSION as f64);
+        assert_eq!(r.f64_field("bench_id").unwrap(), BENCH_ID as f64);
+        assert!(r.get("revision").is_some());
+        assert!(r.get("timestamp").is_some());
+        assert!(r.get("host").unwrap().get("cores").is_some());
+        assert!(r.get("figs").unwrap().get("fig10_ragged").is_some());
+        // Round-trips through the hand-rolled parser.
+        assert_eq!(Json::parse(&r.pretty()).unwrap(), r);
+    }
+}

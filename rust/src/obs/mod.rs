@@ -1,0 +1,24 @@
+//! Observability: step-level tracing and the durable perf trajectory.
+//!
+//! Two halves (DESIGN.md §12):
+//!
+//! - [`trace`] — a zero-dependency [`trace::TraceRecorder`] of nested
+//!   spans that the step executor, the chunked overlap engine, the
+//!   hierarchical exchange phases, the backward legs and the serving
+//!   engine emit into, exported as Chrome trace-event JSON (loadable in
+//!   Perfetto via `--trace-out`). Off by default; when disabled every
+//!   emission site reduces to one relaxed atomic load, and enabling it
+//!   is purely observational — outputs and gradients are bit-identical
+//!   (property-tested in `tests/trace_neutrality.rs`).
+//! - [`metrics`] — the `metrics` CLI harness: pinned fig benches →
+//!   `BENCH_<n>.json` at the repo root → wall-time regression gate
+//!   against the previous record.
+//!
+//! [`schema`] is the shared JSON vocabulary both halves and every
+//! `--json` flag emit through.
+
+pub mod metrics;
+pub mod schema;
+pub mod trace;
+
+pub use trace::{ModelLane, Trace, TraceRecorder};

@@ -1,0 +1,212 @@
+//! The single JSON schema behind every machine-readable surface.
+//!
+//! Before this module, three hand-rolled emission paths could drift:
+//! `Breakdown::to_json` (consumed by `train --json` and
+//! `layer-bench --json`), `SloReport::to_json` (`serve --json`) and the
+//! ad-hoc objects the bench harness wrote. All of them now delegate
+//! here, and the `metrics` perf-trajectory records
+//! ([`crate::obs::metrics`]) are built from the same emitters — so a
+//! field renamed in one place renames everywhere, and the key-list
+//! constants below let tests pin the schema (see DESIGN.md §12 for the
+//! documented layout).
+
+use crate::benchkit::BenchResult;
+use crate::coordinator::metrics::Breakdown;
+use crate::serve::slo::SloReport;
+use crate::util::json::Json;
+use crate::util::stats::Quantiles;
+
+/// Keys of a breakdown object, in emission order.
+pub const BREAKDOWN_KEYS: &[&str] = &[
+    "phases",
+    "total",
+    "drop_rate",
+    "padding_waste",
+    "aux_loss",
+    "bytes_on_wire",
+    "bytes_on_wire_bwd",
+    "bytes_intra_node",
+    "bytes_intra_node_bwd",
+    "rows_deduped",
+    "expert_flops",
+    "critical_path",
+    "critical_path_min",
+    "critical_path_max",
+    "comm_exposed",
+    "comm_exposed_min",
+    "comm_exposed_max",
+    "compute_exposed",
+    "comm_hidden",
+    "overlap_efficiency",
+];
+
+/// Keys of a serving SLO report object, in emission order.
+pub const SLO_KEYS: &[&str] = &[
+    "duration",
+    "offered",
+    "completed",
+    "dropped",
+    "rejected",
+    "slo_violations",
+    "latency_p50",
+    "latency_p95",
+    "latency_p99",
+    "latency_window_p50",
+    "latency_window_p95",
+    "latency_window_p99",
+    "latency_window_len",
+    "mean_latency",
+    "goodput_rps",
+    "goodput_tps",
+    "drop_rate",
+    "mean_queue_depth",
+    "max_queue_depth",
+    "breakdown",
+];
+
+/// Keys of one bench-harness result object.
+pub const BENCH_RESULT_KEYS: &[&str] = &["name", "median", "mad", "mean", "p90", "iters"];
+
+/// Wall metrics in `BENCH_*.json` fig entries start with this prefix;
+/// the regression comparator gates on exactly these keys (everything
+/// else — bytes, quantiles, losses — is informational).
+pub const WALL_PREFIX: &str = "wall";
+
+/// `{prefix}_p50/_p95/_p99` fields of a latency distribution.
+pub fn quantile_fields(prefix: &str, q: &Quantiles) -> Vec<(String, Json)> {
+    vec![
+        (format!("{prefix}_p50"), Json::num(q.p50)),
+        (format!("{prefix}_p95"), Json::num(q.p95)),
+        (format!("{prefix}_p99"), Json::num(q.p99)),
+    ]
+}
+
+/// The canonical breakdown object ([`Breakdown::to_json`] delegates
+/// here).
+pub fn breakdown_json(b: &Breakdown) -> Json {
+    Json::obj(vec![
+        (
+            "phases",
+            Json::Obj(b.phases.iter().map(|(n, t)| (n.clone(), Json::num(*t))).collect()),
+        ),
+        ("total", Json::num(b.total)),
+        ("drop_rate", Json::num(b.drop_rate)),
+        ("padding_waste", Json::num(b.padding_waste)),
+        ("aux_loss", Json::num(b.aux_loss)),
+        ("bytes_on_wire", Json::num(b.bytes_on_wire)),
+        ("bytes_on_wire_bwd", Json::num(b.bytes_on_wire_bwd)),
+        ("bytes_intra_node", Json::num(b.bytes_intra_node)),
+        ("bytes_intra_node_bwd", Json::num(b.bytes_intra_node_bwd)),
+        ("rows_deduped", Json::num(b.rows_deduped)),
+        ("expert_flops", Json::num(b.expert_flops)),
+        ("critical_path", Json::num(b.critical_path)),
+        ("critical_path_min", Json::num(b.critical_path_min)),
+        ("critical_path_max", Json::num(b.critical_path_max)),
+        ("comm_exposed", Json::num(b.comm_exposed)),
+        ("comm_exposed_min", Json::num(b.comm_exposed_min)),
+        ("comm_exposed_max", Json::num(b.comm_exposed_max)),
+        ("compute_exposed", Json::num(b.compute_exposed)),
+        ("comm_hidden", Json::num(b.comm_hidden)),
+        ("overlap_efficiency", Json::num(b.overlap_efficiency)),
+    ])
+}
+
+/// The canonical serving report object ([`SloReport::to_json`]
+/// delegates here).
+pub fn slo_json(r: &SloReport) -> Json {
+    let mut fields: Vec<(String, Json)> = vec![
+        ("duration".into(), Json::num(r.duration)),
+        ("offered".into(), Json::num(r.offered as f64)),
+        ("completed".into(), Json::num(r.completed as f64)),
+        ("dropped".into(), Json::num(r.dropped as f64)),
+        ("rejected".into(), Json::num(r.rejected as f64)),
+        ("slo_violations".into(), Json::num(r.slo_violations as f64)),
+    ];
+    fields.extend(quantile_fields("latency", &r.latency));
+    fields.extend(quantile_fields("latency_window", &r.latency_window));
+    fields.push(("latency_window_len".into(), Json::num(r.latency_window_len as f64)));
+    fields.push(("mean_latency".into(), Json::num(r.mean_latency)));
+    fields.push(("goodput_rps".into(), Json::num(r.goodput_rps)));
+    fields.push(("goodput_tps".into(), Json::num(r.goodput_tps)));
+    fields.push(("drop_rate".into(), Json::num(r.drop_rate)));
+    fields.push(("mean_queue_depth".into(), Json::num(r.mean_queue_depth)));
+    fields.push(("max_queue_depth".into(), Json::num(r.max_queue_depth)));
+    fields.push(("breakdown".into(), r.breakdown.to_json()));
+    Json::Obj(fields)
+}
+
+/// The canonical bench-harness result object ([`BenchResult::to_json`]
+/// delegates here).
+pub fn bench_result_json(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&r.name)),
+        ("median", Json::num(r.median)),
+        ("mad", Json::num(r.mad)),
+        ("mean", Json::num(r.mean)),
+        ("p90", Json::num(r.p90)),
+        ("iters", Json::num(r.iters as f64)),
+    ])
+}
+
+fn keys_of(j: &Json) -> Vec<String> {
+    match j {
+        Json::Obj(fields) => fields.iter().map(|(k, _)| k.clone()).collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// Assert an emitted object carries exactly the pinned key list (used
+/// by the drift tests here and in the consumer modules).
+pub fn assert_keys(j: &Json, expect: &[&str]) {
+    let got = keys_of(j);
+    assert_eq!(got, expect.to_vec(), "schema drift: emitted keys diverge from the pin");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::MetricsAgg;
+    use crate::moe::StepReport;
+
+    #[test]
+    fn breakdown_emission_matches_pinned_keys() {
+        let mut agg = MetricsAgg::new();
+        agg.push(&StepReport {
+            wall: vec![("gate".into(), 0.1)],
+            comm: vec![("alltoall_dispatch".into(), 0.2)],
+            ..Default::default()
+        });
+        assert_keys(&agg.breakdown().to_json(), BREAKDOWN_KEYS);
+    }
+
+    #[test]
+    fn slo_emission_matches_pinned_keys() {
+        use crate::serve::slo::SloTracker;
+        let r = SloTracker::new().report(1.0);
+        let j = r.to_json();
+        assert_keys(&j, SLO_KEYS);
+        // The nested breakdown rides the same schema.
+        assert_keys(j.get("breakdown").unwrap(), BREAKDOWN_KEYS);
+    }
+
+    #[test]
+    fn bench_result_emission_matches_pinned_keys() {
+        let r = BenchResult {
+            name: "x".into(),
+            median: 1.0,
+            mad: 0.1,
+            mean: 1.1,
+            p90: 1.2,
+            iters: 10,
+        };
+        assert_keys(&r.to_json(), BENCH_RESULT_KEYS);
+    }
+
+    #[test]
+    fn quantile_fields_follow_the_prefix() {
+        let q = Quantiles { p50: 1.0, p90: 2.0, p95: 3.0, p99: 4.0 };
+        let f = quantile_fields("latency", &q);
+        assert_eq!(f[0].0, "latency_p50");
+        assert_eq!(f[2].0, "latency_p99");
+    }
+}

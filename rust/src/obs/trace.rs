@@ -1,0 +1,564 @@
+//! Zero-dependency step-level tracing: nested spans on per-thread
+//! lanes, exported as Chrome trace-event JSON (loadable in Perfetto or
+//! `chrome://tracing`).
+//!
+//! Recording is **off by default** and purely observational: spans read
+//! clocks and copy already-computed numbers, never data buffers, so
+//! enabled and disabled runs are bit-identical in outputs, gradients
+//! and every [`crate::moe::StepReport`] field (property-tested in
+//! `tests/trace_neutrality.rs`). When disabled, [`span`] is one relaxed
+//! atomic load returning an inert guard — the hot loop pays ~nothing.
+//!
+//! Two clock domains, exported as two Chrome processes:
+//!
+//! - **pid 1 (measured)** — wall-clock spans from `Instant` around the
+//!   real stages (gate, layout, exchange data paths, expert batches,
+//!   reverse layout, the backward legs). One lane (`tid`) per OS
+//!   thread; guards are scope-ordered, so same-lane spans always nest.
+//! - **pid 2 (modeled)** — the overlap engine's simulated timeline: the
+//!   per-chunk `dispatch → expert → combine` schedule reconstructed
+//!   from [`OverlapTiming::chunk_timeline`], laid out on a `net` lane
+//!   and an `expert` lane per thread. Consecutive steps occupy
+//!   consecutive windows (a per-thread modeled-clock cursor), so a
+//!   whole training run reads as a contiguous timeline.
+//!
+//! Span args carry the step's accounting — `bytes_on_wire`,
+//! `bytes_intra_node`, `rows_deduped`, the schedule and chunk picks —
+//! so a Perfetto click answers "why was this step slow".
+
+use crate::error::Result;
+use crate::pipeline::OverlapTiming;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU32, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Chrome process id of the measured (wall-clock) lanes.
+pub const PID_MEASURED: u32 = 1;
+/// Chrome process id of the modeled (overlap-timeline) lanes.
+pub const PID_MODELED: u32 = 2;
+
+/// Recorded-event cap: a backstop so tracing a long bench loop cannot
+/// exhaust memory. Events past the cap are counted, not stored.
+pub const MAX_EVENTS: usize = 100_000;
+
+/// One span argument value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceVal {
+    Num(f64),
+    Str(String),
+}
+
+impl From<f64> for TraceVal {
+    fn from(v: f64) -> Self {
+        TraceVal::Num(v)
+    }
+}
+
+impl From<usize> for TraceVal {
+    fn from(v: usize) -> Self {
+        TraceVal::Num(v as f64)
+    }
+}
+
+impl From<&str> for TraceVal {
+    fn from(v: &str) -> Self {
+        TraceVal::Str(v.to_string())
+    }
+}
+
+impl From<String> for TraceVal {
+    fn from(v: String) -> Self {
+        TraceVal::Str(v)
+    }
+}
+
+/// One complete span ("X" phase in the Chrome trace-event format).
+/// Times are seconds: from the recorder epoch on measured lanes, from
+/// the modeled-clock origin on modeled lanes.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: String,
+    pub pid: u32,
+    pub tid: u32,
+    pub ts: f64,
+    pub dur: f64,
+    pub args: Vec<(String, TraceVal)>,
+}
+
+struct RecorderState {
+    events: Vec<TraceEvent>,
+    /// Per-thread modeled-clock cursors: `(thread ordinal, seconds)`.
+    cursors: Vec<(u32, f64)>,
+    dropped: usize,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static OPEN_SPANS: AtomicI64 = AtomicI64::new(0);
+static STATE: Mutex<RecorderState> =
+    Mutex::new(RecorderState { events: Vec::new(), cursors: Vec::new(), dropped: 0 });
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_THREAD: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    static THREAD_ORD: u32 = NEXT_THREAD.fetch_add(1, Ordering::Relaxed);
+}
+
+fn thread_ord() -> u32 {
+    THREAD_ORD.with(|t| *t)
+}
+
+fn now_s() -> f64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Is recording on? One relaxed load — the entire disabled-path cost.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Spans begun but not yet ended (0 whenever all guards have dropped —
+/// the "every begin has an end" property the tests assert).
+pub fn open_spans() -> i64 {
+    OPEN_SPANS.load(Ordering::Relaxed)
+}
+
+fn push_event(ev: TraceEvent) {
+    let mut st = STATE.lock().unwrap();
+    if st.events.len() >= MAX_EVENTS {
+        st.dropped += 1;
+    } else {
+        st.events.push(ev);
+    }
+}
+
+/// The process-global recorder. All methods are associated functions:
+/// there is exactly one recorder, matching the one process the
+/// simulated cluster runs in.
+pub struct TraceRecorder;
+
+impl TraceRecorder {
+    /// Enable recording, clearing any previously captured events.
+    pub fn start() {
+        let _ = EPOCH.get_or_init(Instant::now);
+        let mut st = STATE.lock().unwrap();
+        st.events.clear();
+        st.cursors.clear();
+        st.dropped = 0;
+        OPEN_SPANS.store(0, Ordering::Relaxed);
+        ENABLED.store(true, Ordering::Relaxed);
+    }
+
+    /// Disable recording and drain the captured trace. Measured-lane
+    /// timestamps are re-based so the earliest measured span starts at
+    /// zero.
+    pub fn stop() -> Trace {
+        ENABLED.store(false, Ordering::Relaxed);
+        let mut st = STATE.lock().unwrap();
+        let mut events = std::mem::take(&mut st.events);
+        let dropped = std::mem::take(&mut st.dropped);
+        st.cursors.clear();
+        drop(st);
+        let t0 = events
+            .iter()
+            .filter(|e| e.pid == PID_MEASURED)
+            .map(|e| e.ts)
+            .fold(f64::INFINITY, f64::min);
+        if t0.is_finite() {
+            for e in events.iter_mut().filter(|e| e.pid == PID_MEASURED) {
+                e.ts -= t0;
+            }
+        }
+        Trace { events, dropped }
+    }
+}
+
+/// Guard of one measured span on the calling thread's lane. Inert (and
+/// allocation-free) when recording is disabled. Dropping the guard ends
+/// the span; Rust scoping makes same-lane spans nest by construction.
+pub struct SpanGuard {
+    info: Option<SpanInfo>,
+}
+
+struct SpanInfo {
+    name: String,
+    tid: u32,
+    start: f64,
+    args: Vec<(String, TraceVal)>,
+}
+
+/// Begin a measured span (ends when the guard drops).
+pub fn span(name: &str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { info: None };
+    }
+    OPEN_SPANS.fetch_add(1, Ordering::Relaxed);
+    SpanGuard {
+        info: Some(SpanInfo {
+            name: name.to_string(),
+            tid: thread_ord(),
+            start: now_s(),
+            args: Vec::new(),
+        }),
+    }
+}
+
+impl SpanGuard {
+    /// Attach an argument (visible in Perfetto's span details). No-op
+    /// on an inert guard.
+    pub fn arg(&mut self, key: &str, val: impl Into<TraceVal>) {
+        if let Some(info) = &mut self.info {
+            info.args.push((key.to_string(), val.into()));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(info) = self.info.take() {
+            let dur = now_s() - info.start;
+            OPEN_SPANS.fetch_sub(1, Ordering::Relaxed);
+            // The recorder may have stopped mid-span; the begin is
+            // still balanced above, the event is simply not kept.
+            if enabled() {
+                push_event(TraceEvent {
+                    name: info.name,
+                    pid: PID_MEASURED,
+                    tid: info.tid,
+                    ts: info.start,
+                    dur,
+                    args: info.args,
+                });
+            }
+        }
+    }
+}
+
+/// Modeled-timeline lane of one event (two lanes per thread, mirroring
+/// the overlap model's two serialized resources).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelLane {
+    Net,
+    Expert,
+}
+
+fn model_tid(lane: ModelLane) -> u32 {
+    let base = thread_ord() * 2;
+    match lane {
+        ModelLane::Net => base,
+        ModelLane::Expert => base + 1,
+    }
+}
+
+/// Reserve a window of `dur` modeled seconds on this thread's modeled
+/// timeline and return its start time. Consecutive calls lay windows
+/// out back-to-back, so the modeled lanes read as one contiguous run.
+/// Returns 0.0 (and reserves nothing) when recording is disabled.
+pub fn model_window(dur: f64) -> f64 {
+    if !enabled() {
+        return 0.0;
+    }
+    let tid = thread_ord();
+    let mut st = STATE.lock().unwrap();
+    if let Some((_, cursor)) = st.cursors.iter_mut().find(|(t, _)| *t == tid) {
+        let at = *cursor;
+        *cursor += dur;
+        at
+    } else {
+        st.cursors.push((tid, dur));
+        0.0
+    }
+}
+
+/// Emit one modeled event at absolute modeled time `start` (obtained
+/// from [`model_window`]). No-op when recording is disabled.
+pub fn model_event(
+    lane: ModelLane,
+    name: &str,
+    start: f64,
+    dur: f64,
+    args: Vec<(String, TraceVal)>,
+) {
+    if !enabled() {
+        return;
+    }
+    push_event(TraceEvent {
+        name: name.to_string(),
+        pid: PID_MODELED,
+        tid: model_tid(lane),
+        ts: start,
+        dur,
+        args,
+    });
+}
+
+/// Emit the per-chunk timeline of one overlapped exchange region
+/// starting at modeled time `at`: a `{prefix}exchange` container span
+/// on the net lane carrying `args`, per-chunk `dispatch.c`/`combine.c`
+/// spans inside it, and per-chunk `expert.c` spans on the expert lane —
+/// all placed by [`OverlapTiming::chunk_timeline`], i.e. by exactly the
+/// resource model that produced `critical_path`. No-op when disabled.
+pub fn model_overlap(
+    at: f64,
+    prefix: &str,
+    overlap: &OverlapTiming,
+    mut args: Vec<(String, TraceVal)>,
+) {
+    if !enabled() {
+        return;
+    }
+    args.push(("n_chunks".into(), overlap.n_chunks().into()));
+    model_event(
+        ModelLane::Net,
+        &format!("{prefix}exchange"),
+        at,
+        overlap.critical_path,
+        args,
+    );
+    for (c, (d_start, e_start, c_start)) in
+        overlap.chunk_timeline().into_iter().enumerate()
+    {
+        model_event(
+            ModelLane::Net,
+            &format!("{prefix}dispatch.{c}"),
+            at + d_start,
+            overlap.dispatch[c],
+            Vec::new(),
+        );
+        model_event(
+            ModelLane::Expert,
+            &format!("{prefix}expert.{c}"),
+            at + e_start,
+            overlap.compute[c],
+            Vec::new(),
+        );
+        model_event(
+            ModelLane::Net,
+            &format!("{prefix}combine.{c}"),
+            at + c_start,
+            overlap.combine[c],
+            Vec::new(),
+        );
+    }
+}
+
+/// A drained trace, ready for export.
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    /// Events discarded past [`MAX_EVENTS`].
+    pub dropped: usize,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Export as a Chrome trace-event JSON object (`traceEvents` array
+    /// of complete "X" events plus process/thread metadata; `ts`/`dur`
+    /// in microseconds as the format requires).
+    pub fn to_chrome_json(&self) -> Json {
+        let mut evs: Vec<Json> = Vec::with_capacity(self.events.len() + 8);
+        let meta = |name: &str, pid: u32, tid: Option<u32>, label: String| {
+            let mut fields = vec![
+                ("name", Json::str(name)),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(pid as f64)),
+            ];
+            if let Some(t) = tid {
+                fields.push(("tid", Json::num(t as f64)));
+            }
+            fields.push(("args", Json::obj(vec![("name", Json::str(&label))])));
+            Json::obj(fields)
+        };
+        let mut lanes: Vec<(u32, u32)> = self.events.iter().map(|e| (e.pid, e.tid)).collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        if lanes.iter().any(|&(p, _)| p == PID_MEASURED) {
+            evs.push(meta("process_name", PID_MEASURED, None, "measured (wall clock)".into()));
+        }
+        if lanes.iter().any(|&(p, _)| p == PID_MODELED) {
+            evs.push(meta(
+                "process_name",
+                PID_MODELED,
+                None,
+                "modeled (overlap timeline)".into(),
+            ));
+        }
+        for &(pid, tid) in &lanes {
+            let label = if pid == PID_MEASURED {
+                format!("host-{tid}")
+            } else if tid % 2 == 0 {
+                format!("net-{}", tid / 2)
+            } else {
+                format!("expert-{}", tid / 2)
+            };
+            evs.push(meta("thread_name", pid, Some(tid), label));
+        }
+        for e in &self.events {
+            evs.push(Json::obj(vec![
+                ("name", Json::str(&e.name)),
+                (
+                    "cat",
+                    Json::str(if e.pid == PID_MEASURED { "measured" } else { "modeled" }),
+                ),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(e.pid as f64)),
+                ("tid", Json::num(e.tid as f64)),
+                ("ts", Json::num(e.ts * 1e6)),
+                ("dur", Json::num(e.dur * 1e6)),
+                (
+                    "args",
+                    Json::Obj(
+                        e.args
+                            .iter()
+                            .map(|(k, v)| {
+                                let j = match v {
+                                    TraceVal::Num(x) => Json::num(*x),
+                                    TraceVal::Str(s) => Json::str(s),
+                                };
+                                (k.clone(), j)
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]));
+        }
+        let mut top = vec![
+            ("traceEvents", Json::Arr(evs)),
+            ("displayTimeUnit", Json::str("ms")),
+        ];
+        if self.dropped > 0 {
+            top.push(("droppedEvents", Json::num(self.dropped as f64)));
+        }
+        Json::obj(top)
+    }
+
+    /// Write the Chrome-trace JSON to `path`.
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_chrome_json().pretty()).map_err(|e| {
+            crate::error::HetuError::Runtime(format!("writing trace {path}: {e}"))
+        })
+    }
+
+    /// Check that spans nest on every lane: sorted by start (ties:
+    /// longest first), each span must either be disjoint from or fully
+    /// contained in the enclosing one — partial overlap is an error.
+    pub fn check_nesting(&self) -> std::result::Result<(), String> {
+        const EPS: f64 = 1e-9;
+        let mut lanes: Vec<(u32, u32)> = self.events.iter().map(|e| (e.pid, e.tid)).collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        for (pid, tid) in lanes {
+            let mut spans: Vec<&TraceEvent> = self
+                .events
+                .iter()
+                .filter(|e| e.pid == pid && e.tid == tid)
+                .collect();
+            spans.sort_by(|a, b| {
+                a.ts.partial_cmp(&b.ts)
+                    .unwrap()
+                    .then(b.dur.partial_cmp(&a.dur).unwrap())
+            });
+            let mut stack: Vec<(f64, String)> = Vec::new();
+            for s in spans {
+                let end = s.ts + s.dur;
+                while let Some((top_end, _)) = stack.last() {
+                    if *top_end <= s.ts + EPS {
+                        stack.pop();
+                    } else {
+                        break;
+                    }
+                }
+                if let Some((top_end, top_name)) = stack.last() {
+                    if end > *top_end + EPS {
+                        return Err(format!(
+                            "lane ({pid},{tid}): span '{}' [{:.9}, {:.9}] partially \
+                             overlaps enclosing '{top_name}' ending {top_end:.9}",
+                            s.name, s.ts, end
+                        ));
+                    }
+                }
+                stack.push((end, s.name.clone()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Only tests that leave the recorder DISABLED may live in this
+    // binary: the lib unit tests run in parallel, and any concurrent
+    // test exercising an instrumented path would pollute the global
+    // event buffer. Tests that enable the recorder run serialized in
+    // the `tests/trace_neutrality.rs` integration binary.
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        assert!(!enabled());
+        {
+            let mut g = span("never-recorded");
+            g.arg("x", 1.0);
+        }
+        assert_eq!(open_spans(), 0);
+        assert_eq!(model_window(1.0), 0.0);
+        model_event(ModelLane::Net, "nope", 0.0, 1.0, Vec::new());
+    }
+
+    #[test]
+    fn nesting_check_rejects_partial_overlap() {
+        let bad = Trace {
+            events: vec![
+                TraceEvent {
+                    name: "a".into(),
+                    pid: 1,
+                    tid: 0,
+                    ts: 0.0,
+                    dur: 1.0,
+                    args: vec![],
+                },
+                TraceEvent {
+                    name: "b".into(),
+                    pid: 1,
+                    tid: 0,
+                    ts: 0.5,
+                    dur: 1.0,
+                    args: vec![],
+                },
+            ],
+            dropped: 0,
+        };
+        assert!(bad.check_nesting().is_err());
+        // Same intervals on different lanes are fine.
+        let ok = Trace {
+            events: vec![
+                TraceEvent {
+                    name: "a".into(),
+                    pid: 1,
+                    tid: 0,
+                    ts: 0.0,
+                    dur: 1.0,
+                    args: vec![],
+                },
+                TraceEvent {
+                    name: "b".into(),
+                    pid: 1,
+                    tid: 1,
+                    ts: 0.5,
+                    dur: 1.0,
+                    args: vec![],
+                },
+            ],
+            dropped: 0,
+        };
+        ok.check_nesting().unwrap();
+    }
+}

@@ -50,6 +50,7 @@ use crate::moe::expert::ExpertExecutor;
 use crate::moe::layer::dense_einsum_layout;
 use crate::moe::{CommImpl, DispatchMode, LayoutImpl, MoeLayerOptions, StepReport};
 use crate::nn::{matmul, Ffn, FfnCache};
+use crate::obs::trace;
 use crate::pipeline::{OverlapTiming, StagePlan};
 use crate::tensor::Tensor;
 use crate::util::threadpool;
@@ -189,9 +190,11 @@ impl<'a> StepExecutor<'a> {
         let cap = self.cfg.capacity(local_tokens);
         let mut report = StepReport::default();
         let mut expert_counts = vec![0usize; self.cfg.num_experts];
+        let mut step_span = trace::span("step");
 
         // ---- StageGate: scores, routing, capacity plan per rank ----
         let g0 = Instant::now();
+        let gate_span = trace::span("gate");
         let mut scores_all = Vec::with_capacity(w);
         let mut routings = Vec::with_capacity(w);
         let mut plans: Vec<DispatchPlan> = Vec::with_capacity(w);
@@ -211,6 +214,7 @@ impl<'a> StepExecutor<'a> {
             routings.push(routing);
             plans.push(plan);
         }
+        drop(gate_span);
         report.wall.push(("gate".into(), g0.elapsed().as_secs_f64() / w as f64));
         report.expert_counts = expert_counts;
 
@@ -223,6 +227,11 @@ impl<'a> StepExecutor<'a> {
                 self.run_padded(shards, &plans, collect_cache, &mut report)?
             }
         };
+        step_span.arg("comm_schedule", report.comm_schedule.as_str());
+        step_span.arg("n_chunks", report.n_chunks);
+        step_span.arg("bytes_on_wire", report.bytes_on_wire);
+        step_span.arg("bytes_intra_node", report.bytes_intra_node);
+        step_span.arg("rows_deduped", report.rows_deduped);
 
         let cache = if collect_cache {
             Some(ForwardCache {
@@ -256,11 +265,13 @@ impl<'a> StepExecutor<'a> {
 
         // ---- StageLayout: ragged (occupied rows only, no zero-fill) ----
         let l0 = Instant::now();
+        let layout_span = trace::span("layout");
         let buffers: Vec<RaggedLayoutBuffer> = shards
             .iter()
             .zip(plans)
             .map(|(shard, plan)| ragged_layout(shard, plan, self.opts.threads))
             .collect();
+        drop(layout_span);
         report.wall.push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
 
         // ---- Schedule selection: the decision procedure shared with
@@ -293,6 +304,8 @@ impl<'a> StepExecutor<'a> {
         let mut flat: Vec<Vec<f32>> =
             buffers.into_iter().map(|b| b.data.into_vec()).collect();
         let mut rows_deduped = 0usize;
+        let mut dispatch_span = trace::span("dispatch_data");
+        dispatch_span.arg("schedule", schedule.name());
         let dispatch_wire: WireBytes = match schedule {
             Schedule::Flat => {
                 ragged_dispatch(self.net, &mut flat, kept, d, schedule)?;
@@ -314,12 +327,17 @@ impl<'a> StepExecutor<'a> {
                 leg.wire
             }
         };
+        dispatch_span.arg("bytes_on_wire", dispatch_wire.inter);
+        dispatch_span.arg("bytes_intra_node", dispatch_wire.intra);
+        dispatch_span.arg("rows_deduped", rows_deduped);
+        drop(dispatch_span);
 
         // ---- StageExpert: grouped per-expert batches, wall measured
         // per destination rank (the overlap model's compute profile) ----
         let mut expert_caches: Vec<Option<FfnCache>> = Vec::new();
         expert_caches.resize_with(self.cfg.num_experts, || None);
         let mut rank_wall = vec![0.0f64; w];
+        let expert_span = trace::span("expert");
         for (r, buf) in flat.iter_mut().enumerate() {
             let jobs = rank_expert_jobs(&placement, kept, r, d);
             let x0 = Instant::now();
@@ -333,6 +351,7 @@ impl<'a> StepExecutor<'a> {
             }
             rank_wall[r] = x0.elapsed().as_secs_f64();
         }
+        drop(expert_span);
         report.wall.push(("expert".into(), rank_wall.iter().sum::<f64>() / w as f64));
 
         // ---- Overlap model (the StagePlan's chunk half): chunk count
@@ -357,6 +376,7 @@ impl<'a> StepExecutor<'a> {
         // The forward return carries distinct per-slot expert outputs
         // (the combine-weight gradient needs them token-side), so it is
         // never pre-summed — full rows on either schedule. ----
+        let combine_span = trace::span("combine_data");
         let combine_wire: WireBytes = match schedule {
             Schedule::Flat => {
                 ragged_combine(self.net, &mut flat, kept, d, schedule)?;
@@ -366,13 +386,29 @@ impl<'a> StepExecutor<'a> {
                 hier_ragged_combine(self.net, &mut flat, kept, d, None)?.wire
             }
         };
+        drop(combine_span);
         report.comm.push(("alltoall_combine".into(), overlap.combine_total()));
         report.bytes_on_wire = dispatch_wire.inter + combine_wire.inter;
         report.bytes_intra_node = dispatch_wire.intra + combine_wire.intra;
         report.rows_deduped = rows_deduped;
         report.apply_overlap(&overlap);
+        if trace::enabled() {
+            let at = trace::model_window(overlap.critical_path);
+            trace::model_overlap(
+                at,
+                "",
+                &overlap,
+                vec![
+                    ("schedule".into(), schedule.name().into()),
+                    ("bytes_on_wire".into(), report.bytes_on_wire.into()),
+                    ("bytes_intra_node".into(), report.bytes_intra_node.into()),
+                    ("rows_deduped".into(), rows_deduped.into()),
+                ],
+            );
+        }
 
         let r0 = Instant::now();
+        let reverse_span = trace::span("reverse_layout");
         let mut outputs = Vec::with_capacity(w);
         let mut expert_out: Vec<Vec<f32>> = Vec::new();
         for (rank, plan) in plans.iter().enumerate() {
@@ -383,6 +419,7 @@ impl<'a> StepExecutor<'a> {
                 expert_out.push(buffer.data.into_vec());
             }
         }
+        drop(reverse_span);
         report
             .wall
             .push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
@@ -409,6 +446,7 @@ impl<'a> StepExecutor<'a> {
 
         // ---- StageLayout: padded, through the configured transform ----
         let l0 = Instant::now();
+        let layout_span = trace::span("layout");
         let buffers: Vec<LayoutBuffer> = shards
             .iter()
             .zip(plans)
@@ -418,12 +456,15 @@ impl<'a> StepExecutor<'a> {
                 LayoutImpl::DenseEinsum => dense_einsum_layout(shard, plan),
             })
             .collect();
+        drop(layout_span);
         report.wall.push(("layout".into(), l0.elapsed().as_secs_f64() / w as f64));
 
         // ---- StageDispatch: equal-chunk AllToAll ----
         let mut flat: Vec<Vec<f32>> =
             buffers.into_iter().map(|b| b.data.into_vec()).collect();
+        let dispatch_span = trace::span("dispatch_data");
         let timing = self.run_alltoall(&mut flat)?;
+        drop(dispatch_span);
         report.comm.push(("alltoall_dispatch".into(), timing.total));
         let schedule = match self.opts.comm_impl {
             CommImpl::Flat => Schedule::Flat,
@@ -440,6 +481,7 @@ impl<'a> StepExecutor<'a> {
         let mut expert_caches: Vec<Option<FfnCache>> = Vec::new();
         expert_caches.resize_with(e, || None);
         let x0 = Instant::now();
+        let expert_span = trace::span("expert");
         for (r, buf) in flat.iter_mut().enumerate() {
             if epr == 1 {
                 // One expert per rank: the received buffer already is
@@ -463,11 +505,14 @@ impl<'a> StepExecutor<'a> {
                 expert_caches[ge] = fcache;
             }
         }
+        drop(expert_span);
         let expert_wall = x0.elapsed().as_secs_f64() / w as f64;
         report.wall.push(("expert".into(), expert_wall));
 
         // ---- StageCombine: reverse AllToAll + reverse layout ----
+        let combine_span = trace::span("combine_data");
         let timing2 = self.run_alltoall(&mut flat)?;
+        drop(combine_span);
         report.comm.push(("alltoall_combine".into(), timing2.total));
         // Every off-diagonal (src, dst) pair ships one [epr, cap, d]
         // chunk per leg, padding included — split placement-aware:
@@ -481,14 +526,29 @@ impl<'a> StepExecutor<'a> {
         report.bytes_intra_node = 2 * intra_pairs * chunk_bytes;
         // The equal-chunk exchange is never chunked: one-chunk overlap
         // model, whole round trip exposed on the critical path.
-        report.apply_overlap(&OverlapTiming {
+        let overlap = OverlapTiming {
             dispatch: vec![timing.total],
             compute: vec![expert_wall],
             combine: vec![timing2.total],
             critical_path: timing.total + expert_wall + timing2.total,
-        });
+        };
+        report.apply_overlap(&overlap);
+        if trace::enabled() {
+            let at = trace::model_window(overlap.critical_path);
+            trace::model_overlap(
+                at,
+                "",
+                &overlap,
+                vec![
+                    ("schedule".into(), schedule.name().into()),
+                    ("bytes_on_wire".into(), report.bytes_on_wire.into()),
+                    ("bytes_intra_node".into(), report.bytes_intra_node.into()),
+                ],
+            );
+        }
 
         let r0 = Instant::now();
+        let reverse_span = trace::span("reverse_layout");
         let mut outputs = Vec::with_capacity(w);
         let mut expert_out: Vec<Vec<f32>> = Vec::new();
         for (rank, plan) in plans.iter().enumerate() {
@@ -502,6 +562,7 @@ impl<'a> StepExecutor<'a> {
                 expert_out.push(buffer.data.into_vec());
             }
         }
+        drop(reverse_span);
         report
             .wall
             .push(("reverse_layout".into(), r0.elapsed().as_secs_f64() / w as f64));
@@ -523,6 +584,9 @@ impl<'a> StepExecutor<'a> {
         if let Some(ffns) = self.experts.ffns() {
             return Ok(threadpool::pooled(self.opts.threads, jobs.len(), |j| {
                 let (ge, off, n) = jobs[j];
+                let mut job_span = trace::span("expert_job");
+                job_span.arg("expert", ge);
+                job_span.arg("rows", n);
                 let rows = Tensor::from_vec(buf[off..off + n * d].to_vec(), &[n, d])
                     .expect("job region sized by kept counts");
                 if want_cache {

@@ -283,6 +283,38 @@ impl OverlapTiming {
             self.comm_hidden() / total
         }
     }
+
+    /// Per-chunk start times `(dispatch, compute, combine)` under the
+    /// exact resource model of [`pipe_critical_path`] — the schedule
+    /// the tracing layer draws on the modeled timeline. The last
+    /// combine chunk ends at `critical_path` by construction.
+    pub fn chunk_timeline(&self) -> Vec<(f64, f64, f64)> {
+        let n = self.dispatch.len();
+        let mut out = Vec::with_capacity(n);
+        let mut net_free = 0.0f64;
+        let mut d_done = Vec::with_capacity(n);
+        for &dt in &self.dispatch {
+            out.push((net_free, 0.0, 0.0));
+            net_free += dt;
+            d_done.push(net_free);
+        }
+        let mut e_prev = 0.0f64;
+        let mut e_done = Vec::with_capacity(n);
+        for (c, &e) in self.compute.iter().enumerate() {
+            let start = if d_done[c] > e_prev { d_done[c] } else { e_prev };
+            out[c].1 = start;
+            e_prev = start + e;
+            e_done.push(e_prev);
+        }
+        for (c, &cb) in self.combine.iter().enumerate() {
+            if e_done[c] > net_free {
+                net_free = e_done[c];
+            }
+            out[c].2 = net_free;
+            net_free += cb;
+        }
+        out
+    }
 }
 
 /// Build the overlap model for one exchange round and pick the chunk
@@ -617,6 +649,45 @@ mod tests {
         );
         assert_eq!(o.n_chunks(), 3, "fixed counts clamp to the world size");
         assert!((o.compute_total() - 0.06).abs() < 1e-12, "compute is conserved");
+    }
+
+    #[test]
+    fn chunk_timeline_is_consistent_with_critical_path() {
+        let d = [0.1, 0.2, 0.15, 0.05];
+        let e = [0.3, 0.1, 0.25, 0.2];
+        let c = [0.05, 0.1, 0.2, 0.1];
+        let o = OverlapTiming {
+            dispatch: d.to_vec(),
+            compute: e.to_vec(),
+            combine: c.to_vec(),
+            critical_path: pipe_critical_path(&d, &e, &c),
+        };
+        let tl = o.chunk_timeline();
+        assert_eq!(tl.len(), 4);
+        // Last combine chunk ends exactly at the critical path.
+        let (_, _, last_cb) = tl[3];
+        assert!((last_cb + c[3] - o.critical_path).abs() < 1e-12);
+        for i in 0..4 {
+            let (ds, es, cs) = tl[i];
+            // Compute waits for its dispatch; combine waits for compute.
+            assert!(es + 1e-15 >= ds + d[i]);
+            assert!(cs + 1e-15 >= es + e[i]);
+            if i > 0 {
+                // The network is serialized: dispatch i starts at the
+                // end of dispatch i − 1; combine i after combine i − 1.
+                let (pds, _, pcs) = tl[i - 1];
+                assert!((ds - (pds + d[i - 1])).abs() < 1e-12);
+                assert!(cs + 1e-15 >= pcs + c[i - 1]);
+            }
+        }
+        // One chunk reduces to the serial phases.
+        let one = OverlapTiming {
+            dispatch: vec![0.3],
+            compute: vec![0.5],
+            combine: vec![0.2],
+            critical_path: 1.0,
+        };
+        assert_eq!(one.chunk_timeline(), vec![(0.0, 0.3, 0.8)]);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::comm::hier_ragged::hier_leg_wire_bytes;
 use crate::comm::ragged::split_wire_bytes;
 use crate::comm::schedule::{transpose_counts, Schedule};
 use crate::moe::{CommImpl, StepReport};
+use crate::obs::trace;
 use crate::pipeline::{ChunkChoice, StagePlan};
 use crate::serve::router::{CommChoice, PlacementRouter, RouteDecision};
 use crate::serve::scheduler::{ContinuousBatcher, SchedulerConfig};
@@ -323,6 +324,38 @@ impl ServeEngine {
             ..Default::default()
         };
         report.apply_overlap(&overlap);
+        // Serving charges time analytically, so the whole batch lands on
+        // the modeled timeline: compute phases as plain events, the
+        // exchange region through the shared overlap renderer.
+        if trace::enabled() {
+            let at = trace::model_window(total);
+            trace::model_event(
+                trace::ModelLane::Expert,
+                "gate",
+                at,
+                gate,
+                vec![("batch_tokens".into(), batch_tokens.into())],
+            );
+            trace::model_event(trace::ModelLane::Expert, "layout", at + gate, layout, vec![]);
+            trace::model_overlap(
+                at + gate + layout,
+                "",
+                &overlap,
+                vec![
+                    ("schedule".into(), stage_plan.schedule.name().into()),
+                    ("bytes_on_wire".into(), report.bytes_on_wire.into()),
+                    ("bytes_intra_node".into(), report.bytes_intra_node.into()),
+                    ("rows_deduped".into(), rows_deduped.into()),
+                ],
+            );
+            trace::model_event(
+                trace::ModelLane::Expert,
+                "reverse_layout",
+                at + gate + layout + overlap.critical_path,
+                reverse,
+                vec![],
+            );
+        }
         (total, report)
     }
 

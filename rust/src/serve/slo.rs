@@ -12,7 +12,12 @@ use crate::coordinator::metrics::{Breakdown, MetricsAgg};
 use crate::moe::StepReport;
 use crate::serve::workload::Request;
 use crate::util::json::Json;
-use crate::util::stats::Quantiles;
+use crate::util::stats::{Quantiles, RollingQuantiles};
+
+/// Completed-request window behind the rolling tail-latency numbers
+/// (`latency_window_*`): wide enough to make p99 meaningful, narrow
+/// enough that end-of-run drift is not averaged away.
+pub const LATENCY_WINDOW: usize = 256;
 
 /// A completed request with its observed completion time.
 #[derive(Clone, Debug)]
@@ -35,13 +40,26 @@ impl RequestOutcome {
 }
 
 /// Collects everything the final [`SloReport`] needs.
-#[derive(Default)]
 pub struct SloTracker {
     completed: Vec<RequestOutcome>,
     dropped: usize,
     rejected: usize,
     queue_depths: Vec<f64>,
     metrics: MetricsAgg,
+    window: RollingQuantiles,
+}
+
+impl Default for SloTracker {
+    fn default() -> SloTracker {
+        SloTracker {
+            completed: Vec::new(),
+            dropped: 0,
+            rejected: 0,
+            queue_depths: Vec::new(),
+            metrics: MetricsAgg::new(),
+            window: RollingQuantiles::new(LATENCY_WINDOW),
+        }
+    }
 }
 
 impl SloTracker {
@@ -51,6 +69,7 @@ impl SloTracker {
 
     /// Record a request finishing at `finish` (possibly past deadline).
     pub fn complete(&mut self, req: &Request, finish: f64) {
+        self.window.push(finish - req.arrival);
         self.completed.push(RequestOutcome {
             id: req.id,
             arrival: req.arrival,
@@ -111,6 +130,8 @@ impl SloTracker {
             rejected: self.rejected,
             slo_violations: self.completed.len() - on_time.len(),
             latency: Quantiles::of(&latencies),
+            latency_window: self.window.quantiles(),
+            latency_window_len: self.window.len(),
             mean_latency,
             goodput_rps: on_time.len() as f64 / dur,
             goodput_tps: on_time.iter().map(|o| o.tokens as f64).sum::<f64>() / dur,
@@ -139,6 +160,12 @@ pub struct SloReport {
     pub slo_violations: usize,
     /// Latency distribution over completed requests, seconds.
     pub latency: Quantiles,
+    /// Latency distribution over only the last [`LATENCY_WINDOW`]
+    /// completions — the "recent tail", sensitive to end-of-run drift.
+    pub latency_window: Quantiles,
+    /// Completions actually inside the window (< `LATENCY_WINDOW` on
+    /// short runs).
+    pub latency_window_len: usize,
     pub mean_latency: f64,
     /// On-time completions per simulated second.
     pub goodput_rps: f64,
@@ -176,6 +203,15 @@ impl SloReport {
         t.row(vec!["latency p50".into(), fmt_duration(self.latency.p50)]);
         t.row(vec!["latency p95".into(), fmt_duration(self.latency.p95)]);
         t.row(vec!["latency p99".into(), fmt_duration(self.latency.p99)]);
+        t.row(vec![
+            format!("recent p50/p95/p99 (last {})", self.latency_window_len),
+            format!(
+                "{} / {} / {}",
+                fmt_duration(self.latency_window.p50),
+                fmt_duration(self.latency_window.p95),
+                fmt_duration(self.latency_window.p99)
+            ),
+        ]);
         t.row(vec!["mean latency".into(), fmt_duration(self.mean_latency)]);
         t.row(vec![
             "goodput".into(),
@@ -203,26 +239,10 @@ impl SloReport {
         }
     }
 
-    /// JSON export for tooling and EXPERIMENTS appendices.
+    /// JSON export for tooling and EXPERIMENTS appendices, via the
+    /// canonical schema module (see `obs::schema`).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("duration", Json::num(self.duration)),
-            ("offered", Json::num(self.offered as f64)),
-            ("completed", Json::num(self.completed as f64)),
-            ("dropped", Json::num(self.dropped as f64)),
-            ("rejected", Json::num(self.rejected as f64)),
-            ("slo_violations", Json::num(self.slo_violations as f64)),
-            ("latency_p50", Json::num(self.latency.p50)),
-            ("latency_p95", Json::num(self.latency.p95)),
-            ("latency_p99", Json::num(self.latency.p99)),
-            ("mean_latency", Json::num(self.mean_latency)),
-            ("goodput_rps", Json::num(self.goodput_rps)),
-            ("goodput_tps", Json::num(self.goodput_tps)),
-            ("drop_rate", Json::num(self.drop_rate)),
-            ("mean_queue_depth", Json::num(self.mean_queue_depth)),
-            ("max_queue_depth", Json::num(self.max_queue_depth)),
-            ("breakdown", self.breakdown.to_json()),
-        ])
+        crate::obs::schema::slo_json(self)
     }
 }
 
@@ -280,6 +300,26 @@ mod tests {
         let gate = r.breakdown.phases.iter().find(|(n, _)| n == "gate").unwrap().1;
         assert!((gate - 0.3).abs() < 1e-12);
         assert!(r.breakdown.fraction_of(&["alltoall"]) > 0.0);
+    }
+
+    #[test]
+    fn rolling_window_tracks_recent_latencies() {
+        let mut t = SloTracker::new();
+        // Fill past the window with fast requests, then a slow tail.
+        for i in 0..(LATENCY_WINDOW + 50) {
+            t.complete(&req(i as u64, 0.0, 1, 10.0), 0.01);
+        }
+        for i in 0..LATENCY_WINDOW {
+            t.complete(&req(10_000 + i as u64, 0.0, 1, 10.0), 1.0);
+        }
+        let r = t.report(1.0);
+        assert_eq!(r.latency_window_len, LATENCY_WINDOW);
+        // The window only sees the slow tail; the whole-run p50 still
+        // reflects the fast majority.
+        assert!((r.latency_window.p50 - 1.0).abs() < 1e-12);
+        assert!(r.latency.p50 < 1.0);
+        let j = r.to_json();
+        assert!((j.f64_field("latency_window_p99").unwrap() - 1.0).abs() < 1e-12);
     }
 
     #[test]

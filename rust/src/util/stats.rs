@@ -148,6 +148,51 @@ impl Quantiles {
     }
 }
 
+/// Rolling window over the last `cap` observations, reporting
+/// [`Quantiles`] of the window. The serving engine keeps one per run so
+/// `serve --json` and the fig9 metrics entry can report tail latency
+/// over the *recent* requests instead of only the end-of-run
+/// distribution (a drifting p99 is invisible in the whole-run number).
+#[derive(Clone, Debug)]
+pub struct RollingQuantiles {
+    cap: usize,
+    buf: std::collections::VecDeque<f64>,
+}
+
+impl RollingQuantiles {
+    /// A window holding at most `cap` samples (`cap` ≥ 1).
+    pub fn new(cap: usize) -> RollingQuantiles {
+        assert!(cap >= 1, "window capacity must be at least 1");
+        RollingQuantiles { cap, buf: std::collections::VecDeque::with_capacity(cap) }
+    }
+
+    /// Add a sample, evicting the oldest once the window is full.
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Quantiles of the current window; all-zero when empty.
+    pub fn quantiles(&self) -> Quantiles {
+        let v: Vec<f64> = self.buf.iter().copied().collect();
+        Quantiles::of(&v)
+    }
+}
+
 /// Coefficient of variation of per-expert loads — the standard MoE
 /// load-balance metric (0 = perfectly balanced).
 pub fn load_cv(counts: &[usize]) -> f64 {
@@ -263,6 +308,31 @@ mod tests {
         let one = Quantiles::of(&[7.5]);
         assert_eq!(one.p50, 7.5);
         assert_eq!(one.p99, 7.5);
+    }
+
+    #[test]
+    fn rolling_quantiles_evict_oldest() {
+        let mut w = RollingQuantiles::new(4);
+        assert!(w.is_empty());
+        assert_eq!(w.quantiles(), Quantiles::default());
+        for x in [100.0, 1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        // The 100.0 outlier fell out of the window.
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.capacity(), 4);
+        let q = w.quantiles();
+        assert_eq!(q, Quantiles::of(&[1.0, 2.0, 3.0, 4.0]));
+        assert!(q.p99 <= 4.0);
+    }
+
+    #[test]
+    fn rolling_quantiles_partial_window() {
+        let mut w = RollingQuantiles::new(8);
+        w.push(5.0);
+        w.push(7.0);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.quantiles().p50, 6.0);
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Property tests for the tracing layer (DESIGN.md §12): recording is
+//! purely observational. A full train step (forward + backward) and a
+//! full serving run produce **bit-identical** outputs, gradients and
+//! report fields whether the recorder is on or off — and the trace the
+//! enabled run captures is well-formed: spans nest on every lane and
+//! every begin has an end.
+//!
+//! The recorder is process-global, so every test here serializes on one
+//! mutex (the rest of the suite lives in other test binaries).
+
+use std::sync::Mutex;
+
+use hetumoe::backprop::TrainMoeLayer;
+use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
+use hetumoe::moe::{DispatchMode, MoeLayerOptions};
+use hetumoe::obs::{trace, Trace, TraceRecorder};
+use hetumoe::pipeline::{pipe_critical_path, OverlapTiming};
+use hetumoe::serve::{ArrivalProcess, CommChoice, ServeConfig, ServeEngine};
+use hetumoe::tensor::Tensor;
+use hetumoe::util::rng::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Everything a train step produces, flattened for exact comparison.
+#[derive(PartialEq, Debug)]
+struct TrainOutcome {
+    outputs: Vec<f32>,
+    dx: Vec<f32>,
+    d_gate: Vec<f32>,
+    d_experts: Vec<f32>,
+    bytes_on_wire: usize,
+    bytes_intra_node: usize,
+    rows_deduped: usize,
+    n_chunks: usize,
+    comm_schedule: String,
+    critical_path_bits: u64,
+    comm_exposed_bits: u64,
+    bwd_bytes_on_wire: usize,
+    bwd_comm_schedule: String,
+}
+
+fn run_train_step(dispatch: DispatchMode) -> TrainOutcome {
+    let cfg = MoeConfig {
+        num_experts: 8,
+        d_model: 16,
+        ffn_hidden: 32,
+        capacity_factor: 2.0,
+        gate: GateKind::GShard,
+    };
+    let cluster = ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) };
+    let opts = MoeLayerOptions { dispatch, ..Default::default() };
+    let layer = TrainMoeLayer::native(cfg, cluster, opts, 11).unwrap();
+    let mut rng = Rng::seed(5);
+    let shards: Vec<Tensor> = (0..4).map(|_| Tensor::randn(&[24, 16], &mut rng)).collect();
+    let dy: Vec<Tensor> = (0..4).map(|_| Tensor::randn(&[24, 16], &mut rng)).collect();
+    let (outs, report, cache) = layer.forward_t(&shards, 0).unwrap();
+    let (dx, grads, bwd) = layer.backward(&shards, &dy, &cache, 0.01).unwrap();
+    TrainOutcome {
+        outputs: outs.iter().flat_map(|t| t.data().to_vec()).collect(),
+        dx: dx.iter().flat_map(|t| t.data().to_vec()).collect(),
+        d_gate: grads.d_gate_weight.iter().flat_map(|t| t.data().to_vec()).collect(),
+        d_experts: grads
+            .experts
+            .iter()
+            .flat_map(|g| {
+                g.dw1
+                    .data()
+                    .iter()
+                    .chain(g.dw2.data())
+                    .chain(&g.db1)
+                    .chain(&g.db2)
+                    .copied()
+                    .collect::<Vec<f32>>()
+            })
+            .collect(),
+        bytes_on_wire: report.bytes_on_wire,
+        bytes_intra_node: report.bytes_intra_node,
+        rows_deduped: report.rows_deduped,
+        n_chunks: report.n_chunks,
+        comm_schedule: report.comm_schedule.clone(),
+        critical_path_bits: report.critical_path.to_bits(),
+        comm_exposed_bits: report.comm_exposed.to_bits(),
+        bwd_bytes_on_wire: bwd.bytes_on_wire,
+        bwd_comm_schedule: bwd.comm_schedule.clone(),
+    }
+}
+
+/// Run `f` with the recorder on, returning its result and the trace.
+fn traced<T>(f: impl FnOnce() -> T) -> (T, Trace) {
+    TraceRecorder::start();
+    let out = f();
+    (out, TraceRecorder::stop())
+}
+
+fn assert_well_formed(trace: &Trace) {
+    assert!(!trace.events.is_empty(), "enabled run must capture spans");
+    assert_eq!(trace::open_spans(), 0, "every span begin must have an end");
+    if let Err(e) = trace.check_nesting() {
+        panic!("spans must nest per lane: {e}");
+    }
+}
+
+#[test]
+fn train_step_is_bit_identical_with_tracing_on() {
+    let _g = LOCK.lock().unwrap();
+    for dispatch in [DispatchMode::Ragged, DispatchMode::Padded] {
+        let off = run_train_step(dispatch);
+        let (on, trace) = traced(|| run_train_step(dispatch));
+        assert_eq!(off, on, "{dispatch:?}: tracing must not perturb the step");
+        assert_well_formed(&trace);
+        // The step emitted both halves of the taxonomy: measured spans
+        // and the modeled overlap timeline.
+        let names: Vec<&str> = trace.events.iter().map(|e| e.name.as_str()).collect();
+        assert!(names.contains(&"step"));
+        assert!(names.contains(&"bwd_step"));
+        assert!(names.iter().any(|n| n.starts_with("dispatch.")));
+        assert!(names.iter().any(|n| n.starts_with("bwd_dispatch.")));
+        // And carries the wire accounting as span args.
+        let step = trace.events.iter().find(|e| e.name == "step").unwrap();
+        assert!(step.args.iter().any(|(k, _)| k == "bytes_on_wire"));
+        assert!(step.args.iter().any(|(k, _)| k == "comm_schedule"));
+    }
+}
+
+#[test]
+fn serving_run_is_bit_identical_with_tracing_on() {
+    let _g = LOCK.lock().unwrap();
+    let cfg = ServeConfig {
+        moe: MoeConfig {
+            num_experts: 8,
+            d_model: 32,
+            ffn_hidden: 64,
+            capacity_factor: 1.25,
+            gate: GateKind::Switch,
+        },
+        cluster: ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) },
+        process: ArrivalProcess::Poisson { rate: 500.0 },
+        comm: CommChoice::Auto,
+        duration: 0.2,
+        seed: 7,
+        ..ServeConfig::default_run()
+    };
+    let run = |cfg: ServeConfig| {
+        let mut engine = ServeEngine::new(cfg).unwrap();
+        engine.run().unwrap()
+    };
+    let off = run(cfg.clone());
+    let (on, trace) = traced(|| run(cfg));
+    assert_eq!(off.offered, on.offered);
+    assert_eq!(off.completed, on.completed);
+    assert_eq!(off.dropped, on.dropped);
+    assert_eq!(off.latency.p50.to_bits(), on.latency.p50.to_bits());
+    assert_eq!(off.latency.p99.to_bits(), on.latency.p99.to_bits());
+    assert_eq!(off.latency_window.p99.to_bits(), on.latency_window.p99.to_bits());
+    assert_eq!(off.goodput_tps.to_bits(), on.goodput_tps.to_bits());
+    assert_eq!(off.breakdown.critical_path.to_bits(), on.breakdown.critical_path.to_bits());
+    assert_well_formed(&trace);
+    // Serving is analytic: every batch lands on the modeled timeline.
+    let names: Vec<&str> = trace.events.iter().map(|e| e.name.as_str()).collect();
+    assert!(names.contains(&"gate"));
+    assert!(names.contains(&"exchange"));
+    assert!(names.contains(&"reverse_layout"));
+}
+
+#[test]
+fn stopping_discards_spans_but_keeps_balance() {
+    let _g = LOCK.lock().unwrap();
+    TraceRecorder::start();
+    let span = trace::span("outer");
+    let trace = TraceRecorder::stop();
+    // The guard outlived the recorder: its event is discarded, but the
+    // open-span balance still returns to zero.
+    drop(span);
+    assert_eq!(trace::open_spans(), 0);
+    assert!(trace.events.is_empty());
+    // Disabled emission is a no-op.
+    let inert = trace::span("ignored");
+    drop(inert);
+    assert!(!trace::enabled());
+}
+
+#[test]
+fn recorder_exports_chrome_trace() {
+    let _g = LOCK.lock().unwrap();
+    TraceRecorder::start();
+    {
+        let mut outer = trace::span("outer");
+        outer.arg("bytes_on_wire", 4096usize);
+        outer.arg("schedule", "hier");
+        {
+            let _inner = trace::span("inner");
+        }
+    }
+    let w0 = trace::model_window(1.0);
+    trace::model_event(trace::ModelLane::Net, "m0", w0, 0.5, Vec::new());
+    let w1 = trace::model_window(2.0);
+    assert!((w1 - w0 - 1.0).abs() < 1e-12, "windows are consecutive");
+    trace::model_event(trace::ModelLane::Expert, "m1", w1, 2.0, Vec::new());
+    assert_eq!(trace::open_spans(), 0);
+    let tr = TraceRecorder::stop();
+    assert!(!trace::enabled());
+    assert_eq!(tr.events.len(), 4);
+    tr.check_nesting().unwrap();
+    // Measured lanes re-based to zero.
+    let outer = tr.events.iter().find(|e| e.name == "outer").unwrap();
+    assert_eq!(outer.pid, trace::PID_MEASURED);
+    assert!(outer.ts.abs() < 1e-9);
+    let inner = tr.events.iter().find(|e| e.name == "inner").unwrap();
+    assert!(inner.ts >= outer.ts && inner.ts + inner.dur <= outer.ts + outer.dur + 1e-9);
+    let j = tr.to_chrome_json();
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+    // 4 spans + 2 process metas + 3 lane metas (host, net, expert).
+    assert_eq!(evs.len(), 9);
+    assert_eq!(j.str_field("displayTimeUnit").unwrap(), "ms");
+    let x = evs
+        .iter()
+        .find(|e| e.str_field("name").map(|n| n == "outer").unwrap_or(false))
+        .unwrap();
+    assert_eq!(x.str_field("ph").unwrap(), "X");
+    let args = x.get("args").unwrap();
+    assert_eq!(args.f64_field("bytes_on_wire").unwrap(), 4096.0);
+    assert_eq!(args.str_field("schedule").unwrap(), "hier");
+}
+
+#[test]
+fn model_overlap_emits_contained_chunks() {
+    let _g = LOCK.lock().unwrap();
+    TraceRecorder::start();
+    let o = OverlapTiming {
+        dispatch: vec![0.1, 0.2],
+        compute: vec![0.3, 0.1],
+        combine: vec![0.05, 0.1],
+        critical_path: 0.0,
+    };
+    let o = OverlapTiming {
+        critical_path: pipe_critical_path(&o.dispatch, &o.compute, &o.combine),
+        ..o
+    };
+    let at = trace::model_window(o.critical_path);
+    trace::model_overlap(at, "fwd_", &o, vec![("rows_deduped".into(), 7usize.into())]);
+    let tr = TraceRecorder::stop();
+    tr.check_nesting().unwrap();
+    // 1 container + 2 chunks × 3 legs.
+    assert_eq!(tr.events.len(), 7);
+    let region = tr.events.iter().find(|e| e.name == "fwd_exchange").unwrap();
+    assert!((region.dur - o.critical_path).abs() < 1e-12);
+    for e in &tr.events {
+        if e.pid == trace::PID_MODELED && e.name != "fwd_exchange" {
+            assert!(e.ts >= region.ts - 1e-12);
+            assert!(e.ts + e.dur <= region.ts + region.dur + 1e-9);
+        }
+    }
+}
