@@ -38,6 +38,34 @@ impl Adam {
         self.t
     }
 
+    /// Snapshot the optimizer state (step counter + both moment lists)
+    /// for checkpointing. Moments are cloned; exact f32 values.
+    pub fn export_state(&self) -> (u64, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        (self.t, self.m.clone(), self.v.clone())
+    }
+
+    /// Restore a state exported by [`Adam::export_state`]. The tensor
+    /// list must match the sizes this optimizer was built with.
+    pub fn restore_state(
+        &mut self,
+        t: u64,
+        m: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    ) -> crate::error::Result<()> {
+        let sizes: Vec<usize> = self.m.iter().map(|s| s.len()).collect();
+        let msz: Vec<usize> = m.iter().map(|s| s.len()).collect();
+        let vsz: Vec<usize> = v.iter().map(|s| s.len()).collect();
+        if msz != sizes || vsz != sizes {
+            return Err(crate::ckpt_err!(
+                "Adam state shape mismatch: optimizer has {sizes:?}, checkpoint has m={msz:?} v={vsz:?}"
+            ));
+        }
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
+
     /// One update: `params[i]` and `grads[i]` must match the sizes the
     /// optimizer was built with, by position.
     pub fn step(&mut self, params: &mut [&mut [f32]], grads: &[&[f32]]) {
@@ -105,6 +133,36 @@ mod tests {
         assert!(a[0] < 1.0);
         assert_eq!(b[0], 1.0, "zero grad leaves the param untouched");
         assert!(b[1] > 1.0);
+    }
+
+    /// Export → restore into a fresh optimizer must continue the exact
+    /// same trajectory (checkpoint exactness depends on this).
+    #[test]
+    fn state_round_trip_is_exact() {
+        let mut x = vec![5.0f32, -3.0];
+        let mut opt = Adam::new(0.1, &[2]);
+        for _ in 0..10 {
+            let grads: Vec<f32> = x.iter().map(|&v| 2.0 * v).collect();
+            opt.step(&mut [&mut x], &[&grads]);
+        }
+        let (t, m, v) = opt.export_state();
+        let mut x2 = x.clone();
+        let mut opt2 = Adam::new(0.1, &[2]);
+        opt2.restore_state(t, m, v).unwrap();
+        for _ in 0..10 {
+            let g1: Vec<f32> = x.iter().map(|&v| 2.0 * v).collect();
+            opt.step(&mut [&mut x], &[&g1]);
+            let g2: Vec<f32> = x2.iter().map(|&v| 2.0 * v).collect();
+            opt2.step(&mut [&mut x2], &[&g2]);
+        }
+        assert_eq!(x, x2, "restored optimizer must be bit-identical");
+    }
+
+    #[test]
+    fn restore_rejects_wrong_shapes() {
+        let mut opt = Adam::new(0.1, &[2]);
+        let err = opt.restore_state(1, vec![vec![0.0; 3]], vec![vec![0.0; 3]]);
+        assert!(err.is_err());
     }
 
     #[test]

@@ -17,8 +17,8 @@
 //! combine leg travels the forward-dispatch routes (transpose of the
 //! combine matrix), and the gradient of the dispatch leg travels the
 //! forward-combine routes — which is exactly what reusing
-//! [`ragged_dispatch`] + [`ragged_combine`] with the forward `kept`
-//! matrix implements. Timing and bytes are charged through the same
+//! [`ragged_dispatch_placed`] + [`ragged_combine_placed`] with the
+//! forward `kept` matrix implements. Timing and bytes are charged through the same
 //! cost models, the flat-vs-hier schedule is the forward's per-step
 //! decision, and the backward exchanges get the same micro-chunked
 //! comm/compute overlap as the forward: dispatch-of-chunk-*i* overlaps
@@ -30,14 +30,14 @@ use crate::comm::hier_ragged::{
     dedup_traffic, hier_ragged_combine, hier_ragged_dispatch, row_meta, DedupMeta,
     DedupTraffic, PresumMeta, RowMeta,
 };
-use crate::comm::ragged::{ragged_combine, ragged_dispatch, split_wire_bytes};
+use crate::comm::ragged::{ragged_combine_placed, ragged_dispatch_placed, split_wire_bytes};
 use crate::comm::schedule::{transpose_counts, Schedule};
 use crate::comm::{alltoall, hierarchical_alltoall, CommTiming, WireBytes};
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
 use crate::gating::{make_gate, DispatchPlan, Gate};
 use crate::layout::{gather_expert_slices, scatter_expert_slices, RaggedLayoutBuffer};
-use crate::moe::{CommImpl, DispatchMode, MoeLayerOptions, StepReport};
+use crate::moe::{validate_dead_ranks, CommImpl, DispatchMode, MoeLayerOptions, StepReport};
 use crate::nn::{matmul_nt, matmul_tn, Ffn, FfnGrads};
 use crate::obs::trace;
 use crate::pipeline::executor::rank_expert_jobs;
@@ -118,6 +118,7 @@ impl TrainMoeLayer {
                 cfg.num_experts
             ));
         }
+        validate_dead_ranks(&opts, w)?;
         let mut rng = Rng::seed(seed);
         let experts: Vec<Ffn> = (0..cfg.num_experts)
             .map(|_| Ffn::init(cfg.d_model, cfg.ffn_hidden, &mut rng))
@@ -129,9 +130,14 @@ impl TrainMoeLayer {
         Ok(TrainMoeLayer { cfg, cluster, net, gate, gate_weight, experts, opts })
     }
 
-    /// The shared expert placement.
+    /// The shared expert placement (elastically remapped when
+    /// `opts.dead_ranks` marks ranks down).
     pub fn placement(&self) -> ExpertPlacement {
-        ExpertPlacement::new(self.cfg.num_experts, self.cluster.world())
+        ExpertPlacement::with_dead(
+            self.cfg.num_experts,
+            self.cluster.world(),
+            &self.opts.dead_ranks,
+        )
     }
 
     /// Total trainable parameter count (router + experts).
@@ -155,6 +161,17 @@ impl TrainMoeLayer {
         shards: &[Tensor],
         step: u64,
     ) -> Result<(Vec<Tensor>, StepReport, TrainCache)> {
+        self.forward_t_with(shards, step, None)
+    }
+
+    /// [`TrainMoeLayer::forward_t`] with one step's timing faults folded
+    /// into the report (`None` = healthy; see [`crate::fault`]).
+    pub fn forward_t_with(
+        &self,
+        shards: &[Tensor],
+        step: u64,
+        faults: Option<&crate::fault::StepFaults>,
+    ) -> Result<(Vec<Tensor>, StepReport, TrainCache)> {
         let route = |scores: &Tensor| self.gate.route_scores(scores, step);
         let exec = StepExecutor {
             cfg: &self.cfg,
@@ -164,6 +181,7 @@ impl TrainMoeLayer {
             gate_weight: &self.gate_weight,
             experts: ExpertBank::Train(&self.experts),
             route: &route,
+            faults,
         };
         let out = exec.run(shards, true)?;
         let cache = out.cache.expect("cached flavor always returns a cache");
@@ -299,15 +317,16 @@ impl TrainMoeLayer {
         // traffic matrix (and therefore the same `pick_schedule`
         // outcome) governs both directions.
         let schedule = cache.schedule;
-        let dedup: Option<DedupTraffic> = self
-            .opts
-            .dedup
+        // Under an elastic remap the forward forced the flat schedule
+        // with dedup off; the backward mirrors that degraded mode.
+        let dedup_on = self.opts.dedup && placement.is_contiguous();
+        let dedup: Option<DedupTraffic> = dedup_on
             .then(|| dedup_traffic(cache.plans.iter(), &placement, &self.cluster));
         // Row metadata describes dedup groups and pre-sum runs; it is
         // only consumed when both the hierarchical schedule runs and
         // dedup is on.
         let metas: Vec<RowMeta> = match schedule {
-            Schedule::Hierarchical if self.opts.dedup => {
+            Schedule::Hierarchical if dedup_on => {
                 cache.plans.iter().map(|p| row_meta(p, &placement, g)).collect()
             }
             _ => Vec::new(),
@@ -326,13 +345,11 @@ impl TrainMoeLayer {
         dispatch_span.arg("schedule", schedule.name());
         let dispatch_wire: WireBytes = match schedule {
             Schedule::Flat => {
-                ragged_dispatch(&self.net, dbufs, &cache.kept, d, schedule)?;
+                ragged_dispatch_placed(&self.net, dbufs, &cache.kept, d, schedule, &placement)?;
                 split_wire_bytes(&counts, d * 4, g)
             }
             Schedule::Hierarchical => {
-                let dm = self
-                    .opts
-                    .dedup
+                let dm = dedup_on
                     .then(|| DedupMeta { rows: &metas, payloads: dy_shards, scaled: true });
                 let leg =
                     hier_ragged_dispatch(&self.net, dbufs, &cache.kept, d, dm.as_ref())?;
@@ -381,7 +398,7 @@ impl TrainMoeLayer {
             self.opts.chunks,
             &compute_per_rank,
             dedup.as_ref(),
-            self.opts.dedup,
+            dedup_on,
         );
         report.comm_schedule = stage_plan.schedule.name().into();
         report.comm.push(("alltoall_dispatch_bwd".into(), overlap.dispatch_total()));
@@ -395,11 +412,11 @@ impl TrainMoeLayer {
         let combine_span = trace::span("bwd_combine_data");
         let combine_wire: WireBytes = match schedule {
             Schedule::Flat => {
-                ragged_combine(&self.net, dbufs, &cache.kept, d, schedule)?;
+                ragged_combine_placed(&self.net, dbufs, &cache.kept, d, schedule, &placement)?;
                 split_wire_bytes(&transpose_counts(&counts), d * 4, g)
             }
             Schedule::Hierarchical => {
-                let pm = self.opts.dedup.then(|| PresumMeta { rows: &metas });
+                let pm = dedup_on.then(|| PresumMeta { rows: &metas });
                 let leg =
                     hier_ragged_combine(&self.net, dbufs, &cache.kept, d, pm.as_ref())?;
                 rows_deduped += leg.rows_saved;

@@ -15,16 +15,20 @@
 
 use crate::backprop::adam::Adam;
 use crate::backprop::layer::TrainMoeLayer;
+use crate::ckpt;
+use crate::cluster::Timeline;
 use crate::comm::allreduce;
 use crate::config::{ClusterConfig, GateKind, MoeConfig};
 use crate::coordinator::metrics::{Breakdown, MetricsAgg};
 use crate::data::ClusterTask;
 use crate::error::Result;
+use crate::fault::FaultPlan;
 use crate::moe::{MoeLayerOptions, StepReport};
 use crate::nn::{log_softmax, matmul, matmul_nt, matmul_tn};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::util::stats::load_cv;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Configuration of one native training run.
@@ -44,6 +48,13 @@ pub struct TrainRunConfig {
     pub noise: f32,
     pub seed: u64,
     pub log_every: usize,
+    /// Deterministic fault-injection schedule (empty = healthy run).
+    pub faults: FaultPlan,
+    /// Checkpoint every N steps (0 = never).
+    pub ckpt_every: usize,
+    /// Directory checkpoints are written into (required when
+    /// `ckpt_every > 0`).
+    pub ckpt_dir: Option<String>,
 }
 
 impl TrainRunConfig {
@@ -67,6 +78,9 @@ impl TrainRunConfig {
             noise: 0.3,
             seed: 0,
             log_every: 25,
+            faults: FaultPlan::none(),
+            ckpt_every: 0,
+            ckpt_dir: None,
         }
     }
 }
@@ -94,6 +108,9 @@ pub struct TrainSummary {
     pub fwd_schedules: (usize, usize),
     /// (flat, hier) schedule picks of the backward exchanges.
     pub bwd_schedules: (usize, usize),
+    /// Steps re-executed after rank-failure recovery (fail step minus
+    /// checkpoint step, summed over recoveries).
+    pub recovery_steps: usize,
 }
 
 /// Exponential smoothing of a loss curve (α = weight of the new value).
@@ -119,11 +136,17 @@ pub struct NativeTrainer {
     pub head_w: Tensor,
     pub head_b: Vec<f32>,
     pub logs: Vec<TrainStepLog>,
+    /// Steps re-executed after rank-failure recovery so far.
+    pub recovery_steps: usize,
+    /// Fault and recovery events on the simulated clock (`straggle/*`,
+    /// `retry/*`, `rank_fail/*`), kept apart from base phase time.
+    pub fault_timeline: Timeline,
     task: ClusterTask,
     data_rng: Rng,
     opt: Adam,
     agg: MetricsAgg,
     step_idx: usize,
+    last_ckpt: Option<(usize, PathBuf)>,
     fwd_flat: usize,
     fwd_hier: usize,
     bwd_flat: usize,
@@ -131,7 +154,20 @@ pub struct NativeTrainer {
 }
 
 impl NativeTrainer {
-    pub fn new(cfg: TrainRunConfig) -> Result<NativeTrainer> {
+    pub fn new(mut cfg: TrainRunConfig) -> Result<NativeTrainer> {
+        // `dead:` clauses mark ranks down from step 0: fold them into the
+        // layer's dead set so the elastic placement covers them.
+        let initial_dead = cfg.faults.initial_dead();
+        if !initial_dead.is_empty() {
+            cfg.opts.dead_ranks.extend(initial_dead);
+            cfg.opts.dead_ranks.sort_unstable();
+            cfg.opts.dead_ranks.dedup();
+        }
+        if cfg.ckpt_every > 0 && cfg.ckpt_dir.is_none() {
+            return Err(crate::config_err!(
+                "--ckpt-every needs --ckpt-dir to write checkpoints into"
+            ));
+        }
         let layer = TrainMoeLayer::native(
             cfg.moe.clone(),
             cfg.cluster.clone(),
@@ -160,11 +196,14 @@ impl NativeTrainer {
             head_w,
             head_b,
             logs: Vec::new(),
+            recovery_steps: 0,
+            fault_timeline: Timeline::new(),
             task,
             data_rng,
             opt,
             agg: MetricsAgg::new(),
             step_idx: 0,
+            last_ckpt: None,
             fwd_flat: 0,
             fwd_hier: 0,
             bwd_flat: 0,
@@ -183,20 +222,41 @@ impl NativeTrainer {
         let w = self.cfg.cluster.world();
         let per = self.cfg.tokens_per_rank;
         let c = self.cfg.num_classes;
-        let total_tokens = (w * per) as f32;
+        // Dead ranks contribute no tokens: losses normalize over the
+        // alive world (identical to /w when nothing is dead).
+        let dead = self.layer.opts.dead_ranks.clone();
+        let n_alive = (w - dead.len()).max(1);
+        let total_tokens = (n_alive * per) as f32;
 
         // ---- Batch: per-rank shards of the cluster task ----
+        // Dead ranks sample nothing — crucially they also *draw* nothing
+        // from the data RNG, so a recovered run's stream matches a fresh
+        // run started from the same checkpoint with the same dead set.
         let mut shards = Vec::with_capacity(w);
         let mut labels: Vec<Vec<u32>> = Vec::with_capacity(w);
-        for _ in 0..w {
+        for r in 0..w {
+            if dead.binary_search(&r).is_ok() {
+                shards.push(Tensor::zeros(&[0, self.cfg.moe.d_model]));
+                labels.push(Vec::new());
+                continue;
+            }
             let (x, y) = self.task.sample(per, &mut self.data_rng);
             shards.push(x);
             labels.push(y);
         }
 
+        // ---- Faults scheduled for this step (pure function of the
+        // plan and the step index — fully replayable) ----
+        let step_faults = (!self.cfg.faults.is_empty()).then(|| {
+            self.cfg.faults.at_step(self.step_idx, w, self.cfg.cluster.nodes)
+        });
+
         // ---- Forward: MoE block with residual, then the head ----
-        let (moe_out, mut report, cache) =
-            self.layer.forward_t(&shards, self.step_idx as u64)?;
+        let (moe_out, mut report, cache) = self.layer.forward_t_with(
+            &shards,
+            self.step_idx as u64,
+            step_faults.as_ref(),
+        )?;
         let mut h = moe_out;
         for (hr, xr) in h.iter_mut().zip(&shards) {
             hr.add_assign(xr);
@@ -208,9 +268,12 @@ impl NativeTrainer {
         let mut d_head_w: Vec<Tensor> = Vec::with_capacity(w);
         let mut d_head_b: Vec<Vec<f32>> = Vec::with_capacity(w);
         for rank in 0..w {
+            // Dead ranks carry zero rows: every loop below is a no-op
+            // and their head gradients come out zero.
+            let rows = h[rank].rows();
             let f0 = Instant::now();
             let mut logits = matmul(&h[rank], &self.head_w);
-            for t in 0..per {
+            for t in 0..rows {
                 let row = logits.row_mut(t);
                 for (j, v) in row.iter_mut().enumerate() {
                     *v += self.head_b[j];
@@ -218,7 +281,7 @@ impl NativeTrainer {
             }
             log_softmax(&mut logits);
             let y = &labels[rank];
-            for t in 0..per {
+            for t in 0..rows {
                 ce_sum -= logits.at(t, y[t] as usize) as f64;
             }
             head_fwd += f0.elapsed().as_secs_f64();
@@ -228,7 +291,7 @@ impl NativeTrainer {
             for v in dl.data_mut() {
                 *v = v.exp();
             }
-            for t in 0..per {
+            for t in 0..rows {
                 let row = dl.row_mut(t);
                 row[y[t] as usize] -= 1.0;
                 for v in row.iter_mut() {
@@ -237,7 +300,7 @@ impl NativeTrainer {
             }
             d_head_w.push(matmul_tn(&h[rank], &dl));
             let mut db = vec![0.0f32; c];
-            for t in 0..per {
+            for t in 0..rows {
                 for (j, &g) in dl.row(t).iter().enumerate() {
                     db[j] += g;
                 }
@@ -253,9 +316,31 @@ impl NativeTrainer {
 
         // ---- Backward through the MoE block ----
         // (The residual path's dx goes to the non-trainable input.)
-        let (_dx, grads, bwd_report) =
-            self.layer.backward(&shards, &dh, &cache, self.cfg.aux_coef / w as f32)?;
+        let (_dx, grads, bwd_report) = self.layer.backward(
+            &shards,
+            &dh,
+            &cache,
+            self.cfg.aux_coef / n_alive as f32,
+        )?;
         report.absorb_backward(bwd_report);
+
+        // ---- Fault accounting on the dedicated timeline ----
+        if let Some(sf) = &step_faults {
+            if !sf.is_clean() {
+                let s = report.wall_phase("straggle/expert");
+                if s > 0.0 {
+                    self.fault_timeline.push_fault("straggle/expert", s);
+                }
+                let n = report.comm_phase("straggle/nic");
+                if n > 0.0 {
+                    self.fault_timeline.push_fault("straggle/nic", n);
+                }
+                let r = report.comm_phase("retry/dispatch");
+                if r > 0.0 {
+                    self.fault_timeline.push_fault("retry/dispatch", r);
+                }
+            }
+        }
 
         // ---- Gradient AllReduce for the replicated params ----
         let gw_len = self.layer.gate_weight.len();
@@ -326,8 +411,27 @@ impl NativeTrainer {
 
     /// Run `cfg.steps` steps; returns the summary (per-step logs stay in
     /// `self.logs`). Fails fast on divergence (non-finite loss).
+    ///
+    /// `kill:` faults fire *before* the victim executes its step: the
+    /// trainer rolls back to the last checkpoint, marks the rank dead,
+    /// and re-executes from there with the shrunken world. Recovery
+    /// needs `--ckpt-every`/`--ckpt-dir`; a step-0 snapshot is written
+    /// up front so even an immediate kill is recoverable.
     pub fn run(&mut self) -> Result<TrainSummary> {
-        for _ in 0..self.cfg.steps {
+        self.maybe_checkpoint()?;
+        while self.step_idx < self.cfg.steps {
+            let at = self.step_idx;
+            let kills: Vec<usize> = self
+                .cfg
+                .faults
+                .kills_at(at)
+                .into_iter()
+                .filter(|r| !self.layer.opts.dead_ranks.contains(r))
+                .collect();
+            if !kills.is_empty() {
+                self.recover(&kills, at)?;
+                continue;
+            }
             let log = self.step()?;
             if !log.loss.is_finite() {
                 return Err(crate::error::HetuError::Runtime(format!(
@@ -341,8 +445,152 @@ impl NativeTrainer {
                     log.step, log.loss, log.ce, log.aux, log.load_cv
                 );
             }
+            self.maybe_checkpoint()?;
         }
         Ok(self.summary())
+    }
+
+    /// Rank-failure recovery: rebuild the trainer from the last
+    /// checkpoint with `kills` added to the dead set and resume. The
+    /// re-executed span (`at − ckpt_step`) accrues to `recovery_steps`.
+    fn recover(&mut self, kills: &[usize], at: usize) -> Result<()> {
+        let w = self.cfg.cluster.world();
+        for &r in kills {
+            if r >= w {
+                return Err(crate::fault_err!(
+                    "kill:rank={r} is outside the world of {w} ranks"
+                ));
+            }
+        }
+        let Some((cstep, path)) = self.last_ckpt.clone() else {
+            return Err(crate::fault_err!(
+                "rank failure at step {at} but no checkpoint exists — run with \
+                 --ckpt-every N (and --ckpt-dir) to enable recovery"
+            ));
+        };
+        for &r in kills {
+            self.fault_timeline.push_fault(&format!("rank_fail/rank{r}"), 0.0);
+        }
+        let mut cfg = self.cfg.clone();
+        cfg.opts.dead_ranks.extend_from_slice(kills);
+        cfg.opts.dead_ranks.sort_unstable();
+        cfg.opts.dead_ranks.dedup();
+        let mut fresh = NativeTrainer::from_checkpoint(cfg, &path)?;
+        // Carry the history from before the checkpoint: those steps are
+        // not re-executed, so their logs and aggregates stand.
+        for log in self.logs.iter().filter(|l| l.step < cstep) {
+            fresh.agg.push(&log.report);
+            match log.report.comm_schedule.as_str() {
+                "flat" => fresh.fwd_flat += 1,
+                "hier" => fresh.fwd_hier += 1,
+                _ => {}
+            }
+            match log.report.comm_schedule_bwd.as_str() {
+                "flat" => fresh.bwd_flat += 1,
+                "hier" => fresh.bwd_hier += 1,
+                _ => {}
+            }
+            fresh.logs.push(log.clone());
+        }
+        fresh.recovery_steps = self.recovery_steps + (at - cstep);
+        fresh.last_ckpt = self.last_ckpt.clone();
+        fresh.fault_timeline = std::mem::take(&mut self.fault_timeline);
+        *self = fresh;
+        Ok(())
+    }
+
+    /// Build a trainer whose model, optimizer, data-RNG, and step index
+    /// come from the checkpoint at `path` (cfg supplies everything the
+    /// checkpoint doesn't carry: cluster, faults, hyperparameters).
+    pub fn from_checkpoint(cfg: TrainRunConfig, path: &Path) -> Result<NativeTrainer> {
+        let state = ckpt::load(path)?;
+        state.validate_dims(
+            cfg.moe.num_experts,
+            cfg.moe.d_model,
+            cfg.moe.ffn_hidden,
+            cfg.num_classes,
+            cfg.cluster.world(),
+        )?;
+        let d = cfg.moe.d_model;
+        let e = cfg.moe.num_experts;
+        let h = cfg.moe.ffn_hidden;
+        let c = cfg.num_classes;
+        let mut t = NativeTrainer::new(cfg)?;
+        t.layer.gate_weight = Tensor::from_vec(state.gate_weight, &[d, e])?;
+        t.head_w = Tensor::from_vec(state.head_w, &[d, c])?;
+        if state.head_b.len() != c {
+            return Err(crate::ckpt_err!(
+                "head bias length {} does not match num_classes {c}",
+                state.head_b.len()
+            ));
+        }
+        t.head_b = state.head_b;
+        for (i, (ffn, p)) in t.layer.experts.iter_mut().zip(state.experts).enumerate() {
+            if p.b1.len() != h || p.b2.len() != d {
+                return Err(crate::ckpt_err!(
+                    "expert {i} bias lengths ({}, {}) do not match dims ({h}, {d})",
+                    p.b1.len(),
+                    p.b2.len()
+                ));
+            }
+            ffn.w1 = Tensor::from_vec(p.w1, &[d, h])?;
+            ffn.b1 = p.b1;
+            ffn.w2 = Tensor::from_vec(p.w2, &[h, d])?;
+            ffn.b2 = p.b2;
+        }
+        t.opt.restore_state(state.adam_t, state.adam_m, state.adam_v)?;
+        t.data_rng = Rng::from_state(state.data_rng);
+        t.step_idx = state.step as usize;
+        Ok(t)
+    }
+
+    /// Snapshot of everything a bit-exact resume needs.
+    fn train_state(&self) -> ckpt::TrainState {
+        let (adam_t, adam_m, adam_v) = self.opt.export_state();
+        ckpt::TrainState {
+            step: self.step_idx as u64,
+            num_experts: self.cfg.moe.num_experts as u64,
+            d_model: self.cfg.moe.d_model as u64,
+            ffn_hidden: self.cfg.moe.ffn_hidden as u64,
+            num_classes: self.cfg.num_classes as u64,
+            world: self.cfg.cluster.world() as u64,
+            gate_weight: self.layer.gate_weight.data().to_vec(),
+            head_w: self.head_w.data().to_vec(),
+            head_b: self.head_b.clone(),
+            experts: self
+                .layer
+                .experts
+                .iter()
+                .map(|f| ckpt::ExpertParams {
+                    w1: f.w1.data().to_vec(),
+                    b1: f.b1.clone(),
+                    w2: f.w2.data().to_vec(),
+                    b2: f.b2.clone(),
+                })
+                .collect(),
+            adam_t,
+            adam_m,
+            adam_v,
+            data_rng: self.data_rng.state(),
+        }
+    }
+
+    /// Write a checkpoint of the current state into `dir` and remember
+    /// it as the recovery point. Returns the file's path.
+    pub fn checkpoint(&mut self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("ckpt_{:06}.bin", self.step_idx));
+        ckpt::save(&path, &self.train_state())?;
+        self.last_ckpt = Some((self.step_idx, path.clone()));
+        Ok(path)
+    }
+
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        if self.cfg.ckpt_every == 0 || self.step_idx % self.cfg.ckpt_every != 0 {
+            return Ok(());
+        }
+        let Some(dir) = self.cfg.ckpt_dir.clone() else { return Ok(()) };
+        self.checkpoint(Path::new(&dir))?;
+        Ok(())
     }
 
     /// Summary over everything run so far.
@@ -353,6 +601,7 @@ impl NativeTrainer {
             breakdown: self.agg.breakdown(),
             fwd_schedules: (self.fwd_flat, self.fwd_hier),
             bwd_schedules: (self.bwd_flat, self.bwd_hier),
+            recovery_steps: self.recovery_steps,
         }
     }
 
@@ -386,6 +635,9 @@ mod tests {
             noise: 0.3,
             seed: 0,
             log_every: 0,
+            faults: FaultPlan::none(),
+            ckpt_every: 0,
+            ckpt_dir: None,
         }
     }
 

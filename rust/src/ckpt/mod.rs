@@ -1,0 +1,345 @@
+//! Training checkpoints: model + optimizer + RNG streams.
+//!
+//! A checkpoint is everything needed to resume `NativeTrainer` **bit-
+//! identically**: gate/head/expert parameters, Adam's step counter and
+//! both moment lists, the data RNG mid-stream state (including the
+//! Box–Muller spare) and the step index. The format is a little-endian
+//! binary container — f32 bit patterns are written verbatim, because a
+//! decimal round-trip (JSON) would break the exactness guarantee the
+//! recovery tests assert.
+//!
+//! Layout: `"HMCK"` magic, `u32` version, `u64` step, five `u64` dims
+//! `(E, d, h, classes, world)`, then length-prefixed f32 vectors for
+//! gate weight / head weight / head bias, `E` expert blocks (w1, b1,
+//! w2, b2), the Adam state (t, then m and v vector lists) and the RNG
+//! state.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::ckpt_err;
+use crate::error::{HetuError, Result};
+use crate::util::rng::RngState;
+
+const MAGIC: &[u8; 4] = b"HMCK";
+const VERSION: u32 = 1;
+
+/// One expert FFN's flat parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExpertParams {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+/// Full resumable training state (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    /// Step index the checkpoint resumes *at* (steps `< step` are done).
+    pub step: u64,
+    pub num_experts: u64,
+    pub d_model: u64,
+    pub ffn_hidden: u64,
+    pub num_classes: u64,
+    pub world: u64,
+    pub gate_weight: Vec<f32>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+    pub experts: Vec<ExpertParams>,
+    pub adam_t: u64,
+    pub adam_m: Vec<Vec<f32>>,
+    pub adam_v: Vec<Vec<f32>>,
+    pub data_rng: RngState,
+}
+
+impl TrainState {
+    /// Check the checkpoint's model dims against a config about to
+    /// resume from it. `world` may legitimately differ only in its dead
+    /// set, which the config carries — so it is compared as the full
+    /// simulated world size, which recovery keeps fixed.
+    pub fn validate_dims(
+        &self,
+        num_experts: usize,
+        d_model: usize,
+        ffn_hidden: usize,
+        num_classes: usize,
+        world: usize,
+    ) -> Result<()> {
+        let want = [
+            ("num_experts", self.num_experts, num_experts as u64),
+            ("d_model", self.d_model, d_model as u64),
+            ("ffn_hidden", self.ffn_hidden, ffn_hidden as u64),
+            ("num_classes", self.num_classes, num_classes as u64),
+            ("world", self.world, world as u64),
+        ];
+        for (name, got, expect) in want {
+            if got != expect {
+                return Err(ckpt_err!(
+                    "checkpoint {name}={got} does not match the config's {name}={expect}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Write a checkpoint atomically (tmp file + rename, so a crash mid-save
+/// never leaves a truncated checkpoint behind for recovery to trip on).
+pub fn save(path: &Path, state: &TrainState) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| {
+                ckpt_err!("cannot create checkpoint dir '{}': {e}", dir.display())
+            })?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let file = std::fs::File::create(&tmp)
+            .map_err(|e| ckpt_err!("cannot create '{}': {e}", tmp.display()))?;
+        let mut w = BufWriter::new(file);
+        write_state(&mut w, state)
+            .map_err(|e| ckpt_err!("cannot write '{}': {e}", tmp.display()))?;
+        w.flush().map_err(|e| ckpt_err!("cannot flush '{}': {e}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .map_err(|e| ckpt_err!("cannot move checkpoint into place at '{}': {e}", path.display()))
+}
+
+/// Load a checkpoint written by [`save`].
+pub fn load(path: &Path) -> Result<TrainState> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| ckpt_err!("cannot open checkpoint '{}': {e}", path.display()))?;
+    let mut r = BufReader::new(file);
+    read_state(&mut r).map_err(|e| match e {
+        HetuError::Ckpt(m) => ckpt_err!("'{}': {m}", path.display()),
+        other => ckpt_err!("cannot read '{}': {other}", path.display()),
+    })
+}
+
+fn write_state<W: Write>(w: &mut W, s: &TrainState) -> std::io::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    for v in [s.step, s.num_experts, s.d_model, s.ffn_hidden, s.num_classes, s.world] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    write_f32s(w, &s.gate_weight)?;
+    write_f32s(w, &s.head_w)?;
+    write_f32s(w, &s.head_b)?;
+    w.write_all(&(s.experts.len() as u64).to_le_bytes())?;
+    for e in &s.experts {
+        write_f32s(w, &e.w1)?;
+        write_f32s(w, &e.b1)?;
+        write_f32s(w, &e.w2)?;
+        write_f32s(w, &e.b2)?;
+    }
+    w.write_all(&s.adam_t.to_le_bytes())?;
+    w.write_all(&(s.adam_m.len() as u64).to_le_bytes())?;
+    for t in s.adam_m.iter().chain(s.adam_v.iter()) {
+        write_f32s(w, t)?;
+    }
+    for lane in s.data_rng.s {
+        w.write_all(&lane.to_le_bytes())?;
+    }
+    match s.data_rng.gauss_spare {
+        Some(z) => {
+            w.write_all(&[1u8])?;
+            w.write_all(&z.to_le_bytes())?;
+        }
+        None => w.write_all(&[0u8])?,
+    }
+    Ok(())
+}
+
+fn read_state<R: Read>(r: &mut R) -> Result<TrainState> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(ckpt_err!("bad magic {magic:?} (not a HetuMoE checkpoint)"));
+    }
+    let version = read_u32(r)?;
+    if version != VERSION {
+        return Err(ckpt_err!("unsupported checkpoint version {version} (expected {VERSION})"));
+    }
+    let step = read_u64(r)?;
+    let num_experts = read_u64(r)?;
+    let d_model = read_u64(r)?;
+    let ffn_hidden = read_u64(r)?;
+    let num_classes = read_u64(r)?;
+    let world = read_u64(r)?;
+    let gate_weight = read_f32s(r)?;
+    let head_w = read_f32s(r)?;
+    let head_b = read_f32s(r)?;
+    let n_experts = read_u64(r)? as usize;
+    if n_experts != num_experts as usize {
+        return Err(ckpt_err!("expert block count {n_experts} != num_experts {num_experts}"));
+    }
+    let mut experts = Vec::with_capacity(n_experts);
+    for _ in 0..n_experts {
+        experts.push(ExpertParams {
+            w1: read_f32s(r)?,
+            b1: read_f32s(r)?,
+            w2: read_f32s(r)?,
+            b2: read_f32s(r)?,
+        });
+    }
+    let adam_t = read_u64(r)?;
+    let n_tensors = read_u64(r)? as usize;
+    let mut adam_m = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        adam_m.push(read_f32s(r)?);
+    }
+    let mut adam_v = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        adam_v.push(read_f32s(r)?);
+    }
+    let mut s = [0u64; 4];
+    for lane in s.iter_mut() {
+        *lane = read_u64(r)?;
+    }
+    let mut flag = [0u8; 1];
+    r.read_exact(&mut flag)?;
+    let gauss_spare = match flag[0] {
+        0 => None,
+        1 => {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            Some(f64::from_le_bytes(b))
+        }
+        other => return Err(ckpt_err!("corrupt RNG spare flag {other}")),
+    };
+    Ok(TrainState {
+        step,
+        num_experts,
+        d_model,
+        ffn_hidden,
+        num_classes,
+        world,
+        gate_weight,
+        head_w,
+        head_b,
+        experts,
+        adam_t,
+        adam_m,
+        adam_v,
+        data_rng: RngState { s, gauss_spare },
+    })
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> std::io::Result<()> {
+    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+const MAX_VEC: u64 = 1 << 32;
+
+fn read_f32s<R: Read>(r: &mut R) -> Result<Vec<f32>> {
+    let n = read_u64(r)?;
+    if n > MAX_VEC {
+        return Err(ckpt_err!("corrupt vector length {n}"));
+    }
+    let mut out = Vec::with_capacity(n as usize);
+    let mut b = [0u8; 4];
+    for _ in 0..n {
+        r.read_exact(&mut b)?;
+        out.push(f32::from_le_bytes(b));
+    }
+    Ok(out)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_state() -> TrainState {
+        let mut rng = Rng::seed(99);
+        for _ in 0..5 {
+            rng.next_u64();
+        }
+        rng.normal(); // cache a spare so the Option path is exercised
+        TrainState {
+            step: 17,
+            num_experts: 2,
+            d_model: 3,
+            ffn_hidden: 4,
+            num_classes: 5,
+            world: 2,
+            gate_weight: vec![1.5, -2.25, f32::MIN_POSITIVE, 0.0, 3.0, -0.125],
+            head_w: vec![0.1; 15],
+            head_b: vec![-0.5; 5],
+            experts: (0..2)
+                .map(|i| ExpertParams {
+                    w1: vec![i as f32 + 0.25; 12],
+                    b1: vec![0.0; 4],
+                    w2: vec![-(i as f32); 12],
+                    b2: vec![1e-30; 3],
+                })
+                .collect(),
+            adam_t: 17,
+            adam_m: vec![vec![0.5; 6], vec![0.25; 15]],
+            adam_v: vec![vec![0.125; 6], vec![1e-9; 15]],
+            data_rng: rng.state(),
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip_is_exact() {
+        let dir = std::env::temp_dir().join("hetu_ckpt_test_rt");
+        let path = dir.join("ckpt_000017.bin");
+        let state = sample_state();
+        save(&path, &state).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(state, loaded, "bit-exact round trip incl. RNG spare");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_truncation() {
+        let dir = std::env::temp_dir().join("hetu_ckpt_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let garbage = dir.join("garbage.bin");
+        std::fs::write(&garbage, b"NOPE").unwrap();
+        assert!(load(&garbage).is_err());
+
+        let trunc = dir.join("trunc.bin");
+        let good = dir.join("good.bin");
+        save(&good, &sample_state()).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        std::fs::write(&trunc, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&trunc).is_err(), "truncated checkpoint must not load");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_a_typed_error() {
+        let err = load(Path::new("/definitely/not/here.bin")).unwrap_err();
+        assert!(matches!(err, HetuError::Ckpt(_)));
+        assert!(err.to_string().contains("checkpoint"));
+    }
+
+    #[test]
+    fn validate_dims_catches_mismatch() {
+        let s = sample_state();
+        assert!(s.validate_dims(2, 3, 4, 5, 2).is_ok());
+        let err = s.validate_dims(4, 3, 4, 5, 2).unwrap_err();
+        assert!(err.to_string().contains("num_experts"));
+        assert!(s.validate_dims(2, 3, 4, 5, 8).is_err(), "world is pinned");
+    }
+}

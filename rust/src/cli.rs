@@ -31,12 +31,11 @@ impl Args {
                 if let Some((k, v)) = rest.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
                 } else {
-                    match iter.peek() {
-                        Some(next) if !next.starts_with("--") => {
-                            let v = iter.next().unwrap();
+                    match iter.next_if(|next| !next.starts_with("--")) {
+                        Some(v) => {
                             out.options.insert(rest.to_string(), v);
                         }
-                        _ => out.flags.push(rest.to_string()),
+                        None => out.flags.push(rest.to_string()),
                     }
                 }
             } else {

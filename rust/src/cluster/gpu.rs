@@ -47,6 +47,14 @@ impl GpuModel {
     }
 }
 
+/// Extra simulated compute time a straggling rank adds on top of a
+/// baseline kernel/phase wall: `base·(factor−1)`, clamped so a healthy
+/// factor (≤ 1) injects nothing. Fault injection is additive — the base
+/// phase time stays untouched so breakdowns remain honest.
+pub fn straggle_extra(base: f64, factor: f64) -> f64 {
+    base * (factor - 1.0).max(0.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

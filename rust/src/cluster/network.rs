@@ -94,6 +94,16 @@ impl NetworkModel {
     pub fn device_copy_time(&self, bytes: f64) -> f64 {
         bytes / self.cfg.gpu_mem_bw
     }
+
+    /// Extra simulated time a degraded NIC adds on top of a baseline
+    /// exchange wall: `base·(factor−1)`, clamped so a healthy factor
+    /// (≤ 1) injects nothing. The exchange serializes on the slowest
+    /// NIC, so callers pass the worst per-node degradation factor.
+    /// Additive by design — the base exchange time is never rescaled,
+    /// keeping fault-free accounting bit-identical.
+    pub fn degraded_extra(&self, base: f64, factor: f64) -> f64 {
+        base * (factor - 1.0).max(0.0)
+    }
 }
 
 #[cfg(test)]

@@ -2,50 +2,158 @@
 //!
 //! HetuMoE partitions the `E` experts contiguously across the `W`
 //! ranks, `E/W` per rank, so expert `e` lives on rank `e / (E/W)`.
-//! Both the training layer and the serving router (and now the backward
+//! Both the training layer and the serving router (and the backward
 //! pass's traffic-matrix construction) depend on this one formula; it
 //! lives here so the two paths can never disagree about where an
 //! expert is.
+//!
+//! Rank failure breaks contiguity: [`ExpertPlacement::with_dead`]
+//! elastically remaps the dead ranks' experts onto the survivors
+//! (greedy least-loaded, deterministic), and every lookup generalizes
+//! through an explicit expert→rank table. The contiguous case keeps the
+//! closed-form arithmetic — no table is materialized, so the healthy
+//! path costs exactly what it did before elasticity existed.
 
-/// Contiguous expert partitioning over a world of ranks.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Expert partitioning over a world of ranks: contiguous by default,
+/// table-based after an elastic remap around dead ranks.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ExpertPlacement {
     pub num_experts: usize,
     pub world: usize,
+    /// Explicit expert→rank table; `None` means contiguous `e/(E/W)`.
+    table: Option<Vec<usize>>,
+    /// Per-rank hosted expert lists (ascending), only when remapped.
+    hosted: Vec<Vec<usize>>,
 }
 
 impl ExpertPlacement {
-    /// The one constructor every path uses. Divisibility is validated at
-    /// configuration time (`MoeLayer::native` & co. reject indivisible
-    /// `E`/`W` with a config error); here it is a programming-error
-    /// assert, not a recoverable condition.
+    /// The one constructor every healthy path uses. Divisibility is
+    /// validated at configuration time (`MoeLayer::native` & co. reject
+    /// indivisible `E`/`W` with a config error); here it is a
+    /// programming-error assert, not a recoverable condition.
     pub fn new(num_experts: usize, world: usize) -> ExpertPlacement {
         debug_assert!(
             world > 0 && num_experts > 0 && num_experts % world == 0,
             "num_experts {num_experts} must be a positive multiple of world {world}"
         );
-        ExpertPlacement { num_experts, world }
+        ExpertPlacement { num_experts, world, table: None, hosted: Vec::new() }
     }
 
-    /// Experts hosted per rank (`E/W`).
+    /// Elastic placement for a world with dead ranks: start from the
+    /// contiguous layout, then move each dead rank's experts — dead
+    /// ranks in ascending order, experts in ascending order — one at a
+    /// time onto the surviving rank currently hosting the fewest
+    /// experts (ties → lowest rank id). Greedy least-loaded keeps the
+    /// remapped load within one expert of balanced, and the order makes
+    /// the result a pure function of `(E, W, dead)` so training and
+    /// serving can never disagree about the recovered layout.
+    ///
+    /// With no dead ranks this *is* [`ExpertPlacement::new`] (compares
+    /// equal), so healthy paths stay on the closed-form arithmetic.
+    pub fn with_dead(num_experts: usize, world: usize, dead: &[usize]) -> ExpertPlacement {
+        let mut dead: Vec<usize> = dead.iter().copied().filter(|&r| r < world).collect();
+        dead.sort_unstable();
+        dead.dedup();
+        if dead.is_empty() {
+            return ExpertPlacement::new(num_experts, world);
+        }
+        debug_assert!(
+            dead.len() < world,
+            "cannot place {num_experts} experts with all {world} ranks dead"
+        );
+        let base = ExpertPlacement::new(num_experts, world);
+        let is_dead = |r: usize| dead.binary_search(&r).is_ok();
+        let mut hosted: Vec<Vec<usize>> = (0..world)
+            .map(|r| if is_dead(r) { Vec::new() } else { base.hosted_experts(r) })
+            .collect();
+        for &dr in &dead {
+            for e in base.hosted_experts(dr) {
+                let target = (0..world)
+                    .filter(|&r| !is_dead(r))
+                    .min_by_key(|&r| (hosted[r].len(), r))
+                    .expect("at least one survivor");
+                hosted[target].push(e);
+            }
+        }
+        let mut table = vec![0usize; num_experts];
+        for (r, list) in hosted.iter_mut().enumerate() {
+            list.sort_unstable();
+            for &e in list.iter() {
+                table[e] = r;
+            }
+        }
+        ExpertPlacement { num_experts, world, table: Some(table), hosted }
+    }
+
+    /// True for the contiguous `E/W`-per-rank layout (no remap active).
+    /// The hierarchical exchange and top-k dedup paths require this;
+    /// a remapped placement falls back to the flat exchange.
+    pub fn is_contiguous(&self) -> bool {
+        self.table.is_none()
+    }
+
+    /// Nominal experts hosted per rank (`E/W`) of the contiguous
+    /// layout. Under a remap, per-rank counts vary — use
+    /// [`ExpertPlacement::num_hosted`] / [`ExpertPlacement::max_hosted`].
     pub fn experts_per_rank(&self) -> usize {
         self.num_experts / self.world
     }
 
-    /// Rank hosting global expert `e` (the paper's `e / (E/W)`).
+    /// Rank hosting global expert `e` (the paper's `e / (E/W)` when
+    /// contiguous; the remap table otherwise).
     pub fn rank_of(&self, expert: usize) -> usize {
         debug_assert!(expert < self.num_experts);
-        expert / self.experts_per_rank()
+        match &self.table {
+            None => expert / self.experts_per_rank(),
+            Some(t) => t[expert],
+        }
     }
 
-    /// Local index of global expert `e` inside its host rank.
+    /// Local index of global expert `e` inside its host rank (its
+    /// position in the rank's ascending hosted list).
     pub fn local_of(&self, expert: usize) -> usize {
-        expert % self.experts_per_rank()
+        match &self.table {
+            None => expert % self.experts_per_rank(),
+            Some(t) => self.hosted[t[expert]]
+                .binary_search(&expert)
+                .expect("table and hosted lists agree"),
+        }
     }
 
     /// Global expert id of rank `r`'s `local`-th expert.
     pub fn expert_of(&self, rank: usize, local: usize) -> usize {
-        rank * self.experts_per_rank() + local
+        match &self.table {
+            None => rank * self.experts_per_rank() + local,
+            Some(_) => self.hosted[rank][local],
+        }
+    }
+
+    /// Global expert ids hosted by rank `r`, ascending. Empty for a
+    /// dead rank under a remap.
+    pub fn hosted_experts(&self, rank: usize) -> Vec<usize> {
+        match &self.table {
+            None => {
+                let epr = self.experts_per_rank();
+                (rank * epr..(rank + 1) * epr).collect()
+            }
+            Some(_) => self.hosted[rank].clone(),
+        }
+    }
+
+    /// Number of experts hosted by rank `r`.
+    pub fn num_hosted(&self, rank: usize) -> usize {
+        match &self.table {
+            None => self.experts_per_rank(),
+            Some(_) => self.hosted[rank].len(),
+        }
+    }
+
+    /// Largest per-rank hosted count (== `E/W` when contiguous).
+    pub fn max_hosted(&self) -> usize {
+        match &self.table {
+            None => self.experts_per_rank(),
+            Some(_) => self.hosted.iter().map(Vec::len).max().unwrap_or(0),
+        }
     }
 
     /// Collapse one source rank's per-expert kept counts into its row of
@@ -80,6 +188,10 @@ mod tests {
         assert_eq!(p.rank_of(7), 3);
         assert_eq!(p.local_of(3), 1);
         assert_eq!(p.expert_of(3, 1), 7);
+        assert!(p.is_contiguous());
+        assert_eq!(p.hosted_experts(1), vec![2, 3]);
+        assert_eq!(p.num_hosted(2), 2);
+        assert_eq!(p.max_hosted(), 2);
     }
 
     #[cfg(debug_assertions)]
@@ -95,5 +207,73 @@ mod tests {
         let kept = vec![vec![1usize, 2, 3, 4], vec![5, 6, 7, 8]];
         assert_eq!(p.traffic_matrix(&kept), vec![vec![3, 7], vec![11, 15]]);
         assert_eq!(p.rank_counts_row(&kept[0]), vec![3, 7]);
+    }
+
+    #[test]
+    fn with_dead_empty_is_contiguous() {
+        assert_eq!(ExpertPlacement::with_dead(8, 4, &[]), ExpertPlacement::new(8, 4));
+    }
+
+    #[test]
+    fn with_dead_redistributes_evenly_and_deterministically() {
+        let p = ExpertPlacement::with_dead(8, 4, &[1]);
+        assert!(!p.is_contiguous());
+        // Rank 1's experts {2, 3} go to the least-loaded survivors:
+        // all tie at 2 hosted, so lowest ids win — rank 0 then rank 2.
+        assert_eq!(p.hosted_experts(0), vec![0, 1, 2]);
+        assert_eq!(p.hosted_experts(1), Vec::<usize>::new());
+        assert_eq!(p.hosted_experts(2), vec![3, 4, 5]);
+        assert_eq!(p.hosted_experts(3), vec![6, 7]);
+        // Pure function of (E, W, dead): rebuilt placements agree.
+        assert_eq!(p, ExpertPlacement::with_dead(8, 4, &[1]));
+        // Unsorted/duplicated dead lists normalize.
+        assert_eq!(p, ExpertPlacement::with_dead(8, 4, &[1, 1]));
+    }
+
+    #[test]
+    fn with_dead_lookups_are_consistent() {
+        for dead in [&[0usize][..], &[2], &[1, 3], &[0, 1]] {
+            let p = ExpertPlacement::with_dead(12, 4, dead);
+            let mut seen = vec![false; 12];
+            for r in 0..4 {
+                if dead.contains(&r) {
+                    assert_eq!(p.num_hosted(r), 0, "dead rank {r} hosts nothing");
+                }
+                for (l, e) in p.hosted_experts(r).into_iter().enumerate() {
+                    assert_eq!(p.rank_of(e), r);
+                    assert_eq!(p.local_of(e), l);
+                    assert_eq!(p.expert_of(r, l), e);
+                    assert!(!seen[e], "expert {e} placed twice");
+                    seen[e] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "every expert placed: dead={dead:?}");
+            // Survivor load stays within one expert of balanced.
+            let alive_counts: Vec<usize> = (0..4)
+                .filter(|r| !dead.contains(r))
+                .map(|r| p.num_hosted(r))
+                .collect();
+            let (lo, hi) = (
+                *alive_counts.iter().min().unwrap(),
+                *alive_counts.iter().max().unwrap(),
+            );
+            assert!(hi - lo <= 1, "unbalanced remap {alive_counts:?} for dead={dead:?}");
+            assert_eq!(p.max_hosted(), hi);
+        }
+    }
+
+    #[test]
+    fn with_dead_traffic_never_targets_dead_ranks() {
+        let p = ExpertPlacement::with_dead(8, 4, &[2]);
+        let kept = vec![vec![1usize; 8]; 4];
+        for row in p.traffic_matrix(&kept) {
+            assert_eq!(row[2], 0, "no tokens routed to the dead rank");
+            assert_eq!(row.iter().sum::<usize>(), 8);
+        }
+    }
+
+    #[test]
+    fn with_dead_ignores_out_of_range_ranks() {
+        assert_eq!(ExpertPlacement::with_dead(8, 4, &[9]), ExpertPlacement::new(8, 4));
     }
 }

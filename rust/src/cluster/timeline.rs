@@ -6,6 +6,17 @@
 
 use crate::util::json::Json;
 
+/// Whether an event is base phase work or injected fault delay. Keeping
+/// the two apart is what lets breakdowns stay honest under fault
+/// injection: `total_for`/`base_total` report only real phase time,
+/// while `injected_total`/`injected_for` account the added delay.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EventKind {
+    #[default]
+    Base,
+    Fault,
+}
+
 /// One recorded phase/event on the simulated clock.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Event {
@@ -14,6 +25,8 @@ pub struct Event {
     pub start: f64,
     /// Simulated duration (seconds).
     pub dur: f64,
+    /// Base phase time vs injected fault delay.
+    pub kind: EventKind,
 }
 
 /// An append-only simulated timeline with a running clock.
@@ -35,13 +48,36 @@ impl Timeline {
 
     /// Record an event of `dur` seconds starting now; advances the clock.
     pub fn push(&mut self, name: &str, dur: f64) {
-        self.events.push(Event { name: name.to_string(), start: self.clock, dur });
+        self.events.push(Event {
+            name: name.to_string(),
+            start: self.clock,
+            dur,
+            kind: EventKind::Base,
+        });
+        self.clock += dur;
+    }
+
+    /// Record injected fault delay (`straggle/*`, `retry/*`,
+    /// `rank_fail/*`) as a first-class event; advances the clock but is
+    /// kept out of the base-phase totals.
+    pub fn push_fault(&mut self, name: &str, dur: f64) {
+        self.events.push(Event {
+            name: name.to_string(),
+            start: self.clock,
+            dur,
+            kind: EventKind::Fault,
+        });
         self.clock += dur;
     }
 
     /// Record an event that overlaps (does not advance the clock).
     pub fn push_overlapped(&mut self, name: &str, dur: f64) {
-        self.events.push(Event { name: name.to_string(), start: self.clock, dur });
+        self.events.push(Event {
+            name: name.to_string(),
+            start: self.clock,
+            dur,
+            kind: EventKind::Base,
+        });
     }
 
     /// Advance the clock without an event (idle / barrier wait).
@@ -53,18 +89,40 @@ impl Timeline {
         &self.events
     }
 
-    /// Total duration attributed to events whose name starts with `prefix`.
+    /// Total *base* duration attributed to events whose name starts with
+    /// `prefix`. Injected fault delay is excluded so per-phase breakdowns
+    /// stay honest under fault injection (see [`Timeline::injected_for`]).
     pub fn total_for(&self, prefix: &str) -> f64 {
         self.events
             .iter()
-            .filter(|e| e.name.starts_with(prefix))
+            .filter(|e| e.kind == EventKind::Base && e.name.starts_with(prefix))
             .map(|e| e.dur)
             .sum()
     }
 
-    /// Sum of all event durations.
+    /// Injected fault delay attributed to events whose name starts with
+    /// `prefix`.
+    pub fn injected_for(&self, prefix: &str) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.kind == EventKind::Fault && e.name.starts_with(prefix))
+            .map(|e| e.dur)
+            .sum()
+    }
+
+    /// Sum of all event durations (base + injected).
     pub fn total(&self) -> f64 {
         self.events.iter().map(|e| e.dur).sum()
+    }
+
+    /// Sum of base phase durations only.
+    pub fn base_total(&self) -> f64 {
+        self.events.iter().filter(|e| e.kind == EventKind::Base).map(|e| e.dur).sum()
+    }
+
+    /// Sum of injected fault delay only.
+    pub fn injected_total(&self) -> f64 {
+        self.events.iter().filter(|e| e.kind == EventKind::Fault).map(|e| e.dur).sum()
     }
 
     /// Collapse into (name → total seconds) pairs in first-seen order.
@@ -84,10 +142,13 @@ impl Timeline {
     }
 
     /// Merge another timeline's events under a prefix, sequentially after
-    /// the current clock.
+    /// the current clock. Event kinds are preserved.
     pub fn absorb(&mut self, prefix: &str, other: &Timeline) {
         for e in other.events() {
-            self.push(&format!("{prefix}{}", e.name), e.dur);
+            match e.kind {
+                EventKind::Base => self.push(&format!("{prefix}{}", e.name), e.dur),
+                EventKind::Fault => self.push_fault(&format!("{prefix}{}", e.name), e.dur),
+            }
         }
     }
 
@@ -98,6 +159,13 @@ impl Timeline {
                 ("name", Json::str(e.name.clone())),
                 ("start", Json::num(e.start)),
                 ("dur", Json::num(e.dur)),
+                (
+                    "kind",
+                    Json::str(match e.kind {
+                        EventKind::Base => "base",
+                        EventKind::Fault => "fault",
+                    }),
+                ),
             ])
         }))
     }
@@ -158,5 +226,35 @@ mod tests {
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].str_field("name").unwrap(), "x");
         assert_eq!(arr[0].f64_field("dur").unwrap(), 0.25);
+        assert_eq!(arr[0].str_field("kind").unwrap(), "base");
+    }
+
+    #[test]
+    fn fault_events_separate_from_base_totals() {
+        let mut t = Timeline::new();
+        t.push("alltoall", 0.2);
+        t.push_fault("straggle/rank1", 0.5);
+        t.push_fault("retry/dispatch", 0.1);
+        t.push("alltoall", 0.3);
+        // Clock advances through fault delay (it is real simulated time)...
+        assert!((t.now() - 1.1).abs() < 1e-12);
+        // ...but base-phase aggregation stays honest.
+        assert!((t.total_for("alltoall") - 0.5).abs() < 1e-12);
+        assert!((t.total_for("straggle/") - 0.0).abs() < 1e-12);
+        assert!((t.injected_for("straggle/") - 0.5).abs() < 1e-12);
+        assert!((t.base_total() - 0.5).abs() < 1e-12);
+        assert!((t.injected_total() - 0.6).abs() < 1e-12);
+        assert!((t.total() - 1.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_preserves_event_kind() {
+        let mut inner = Timeline::new();
+        inner.push("work", 1.0);
+        inner.push_fault("straggle/rank0", 2.0);
+        let mut outer = Timeline::new();
+        outer.absorb("s/", &inner);
+        assert!((outer.base_total() - 1.0).abs() < 1e-12);
+        assert!((outer.injected_for("s/straggle/") - 2.0).abs() < 1e-12);
     }
 }

@@ -28,7 +28,10 @@ pub use hier_ragged::{
     DedupTraffic, HierLeg, PresumMeta, RowMeta,
 };
 pub use hierarchical::hierarchical_alltoall;
-pub use ragged::{ragged_combine, ragged_dispatch, split_wire_bytes};
+pub use ragged::{
+    ragged_combine, ragged_combine_placed, ragged_dispatch, ragged_dispatch_placed,
+    split_wire_bytes,
+};
 pub use schedule::{
     pick_schedule, pick_schedule_dedup, CommChoice, Schedule, SchedulePick,
 };

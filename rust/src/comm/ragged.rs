@@ -23,7 +23,7 @@
 //! [`alltoallv_timing`]: crate::comm::alltoall::alltoallv_timing
 //! [`hierarchical_alltoallv_timing`]: crate::comm::hierarchical::hierarchical_alltoallv_timing
 
-use crate::cluster::NetworkModel;
+use crate::cluster::{ExpertPlacement, NetworkModel};
 use crate::comm::alltoall::alltoallv_timing;
 use crate::comm::hierarchical::hierarchical_alltoallv_timing;
 use crate::comm::schedule::{transpose_counts, Schedule};
@@ -77,7 +77,8 @@ fn validate(
     net: &NetworkModel,
     buffers: &[Vec<f32>],
     kept: &[Vec<usize>],
-) -> Result<(usize, usize)> {
+    placement: &ExpertPlacement,
+) -> Result<usize> {
     let w = buffers.len();
     if w != net.cfg.world() {
         return Err(crate::comm_err!(
@@ -94,7 +95,14 @@ fn validate(
             "kept rows must all list the same expert count divisible by {w}"
         ));
     }
-    Ok((e, e / w))
+    if placement.num_experts != e || placement.world != w {
+        return Err(crate::comm_err!(
+            "placement covers {} experts over {} ranks, exchange has {e} over {w}",
+            placement.num_experts,
+            placement.world
+        ));
+    }
+    Ok(e)
 }
 
 fn timing_for(
@@ -122,7 +130,32 @@ pub fn ragged_dispatch(
     d: usize,
     schedule: Schedule,
 ) -> Result<CommTiming> {
-    let (e, epr) = validate(net, buffers, kept)?;
+    let w = buffers.len().max(1);
+    let e = kept.first().map(|r| r.len()).unwrap_or(0);
+    if e == 0 || e % w != 0 {
+        // Let the placement-aware path produce the shape error.
+        let p = ExpertPlacement::new(w, w);
+        return ragged_dispatch_placed(net, buffers, kept, d, schedule, &p);
+    }
+    let placement = ExpertPlacement::new(e, w);
+    ragged_dispatch_placed(net, buffers, kept, d, schedule, &placement)
+}
+
+/// [`ragged_dispatch`] generalized over an arbitrary (possibly
+/// elastically remapped) expert placement: each destination rank
+/// receives its **hosted** experts' rows — whatever set the placement
+/// assigns it — in ascending expert order, each expert's batch
+/// contiguous and source-ordered. A dead rank hosting nothing receives
+/// an empty buffer.
+pub fn ragged_dispatch_placed(
+    net: &NetworkModel,
+    buffers: &mut [Vec<f32>],
+    kept: &[Vec<usize>],
+    d: usize,
+    schedule: Schedule,
+    placement: &ExpertPlacement,
+) -> Result<CommTiming> {
+    let e = validate(net, buffers, kept, placement)?;
     let w = buffers.len();
     for (s, buf) in buffers.iter().enumerate() {
         let expect: usize = kept[s].iter().sum::<usize>() * d;
@@ -149,15 +182,16 @@ pub fn ragged_dispatch(
     // ---- data movement: expert-major receive layout ----
     let mut out: Vec<Vec<f32>> = (0..w)
         .map(|r| {
-            let total: usize = (0..epr)
-                .map(|le| kept.iter().map(|row| row[r * epr + le]).sum::<usize>())
+            let total: usize = placement
+                .hosted_experts(r)
+                .into_iter()
+                .map(|ge| kept.iter().map(|row| row[ge]).sum::<usize>())
                 .sum();
             Vec::with_capacity(total * d)
         })
         .collect();
     for (r, out_r) in out.iter_mut().enumerate() {
-        for le in 0..epr {
-            let ge = r * epr + le;
+        for ge in placement.hosted_experts(r) {
             for s in 0..w {
                 let lo = offs[s][ge] * d;
                 let hi = offs[s][ge + 1] * d;
@@ -169,7 +203,7 @@ pub fn ragged_dispatch(
         *b = o;
     }
 
-    let counts = rank_counts(kept, epr);
+    let counts = placement.traffic_matrix(kept);
     Ok(timing_for(net, &counts, d * 4, schedule))
 }
 
@@ -185,23 +219,46 @@ pub fn ragged_combine(
     d: usize,
     schedule: Schedule,
 ) -> Result<CommTiming> {
-    let (e, epr) = validate(net, buffers, kept)?;
+    let w = buffers.len().max(1);
+    let e = kept.first().map(|r| r.len()).unwrap_or(0);
+    if e == 0 || e % w != 0 {
+        let p = ExpertPlacement::new(w, w);
+        return ragged_combine_placed(net, buffers, kept, d, schedule, &p);
+    }
+    let placement = ExpertPlacement::new(e, w);
+    ragged_combine_placed(net, buffers, kept, d, schedule, &placement)
+}
+
+/// [`ragged_combine`] generalized over an arbitrary (possibly
+/// elastically remapped) expert placement — the exact inverse of
+/// [`ragged_dispatch_placed`] under the same placement.
+pub fn ragged_combine_placed(
+    net: &NetworkModel,
+    buffers: &mut [Vec<f32>],
+    kept: &[Vec<usize>],
+    d: usize,
+    schedule: Schedule,
+    placement: &ExpertPlacement,
+) -> Result<CommTiming> {
+    let e = validate(net, buffers, kept, placement)?;
     let w = buffers.len();
     // Offsets (rows) of block (local expert, source) inside each owner
-    // rank's expert-major buffer.
+    // rank's expert-major buffer, local expert = position in the rank's
+    // hosted list.
     let mut block_off: Vec<Vec<usize>> = Vec::with_capacity(w);
     for r in 0..w {
-        let mut off = vec![0usize; epr * w + 1];
-        for le in 0..epr {
+        let hosted = placement.hosted_experts(r);
+        let mut off = vec![0usize; hosted.len() * w + 1];
+        for (le, &ge) in hosted.iter().enumerate() {
             for s in 0..w {
                 let i = le * w + s;
-                off[i + 1] = off[i] + kept[s][r * epr + le];
+                off[i + 1] = off[i] + kept[s][ge];
             }
         }
         block_off.push(off);
     }
     for (r, buf) in buffers.iter().enumerate() {
-        let expect = block_off[r][epr * w] * d;
+        let expect = block_off[r].last().copied().unwrap_or(0) * d;
         if buf.len() != expect {
             return Err(crate::comm_err!(
                 "rank {r}: expert-major buffer has {} elements, kept counts say {expect}",
@@ -219,8 +276,8 @@ pub fn ragged_combine(
         .collect();
     for (s, out_s) in out.iter_mut().enumerate() {
         for ge in 0..e {
-            let r = ge / epr;
-            let le = ge % epr;
+            let r = placement.rank_of(ge);
+            let le = placement.local_of(ge);
             let lo = block_off[r][le * w + s] * d;
             let hi = block_off[r][le * w + s + 1] * d;
             out_s.extend_from_slice(&buffers[r][lo..hi]);
@@ -230,7 +287,7 @@ pub fn ragged_combine(
         *b = o;
     }
 
-    let counts_t = transpose_counts(&rank_counts(kept, epr));
+    let counts_t = transpose_counts(&placement.traffic_matrix(kept));
     Ok(timing_for(net, &counts_t, d * 4, schedule))
 }
 
@@ -377,6 +434,59 @@ mod tests {
         let wb = split_wire_bytes(&counts, 2, 2);
         assert_eq!(wb.intra, (3 + 7) * 2);
         assert_eq!(wb.inter, (5 + 2) * 2);
+    }
+
+    #[test]
+    fn placed_round_trip_with_dead_rank() {
+        use crate::cluster::ExpertPlacement;
+        let m = net(2, 2);
+        let w = 4;
+        let e = 8;
+        let placement = ExpertPlacement::with_dead(e, w, &[2]);
+        // Rank 2 is dead: it sources no tokens and hosts no experts.
+        let kept: Vec<Vec<usize>> = (0..w)
+            .map(|s| {
+                if s == 2 {
+                    vec![0usize; e]
+                } else {
+                    (0..e).map(|ge| (s + ge) % 3).collect()
+                }
+            })
+            .collect();
+        let d = 2;
+        let mut bufs = tagged(&kept, d);
+        assert!(bufs[2].is_empty());
+        let orig = bufs.clone();
+        ragged_dispatch_placed(&m, &mut bufs, &kept, d, Schedule::Flat, &placement).unwrap();
+        // The dead rank received nothing; survivors hold their hosted
+        // experts' rows.
+        assert!(bufs[2].is_empty());
+        for r in 0..w {
+            let expect: usize = placement
+                .hosted_experts(r)
+                .into_iter()
+                .map(|ge| kept.iter().map(|row| row[ge]).sum::<usize>())
+                .sum();
+            assert_eq!(bufs[r].len(), expect * d, "rank {r}");
+        }
+        // No traffic ever targets the dead rank.
+        for row in placement.traffic_matrix(&kept) {
+            assert_eq!(row[2], 0);
+        }
+        ragged_combine_placed(&m, &mut bufs, &kept, d, Schedule::Flat, &placement).unwrap();
+        assert_eq!(bufs, orig, "combine inverts dispatch under remap");
+    }
+
+    #[test]
+    fn placed_rejects_mismatched_placement() {
+        use crate::cluster::ExpertPlacement;
+        let m = net(1, 2);
+        let kept = vec![vec![1usize, 0, 0, 1], vec![0, 1, 1, 0]];
+        let mut bufs = tagged(&kept, 2);
+        let wrong = ExpertPlacement::new(8, 2);
+        assert!(
+            ragged_dispatch_placed(&m, &mut bufs, &kept, 2, Schedule::Flat, &wrong).is_err()
+        );
     }
 
     #[test]

@@ -25,6 +25,9 @@ pub struct MetricsAgg {
     comm_exposed: f64,
     compute_exposed: f64,
     comm_hidden: f64,
+    injected_delay: f64,
+    faults_injected: usize,
+    retries: usize,
     // Per-step extremes (means average away burst regressions, so the
     // aggregation keeps min/max too; not Welford, whose derived
     // Default would seed min/max at 0.0).
@@ -77,6 +80,9 @@ impl MetricsAgg {
         self.comm_exposed += report.comm_exposed;
         self.compute_exposed += report.compute_exposed;
         self.comm_hidden += report.comm_hidden;
+        self.injected_delay += report.injected_delay;
+        self.faults_injected += report.faults_injected;
+        self.retries += report.retries;
     }
 
     pub fn steps(&self) -> usize {
@@ -121,6 +127,9 @@ impl MetricsAgg {
             } else {
                 0.0
             },
+            injected_delay: self.injected_delay / n,
+            faults_injected: self.faults_injected,
+            retries: self.retries,
         }
     }
 }
@@ -171,6 +180,12 @@ pub struct Breakdown {
     /// Fraction of all exchange time hidden under expert compute over
     /// the whole run (0 when every step ran unchunked).
     pub overlap_efficiency: f64,
+    /// Mean injected fault delay per step (0 on a healthy run).
+    pub injected_delay: f64,
+    /// Injected fault events over the whole run (a count, not a mean).
+    pub faults_injected: usize,
+    /// Transient-failure retries charged over the whole run (a count).
+    pub retries: usize,
 }
 
 impl Breakdown {

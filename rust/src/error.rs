@@ -26,6 +26,10 @@ pub enum HetuError {
     Json(String),
     /// Gating failure (e.g. assignment did not converge).
     Gating(String),
+    /// Fault-injection spec or recovery-path failure.
+    Fault(String),
+    /// Checkpoint missing, malformed or incompatible with the config.
+    Ckpt(String),
     /// Underlying I/O error.
     Io(std::io::Error),
 }
@@ -43,6 +47,8 @@ impl fmt::Display for HetuError {
             ),
             HetuError::Json(m) => write!(f, "json error: {m}"),
             HetuError::Gating(m) => write!(f, "gating error: {m}"),
+            HetuError::Fault(m) => write!(f, "fault error: {m}"),
+            HetuError::Ckpt(m) => write!(f, "checkpoint error: {m}"),
             HetuError::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -76,6 +82,14 @@ macro_rules! shape_err {
 macro_rules! comm_err {
     ($($arg:tt)*) => { $crate::error::HetuError::Comm(format!($($arg)*)) };
 }
+#[macro_export]
+macro_rules! fault_err {
+    ($($arg:tt)*) => { $crate::error::HetuError::Fault(format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! ckpt_err {
+    ($($arg:tt)*) => { $crate::error::HetuError::Ckpt(format!($($arg)*)) };
+}
 
 #[cfg(test)]
 mod tests {
@@ -104,5 +118,9 @@ mod tests {
         assert!(matches!(e, HetuError::Shape(_)));
         let e = comm_err!("rank {}", 7);
         assert!(matches!(e, HetuError::Comm(ref m) if m.contains('7')));
+        let e = fault_err!("bad clause");
+        assert!(e.to_string().contains("fault error: bad clause"));
+        let e = ckpt_err!("magic mismatch");
+        assert!(e.to_string().contains("checkpoint error: magic mismatch"));
     }
 }

@@ -1,0 +1,457 @@
+//! Deterministic fault injection: stragglers, NIC degradation,
+//! transient exchange failures and hard rank failures, all scheduled by
+//! a seeded, fully reproducible [`FaultPlan`].
+//!
+//! The plan is a pure function of `(spec, step)`: `at_step` derives the
+//! same [`StepFaults`] for a given step on every run (chaos mode hashes
+//! the seed with the step index into a fresh RNG stream per step), so a
+//! faulted run is exactly replayable. Injection is **purely additive on
+//! the simulated clock** — a fault never changes token data, routing,
+//! the flat-vs-hier schedule pick or the chunk count, which is what
+//! keeps a no-fault run bit-identical to a build without this module
+//! and lets determinism tests compare faulted and clean runs
+//! loss-for-loss.
+//!
+//! Grammar (clauses joined by `;`):
+//!
+//! ```text
+//!   straggle:rank=R,x=F[,from=S][,until=T]   rank R's expert compute ×F
+//!   nic:node=N,x=F[,from=S][,until=T]        node N's NIC time ×F
+//!   flaky:rank=R,step=S[,n=K]                K transient exchange
+//!                                            failures at step S (retried
+//!                                            with capped exponential
+//!                                            backoff, charged on the
+//!                                            simulated clock)
+//!   kill:rank=R,step=S                       hard rank failure at step S
+//!                                            (training recovers from the
+//!                                            last checkpoint onto the
+//!                                            remapped placement)
+//!   dead:rank=R                              rank R is down from step 0
+//!   chaos:seed=N                             seeded random stragglers /
+//!                                            NIC degradation / flakiness
+//!                                            every step (no kills)
+//! ```
+//!
+//! A spec naming an existing file loads that file: one clause per line,
+//! `#` comments and blank lines ignored.
+
+use crate::error::{HetuError, Result};
+use crate::moe::StepReport;
+use crate::util::rng::{hash_u64, Rng};
+
+/// Simulated seconds before a transient exchange failure is detected.
+pub const RETRY_TIMEOUT: f64 = 2e-3;
+/// Base backoff of the capped exponential retry policy.
+pub const RETRY_BACKOFF_BASE: f64 = 1e-3;
+/// Backoff cap — waits never exceed this.
+pub const RETRY_BACKOFF_CAP: f64 = 16e-3;
+/// Retries allowed before an exchange failure is no longer transient.
+pub const MAX_RETRIES: u32 = 8;
+
+/// Simulated delay of `failures` transient failures followed by a
+/// success: each failed attempt costs the detection timeout plus a
+/// capped exponential backoff wait (`min(base·2^i, cap)`).
+pub fn retry_delay(failures: u32) -> f64 {
+    (0..failures)
+        .map(|i| RETRY_TIMEOUT + (RETRY_BACKOFF_BASE * (1u64 << i.min(32)) as f64).min(RETRY_BACKOFF_CAP))
+        .sum()
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Clause {
+    Straggle { rank: usize, factor: f64, from: usize, until: usize },
+    Nic { node: usize, factor: f64, from: usize, until: usize },
+    Flaky { rank: usize, step: usize, failures: u32 },
+    Kill { rank: usize, step: usize },
+    Dead { rank: usize },
+}
+
+/// A deterministic, seeded schedule of faults (see module docs).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    clauses: Vec<Clause>,
+    chaos_seed: Option<u64>,
+}
+
+impl FaultPlan {
+    /// The empty plan: injects nothing, ever.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when the plan can never inject anything.
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty() && self.chaos_seed.is_none()
+    }
+
+    /// Parse a spec string, or load a spec file if `spec` names one.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(FaultPlan::none());
+        }
+        if std::path::Path::new(spec).is_file() {
+            let text = std::fs::read_to_string(spec).map_err(|e| {
+                HetuError::Fault(format!("cannot read fault spec file '{spec}': {e}"))
+            })?;
+            let joined: Vec<&str> = text
+                .lines()
+                .map(str::trim)
+                .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                .collect();
+            return Self::parse_clauses(&joined.join(";"));
+        }
+        Self::parse_clauses(spec)
+    }
+
+    fn parse_clauses(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::none();
+        for raw in spec.split(';') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            let (kind, rest) = raw
+                .split_once(':')
+                .ok_or_else(|| HetuError::Fault(format!("fault clause '{raw}' has no ':'")))?;
+            let kv = parse_kv(raw, rest)?;
+            match kind.trim() {
+                "straggle" => plan.clauses.push(Clause::Straggle {
+                    rank: get_usize(&kv, raw, "rank")?,
+                    factor: get_factor(&kv, raw)?,
+                    from: opt_usize(&kv, raw, "from")?.unwrap_or(0),
+                    until: opt_usize(&kv, raw, "until")?.unwrap_or(usize::MAX),
+                }),
+                "nic" => plan.clauses.push(Clause::Nic {
+                    node: get_usize(&kv, raw, "node")?,
+                    factor: get_factor(&kv, raw)?,
+                    from: opt_usize(&kv, raw, "from")?.unwrap_or(0),
+                    until: opt_usize(&kv, raw, "until")?.unwrap_or(usize::MAX),
+                }),
+                "flaky" => {
+                    let failures = opt_usize(&kv, raw, "n")?.unwrap_or(1) as u32;
+                    if failures == 0 || failures > MAX_RETRIES {
+                        return Err(HetuError::Fault(format!(
+                            "fault clause '{raw}': n must be in 1..={MAX_RETRIES}"
+                        )));
+                    }
+                    plan.clauses.push(Clause::Flaky {
+                        rank: get_usize(&kv, raw, "rank")?,
+                        step: get_usize(&kv, raw, "step")?,
+                        failures,
+                    });
+                }
+                "kill" => plan.clauses.push(Clause::Kill {
+                    rank: get_usize(&kv, raw, "rank")?,
+                    step: get_usize(&kv, raw, "step")?,
+                }),
+                "dead" => plan.clauses.push(Clause::Dead { rank: get_usize(&kv, raw, "rank")? }),
+                "chaos" => {
+                    plan.chaos_seed = Some(get_usize(&kv, raw, "seed")? as u64);
+                }
+                other => {
+                    return Err(HetuError::Fault(format!(
+                        "unknown fault kind '{other}' (expected \
+                         straggle|nic|flaky|kill|dead|chaos)"
+                    )));
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Ranks dead from step 0 (`dead:` clauses), sorted and deduped.
+    pub fn initial_dead(&self) -> Vec<usize> {
+        let mut dead: Vec<usize> = self
+            .clauses
+            .iter()
+            .filter_map(|c| match c {
+                Clause::Dead { rank } => Some(*rank),
+                _ => None,
+            })
+            .collect();
+        dead.sort_unstable();
+        dead.dedup();
+        dead
+    }
+
+    /// Ranks hard-killed at exactly `step` (`kill:` clauses).
+    pub fn kills_at(&self, step: usize) -> Vec<usize> {
+        let mut kills: Vec<usize> = self
+            .clauses
+            .iter()
+            .filter_map(|c| match c {
+                Clause::Kill { rank, step: s } if *s == step => Some(*rank),
+                _ => None,
+            })
+            .collect();
+        kills.sort_unstable();
+        kills.dedup();
+        kills
+    }
+
+    /// Derive the step's timing faults — a pure function of
+    /// `(plan, step)`, identical on every run.
+    pub fn at_step(&self, step: usize, world: usize, nodes: usize) -> StepFaults {
+        let mut f = StepFaults::clean(world, nodes);
+        for c in &self.clauses {
+            match c {
+                Clause::Straggle { rank, factor, from, until } => {
+                    if step >= *from && step < *until && *rank < world {
+                        f.straggle[*rank] = f.straggle[*rank].max(*factor);
+                        f.injected += 1;
+                    }
+                }
+                Clause::Nic { node, factor, from, until } => {
+                    if step >= *from && step < *until && *node < nodes {
+                        f.nic[*node] = f.nic[*node].max(*factor);
+                        f.injected += 1;
+                    }
+                }
+                Clause::Flaky { step: s, failures, .. } => {
+                    if *s == step {
+                        f.flaky_failures += failures;
+                        f.injected += 1;
+                    }
+                }
+                Clause::Kill { .. } | Clause::Dead { .. } => {}
+            }
+        }
+        if let Some(seed) = self.chaos_seed {
+            // One fresh stream per step, keyed by (seed, step): replayable
+            // without tracking any cross-step RNG state.
+            let mut rng =
+                Rng::seed(hash_u64(seed ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+            if rng.next_f64() < 0.35 {
+                let rank = rng.below(world);
+                f.straggle[rank] = f.straggle[rank].max(1.5 + 2.5 * rng.next_f64());
+                f.injected += 1;
+            }
+            if rng.next_f64() < 0.25 {
+                let node = rng.below(nodes);
+                f.nic[node] = f.nic[node].max(1.5 + 1.5 * rng.next_f64());
+                f.injected += 1;
+            }
+            if rng.next_f64() < 0.20 {
+                f.flaky_failures += 1 + rng.below(2) as u32;
+                f.injected += 1;
+            }
+        }
+        f
+    }
+}
+
+/// The faults active on one step: timing multipliers and transient
+/// exchange failures. Hard failures (`kill`/`dead`) are surfaced
+/// separately ([`FaultPlan::kills_at`] / [`FaultPlan::initial_dead`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepFaults {
+    /// Per-rank expert-compute slowdown (1.0 = healthy).
+    pub straggle: Vec<f64>,
+    /// Per-node NIC slowdown (1.0 = healthy).
+    pub nic: Vec<f64>,
+    /// Transient exchange failures this step, retried with backoff.
+    pub flaky_failures: u32,
+    /// Count of fault clauses active this step.
+    pub injected: usize,
+}
+
+impl StepFaults {
+    /// No faults (all multipliers 1.0).
+    pub fn clean(world: usize, nodes: usize) -> StepFaults {
+        StepFaults {
+            straggle: vec![1.0; world],
+            nic: vec![1.0; nodes],
+            flaky_failures: 0,
+            injected: 0,
+        }
+    }
+
+    /// True when this step injects nothing.
+    pub fn is_clean(&self) -> bool {
+        self.injected == 0 && self.flaky_failures == 0
+    }
+
+    /// Worst NIC slowdown across nodes (the inter-node legs serialize
+    /// on the slowest NIC).
+    pub fn max_nic_factor(&self) -> f64 {
+        self.nic.iter().cloned().fold(1.0, f64::max)
+    }
+}
+
+/// Fold one step's faults into its [`StepReport`] as *additive*
+/// simulated delay: per-rank expert straggle over the measured compute
+/// profile (via [`crate::cluster::gpu::straggle_extra`]), NIC
+/// degradation over the exchange totals (via
+/// [`crate::cluster::NetworkModel::degraded_extra`]) and retry/backoff
+/// time for transient failures. Returns the total injected seconds.
+/// Token data, routing and schedule decisions are never touched.
+pub fn apply_to_report(
+    report: &mut StepReport,
+    faults: &StepFaults,
+    net: &crate::cluster::NetworkModel,
+    per_rank_compute: &[f64],
+) -> f64 {
+    if faults.is_clean() {
+        return 0.0;
+    }
+    let w = per_rank_compute.len().max(1) as f64;
+    let expert_extra: f64 = per_rank_compute
+        .iter()
+        .zip(&faults.straggle)
+        .map(|(&t, &f)| crate::cluster::gpu::straggle_extra(t, f))
+        .sum::<f64>()
+        / w;
+    let comm_extra = net.degraded_extra(report.comm_total(), faults.max_nic_factor());
+    let retry_extra = retry_delay(faults.flaky_failures);
+    if expert_extra > 0.0 {
+        report.wall.push(("straggle/expert".into(), expert_extra));
+    }
+    if comm_extra > 0.0 {
+        report.comm.push(("straggle/nic".into(), comm_extra));
+    }
+    if retry_extra > 0.0 {
+        report.comm.push(("retry/dispatch".into(), retry_extra));
+    }
+    let injected = expert_extra + comm_extra + retry_extra;
+    report.faults_injected += faults.injected;
+    report.retries += faults.flaky_failures as usize;
+    report.injected_delay += injected;
+    report.critical_path += injected;
+    injected
+}
+
+fn parse_kv<'s>(clause: &str, rest: &'s str) -> Result<Vec<(&'s str, &'s str)>> {
+    rest.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|pair| {
+            pair.split_once('=')
+                .map(|(k, v)| (k.trim(), v.trim()))
+                .ok_or_else(|| {
+                    HetuError::Fault(format!("fault clause '{clause}': '{pair}' is not key=value"))
+                })
+        })
+        .collect()
+}
+
+fn opt_usize(kv: &[(&str, &str)], clause: &str, key: &str) -> Result<Option<usize>> {
+    match kv.iter().find(|(k, _)| *k == key) {
+        None => Ok(None),
+        Some((_, v)) => v.parse::<usize>().map(Some).map_err(|_| {
+            HetuError::Fault(format!("fault clause '{clause}': {key}={v} is not an integer"))
+        }),
+    }
+}
+
+fn get_usize(kv: &[(&str, &str)], clause: &str, key: &str) -> Result<usize> {
+    opt_usize(kv, clause, key)?
+        .ok_or_else(|| HetuError::Fault(format!("fault clause '{clause}' needs {key}=")))
+}
+
+fn get_factor(kv: &[(&str, &str)], clause: &str) -> Result<f64> {
+    let v = kv
+        .iter()
+        .find(|(k, _)| *k == "x")
+        .ok_or_else(|| HetuError::Fault(format!("fault clause '{clause}' needs x=")))?
+        .1;
+    let f: f64 = v.parse().map_err(|_| {
+        HetuError::Fault(format!("fault clause '{clause}': x={v} is not a number"))
+    })?;
+    if !f.is_finite() || f < 1.0 {
+        return Err(HetuError::Fault(format!(
+            "fault clause '{clause}': slowdown x={f} must be a finite factor ≥ 1"
+        )));
+    }
+    Ok(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_clean_everywhere() {
+        let p = FaultPlan::parse("").unwrap();
+        assert!(p.is_empty());
+        for step in 0..50 {
+            assert!(p.at_step(step, 4, 2).is_clean());
+            assert!(p.kills_at(step).is_empty());
+        }
+        assert!(p.initial_dead().is_empty());
+    }
+
+    #[test]
+    fn grammar_round_trip() {
+        let p = FaultPlan::parse(
+            "straggle:rank=1,x=2.5,from=3,until=7; nic:node=0,x=2; \
+             flaky:rank=2,step=4,n=2; kill:rank=3,step=9; dead:rank=0",
+        )
+        .unwrap();
+        assert_eq!(p.initial_dead(), vec![0]);
+        assert_eq!(p.kills_at(9), vec![3]);
+        assert!(p.kills_at(8).is_empty());
+        let f3 = p.at_step(3, 4, 2);
+        assert_eq!(f3.straggle[1], 2.5);
+        assert_eq!(f3.nic[0], 2.0);
+        assert_eq!(f3.flaky_failures, 0);
+        let f4 = p.at_step(4, 4, 2);
+        assert_eq!(f4.flaky_failures, 2);
+        let f7 = p.at_step(7, 4, 2);
+        assert_eq!(f7.straggle[1], 1.0, "until= is exclusive");
+        assert_eq!(f7.nic[0], 2.0, "no until → forever");
+    }
+
+    #[test]
+    fn chaos_is_deterministic_per_step() {
+        let a = FaultPlan::parse("chaos:seed=7").unwrap();
+        let b = FaultPlan::parse("chaos:seed=7").unwrap();
+        let c = FaultPlan::parse("chaos:seed=8").unwrap();
+        let mut injected_any = false;
+        let mut differs = false;
+        for step in 0..64 {
+            let fa = a.at_step(step, 4, 2);
+            assert_eq!(fa, b.at_step(step, 4, 2), "same seed must replay");
+            injected_any |= !fa.is_clean();
+            differs |= fa != c.at_step(step, 4, 2);
+            assert!(a.kills_at(step).is_empty(), "chaos never kills");
+        }
+        assert!(injected_any, "chaos must inject something over 64 steps");
+        assert!(differs, "different seeds must differ somewhere");
+    }
+
+    #[test]
+    fn retry_backoff_is_capped_exponential() {
+        assert_eq!(retry_delay(0), 0.0);
+        let one = retry_delay(1);
+        assert!((one - (RETRY_TIMEOUT + RETRY_BACKOFF_BASE)).abs() < 1e-12);
+        // Each extra failure costs more than the last, up to the cap.
+        let mut prev = 0.0;
+        for n in 1..=MAX_RETRIES {
+            let d = retry_delay(n);
+            assert!(d > prev);
+            prev = d;
+        }
+        // Deep retries are cap-bounded per attempt.
+        let deep = retry_delay(MAX_RETRIES);
+        assert!(deep <= MAX_RETRIES as f64 * (RETRY_TIMEOUT + RETRY_BACKOFF_CAP) + 1e-12);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("straggle:rank=0").is_err(), "missing x=");
+        assert!(FaultPlan::parse("straggle:rank=0,x=0.5").is_err(), "factor < 1");
+        assert!(FaultPlan::parse("wobble:rank=0").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("kill:rank=zero,step=1").is_err(), "non-integer");
+        assert!(FaultPlan::parse("flaky:rank=0,step=1,n=99").is_err(), "too many retries");
+        assert!(FaultPlan::parse("kill rank 3").is_err(), "no colon");
+    }
+
+    #[test]
+    fn out_of_range_targets_are_ignored_at_derivation() {
+        // A clause naming a rank/node outside the world is inert (the
+        // trainer validates kill/dead targets; timing clauses degrade
+        // gracefully so one spec can drive several topologies).
+        let p = FaultPlan::parse("straggle:rank=9,x=3; nic:node=9,x=3").unwrap();
+        assert!(p.at_step(0, 4, 2).is_clean());
+    }
+}

@@ -43,6 +43,7 @@
 pub mod backprop;
 pub mod baselines;
 pub mod benchkit;
+pub mod ckpt;
 pub mod cli;
 pub mod cluster;
 pub mod comm;
@@ -50,6 +51,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod fault;
 pub mod gating;
 pub mod layout;
 pub mod moe;

@@ -48,6 +48,10 @@ const COMMANDS: &[CommandSpec] = &[
             ("alltoall", "auto|flat|hier schedule selection (default auto)"),
             ("chunks", "auto|N exchange chunks for comm/compute overlap (default auto)"),
             ("dedup", "on|off top-k token dedup on the hierarchical inter-node legs (default on)"),
+            ("faults", "fault spec or spec file, e.g. 'straggle:rank=1,x=3;kill:rank=2,step=10' or chaos:seed=7"),
+            ("ckpt-every", "checkpoint every N steps (default 0 = never; needs --ckpt-dir)"),
+            ("ckpt-dir", "directory for checkpoints (enables rank-failure recovery)"),
+            ("restore", "resume from a checkpoint file written by --ckpt-every"),
             ("json", "emit the run summary as JSON (flag)"),
             ("trace-out", "write a Chrome trace of the run (open in Perfetto)"),
             ("config", "JSON config file (pjrt backend)"),
@@ -113,6 +117,8 @@ const COMMANDS: &[CommandSpec] = &[
             ("experts", "experts (default 16)"),
             ("d-model", "model width (default 64)"),
             ("max-tokens", "max tokens per request (default 64)"),
+            ("faults", "fault spec or spec file (kills are routed around, not recovered)"),
+            ("dead-ranks", "comma list of ranks down from the start, e.g. 3,7"),
             ("seed", "workload/model seed (default 0)"),
             ("json", "emit the SLO report as JSON (flag)"),
             ("trace-out", "write a Chrome trace of the run (open in Perfetto)"),
@@ -216,13 +222,23 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
     if let Some(dedup) = parse_dedup(args)? {
         cfg.opts.dedup = dedup;
     }
+    if let Some(spec) = args.get("faults") {
+        cfg.faults = hetumoe::fault::FaultPlan::parse(spec)?;
+    }
+    cfg.ckpt_every = args.usize_or("ckpt-every", cfg.ckpt_every)?;
+    if let Some(dir) = args.get("ckpt-dir") {
+        cfg.ckpt_dir = Some(dir.to_string());
+    }
     // The pipeline's per-expert FFN batches run on the shared pool.
     cfg.opts.threads = hetumoe::util::threadpool::available_parallelism().min(8);
     let json = args.has_flag("json");
     if json {
         cfg.log_every = 0;
     }
-    let mut trainer = NativeTrainer::new(cfg)?;
+    let mut trainer = match args.get("restore") {
+        Some(path) => NativeTrainer::from_checkpoint(cfg, std::path::Path::new(path))?,
+        None => NativeTrainer::new(cfg)?,
+    };
     if !json {
         println!(
             "native training: {} params | {} experts on {}x{} GPUs | {} dispatch, alltoall={}",
@@ -261,8 +277,9 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
                     ("hier", Json::num(summary.bwd_schedules.1 as f64)),
                 ]),
             ),
-            // `overlap_efficiency` (plus comm/compute exposure) rides
-            // inside the breakdown object.
+            ("recovery_steps", Json::num(summary.recovery_steps as f64)),
+            // `overlap_efficiency` (plus comm/compute exposure, fault
+            // counters) rides inside the breakdown object.
             ("breakdown", summary.breakdown.to_json()),
         ]);
         println!("{}", j.dump());
@@ -300,6 +317,15 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
         fmt_duration(b.compute_exposed),
         100.0 * b.overlap_efficiency
     );
+    if b.faults_injected > 0 || summary.recovery_steps > 0 {
+        println!(
+            "faults: {} injected, {} retries, {}/step delay | recovery re-ran {} steps",
+            b.faults_injected,
+            b.retries,
+            fmt_duration(b.injected_delay),
+            summary.recovery_steps
+        );
+    }
     let mut table = Table::new(
         "per-step phase breakdown (fwd + bwd + opt)",
         &["phase", "mean/step", "fraction"],
@@ -665,6 +691,11 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
         capacity_factor: 1.25,
         gate: parse_gate(args)?,
     };
+    let faults = match args.get("faults") {
+        Some(spec) => hetumoe::fault::FaultPlan::parse(spec)?,
+        None => hetumoe::fault::FaultPlan::none(),
+    };
+    let dead_ranks = args.usize_list_or("dead-ranks", &[])?;
     let cfg = ServeConfig {
         moe,
         cluster,
@@ -676,6 +707,8 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
         duration,
         max_tokens,
         seed,
+        dead_ranks,
+        faults,
         ..ServeConfig::default_run()
     };
     let json = args.has_flag("json");

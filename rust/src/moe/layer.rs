@@ -137,6 +137,14 @@ pub struct MoeLayerOptions {
     pub dedup: bool,
     /// Threads for the parallel kernels (1 = serial).
     pub threads: usize,
+    /// Ranks that are down (hard-failed or `dead:` from the fault
+    /// plan). They source zero-row shards and host no experts — the
+    /// placement elastically remaps their experts over the survivors
+    /// ([`crate::cluster::ExpertPlacement::with_dead`]). A remapped
+    /// (non-contiguous) placement forces the flat exchange and
+    /// disables top-k dedup, whose node-aggregation math assumes the
+    /// contiguous layout. Empty = every rank healthy.
+    pub dead_ranks: Vec<usize>,
 }
 
 impl Default for MoeLayerOptions {
@@ -150,6 +158,7 @@ impl Default for MoeLayerOptions {
             chunks: ChunkChoice::Auto,
             dedup: true,
             threads: 1,
+            dead_ranks: Vec::new(),
         }
     }
 }
@@ -220,6 +229,16 @@ pub struct StepReport {
     pub compute_exposed: f64,
     /// Exchange time hidden under expert compute.
     pub comm_hidden: f64,
+    /// Fault clauses active this step (stragglers, NIC degradation,
+    /// transient failures — from the seeded fault plan; 0 = clean).
+    pub faults_injected: usize,
+    /// Transient exchange failures retried this step.
+    pub retries: usize,
+    /// Simulated seconds of injected delay this step (straggle + NIC
+    /// degradation + retry/backoff), already folded into
+    /// [`Self::critical_path`]; base phase entries stay untouched so
+    /// the breakdown remains honest.
+    pub injected_delay: f64,
 }
 
 impl StepReport {
@@ -233,6 +252,10 @@ impl StepReport {
 
     pub fn wall_phase(&self, name: &str) -> f64 {
         self.wall.iter().filter(|(n, _)| n == name).map(|(_, t)| t).sum()
+    }
+
+    pub fn comm_phase(&self, name: &str) -> f64 {
+        self.comm.iter().filter(|(n, _)| n == name).map(|(_, t)| t).sum()
     }
 
     /// Fraction of the exchange time hidden under expert compute
@@ -282,6 +305,9 @@ impl StepReport {
         self.comm_exposed += bwd.comm_exposed;
         self.compute_exposed += bwd.compute_exposed;
         self.comm_hidden += bwd.comm_hidden;
+        self.faults_injected += bwd.faults_injected;
+        self.retries += bwd.retries;
+        self.injected_delay += bwd.injected_delay;
     }
 }
 
@@ -314,6 +340,7 @@ impl MoeLayer {
                 cfg.num_experts
             ));
         }
+        validate_dead_ranks(&opts, w)?;
         let mut rng = Rng::seed(seed);
         let experts: Vec<Box<dyn ExpertExecutor>> = (0..cfg.num_experts)
             .map(|_| {
@@ -348,14 +375,20 @@ impl MoeLayer {
                 cfg.num_experts
             ));
         }
+        validate_dead_ranks(&opts, w)?;
         let net = NetworkModel::new(cluster.clone());
         Ok(MoeLayer { cfg, cluster, net, gate, experts, gate_weight, opts })
     }
 
     /// The shared expert-placement map (experts partitioned contiguously,
-    /// `E/W` per rank — the same formula the serving router uses).
+    /// `E/W` per rank — the same formula the serving router uses), with
+    /// dead ranks' experts elastically remapped over survivors.
     pub fn placement(&self) -> crate::cluster::ExpertPlacement {
-        crate::cluster::ExpertPlacement::new(self.cfg.num_experts, self.cluster.world())
+        crate::cluster::ExpertPlacement::with_dead(
+            self.cfg.num_experts,
+            self.cluster.world(),
+            &self.opts.dead_ranks,
+        )
     }
 
     /// Experts per rank.
@@ -380,6 +413,7 @@ impl MoeLayer {
             gate_weight: &self.gate_weight,
             experts: ExpertBank::Infer(&self.experts),
             route: &route,
+            faults: None,
         };
         let out = exec.run(shards, false)?;
         Ok((out.outputs, out.report))
@@ -462,6 +496,32 @@ impl MoeLayer {
         }
         Ok(outs)
     }
+}
+
+/// Shared validation of [`MoeLayerOptions::dead_ranks`] against a world
+/// size: ranks must exist, at least one must survive, and the padded
+/// pipeline — whose equal-chunk AllToAll assumes every rank hosts
+/// `E/W` experts — cannot run degraded.
+pub fn validate_dead_ranks(opts: &MoeLayerOptions, world: usize) -> Result<()> {
+    if opts.dead_ranks.is_empty() {
+        return Ok(());
+    }
+    if let Some(&r) = opts.dead_ranks.iter().find(|&&r| r >= world) {
+        return Err(crate::config_err!("dead rank {r} does not exist (world = {world})"));
+    }
+    let mut distinct = opts.dead_ranks.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    if distinct.len() >= world {
+        return Err(crate::config_err!("all {world} ranks are dead; nothing can run"));
+    }
+    if opts.dispatch == DispatchMode::Padded {
+        return Err(crate::config_err!(
+            "padded dispatch cannot run with dead ranks (its equal-chunk AllToAll \
+             assumes the contiguous placement); use --dispatch ragged"
+        ));
+    }
+    Ok(())
 }
 
 /// DeepSpeed-style dense one-hot dispatch: `buffer = onehot · tokens`

@@ -38,6 +38,9 @@ pub const BREAKDOWN_KEYS: &[&str] = &[
     "compute_exposed",
     "comm_hidden",
     "overlap_efficiency",
+    "injected_delay",
+    "faults_injected",
+    "retries",
 ];
 
 /// Keys of a serving SLO report object, in emission order.
@@ -61,6 +64,8 @@ pub const SLO_KEYS: &[&str] = &[
     "drop_rate",
     "mean_queue_depth",
     "max_queue_depth",
+    "faults_injected",
+    "retries",
     "breakdown",
 ];
 
@@ -108,6 +113,9 @@ pub fn breakdown_json(b: &Breakdown) -> Json {
         ("compute_exposed", Json::num(b.compute_exposed)),
         ("comm_hidden", Json::num(b.comm_hidden)),
         ("overlap_efficiency", Json::num(b.overlap_efficiency)),
+        ("injected_delay", Json::num(b.injected_delay)),
+        ("faults_injected", Json::num(b.faults_injected as f64)),
+        ("retries", Json::num(b.retries as f64)),
     ])
 }
 
@@ -131,6 +139,8 @@ pub fn slo_json(r: &SloReport) -> Json {
     fields.push(("drop_rate".into(), Json::num(r.drop_rate)));
     fields.push(("mean_queue_depth".into(), Json::num(r.mean_queue_depth)));
     fields.push(("max_queue_depth".into(), Json::num(r.max_queue_depth)));
+    fields.push(("faults_injected".into(), Json::num(r.faults_injected as f64)));
+    fields.push(("retries".into(), Json::num(r.retries as f64)));
     fields.push(("breakdown".into(), r.breakdown.to_json()));
     Json::Obj(fields)
 }

@@ -460,11 +460,7 @@ impl Trace {
                 .iter()
                 .filter(|e| e.pid == pid && e.tid == tid)
                 .collect();
-            spans.sort_by(|a, b| {
-                a.ts.partial_cmp(&b.ts)
-                    .unwrap()
-                    .then(b.dur.partial_cmp(&a.dur).unwrap())
-            });
+            spans.sort_by(|a, b| a.ts.total_cmp(&b.ts).then(b.dur.total_cmp(&a.dur)));
             let mut stack: Vec<(f64, String)> = Vec::new();
             for s in spans {
                 let end = s.ts + s.dur;

@@ -36,7 +36,7 @@ use crate::comm::hier_ragged::{
     dedup_traffic, hier_ragged_combine, hier_ragged_dispatch, row_meta, DedupMeta,
     DedupTraffic, RowMeta,
 };
-use crate::comm::ragged::{ragged_combine, ragged_dispatch, split_wire_bytes};
+use crate::comm::ragged::{ragged_combine_placed, ragged_dispatch_placed, split_wire_bytes};
 use crate::comm::schedule::{pick_schedule_dedup, transpose_counts, Schedule};
 use crate::comm::{alltoall, hierarchical_alltoall, CommTiming, WireBytes};
 use crate::config::{ClusterConfig, MoeConfig};
@@ -113,11 +113,10 @@ pub(crate) fn rank_expert_jobs(
     r: usize,
     d: usize,
 ) -> Vec<(usize, usize, usize)> {
-    let epr = placement.experts_per_rank();
-    let mut jobs = Vec::with_capacity(epr);
+    let hosted = placement.hosted_experts(r);
+    let mut jobs = Vec::with_capacity(hosted.len());
     let mut off = 0usize;
-    for le in 0..epr {
-        let ge = placement.expert_of(r, le);
+    for ge in hosted {
         let n: usize = kept.iter().map(|row| row[ge]).sum();
         if n > 0 {
             jobs.push((ge, off, n));
@@ -166,11 +165,19 @@ pub struct StepExecutor<'a> {
     /// Routing kernel: scores `[T, E]` → routing. The caller binds the
     /// gate implementation and the training step here.
     pub route: &'a dyn Fn(&Tensor) -> Routing,
+    /// Timing faults active this step (`None` = healthy). Injection is
+    /// purely additive on the simulated clock — token data, routing and
+    /// schedule decisions are never touched.
+    pub faults: Option<&'a crate::fault::StepFaults>,
 }
 
 impl<'a> StepExecutor<'a> {
     fn placement(&self) -> ExpertPlacement {
-        ExpertPlacement::new(self.cfg.num_experts, self.cluster.world())
+        ExpertPlacement::with_dead(
+            self.cfg.num_experts,
+            self.cluster.world(),
+            &self.opts.dead_ranks,
+        )
     }
 
     /// Run the pipeline over per-rank token shards `[T, d]` (all equal
@@ -181,9 +188,23 @@ impl<'a> StepExecutor<'a> {
             return Err(crate::shape_err!("got {} shards for world {w}", shards.len()));
         }
         let d = self.cfg.d_model;
-        let local_tokens = shards[0].rows();
-        for s in shards {
-            if s.rows() != local_tokens || s.row_len() != d {
+        // Dead ranks (elastic remap active) ship empty shards; every
+        // alive shard must agree on the token count.
+        let mut dead: Vec<usize> = self.opts.dead_ranks.clone();
+        dead.retain(|&r| r < w);
+        dead.sort_unstable();
+        dead.dedup();
+        let alive = (w - dead.len()).max(1);
+        let local_tokens = shards.iter().map(Tensor::rows).max().unwrap_or(0);
+        for (r, s) in shards.iter().enumerate() {
+            if dead.binary_search(&r).is_ok() {
+                if s.rows() != 0 {
+                    return Err(crate::shape_err!(
+                        "dead rank {r} must ship an empty shard, got {} rows",
+                        s.rows()
+                    ));
+                }
+            } else if s.rows() != local_tokens || s.row_len() != d {
                 return Err(crate::shape_err!("ragged shards"));
             }
         }
@@ -199,16 +220,32 @@ impl<'a> StepExecutor<'a> {
         let mut routings = Vec::with_capacity(w);
         let mut plans: Vec<DispatchPlan> = Vec::with_capacity(w);
         for shard in shards {
+            if shard.rows() == 0 {
+                // Dead rank: no tokens, no routing, nothing kept — the
+                // empty plan keeps the per-rank vectors index-aligned.
+                let routing = Routing {
+                    k: 1,
+                    tokens: 0,
+                    num_experts: self.cfg.num_experts,
+                    expert_ids: Vec::new(),
+                    weights: Vec::new(),
+                    aux_loss: 0.0,
+                };
+                plans.push(apply_capacity(&routing, cap.max(1)));
+                scores_all.push(Tensor::zeros(&[0, self.cfg.num_experts]));
+                routings.push(routing);
+                continue;
+            }
             let scores = matmul(shard, self.gate_weight);
             let routing = (self.route)(&scores);
             for (i, c) in routing.expert_counts().into_iter().enumerate() {
                 expert_counts[i] += c;
             }
-            report.aux_loss += routing.aux_loss as f64 / w as f64;
+            report.aux_loss += routing.aux_loss as f64 / alive as f64;
             let plan = apply_capacity(&routing, cap);
-            report.drop_rate += plan.drop_rate() / w as f64;
+            report.drop_rate += plan.drop_rate() / alive as f64;
             if self.opts.dispatch == DispatchMode::Padded {
-                report.padding_waste += plan.padding_waste() / w as f64;
+                report.padding_waste += plan.padding_waste() / alive as f64;
             }
             scores_all.push(scores);
             routings.push(routing);
@@ -280,18 +317,25 @@ impl<'a> StepExecutor<'a> {
         let counts = placement.traffic_matrix(kept);
         let row_bytes = d * 4;
         let g = self.cluster.gpus_per_node;
-        let dedup: Option<DedupTraffic> = self
-            .opts
-            .dedup
+        // A remapped placement breaks the contiguous expert blocks the
+        // hierarchical four-phase data path and the top-k dedup fold are
+        // built around — degraded mode runs the flat exchange with dedup
+        // off until the world heals.
+        let elastic = !placement.is_contiguous();
+        let dedup: Option<DedupTraffic> = (self.opts.dedup && !elastic)
             .then(|| dedup_traffic(plans.iter(), &placement, self.cluster));
-        let pick = pick_schedule_dedup(
-            self.net,
-            &counts,
-            row_bytes,
-            self.opts.alltoall,
-            dedup.as_ref(),
-        );
-        let schedule = pick.schedule;
+        let schedule = if elastic {
+            Schedule::Flat
+        } else {
+            pick_schedule_dedup(
+                self.net,
+                &counts,
+                row_bytes,
+                self.opts.alltoall,
+                dedup.as_ref(),
+            )
+            .schedule
+        };
 
         // ---- StageDispatch: exact-count exchange. Under the
         // hierarchical schedule this *executes* the four-phase data
@@ -308,7 +352,7 @@ impl<'a> StepExecutor<'a> {
         dispatch_span.arg("schedule", schedule.name());
         let dispatch_wire: WireBytes = match schedule {
             Schedule::Flat => {
-                ragged_dispatch(self.net, &mut flat, kept, d, schedule)?;
+                ragged_dispatch_placed(self.net, &mut flat, kept, d, schedule, &placement)?;
                 split_wire_bytes(&counts, row_bytes, g)
             }
             Schedule::Hierarchical => {
@@ -379,7 +423,7 @@ impl<'a> StepExecutor<'a> {
         let combine_span = trace::span("combine_data");
         let combine_wire: WireBytes = match schedule {
             Schedule::Flat => {
-                ragged_combine(self.net, &mut flat, kept, d, schedule)?;
+                ragged_combine_placed(self.net, &mut flat, kept, d, schedule, &placement)?;
                 split_wire_bytes(&transpose_counts(&counts), row_bytes, g)
             }
             Schedule::Hierarchical => {
@@ -392,6 +436,9 @@ impl<'a> StepExecutor<'a> {
         report.bytes_intra_node = dispatch_wire.intra + combine_wire.intra;
         report.rows_deduped = rows_deduped;
         report.apply_overlap(&overlap);
+        if let Some(faults) = self.faults {
+            crate::fault::apply_to_report(report, faults, self.net, &rank_wall);
+        }
         if trace::enabled() {
             let at = trace::model_window(overlap.critical_path);
             trace::model_overlap(
@@ -533,6 +580,11 @@ impl<'a> StepExecutor<'a> {
             critical_path: timing.total + expert_wall + timing2.total,
         };
         report.apply_overlap(&overlap);
+        if let Some(faults) = self.faults {
+            // The padded expert stage measures one aggregate wall; charge
+            // stragglers against the uniform per-rank approximation.
+            crate::fault::apply_to_report(report, faults, self.net, &vec![expert_wall; w]);
+        }
         if trace::enabled() {
             let at = trace::model_window(overlap.critical_path);
             trace::model_overlap(

@@ -14,6 +14,7 @@
 use crate::cluster::GpuModel;
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
+use crate::fault::{FaultPlan, StepFaults};
 use crate::comm::hier_ragged::hier_leg_wire_bytes;
 use crate::comm::ragged::split_wire_bytes;
 use crate::comm::schedule::{transpose_counts, Schedule};
@@ -54,6 +55,11 @@ pub struct ServeConfig {
     /// Embedding vocabulary for synthetic token content.
     pub vocab: usize,
     pub seed: u64,
+    /// Ranks down from the start: routed around from the first batch.
+    pub dead_ranks: Vec<usize>,
+    /// Deterministic fault-injection schedule, keyed by batch index
+    /// (empty = healthy run).
+    pub faults: FaultPlan,
 }
 
 impl ServeConfig {
@@ -82,6 +88,8 @@ impl ServeConfig {
             max_queue: 4096,
             vocab: 1024,
             seed: 0,
+            dead_ranks: Vec::new(),
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -116,7 +124,8 @@ fn service_estimate_for(cfg: &ServeConfig, router: &PlacementRouter, tokens: usi
     let kept_per_pair = (per * k).div_ceil(w);
     let counts = vec![vec![kept_per_pair; w]; w];
     let row_bytes = cfg.moe.d_model * 4;
-    let (gate, layout, expert, reverse) = phase_times_for(cfg, k, per, per * k);
+    let (gate, layout, expert, reverse) =
+        phase_times_for(cfg, k, per, per * k, router.placement().max_hosted());
     // Uniform routing: compute splits evenly across destination ranks.
     let compute_per_rank = vec![expert / w as f64; w];
     let (_, overlap) = StagePlan::pick(
@@ -133,12 +142,14 @@ fn service_estimate_for(cfg: &ServeConfig, router: &PlacementRouter, tokens: usi
 }
 
 /// Roofline times of the per-rank compute phases — `(gate, layout,
-/// expert, reverse_layout)`.
+/// expert, reverse_layout)`. `experts_per_rank` is the busiest rank's
+/// hosted-expert count (exceeds the nominal E/W under elastic remap).
 fn phase_times_for(
     cfg: &ServeConfig,
     gate_k: usize,
     shard_tokens: usize,
     rank_rows: usize,
+    experts_per_rank: usize,
 ) -> (f64, f64, f64, f64) {
     let gpu = &cfg.gpu;
     let d = cfg.moe.d_model as f64;
@@ -150,7 +161,7 @@ fn phase_times_for(
     let gate = gpu.kernel_time(2.0 * t * d * e, t * (d + e) * 4.0, 1)
         + gpu.memory_time(t * e * 4.0, 3);
     let layout = gpu.memory_time(2.0 * t * k * d * 4.0, 1);
-    let experts_per_rank = (cfg.moe.num_experts / cfg.cluster.world()).max(1);
+    let experts_per_rank = experts_per_rank.max(1);
     let expert = gpu.kernel_time(
         4.0 * rows * d * h,
         rows * (d + h) * 4.0,
@@ -170,10 +181,29 @@ pub struct ServeEngine {
     rng: Rng,
     clock: f64,
     step: u64,
+    /// Ranks currently routed around (initial dead + kills so far).
+    dead: Vec<usize>,
 }
 
 impl ServeEngine {
     pub fn new(cfg: ServeConfig) -> Result<ServeEngine> {
+        let w = cfg.cluster.world();
+        let mut dead = cfg.dead_ranks.clone();
+        dead.extend(cfg.faults.initial_dead());
+        dead.sort_unstable();
+        dead.dedup();
+        for &r in &dead {
+            if r >= w {
+                return Err(crate::fault_err!(
+                    "dead rank {r} is outside the world of {w} ranks"
+                ));
+            }
+        }
+        if !dead.is_empty() && dead.len() >= w {
+            return Err(crate::fault_err!(
+                "all {w} ranks are marked dead — nothing left to serve on"
+            ));
+        }
         let mut router = PlacementRouter::new(
             cfg.moe.clone(),
             cfg.cluster.clone(),
@@ -181,6 +211,7 @@ impl ServeEngine {
             cfg.seed,
         )?;
         router.dedup = cfg.dedup;
+        router.set_dead(&dead);
         let mut rng = Rng::seed(cfg.seed ^ 0xE4B);
         let mut embedding = Tensor::randn(&[cfg.vocab, cfg.moe.d_model], &mut rng);
         embedding.scale(1.0 / (cfg.moe.d_model as f32).sqrt());
@@ -201,6 +232,7 @@ impl ServeEngine {
             rng,
             clock: 0.0,
             step: 0,
+            dead,
         })
     }
 
@@ -215,7 +247,13 @@ impl ServeEngine {
     /// expert, reverse_layout)` — for a shard of `shard_tokens` tokens
     /// whose busiest rank hosts `rank_rows` expert rows.
     fn phase_times(&self, shard_tokens: usize, rank_rows: usize) -> (f64, f64, f64, f64) {
-        phase_times_for(&self.cfg, self.router.gate.k(), shard_tokens, rank_rows)
+        phase_times_for(
+            &self.cfg,
+            self.router.gate.k(),
+            shard_tokens,
+            rank_rows,
+            self.router.placement().max_hosted(),
+        )
     }
 
     /// Simulated service time + phase report for a routed batch. The
@@ -227,7 +265,12 @@ impl ServeEngine {
     /// pipeline, same traffic matrix) so dispatch-of-chunk-*i* hides under
     /// expert-FFN-of-chunk-*i − 1*; with one chunk this reduces exactly
     /// to the old sum of phases.
-    fn step_time(&self, decision: &RouteDecision, batch_tokens: usize) -> (f64, StepReport) {
+    fn step_time(
+        &self,
+        decision: &RouteDecision,
+        batch_tokens: usize,
+        faults: Option<&StepFaults>,
+    ) -> (f64, StepReport) {
         let w = self.cfg.cluster.world();
         let per = batch_tokens.div_ceil(w);
         let (gate, layout, expert, reverse) =
@@ -293,7 +336,7 @@ impl ServeEngine {
             dedup,
             false,
         );
-        let total = gate + layout + overlap.critical_path + reverse;
+        let mut total = gate + layout + overlap.critical_path + reverse;
         let mut report = StepReport {
             wall: vec![
                 ("gate".into(), gate),
@@ -324,6 +367,18 @@ impl ServeEngine {
             ..Default::default()
         };
         report.apply_overlap(&overlap);
+        // Injected faults stretch the service interval additively:
+        // stragglers over the skew-weighted compute profile, NIC
+        // degradation over both exchange legs, retry backoff on top.
+        // Routing and token data are untouched.
+        if let Some(sf) = faults {
+            total += crate::fault::apply_to_report(
+                &mut report,
+                sf,
+                &self.router.net,
+                &compute_per_rank,
+            );
+        }
         // Serving charges time analytically, so the whole batch lands on
         // the modeled timeline: compute phases as plain events, the
         // exchange region through the shared overlap renderer.
@@ -424,10 +479,40 @@ impl ServeEngine {
             tracker.sample_queue_depth(self.batcher.queue_depth());
             match self.batcher.next_batch() {
                 Some(plan) => {
+                    let stepi = self.step as usize;
+                    // Rank kills fire before the batch routes: the
+                    // victim's experts remap onto survivors and the
+                    // batch shards over the alive ranks only. Serving
+                    // has no checkpoint to restore — it routes around.
+                    let w = self.cfg.cluster.world();
+                    let kills: Vec<usize> = self
+                        .cfg
+                        .faults
+                        .kills_at(stepi)
+                        .into_iter()
+                        .filter(|r| *r < w && !self.dead.contains(r))
+                        .collect();
+                    if !kills.is_empty() {
+                        self.dead.extend(kills.iter());
+                        self.dead.sort_unstable();
+                        self.dead.dedup();
+                        if self.dead.len() >= w {
+                            return Err(crate::fault_err!(
+                                "every rank is dead at batch {stepi} — \
+                                 nothing left to serve on"
+                            ));
+                        }
+                        self.router.set_dead(&self.dead);
+                        tracker.record_rank_failures(kills.len());
+                    }
                     let x = self.sample_batch(plan.tokens);
                     let decision = self.router.route_batch(&x, self.step);
                     self.step += 1;
-                    let (service, report) = self.step_time(&decision, plan.tokens);
+                    let sf = (!self.cfg.faults.is_empty()).then(|| {
+                        self.cfg.faults.at_step(stepi, w, self.cfg.cluster.nodes)
+                    });
+                    let (service, report) =
+                        self.step_time(&decision, plan.tokens, sf.as_ref());
                     self.clock += service;
                     tracker.push_step(&report);
                     for req in self.batcher.complete(&plan) {

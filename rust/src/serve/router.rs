@@ -97,6 +97,9 @@ pub struct PlacementRouter {
     ewma_alpha: f64,
     flat_chosen: usize,
     hier_chosen: usize,
+    /// Ranks currently marked failed: they receive no shard and host no
+    /// experts (the placement remaps their experts onto survivors).
+    dead: Vec<usize>,
 }
 
 impl PlacementRouter {
@@ -159,13 +162,32 @@ impl PlacementRouter {
             ewma_alpha: 0.2,
             flat_chosen: 0,
             hier_chosen: 0,
+            dead: Vec::new(),
         })
     }
 
+    /// Mark `dead` ranks failed: subsequent batches shard only over the
+    /// survivors and the placement remaps the dead ranks' experts.
+    pub fn set_dead(&mut self, dead: &[usize]) {
+        self.dead = dead.to_vec();
+        self.dead.sort_unstable();
+        self.dead.dedup();
+    }
+
+    /// Ranks currently routed around.
+    pub fn dead(&self) -> &[usize] {
+        &self.dead
+    }
+
     /// The shared expert-placement map (identical to the training
-    /// layer's — see [`crate::cluster::ExpertPlacement`]).
+    /// layer's — see [`crate::cluster::ExpertPlacement`]); with dead
+    /// ranks it is the elastic remap over the survivors.
     pub fn placement(&self) -> crate::cluster::ExpertPlacement {
-        crate::cluster::ExpertPlacement::new(self.cfg.num_experts, self.cluster.world())
+        crate::cluster::ExpertPlacement::with_dead(
+            self.cfg.num_experts,
+            self.cluster.world(),
+            &self.dead,
+        )
     }
 
     /// Experts hosted per rank.
@@ -194,11 +216,21 @@ impl PlacementRouter {
     pub fn route_batch(&mut self, batch: &Tensor, step: u64) -> RouteDecision {
         let w = self.cluster.world();
         let tokens = batch.rows();
-        let per = tokens.div_ceil(w);
+        // Dead ranks take no tokens: the batch shards over the alive
+        // ranks only (identical to sharding over everyone when the dead
+        // set is empty).
+        let n_alive = (w - self.dead.len()).max(1);
+        let per = tokens.div_ceil(n_alive);
         let mut shards = Vec::with_capacity(w);
+        let mut alive_idx = 0usize;
         for r in 0..w {
-            let lo = (r * per).min(tokens);
-            let hi = ((r + 1) * per).min(tokens);
+            let (lo, hi) = if self.dead.binary_search(&r).is_ok() {
+                (0, 0)
+            } else {
+                let i = alive_idx;
+                alive_idx += 1;
+                ((i * per).min(tokens), ((i + 1) * per).min(tokens))
+            };
             let shard = batch.slice_rows(lo, hi);
             if shard.rows() == 0 {
                 let routing = Routing {

@@ -47,6 +47,8 @@ pub struct SloTracker {
     queue_depths: Vec<f64>,
     metrics: MetricsAgg,
     window: RollingQuantiles,
+    faults_injected: usize,
+    retries: usize,
 }
 
 impl Default for SloTracker {
@@ -58,6 +60,8 @@ impl Default for SloTracker {
             queue_depths: Vec::new(),
             metrics: MetricsAgg::new(),
             window: RollingQuantiles::new(LATENCY_WINDOW),
+            faults_injected: 0,
+            retries: 0,
         }
     }
 }
@@ -96,7 +100,14 @@ impl SloTracker {
 
     /// Fold one served batch's phase times into the breakdown.
     pub fn push_step(&mut self, report: &StepReport) {
+        self.faults_injected += report.faults_injected;
+        self.retries += report.retries;
         self.metrics.push(report);
+    }
+
+    /// Record ranks lost mid-run (each counts as one injected fault).
+    pub fn record_rank_failures(&mut self, n: usize) {
+        self.faults_injected += n;
     }
 
     pub fn completed_count(&self) -> usize {
@@ -140,6 +151,8 @@ impl SloTracker {
             max_queue_depth: max_queue,
             breakdown: self.metrics.breakdown(),
             batches: self.metrics.steps(),
+            faults_injected: self.faults_injected,
+            retries: self.retries,
         }
     }
 }
@@ -179,6 +192,11 @@ pub struct SloReport {
     pub breakdown: Breakdown,
     /// Batches served.
     pub batches: usize,
+    /// Injected fault events over the run (stragglers, NIC degradation,
+    /// transient failures, rank deaths) — 0 on a healthy run.
+    pub faults_injected: usize,
+    /// Transient-failure retries charged (capped exponential backoff).
+    pub retries: usize,
 }
 
 impl SloReport {
@@ -222,6 +240,12 @@ impl SloReport {
             "queue depth mean / max".into(),
             format!("{:.1} / {:.0}", self.mean_queue_depth, self.max_queue_depth),
         ]);
+        if self.faults_injected > 0 {
+            t.row(vec![
+                "faults injected / retries".into(),
+                format!("{} / {}", self.faults_injected, self.retries),
+            ]);
+        }
         t.emit(None);
         if !self.breakdown.phases.is_empty() {
             let mut b = Table::new(

@@ -75,7 +75,7 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     assert!(!samples.is_empty());
     let mut v = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, q)
 }
 
@@ -106,7 +106,7 @@ impl Summary {
             w.push(x);
         }
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n: samples.len(),
             mean: w.mean(),
@@ -138,7 +138,7 @@ impl Quantiles {
             return Quantiles::default();
         }
         let mut v = samples.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         Quantiles {
             p50: percentile_sorted(&v, 50.0),
             p90: percentile_sorted(&v, 90.0),

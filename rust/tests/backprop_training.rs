@@ -37,6 +37,9 @@ fn seeded_loss_curve_decreases_over_200_steps() {
         noise: 0.3,
         seed: 0,
         log_every: 0,
+        faults: hetumoe::fault::FaultPlan::none(),
+        ckpt_every: 0,
+        ckpt_dir: None,
     };
     let mut t = NativeTrainer::new(cfg).unwrap();
     let summary = t.run().unwrap();
@@ -158,6 +161,9 @@ fn training_trajectories_identical_across_dispatch_modes() {
         noise: 0.3,
         seed: 7,
         log_every: 0,
+        faults: hetumoe::fault::FaultPlan::none(),
+        ckpt_every: 0,
+        ckpt_dir: None,
     };
     let mut ragged = NativeTrainer::new(TrainRunConfig {
         opts: MoeLayerOptions { dispatch: DispatchMode::Ragged, ..Default::default() },

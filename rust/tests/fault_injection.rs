@@ -1,0 +1,293 @@
+//! Fault-injection integration tests: the no-fault bit-identity
+//! guarantee, timing-only straggler semantics, checkpoint round-trip
+//! exactness, rank-failure recovery equalling a fresh restart from the
+//! same checkpoint with the shrunken world, serving resilience under
+//! dead ranks, and a deterministic chaos sweep over both paths.
+
+use hetumoe::backprop::{NativeTrainer, TrainRunConfig};
+use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
+use hetumoe::fault::FaultPlan;
+use hetumoe::moe::MoeLayerOptions;
+use hetumoe::serve::{ArrivalProcess, ServeConfig, ServeEngine};
+use std::path::PathBuf;
+
+fn train_cfg() -> TrainRunConfig {
+    TrainRunConfig {
+        moe: MoeConfig {
+            num_experts: 4,
+            d_model: 16,
+            ffn_hidden: 32,
+            capacity_factor: 2.0,
+            gate: GateKind::Switch,
+        },
+        cluster: ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) },
+        opts: MoeLayerOptions::default(),
+        steps: 10,
+        tokens_per_rank: 16,
+        num_classes: 4,
+        lr: 5e-3,
+        aux_coef: 1e-2,
+        noise: 0.3,
+        seed: 0,
+        log_every: 0,
+        faults: FaultPlan::none(),
+        ckpt_every: 0,
+        ckpt_dir: None,
+    }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        cluster: ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) },
+        moe: MoeConfig {
+            num_experts: 8,
+            d_model: 16,
+            ffn_hidden: 32,
+            capacity_factor: 1.5,
+            gate: GateKind::Switch,
+        },
+        process: ArrivalProcess::Poisson { rate: 500.0 },
+        duration: 0.3,
+        ..ServeConfig::default_run()
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// The headline invariant: a plan whose targets all fall outside the
+/// world injects nothing, and the run is bit-identical to a run with no
+/// plan at all — every loss, expert count, and timing figure.
+#[test]
+fn inert_plan_is_bit_identical_to_no_faults() {
+    let mut clean = NativeTrainer::new(train_cfg()).unwrap();
+    let mut inert = NativeTrainer::new(TrainRunConfig {
+        faults: FaultPlan::parse("straggle:rank=99,x=3; nic:node=99,x=2").unwrap(),
+        ..train_cfg()
+    })
+    .unwrap();
+    clean.run().unwrap();
+    inert.run().unwrap();
+    for (a, b) in clean.logs.iter().zip(&inert.logs) {
+        assert_eq!(a.loss, b.loss, "step {}: loss drifted", a.step);
+        assert_eq!(a.report.expert_counts, b.report.expert_counts);
+        assert_eq!(a.report.critical_path, b.report.critical_path);
+        assert_eq!(a.report.faults_injected, 0);
+        assert_eq!(b.report.faults_injected, 0);
+    }
+}
+
+/// Stragglers, NIC degradation and retries are purely additive on the
+/// simulated clock: the learning trajectory never moves.
+#[test]
+fn faults_change_timing_but_not_the_trajectory() {
+    let mut clean = NativeTrainer::new(train_cfg()).unwrap();
+    let mut slow = NativeTrainer::new(TrainRunConfig {
+        faults: FaultPlan::parse(
+            "straggle:rank=1,x=3; nic:node=0,x=2,from=2,until=6; flaky:rank=0,step=3,n=2",
+        )
+        .unwrap(),
+        ..train_cfg()
+    })
+    .unwrap();
+    clean.run().unwrap();
+    slow.run().unwrap();
+    let mut injected_total = 0.0;
+    let mut retries = 0;
+    for (a, b) in clean.logs.iter().zip(&slow.logs) {
+        assert_eq!(a.loss, b.loss, "step {}: faults must not move the loss", a.step);
+        assert_eq!(a.report.expert_counts, b.report.expert_counts);
+        assert!(
+            b.report.critical_path >= a.report.critical_path,
+            "injected delay can only lengthen the critical path"
+        );
+        injected_total += b.report.injected_delay;
+        retries += b.report.retries;
+    }
+    assert!(injected_total > 0.0, "the plan must actually inject delay");
+    assert_eq!(retries, 2, "flaky:n=2 charges exactly two retries");
+    assert!(slow.fault_timeline.total() > 0.0);
+}
+
+/// Save at step N, restore, run to the end: the resumed trajectory is
+/// bit-identical to the uninterrupted one — parameters, Adam moments,
+/// and the data-RNG stream all round-trip exactly.
+#[test]
+fn checkpoint_restore_resumes_bit_identically() {
+    let dir = tmp("hetu_fault_ckpt_rt");
+    let cfg = TrainRunConfig {
+        steps: 12,
+        ckpt_every: 6,
+        ckpt_dir: Some(dir.to_string_lossy().into_owned()),
+        ..train_cfg()
+    };
+    let mut straight = NativeTrainer::new(cfg.clone()).unwrap();
+    straight.run().unwrap();
+    let ckpt = dir.join("ckpt_000006.bin");
+    assert!(ckpt.is_file(), "run must have checkpointed at step 6");
+    let mut resumed = NativeTrainer::from_checkpoint(cfg, &ckpt).unwrap();
+    resumed.run().unwrap();
+    assert_eq!(resumed.logs.len(), 6, "resume covers exactly steps 6..12");
+    for log in &resumed.logs {
+        let orig = &straight.logs[log.step];
+        assert_eq!(orig.loss, log.loss, "step {}: resumed loss drifted", log.step);
+        assert_eq!(orig.report.expert_counts, log.report.expert_counts);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A `kill:` fires mid-run: recovery restores the last checkpoint with
+/// the victim marked dead, and the post-recovery trajectory exactly
+/// matches a fresh trainer started from that same checkpoint with the
+/// shrunken world.
+#[test]
+fn kill_recovery_equals_fresh_restart_from_checkpoint() {
+    let dir = tmp("hetu_fault_kill_rec");
+    let cfg = TrainRunConfig {
+        steps: 10,
+        ckpt_every: 2,
+        ckpt_dir: Some(dir.to_string_lossy().into_owned()),
+        faults: FaultPlan::parse("kill:rank=3,step=5").unwrap(),
+        ..train_cfg()
+    };
+    let mut killed = NativeTrainer::new(cfg).unwrap();
+    let summary = killed.run().unwrap();
+    assert_eq!(summary.steps, 10);
+    // Last checkpoint before the kill was step 4: one step re-executed.
+    assert_eq!(summary.recovery_steps, 1);
+    assert_eq!(killed.layer.opts.dead_ranks, vec![3]);
+
+    // Fresh trainer from the same pre-kill checkpoint + dead rank 3.
+    let mut fresh_cfg = TrainRunConfig { steps: 10, ..train_cfg() };
+    fresh_cfg.opts.dead_ranks = vec![3];
+    let mut fresh =
+        NativeTrainer::from_checkpoint(fresh_cfg, &dir.join("ckpt_000004.bin")).unwrap();
+    fresh.run().unwrap();
+    let killed_tail: Vec<_> = killed.logs.iter().filter(|l| l.step >= 4).collect();
+    assert_eq!(killed_tail.len(), fresh.logs.len());
+    for (a, b) in killed_tail.iter().zip(&fresh.logs) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss, b.loss, "step {}: recovery trajectory diverged", a.step);
+        assert_eq!(a.report.expert_counts, b.report.expert_counts);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Without a checkpoint there is nothing to recover from — the run
+/// fails with a typed, actionable error instead of a panic.
+#[test]
+fn kill_without_checkpoint_is_a_typed_error() {
+    let mut t = NativeTrainer::new(TrainRunConfig {
+        faults: FaultPlan::parse("kill:rank=1,step=2").unwrap(),
+        ..train_cfg()
+    })
+    .unwrap();
+    let err = t.run().unwrap_err();
+    assert!(matches!(err, hetumoe::error::HetuError::Fault(_)));
+    assert!(err.to_string().contains("--ckpt-every"), "error must name the fix: {err}");
+}
+
+/// `dead:` ranks are down from step 0: the elastic placement remaps
+/// their experts onto survivors and training still converges.
+#[test]
+fn training_with_an_initially_dead_rank_still_learns() {
+    let mut t = NativeTrainer::new(TrainRunConfig {
+        steps: 30,
+        faults: FaultPlan::parse("dead:rank=3").unwrap(),
+        ..train_cfg()
+    })
+    .unwrap();
+    let summary = t.run().unwrap();
+    assert!(summary.final_loss.is_finite());
+    let losses = t.losses();
+    let first5: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last5: f32 = losses[25..].iter().sum::<f32>() / 5.0;
+    assert!(last5 < first5, "degraded world must still learn: {first5} → {last5}");
+    // Rank 3's experts were remapped: every step's counts cover all 4.
+    assert_eq!(t.logs[0].report.expert_counts.len(), 4);
+}
+
+/// Serving routes around a dead node: goodput stays positive and the
+/// tail latency stays finite.
+#[test]
+fn serving_survives_dead_and_killed_ranks() {
+    // Dead from the start.
+    let mut engine = ServeEngine::new(ServeConfig {
+        dead_ranks: vec![1],
+        ..serve_cfg()
+    })
+    .unwrap();
+    let report = engine.run().unwrap();
+    assert!(report.completed > 0, "a dead rank must not stop service");
+    assert!(report.goodput_rps > 0.0);
+    assert!(report.latency.p99.is_finite());
+
+    // Killed mid-run (batch 3), plus a straggler: still serving.
+    let mut chaos = ServeEngine::new(ServeConfig {
+        faults: FaultPlan::parse("kill:rank=2,step=3; straggle:rank=0,x=2").unwrap(),
+        ..serve_cfg()
+    })
+    .unwrap();
+    let r = chaos.run().unwrap();
+    assert!(r.completed > 0);
+    assert!(r.goodput_rps > 0.0);
+    assert!(r.latency.p99.is_finite());
+    assert!(r.faults_injected > 0, "the kill and stragglers must be counted");
+}
+
+/// An inert plan leaves the serving report bit-identical too.
+#[test]
+fn serving_inert_plan_matches_no_faults() {
+    let mut clean = ServeEngine::new(serve_cfg()).unwrap();
+    let a = clean.run().unwrap();
+    let mut inert = ServeEngine::new(ServeConfig {
+        faults: FaultPlan::parse("straggle:rank=99,x=4").unwrap(),
+        ..serve_cfg()
+    })
+    .unwrap();
+    let b = inert.run().unwrap();
+    assert_eq!(a.offered, b.offered);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.latency.p50, b.latency.p50);
+    assert_eq!(b.faults_injected, 0);
+}
+
+/// Deterministic chaos sweep over both paths: every seeded run finishes
+/// with finite numbers, never panics, and replays identically.
+#[test]
+fn chaos_sweep_is_finite_and_deterministic() {
+    // Chaos injects probabilistically per step; over 3 seeds × 8 train
+    // steps plus the serve batches, at least one fault must land.
+    let mut injected_total = 0usize;
+    for seed in 1..=3u64 {
+        let spec = format!("chaos:seed={seed}");
+        let cfg = TrainRunConfig {
+            steps: 8,
+            faults: FaultPlan::parse(&spec).unwrap(),
+            ..train_cfg()
+        };
+        let mut a = NativeTrainer::new(cfg.clone()).unwrap();
+        let mut b = NativeTrainer::new(cfg).unwrap();
+        let sa = a.run().unwrap();
+        let sb = b.run().unwrap();
+        assert!(sa.final_loss.is_finite());
+        assert_eq!(sa.final_loss, sb.final_loss, "chaos must replay bit-identically");
+        assert_eq!(sa.breakdown.faults_injected, sb.breakdown.faults_injected);
+        injected_total += sa.breakdown.faults_injected;
+
+        let scfg = ServeConfig { faults: FaultPlan::parse(&spec).unwrap(), ..serve_cfg() };
+        let mut s1 = ServeEngine::new(scfg.clone()).unwrap();
+        let mut s2 = ServeEngine::new(scfg).unwrap();
+        let r1 = s1.run().unwrap();
+        let r2 = s2.run().unwrap();
+        assert!(r1.completed > 0);
+        assert!(r1.latency.p99.is_finite());
+        assert_eq!(r1.completed, r2.completed);
+        assert_eq!(r1.faults_injected, r2.faults_injected);
+        injected_total += r1.faults_injected;
+    }
+    assert!(injected_total > 0, "chaos injected nothing across the whole sweep");
+}
