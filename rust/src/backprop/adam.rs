@@ -44,6 +44,21 @@ impl Adam {
         (self.t, self.m.clone(), self.v.clone())
     }
 
+    /// Borrow one tensor's moment pair — expert migration serializes
+    /// the moments alongside the parameters.
+    pub fn moments(&self, idx: usize) -> (&[f32], &[f32]) {
+        (&self.m[idx], &self.v[idx])
+    }
+
+    /// Overwrite one tensor's moment pair bitwise (the receive side of
+    /// an expert migration). Lengths must match the built sizes.
+    pub fn set_moments(&mut self, idx: usize, m: &[f32], v: &[f32]) {
+        assert_eq!(m.len(), self.m[idx].len(), "moment m size mismatch");
+        assert_eq!(v.len(), self.v[idx].len(), "moment v size mismatch");
+        self.m[idx].copy_from_slice(m);
+        self.v[idx].copy_from_slice(v);
+    }
+
     /// Restore a state exported by [`Adam::export_state`]. The tensor
     /// list must match the sizes this optimizer was built with.
     pub fn restore_state(

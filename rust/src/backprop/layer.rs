@@ -76,9 +76,11 @@ pub struct LayerGrads {
     /// dense-gradient AllReduce of real MoE training.
     pub d_gate_weight: Vec<Tensor>,
     /// Per-expert parameter grads, index = global expert id. Expert
-    /// parameters are *sharded* (rank `e/(E/W)` owns expert `e`), so no
-    /// reduction is needed — the exchanges already delivered every
-    /// gradient row to the owning rank.
+    /// parameters are *sharded* (the live [`ExpertPlacement`] names the
+    /// owning rank — the contiguous `e/(E/W)` formula unless an
+    /// adaptive table is installed), so no reduction is needed — the
+    /// exchanges already delivered every gradient row to the owning
+    /// rank.
     pub experts: Vec<ExpertGrads>,
 }
 
@@ -119,6 +121,7 @@ impl TrainMoeLayer {
             ));
         }
         validate_dead_ranks(&opts, w)?;
+        crate::moe::validate_placement_table(&opts, cfg.num_experts, w)?;
         let mut rng = Rng::seed(seed);
         let experts: Vec<Ffn> = (0..cfg.num_experts)
             .map(|_| Ffn::init(cfg.d_model, cfg.ffn_hidden, &mut rng))
@@ -130,12 +133,14 @@ impl TrainMoeLayer {
         Ok(TrainMoeLayer { cfg, cluster, net, gate, gate_weight, experts, opts })
     }
 
-    /// The shared expert placement (elastically remapped when
-    /// `opts.dead_ranks` marks ranks down).
+    /// The shared expert placement: the adaptive table when one is
+    /// installed (`opts.placement_table`), elastically remapped when
+    /// `opts.dead_ranks` marks ranks down.
     pub fn placement(&self) -> ExpertPlacement {
-        ExpertPlacement::with_dead(
+        ExpertPlacement::resolve(
             self.cfg.num_experts,
             self.cluster.world(),
+            self.opts.placement_table.as_deref(),
             &self.opts.dead_ranks,
         )
     }

@@ -16,7 +16,7 @@
 use crate::backprop::adam::Adam;
 use crate::backprop::layer::TrainMoeLayer;
 use crate::ckpt;
-use crate::cluster::Timeline;
+use crate::cluster::{ExpertPlacement, LinkKind, Timeline};
 use crate::comm::allreduce;
 use crate::config::{ClusterConfig, GateKind, MoeConfig};
 use crate::coordinator::metrics::{Breakdown, MetricsAgg};
@@ -25,6 +25,11 @@ use crate::error::Result;
 use crate::fault::FaultPlan;
 use crate::moe::{MoeLayerOptions, StepReport};
 use crate::nn::{log_softmax, matmul, matmul_nt, matmul_tn};
+use crate::obs::trace;
+use crate::placement::{
+    migration_bytes_per_expert, PlacementDelta, PlacementOptimizer, PlacementPolicy,
+    ReplicaMap, TrafficWindow,
+};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::util::stats::load_cv;
@@ -55,6 +60,18 @@ pub struct TrainRunConfig {
     /// Directory checkpoints are written into (required when
     /// `ckpt_every > 0`).
     pub ckpt_dir: Option<String>,
+    /// Expert placement policy. `Static` (the default) freezes the
+    /// contiguous formula and is bit-identical to the pre-adaptive
+    /// trainer; `Adaptive` re-optimizes from observed traffic and
+    /// migrates experts (weights + Adam moments) at step boundaries.
+    pub placement: PlacementPolicy,
+    /// Under `Adaptive`: consider a migration every N steps (0 = never).
+    pub placement_every: usize,
+    /// Steps of per-expert traffic the optimizer's rolling window holds.
+    pub placement_window: usize,
+    /// Minimum relative NIC-peak gain for a migration to fire
+    /// (thrash guard; benches set 0.0 to surface every strict win).
+    pub placement_min_gain: f64,
 }
 
 impl TrainRunConfig {
@@ -81,6 +98,10 @@ impl TrainRunConfig {
             faults: FaultPlan::none(),
             ckpt_every: 0,
             ckpt_dir: None,
+            placement: PlacementPolicy::Static,
+            placement_every: 25,
+            placement_window: 16,
+            placement_min_gain: 0.01,
         }
     }
 }
@@ -111,6 +132,12 @@ pub struct TrainSummary {
     /// Steps re-executed after rank-failure recovery (fail step minus
     /// checkpoint step, summed over recoveries).
     pub recovery_steps: usize,
+    /// Expert migrations the adaptive placement executed (0 static).
+    pub migrations: usize,
+    /// Bytes those migrations moved — FFN params **and both Adam
+    /// moments** — also charged into the step bytes-on-wire/intra
+    /// splits as they happen.
+    pub bytes_migrated: usize,
 }
 
 /// Exponential smoothing of a loss curve (α = weight of the new value).
@@ -141,6 +168,16 @@ pub struct NativeTrainer {
     /// Fault and recovery events on the simulated clock (`straggle/*`,
     /// `retry/*`, `rank_fail/*`), kept apart from base phase time.
     pub fault_timeline: Timeline,
+    /// Rolling per-expert traffic feeding the adaptive optimizer
+    /// (only populated under `placement: Adaptive`).
+    pub traffic: TrafficWindow,
+    /// Expert migrations executed so far.
+    pub migrations: usize,
+    /// Bytes those migrations moved (params + both Adam moments).
+    pub bytes_migrated: usize,
+    /// Migration charge (simulated seconds, NIC bytes, intra bytes)
+    /// waiting to be folded into the next step's report.
+    pending_migration: Option<(f64, usize, usize)>,
     task: ClusterTask,
     data_rng: Rng,
     opt: Adam,
@@ -190,6 +227,7 @@ impl NativeTrainer {
             sizes.extend([f.w1.len(), f.b1.len(), f.w2.len(), f.b2.len()]);
         }
         let opt = Adam::new(cfg.lr, &sizes);
+        let traffic = TrafficWindow::new(cfg.placement_window);
         Ok(NativeTrainer {
             cfg,
             layer,
@@ -198,6 +236,10 @@ impl NativeTrainer {
             logs: Vec::new(),
             recovery_steps: 0,
             fault_timeline: Timeline::new(),
+            traffic,
+            migrations: 0,
+            bytes_migrated: 0,
+            pending_migration: None,
             task,
             data_rng,
             opt,
@@ -384,6 +426,16 @@ impl NativeTrainer {
         // negligible next to them).
         report.wall.push(("optimizer".into(), o0.elapsed().as_secs_f64() / w as f64));
 
+        // ---- Migration charge from the preceding step boundary ----
+        // The move itself already happened (weights + moments landed
+        // bitwise); its simulated wire cost is billed to this step so
+        // the aggregates never lose it.
+        if let Some((mig_time, mig_inter, mig_intra)) = self.pending_migration.take() {
+            report.comm.push(("migrate".into(), mig_time));
+            report.bytes_on_wire += mig_inter;
+            report.bytes_intra_node += mig_intra;
+        }
+
         // ---- Bookkeeping ----
         match report.comm_schedule.as_str() {
             "flat" => self.fwd_flat += 1,
@@ -445,6 +497,17 @@ impl NativeTrainer {
                     log.step, log.loss, log.ce, log.aux, log.load_cv
                 );
             }
+            // Adaptive placement: fold this step's traffic into the
+            // window and re-optimize at the configured boundaries —
+            // before checkpointing, so snapshots carry the live table.
+            if self.cfg.placement.is_adaptive() {
+                self.traffic.observe(&log.report.expert_counts);
+                if self.cfg.placement_every > 0
+                    && self.step_idx % self.cfg.placement_every == 0
+                {
+                    self.maybe_migrate()?;
+                }
+            }
             self.maybe_checkpoint()?;
         }
         Ok(self.summary())
@@ -476,6 +539,29 @@ impl NativeTrainer {
         cfg.opts.dead_ranks.sort_unstable();
         cfg.opts.dead_ranks.dedup();
         let mut fresh = NativeTrainer::from_checkpoint(cfg, &path)?;
+        // Adaptive placement: re-home the killed ranks' experts onto
+        // the least-*loaded* survivors per the observed traffic window
+        // (the uniform least-populated greedy is the fallback when no
+        // traffic was seen yet), and pin the result as the live table.
+        if fresh.cfg.placement.is_adaptive() {
+            if let Some(load) = self.traffic.mean_load() {
+                let e = fresh.cfg.moe.num_experts;
+                let world = fresh.cfg.cluster.world();
+                let base = ExpertPlacement::resolve(
+                    e,
+                    world,
+                    fresh.layer.opts.placement_table.as_deref(),
+                    &[],
+                );
+                let remapped =
+                    base.compose_dead_loaded(&fresh.layer.opts.dead_ranks, Some(&load));
+                fresh.layer.opts.placement_table = Some(remapped.table_vec());
+                fresh.cfg.opts.placement_table = fresh.layer.opts.placement_table.clone();
+            }
+            fresh.traffic = self.traffic.clone();
+            fresh.migrations = self.migrations;
+            fresh.bytes_migrated = self.bytes_migrated;
+        }
         // Carry the history from before the checkpoint: those steps are
         // not re-executed, so their logs and aggregates stand.
         for log in self.logs.iter().filter(|l| l.step < cstep) {
@@ -496,6 +582,113 @@ impl NativeTrainer {
         fresh.last_ckpt = self.last_ckpt.clone();
         fresh.fault_timeline = std::mem::take(&mut self.fault_timeline);
         *self = fresh;
+        Ok(())
+    }
+
+    /// Ask the optimizer for a better layout under the observed window
+    /// and execute the migration when one exists.
+    fn maybe_migrate(&mut self) -> Result<()> {
+        let opt = PlacementOptimizer {
+            min_gain: self.cfg.placement_min_gain,
+            ..Default::default()
+        };
+        let current = self.layer.placement();
+        let row_bytes = self.cfg.moe.d_model * 4;
+        let Some(delta) = opt.propose(
+            &self.traffic,
+            &current,
+            &ReplicaMap::new(self.cfg.moe.num_experts),
+            &self.layer.opts.dead_ranks,
+            &self.layer.net,
+            row_bytes,
+        ) else {
+            return Ok(());
+        };
+        self.apply_migration(&delta)
+    }
+
+    /// Execute a [`PlacementDelta`]: round-trip each migrating expert's
+    /// FFN parameters **and Adam moments** through a wire buffer (a
+    /// bitwise send/recv between the old and new owner), charge the
+    /// simulated point-to-point transfer per move, install the new
+    /// table, and stash the charge for the next step's report.
+    fn apply_migration(&mut self, delta: &PlacementDelta) -> Result<()> {
+        let d = self.cfg.moe.d_model;
+        let h = self.cfg.moe.ffn_hidden;
+        let g = self.cfg.cluster.gpus_per_node;
+        let per_bytes = migration_bytes_per_expert(d, h);
+        let mut span = trace::span("migrate");
+        let mut mig_time = 0.0f64;
+        let (mut inter, mut intra) = (0usize, 0usize);
+        for m in &delta.moves {
+            // Serialize: w1, b1, w2, b2, then m and v of each (the
+            // expert's Adam slots sit at 3 + 4e .. 3 + 4e + 4 — after
+            // gate weight, head weight, head bias).
+            let mut payload: Vec<f32> = Vec::with_capacity(per_bytes / 4);
+            {
+                let f = &self.layer.experts[m.expert];
+                payload.extend_from_slice(f.w1.data());
+                payload.extend_from_slice(&f.b1);
+                payload.extend_from_slice(f.w2.data());
+                payload.extend_from_slice(&f.b2);
+            }
+            for slot in 0..4 {
+                let (mm, _) = self.opt.moments(3 + 4 * m.expert + slot);
+                payload.extend_from_slice(mm);
+            }
+            for slot in 0..4 {
+                let (_, vv) = self.opt.moments(3 + 4 * m.expert + slot);
+                payload.extend_from_slice(vv);
+            }
+            debug_assert_eq!(payload.len() * 4, per_bytes);
+            // Deserialize at the new owner — bitwise, so the loss
+            // trajectory is untouched by construction.
+            let mut off = 0usize;
+            {
+                let f = &mut self.layer.experts[m.expert];
+                let w1 = f.w1.len();
+                f.w1.data_mut().copy_from_slice(&payload[off..off + w1]);
+                off += w1;
+                let b1 = f.b1.len();
+                f.b1.copy_from_slice(&payload[off..off + b1]);
+                off += b1;
+                let w2 = f.w2.len();
+                f.w2.data_mut().copy_from_slice(&payload[off..off + w2]);
+                off += w2;
+                let b2 = f.b2.len();
+                f.b2.copy_from_slice(&payload[off..off + b2]);
+                off += b2;
+            }
+            let moment_sizes: Vec<usize> =
+                (0..4).map(|s| self.opt.moments(3 + 4 * m.expert + s).0.len()).collect();
+            let m_off = off;
+            let v_off = off + moment_sizes.iter().sum::<usize>();
+            let mut mo = m_off;
+            let mut vo = v_off;
+            for (slot, &len) in moment_sizes.iter().enumerate() {
+                let mm = payload[mo..mo + len].to_vec();
+                let vv = payload[vo..vo + len].to_vec();
+                self.opt.set_moments(3 + 4 * m.expert + slot, &mm, &vv);
+                mo += len;
+                vo += len;
+            }
+            // Charge the transfer on the link it actually crosses.
+            let kind =
+                if m.from / g == m.to / g { LinkKind::Intra } else { LinkKind::Inter };
+            mig_time += self.layer.net.msg_time(kind, per_bytes as f64);
+            match kind {
+                LinkKind::Inter => inter += per_bytes,
+                _ => intra += per_bytes,
+            }
+        }
+        span.arg("moves", delta.moves.len());
+        span.arg("bytes", inter + intra);
+        self.layer.opts.placement_table = Some(delta.table.clone());
+        self.cfg.opts.placement_table = Some(delta.table.clone());
+        self.migrations += delta.moves.len();
+        self.bytes_migrated += inter + intra;
+        let (t0, i0, n0) = self.pending_migration.take().unwrap_or((0.0, 0, 0));
+        self.pending_migration = Some((t0 + mig_time, i0 + inter, n0 + intra));
         Ok(())
     }
 
@@ -541,6 +734,15 @@ impl NativeTrainer {
         t.opt.restore_state(state.adam_t, state.adam_m, state.adam_v)?;
         t.data_rng = Rng::from_state(state.data_rng);
         t.step_idx = state.step as usize;
+        // The checkpoint's live placement wins over whatever the config
+        // carried — resuming after adaptive migrations must continue on
+        // the migrated layout, not the formula.
+        if let Some(table) = state.placement {
+            let table: Vec<usize> = table.iter().map(|&r| r as usize).collect();
+            ExpertPlacement::validate_table(e, t.cfg.cluster.world(), &table)?;
+            t.layer.opts.placement_table = Some(table.clone());
+            t.cfg.opts.placement_table = Some(table);
+        }
         Ok(t)
     }
 
@@ -572,6 +774,13 @@ impl NativeTrainer {
             adam_m,
             adam_v,
             data_rng: self.data_rng.state(),
+            placement: self
+                .layer
+                .opts
+                .placement_table
+                .as_ref()
+                .map(|t| t.iter().map(|&r| r as u64).collect()),
+            replicas: Vec::new(),
         }
     }
 
@@ -602,6 +811,8 @@ impl NativeTrainer {
             fwd_schedules: (self.fwd_flat, self.fwd_hier),
             bwd_schedules: (self.bwd_flat, self.bwd_hier),
             recovery_steps: self.recovery_steps,
+            migrations: self.migrations,
+            bytes_migrated: self.bytes_migrated,
         }
     }
 
@@ -638,6 +849,7 @@ mod tests {
             faults: FaultPlan::none(),
             ckpt_every: 0,
             ckpt_dir: None,
+            ..TrainRunConfig::default_run()
         }
     }
 
@@ -691,6 +903,63 @@ mod tests {
         let summary = t.run().unwrap();
         assert_eq!(summary.steps, 5);
         assert!(summary.final_loss.is_finite());
+    }
+
+    #[test]
+    fn skewed_window_migrates_with_honest_bytes_and_exact_numerics() {
+        let mut cfg = quick_cfg();
+        cfg.placement = PlacementPolicy::Adaptive;
+        cfg.placement_min_gain = 0.0;
+        let mut t = NativeTrainer::new(cfg).unwrap();
+        // E=4 over 2×2: the formula puts experts 0 and 1 on node 0 —
+        // a hot pair there must split across the node boundary.
+        for _ in 0..8 {
+            t.traffic.observe(&[300, 300, 1, 1]);
+        }
+        t.maybe_migrate().unwrap();
+        assert!(t.migrations > 0, "co-located hot experts must migrate");
+        assert!(t.bytes_migrated > 0, "migration bytes must be charged");
+        let table = t.layer.opts.placement_table.clone().expect("table installed");
+        let node = |r: usize| r / 2;
+        assert_ne!(node(table[0]), node(table[1]), "hot pair still co-located");
+        // Placement never touches numerics: the next step matches a
+        // static trainer bit-for-bit, with the migration charge billed
+        // as a comm phase on top.
+        let la = t.step().unwrap();
+        let mut s = NativeTrainer::new(quick_cfg()).unwrap();
+        let lb = s.step().unwrap();
+        assert_eq!(la.loss, lb.loss);
+        assert_eq!(la.report.expert_counts, lb.report.expert_counts);
+        let mig = la
+            .report
+            .comm
+            .iter()
+            .find(|(n, _)| n == "migrate")
+            .expect("migrate phase billed");
+        assert!(mig.1 > 0.0);
+        assert!(!lb.report.comm.iter().any(|(n, _)| n == "migrate"));
+    }
+
+    #[test]
+    fn adaptive_trajectory_matches_from_scratch_with_final_table() {
+        let mut cfg = quick_cfg();
+        cfg.placement = PlacementPolicy::Adaptive;
+        cfg.placement_every = 5;
+        cfg.placement_min_gain = 0.0;
+        let mut a = NativeTrainer::new(cfg).unwrap();
+        let sa = a.run().unwrap();
+        // A fresh run that *starts* on the adaptive run's final table
+        // must produce the bit-identical loss trajectory (same seed):
+        // placement only moves bytes, never values.
+        let mut cfg2 = quick_cfg();
+        cfg2.opts.placement_table = a.layer.opts.placement_table.clone();
+        let mut b = NativeTrainer::new(cfg2).unwrap();
+        let sb = b.run().unwrap();
+        assert_eq!(a.losses(), b.losses(), "placement must never touch numerics");
+        if sa.migrations > 0 {
+            assert!(sa.bytes_migrated > 0);
+        }
+        assert_eq!(sb.migrations, 0, "static runs never migrate");
     }
 
     #[test]

@@ -11,8 +11,14 @@
 //! Layout: `"HMCK"` magic, `u32` version, `u64` step, five `u64` dims
 //! `(E, d, h, classes, world)`, then length-prefixed f32 vectors for
 //! gate weight / head weight / head bias, `E` expert blocks (w1, b1,
-//! w2, b2), the Adam state (t, then m and v vector lists) and the RNG
-//! state.
+//! w2, b2), the Adam state (t, then m and v vector lists), the RNG
+//! state, and (v2) the live expert placement: a presence byte + the
+//! expert→rank table when an adaptive table is installed, then the
+//! serving replica pair list (always empty for training snapshots).
+//! Without the placement a restore after adaptive migrations would
+//! silently fall back to the contiguous formula — same numerics, wrong
+//! traffic accounting — so v1 files are rejected outright rather than
+//! guessed at.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -22,7 +28,7 @@ use crate::error::{HetuError, Result};
 use crate::util::rng::RngState;
 
 const MAGIC: &[u8; 4] = b"HMCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// One expert FFN's flat parameters.
 #[derive(Clone, Debug, PartialEq)]
@@ -51,6 +57,12 @@ pub struct TrainState {
     pub adam_m: Vec<Vec<f32>>,
     pub adam_v: Vec<Vec<f32>>,
     pub data_rng: RngState,
+    /// Live expert→rank table installed by the adaptive placement
+    /// (`None` = the static contiguous formula).
+    pub placement: Option<Vec<u64>>,
+    /// Serving replica pairs `(expert, rank)` (empty for training
+    /// snapshots — training keeps single assignment).
+    pub replicas: Vec<(u64, u64)>,
 }
 
 impl TrainState {
@@ -149,6 +161,21 @@ fn write_state<W: Write>(w: &mut W, s: &TrainState) -> std::io::Result<()> {
         }
         None => w.write_all(&[0u8])?,
     }
+    match &s.placement {
+        Some(table) => {
+            w.write_all(&[1u8])?;
+            w.write_all(&(table.len() as u64).to_le_bytes())?;
+            for &r in table {
+                w.write_all(&r.to_le_bytes())?;
+            }
+        }
+        None => w.write_all(&[0u8])?,
+    }
+    w.write_all(&(s.replicas.len() as u64).to_le_bytes())?;
+    for &(e, r) in &s.replicas {
+        w.write_all(&e.to_le_bytes())?;
+        w.write_all(&r.to_le_bytes())?;
+    }
     Ok(())
 }
 
@@ -209,6 +236,41 @@ fn read_state<R: Read>(r: &mut R) -> Result<TrainState> {
         }
         other => return Err(ckpt_err!("corrupt RNG spare flag {other}")),
     };
+    r.read_exact(&mut flag)?;
+    let placement = match flag[0] {
+        0 => None,
+        1 => {
+            let n = read_u64(r)?;
+            if n != num_experts {
+                return Err(ckpt_err!(
+                    "placement table length {n} != num_experts {num_experts}"
+                ));
+            }
+            let mut table = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                let rank = read_u64(r)?;
+                if rank >= world {
+                    return Err(ckpt_err!("placement rank {rank} outside world {world}"));
+                }
+                table.push(rank);
+            }
+            Some(table)
+        }
+        other => return Err(ckpt_err!("corrupt placement flag {other}")),
+    };
+    let n_replicas = read_u64(r)?;
+    if n_replicas > MAX_VEC {
+        return Err(ckpt_err!("corrupt replica count {n_replicas}"));
+    }
+    let mut replicas = Vec::with_capacity(n_replicas as usize);
+    for _ in 0..n_replicas {
+        let e = read_u64(r)?;
+        let rank = read_u64(r)?;
+        if e >= num_experts || rank >= world {
+            return Err(ckpt_err!("corrupt replica pair ({e}, {rank})"));
+        }
+        replicas.push((e, rank));
+    }
     Ok(TrainState {
         step,
         num_experts,
@@ -224,6 +286,8 @@ fn read_state<R: Read>(r: &mut R) -> Result<TrainState> {
         adam_m,
         adam_v,
         data_rng: RngState { s, gauss_spare },
+        placement,
+        replicas,
     })
 }
 
@@ -296,6 +360,11 @@ mod tests {
             adam_m: vec![vec![0.5; 6], vec![0.25; 15]],
             adam_v: vec![vec![0.125; 6], vec![1e-9; 15]],
             data_rng: rng.state(),
+            // Deliberately NOT the contiguous formula (that would be
+            // [0, 1]): the round trip must preserve a live adaptive
+            // layout and a serving replica verbatim.
+            placement: Some(vec![1, 0]),
+            replicas: vec![(0, 1)],
         }
     }
 
@@ -324,6 +393,42 @@ mod tests {
         let bytes = std::fs::read(&good).unwrap();
         std::fs::write(&trunc, &bytes[..bytes.len() / 2]).unwrap();
         assert!(load(&trunc).is_err(), "truncated checkpoint must not load");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn static_snapshot_without_table_also_round_trips() {
+        let dir = std::env::temp_dir().join("hetu_ckpt_test_static");
+        let path = dir.join("ckpt_static.bin");
+        let mut state = sample_state();
+        state.placement = None;
+        state.replicas = Vec::new();
+        save(&path, &state).unwrap();
+        assert_eq!(load(&path).unwrap(), state);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_v1_and_corrupt_placement() {
+        let dir = std::env::temp_dir().join("hetu_ckpt_test_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.bin");
+        save(&good, &sample_state()).unwrap();
+        let mut bytes = std::fs::read(&good).unwrap();
+        // Rewrite the version word to 1: pre-placement files carry no
+        // layout, so resuming them would silently mis-account traffic.
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let old = dir.join("v1.bin");
+        std::fs::write(&old, &bytes).unwrap();
+        let err = load(&old).unwrap_err();
+        assert!(err.to_string().contains("version 1"), "{err}");
+        // A placement rank outside the world must be rejected on load,
+        // not installed.
+        let mut state = sample_state();
+        state.placement = Some(vec![9, 0]);
+        let bad = dir.join("bad.bin");
+        save(&bad, &state).unwrap();
+        assert!(load(&bad).unwrap_err().to_string().contains("outside world"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

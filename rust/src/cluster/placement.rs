@@ -13,6 +13,14 @@
 //! through an explicit expert→rank table. The contiguous case keeps the
 //! closed-form arithmetic — no table is materialized, so the healthy
 //! path costs exactly what it did before elasticity existed.
+//!
+//! Adaptive placement (`placement/`) generalizes further: an arbitrary
+//! expert→rank table installed via [`ExpertPlacement::from_table`]
+//! (e.g. after the optimizer swapped a hot expert across nodes), with
+//! [`ExpertPlacement::compose_dead`] layering the elastic remap on top
+//! so a kill during an adaptive run degrades exactly like a kill under
+//! the formula. [`ExpertPlacement::resolve`] is the one entry point the
+//! layer, executor, backward pass and serving router all share.
 
 /// Expert partitioning over a world of ranks: contiguous by default,
 /// table-based after an elastic remap around dead ranks.
@@ -51,28 +59,91 @@ impl ExpertPlacement {
     /// With no dead ranks this *is* [`ExpertPlacement::new`] (compares
     /// equal), so healthy paths stay on the closed-form arithmetic.
     pub fn with_dead(num_experts: usize, world: usize, dead: &[usize]) -> ExpertPlacement {
+        Self::with_dead_loaded(num_experts, world, dead, None)
+    }
+
+    /// [`ExpertPlacement::with_dead`] with an optional observed
+    /// per-expert load window. With `None` the remap is the historical
+    /// uniform-count greedy (bit-identical to `with_dead`); with
+    /// `Some(load)` the dead ranks' experts move heaviest-first onto
+    /// the survivor carrying the least *observed* hosted load (ties →
+    /// fewest hosted, then lowest rank id), so a skewed history lands
+    /// the hot orphan on a genuinely idle rank instead of merely the
+    /// shortest hosted list. Still a pure function of its arguments.
+    pub fn with_dead_loaded(
+        num_experts: usize,
+        world: usize,
+        dead: &[usize],
+        load: Option<&[f64]>,
+    ) -> ExpertPlacement {
+        ExpertPlacement::new(num_experts, world).compose_dead_loaded(dead, load)
+    }
+
+    /// Layer the elastic dead-rank remap on top of *this* placement
+    /// (identity when `dead` is empty or hosts nothing here). This is
+    /// how an adaptive table composes with PR 7's fault path: the
+    /// optimizer's layout stays in force and only the dead ranks'
+    /// experts move, with the same deterministic greedy as
+    /// [`ExpertPlacement::with_dead`].
+    pub fn compose_dead(&self, dead: &[usize]) -> ExpertPlacement {
+        self.compose_dead_loaded(dead, None)
+    }
+
+    /// [`ExpertPlacement::compose_dead`] with an optional observed
+    /// per-expert load: when present, orphaned experts re-home onto the
+    /// least-*loaded* survivor (hottest orphan first) instead of the
+    /// least-*populated* one. `None` is bit-identical to the historical
+    /// uniform remap.
+    pub fn compose_dead_loaded(
+        &self,
+        dead: &[usize],
+        load: Option<&[f64]>,
+    ) -> ExpertPlacement {
+        let world = self.world;
+        let num_experts = self.num_experts;
         let mut dead: Vec<usize> = dead.iter().copied().filter(|&r| r < world).collect();
         dead.sort_unstable();
         dead.dedup();
-        if dead.is_empty() {
-            return ExpertPlacement::new(num_experts, world);
+        let is_dead = |r: usize| dead.binary_search(&r).is_ok();
+        if dead.is_empty() || (0..world).filter(|&r| is_dead(r)).all(|r| self.num_hosted(r) == 0)
+        {
+            return self.clone();
         }
         debug_assert!(
             dead.len() < world,
             "cannot place {num_experts} experts with all {world} ranks dead"
         );
-        let base = ExpertPlacement::new(num_experts, world);
-        let is_dead = |r: usize| dead.binary_search(&r).is_ok();
+        debug_assert!(load.is_none_or(|l| l.len() == num_experts));
+        let expert_load = |e: usize| load.map_or(0.0, |l| l[e]);
         let mut hosted: Vec<Vec<usize>> = (0..world)
-            .map(|r| if is_dead(r) { Vec::new() } else { base.hosted_experts(r) })
+            .map(|r| if is_dead(r) { Vec::new() } else { self.hosted_experts(r) })
+            .collect();
+        let mut rank_load: Vec<f64> = hosted
+            .iter()
+            .map(|list| list.iter().map(|&e| expert_load(e)).sum())
             .collect();
         for &dr in &dead {
-            for e in base.hosted_experts(dr) {
+            let mut orphans = self.hosted_experts(dr);
+            // Heaviest orphan places first when a load window is
+            // available (better final balance); ascending-id otherwise —
+            // the exact historical order, keeping `with_dead` pinned.
+            if load.is_some() {
+                orphans.sort_by(|&a, &b| {
+                    expert_load(b).total_cmp(&expert_load(a)).then(a.cmp(&b))
+                });
+            }
+            for e in orphans {
                 let target = (0..world)
                     .filter(|&r| !is_dead(r))
-                    .min_by_key(|&r| (hosted[r].len(), r))
+                    .min_by(|&a, &b| match load {
+                        None => (hosted[a].len(), a).cmp(&(hosted[b].len(), b)),
+                        Some(_) => rank_load[a]
+                            .total_cmp(&rank_load[b])
+                            .then((hosted[a].len(), a).cmp(&(hosted[b].len(), b))),
+                    })
                     .expect("at least one survivor");
                 hosted[target].push(e);
+                rank_load[target] += expert_load(e);
             }
         }
         let mut table = vec![0usize; num_experts];
@@ -83,6 +154,76 @@ impl ExpertPlacement {
             }
         }
         ExpertPlacement { num_experts, world, table: Some(table), hosted }
+    }
+
+    /// Placement from an explicit expert→rank table (the adaptive
+    /// optimizer's output). A table that coincides with the contiguous
+    /// formula normalizes to [`ExpertPlacement::new`] (compares equal,
+    /// `is_contiguous` true), so "adaptive but never moved" stays on
+    /// the closed-form fast path with hierarchical + dedup eligible.
+    /// Callers validate untrusted tables with
+    /// [`ExpertPlacement::validate_table`] first.
+    pub fn from_table(num_experts: usize, world: usize, table: &[usize]) -> ExpertPlacement {
+        debug_assert_eq!(table.len(), num_experts);
+        debug_assert!(table.iter().all(|&r| r < world));
+        if num_experts % world == 0 {
+            let epr = num_experts / world;
+            if table.iter().enumerate().all(|(e, &r)| r == e / epr) {
+                return ExpertPlacement::new(num_experts, world);
+            }
+        }
+        let mut hosted: Vec<Vec<usize>> = vec![Vec::new(); world];
+        for (e, &r) in table.iter().enumerate() {
+            hosted[r].push(e); // ascending: e iterates in order
+        }
+        ExpertPlacement { num_experts, world, table: Some(table.to_vec()), hosted }
+    }
+
+    /// Typed validation of an untrusted expert→rank table (CLI /
+    /// checkpoint input) — checked at configuration time so the hot
+    /// paths can keep plain asserts.
+    pub fn validate_table(
+        num_experts: usize,
+        world: usize,
+        table: &[usize],
+    ) -> crate::error::Result<()> {
+        if table.len() != num_experts {
+            return Err(crate::config_err!(
+                "placement table has {} entries for {num_experts} experts",
+                table.len()
+            ));
+        }
+        if let Some(&r) = table.iter().find(|&&r| r >= world) {
+            return Err(crate::config_err!(
+                "placement table maps an expert to rank {r}, outside the world of {world}"
+            ));
+        }
+        Ok(())
+    }
+
+    /// The one placement-derivation entry point shared by the training
+    /// layer, the step executor, the backward pass and the serving
+    /// router: an optional explicit table (adaptive placement)
+    /// composed with the elastic dead-rank remap. `resolve(E, W, None,
+    /// dead)` is exactly the historical `with_dead(E, W, dead)`.
+    pub fn resolve(
+        num_experts: usize,
+        world: usize,
+        table: Option<&[usize]>,
+        dead: &[usize],
+    ) -> ExpertPlacement {
+        match table {
+            None => ExpertPlacement::with_dead(num_experts, world, dead),
+            Some(t) => {
+                ExpertPlacement::from_table(num_experts, world, t).compose_dead(dead)
+            }
+        }
+    }
+
+    /// The full expert→rank table (materialized even when contiguous) —
+    /// what checkpoints persist.
+    pub fn table_vec(&self) -> Vec<usize> {
+        (0..self.num_experts).map(|e| self.rank_of(e)).collect()
     }
 
     /// True for the contiguous `E/W`-per-rank layout (no remap active).
@@ -275,5 +416,97 @@ mod tests {
     #[test]
     fn with_dead_ignores_out_of_range_ranks() {
         assert_eq!(ExpertPlacement::with_dead(8, 4, &[9]), ExpertPlacement::new(8, 4));
+    }
+
+    #[test]
+    fn from_table_normalizes_the_contiguous_formula() {
+        let t: Vec<usize> = (0..8).map(|e| e / 2).collect();
+        let p = ExpertPlacement::from_table(8, 4, &t);
+        assert!(p.is_contiguous());
+        assert_eq!(p, ExpertPlacement::new(8, 4));
+        assert_eq!(p.table_vec(), t);
+    }
+
+    #[test]
+    fn from_table_arbitrary_permutation_is_consistent() {
+        // Swap experts 0 and 7 across ranks, plus an uneven host.
+        let t = vec![3usize, 0, 1, 1, 2, 2, 3, 0];
+        let p = ExpertPlacement::from_table(8, 4, &t);
+        assert!(!p.is_contiguous());
+        assert_eq!(p.table_vec(), t);
+        assert_eq!(p.hosted_experts(0), vec![1, 7]);
+        assert_eq!(p.hosted_experts(3), vec![0, 6]);
+        for e in 0..8 {
+            assert_eq!(p.rank_of(e), t[e]);
+            let (r, l) = (p.rank_of(e), p.local_of(e));
+            assert_eq!(p.expert_of(r, l), e);
+        }
+        let kept = vec![1usize; 8];
+        assert_eq!(p.rank_counts_row(&kept), vec![2, 2, 2, 2]);
+        assert!(ExpertPlacement::validate_table(8, 4, &t).is_ok());
+        assert!(ExpertPlacement::validate_table(8, 4, &t[..7]).is_err());
+        assert!(ExpertPlacement::validate_table(8, 4, &[0, 0, 0, 0, 0, 0, 0, 4]).is_err());
+    }
+
+    #[test]
+    fn compose_dead_on_contiguous_matches_with_dead() {
+        for dead in [&[0usize][..], &[1], &[1, 3], &[0, 2]] {
+            let composed = ExpertPlacement::new(8, 4).compose_dead(dead);
+            assert_eq!(composed, ExpertPlacement::with_dead(8, 4, dead));
+        }
+    }
+
+    #[test]
+    fn compose_dead_preserves_the_adaptive_table_for_survivors() {
+        let t = vec![3usize, 0, 1, 1, 2, 2, 3, 0];
+        let p = ExpertPlacement::from_table(8, 4, &t).compose_dead(&[1]);
+        // Rank 1's experts {2, 3} move; everyone else stays put.
+        assert_eq!(p.num_hosted(1), 0);
+        for (e, &r) in t.iter().enumerate() {
+            if r != 1 {
+                assert_eq!(p.rank_of(e), r, "survivor expert {e} moved");
+            } else {
+                assert_ne!(p.rank_of(e), 1);
+            }
+        }
+        // resolve() is the same composition.
+        assert_eq!(p, ExpertPlacement::resolve(8, 4, Some(&t), &[1]));
+        // Dead rank hosting nothing already: identity.
+        let q = ExpertPlacement::from_table(8, 4, &[0, 0, 2, 2, 2, 3, 3, 3]);
+        assert_eq!(q.compose_dead(&[1]), q);
+    }
+
+    #[test]
+    fn resolve_without_table_is_with_dead() {
+        assert_eq!(
+            ExpertPlacement::resolve(8, 4, None, &[2]),
+            ExpertPlacement::with_dead(8, 4, &[2])
+        );
+        assert_eq!(ExpertPlacement::resolve(8, 4, None, &[]), ExpertPlacement::new(8, 4));
+    }
+
+    #[test]
+    fn loaded_remap_consults_the_observed_window() {
+        // 8 experts, 4 ranks; rank 1 dies hosting experts {2, 3} where
+        // expert 2 is hot. Uniform remap sends 2→rank 0, 3→rank 2 (by
+        // hosted-count ties, lowest id first). With the observed window
+        // rank 3 is nearly idle, so the hot orphan must land there.
+        let load = [5.0, 5.0, 40.0, 1.0, 5.0, 5.0, 0.1, 0.1];
+        let uniform = ExpertPlacement::with_dead(8, 4, &[1]);
+        assert_eq!(uniform.rank_of(2), 0);
+        assert_eq!(uniform.rank_of(3), 2);
+        let loaded = ExpertPlacement::with_dead_loaded(8, 4, &[1], Some(&load));
+        // Rank loads before remap: r0=10, r2=10, r3=0.2 → hot orphan
+        // (expert 2, placed first as the heaviest) goes to rank 3; the
+        // light orphan (expert 3) then also prefers rank 3? No — rank 3
+        // now carries 40.2, so expert 3 goes to the lightest of r0/r2
+        // (tie at 10.0 → fewer hosted ties too → rank 0).
+        assert_eq!(loaded.rank_of(2), 3);
+        assert_eq!(loaded.rank_of(3), 0);
+        assert_eq!(loaded.num_hosted(1), 0);
+        // Pure function: rebuilt identically.
+        assert_eq!(loaded, ExpertPlacement::with_dead_loaded(8, 4, &[1], Some(&load)));
+        // No window → bit-identical to the historical remap.
+        assert_eq!(ExpertPlacement::with_dead_loaded(8, 4, &[1], None), uniform);
     }
 }

@@ -72,12 +72,24 @@ impl DispatchPlan {
         off
     }
 
-    /// Kept rows destined to each of `world` ranks under the shared
-    /// expert placement ([`crate::cluster::ExpertPlacement`]) — one row
-    /// of the AllToAllv traffic matrix.
+    /// Kept rows destined to each of `world` ranks under the *static*
+    /// contiguous expert placement — one row of the AllToAllv traffic
+    /// matrix. Callers running a live (possibly adaptive / dead-remapped)
+    /// placement use [`DispatchPlan::rank_counts_placed`].
     pub fn rank_counts(&self, world: usize) -> Vec<usize> {
-        crate::cluster::ExpertPlacement::new(self.num_experts, world)
-            .rank_counts_row(&self.kept)
+        self.rank_counts_placed(&crate::cluster::ExpertPlacement::new(
+            self.num_experts,
+            world,
+        ))
+    }
+
+    /// Kept rows destined to each rank under an arbitrary live
+    /// placement (adaptive table, dead-rank remap, or both).
+    pub fn rank_counts_placed(
+        &self,
+        placement: &crate::cluster::ExpertPlacement,
+    ) -> Vec<usize> {
+        placement.rank_counts_row(&self.kept)
     }
 }
 

@@ -58,6 +58,7 @@ pub mod moe;
 pub mod nn;
 pub mod obs;
 pub mod pipeline;
+pub mod placement;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

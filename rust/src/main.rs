@@ -48,6 +48,10 @@ const COMMANDS: &[CommandSpec] = &[
             ("alltoall", "auto|flat|hier schedule selection (default auto)"),
             ("chunks", "auto|N exchange chunks for comm/compute overlap (default auto)"),
             ("dedup", "on|off top-k token dedup on the hierarchical inter-node legs (default on)"),
+            ("placement", "static|adaptive expert placement (default static; adaptive migrates hot experts at step boundaries)"),
+            ("placement-every", "steps between adaptive placement checks (default 25)"),
+            ("placement-window", "traffic-window length in steps for the optimizer (default 16)"),
+            ("placement-min-gain", "min relative NIC-peak gain to migrate (default 0.01)"),
             ("faults", "fault spec or spec file, e.g. 'straggle:rank=1,x=3;kill:rank=2,step=10' or chaos:seed=7"),
             ("ckpt-every", "checkpoint every N steps (default 0 = never; needs --ckpt-dir)"),
             ("ckpt-dir", "directory for checkpoints (enables rank-failure recovery)"),
@@ -111,6 +115,8 @@ const COMMANDS: &[CommandSpec] = &[
             ("comm", "flat|hier|auto AllToAll selection (default auto)"),
             ("chunks", "auto|N exchange chunks for comm/compute overlap (default auto)"),
             ("dedup", "on|off top-k token dedup on the hierarchical inter-node legs (default on)"),
+            ("placement", "static|adaptive (adaptive replicates hot experts onto cold ranks online)"),
+            ("replicate", "comma list of expert:rank replica pins, e.g. 0:3,5:7"),
             ("workload", "poisson|bursty arrivals (default poisson)"),
             ("nodes", "simulated nodes (default 2)"),
             ("gpus", "GPUs per node (default 8)"),
@@ -222,6 +228,11 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
     if let Some(dedup) = parse_dedup(args)? {
         cfg.opts.dedup = dedup;
     }
+    cfg.placement =
+        hetumoe::placement::PlacementPolicy::parse(args.str_or("placement", "static"))?;
+    cfg.placement_every = args.usize_or("placement-every", cfg.placement_every)?;
+    cfg.placement_window = args.usize_or("placement-window", cfg.placement_window)?;
+    cfg.placement_min_gain = args.f64_or("placement-min-gain", cfg.placement_min_gain)?;
     if let Some(spec) = args.get("faults") {
         cfg.faults = hetumoe::fault::FaultPlan::parse(spec)?;
     }
@@ -278,6 +289,8 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
                 ]),
             ),
             ("recovery_steps", Json::num(summary.recovery_steps as f64)),
+            ("migrations", Json::num(summary.migrations as f64)),
+            ("bytes_migrated", Json::num(summary.bytes_migrated as f64)),
             // `overlap_efficiency` (plus comm/compute exposure, fault
             // counters) rides inside the breakdown object.
             ("breakdown", summary.breakdown.to_json()),
@@ -299,6 +312,12 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
         summary.bwd_schedules.0,
         summary.bwd_schedules.1
     );
+    if trainer.cfg.placement.is_adaptive() {
+        println!(
+            "adaptive placement: {} expert migrations, {} bytes migrated (params + Adam moments)",
+            summary.migrations, summary.bytes_migrated
+        );
+    }
     let b = &summary.breakdown;
     println!(
         "bytes_on_wire/step (NIC): fwd {:.0} bwd {:.0} | intra-node: fwd {:.0} bwd {:.0} | \
@@ -696,6 +715,9 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
         None => hetumoe::fault::FaultPlan::none(),
     };
     let dead_ranks = args.usize_list_or("dead-ranks", &[])?;
+    let placement =
+        hetumoe::placement::PlacementPolicy::parse(args.str_or("placement", "static"))?;
+    let replicas = parse_replicas(args)?;
     let cfg = ServeConfig {
         moe,
         cluster,
@@ -709,6 +731,8 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
         seed,
         dead_ranks,
         faults,
+        placement,
+        replicas,
         ..ServeConfig::default_run()
     };
     let json = args.has_flag("json");
@@ -738,7 +762,36 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
     } else {
         println!("hot experts (>1.5x mean load): {hot:?}");
     }
+    let replica_pairs = engine.router.replicas().pairs();
+    if engine.cfg.placement.is_adaptive() || !replica_pairs.is_empty() {
+        println!(
+            "replicas: {} live (expert, rank) pairs {:?} | {} added adaptively",
+            replica_pairs.len(),
+            replica_pairs,
+            engine.replications
+        );
+    }
     Ok(())
+}
+
+/// `--replicate e:r,e:r,...` → explicit serving replica pins.
+fn parse_replicas(args: &Args) -> hetumoe::error::Result<Vec<(usize, usize)>> {
+    let Some(spec) = args.get("replicate") else {
+        return Ok(Vec::new());
+    };
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (e, r) = part.split_once(':').ok_or_else(|| {
+            hetumoe::config_err!("--replicate expects expert:rank pairs, got '{part}'")
+        })?;
+        let parse = |s: &str| {
+            s.trim().parse::<usize>().map_err(|_| {
+                hetumoe::config_err!("--replicate: '{s}' is not a number in '{part}'")
+            })
+        };
+        out.push((parse(e)?, parse(r)?));
+    }
+    Ok(out)
 }
 
 /// The perf-trajectory harness: run the pinned fig subset, compare
@@ -750,13 +803,19 @@ fn cmd_metrics(args: &Args) -> hetumoe::error::Result<()> {
 
     let threshold = args.f64_or("threshold", metrics::DEFAULT_THRESHOLD)?;
     let dir = std::path::PathBuf::from(args.str_or("dir", "."));
+    // The baseline (and this record's ordinal) come from the directory
+    // scan, not a pinned constant: highest existing record + 1, or
+    // FIRST_BENCH_ID on an empty history.
+    let baseline = metrics::previous_bench(&dir);
+    let next_id =
+        baseline.as_ref().map(|(n, _)| n + 1).unwrap_or(metrics::FIRST_BENCH_ID);
     let trace = trace_start(args);
     println!("running the pinned fig subset (fixed seeds and configs)...");
     let figs = metrics::run_figs()?;
     trace_finish(trace)?;
-    let rec = metrics::record(figs);
+    let rec = metrics::record(figs, next_id);
 
-    let regressions = match metrics::previous_bench(&dir) {
+    let regressions = match baseline {
         Some((n, path)) => {
             let prev = Json::from_file(&path)?;
             let rows = metrics::compare(&prev, &rec, threshold);
@@ -787,9 +846,9 @@ fn cmd_metrics(args: &Args) -> hetumoe::error::Result<()> {
         )));
     }
     if args.has_flag("dry-run") {
-        println!("dry run: BENCH_{}.json not written", metrics::BENCH_ID);
+        println!("dry run: BENCH_{next_id}.json not written");
     } else {
-        let dest = dir.join(format!("BENCH_{}.json", metrics::BENCH_ID));
+        let dest = dir.join(format!("BENCH_{next_id}.json"));
         std::fs::write(&dest, rec.pretty())?;
         println!("perf record written to {}", dest.display());
     }

@@ -145,6 +145,15 @@ pub struct MoeLayerOptions {
     /// disables top-k dedup, whose node-aggregation math assumes the
     /// contiguous layout. Empty = every rank healthy.
     pub dead_ranks: Vec<usize>,
+    /// Adaptive expert→rank assignment installed by the placement
+    /// optimizer (`--placement adaptive`): entry `e` is the rank
+    /// hosting expert `e`. `None` (the default, and everything
+    /// `--placement static` ever sees) keeps the contiguous formula
+    /// `rank = e/(E/W)` — bit-identical to the pre-adaptive pipeline.
+    /// A non-contiguous table degrades exactly like a dead-rank remap:
+    /// flat exchange, dedup off. Dead-rank remapping composes on top
+    /// ([`crate::cluster::ExpertPlacement::resolve`]).
+    pub placement_table: Option<Vec<usize>>,
 }
 
 impl Default for MoeLayerOptions {
@@ -159,6 +168,7 @@ impl Default for MoeLayerOptions {
             dedup: true,
             threads: 1,
             dead_ranks: Vec::new(),
+            placement_table: None,
         }
     }
 }
@@ -341,6 +351,7 @@ impl MoeLayer {
             ));
         }
         validate_dead_ranks(&opts, w)?;
+        validate_placement_table(&opts, cfg.num_experts, w)?;
         let mut rng = Rng::seed(seed);
         let experts: Vec<Box<dyn ExpertExecutor>> = (0..cfg.num_experts)
             .map(|_| {
@@ -376,17 +387,20 @@ impl MoeLayer {
             ));
         }
         validate_dead_ranks(&opts, w)?;
+        validate_placement_table(&opts, cfg.num_experts, w)?;
         let net = NetworkModel::new(cluster.clone());
         Ok(MoeLayer { cfg, cluster, net, gate, experts, gate_weight, opts })
     }
 
-    /// The shared expert-placement map (experts partitioned contiguously,
-    /// `E/W` per rank — the same formula the serving router uses), with
-    /// dead ranks' experts elastically remapped over survivors.
+    /// The shared expert-placement map: the adaptive table when one is
+    /// installed, otherwise the contiguous formula (`E/W` per rank —
+    /// the same layout the serving router derives), with dead ranks'
+    /// experts elastically remapped over survivors in either case.
     pub fn placement(&self) -> crate::cluster::ExpertPlacement {
-        crate::cluster::ExpertPlacement::with_dead(
+        crate::cluster::ExpertPlacement::resolve(
             self.cfg.num_experts,
             self.cluster.world(),
+            self.opts.placement_table.as_deref(),
             &self.opts.dead_ranks,
         )
     }
@@ -519,6 +533,31 @@ pub fn validate_dead_ranks(opts: &MoeLayerOptions, world: usize) -> Result<()> {
         return Err(crate::config_err!(
             "padded dispatch cannot run with dead ranks (its equal-chunk AllToAll \
              assumes the contiguous placement); use --dispatch ragged"
+        ));
+    }
+    Ok(())
+}
+
+/// Shared validation of [`MoeLayerOptions::placement_table`] against the
+/// layer geometry: the table must assign every expert to an existing
+/// rank, and the padded pipeline — which assumes the contiguous formula
+/// end to end — only accepts tables equivalent to it.
+pub fn validate_placement_table(
+    opts: &MoeLayerOptions,
+    num_experts: usize,
+    world: usize,
+) -> Result<()> {
+    let Some(table) = opts.placement_table.as_deref() else {
+        return Ok(());
+    };
+    crate::cluster::ExpertPlacement::validate_table(num_experts, world, table)?;
+    if opts.dispatch == DispatchMode::Padded
+        && !crate::cluster::ExpertPlacement::from_table(num_experts, world, table)
+            .is_contiguous()
+    {
+        return Err(crate::config_err!(
+            "padded dispatch cannot run a non-contiguous placement table; \
+             use --dispatch ragged"
         ));
     }
     Ok(())

@@ -11,6 +11,6 @@ pub mod layer;
 pub use expert::HloExpert;
 pub use expert::{ExpertExecutor, NativeExpert};
 pub use layer::{
-    validate_dead_ranks, CommImpl, DispatchMode, GateImpl, LayoutImpl, MoeLayer,
-    MoeLayerOptions, StepReport,
+    validate_dead_ranks, validate_placement_table, CommImpl, DispatchMode, GateImpl,
+    LayoutImpl, MoeLayer, MoeLayerOptions, StepReport,
 };

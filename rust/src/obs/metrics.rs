@@ -2,7 +2,8 @@
 //! `BENCH_<n>.json` → regression gate.
 //!
 //! Runs a fixed-seed, fixed-config subset of the fig benches (fig10
-//! ragged, fig12 overlap, fig13 hier+dedup, fig11 train, fig9 serving)
+//! ragged, fig12 overlap, fig13 hier+dedup, fig14 placement, fig11
+//! train, fig9 serving)
 //! and assembles one durable record — host, git revision, timestamp,
 //! per-fig walls and the model-level metrics (`comm_exposed`,
 //! `overlap_efficiency`, NIC/intra-node bytes, serving tail latencies).
@@ -32,8 +33,11 @@ use crate::util::rng::Rng;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-/// This PR's ordinal — the record is written as `BENCH_<BENCH_ID>.json`.
-pub const BENCH_ID: u32 = 6;
+/// Ordinal used for the very first record, when the repo root holds no
+/// `BENCH_<n>.json` yet. Every later run derives its ordinal from the
+/// highest existing record (`previous_bench` + 1) instead of a pinned
+/// constant, so the history can grow without editing this module.
+pub const FIRST_BENCH_ID: u32 = 8;
 
 /// Version of the record layout (bump when fig entries change shape).
 pub const SCHEMA_VERSION: u32 = 1;
@@ -66,6 +70,7 @@ pub fn run_figs() -> Result<Vec<(String, Json)>> {
         ("fig10_ragged".into(), fig10_ragged()?),
         ("fig12_overlap".into(), fig12_overlap()?),
         ("fig13_hier_dedup".into(), fig13_hier_dedup()?),
+        ("fig14_placement".into(), fig14_placement()?),
         ("fig11_train".into(), fig11_train()?),
         ("fig9_serving".into(), fig9_serving()?),
     ])
@@ -242,6 +247,101 @@ fn fig13_hier_dedup() -> Result<Json> {
     ]))
 }
 
+/// Fig 14 pin: adaptive placement on a skewed batch — the optimizer's
+/// swap must cut the max per-node NIC load, and a skew-seeded adaptive
+/// trainer must migrate experts with honestly charged bytes. Mirrors
+/// `benches/fig14_placement.rs` at reduced scale.
+fn fig14_placement() -> Result<Json> {
+    use crate::placement::{
+        max_node_nic_bytes, PlacementOptimizer, PlacementPolicy, ReplicaMap, TrafficWindow,
+    };
+    use crate::serve::PlacementRouter;
+    let cluster = ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) };
+    let d = 64usize;
+    let cfg = MoeConfig {
+        num_experts: 8,
+        d_model: d,
+        ffn_hidden: 2 * d,
+        capacity_factor: 4.0,
+        gate: GateKind::Switch,
+    };
+    let row_bytes = d * 4;
+    let mut r_static = PlacementRouter::new(cfg.clone(), cluster.clone(), CommChoice::Auto, 14)?;
+    // Skewed batch on the co-located pair (0, 1): tokens cluster around
+    // their gate columns (fig14's construction, pinned).
+    let mut rng = Rng::seed(140);
+    let centroids: Vec<Vec<f32>> = [0usize, 1]
+        .iter()
+        .map(|&e| (0..d).map(|i| 3.0 * r_static.gate_weight.row(i)[e]).collect())
+        .collect();
+    let mut batch = Tensor::zeros(&[256, d]);
+    for t in 0..256 {
+        let c = &centroids[t % 2];
+        for (i, v) in batch.row_mut(t).iter_mut().enumerate() {
+            *v = c[i] + 0.05 * rng.normal_f32();
+        }
+    }
+    let mut window = TrafficWindow::new(8);
+    let mut last = None;
+    for step in 0..8u64 {
+        let dec = r_static.route_batch(&batch, step);
+        window.observe(&dec.expert_counts);
+        last = Some(dec);
+    }
+    let d_static = last.unwrap();
+    let opt = PlacementOptimizer { min_gain: 0.0, ..Default::default() };
+    let current = r_static.placement();
+    let replicas = ReplicaMap::new(cfg.num_experts);
+    let wall_propose = bench("fig14 propose", &BenchOpts::quick(), || {
+        black_box(opt.propose(
+            black_box(&window),
+            &current,
+            &replicas,
+            &[],
+            &r_static.net,
+            row_bytes,
+        ));
+    });
+    let delta = opt
+        .propose(&window, &current, &replicas, &[], &r_static.net, row_bytes)
+        .ok_or_else(|| crate::config_err!("fig14 pin: optimizer proposed nothing"))?;
+    let mut r_adapt = PlacementRouter::new(cfg, cluster, CommChoice::Auto, 14)?;
+    r_adapt.set_table(Some(delta.table))?;
+    let d_adapt = r_adapt.route_batch(&batch, 0);
+    let nic_static = max_node_nic_bytes(&d_static.counts, 2, row_bytes);
+    let nic_adapt = max_node_nic_bytes(&d_adapt.counts, 2, row_bytes);
+
+    // Skew-seeded adaptive training: migrations with honest bytes.
+    let mut tcfg = TrainRunConfig::default_run();
+    tcfg.steps = 15;
+    tcfg.tokens_per_rank = 32;
+    tcfg.log_every = 0;
+    tcfg.seed = 11;
+    tcfg.placement = PlacementPolicy::Adaptive;
+    tcfg.placement_every = 5;
+    tcfg.placement_window = 64;
+    tcfg.placement_min_gain = 0.0;
+    let mut trainer = NativeTrainer::new(tcfg)?;
+    for _ in 0..64 {
+        trainer.traffic.observe(&[300, 300, 1, 1, 1, 1, 1, 1]);
+    }
+    let t0 = Instant::now();
+    let summary = trainer.run()?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    Ok(Json::obj(vec![
+        ("wall_propose", Json::num(wall_propose.median)),
+        ("wall_adaptive_step", Json::num(elapsed / 15.0)),
+        ("max_nic_static", Json::num(nic_static as f64)),
+        ("max_nic_adaptive", Json::num(nic_adapt as f64)),
+        (
+            "nic_saved_frac",
+            Json::num(1.0 - nic_adapt as f64 / nic_static.max(1) as f64),
+        ),
+        ("migrations", Json::num(summary.migrations as f64)),
+        ("bytes_migrated", Json::num(summary.bytes_migrated as f64)),
+    ]))
+}
+
 /// Fig 11 pin: 30 native training steps on the default run config.
 fn fig11_train() -> Result<Json> {
     let mut cfg = TrainRunConfig::default_run();
@@ -328,11 +428,13 @@ fn unix_timestamp() -> f64 {
         .unwrap_or(0.0)
 }
 
-/// Assemble the full `BENCH_<n>.json` record from the fig entries.
-pub fn record(figs: Vec<(String, Json)>) -> Json {
+/// Assemble the full `BENCH_<bench_id>.json` record from the fig
+/// entries (callers derive `bench_id` from [`previous_bench`] + 1,
+/// falling back to [`FIRST_BENCH_ID`] on an empty history).
+pub fn record(figs: Vec<(String, Json)>, bench_id: u32) -> Json {
     Json::obj(vec![
         ("schema_version", Json::num(SCHEMA_VERSION as f64)),
-        ("bench_id", Json::num(BENCH_ID as f64)),
+        ("bench_id", Json::num(bench_id as f64)),
         ("revision", Json::str(git_revision())),
         ("timestamp", Json::num(unix_timestamp())),
         ("host", host_json()),
@@ -495,9 +597,9 @@ mod tests {
     #[test]
     fn record_shape_is_stable() {
         let figs = vec![("fig10_ragged".to_string(), Json::obj(vec![("wall_x", Json::num(1.0))]))];
-        let r = record(figs);
+        let r = record(figs, FIRST_BENCH_ID + 3);
         assert_eq!(r.f64_field("schema_version").unwrap(), SCHEMA_VERSION as f64);
-        assert_eq!(r.f64_field("bench_id").unwrap(), BENCH_ID as f64);
+        assert_eq!(r.f64_field("bench_id").unwrap(), (FIRST_BENCH_ID + 3) as f64);
         assert!(r.get("revision").is_some());
         assert!(r.get("timestamp").is_some());
         assert!(r.get("host").unwrap().get("cores").is_some());

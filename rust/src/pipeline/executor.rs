@@ -173,9 +173,10 @@ pub struct StepExecutor<'a> {
 
 impl<'a> StepExecutor<'a> {
     fn placement(&self) -> ExpertPlacement {
-        ExpertPlacement::with_dead(
+        ExpertPlacement::resolve(
             self.cfg.num_experts,
             self.cluster.world(),
+            self.opts.placement_table.as_deref(),
             &self.opts.dead_ranks,
         )
     }

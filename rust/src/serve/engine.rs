@@ -21,6 +21,7 @@ use crate::comm::schedule::{transpose_counts, Schedule};
 use crate::moe::{CommImpl, StepReport};
 use crate::obs::trace;
 use crate::pipeline::{ChunkChoice, StagePlan};
+use crate::placement::PlacementPolicy;
 use crate::serve::router::{CommChoice, PlacementRouter, RouteDecision};
 use crate::serve::scheduler::{ContinuousBatcher, SchedulerConfig};
 use crate::serve::slo::{SloReport, SloTracker};
@@ -60,6 +61,19 @@ pub struct ServeConfig {
     /// Deterministic fault-injection schedule, keyed by batch index
     /// (empty = healthy run).
     pub faults: FaultPlan,
+    /// Placement policy. `Static` serves the contiguous layout as-is;
+    /// `Adaptive` watches the router's EWMA load and replicates the
+    /// hottest expert onto the least-loaded rank when it runs
+    /// persistently above `replicate_factor` × the mean.
+    pub placement: PlacementPolicy,
+    /// Batches between adaptive replication checks (0 disables them).
+    pub placement_every: usize,
+    /// Hotness threshold for adaptive replication, as a multiple of the
+    /// mean per-expert EWMA load.
+    pub replicate_factor: f64,
+    /// Explicit `(expert, rank)` replicas installed before the first
+    /// batch (operator-pinned hot experts).
+    pub replicas: Vec<(usize, usize)>,
 }
 
 impl ServeConfig {
@@ -90,6 +104,10 @@ impl ServeConfig {
             seed: 0,
             dead_ranks: Vec::new(),
             faults: FaultPlan::none(),
+            placement: PlacementPolicy::Static,
+            placement_every: 32,
+            replicate_factor: 2.0,
+            replicas: Vec::new(),
         }
     }
 }
@@ -183,6 +201,8 @@ pub struct ServeEngine {
     step: u64,
     /// Ranks currently routed around (initial dead + kills so far).
     dead: Vec<usize>,
+    /// Replica copies installed by the adaptive policy this run.
+    pub replications: usize,
 }
 
 impl ServeEngine {
@@ -212,6 +232,11 @@ impl ServeEngine {
         )?;
         router.dedup = cfg.dedup;
         router.set_dead(&dead);
+        // Operator-pinned replicas install before the first batch; the
+        // router rejects dead/primary/out-of-range targets.
+        for &(expert, rank) in &cfg.replicas {
+            router.add_replica(expert, rank)?;
+        }
         let mut rng = Rng::seed(cfg.seed ^ 0xE4B);
         let mut embedding = Tensor::randn(&[cfg.vocab, cfg.moe.d_model], &mut rng);
         embedding.scale(1.0 / (cfg.moe.d_model as f32).sqrt());
@@ -233,6 +258,7 @@ impl ServeEngine {
             clock: 0.0,
             step: 0,
             dead,
+            replications: 0,
         })
     }
 
@@ -300,6 +326,11 @@ impl ServeEngine {
         // Placement-aware wire split for both legs (the forward combine
         // is never deduplicated — it returns distinct per-slot expert
         // outputs — so only the dispatch leg carries the dedup figure).
+        // A batch that spread a replicated expert voids dedup's
+        // one-host-per-expert premise: its (empty) summary must not
+        // override the real NIC bytes, so dedup charging follows the
+        // router's `replicated` flag, not just the config switch.
+        let dedup_live = self.cfg.dedup && !decision.replicated;
         let row_bytes = self.cfg.moe.d_model * 4;
         let g = self.cfg.cluster.gpus_per_node;
         let counts_t = transpose_counts(&decision.counts);
@@ -310,14 +341,12 @@ impl ServeEngine {
                 0usize,
             ),
             Schedule::Hierarchical => {
-                let inter = self
-                    .cfg
-                    .dedup
-                    .then(|| decision.dedup.dispatch_inter_total(row_bytes));
+                let inter =
+                    dedup_live.then(|| decision.dedup.dispatch_inter_total(row_bytes));
                 (
                     hier_leg_wire_bytes(&decision.counts, row_bytes, g, inter),
                     hier_leg_wire_bytes(&counts_t, row_bytes, g, None),
-                    if self.cfg.dedup {
+                    if dedup_live {
                         decision.dedup.dispatch_rows_saved(row_bytes)
                     } else {
                         0
@@ -325,7 +354,7 @@ impl ServeEngine {
                 )
             }
         };
-        let dedup = if self.cfg.dedup { Some(&decision.dedup) } else { None };
+        let dedup = if dedup_live { Some(&decision.dedup) } else { None };
         let (stage_plan, overlap) = StagePlan::for_schedule(
             &self.router.net,
             &decision.counts,
@@ -445,6 +474,45 @@ impl ServeEngine {
         self.run_requests(&arrivals)
     }
 
+    /// One adaptive-placement decision: if the hottest expert's EWMA
+    /// load exceeds `replicate_factor` × the mean and it has no copy
+    /// yet (serving caps at one extra copy per expert — enough to halve
+    /// its fan-in), replicate it onto the least-loaded alive rank
+    /// (deterministic: ties break toward the lowest rank id).
+    fn maybe_replicate(&mut self) {
+        let load = self.router.load().to_vec();
+        let hot = self.router.hot_experts(self.cfg.replicate_factor);
+        let Some(&expert) = hot.iter().max_by(|a, b| load[**a].total_cmp(&load[**b]))
+        else {
+            return;
+        };
+        if self.router.replicas().num_replicas(expert) >= 1 {
+            return;
+        }
+        let placement = self.router.placement();
+        let copies = self.router.replicas().copies(expert, &placement);
+        let w = self.cfg.cluster.world();
+        // Rank load = EWMA load of the experts it hosts (coarse: replica
+        // splits are not modeled here; good enough to pick a cold rank).
+        let mut rank_load = vec![0.0f64; w];
+        for e in 0..self.cfg.moe.num_experts {
+            rank_load[placement.rank_of(e)] += load[e];
+        }
+        let target = (0..w)
+            .filter(|r| !self.dead.contains(r) && !copies.contains(r))
+            .min_by(|a, b| rank_load[*a].total_cmp(&rank_load[*b]).then(a.cmp(b)));
+        if let Some(rank) = target {
+            if self.router.add_replica(expert, rank).is_ok() {
+                self.replications += 1;
+                if trace::enabled() {
+                    let mut span = trace::span("replicate");
+                    span.arg("expert", expert);
+                    span.arg("rank", rank);
+                }
+            }
+        }
+    }
+
     /// Run an explicit arrival sequence (trace replay path).
     pub fn run_requests(&mut self, arrivals: &[Request]) -> Result<SloReport> {
         let mut tracker = SloTracker::new();
@@ -517,6 +585,16 @@ impl ServeEngine {
                     tracker.push_step(&report);
                     for req in self.batcher.complete(&plan) {
                         tracker.complete(&req, self.clock);
+                    }
+                    // Adaptive placement: periodically give the hottest
+                    // expert a second copy on the least-loaded rank, so
+                    // subsequent batches spread its fan-in.
+                    if self.cfg.placement.is_adaptive()
+                        && self.cfg.placement_every > 0
+                        && stepi > 0
+                        && stepi % self.cfg.placement_every == 0
+                    {
+                        self.maybe_replicate();
                     }
                 }
                 None => {
@@ -629,6 +707,67 @@ mod tests {
         // One full iteration at the budget fits inside half the SLO.
         if budget > 16 {
             assert!(engine.service_estimate(budget) <= engine.cfg.slo * 0.5);
+        }
+    }
+
+    #[test]
+    fn replica_holder_kill_keeps_goodput_without_recovery() {
+        // Expert 0 gets a pinned copy on rank 3; rank 3 dies mid-run.
+        // The copy is pruned on the spot — routing continues on the
+        // primary, requests keep completing, goodput never hits zero.
+        let mut cfg = small_cfg();
+        cfg.replicas = vec![(0, 3)];
+        cfg.faults = FaultPlan::parse("kill:rank=3,step=5").unwrap();
+        let mut engine = ServeEngine::new(cfg).unwrap();
+        assert_eq!(engine.router.replicas().num_replicas(0), 1);
+        let report = engine.run().unwrap();
+        assert_eq!(engine.router.replicas().num_replicas(0), 0);
+        assert_eq!(engine.router.dead(), &[3]);
+        assert!(report.completed > 0, "requests must keep completing");
+        assert!(report.goodput_rps > 0.0, "goodput must survive the kill");
+        assert!(report.batches > 5, "the run continues past the kill batch");
+    }
+
+    #[test]
+    fn adaptive_serving_replicates_a_hot_expert() {
+        let mut cfg = small_cfg();
+        cfg.placement = PlacementPolicy::Adaptive;
+        cfg.placement_every = 2;
+        // Zero threshold: any observed load qualifies, so the check
+        // definitely fires — what we're testing is the wiring, the
+        // deterministic target pick, and that serving stays healthy.
+        cfg.replicate_factor = 0.0;
+        let mut engine = ServeEngine::new(cfg).unwrap();
+        let report = engine.run().unwrap();
+        assert!(engine.replications >= 1, "adaptive policy must replicate");
+        assert!(!engine.router.replicas().is_empty());
+        assert!(report.completed > 0);
+        assert!(report.goodput_rps > 0.0);
+        // Static runs never replicate.
+        let mut st = ServeEngine::new(small_cfg()).unwrap();
+        st.run().unwrap();
+        assert_eq!(st.replications, 0);
+        assert!(st.router.replicas().is_empty());
+    }
+
+    #[test]
+    fn replicated_batches_are_charged_without_dedup() {
+        let mut cfg = small_cfg();
+        cfg.replicas = vec![(0, 3)];
+        assert!(cfg.dedup);
+        let mut engine = ServeEngine::new(cfg).unwrap();
+        let x = engine.sample_batch(64);
+        let decision = engine.router.route_batch(&x, 0);
+        if decision.replicated {
+            let (_, report) = engine.step_time(&decision, 64, None);
+            assert_eq!(
+                report.rows_deduped, 0,
+                "dedup must not be charged on a replica-spread batch"
+            );
+        } else {
+            // Expert 0 saw no tokens in this batch — nothing to assert
+            // beyond the flag being off.
+            assert_eq!(decision.expert_counts[0], 0);
         }
     }
 

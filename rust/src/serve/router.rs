@@ -14,6 +14,22 @@
 //! win; near saturation the NIC drowns in small messages and the
 //! paper's aggregation wins. It also tracks a per-expert EWMA load so
 //! operators can see hot/cold experts drift with the workload.
+//!
+//! Two placement extensions ride on the same machinery:
+//!
+//! * an **installed table** ([`PlacementRouter::set_table`]) replaces
+//!   the contiguous formula with an arbitrary expert→rank assignment —
+//!   the adaptive optimizer's output — and composes with dead-rank
+//!   remapping exactly like the training side;
+//! * **replicas** ([`PlacementRouter::add_replica`]) give hot experts
+//!   extra host ranks. Routed slots for a replicated expert rotate
+//!   deterministically over its live copies (a per-expert round-robin
+//!   counter — same batch sequence, same spread), so a hot expert's
+//!   fan-in splits across NICs. Killing a replica holder just prunes
+//!   that copy: surviving copies absorb the load with no recovery
+//!   window. Dedup scoring assumes one host per expert, so any batch
+//!   that actually spread a replicated expert is scored without dedup
+//!   (flagged via [`RouteDecision::replicated`]).
 
 use crate::cluster::NetworkModel;
 use crate::comm::hier_ragged::{dedup_traffic, DedupTraffic};
@@ -23,6 +39,7 @@ use crate::error::Result;
 use crate::gating::{apply_capacity, make_gate, DispatchPlan, Gate, Routing};
 use crate::moe::{CommImpl, MoeLayer};
 use crate::nn::matmul;
+use crate::placement::ReplicaMap;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -65,6 +82,11 @@ pub struct RouteDecision {
     pub padding_waste: f64,
     /// Mean auxiliary loss across shards.
     pub aux_loss: f64,
+    /// True when at least one routed slot went to a replica copy rather
+    /// than the expert's primary rank. Dedup's one-host-per-expert
+    /// premise is void for such a batch, so it was scored (and must be
+    /// charged) without the dedup override.
+    pub replicated: bool,
 }
 
 impl RouteDecision {
@@ -100,6 +122,14 @@ pub struct PlacementRouter {
     /// Ranks currently marked failed: they receive no shard and host no
     /// experts (the placement remaps their experts onto survivors).
     dead: Vec<usize>,
+    /// Installed expert→rank table (adaptive placement); `None` keeps
+    /// the contiguous formula.
+    table: Option<Vec<usize>>,
+    /// Extra host ranks per expert (hot-expert replicas).
+    replicas: ReplicaMap,
+    /// Per-expert round-robin cursor over an expert's copies — the
+    /// deterministic tie-break for replica spread.
+    rr: Vec<usize>,
 }
 
 impl PlacementRouter {
@@ -163,15 +193,23 @@ impl PlacementRouter {
             flat_chosen: 0,
             hier_chosen: 0,
             dead: Vec::new(),
+            table: None,
+            replicas: ReplicaMap::new(e),
+            rr: vec![0; e],
         })
     }
 
     /// Mark `dead` ranks failed: subsequent batches shard only over the
-    /// survivors and the placement remaps the dead ranks' experts.
+    /// survivors, the placement remaps the dead ranks' experts, and any
+    /// replica copy they hosted is dropped — affected experts degrade
+    /// to their surviving copies immediately, no recovery window.
     pub fn set_dead(&mut self, dead: &[usize]) {
         self.dead = dead.to_vec();
         self.dead.sort_unstable();
         self.dead.dedup();
+        for &r in &self.dead {
+            self.replicas.remove_rank(r);
+        }
     }
 
     /// Ranks currently routed around.
@@ -180,14 +218,62 @@ impl PlacementRouter {
     }
 
     /// The shared expert-placement map (identical to the training
-    /// layer's — see [`crate::cluster::ExpertPlacement`]); with dead
-    /// ranks it is the elastic remap over the survivors.
+    /// layer's — see [`crate::cluster::ExpertPlacement`]): the
+    /// installed table when one is set, else the contiguous formula;
+    /// with dead ranks it is the elastic remap over the survivors.
     pub fn placement(&self) -> crate::cluster::ExpertPlacement {
-        crate::cluster::ExpertPlacement::with_dead(
+        crate::cluster::ExpertPlacement::resolve(
             self.cfg.num_experts,
             self.cluster.world(),
+            self.table.as_deref(),
             &self.dead,
         )
+    }
+
+    /// Install an adaptive expert→rank table (`None` restores the
+    /// contiguous formula). The table is validated against the config.
+    pub fn set_table(&mut self, table: Option<Vec<usize>>) -> Result<()> {
+        if let Some(t) = &table {
+            crate::cluster::ExpertPlacement::validate_table(
+                self.cfg.num_experts,
+                self.cluster.world(),
+                t,
+            )?;
+        }
+        self.table = table;
+        Ok(())
+    }
+
+    /// Add a replica of `expert` on `rank`. A replica on the expert's
+    /// own primary rank (or a dead rank) is meaningless and rejected.
+    pub fn add_replica(&mut self, expert: usize, rank: usize) -> Result<()> {
+        if expert >= self.cfg.num_experts {
+            return Err(crate::config_err!(
+                "replica expert {expert} outside 0..{}",
+                self.cfg.num_experts
+            ));
+        }
+        if rank >= self.cluster.world() {
+            return Err(crate::config_err!(
+                "replica rank {rank} outside world {}",
+                self.cluster.world()
+            ));
+        }
+        if self.dead.binary_search(&rank).is_ok() {
+            return Err(crate::config_err!("replica rank {rank} is dead"));
+        }
+        if self.placement().rank_of(expert) == rank {
+            return Err(crate::config_err!(
+                "expert {expert} already lives on rank {rank}"
+            ));
+        }
+        self.replicas.add(expert, rank);
+        Ok(())
+    }
+
+    /// The live replica map (primary ranks not included).
+    pub fn replicas(&self) -> &ReplicaMap {
+        &self.replicas
     }
 
     /// Experts hosted per rank.
@@ -248,7 +334,12 @@ impl PlacementRouter {
             }
         }
 
-        // Traffic matrix + per-expert loads from the kept slots.
+        // Traffic matrix + per-expert loads from the kept slots. A
+        // replicated expert's slots rotate over its live copies
+        // (deterministic per-expert round-robin), splitting the hot
+        // fan-in across NICs; everyone else goes to the placement's
+        // single host.
+        let placement = self.placement();
         let mut counts = vec![vec![0usize; w]; w];
         let mut expert_counts = vec![0usize; self.cfg.num_experts];
         let mut demanded = 0usize;
@@ -256,13 +347,23 @@ impl PlacementRouter {
         let mut waste = 0.0f64;
         let mut aux = 0.0f64;
         let mut occupied = 0usize;
+        let mut replicated = false;
         for (src, (routing, plan)) in shards.iter().enumerate() {
             for (slot, &dest) in plan.dest.iter().enumerate() {
                 if dest == u32::MAX {
                     continue;
                 }
                 let expert = routing.expert_ids[slot] as usize;
-                counts[src][self.rank_of_expert(expert)] += 1;
+                let dst = if self.replicas.num_replicas(expert) > 0 {
+                    let targets = self.replicas.copies(expert, &placement);
+                    let t = targets[self.rr[expert] % targets.len()];
+                    self.rr[expert] += 1;
+                    replicated = true;
+                    t
+                } else {
+                    placement.rank_of(expert)
+                };
+                counts[src][dst] += 1;
                 expert_counts[expert] += 1;
             }
             demanded += plan.demand.iter().sum::<usize>();
@@ -288,12 +389,16 @@ impl PlacementRouter {
         // the whole fan-out on the way back. The hierarchical side is
         // scored on the dedup-aware node-level counts — the identical
         // summary the training executor derives from the same plans.
-        let placement = self.placement();
-        let dedup = if self.dedup {
+        // A batch that actually spread a replicated expert breaks
+        // dedup's one-host-per-expert premise — the node-level summary
+        // would describe traffic that never happens — so such batches
+        // are scored without the dedup override.
+        let dedup_live = self.dedup && !replicated;
+        let dedup = if dedup_live {
             dedup_traffic(shards.iter().map(|(_, p)| p), &placement, &self.cluster)
         } else {
-            // Dedup off: skip the per-slot scan — the summary is never
-            // scored and the engine ignores it.
+            // Dedup off (or voided by replicas): skip the per-slot scan
+            // — the summary is never scored and the engine ignores it.
             DedupTraffic::empty(&self.cluster)
         };
         let row_bytes = self.cfg.d_model * 4;
@@ -302,7 +407,7 @@ impl PlacementRouter {
             &counts,
             row_bytes,
             self.choice,
-            self.dedup.then_some(&dedup),
+            dedup_live.then_some(&dedup),
         );
         let comm = CommImpl::from(pick.schedule);
         match comm {
@@ -324,6 +429,7 @@ impl PlacementRouter {
             drop_rate: dropped as f64 / demanded.max(1) as f64,
             padding_waste: waste,
             aux_loss: aux,
+            replicated,
         }
     }
 
@@ -481,6 +587,132 @@ mod tests {
         assert_eq!(hot, vec![0]);
         let cold = r.cold_experts(0.5);
         assert_eq!(cold, vec![1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn installed_table_moves_experts_and_none_restores_formula() {
+        let mut r = PlacementRouter::new(
+            cfg(GateKind::Switch),
+            cluster(2, 2),
+            CommChoice::Auto,
+            0,
+        )
+        .unwrap();
+        // Swap experts 0 and 7 relative to the contiguous formula.
+        let mut table: Vec<usize> = (0..8).map(|e| e / 2).collect();
+        table.swap(0, 7);
+        r.set_table(Some(table)).unwrap();
+        assert_eq!(r.rank_of_expert(0), 3);
+        assert_eq!(r.rank_of_expert(7), 0);
+        assert_eq!(r.rank_of_expert(1), 0);
+        // A bad table is rejected and leaves the old one installed.
+        assert!(r.set_table(Some(vec![9; 8])).is_err());
+        assert_eq!(r.rank_of_expert(0), 3);
+        r.set_table(None).unwrap();
+        assert_eq!(r.rank_of_expert(0), 0);
+    }
+
+    #[test]
+    fn replica_spread_is_deterministic_and_conserves_tokens() {
+        let mk = || {
+            let mut r = PlacementRouter::new(
+                cfg(GateKind::Switch),
+                cluster(2, 2),
+                CommChoice::Auto,
+                21,
+            )
+            .unwrap();
+            // Expert 0 (primary rank 0) gains a copy on rank 3.
+            r.add_replica(0, 3).unwrap();
+            r
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let mut rng = Rng::seed(17);
+        let x = Tensor::randn(&[96, 16], &mut rng);
+        let da = a.route_batch(&x, 0);
+        let db = b.route_batch(&x, 0);
+        // Deterministic: identical routers + batch → identical spread.
+        assert_eq!(da.counts, db.counts);
+        assert_eq!(da.replicated, db.replicated);
+        // Conservation still holds with rows split across copies.
+        let matrix_total: usize = da.counts.iter().flatten().sum();
+        let expert_total: usize = da.expert_counts.iter().sum();
+        assert_eq!(matrix_total, expert_total);
+        // Expert 0's rows actually split: with >= 2 routed rows the
+        // round-robin puts some on each copy.
+        if da.expert_counts[0] >= 2 {
+            assert!(da.replicated);
+            let col = |dst: usize| -> usize {
+                (0..4).map(|src| da.counts[src][dst]).sum()
+            };
+            // Rank 3 hosts experts 6,7 natively; its column must carry
+            // at least one of expert 0's rotated rows on top — compare
+            // against a replica-free router on the same batch.
+            let mut plain = PlacementRouter::new(
+                cfg(GateKind::Switch),
+                cluster(2, 2),
+                CommChoice::Auto,
+                21,
+            )
+            .unwrap();
+            let dp = plain.route_batch(&x, 0);
+            assert!(!dp.replicated);
+            let plain_col3: usize = (0..4).map(|src| dp.counts[src][3]).sum();
+            assert!(
+                col(3) > plain_col3,
+                "replica copy on rank 3 must absorb rows: {} vs {plain_col3}",
+                col(3)
+            );
+        }
+    }
+
+    #[test]
+    fn killing_a_replica_holder_degrades_to_surviving_copy() {
+        let mut r = PlacementRouter::new(
+            cfg(GateKind::Switch),
+            cluster(2, 2),
+            CommChoice::Auto,
+            23,
+        )
+        .unwrap();
+        r.add_replica(0, 3).unwrap();
+        assert_eq!(r.replicas().num_replicas(0), 1);
+        // Kill the replica holder: the copy vanishes, routing falls
+        // back to the primary, and batches keep flowing.
+        r.set_dead(&[3]);
+        assert_eq!(r.replicas().num_replicas(0), 0);
+        let mut rng = Rng::seed(19);
+        let x = Tensor::randn(&[48, 16], &mut rng);
+        let d = r.route_batch(&x, 0);
+        assert!(!d.replicated);
+        let kept: usize = d.expert_counts.iter().sum();
+        assert!(kept > 0, "routing must continue after the kill");
+        // Dead rank receives nothing.
+        for src in 0..4 {
+            assert_eq!(d.counts[src][3], 0);
+        }
+        // New replicas cannot target the dead rank.
+        assert!(r.add_replica(1, 3).is_err());
+        assert!(r.add_replica(1, 2).is_ok());
+    }
+
+    #[test]
+    fn replica_validation_rejects_primary_and_out_of_range() {
+        let mut r = PlacementRouter::new(
+            cfg(GateKind::Switch),
+            cluster(2, 2),
+            CommChoice::Auto,
+            29,
+        )
+        .unwrap();
+        assert!(r.add_replica(0, 0).is_err(), "primary rank is not a replica");
+        assert!(r.add_replica(8, 1).is_err());
+        assert!(r.add_replica(0, 4).is_err());
+        assert!(r.add_replica(0, 1).is_ok());
+        // Idempotent.
+        r.add_replica(0, 1).unwrap();
+        assert_eq!(r.replicas().num_replicas(0), 1);
     }
 
     #[test]

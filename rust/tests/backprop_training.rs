@@ -40,6 +40,7 @@ fn seeded_loss_curve_decreases_over_200_steps() {
         faults: hetumoe::fault::FaultPlan::none(),
         ckpt_every: 0,
         ckpt_dir: None,
+        ..TrainRunConfig::default_run()
     };
     let mut t = NativeTrainer::new(cfg).unwrap();
     let summary = t.run().unwrap();
@@ -164,6 +165,7 @@ fn training_trajectories_identical_across_dispatch_modes() {
         faults: hetumoe::fault::FaultPlan::none(),
         ckpt_every: 0,
         ckpt_dir: None,
+        ..TrainRunConfig::default_run()
     };
     let mut ragged = NativeTrainer::new(TrainRunConfig {
         opts: MoeLayerOptions { dispatch: DispatchMode::Ragged, ..Default::default() },

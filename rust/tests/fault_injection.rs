@@ -33,6 +33,7 @@ fn train_cfg() -> TrainRunConfig {
         faults: FaultPlan::none(),
         ckpt_every: 0,
         ckpt_dir: None,
+        ..TrainRunConfig::default_run()
     }
 }
 

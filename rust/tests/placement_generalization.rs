@@ -1,0 +1,185 @@
+//! Property tests: every placement-dependent site must stay correct
+//! under *arbitrary* expert→rank tables — permutations, uneven hosts,
+//! and the elastic dead-rank composition — not just the contiguous
+//! `e/(E/W)` formula the paper starts from.
+//!
+//! Three surfaces are exercised (the ones the adaptive optimizer's
+//! deltas actually flow through):
+//!
+//! 1. [`DispatchPlan::rank_counts`] / `rank_counts_placed` — the traffic
+//!    matrix rows must conserve kept tokens and agree with a manual
+//!    collapse of the table, healthy or degraded.
+//! 2. [`dedup_traffic`] — node-pair row totals must match the placed
+//!    traffic matrix aggregated by node, with `payloads ≤ heads ≤ rows`
+//!    elementwise (the dedup ladder) under any table.
+//! 3. [`pick_schedule`] — deterministic, tie-breaks to Flat, and the
+//!    chosen legs always sum to the chosen schedule's round trip, for
+//!    arbitrary (including replica-spread) count matrices.
+
+use hetumoe::cluster::{ExpertPlacement, NetworkModel};
+use hetumoe::comm::schedule::transpose_counts;
+use hetumoe::comm::{dedup_traffic, pick_schedule, CommChoice, Schedule};
+use hetumoe::config::ClusterConfig;
+use hetumoe::gating::{apply_capacity, DispatchPlan, Routing};
+use hetumoe::util::proptest::{for_all, Gen};
+
+/// Random routing over `e` experts: `tokens × k` slots, ~10% inactive.
+fn routing(g: &mut Gen, e: usize) -> Routing {
+    let tokens = g.usize_in(1..40);
+    let k = g.usize_in(1..3);
+    let slots = tokens * k;
+    let expert_ids: Vec<u32> = (0..slots).map(|_| g.u32_in(0..e as u32)).collect();
+    let weights: Vec<f32> =
+        (0..slots).map(|_| if g.bool_with(0.1) { 0.0 } else { 1.0 }).collect();
+    let r = Routing { k, tokens, num_experts: e, expert_ids, weights, aux_loss: 0.0 };
+    r.validate().expect("generated routing is internally consistent");
+    r
+}
+
+fn plan(g: &mut Gen, e: usize) -> DispatchPlan {
+    let r = routing(g, e);
+    let capacity = g.usize_in(1..r.tokens + 1);
+    apply_capacity(&r, capacity)
+}
+
+/// Random expert→rank table (arbitrary: permuted, uneven, maybe even
+/// contiguous — `from_table` normalizes that case and it must still
+/// hold).
+fn table(g: &mut Gen, e: usize, w: usize) -> Vec<usize> {
+    (0..e).map(|_| g.usize_in(0..w)).collect()
+}
+
+/// Random strict subset of dead ranks (at least one survivor).
+fn dead_ranks(g: &mut Gen, w: usize) -> Vec<usize> {
+    let mut dead: Vec<usize> = (0..w).filter(|_| g.bool_with(0.3)).collect();
+    if dead.len() == w {
+        dead.pop();
+    }
+    dead
+}
+
+#[test]
+fn rank_counts_conserve_tokens_under_any_table() {
+    for_all(128, |g| {
+        let w = *g.choose(&[2usize, 4]);
+        let e = w * g.usize_in(1..4);
+        let p = plan(g, e);
+        let kept_total: usize = p.kept.iter().sum();
+
+        // Contiguous: the convenience wrapper and the placed form agree.
+        assert_eq!(p.rank_counts(w), p.rank_counts_placed(&ExpertPlacement::new(e, w)));
+
+        // Arbitrary table: conservation + manual collapse.
+        let t = table(g, e, w);
+        let placed = ExpertPlacement::from_table(e, w, &t);
+        let counts = p.rank_counts_placed(&placed);
+        assert_eq!(counts.len(), w);
+        assert_eq!(counts.iter().sum::<usize>(), kept_total, "tokens lost by the table");
+        for (r, &c) in counts.iter().enumerate() {
+            let manual: usize =
+                (0..e).filter(|&ex| t[ex] == r).map(|ex| p.kept[ex]).sum();
+            assert_eq!(c, manual, "rank {r} disagrees with a manual collapse of {t:?}");
+        }
+
+        // Dead-rank composition: still conserved, dead columns empty.
+        let dead = dead_ranks(g, w);
+        let degraded = placed.compose_dead(&dead);
+        let counts = p.rank_counts_placed(&degraded);
+        assert_eq!(counts.iter().sum::<usize>(), kept_total, "tokens lost by the remap");
+        for &r in &dead {
+            assert_eq!(counts[r], 0, "dead rank {r} still receives tokens");
+        }
+        // resolve() is the same composition the layer/router/executor use.
+        assert_eq!(degraded, ExpertPlacement::resolve(e, w, Some(&t), &dead));
+    });
+}
+
+#[test]
+fn dedup_traffic_matches_the_placed_matrix_under_any_table() {
+    for_all(96, |g| {
+        let nodes = 2usize;
+        let gpus = *g.choose(&[1usize, 2]);
+        let cluster =
+            ClusterConfig { nodes, gpus_per_node: gpus, ..ClusterConfig::commodity(nodes) };
+        let w = nodes * gpus;
+        let e = w * g.usize_in(1..3);
+        let plans: Vec<DispatchPlan> = (0..w).map(|_| plan(g, e)).collect();
+        let t = table(g, e, w);
+        let placed = ExpertPlacement::from_table(e, w, &t);
+        let traffic = dedup_traffic(plans.iter(), &placed, &cluster);
+
+        let kept_total: usize =
+            plans.iter().map(|p| p.kept.iter().sum::<usize>()).sum();
+        let rows_total: usize =
+            traffic.rows.iter().map(|r| r.iter().sum::<usize>()).sum();
+        assert_eq!(rows_total, kept_total, "dedup rows must count every kept slot");
+
+        for sn in 0..nodes {
+            for dn in 0..nodes {
+                // The dedup ladder: unique payloads ≤ run heads ≤ rows.
+                assert!(traffic.payloads[sn][dn] <= traffic.heads[sn][dn]);
+                assert!(traffic.heads[sn][dn] <= traffic.rows[sn][dn]);
+                // Node-pair rows equal the placed rank matrix aggregated
+                // by node — dedup and the schedule pick see one truth.
+                let manual: usize = (sn * gpus..(sn + 1) * gpus)
+                    .map(|s| {
+                        let row = plans[s].rank_counts_placed(&placed);
+                        row[dn * gpus..(dn + 1) * gpus].iter().sum::<usize>()
+                    })
+                    .sum();
+                assert_eq!(traffic.rows[sn][dn], manual, "node pair ({sn},{dn})");
+            }
+        }
+    });
+}
+
+#[test]
+fn pick_schedule_is_deterministic_and_honors_the_tie_break() {
+    for_all(96, |g| {
+        let nodes = 2usize;
+        let gpus = *g.choose(&[1usize, 2]);
+        let mut cfg = ClusterConfig::commodity(nodes);
+        cfg.gpus_per_node = gpus;
+        let net = NetworkModel::new(cfg);
+        let w = nodes * gpus;
+        // Arbitrary counts — this is what a permuted table or a replica
+        // spread produces: any non-negative matrix is reachable.
+        let counts: Vec<Vec<usize>> =
+            (0..w).map(|_| (0..w).map(|_| g.usize_in(0..200)).collect()).collect();
+        let elem_bytes = *g.choose(&[4usize, 256, 1024]);
+
+        let pick = pick_schedule(&net, &counts, elem_bytes, CommChoice::Auto);
+        // Deterministic: same inputs, same pick.
+        let again = pick_schedule(&net, &counts, elem_bytes, CommChoice::Auto);
+        assert_eq!(pick.schedule, again.schedule);
+        assert_eq!(pick.flat_time, again.flat_time);
+        assert_eq!(pick.hier_time, again.hier_time);
+
+        // Auto takes the strictly cheaper round trip; ties go Flat.
+        if pick.hier_time < pick.flat_time {
+            assert_eq!(pick.schedule, Schedule::Hierarchical);
+        } else {
+            assert_eq!(pick.schedule, Schedule::Flat);
+        }
+        // The reported legs always sum to the chosen round trip.
+        let chosen = match pick.schedule {
+            Schedule::Flat => pick.flat_time,
+            Schedule::Hierarchical => pick.hier_time,
+        };
+        assert_eq!(pick.dispatch_time + pick.combine_time, chosen);
+
+        // Forced policies never consult the costs.
+        let flat = pick_schedule(&net, &counts, elem_bytes, CommChoice::Flat);
+        assert_eq!(flat.schedule, Schedule::Flat);
+        assert_eq!(flat.dispatch_time + flat.combine_time, flat.flat_time);
+        let hier = pick_schedule(&net, &counts, elem_bytes, CommChoice::Hierarchical);
+        assert_eq!(hier.schedule, Schedule::Hierarchical);
+        assert_eq!(hier.dispatch_time + hier.combine_time, hier.hier_time);
+
+        // The combine leg is the transposed dispatch leg: scoring the
+        // transposed matrix swaps the two legs of the flat schedule.
+        let t = transpose_counts(&counts);
+        let flat_t = pick_schedule(&net, &t, elem_bytes, CommChoice::Flat);
+        assert_eq!(flat_t.flat_time, flat.flat_time, "flat round trip is transpose-invariant");
+    });
+}
