@@ -32,13 +32,13 @@ use crate::comm::hier_ragged::{
 };
 use crate::comm::ragged::{ragged_combine_placed, ragged_dispatch_placed, split_wire_bytes};
 use crate::comm::schedule::{transpose_counts, Schedule};
-use crate::comm::{alltoall, hierarchical_alltoall, CommTiming, WireBytes};
+use crate::comm::{alltoall, hierarchical_alltoall, CommTiming, WireBytes, F32_BYTES};
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
 use crate::gating::{make_gate, DispatchPlan, Gate};
 use crate::layout::{gather_expert_slices, scatter_expert_slices, RaggedLayoutBuffer};
 use crate::moe::{validate_dead_ranks, CommImpl, DispatchMode, MoeLayerOptions, StepReport};
-use crate::nn::{matmul_nt, matmul_tn, Ffn, FfnGrads};
+use crate::nn::{matmul_nt_par, matmul_tn_par, Ffn, FfnGrads};
 use crate::obs::trace;
 use crate::pipeline::executor::rank_expert_jobs;
 use crate::pipeline::{ExpertBank, ForwardCache, OverlapTiming, StagePlan, StepExecutor};
@@ -289,8 +289,11 @@ impl TrainMoeLayer {
                 &d_weights_all[rank],
                 aux_coef,
             )?;
-            grads.d_gate_weight.push(matmul_tn(&shards[rank], &ds));
-            dx_shards[rank].add_assign(&matmul_nt(&ds, &self.gate_weight));
+            grads
+                .d_gate_weight
+                .push(matmul_tn_par(&shards[rank], &ds, self.opts.threads));
+            dx_shards[rank]
+                .add_assign(&matmul_nt_par(&ds, &self.gate_weight, self.opts.threads));
         }
         drop(gate_span);
         report.wall.push(("bwd_gate".into(), g0.elapsed().as_secs_f64() / w as f64));
@@ -316,6 +319,11 @@ impl TrainMoeLayer {
         let g = self.cluster.gpus_per_node;
         let placement = self.placement();
         let counts = placement.traffic_matrix(&cache.kept);
+        // Gradient rows cross the wire in the same format as the
+        // forward's activations; accumulation back into f32 happens on
+        // the receive side.
+        let wire = self.opts.wire;
+        let row_bytes = d * wire.elem_bytes();
 
         // The backward exchanges reuse the forward's per-step schedule
         // decision: gradient rows travel the same routes, so the same
@@ -325,8 +333,9 @@ impl TrainMoeLayer {
         // Under an elastic remap the forward forced the flat schedule
         // with dedup off; the backward mirrors that degraded mode.
         let dedup_on = self.opts.dedup && placement.is_contiguous();
-        let dedup: Option<DedupTraffic> = dedup_on
-            .then(|| dedup_traffic(cache.plans.iter(), &placement, &self.cluster));
+        let dedup: Option<DedupTraffic> = dedup_on.then(|| {
+            dedup_traffic(cache.plans.iter(), &placement, &self.cluster).with_wire(wire)
+        });
         // Row metadata describes dedup groups and pre-sum runs; it is
         // only consumed when both the hierarchical schedule runs and
         // dedup is on.
@@ -350,14 +359,16 @@ impl TrainMoeLayer {
         dispatch_span.arg("schedule", schedule.name());
         let dispatch_wire: WireBytes = match schedule {
             Schedule::Flat => {
-                ragged_dispatch_placed(&self.net, dbufs, &cache.kept, d, schedule, &placement)?;
-                split_wire_bytes(&counts, d * 4, g)
+                ragged_dispatch_placed(
+                    &self.net, dbufs, &cache.kept, d, schedule, &placement, wire,
+                )?;
+                split_wire_bytes(&counts, row_bytes, g)
             }
             Schedule::Hierarchical => {
                 let dm = dedup_on
                     .then(|| DedupMeta { rows: &metas, payloads: dy_shards, scaled: true });
                 let leg =
-                    hier_ragged_dispatch(&self.net, dbufs, &cache.kept, d, dm.as_ref())?;
+                    hier_ragged_dispatch(&self.net, dbufs, &cache.kept, d, dm.as_ref(), wire)?;
                 rows_deduped += leg.rows_saved;
                 leg.wire
             }
@@ -398,7 +409,7 @@ impl TrainMoeLayer {
         let (stage_plan, overlap) = StagePlan::for_schedule(
             &self.net,
             &counts,
-            d * 4,
+            row_bytes,
             schedule,
             self.opts.chunks,
             &compute_per_rank,
@@ -417,13 +428,15 @@ impl TrainMoeLayer {
         let combine_span = trace::span("bwd_combine_data");
         let combine_wire: WireBytes = match schedule {
             Schedule::Flat => {
-                ragged_combine_placed(&self.net, dbufs, &cache.kept, d, schedule, &placement)?;
-                split_wire_bytes(&transpose_counts(&counts), d * 4, g)
+                ragged_combine_placed(
+                    &self.net, dbufs, &cache.kept, d, schedule, &placement, wire,
+                )?;
+                split_wire_bytes(&transpose_counts(&counts), row_bytes, g)
             }
             Schedule::Hierarchical => {
                 let pm = dedup_on.then(|| PresumMeta { rows: &metas });
                 let leg =
-                    hier_ragged_combine(&self.net, dbufs, &cache.kept, d, pm.as_ref())?;
+                    hier_ragged_combine(&self.net, dbufs, &cache.kept, d, pm.as_ref(), wire)?;
                 rows_deduped += leg.rows_saved;
                 leg.wire
             }
@@ -537,7 +550,7 @@ impl TrainMoeLayer {
         report.comm.push(("alltoall_combine_bwd".into(), timing2.total));
         // Placement-aware closed-form split, mirroring the forward's.
         let (nodes, g) = (self.cluster.nodes, self.cluster.gpus_per_node);
-        let chunk_bytes = epr * cap * d * 4;
+        let chunk_bytes = epr * cap * d * F32_BYTES;
         report.bytes_on_wire = 2 * (w * w - nodes * g * g) * chunk_bytes;
         report.bytes_intra_node = 2 * nodes * g * g.saturating_sub(1) * chunk_bytes;
         // Equal-chunk exchanges are never chunked: one-chunk overlap

@@ -593,7 +593,9 @@ impl NativeTrainer {
             ..Default::default()
         };
         let current = self.layer.placement();
-        let row_bytes = self.cfg.moe.d_model * 4;
+        // Score candidate layouts at the wire element size so placement
+        // decisions see the same per-row cost the dispatch path charges.
+        let row_bytes = self.cfg.moe.d_model * self.layer.opts.wire.elem_bytes();
         let Some(delta) = opt.propose(
             &self.traffic,
             &current,

@@ -4,7 +4,7 @@
 //! by the sharding ablations.
 
 use crate::cluster::NetworkModel;
-use crate::comm::{uniform_len, CommTiming};
+use crate::comm::{uniform_len, CommTiming, F32_BYTES};
 use crate::error::Result;
 
 /// AllGather: every rank ends with the concatenation of all ranks'
@@ -23,7 +23,7 @@ pub fn allgather(net: &NetworkModel, buffers: &[Vec<f32>]) -> Result<(Vec<Vec<f3
         cat.extend_from_slice(b);
     }
     let out = vec![cat; w];
-    Ok((out, ring_timing(net, len * 4, w.saturating_sub(1))))
+    Ok((out, ring_timing(net, len * F32_BYTES, w.saturating_sub(1))))
 }
 
 /// ReduceScatter: rank `r` ends with the elementwise sum of everyone's
@@ -57,7 +57,7 @@ pub fn reduce_scatter(
     for (b, o) in buffers.iter_mut().zip(outs) {
         *b = o;
     }
-    Ok(ring_timing(net, chunk * 4, w.saturating_sub(1)))
+    Ok(ring_timing(net, chunk * F32_BYTES, w.saturating_sub(1)))
 }
 
 /// Ring timing: `steps` steps, each forwarding `seg_bytes` along the ring.

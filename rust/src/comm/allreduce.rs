@@ -5,7 +5,7 @@
 //! step times (Fig 8) include it.
 
 use crate::cluster::NetworkModel;
-use crate::comm::{uniform_len, CommTiming};
+use crate::comm::{uniform_len, CommTiming, F32_BYTES};
 use crate::error::Result;
 
 /// In-place sum-AllReduce: every rank's buffer becomes the elementwise
@@ -31,7 +31,7 @@ pub fn allreduce(net: &NetworkModel, buffers: &mut [Vec<f32>]) -> Result<CommTim
         b.copy_from_slice(&sum);
     }
 
-    Ok(allreduce_timing(net, len * 4))
+    Ok(allreduce_timing(net, len * F32_BYTES))
 }
 
 /// Ring-allreduce timing for a `bytes`-sized buffer per rank.

@@ -8,7 +8,7 @@
 //! inefficiency hierarchical AllToAll removes.
 
 use crate::cluster::NetworkModel;
-use crate::comm::{uniform_len, CommTiming};
+use crate::comm::{uniform_len, CommTiming, F32_BYTES};
 use crate::error::Result;
 
 /// Flat AllToAll over equal chunks.
@@ -44,7 +44,7 @@ pub fn alltoall(net: &NetworkModel, buffers: &mut [Vec<f32>]) -> Result<CommTimi
     }
 
     // ---- simulated timing ----
-    Ok(flat_alltoall_timing(net, chunk * 4))
+    Ok(flat_alltoall_timing(net, chunk * F32_BYTES))
 }
 
 /// Timing of a flat AllToAll with `chunk_bytes` per pairwise message
@@ -127,7 +127,7 @@ pub fn alltoallv(
     }
 
     // ---- simulated timing ----
-    Ok(alltoallv_timing(net, counts, 4))
+    Ok(alltoallv_timing(net, counts, F32_BYTES))
 }
 
 /// Timing of a flat variable-count AllToAll: `counts[s][d]` messages of

@@ -66,6 +66,7 @@
 
 use crate::cluster::{ExpertPlacement, NetworkModel};
 use crate::comm::hierarchical::hierarchical_alltoallv_timing_with;
+use crate::comm::precision::{bf16_round, WirePrecision};
 use crate::comm::ragged::rank_counts;
 use crate::comm::{CommTiming, WireBytes};
 use crate::config::ClusterConfig;
@@ -84,6 +85,40 @@ pub const DEDUP_INDEX_BYTES: usize = 8;
 /// head-map entry telling the receiver which rows arrived and which are
 /// zero-filled members.
 pub const PRESUM_INDEX_BYTES: usize = 4;
+
+/// Packed replication-index entry under a compressed wire mode: a `u16`
+/// payload slot plus a `bf16` expansion weight.
+pub const PACKED_DEDUP_INDEX_BYTES: usize = 4;
+
+/// Packed head-map entry under a compressed wire mode: a `u16` slot.
+pub const PACKED_PRESUM_INDEX_BYTES: usize = 2;
+
+/// Largest block (in logical rows) the `u16` packed index can address.
+pub const PACKED_INDEX_MAX_ROWS: usize = 1 << 16;
+
+/// Replication-index width of one dispatch block. The packed layout
+/// applies only under a compressed wire mode (the f32 wire keeps the
+/// u32+f32 layout bit-for-bit) and only when the block is small enough
+/// for `u16` slot addressing. Both the data path and [`DedupTraffic`]
+/// call this with the same `block_rows`, so the cost model and the wire
+/// can never disagree about the index overhead.
+pub fn dedup_index_bytes(packed: bool, block_rows: usize) -> usize {
+    if packed && block_rows <= PACKED_INDEX_MAX_ROWS {
+        PACKED_DEDUP_INDEX_BYTES
+    } else {
+        DEDUP_INDEX_BYTES
+    }
+}
+
+/// Head-map width of one pre-summed combine block (same packing rule as
+/// [`dedup_index_bytes`]).
+pub fn presum_index_bytes(packed: bool, block_rows: usize) -> usize {
+    if packed && block_rows <= PACKED_INDEX_MAX_ROWS {
+        PACKED_PRESUM_INDEX_BYTES
+    } else {
+        PRESUM_INDEX_BYTES
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Row metadata + node-level dedup summary (derived from the plans)
@@ -170,6 +205,10 @@ pub struct DedupTraffic {
     pub payloads: Vec<Vec<usize>>,
     /// Pre-summable run heads per node pair (`payloads ≤ heads ≤ rows`).
     pub heads: Vec<Vec<usize>>,
+    /// Whether index lists are costed in the packed (compressed-wire)
+    /// layout — set from the step's [`WirePrecision`] via
+    /// [`DedupTraffic::with_wire`] so scoring matches the data path.
+    pub packed_index: bool,
 }
 
 /// Derive the [`DedupTraffic`] of a step from its per-rank plans (in
@@ -186,6 +225,7 @@ pub fn dedup_traffic<'a>(
         rows: vec![vec![0usize; n]; n],
         payloads: vec![vec![0usize; n]; n],
         heads: vec![vec![0usize; n]; n],
+        packed_index: false,
     };
     let mut hit = vec![false; n];
     for (s, plan) in plans.into_iter().enumerate() {
@@ -217,16 +257,21 @@ pub fn dedup_traffic<'a>(
 
 /// The adaptive per-block wire size of one dispatch block: deduplicate
 /// only when it strictly shrinks the block.
-fn dispatch_block_bytes(rows: usize, payloads: usize, elem_bytes: usize) -> usize {
+fn dispatch_block_bytes(
+    rows: usize,
+    payloads: usize,
+    elem_bytes: usize,
+    packed: bool,
+) -> usize {
     let raw = rows * elem_bytes;
-    let dedup = payloads * elem_bytes + rows * DEDUP_INDEX_BYTES;
+    let dedup = payloads * elem_bytes + rows * dedup_index_bytes(packed, rows);
     raw.min(dedup)
 }
 
 /// The adaptive per-block wire size of one pre-summed combine block.
-fn presum_block_bytes(rows: usize, heads: usize, elem_bytes: usize) -> usize {
+fn presum_block_bytes(rows: usize, heads: usize, elem_bytes: usize, packed: bool) -> usize {
     let raw = rows * elem_bytes;
-    let pre = heads * elem_bytes + rows * PRESUM_INDEX_BYTES;
+    let pre = heads * elem_bytes + rows * presum_index_bytes(packed, rows);
     raw.min(pre)
 }
 
@@ -240,7 +285,15 @@ impl DedupTraffic {
             rows: vec![vec![0usize; n]; n],
             payloads: vec![vec![0usize; n]; n],
             heads: vec![vec![0usize; n]; n],
+            packed_index: false,
         }
+    }
+
+    /// Cost the index lists in the layout the given wire mode ships
+    /// (packed `u16`+`bf16` under a compressed wire).
+    pub fn with_wire(mut self, wire: WirePrecision) -> DedupTraffic {
+        self.packed_index = wire.is_compressed();
+        self
     }
 
     pub fn nodes(&self) -> usize {
@@ -263,6 +316,7 @@ impl DedupTraffic {
                                 self.rows[sn][dn],
                                 self.payloads[sn][dn],
                                 elem_bytes,
+                                self.packed_index,
                             ) as f64
                         }
                     })
@@ -282,6 +336,7 @@ impl DedupTraffic {
                         self.rows[sn][dn],
                         self.payloads[sn][dn],
                         elem_bytes,
+                        self.packed_index,
                     );
                 }
             }
@@ -319,6 +374,7 @@ impl DedupTraffic {
                                 self.rows[sn][dn],
                                 self.heads[sn][dn],
                                 elem_bytes,
+                                self.packed_index,
                             ) as f64
                         }
                     })
@@ -334,8 +390,12 @@ impl DedupTraffic {
         for sn in 0..n {
             for dn in 0..n {
                 if sn != dn {
-                    total +=
-                        presum_block_bytes(self.rows[sn][dn], self.heads[sn][dn], elem_bytes);
+                    total += presum_block_bytes(
+                        self.rows[sn][dn],
+                        self.heads[sn][dn],
+                        elem_bytes,
+                        self.packed_index,
+                    );
                 }
             }
         }
@@ -353,7 +413,8 @@ impl DedupTraffic {
                     continue;
                 }
                 let (rows, payloads) = (self.rows[sn][dn], self.payloads[sn][dn]);
-                if payloads * elem_bytes + rows * DEDUP_INDEX_BYTES < rows * elem_bytes {
+                let idx = dedup_index_bytes(self.packed_index, rows);
+                if payloads * elem_bytes + rows * idx < rows * elem_bytes {
                     saved += rows - payloads;
                 }
             }
@@ -372,7 +433,8 @@ impl DedupTraffic {
                     continue;
                 }
                 let (rows, heads) = (self.rows[sn][dn], self.heads[sn][dn]);
-                if heads * elem_bytes + rows * PRESUM_INDEX_BYTES < rows * elem_bytes {
+                let idx = presum_index_bytes(self.packed_index, rows);
+                if heads * elem_bytes + rows * idx < rows * elem_bytes {
                     saved += rows - heads;
                 }
             }
@@ -398,6 +460,7 @@ impl DedupTraffic {
             rows: mask(&self.rows),
             payloads: mask(&self.payloads),
             heads: mask(&self.heads),
+            packed_index: self.packed_index,
         }
     }
 }
@@ -519,21 +582,27 @@ fn expert_offsets(kept: &[Vec<usize>], e: usize) -> Vec<Vec<usize>> {
 
 /// Dispatch leg over the four-phase hierarchical schedule. Semantics
 /// (final buffers) are bit-identical to
-/// [`crate::comm::ragged::ragged_dispatch`]; with `dedup`, replica rows
-/// of one token bound for the same remote node ship once (see module
-/// docs). Zero-row ranks and empty (node, node) blocks are first-class:
-/// no error, no allocation, no NIC message.
+/// [`crate::comm::ragged::ragged_dispatch`] under the same `wire` mode
+/// (every payload row is quantized at the send boundary, and dedup
+/// expansion replicates already-quantized payloads — quantization is
+/// idempotent, so both paths land on the same bits); with `dedup`,
+/// replica rows of one token bound for the same remote node ship once
+/// (see module docs). Zero-row ranks and empty (node, node) blocks are
+/// first-class: no error, no allocation, no NIC message.
 pub fn hier_ragged_dispatch(
     net: &NetworkModel,
     buffers: &mut [Vec<f32>],
     kept: &[Vec<usize>],
     d: usize,
     dedup: Option<&DedupMeta>,
+    wire: WirePrecision,
 ) -> Result<HierLeg> {
     let (e, epr) = validate(net, buffers, kept)?;
     let cfg = &net.cfg;
     let (n, g) = (cfg.nodes, cfg.gpus_per_node);
     let w = n * g;
+    let rb = d * wire.elem_bytes();
+    let packed = wire.is_compressed();
     for (s, buf) in buffers.iter().enumerate() {
         let expect: usize = kept[s].iter().sum::<usize>() * d;
         if buf.len() != expect {
@@ -555,6 +624,13 @@ pub fn hier_ragged_dispatch(
                 ));
             }
         }
+    }
+    // Quantize every row at the send boundary — uniformly, including
+    // same-node rows, so the intra-node fabric ships the same narrow
+    // format and the flat path (which quantizes the same buffers)
+    // produces bit-identical results.
+    for buf in buffers.iter_mut() {
+        wire.quantize_slice(buf);
     }
     let offs = expert_offsets(kept, e);
     let mut leg_span = trace::span("hier_dispatch_leg");
@@ -611,8 +687,8 @@ pub fn hier_ragged_dispatch(
                         }
                     }
                     payload_rows = seen.len();
-                    use_dedup = payload_rows * (d * 4) + block_rows * DEDUP_INDEX_BYTES
-                        < block_rows * (d * 4);
+                    let idx = dedup_index_bytes(packed, block_rows);
+                    use_dedup = payload_rows * rb + block_rows * idx < block_rows * rb;
                 }
             }
             // Build the expanded block. For a deduplicated block the
@@ -634,14 +710,29 @@ pub fn hier_ragged_dispatch(
                             continue;
                         }
                         let meta = dedup.expect("use_dedup implies meta");
+                        let idx = dedup_index_bytes(packed, block_rows);
                         for row in offs[s][ge]..offs[s][ge + 1] {
                             let t = meta.rows[s].token[row] as usize;
                             let payload = meta.payloads[s].row(t);
                             if meta.scaled {
+                                // The expansion weight travels inside
+                                // the index list: f32 in the u32+f32
+                                // layout, bf16 in the packed layout.
                                 let wgt = meta.rows[s].weight[row];
-                                block.extend(payload.iter().map(|&p| wgt * p));
+                                let wgt = if idx == PACKED_DEDUP_INDEX_BYTES {
+                                    bf16_round(wgt)
+                                } else {
+                                    wgt
+                                };
+                                block.extend(
+                                    payload.iter().map(|&p| wgt * wire.quantize(p)),
+                                );
                             } else {
-                                block.extend_from_slice(payload);
+                                // Payload rows crossed the wire in the
+                                // narrow format; replication is a
+                                // memcpy of the quantized row — the
+                                // same bits the flat path produced.
+                                block.extend(payload.iter().map(|&p| wire.quantize(p)));
                             }
                         }
                     }
@@ -650,9 +741,9 @@ pub fn hier_ragged_dispatch(
             if sn != dn {
                 let bytes = if use_dedup {
                     rows_saved += block_rows - payload_rows;
-                    payload_rows * (d * 4) + block_rows * DEDUP_INDEX_BYTES
+                    payload_rows * rb + block_rows * dedup_index_bytes(packed, block_rows)
                 } else {
-                    block_rows * (d * 4)
+                    block_rows * rb
                 };
                 inter_bytes += bytes;
                 inter_override[sn][dn] = bytes as f64;
@@ -693,13 +784,13 @@ pub fn hier_ragged_dispatch(
     }
     drop(scatter_span);
 
-    let timing =
-        hierarchical_alltoallv_timing_with(net, &counts, d * 4, Some(&inter_override));
-    let wire = hier_leg_wire_bytes(&counts, d * 4, g, Some(inter_bytes));
+    let timing = hierarchical_alltoallv_timing_with(net, &counts, rb, Some(&inter_override));
+    let wb = hier_leg_wire_bytes(&counts, rb, g, Some(inter_bytes));
     leg_span.arg("rows_saved", rows_saved);
-    leg_span.arg("bytes_inter", wire.inter);
-    leg_span.arg("bytes_intra", wire.intra);
-    Ok(HierLeg { timing, wire, rows_saved })
+    leg_span.arg("bytes_inter", wb.inter);
+    leg_span.arg("bytes_intra", wb.intra);
+    leg_span.arg("wire", wire.name());
+    Ok(HierLeg { timing, wire: wb, rows_saved })
 }
 
 /// Combine leg over the four-phase hierarchical schedule: the exact
@@ -716,11 +807,14 @@ pub fn hier_ragged_combine(
     kept: &[Vec<usize>],
     d: usize,
     presum: Option<&PresumMeta>,
+    wire: WirePrecision,
 ) -> Result<HierLeg> {
     let (e, epr) = validate(net, buffers, kept)?;
     let cfg = &net.cfg;
     let (n, g) = (cfg.nodes, cfg.gpus_per_node);
     let w = n * g;
+    let rb = d * wire.elem_bytes();
+    let packed = wire.is_compressed();
     // Offsets of block (local expert, source rank) inside each owner
     // rank's expert-major buffer (the `ragged_combine` layout).
     let mut block_off: Vec<Vec<usize>> = Vec::with_capacity(w);
@@ -747,6 +841,12 @@ pub fn hier_ragged_combine(
         if meta.rows.len() != w {
             return Err(crate::comm_err!("presum meta must describe all {w} ranks"));
         }
+    }
+    // Same uniform send-boundary quantization as the dispatch leg; run
+    // sums below add the already-quantized rows in f32 and re-quantize
+    // the shipped head row.
+    for buf in buffers.iter_mut() {
+        wire.quantize_slice(buf);
     }
     let offs = expert_offsets(kept, e); // source-side ragged row offsets
     let mut leg_span = trace::span("hier_combine_leg");
@@ -798,8 +898,8 @@ pub fn hier_ragged_combine(
                         .iter()
                         .filter(|&&(s, row, _)| meta.rows[s].run_head[row] as usize == row)
                         .count();
-                    use_presum = head_rows * (d * 4) + block_rows * PRESUM_INDEX_BYTES
-                        < block_rows * (d * 4);
+                    let idx = presum_index_bytes(packed, block_rows);
+                    use_presum = head_rows * rb + block_rows * idx < block_rows * rb;
                 }
             }
             // Build the destination leader's expanded view. Raw blocks
@@ -830,6 +930,8 @@ pub fn hier_ragged_combine(
                             *o += v;
                         }
                     }
+                    // The run total crosses the NIC as one narrow row.
+                    wire.quantize_slice(&mut block[lo..hi]);
                 }
             } else {
                 for (k, &(_, _, data)) in entries.iter().enumerate() {
@@ -839,9 +941,9 @@ pub fn hier_ragged_combine(
             if m != q {
                 let bytes = if use_presum {
                     rows_saved += block_rows - head_rows;
-                    head_rows * (d * 4) + block_rows * PRESUM_INDEX_BYTES
+                    head_rows * rb + block_rows * presum_index_bytes(packed, block_rows)
                 } else {
-                    block_rows * (d * 4)
+                    block_rows * rb
                 };
                 inter_bytes += bytes;
                 inter_override[m][q] = bytes as f64;
@@ -883,12 +985,13 @@ pub fn hier_ragged_combine(
     // node) orientation that transpose produces.
     let counts_t = crate::comm::schedule::transpose_counts(&rank_counts(kept, epr));
     let timing =
-        hierarchical_alltoallv_timing_with(net, &counts_t, d * 4, Some(&inter_override));
-    let wire = hier_leg_wire_bytes(&counts_t, d * 4, g, Some(inter_bytes));
+        hierarchical_alltoallv_timing_with(net, &counts_t, rb, Some(&inter_override));
+    let wb = hier_leg_wire_bytes(&counts_t, rb, g, Some(inter_bytes));
     leg_span.arg("rows_saved", rows_saved);
-    leg_span.arg("bytes_inter", wire.inter);
-    leg_span.arg("bytes_intra", wire.intra);
-    Ok(HierLeg { timing, wire, rows_saved })
+    leg_span.arg("bytes_inter", wb.inter);
+    leg_span.arg("bytes_intra", wb.intra);
+    leg_span.arg("wire", wire.name());
+    Ok(HierLeg { timing, wire: wb, rows_saved })
 }
 
 #[cfg(test)]
@@ -990,7 +1093,7 @@ mod tests {
 
             // Plain four-phase path.
             let mut hier = bufs.clone();
-            hier_ragged_dispatch(&m, &mut hier, &kept, d, None).unwrap();
+            hier_ragged_dispatch(&m, &mut hier, &kept, d, None, WirePrecision::F32).unwrap();
             assert_eq!(flat, hier, "case {}: four-phase != flat", g.case);
 
             // Deduplicated four-phase path.
@@ -999,8 +1102,15 @@ mod tests {
                 plans.iter().map(|p| row_meta(p, &placement, gpus)).collect();
             let meta = DedupMeta { rows: &metas, payloads: &shards, scaled: false };
             let mut deduped = bufs.clone();
-            let leg =
-                hier_ragged_dispatch(&m, &mut deduped, &kept, d, Some(&meta)).unwrap();
+            let leg = hier_ragged_dispatch(
+                &m,
+                &mut deduped,
+                &kept,
+                d,
+                Some(&meta),
+                WirePrecision::F32,
+            )
+            .unwrap();
             assert_eq!(flat, deduped, "case {}: dedup changed the bits", g.case);
 
             // The leg's NIC bytes equal the plan-derived cost model's.
@@ -1046,7 +1156,7 @@ mod tests {
             ragged_combine(&m, &mut flat, &kept, d, Schedule::Flat).unwrap();
 
             let mut hier = expert_major.clone();
-            hier_ragged_combine(&m, &mut hier, &kept, d, None).unwrap();
+            hier_ragged_combine(&m, &mut hier, &kept, d, None, WirePrecision::F32).unwrap();
             assert_eq!(flat, hier, "case {}: four-phase combine != flat", g.case);
 
             // Pre-summed path: per-token sums must match the flat
@@ -1056,7 +1166,9 @@ mod tests {
                 plans.iter().map(|p| row_meta(p, &placement, gpus)).collect();
             let meta = PresumMeta { rows: &metas };
             let mut pre = expert_major.clone();
-            let leg = hier_ragged_combine(&m, &mut pre, &kept, d, Some(&meta)).unwrap();
+            let leg =
+                hier_ragged_combine(&m, &mut pre, &kept, d, Some(&meta), WirePrecision::F32)
+                    .unwrap();
             let traffic = dedup_traffic(&plans, &placement, &m.cfg);
             assert_eq!(
                 leg.wire.inter,
@@ -1147,11 +1259,12 @@ mod tests {
         let m = net(2, 2);
         let kept = vec![vec![0usize; 8]; 4];
         let mut bufs: Vec<Vec<f32>> = vec![Vec::new(); 4];
-        let leg = hier_ragged_dispatch(&m, &mut bufs, &kept, 4, None).unwrap();
+        let leg = hier_ragged_dispatch(&m, &mut bufs, &kept, 4, None, WirePrecision::F32).unwrap();
         assert!(bufs.iter().all(|b| b.is_empty()));
         assert_eq!(leg.wire.inter, 0);
         assert_eq!(leg.wire.intra, 0);
-        let leg2 = hier_ragged_combine(&m, &mut bufs, &kept, 4, None).unwrap();
+        let leg2 =
+            hier_ragged_combine(&m, &mut bufs, &kept, 4, None, WirePrecision::F32).unwrap();
         assert_eq!(leg2.wire.inter + leg2.wire.intra, 0);
 
         // One populated (src, dst) pair, everything else zero.
@@ -1161,7 +1274,7 @@ mod tests {
         bufs[0] = (0..3 * 4).map(|i| i as f32).collect();
         let mut flat = bufs.clone();
         ragged_dispatch(&m, &mut flat, &kept, 4, Schedule::Flat).unwrap();
-        let leg = hier_ragged_dispatch(&m, &mut bufs, &kept, 4, None).unwrap();
+        let leg = hier_ragged_dispatch(&m, &mut bufs, &kept, 4, None, WirePrecision::F32).unwrap();
         assert_eq!(flat, bufs);
         assert_eq!(leg.wire.inter, 3 * 4 * 4);
     }

@@ -17,7 +17,7 @@
 //! on the [`NetworkModel`].
 
 use crate::cluster::NetworkModel;
-use crate::comm::{uniform_len, CommTiming};
+use crate::comm::{uniform_len, CommTiming, F32_BYTES};
 use crate::error::Result;
 
 /// Hierarchical AllToAll with equal chunks.
@@ -103,7 +103,7 @@ pub fn hierarchical_alltoall(
     }
 
     // ---- simulated timing ----
-    Ok(hierarchical_alltoall_timing(net, chunk * 4))
+    Ok(hierarchical_alltoall_timing(net, chunk * F32_BYTES))
 }
 
 /// Timing of the hierarchical schedule with `chunk_bytes` per (GPU,GPU)

@@ -17,6 +17,7 @@ pub mod allreduce;
 pub mod alltoall;
 pub mod hier_ragged;
 pub mod hierarchical;
+pub mod precision;
 pub mod ragged;
 pub mod schedule;
 
@@ -28,6 +29,7 @@ pub use hier_ragged::{
     DedupTraffic, HierLeg, PresumMeta, RowMeta,
 };
 pub use hierarchical::hierarchical_alltoall;
+pub use precision::{WirePrecision, F32_BYTES};
 pub use ragged::{
     ragged_combine, ragged_combine_placed, ragged_dispatch, ragged_dispatch_placed,
     split_wire_bytes,

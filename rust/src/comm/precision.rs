@@ -1,0 +1,297 @@
+//! Wire precision of the exchange payload legs.
+//!
+//! HetuMoE's bottleneck is the NIC, and every payload row used to cross
+//! it as f32. [`WirePrecision`] names the on-wire element format of the
+//! dispatch/combine payload legs: the send boundary quantizes each row
+//! (round-to-nearest-even), the receive boundary widens back to f32,
+//! and everything in between — expert compute, combine accumulation,
+//! all gradient math — stays f32. The compressed formats are simulated
+//! by the encode→decode round trip in f32 storage, which is exactly the
+//! numerical effect a real half-width wire has; byte accounting uses
+//! [`WirePrecision::elem_bytes`] so the cost models, the schedule pick
+//! and the data path all charge the same (halved) NIC bytes.
+//!
+//! The f32 mode is the default and is bit-identical to the pre-wire
+//! pipeline: `quantize` is the identity and every byte count uses
+//! [`F32_BYTES`]. Collectives that never leave f32 (gradient AllReduce,
+//! checkpoint AllGather, the padded pipeline) charge [`F32_BYTES`]
+//! explicitly rather than a bare `4`.
+
+use crate::error::Result;
+
+/// Bytes of one f32 element — the element size of every collective that
+/// stays full-precision regardless of the wire mode.
+pub const F32_BYTES: usize = 4;
+
+/// On-wire element format of the dispatch/combine payload legs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WirePrecision {
+    /// Full precision — the default; bit-identical to the pre-wire
+    /// pipeline everywhere.
+    #[default]
+    F32,
+    /// bfloat16: f32's exponent range, 8exponent/7 mantissa bits. Rounds
+    /// round-to-nearest-even; never overflows where f32 doesn't.
+    Bf16,
+    /// IEEE binary16: 5 exponent/10 mantissa bits. More mantissa than
+    /// bf16 but narrow range — values above ~65504 saturate to ±inf.
+    F16,
+}
+
+impl WirePrecision {
+    pub fn parse(s: &str) -> Result<WirePrecision> {
+        Ok(match s.to_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => WirePrecision::F32,
+            "bf16" | "bfloat16" => WirePrecision::Bf16,
+            "f16" | "fp16" | "float16" | "half" => WirePrecision::F16,
+            other => {
+                return Err(crate::config_err!(
+                    "unknown wire precision '{other}' (expected f32|bf16|f16)"
+                ));
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WirePrecision::F32 => "f32",
+            WirePrecision::Bf16 => "bf16",
+            WirePrecision::F16 => "f16",
+        }
+    }
+
+    /// Bytes per payload element on the wire.
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            WirePrecision::F32 => F32_BYTES,
+            WirePrecision::Bf16 | WirePrecision::F16 => 2,
+        }
+    }
+
+    /// Whether payload legs ship narrower than f32 (enables the packed
+    /// dedup/pre-sum index layout where block sizes permit).
+    pub fn is_compressed(&self) -> bool {
+        self.elem_bytes() < F32_BYTES
+    }
+
+    /// Encode→decode round trip of one element: what the receiver sees
+    /// after the value crossed the wire. Identity for [`Self::F32`];
+    /// idempotent in every mode (a quantized value re-quantizes to
+    /// itself), which is what lets legs re-quantize defensively without
+    /// drifting.
+    pub fn quantize(&self, x: f32) -> f32 {
+        match self {
+            WirePrecision::F32 => x,
+            WirePrecision::Bf16 => bf16_bits_to_f32(f32_to_bf16_bits(x)),
+            WirePrecision::F16 => f16_bits_to_f32(f32_to_f16_bits(x)),
+        }
+    }
+
+    /// Quantize a buffer in place at the send boundary (no-op for f32).
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        if *self == WirePrecision::F32 {
+            return;
+        }
+        for x in xs.iter_mut() {
+            *x = self.quantize(*x);
+        }
+    }
+}
+
+/// Round one f32 to bfloat16 with round-to-nearest-even.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep the sign and force a quiet payload bit that survives the
+        // truncation (a signaling NaN whose payload lives only in the
+        // low 16 bits would otherwise decode as infinity).
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Widen bfloat16 bits back to f32 (exact — bf16 values are a subset).
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// The bf16 encode→decode round trip (the packed replication index
+/// ships its expansion weights in this format).
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+/// Round one f32 to IEEE binary16 with round-to-nearest-even, handling
+/// subnormals, overflow-to-infinity and NaN.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN: keep NaN-ness even when the payload truncates away.
+        if man != 0 {
+            return sign | 0x7E00 | ((man >> 13) as u16 & 0x03FF);
+        }
+        return sign | 0x7C00;
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if unbiased >= -14 {
+        // Normal half range: drop 13 mantissa bits with RNE. A rounding
+        // carry may overflow the mantissa into the exponent — that is
+        // the correct next-binade (or infinity) result.
+        let e16 = (unbiased + 15) as u32;
+        let combined = (e16 << 10) | (man >> 13);
+        let rem = man & 0x1FFF;
+        let half = 0x1000;
+        let mut out = combined;
+        if rem > half || (rem == half && (combined & 1) != 0) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    if unbiased >= -25 {
+        // Subnormal half: shift the (implicit-1) mantissa into place.
+        let m = man | 0x0080_0000;
+        let shift = (13 - 14 - unbiased) as u32; // 14..=24
+        let sub = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut out = sub;
+        if rem > half || (rem == half && (sub & 1) != 0) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    sign // underflows to ±0
+}
+
+/// Widen IEEE binary16 bits back to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign);
+        }
+        // Subnormal: renormalize into f32's ample exponent range.
+        let mut e = -14i32;
+        let mut m = man;
+        while m & 0x0400 == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        m &= 0x03FF;
+        return f32::from_bits(sign | (((e + 127) as u32) << 23) | (m << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(WirePrecision::parse("f32").unwrap(), WirePrecision::F32);
+        assert_eq!(WirePrecision::parse("BF16").unwrap(), WirePrecision::Bf16);
+        assert_eq!(WirePrecision::parse("half").unwrap(), WirePrecision::F16);
+        assert!(WirePrecision::parse("int8").is_err());
+        assert_eq!(WirePrecision::F32.name(), "f32");
+        assert_eq!(WirePrecision::Bf16.name(), "bf16");
+        assert_eq!(WirePrecision::F16.name(), "f16");
+        assert_eq!(WirePrecision::default(), WirePrecision::F32);
+    }
+
+    #[test]
+    fn byte_widths() {
+        assert_eq!(WirePrecision::F32.elem_bytes(), 4);
+        assert_eq!(WirePrecision::Bf16.elem_bytes(), 2);
+        assert_eq!(WirePrecision::F16.elem_bytes(), 2);
+        assert!(!WirePrecision::F32.is_compressed());
+        assert!(WirePrecision::Bf16.is_compressed());
+    }
+
+    #[test]
+    fn f32_quantize_is_identity_bitwise() {
+        for v in [0.0f32, -0.0, 1.5, -3.25e-20, 7.1e30, f32::MIN_POSITIVE] {
+            assert_eq!(WirePrecision::F32.quantize(v).to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_round_trip_properties() {
+        let q = |x: f32| WirePrecision::Bf16.quantize(x);
+        // Exactly representable values survive bitwise.
+        for v in [0.0f32, 1.0, -2.0, 0.5, 256.0, -0.15625] {
+            assert_eq!(q(v).to_bits(), v.to_bits(), "{v}");
+        }
+        // Relative error bounded by half an ulp (2^-8 relative) for
+        // normal f32 inputs (subnormals keep fewer significant bits).
+        for v in [1.001f32, -3.14159, 1e-8, 123456.789, 6.1e-30] {
+            let r = q(v);
+            assert!(((r - v) / v).abs() <= 1.0 / 256.0, "{v} -> {r}");
+        }
+        // Round-to-nearest-even at the halfway point: 1 + 2^-8 is
+        // exactly between 1.0 and 1 + 2^-7; ties go to the even
+        // mantissa (1.0).
+        assert_eq!(q(1.0 + 1.0 / 256.0), 1.0);
+        assert_eq!(q(1.0 + 3.0 / 256.0), 1.0 + 4.0 / 256.0);
+        // Idempotent.
+        for v in [1.001f32, -3.7e12, 2.5e-30] {
+            assert_eq!(q(q(v)).to_bits(), q(v).to_bits());
+        }
+        // NaN stays NaN; infinities pass through.
+        assert!(q(f32::NAN).is_nan());
+        assert_eq!(q(f32::INFINITY), f32::INFINITY);
+        assert_eq!(q(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_round_trip_properties() {
+        let q = |x: f32| WirePrecision::F16.quantize(x);
+        for v in [0.0f32, 1.0, -2.0, 0.5, 2048.0, 65504.0, -0.000061035156] {
+            assert_eq!(q(v).to_bits(), v.to_bits(), "{v}");
+        }
+        // Relative error within half an ulp for normals (2^-11).
+        for v in [1.001f32, -3.14159, 0.1, 999.9] {
+            let r = q(v);
+            assert!(((r - v) / v).abs() <= 1.0 / 2048.0, "{v} -> {r}");
+        }
+        // Overflow saturates to infinity; subnormals round, tiny → 0.
+        assert_eq!(q(70000.0), f32::INFINITY);
+        assert_eq!(q(-70000.0), f32::NEG_INFINITY);
+        let sub = q(3.0e-5); // below the normal-half threshold 6.1e-5
+        assert!(sub > 0.0 && ((sub - 3.0e-5) / 3.0e-5).abs() < 0.02);
+        assert_eq!(q(1.0e-9), 0.0);
+        assert_eq!(q(-1.0e-9).to_bits(), (-0.0f32).to_bits());
+        // Idempotent; NaN preserved.
+        for v in [1.001f32, 3.0e-5, -123.456] {
+            assert_eq!(q(q(v)).to_bits(), q(v).to_bits());
+        }
+        assert!(q(f32::NAN).is_nan());
+        // RNE at the halfway point around 1.0 (ulp = 2^-10).
+        assert_eq!(q(1.0 + 1.0 / 2048.0), 1.0);
+        assert_eq!(q(1.0 + 3.0 / 2048.0), 1.0 + 4.0 / 2048.0);
+    }
+
+    #[test]
+    fn quantize_slice_matches_scalar() {
+        let vals: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) * 0.37).collect();
+        for mode in [WirePrecision::F32, WirePrecision::Bf16, WirePrecision::F16] {
+            let mut buf = vals.clone();
+            mode.quantize_slice(&mut buf);
+            for (o, &v) in buf.iter().zip(&vals) {
+                assert_eq!(o.to_bits(), mode.quantize(v).to_bits());
+            }
+        }
+    }
+}

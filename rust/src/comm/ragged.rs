@@ -26,6 +26,7 @@
 use crate::cluster::{ExpertPlacement, NetworkModel};
 use crate::comm::alltoall::alltoallv_timing;
 use crate::comm::hierarchical::hierarchical_alltoallv_timing;
+use crate::comm::precision::WirePrecision;
 use crate::comm::schedule::{transpose_counts, Schedule};
 use crate::comm::CommTiming;
 use crate::error::Result;
@@ -135,10 +136,10 @@ pub fn ragged_dispatch(
     if e == 0 || e % w != 0 {
         // Let the placement-aware path produce the shape error.
         let p = ExpertPlacement::new(w, w);
-        return ragged_dispatch_placed(net, buffers, kept, d, schedule, &p);
+        return ragged_dispatch_placed(net, buffers, kept, d, schedule, &p, WirePrecision::F32);
     }
     let placement = ExpertPlacement::new(e, w);
-    ragged_dispatch_placed(net, buffers, kept, d, schedule, &placement)
+    ragged_dispatch_placed(net, buffers, kept, d, schedule, &placement, WirePrecision::F32)
 }
 
 /// [`ragged_dispatch`] generalized over an arbitrary (possibly
@@ -147,6 +148,11 @@ pub fn ragged_dispatch(
 /// assigns it — in ascending expert order, each expert's batch
 /// contiguous and source-ordered. A dead rank hosting nothing receives
 /// an empty buffer.
+///
+/// `wire` sets the on-wire element format of the payload rows: every
+/// row is quantized at the send boundary (uniformly — same-node and
+/// same-rank rows too, so the hierarchical path lands on identical
+/// bits) and the timing/byte models charge `d · elem_bytes` per row.
 pub fn ragged_dispatch_placed(
     net: &NetworkModel,
     buffers: &mut [Vec<f32>],
@@ -154,6 +160,7 @@ pub fn ragged_dispatch_placed(
     d: usize,
     schedule: Schedule,
     placement: &ExpertPlacement,
+    wire: WirePrecision,
 ) -> Result<CommTiming> {
     let e = validate(net, buffers, kept, placement)?;
     let w = buffers.len();
@@ -165,6 +172,9 @@ pub fn ragged_dispatch_placed(
                 buf.len()
             ));
         }
+    }
+    for buf in buffers.iter_mut() {
+        wire.quantize_slice(buf);
     }
 
     // Source-side offsets (rows) of each expert block.
@@ -204,7 +214,7 @@ pub fn ragged_dispatch_placed(
     }
 
     let counts = placement.traffic_matrix(kept);
-    Ok(timing_for(net, &counts, d * 4, schedule))
+    Ok(timing_for(net, &counts, d * wire.elem_bytes(), schedule))
 }
 
 /// Combine leg: the exact inverse of [`ragged_dispatch`]. `buffers[r]`
@@ -223,10 +233,10 @@ pub fn ragged_combine(
     let e = kept.first().map(|r| r.len()).unwrap_or(0);
     if e == 0 || e % w != 0 {
         let p = ExpertPlacement::new(w, w);
-        return ragged_combine_placed(net, buffers, kept, d, schedule, &p);
+        return ragged_combine_placed(net, buffers, kept, d, schedule, &p, WirePrecision::F32);
     }
     let placement = ExpertPlacement::new(e, w);
-    ragged_combine_placed(net, buffers, kept, d, schedule, &placement)
+    ragged_combine_placed(net, buffers, kept, d, schedule, &placement, WirePrecision::F32)
 }
 
 /// [`ragged_combine`] generalized over an arbitrary (possibly
@@ -239,6 +249,7 @@ pub fn ragged_combine_placed(
     d: usize,
     schedule: Schedule,
     placement: &ExpertPlacement,
+    wire: WirePrecision,
 ) -> Result<CommTiming> {
     let e = validate(net, buffers, kept, placement)?;
     let w = buffers.len();
@@ -266,6 +277,9 @@ pub fn ragged_combine_placed(
             ));
         }
     }
+    for buf in buffers.iter_mut() {
+        wire.quantize_slice(buf);
+    }
 
     // ---- data movement: back to source ragged order ----
     let mut out: Vec<Vec<f32>> = (0..w)
@@ -288,7 +302,7 @@ pub fn ragged_combine_placed(
     }
 
     let counts_t = transpose_counts(&placement.traffic_matrix(kept));
-    Ok(timing_for(net, &counts_t, d * 4, schedule))
+    Ok(timing_for(net, &counts_t, d * wire.elem_bytes(), schedule))
 }
 
 #[cfg(test)]
@@ -457,7 +471,16 @@ mod tests {
         let mut bufs = tagged(&kept, d);
         assert!(bufs[2].is_empty());
         let orig = bufs.clone();
-        ragged_dispatch_placed(&m, &mut bufs, &kept, d, Schedule::Flat, &placement).unwrap();
+        ragged_dispatch_placed(
+            &m,
+            &mut bufs,
+            &kept,
+            d,
+            Schedule::Flat,
+            &placement,
+            WirePrecision::F32,
+        )
+        .unwrap();
         // The dead rank received nothing; survivors hold their hosted
         // experts' rows.
         assert!(bufs[2].is_empty());
@@ -473,7 +496,16 @@ mod tests {
         for row in placement.traffic_matrix(&kept) {
             assert_eq!(row[2], 0);
         }
-        ragged_combine_placed(&m, &mut bufs, &kept, d, Schedule::Flat, &placement).unwrap();
+        ragged_combine_placed(
+            &m,
+            &mut bufs,
+            &kept,
+            d,
+            Schedule::Flat,
+            &placement,
+            WirePrecision::F32,
+        )
+        .unwrap();
         assert_eq!(bufs, orig, "combine inverts dispatch under remap");
     }
 
@@ -484,9 +516,16 @@ mod tests {
         let kept = vec![vec![1usize, 0, 0, 1], vec![0, 1, 1, 0]];
         let mut bufs = tagged(&kept, 2);
         let wrong = ExpertPlacement::new(8, 2);
-        assert!(
-            ragged_dispatch_placed(&m, &mut bufs, &kept, 2, Schedule::Flat, &wrong).is_err()
-        );
+        assert!(ragged_dispatch_placed(
+            &m,
+            &mut bufs,
+            &kept,
+            2,
+            Schedule::Flat,
+            &wrong,
+            WirePrecision::F32
+        )
+        .is_err());
     }
 
     #[test]

@@ -251,6 +251,7 @@ mod tests {
             rows: vec![vec![24, 24], vec![24, 24]],
             payloads: vec![vec![12, 12], vec![12, 12]],
             heads: vec![vec![24, 24], vec![24, 24]],
+            packed_index: false,
         };
         let deduped = pick_schedule_dedup(&m, &counts, 256, CommChoice::Auto, Some(&t));
         assert_eq!(deduped.flat_time, base.flat_time, "flat never dedups");

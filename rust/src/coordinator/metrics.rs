@@ -20,6 +20,7 @@ pub struct MetricsAgg {
     bytes_intra_node: f64,
     bytes_intra_node_bwd: f64,
     rows_deduped: f64,
+    wire: String,
     expert_flops: f64,
     critical_path: f64,
     comm_exposed: f64,
@@ -75,6 +76,9 @@ impl MetricsAgg {
         self.bytes_intra_node += report.bytes_intra_node as f64;
         self.bytes_intra_node_bwd += report.bytes_intra_node_bwd as f64;
         self.rows_deduped += report.rows_deduped as f64;
+        if !report.wire.is_empty() {
+            self.wire = report.wire.clone();
+        }
         self.expert_flops += report.expert_flops;
         self.critical_path += report.critical_path;
         self.comm_exposed += report.comm_exposed;
@@ -113,6 +117,7 @@ impl MetricsAgg {
             bytes_intra_node: self.bytes_intra_node / n,
             bytes_intra_node_bwd: self.bytes_intra_node_bwd / n,
             rows_deduped: self.rows_deduped / n,
+            wire: self.wire.clone(),
             expert_flops: self.expert_flops / n,
             critical_path: self.critical_path / n,
             critical_path_min: self.critical_path_min,
@@ -157,6 +162,10 @@ pub struct Breakdown {
     /// Mean replica rows per step the hierarchical dedup/pre-summation
     /// kept off the NIC (0 on flat schedules or with dedup off).
     pub rows_deduped: f64,
+    /// Wire element format the run's ragged exchanges used ("f32" |
+    /// "bf16" | "f16"; "" when no step reported one). The byte fields
+    /// above are already denominated in this format's element size.
+    pub wire: String,
     /// Mean expert-FFN FLOPs executed per step.
     pub expert_flops: f64,
     /// Mean modeled critical-path wall of the overlapped exchange/

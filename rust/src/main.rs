@@ -48,6 +48,7 @@ const COMMANDS: &[CommandSpec] = &[
             ("alltoall", "auto|flat|hier schedule selection (default auto)"),
             ("chunks", "auto|N exchange chunks for comm/compute overlap (default auto)"),
             ("dedup", "on|off top-k token dedup on the hierarchical inter-node legs (default on)"),
+            ("wire", "f32|bf16|f16 wire format for dispatch/combine payloads (default f32; compressed needs --dispatch ragged)"),
             ("placement", "static|adaptive expert placement (default static; adaptive migrates hot experts at step boundaries)"),
             ("placement-every", "steps between adaptive placement checks (default 25)"),
             ("placement-window", "traffic-window length in steps for the optimizer (default 16)"),
@@ -77,6 +78,7 @@ const COMMANDS: &[CommandSpec] = &[
             ("alltoall", "auto|flat|hier per-step AllToAll selection in ragged mode (default: auto for hetumoe, else the system's flavor)"),
             ("chunks", "auto|N exchange chunks for comm/compute overlap (default: auto for hetumoe, 1 for the 2022-era baselines)"),
             ("dedup", "on|off top-k token dedup on the hierarchical inter-node legs (default on)"),
+            ("wire", "f32|bf16|f16 wire format for dispatch/combine payloads (default f32; compressed needs ragged dispatch)"),
             ("seed", "model/data seed (default 0)"),
             ("json", "emit the aggregated StepReport breakdown as JSON (flag)"),
             ("trace-out", "write a Chrome trace of the run (open in Perfetto)"),
@@ -115,6 +117,7 @@ const COMMANDS: &[CommandSpec] = &[
             ("comm", "flat|hier|auto AllToAll selection (default auto)"),
             ("chunks", "auto|N exchange chunks for comm/compute overlap (default auto)"),
             ("dedup", "on|off top-k token dedup on the hierarchical inter-node legs (default on)"),
+            ("wire", "f32|bf16|f16 wire format for dispatch/combine payloads (default f32)"),
             ("placement", "static|adaptive (adaptive replicates hot experts onto cold ranks online)"),
             ("replicate", "comma list of expert:rank replica pins, e.g. 0:3,5:7"),
             ("workload", "poisson|bursty arrivals (default poisson)"),
@@ -228,6 +231,9 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
     if let Some(dedup) = parse_dedup(args)? {
         cfg.opts.dedup = dedup;
     }
+    if let Some(v) = args.get("wire") {
+        cfg.opts.wire = hetumoe::comm::WirePrecision::parse(v)?;
+    }
     cfg.placement =
         hetumoe::placement::PlacementPolicy::parse(args.str_or("placement", "static"))?;
     cfg.placement_every = args.usize_or("placement-every", cfg.placement_every)?;
@@ -252,13 +258,14 @@ fn cmd_train_native(args: &Args) -> hetumoe::error::Result<()> {
     };
     if !json {
         println!(
-            "native training: {} params | {} experts on {}x{} GPUs | {} dispatch, alltoall={}",
+            "native training: {} params | {} experts on {}x{} GPUs | {} dispatch, alltoall={}, wire={}",
             trainer.num_params(),
             trainer.cfg.moe.num_experts,
             trainer.cfg.cluster.nodes,
             trainer.cfg.cluster.gpus_per_node,
             trainer.cfg.opts.dispatch.name(),
             trainer.cfg.opts.alltoall.name(),
+            trainer.cfg.opts.wire.name(),
         );
     }
     let trace = trace_start(args);
@@ -472,6 +479,9 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
     if let Some(dedup) = parse_dedup(args)? {
         opts.dedup = dedup;
     }
+    if let Some(v) = args.get("wire") {
+        opts.wire = hetumoe::comm::WirePrecision::parse(v)?;
+    }
     let dispatch = opts.dispatch;
     let alltoall = opts.alltoall;
     let chunks = opts.chunks;
@@ -522,11 +532,12 @@ fn cmd_layer_bench(args: &Args) -> hetumoe::error::Result<()> {
     );
     println!(
         "bytes_on_wire/step={:.0} (NIC) bytes_intra_node/step={:.0} rows_deduped/step={:.1} \
-         expert_flops/step={:.3e}",
+         expert_flops/step={:.3e} wire={}",
         summary.breakdown.bytes_on_wire,
         summary.breakdown.bytes_intra_node,
         summary.breakdown.rows_deduped,
-        summary.breakdown.expert_flops
+        summary.breakdown.expert_flops,
+        if summary.breakdown.wire.is_empty() { "f32" } else { &summary.breakdown.wire }
     );
     println!(
         "overlap: critical_path/step={} comm_exposed={} compute_exposed={} efficiency={:.1}%",
@@ -683,6 +694,10 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
     let comm = CommChoice::parse(args.str_or("comm", "auto"))?;
     let chunks = ChunkChoice::parse(args.str_or("chunks", "auto"))?;
     let dedup = parse_dedup(args)?.unwrap_or(true);
+    let wire = match args.get("wire") {
+        Some(v) => hetumoe::comm::WirePrecision::parse(v)?,
+        None => hetumoe::comm::WirePrecision::F32,
+    };
     let workload = args.str_or("workload", "poisson");
     let process = match workload {
         // Calibrated so the long-run mean equals --rate:
@@ -725,6 +740,7 @@ fn cmd_serve(args: &Args) -> hetumoe::error::Result<()> {
         comm,
         chunks,
         dedup,
+        wire,
         slo,
         duration,
         max_tokens,

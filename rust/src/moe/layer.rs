@@ -17,6 +17,7 @@
 
 use crate::cluster::NetworkModel;
 use crate::comm::schedule::{CommChoice, Schedule};
+use crate::comm::WirePrecision;
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
 use crate::gating::topk::{softmax_of_selected, topk_rows_heap};
@@ -137,6 +138,16 @@ pub struct MoeLayerOptions {
     pub dedup: bool,
     /// Threads for the parallel kernels (1 = serial).
     pub threads: usize,
+    /// Element format token rows take across the ragged exchanges
+    /// (dispatch + combine, forward and backward): activations and
+    /// gradients are quantized at the send boundary and widened back to
+    /// f32 on receipt, so expert compute and every accumulation stay
+    /// f32. Every cost model (schedule pick, overlap chunker, byte
+    /// accounting, serving router, placement optimizer) charges the
+    /// same element size. [`WirePrecision::F32`] (the default) is
+    /// bit-identical to the pre-wire pipeline; the padded baseline
+    /// rejects compressed formats.
+    pub wire: WirePrecision,
     /// Ranks that are down (hard-failed or `dead:` from the fault
     /// plan). They source zero-row shards and host no experts — the
     /// placement elastically remaps their experts over the survivors
@@ -167,6 +178,7 @@ impl Default for MoeLayerOptions {
             chunks: ChunkChoice::Auto,
             dedup: true,
             threads: 1,
+            wire: WirePrecision::F32,
             dead_ranks: Vec::new(),
             placement_table: None,
         }
@@ -212,6 +224,10 @@ pub struct StepReport {
     pub expert_flops: f64,
     /// AllToAll schedule this step ran ("flat" | "hier").
     pub comm_schedule: String,
+    /// Wire element format the ragged exchanges used ("f32" | "bf16" |
+    /// "f16"; "" until the ragged pipeline fills it in — the padded
+    /// baseline is always f32).
+    pub wire: String,
     /// NIC bytes over both *backward* AllToAll legs (0 for forward-only
     /// steps; set by the training backward pass, attributed through the
     /// same placement-aware split as the forward legs).

@@ -128,6 +128,74 @@ pub fn matmul_dense(a: &Tensor, b: &Tensor) -> Tensor {
     out
 }
 
+/// TN kernel over a column range of the output: `C[m,n] = Aᵀ · B` with
+/// `A` stored `[l, m]`. `c` holds rows `cols` of the output, rebased to
+/// row 0, and must be zero-initialized. Blocked over the reduction
+/// dimension `l` so a KB-row panel of `B` stays hot while every output
+/// row in the range sweeps it; within each output row the batch rows
+/// are still visited in globally increasing `i` order, so the addition
+/// chain per element is identical to the unblocked loop.
+fn matmul_tn_range(
+    adata: &[f32],
+    bdata: &[f32],
+    c: &mut [f32],
+    l: usize,
+    m: usize,
+    n: usize,
+    cols: std::ops::Range<usize>,
+) {
+    let base = cols.start;
+    for ib in (0..l).step_by(KB) {
+        let ie = (ib + KB).min(l);
+        for j in cols.clone() {
+            let crow = &mut c[(j - base) * n..(j - base) * n + n];
+            for i in ib..ie {
+                let aij = adata[i * m + j];
+                if aij == 0.0 {
+                    continue; // zero rows (padding) contribute nothing
+                }
+                let brow = &bdata[i * n..i * n + n];
+                for (ck, &bk) in crow.iter_mut().zip(brow) {
+                    *ck += aij * bk;
+                }
+            }
+        }
+    }
+}
+
+/// NT kernel over a row range of the output: `C[m,n] = A · Bᵀ` with `B`
+/// stored `[n, l]`. `c` holds rows `rows` of the output, rebased to row
+/// 0, and must be zero-initialized. Blocked over the reduction
+/// dimension `l`, carrying the accumulator through `C` between blocks —
+/// each element's additions happen in the same ascending-`k` order as a
+/// single full-length sweep, so results are bit-identical to the
+/// unblocked loop.
+fn matmul_nt_range(
+    adata: &[f32],
+    bdata: &[f32],
+    c: &mut [f32],
+    l: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+) {
+    let base = rows.start;
+    for kb in (0..l).step_by(KB) {
+        let ke = (kb + KB).min(l);
+        for i in rows.clone() {
+            let arow = &adata[i * l..i * l + l];
+            let crow = &mut c[(i - base) * n..(i - base) * n + n];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                let brow = &bdata[j * l..j * l + l];
+                let mut acc = *cj;
+                for kk in kb..ke {
+                    acc += arow[kk] * brow[kk];
+                }
+                *cj = acc;
+            }
+        }
+    }
+}
+
 /// `Aᵀ[m,l]ᵀ · B[l,n]` → `C[m,n]` where `A` is `[l, m]` — the
 /// weight-gradient kernel (`dW = xᵀ · dy` sums outer products over the
 /// batch rows). Rows are accumulated in increasing row order and
@@ -139,21 +207,31 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     let (l2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(l, l2, "matmul_tn row dims: {l} vs {l2}");
     let mut out = Tensor::zeros(&[m, n]);
+    matmul_tn_range(a.data(), b.data(), out.data_mut(), l, m, n, 0..m);
+    out
+}
+
+/// Parallel [`matmul_tn`]: output rows (weight columns) sharded over
+/// `threads` scoped threads. Each output row's accumulation order is
+/// the same as the serial kernel's, so results are bit-identical for
+/// any thread count.
+pub fn matmul_tn_par(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    let (l, m) = (a.shape()[0], a.shape()[1]);
+    let (l2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(l, l2, "matmul_tn row dims: {l} vs {l2}");
+    let mut out = Tensor::zeros(&[m, n]);
     let (adata, bdata) = (a.data(), b.data());
-    let cdata = out.data_mut();
-    for i in 0..l {
-        let arow = &adata[i * m..i * m + m];
-        let brow = &bdata[i * n..i * n + n];
-        for (j, &aij) in arow.iter().enumerate() {
-            if aij == 0.0 {
-                continue; // zero rows (padding) contribute nothing
-            }
-            let crow = &mut cdata[j * n..j * n + n];
-            for (k, &bik) in brow.iter().enumerate() {
-                crow[k] += aij * bik;
-            }
-        }
-    }
+    let cptr = out.data_mut().as_mut_ptr() as usize;
+    parallel_for_chunks(m, threads, |range| {
+        // SAFETY: chunks are disjoint row ranges of the output buffer.
+        let cslice = unsafe {
+            std::slice::from_raw_parts_mut(
+                (cptr as *mut f32).add(range.start * n),
+                (range.end - range.start) * n,
+            )
+        };
+        matmul_tn_range(adata, bdata, cslice, l, m, n, range);
+    });
     out
 }
 
@@ -165,20 +243,29 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, l2) = (b.shape()[0], b.shape()[1]);
     assert_eq!(l, l2, "matmul_nt inner dims: {l} vs {l2}");
     let mut out = Tensor::zeros(&[m, n]);
+    matmul_nt_range(a.data(), b.data(), out.data_mut(), l, n, 0..m);
+    out
+}
+
+/// Parallel [`matmul_nt`]: output rows sharded over `threads` scoped
+/// threads; bit-identical to the serial kernel for any thread count.
+pub fn matmul_nt_par(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    let (m, l) = (a.shape()[0], a.shape()[1]);
+    let (n, l2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(l, l2, "matmul_nt inner dims: {l} vs {l2}");
+    let mut out = Tensor::zeros(&[m, n]);
     let (adata, bdata) = (a.data(), b.data());
-    let cdata = out.data_mut();
-    for i in 0..m {
-        let arow = &adata[i * l..i * l + l];
-        let crow = &mut cdata[i * n..i * n + n];
-        for (j, cj) in crow.iter_mut().enumerate() {
-            let brow = &bdata[j * l..j * l + l];
-            let mut acc = 0.0f32;
-            for k in 0..l {
-                acc += arow[k] * brow[k];
-            }
-            *cj = acc;
-        }
-    }
+    let cptr = out.data_mut().as_mut_ptr() as usize;
+    parallel_for_chunks(m, threads, |range| {
+        // SAFETY: chunks are disjoint row ranges of the output buffer.
+        let cslice = unsafe {
+            std::slice::from_raw_parts_mut(
+                (cptr as *mut f32).add(range.start * n),
+                (range.end - range.start) * n,
+            )
+        };
+        matmul_nt_range(adata, bdata, cslice, l, n, range);
+    });
     out
 }
 
@@ -308,6 +395,51 @@ mod tests {
         }
         let padded = matmul_tn(&ap, &bp);
         assert!(compact.allclose(&padded, 0.0));
+    }
+
+    #[test]
+    fn tn_matches_transpose_across_block_boundary() {
+        // The reduction dim crosses the KB=64 block boundary.
+        let mut rng = Rng::seed(8);
+        let a = Tensor::randn(&[150, 4], &mut rng);
+        let b = Tensor::randn(&[150, 6], &mut rng);
+        let fast = matmul_tn(&a, &b);
+        let slow = matmul_naive(&a.transpose(), &b);
+        assert!(fast.allclose(&slow, 1e-3), "diff={}", fast.max_abs_diff(&slow));
+    }
+
+    #[test]
+    fn nt_matches_transpose_across_block_boundary() {
+        let mut rng = Rng::seed(9);
+        let a = Tensor::randn(&[5, 150], &mut rng);
+        let b = Tensor::randn(&[7, 150], &mut rng);
+        let fast = matmul_nt(&a, &b);
+        let slow = matmul_naive(&a, &b.transpose());
+        assert!(fast.allclose(&slow, 1e-3), "diff={}", fast.max_abs_diff(&slow));
+    }
+
+    #[test]
+    fn tn_parallel_bit_identical_to_serial() {
+        let mut rng = Rng::seed(10);
+        let a = Tensor::randn(&[130, 9], &mut rng);
+        let b = Tensor::randn(&[130, 11], &mut rng);
+        let s = matmul_tn(&a, &b);
+        for threads in [1, 2, 3, 8] {
+            let p = matmul_tn_par(&a, &b, threads);
+            assert!(p.allclose(&s, 0.0), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn nt_parallel_bit_identical_to_serial() {
+        let mut rng = Rng::seed(11);
+        let a = Tensor::randn(&[9, 130], &mut rng);
+        let b = Tensor::randn(&[13, 130], &mut rng);
+        let s = matmul_nt(&a, &b);
+        for threads in [1, 2, 3, 8] {
+            let p = matmul_nt_par(&a, &b, threads);
+            assert!(p.allclose(&s, 0.0), "threads={threads}");
+        }
     }
 
     #[test]

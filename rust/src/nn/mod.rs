@@ -16,5 +16,7 @@ pub mod ops;
 
 pub use activation::{gelu, gelu_grad, relu};
 pub use ffn::{Ffn, FfnCache, FfnGrads};
-pub use matmul::{matmul, matmul_into, matmul_nt, matmul_par, matmul_tn};
+pub use matmul::{
+    matmul, matmul_into, matmul_nt, matmul_nt_par, matmul_par, matmul_tn, matmul_tn_par,
+};
 pub use ops::{cross_entropy, layernorm, log_softmax, softmax_rows};

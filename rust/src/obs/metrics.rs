@@ -2,8 +2,8 @@
 //! `BENCH_<n>.json` → regression gate.
 //!
 //! Runs a fixed-seed, fixed-config subset of the fig benches (fig10
-//! ragged, fig12 overlap, fig13 hier+dedup, fig14 placement, fig11
-//! train, fig9 serving)
+//! ragged, fig12 overlap, fig13 hier+dedup, fig15 wire precision,
+//! fig14 placement, fig11 train, fig9 serving)
 //! and assembles one durable record — host, git revision, timestamp,
 //! per-fig walls and the model-level metrics (`comm_exposed`,
 //! `overlap_efficiency`, NIC/intra-node bytes, serving tail latencies).
@@ -20,6 +20,7 @@
 
 use crate::benchkit::{bench, black_box, BenchOpts, Table};
 use crate::comm::schedule::CommChoice;
+use crate::comm::WirePrecision;
 use crate::config::{ClusterConfig, GateKind, MoeConfig};
 use crate::error::Result;
 use crate::moe::{DispatchMode, MoeLayer, MoeLayerOptions};
@@ -70,6 +71,7 @@ pub fn run_figs() -> Result<Vec<(String, Json)>> {
         ("fig10_ragged".into(), fig10_ragged()?),
         ("fig12_overlap".into(), fig12_overlap()?),
         ("fig13_hier_dedup".into(), fig13_hier_dedup()?),
+        ("fig15_wire_precision".into(), fig15_wire_precision()?),
         ("fig14_placement".into(), fig14_placement()?),
         ("fig11_train".into(), fig11_train()?),
         ("fig9_serving".into(), fig9_serving()?),
@@ -244,6 +246,75 @@ fn fig13_hier_dedup() -> Result<Json> {
         ("rows_deduped", Json::num(rep_ded.rows_deduped as f64)),
         ("exchange_hier", Json::num(rep_hier.comm_total())),
         ("exchange_dedup", Json::num(rep_ded.comm_total())),
+    ]))
+}
+
+/// Fig 15 pin: wire precision on the fig13 batch — bf16 must exactly
+/// halve the NIC and intra-node bills of the f32 run (payload rows,
+/// dedup index, and presum entries all shrink 2×) while outputs stay
+/// within the encoding's tolerance.
+fn fig15_wire_precision() -> Result<Json> {
+    let cluster = ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) };
+    let w = cluster.world();
+    let d = 64usize;
+    let cfg = MoeConfig {
+        num_experts: 16,
+        d_model: d,
+        ffn_hidden: 2 * d,
+        capacity_factor: 4.0,
+        gate: GateKind::GShard,
+    };
+    let layer_of = |wire: WirePrecision| {
+        MoeLayer::native(
+            cfg.clone(),
+            cluster.clone(),
+            MoeLayerOptions {
+                alltoall: CommChoice::Hierarchical,
+                dedup: true,
+                wire,
+                chunks: ChunkChoice::Fixed(1),
+                threads: 1,
+                ..Default::default()
+            },
+            42,
+        )
+    };
+    let probe = MoeLayer::native(cfg.clone(), cluster.clone(), Default::default(), 42)?;
+    let shards = skewed_shards(&probe.gate_weight, w, 128, d, 9);
+    let full = layer_of(WirePrecision::F32)?;
+    let half = layer_of(WirePrecision::Bf16)?;
+    let (out_full, rep_full) = full.forward(&shards)?;
+    let (out_half, rep_half) = half.forward(&shards)?;
+    if rep_full.bytes_on_wire != 2 * rep_half.bytes_on_wire
+        || rep_full.bytes_intra_node != 2 * rep_half.bytes_intra_node
+    {
+        return Err(crate::config_err!(
+            "fig15 pin: bf16 must exactly halve the byte bill (NIC {} vs {}, intra {} vs {})",
+            rep_full.bytes_on_wire,
+            rep_half.bytes_on_wire,
+            rep_full.bytes_intra_node,
+            rep_half.bytes_intra_node
+        ));
+    }
+    let drift = out_full
+        .iter()
+        .zip(&out_half)
+        .map(|(a, b)| a.max_abs_diff(b))
+        .fold(0.0f32, f32::max);
+    if !(drift > 0.0 && drift < 1.0) {
+        return Err(crate::config_err!("fig15 pin: bf16 output drift {drift} out of range"));
+    }
+    let wall = bench("fig15 bf16 wire", &BenchOpts::quick(), || {
+        black_box(half.forward(black_box(&shards)).unwrap());
+    });
+    Ok(Json::obj(vec![
+        ("wall_step", Json::num(wall.median)),
+        ("bytes_nic_f32", Json::num(rep_full.bytes_on_wire as f64)),
+        ("bytes_nic_bf16", Json::num(rep_half.bytes_on_wire as f64)),
+        ("bytes_intra_bf16", Json::num(rep_half.bytes_intra_node as f64)),
+        ("exchange_f32", Json::num(rep_full.comm_total())),
+        ("exchange_bf16", Json::num(rep_half.comm_total())),
+        ("bf16_output_drift", Json::num(drift as f64)),
     ]))
 }
 

@@ -28,6 +28,7 @@ pub const BREAKDOWN_KEYS: &[&str] = &[
     "bytes_intra_node",
     "bytes_intra_node_bwd",
     "rows_deduped",
+    "wire",
     "expert_flops",
     "critical_path",
     "critical_path_min",
@@ -103,6 +104,7 @@ pub fn breakdown_json(b: &Breakdown) -> Json {
         ("bytes_intra_node", Json::num(b.bytes_intra_node)),
         ("bytes_intra_node_bwd", Json::num(b.bytes_intra_node_bwd)),
         ("rows_deduped", Json::num(b.rows_deduped)),
+        ("wire", Json::str(&b.wire)),
         ("expert_flops", Json::num(b.expert_flops)),
         ("critical_path", Json::num(b.critical_path)),
         ("critical_path_min", Json::num(b.critical_path_min)),

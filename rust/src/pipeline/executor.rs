@@ -38,7 +38,7 @@ use crate::comm::hier_ragged::{
 };
 use crate::comm::ragged::{ragged_combine_placed, ragged_dispatch_placed, split_wire_bytes};
 use crate::comm::schedule::{pick_schedule_dedup, transpose_counts, Schedule};
-use crate::comm::{alltoall, hierarchical_alltoall, CommTiming, WireBytes};
+use crate::comm::{alltoall, hierarchical_alltoall, CommTiming, WireBytes, F32_BYTES};
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
 use crate::gating::{apply_capacity, DispatchPlan, Routing};
@@ -265,7 +265,9 @@ impl<'a> StepExecutor<'a> {
                 self.run_padded(shards, &plans, collect_cache, &mut report)?
             }
         };
+        report.wire = self.opts.wire.name().into();
         step_span.arg("comm_schedule", report.comm_schedule.as_str());
+        step_span.arg("wire", self.opts.wire.name());
         step_span.arg("n_chunks", report.n_chunks);
         step_span.arg("bytes_on_wire", report.bytes_on_wire);
         step_span.arg("bytes_intra_node", report.bytes_intra_node);
@@ -316,7 +318,12 @@ impl<'a> StepExecutor<'a> {
         // the serving router, scoring the dedup-aware NIC bytes when
         // dedup is on (the router scores the identical summary) ----
         let counts = placement.traffic_matrix(kept);
-        let row_bytes = d * 4;
+        // Element size is the one knob the whole stack must agree on:
+        // the data path quantizes at the send boundary, and every cost
+        // model below (schedule pick, overlap chunker, byte accounting)
+        // charges the identical per-row wire bytes.
+        let wire = self.opts.wire;
+        let row_bytes = d * wire.elem_bytes();
         let g = self.cluster.gpus_per_node;
         // A remapped placement breaks the contiguous expert blocks the
         // hierarchical four-phase data path and the top-k dedup fold are
@@ -324,7 +331,7 @@ impl<'a> StepExecutor<'a> {
         // off until the world heals.
         let elastic = !placement.is_contiguous();
         let dedup: Option<DedupTraffic> = (self.opts.dedup && !elastic)
-            .then(|| dedup_traffic(plans.iter(), &placement, self.cluster));
+            .then(|| dedup_traffic(plans.iter(), &placement, self.cluster).with_wire(wire));
         let schedule = if elastic {
             Schedule::Flat
         } else {
@@ -353,7 +360,9 @@ impl<'a> StepExecutor<'a> {
         dispatch_span.arg("schedule", schedule.name());
         let dispatch_wire: WireBytes = match schedule {
             Schedule::Flat => {
-                ragged_dispatch_placed(self.net, &mut flat, kept, d, schedule, &placement)?;
+                ragged_dispatch_placed(
+                    self.net, &mut flat, kept, d, schedule, &placement, wire,
+                )?;
                 split_wire_bytes(&counts, row_bytes, g)
             }
             Schedule::Hierarchical => {
@@ -367,7 +376,8 @@ impl<'a> StepExecutor<'a> {
                     .opts
                     .dedup
                     .then(|| DedupMeta { rows: &metas, payloads: shards, scaled: false });
-                let leg = hier_ragged_dispatch(self.net, &mut flat, kept, d, dm.as_ref())?;
+                let leg =
+                    hier_ragged_dispatch(self.net, &mut flat, kept, d, dm.as_ref(), wire)?;
                 rows_deduped += leg.rows_saved;
                 leg.wire
             }
@@ -424,11 +434,13 @@ impl<'a> StepExecutor<'a> {
         let combine_span = trace::span("combine_data");
         let combine_wire: WireBytes = match schedule {
             Schedule::Flat => {
-                ragged_combine_placed(self.net, &mut flat, kept, d, schedule, &placement)?;
+                ragged_combine_placed(
+                    self.net, &mut flat, kept, d, schedule, &placement, wire,
+                )?;
                 split_wire_bytes(&transpose_counts(&counts), row_bytes, g)
             }
             Schedule::Hierarchical => {
-                hier_ragged_combine(self.net, &mut flat, kept, d, None)?.wire
+                hier_ragged_combine(self.net, &mut flat, kept, d, None, wire)?.wire
             }
         };
         drop(combine_span);
@@ -485,6 +497,14 @@ impl<'a> StepExecutor<'a> {
         collect_cache: bool,
         report: &mut StepReport,
     ) -> Result<(Vec<Tensor>, Vec<Option<FfnCache>>, Vec<Vec<f32>>, Schedule)> {
+        if self.opts.wire.is_compressed() {
+            // The padded baseline keeps its classic f32 buffers; wire
+            // compression is a property of the ragged exchange.
+            return Err(crate::config_err!(
+                "wire precision {} requires the ragged dispatch path",
+                self.opts.wire.name()
+            ));
+        }
         let w = self.cluster.world();
         let d = self.cfg.d_model;
         let e = self.cfg.num_experts;
@@ -567,7 +587,7 @@ impl<'a> StepExecutor<'a> {
         // only cross-node pairs touch a NIC, same-node cross-rank
         // pairs ride the node fabric.
         let (nodes, g) = (self.cluster.nodes, self.cluster.gpus_per_node);
-        let chunk_bytes = epr * cap * d * 4;
+        let chunk_bytes = epr * cap * d * F32_BYTES;
         let inter_pairs = w * w - nodes * g * g;
         let intra_pairs = nodes * g * g.saturating_sub(1);
         report.bytes_on_wire = 2 * inter_pairs * chunk_bytes;

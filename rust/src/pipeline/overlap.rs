@@ -497,6 +497,7 @@ mod tests {
             rows: vec![vec![64, 64], vec![64, 64]],
             payloads: vec![vec![32, 32], vec![32, 32]],
             heads: vec![vec![40, 40], vec![40, 40]],
+            packed_index: false,
         };
         let ranges = schedule_chunk_ranges(4, 2, Schedule::Hierarchical, 2);
         let (raw, raw_c) = chunk_comm_times(

@@ -18,6 +18,7 @@ use crate::fault::{FaultPlan, StepFaults};
 use crate::comm::hier_ragged::hier_leg_wire_bytes;
 use crate::comm::ragged::split_wire_bytes;
 use crate::comm::schedule::{transpose_counts, Schedule};
+use crate::comm::WirePrecision;
 use crate::moe::{CommImpl, StepReport};
 use crate::obs::trace;
 use crate::pipeline::{ChunkChoice, StagePlan};
@@ -44,6 +45,9 @@ pub struct ServeConfig {
     /// dedup (mirrors the training side's `MoeLayerOptions::dedup`;
     /// default on).
     pub dedup: bool,
+    /// Wire element format batches are scored and charged at (mirrors
+    /// the training side's `MoeLayerOptions::wire`; default f32).
+    pub wire: WirePrecision,
     /// Per-request latency SLO, seconds.
     pub slo: f64,
     /// Simulated seconds of offered traffic.
@@ -94,6 +98,7 @@ impl ServeConfig {
             comm: CommChoice::Auto,
             chunks: ChunkChoice::Auto,
             dedup: true,
+            wire: WirePrecision::F32,
             slo: 0.05,
             duration: 2.0,
             min_tokens: 8,
@@ -141,7 +146,7 @@ fn service_estimate_for(cfg: &ServeConfig, router: &PlacementRouter, tokens: usi
     let per = tokens.div_ceil(w);
     let kept_per_pair = (per * k).div_ceil(w);
     let counts = vec![vec![kept_per_pair; w]; w];
-    let row_bytes = cfg.moe.d_model * 4;
+    let row_bytes = cfg.moe.d_model * cfg.wire.elem_bytes();
     let (gate, layout, expert, reverse) =
         phase_times_for(cfg, k, per, per * k, router.placement().max_hosted());
     // Uniform routing: compute splits evenly across destination ranks.
@@ -231,6 +236,7 @@ impl ServeEngine {
             cfg.seed,
         )?;
         router.dedup = cfg.dedup;
+        router.wire = cfg.wire;
         router.set_dead(&dead);
         // Operator-pinned replicas install before the first batch; the
         // router rejects dead/primary/out-of-range targets.
@@ -331,7 +337,7 @@ impl ServeEngine {
         // override the real NIC bytes, so dedup charging follows the
         // router's `replicated` flag, not just the config switch.
         let dedup_live = self.cfg.dedup && !decision.replicated;
-        let row_bytes = self.cfg.moe.d_model * 4;
+        let row_bytes = self.cfg.moe.d_model * self.cfg.wire.elem_bytes();
         let g = self.cfg.cluster.gpus_per_node;
         let counts_t = transpose_counts(&decision.counts);
         let (wire_fwd, wire_cmb, rows_deduped) = match schedule {
@@ -358,7 +364,7 @@ impl ServeEngine {
         let (stage_plan, overlap) = StagePlan::for_schedule(
             &self.router.net,
             &decision.counts,
-            self.cfg.moe.d_model * 4,
+            row_bytes,
             schedule,
             self.cfg.chunks,
             &compute_per_rank,
@@ -392,6 +398,7 @@ impl ServeEngine {
                 * decision.expert_counts.iter().sum::<usize>() as f64
                 * (self.cfg.moe.d_model * self.cfg.moe.ffn_hidden) as f64,
             comm_schedule: stage_plan.schedule.name().into(),
+            wire: self.cfg.wire.name().into(),
             // Serving is forward-only: no backward legs.
             ..Default::default()
         };

@@ -34,6 +34,7 @@
 use crate::cluster::NetworkModel;
 use crate::comm::hier_ragged::{dedup_traffic, DedupTraffic};
 use crate::comm::schedule::pick_schedule_dedup;
+use crate::comm::WirePrecision;
 use crate::config::{ClusterConfig, MoeConfig};
 use crate::error::Result;
 use crate::gating::{apply_capacity, make_gate, DispatchPlan, Gate, Routing};
@@ -114,6 +115,11 @@ pub struct PlacementRouter {
     /// training side's `MoeLayerOptions::dedup` for the shared per-step
     /// decision to stay identical; both default to on).
     pub dedup: bool,
+    /// Wire element format batches are scored (and charged) at — must
+    /// match the executing layer's `MoeLayerOptions::wire` for the
+    /// shared schedule decision to see identical byte counts; both
+    /// default to f32.
+    pub wire: WirePrecision,
     /// EWMA of per-expert kept-token load.
     load_ewma: Vec<f64>,
     ewma_alpha: f64,
@@ -161,6 +167,7 @@ impl PlacementRouter {
             layer.gate_weight.clone(),
         )?;
         router.dedup = layer.opts.dedup;
+        router.wire = layer.opts.wire;
         Ok(router)
     }
 
@@ -188,6 +195,7 @@ impl PlacementRouter {
             gate_weight,
             choice,
             dedup: true,
+            wire: WirePrecision::F32,
             load_ewma: vec![0.0; e],
             ewma_alpha: 0.2,
             flat_chosen: 0,
@@ -396,12 +404,13 @@ impl PlacementRouter {
         let dedup_live = self.dedup && !replicated;
         let dedup = if dedup_live {
             dedup_traffic(shards.iter().map(|(_, p)| p), &placement, &self.cluster)
+                .with_wire(self.wire)
         } else {
             // Dedup off (or voided by replicas): skip the per-slot scan
             // — the summary is never scored and the engine ignores it.
             DedupTraffic::empty(&self.cluster)
         };
-        let row_bytes = self.cfg.d_model * 4;
+        let row_bytes = self.cfg.d_model * self.wire.elem_bytes();
         let pick = pick_schedule_dedup(
             &self.net,
             &counts,

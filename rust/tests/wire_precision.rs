@@ -1,0 +1,294 @@
+//! Wire-precision integration tests: `--wire f32` is bit-identical to
+//! the pre-PR default everywhere, bf16/f16 payload legs keep forward
+//! outputs and gradients within the encoding's tolerance of the f32
+//! run across flat/hier × dedup × chunking, the byte bill exactly
+//! halves, and a full seeded training run converges to the same place.
+
+use hetumoe::backprop::{smoothed_losses, NativeTrainer, TrainMoeLayer, TrainRunConfig};
+use hetumoe::comm::schedule::CommChoice;
+use hetumoe::comm::WirePrecision;
+use hetumoe::config::{ClusterConfig, GateKind, MoeConfig};
+use hetumoe::moe::{DispatchMode, MoeLayerOptions};
+use hetumoe::pipeline::ChunkChoice;
+use hetumoe::tensor::Tensor;
+use hetumoe::util::rng::Rng;
+
+fn small_cluster() -> ClusterConfig {
+    ClusterConfig { nodes: 2, gpus_per_node: 2, ..ClusterConfig::commodity(2) }
+}
+
+fn small_moe(gate: GateKind) -> MoeConfig {
+    MoeConfig { num_experts: 4, d_model: 16, ffn_hidden: 32, capacity_factor: 2.0, gate }
+}
+
+fn layer(opts: MoeLayerOptions, seed: u64) -> TrainMoeLayer {
+    TrainMoeLayer::native(small_moe(GateKind::TopK { k: 2 }), small_cluster(), opts, seed)
+        .unwrap()
+}
+
+fn batch(seed: u64, tokens: usize, d: usize) -> (Vec<Tensor>, Vec<Tensor>) {
+    let mut rng = Rng::seed(seed);
+    let shards = (0..4).map(|_| Tensor::randn(&[tokens, d], &mut rng)).collect();
+    let dy = (0..4).map(|_| Tensor::randn(&[tokens, d], &mut rng)).collect();
+    (shards, dy)
+}
+
+fn max_abs(ts: &[Tensor]) -> f32 {
+    ts.iter().flat_map(|t| t.data().iter()).fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+fn max_diff(a: &[Tensor], b: &[Tensor]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x.max_abs_diff(y)).fold(0.0f32, f32::max)
+}
+
+/// An explicit `--wire f32` run is bit-identical to the default option
+/// set — outputs, gradients, and every byte counter. The compressed
+/// encodings are strictly pay-to-play.
+#[test]
+fn f32_wire_bit_identical_to_default() {
+    for alltoall in [CommChoice::Flat, CommChoice::Hierarchical] {
+        let base = layer(MoeLayerOptions { alltoall, ..Default::default() }, 11);
+        let wired = layer(
+            MoeLayerOptions { alltoall, wire: WirePrecision::F32, ..Default::default() },
+            11,
+        );
+        let (shards, dy) = batch(21, 24, 16);
+        let (bo, brep, bc) = base.forward_t(&shards, 0).unwrap();
+        let (wo, wrep, wc) = wired.forward_t(&shards, 0).unwrap();
+        for (x, y) in bo.iter().zip(&wo) {
+            assert!(x.allclose(y, 0.0), "f32 wire changed forward outputs");
+        }
+        assert_eq!(brep.bytes_on_wire, wrep.bytes_on_wire);
+        assert_eq!(brep.bytes_intra_node, wrep.bytes_intra_node);
+        assert_eq!(brep.rows_deduped, wrep.rows_deduped);
+        let (bdx, bg, _) = base.backward(&shards, &dy, &bc, 0.01).unwrap();
+        let (wdx, wg, _) = wired.backward(&shards, &dy, &wc, 0.01).unwrap();
+        for (x, y) in bdx.iter().zip(&wdx) {
+            assert!(x.allclose(y, 0.0), "f32 wire changed dx");
+        }
+        for (x, y) in bg.d_gate_weight.iter().zip(&wg.d_gate_weight) {
+            assert!(x.allclose(y, 0.0), "f32 wire changed d_gate_weight");
+        }
+        for (x, y) in bg.experts.iter().zip(&wg.experts) {
+            assert!(x.dw1.allclose(&y.dw1, 0.0), "f32 wire changed dw1");
+            assert!(x.dw2.allclose(&y.dw2, 0.0), "f32 wire changed dw2");
+        }
+    }
+}
+
+/// Compressed forward outputs track the f32 run within the encoding's
+/// tolerance across schedule × dedup × chunking, quantization actually
+/// happens, and chunking never changes numerics.
+#[test]
+fn compressed_forward_within_tolerance_across_configs() {
+    let (shards, _) = batch(22, 24, 16);
+    // f32 references per schedule (dedup/chunking are numerics-neutral,
+    // asserted by the existing equivalence suites).
+    let f32_ref = |alltoall| {
+        let (o, _, _) = layer(MoeLayerOptions { alltoall, ..Default::default() }, 11)
+            .forward_t(&shards, 0)
+            .unwrap();
+        o
+    };
+    let ref_flat = f32_ref(CommChoice::Flat);
+    let scale = max_abs(&ref_flat).max(1.0);
+    for (wire, tol) in [(WirePrecision::Bf16, 0.10f32), (WirePrecision::F16, 0.03)] {
+        for alltoall in [CommChoice::Flat, CommChoice::Hierarchical] {
+            for dedup in [false, true] {
+                let mut unchunked: Option<Vec<Tensor>> = None;
+                for chunks in [ChunkChoice::Fixed(1), ChunkChoice::Auto] {
+                    let l = layer(
+                        MoeLayerOptions { alltoall, dedup, chunks, wire, ..Default::default() },
+                        11,
+                    );
+                    let (o, rep, _) = l.forward_t(&shards, 0).unwrap();
+                    let d = max_diff(&ref_flat, &o);
+                    assert!(
+                        d <= tol * scale,
+                        "{} {}/dedup={dedup}: drift {d} exceeds {tol}*{scale}",
+                        wire.name(),
+                        alltoall.name(),
+                    );
+                    assert!(d > 0.0, "{} must actually quantize", wire.name());
+                    assert_eq!(rep.wire, wire.name(), "report must carry the wire format");
+                    // Chunking is an overlap decision, never a numerics
+                    // decision — also under compressed wire.
+                    match &unchunked {
+                        None => unchunked = Some(o),
+                        Some(u) => {
+                            for (x, y) in u.iter().zip(&o) {
+                                assert!(x.allclose(y, 0.0), "chunking changed outputs");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Quantization happens uniformly at exchange entry, so flat and
+/// hierarchical forwards agree bitwise at every precision (dedup off:
+/// the payload legs are byte-for-byte the same rows).
+#[test]
+fn flat_and_hier_forward_bitwise_equal_per_precision() {
+    let (shards, _) = batch(23, 24, 16);
+    for wire in [WirePrecision::F32, WirePrecision::Bf16, WirePrecision::F16] {
+        let mk = |alltoall| {
+            layer(MoeLayerOptions { alltoall, dedup: false, wire, ..Default::default() }, 11)
+                .forward_t(&shards, 0)
+                .unwrap()
+                .0
+        };
+        let fo = mk(CommChoice::Flat);
+        let ho = mk(CommChoice::Hierarchical);
+        for (x, y) in fo.iter().zip(&ho) {
+            assert!(x.allclose(y, 0.0), "{}: flat/hier diverged", wire.name());
+        }
+    }
+}
+
+/// Compressed gradients track the f32 gradients within tolerance:
+/// gradient rows cross the wire quantized, accumulation stays f32.
+#[test]
+fn compressed_backward_within_tolerance() {
+    let (shards, dy) = batch(24, 24, 16);
+    let reference = layer(MoeLayerOptions::default(), 11);
+    let (_, _, rc) = reference.forward_t(&shards, 0).unwrap();
+    let (rdx, rg, _) = reference.backward(&shards, &dy, &rc, 0.01).unwrap();
+    let dx_scale = max_abs(&rdx).max(1.0);
+    let gw_scale = max_abs(&rg.d_gate_weight).max(1.0);
+    for (wire, tol) in [(WirePrecision::Bf16, 0.2f32), (WirePrecision::F16, 0.05)] {
+        for alltoall in [CommChoice::Flat, CommChoice::Hierarchical] {
+            for dedup in [false, true] {
+                let l = layer(
+                    MoeLayerOptions { alltoall, dedup, wire, ..Default::default() },
+                    11,
+                );
+                let (_, _, c) = l.forward_t(&shards, 0).unwrap();
+                let (dx, g, _) = l.backward(&shards, &dy, &c, 0.01).unwrap();
+                let ddx = max_diff(&rdx, &dx);
+                assert!(
+                    ddx <= tol * dx_scale,
+                    "{} {}/dedup={dedup}: dx drift {ddx} vs scale {dx_scale}",
+                    wire.name(),
+                    alltoall.name(),
+                );
+                let dgw = max_diff(&rg.d_gate_weight, &g.d_gate_weight);
+                assert!(
+                    dgw <= tol * gw_scale,
+                    "{} {}/dedup={dedup}: d_gate_weight drift {dgw} vs scale {gw_scale}",
+                    wire.name(),
+                    alltoall.name(),
+                );
+                for (a, b) in rg.experts.iter().zip(&g.experts) {
+                    let s = a.dw1.data().iter().fold(1.0f32, |m, v| m.max(v.abs()));
+                    assert!(a.dw1.max_abs_diff(&b.dw1) <= tol * s, "dw1 drift");
+                }
+            }
+        }
+    }
+}
+
+/// bf16 exactly halves the forward byte bill at the layer level (flat,
+/// no dedup: the bill is purely payload rows × row_bytes).
+#[test]
+fn bf16_exactly_halves_layer_bytes() {
+    let (shards, _) = batch(25, 24, 16);
+    let rep_of = |wire| {
+        layer(
+            MoeLayerOptions {
+                alltoall: CommChoice::Flat,
+                dedup: false,
+                wire,
+                ..Default::default()
+            },
+            11,
+        )
+        .forward_t(&shards, 0)
+        .unwrap()
+        .1
+    };
+    let r32 = rep_of(WirePrecision::F32);
+    let rbf = rep_of(WirePrecision::Bf16);
+    let rhf = rep_of(WirePrecision::F16);
+    assert!(r32.bytes_on_wire > 0);
+    assert_eq!(r32.bytes_on_wire, 2 * rbf.bytes_on_wire);
+    assert_eq!(r32.bytes_intra_node, 2 * rbf.bytes_intra_node);
+    assert_eq!(rbf.bytes_on_wire, rhf.bytes_on_wire);
+}
+
+/// The compressed wire requires the ragged data path: padded dispatch
+/// has no quantization boundary and must refuse loudly, not silently
+/// bill the wrong bytes.
+#[test]
+fn padded_dispatch_rejects_compressed_wire() {
+    let l = layer(
+        MoeLayerOptions {
+            dispatch: DispatchMode::Padded,
+            wire: WirePrecision::Bf16,
+            ..Default::default()
+        },
+        11,
+    );
+    let (shards, _) = batch(26, 16, 16);
+    assert!(l.forward_t(&shards, 0).is_err(), "padded + bf16 must be a config error");
+}
+
+fn train_cfg(wire: WirePrecision) -> TrainRunConfig {
+    TrainRunConfig {
+        moe: small_moe(GateKind::Switch),
+        cluster: small_cluster(),
+        opts: MoeLayerOptions { wire, ..Default::default() },
+        steps: 220,
+        tokens_per_rank: 32,
+        num_classes: 4,
+        lr: 3e-3,
+        aux_coef: 1e-2,
+        noise: 0.3,
+        seed: 0,
+        log_every: 0,
+        faults: hetumoe::fault::FaultPlan::none(),
+        ckpt_every: 0,
+        ckpt_dir: None,
+        ..TrainRunConfig::default_run()
+    }
+}
+
+/// The end-to-end guarantee: a 200+-step seeded run over the bf16 wire
+/// still converges — smoothed loss strictly decreases across the same
+/// checkpoints as the f32 curve and lands within tolerance of it — and
+/// the whole-run byte bill (fwd and bwd) is exactly half.
+#[test]
+fn bf16_training_converges_like_f32_at_half_the_bytes() {
+    let mut t32 = NativeTrainer::new(train_cfg(WirePrecision::F32)).unwrap();
+    let s32 = t32.run().unwrap();
+    let mut tbf = NativeTrainer::new(train_cfg(WirePrecision::Bf16)).unwrap();
+    let sbf = tbf.run().unwrap();
+
+    let smooth32 = smoothed_losses(&t32.losses(), 0.1);
+    let smoothbf = smoothed_losses(&tbf.losses(), 0.1);
+    for w in [20usize, 70, 120, 170, 219].windows(2) {
+        assert!(
+            smoothbf[w[1]] < smoothbf[w[0]],
+            "bf16 smoothed loss must strictly decrease: {} vs {}",
+            smoothbf[w[0]],
+            smoothbf[w[1]]
+        );
+    }
+    let (f32_final, bf_final) = (smooth32[219], smoothbf[219]);
+    assert!(
+        (bf_final - f32_final).abs() <= 0.25 * f32_final.abs().max(0.1),
+        "bf16 final smoothed loss {bf_final} strays from f32's {f32_final}"
+    );
+
+    // Whole-run mean byte counters: exactly half on both directions.
+    let (b32, bbf) = (s32.breakdown, sbf.breakdown);
+    assert!(b32.bytes_on_wire > 0.0 && b32.bytes_on_wire_bwd > 0.0);
+    assert!((b32.bytes_on_wire - 2.0 * bbf.bytes_on_wire).abs() < 1e-6 * b32.bytes_on_wire);
+    assert!(
+        (b32.bytes_on_wire_bwd - 2.0 * bbf.bytes_on_wire_bwd).abs()
+            < 1e-6 * b32.bytes_on_wire_bwd
+    );
+    assert_eq!(bbf.wire, "bf16");
+}
