@@ -17,7 +17,7 @@ use crate::backprop::adam::Adam;
 use crate::backprop::layer::TrainMoeLayer;
 use crate::ckpt;
 use crate::cluster::{ExpertPlacement, LinkKind, Timeline};
-use crate::comm::allreduce;
+use crate::comm::{allreduce, F32_BYTES};
 use crate::config::{ClusterConfig, GateKind, MoeConfig};
 use crate::coordinator::metrics::{Breakdown, MetricsAgg};
 use crate::data::ClusterTask;
@@ -642,7 +642,7 @@ impl NativeTrainer {
                 let (_, vv) = self.opt.moments(3 + 4 * m.expert + slot);
                 payload.extend_from_slice(vv);
             }
-            debug_assert_eq!(payload.len() * 4, per_bytes);
+            debug_assert_eq!(payload.len() * F32_BYTES, per_bytes);
             // Deserialize at the new owner — bitwise, so the loss
             // trajectory is untouched by construction.
             let mut off = 0usize;

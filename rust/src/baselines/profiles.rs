@@ -2,6 +2,7 @@
 
 use crate::cluster::{GpuModel, NetworkModel};
 use crate::comm::alltoall::flat_alltoall_timing;
+use crate::comm::F32_BYTES_F;
 use crate::comm::hierarchical::hierarchical_alltoall_timing;
 use crate::config::{ClusterConfig, GateKind, MoeConfig};
 use crate::comm::schedule::CommChoice;
@@ -195,8 +196,8 @@ pub fn sim_step(
 
     // --- gate: score matmul + top-k kernel chain ---
     let score_flops = 2.0 * t * d * e;
-    let topk_bytes = t * e * 4.0 * profile.topk_slowdown;
-    let gate_time = gpu.kernel_time(score_flops, t * (d + e) * 4.0, 1)
+    let topk_bytes = t * e * F32_BYTES_F * profile.topk_slowdown;
+    let gate_time = gpu.kernel_time(score_flops, t * (d + e) * F32_BYTES_F, 1)
         + gpu.memory_time(topk_bytes, profile.gate_launches);
 
     // --- layout transform (dispatch) ---
@@ -204,18 +205,18 @@ pub fn sim_step(
         LayoutImpl::DenseEinsum => {
             // onehot [E*cap, T] · tokens [T, d] — real matmul flops.
             let flops = 2.0 * (e * cap) * t * d;
-            gpu.kernel_time(flops, (e * cap * d + t * d) * 4.0, profile.layout_launches)
+            gpu.kernel_time(flops, (e * cap * d + t * d) * F32_BYTES_F, profile.layout_launches)
         }
         _ => {
             // Scatter: read + write each routed row once.
-            let bytes = 2.0 * t * k * d * 4.0 * profile.layout_slowdown;
+            let bytes = 2.0 * t * k * d * F32_BYTES_F * profile.layout_slowdown;
             gpu.memory_time(bytes, profile.layout_launches)
         }
     };
 
     // --- AllToAll (dispatch + combine) ---
     // Per-rank payload: full padded dispatch buffer [E, cap, d] f32.
-    let payload_bytes = (e * cap * d * 4.0) as usize;
+    let payload_bytes = (e * cap * d * F32_BYTES_F) as usize;
     let chunk = payload_bytes / w;
     let a2a_once = match profile.comm_impl {
         CommImpl::Flat => flat_alltoall_timing(&net, chunk).total,
@@ -228,7 +229,7 @@ pub fn sim_step(
     let expert_flops = 4.0 * (e * cap) * d * h / profile.expert_gemm_eff;
     let expert_time = gpu.kernel_time(
         expert_flops,
-        (e * cap) * (d + h) * 4.0,
+        (e * cap) * (d + h) * F32_BYTES_F,
         2 * (moe.num_experts / w.max(1)).max(1),
     );
 
@@ -236,10 +237,10 @@ pub fn sim_step(
     let reverse_time = match profile.layout_impl {
         LayoutImpl::DenseEinsum => {
             let flops = 2.0 * t * (e * cap) * d;
-            gpu.kernel_time(flops, (e * cap * d + t * d) * 4.0, profile.layout_launches)
+            gpu.kernel_time(flops, (e * cap * d + t * d) * F32_BYTES_F, profile.layout_launches)
         }
         _ => gpu.memory_time(
-            2.0 * t * k * d * 4.0 * profile.layout_slowdown,
+            2.0 * t * k * d * F32_BYTES_F * profile.layout_slowdown,
             profile.layout_launches,
         ),
     };

@@ -74,7 +74,7 @@ use crate::error::Result;
 use crate::gating::DispatchPlan;
 use crate::obs::trace;
 use crate::tensor::Tensor;
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Wire overhead per logical row of a deduplicated dispatch block: a
 /// `u32` payload index plus the `f32` expansion scale (the slot's
@@ -672,7 +672,7 @@ pub fn hier_ragged_dispatch(
             let mut payload_rows = 0usize;
             if sn != dn {
                 if let Some(meta) = dedup {
-                    let mut seen: HashSet<(u32, u32)> = HashSet::new();
+                    let mut seen: BTreeSet<(u32, u32)> = BTreeSet::new();
                     for dl in 0..g {
                         let r = dn * g + dl;
                         for le in 0..epr {
@@ -912,7 +912,7 @@ pub fn hier_ragged_combine(
                 // sequentially in slot (run-rank) order — the exact
                 // addition sequence the flat path's per-slot
                 // accumulation performs.
-                let mut runs: HashMap<(u32, u32), Vec<(u32, usize)>> = HashMap::new();
+                let mut runs: BTreeMap<(u32, u32), Vec<(u32, usize)>> = BTreeMap::new();
                 for (k, &(s, row, _)) in entries.iter().enumerate() {
                     let head = meta.rows[s].run_head[row];
                     runs.entry((s as u32, head))

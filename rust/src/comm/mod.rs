@@ -29,7 +29,7 @@ pub use hier_ragged::{
     DedupTraffic, HierLeg, PresumMeta, RowMeta,
 };
 pub use hierarchical::hierarchical_alltoall;
-pub use precision::{WirePrecision, F32_BYTES};
+pub use precision::{WirePrecision, F32_BYTES, F32_BYTES_F};
 pub use ragged::{
     ragged_combine, ragged_combine_placed, ragged_dispatch, ragged_dispatch_placed,
     split_wire_bytes,

@@ -23,6 +23,10 @@ use crate::error::Result;
 /// stays full-precision regardless of the wire mode.
 pub const F32_BYTES: usize = 4;
 
+/// [`F32_BYTES`] as `f64`, for the analytical cost models that work in
+/// fractional milliseconds/bytes.
+pub const F32_BYTES_F: f64 = F32_BYTES as f64;
+
 /// On-wire element format of the dispatch/combine payload legs.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum WirePrecision {

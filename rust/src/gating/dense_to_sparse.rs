@@ -182,7 +182,7 @@ mod tests {
             let argmax = w
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0;
             if argmax == t % 4 {

@@ -13,7 +13,7 @@
 //! implementation so results are bit-identical and testable.
 
 use crate::tensor::Tensor;
-use crate::util::threadpool::parallel_for_chunks;
+use crate::util::threadpool::parallel_rows_mut2;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -159,23 +159,10 @@ pub fn topk_rows(scores: &Tensor, k: usize, threads: usize) -> (Vec<u32>, Vec<f3
     assert!(k >= 1 && k <= e, "k={k} out of range for E={e}");
     let mut ids = vec![0u32; tokens * k];
     let mut vals = vec![0.0f32; tokens * k];
-    let ids_ptr = ids.as_mut_ptr() as usize;
-    let vals_ptr = vals.as_mut_ptr() as usize;
-    let body = |range: std::ops::Range<usize>| {
-        // SAFETY: disjoint row ranges → disjoint output slices.
-        let ids_out = unsafe {
-            std::slice::from_raw_parts_mut(
-                (ids_ptr as *mut u32).add(range.start * k),
-                range.len() * k,
-            )
-        };
-        let vals_out = unsafe {
-            std::slice::from_raw_parts_mut(
-                (vals_ptr as *mut f32).add(range.start * k),
-                range.len() * k,
-            )
-        };
-        for (local, t) in range.clone().enumerate() {
+    // Shard rows: each thread owns a disjoint `&mut` chunk of both
+    // output buffers.
+    parallel_rows_mut2(&mut ids, &mut vals, k, k, threads, |range, ids_out, vals_out| {
+        for (local, t) in range.enumerate() {
             let row = scores.row(t);
             let o = local * k;
             match k {
@@ -192,12 +179,7 @@ pub fn topk_rows(scores: &Tensor, k: usize, threads: usize) -> (Vec<u32>, Vec<f3
                 _ => topk_select_row(row, k, &mut ids_out[o..o + k], &mut vals_out[o..o + k]),
             }
         }
-    };
-    if threads <= 1 {
-        body(0..tokens);
-    } else {
-        parallel_for_chunks(tokens, threads, body);
-    }
+    });
     (ids, vals)
 }
 
@@ -232,9 +214,7 @@ mod tests {
     fn reference_topk(row: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
         // Sort by (value desc, index asc) — the specification.
         let mut idx: Vec<usize> = (0..row.len()).collect();
-        idx.sort_by(|&a, &b| {
-            row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b))
-        });
+        idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
         let ids = idx[..k].iter().map(|&i| i as u32).collect();
         let vals = idx[..k].iter().map(|&i| row[i]).collect();
         (ids, vals)

@@ -23,7 +23,7 @@
 use crate::error::Result;
 use crate::gating::DispatchPlan;
 use crate::tensor::Tensor;
-use crate::util::threadpool::parallel_for_chunks;
+use crate::util::threadpool::parallel_rows_mut;
 
 /// Padding-free expert-major buffer: row `offsets[e] + p` holds the
 /// `p`-th token accepted by expert `e`; there are no other rows.
@@ -69,9 +69,12 @@ impl RaggedLayoutBuffer {
     }
 }
 
-/// Forward ragged transform: single scatter pass, no zero-fill at all
-/// (every destination row is written exactly once — FCFS packs each
-/// expert's block 0..kept[e], and the blocks tile 0..occupied).
+/// Forward ragged transform: invert the plan's destination slots into a
+/// per-row source map (every ragged row carries a real token — FCFS
+/// packs each expert's block 0..kept[e] and the blocks tile
+/// 0..occupied), then gather rows. `threads > 1` shards the ragged rows
+/// into disjoint `&mut` chunks, so the parallel path needs no aliasing
+/// tricks.
 pub fn ragged_layout(
     tokens: &Tensor,
     plan: &DispatchPlan,
@@ -81,38 +84,28 @@ pub fn ragged_layout(
     debug_assert_eq!(tokens.rows(), plan.tokens);
     let offsets = plan.ragged_offsets();
     let rows = plan.occupied_rows();
-    let mut data: Vec<f32> = Vec::with_capacity(rows * d);
-    #[allow(clippy::uninit_vec)]
-    // SAFETY: every element is written exactly once by the scatter below.
-    unsafe {
-        data.set_len(rows * d);
-    }
-    let mut out = Tensor::from_vec(data, &[rows, d]).expect("sized above");
-    let out_ptr = out.data_mut().as_mut_ptr() as usize;
     let k = plan.k;
     let cap = plan.capacity;
-    let body = |range: std::ops::Range<usize>| {
-        // SAFETY: dest rows are unique across the plan (enforced by
-        // apply_capacity) and the padded→ragged row map is injective,
-        // so concurrent writes never alias.
-        let out_slice =
-            unsafe { std::slice::from_raw_parts_mut(out_ptr as *mut f32, rows * d) };
-        for t in range {
-            let src = tokens.row(t);
-            for j in 0..k {
-                let dest = plan.dest[t * k + j];
-                if dest != u32::MAX {
-                    let o = RaggedLayoutBuffer::ragged_row(&offsets, cap, dest as usize) * d;
-                    out_slice[o..o + d].copy_from_slice(src);
-                }
+    // Invert the padded→ragged row map: src_of[ragged row] = token. The
+    // map is injective over kept dests, so one serial pass fills every
+    // row exactly once.
+    let mut src_of = vec![u32::MAX; rows];
+    for t in 0..plan.tokens {
+        for j in 0..k {
+            let dest = plan.dest[t * k + j];
+            if dest != u32::MAX {
+                let row = RaggedLayoutBuffer::ragged_row(&offsets, cap, dest as usize);
+                src_of[row] = t as u32;
             }
         }
-    };
-    if threads <= 1 {
-        body(0..plan.tokens);
-    } else {
-        parallel_for_chunks(plan.tokens, threads, body);
     }
+    debug_assert!(src_of.iter().all(|&s| s != u32::MAX), "ragged rows tile 0..occupied");
+    let mut out = Tensor::zeros(&[rows, d]);
+    parallel_rows_mut(out.data_mut(), d, threads, |range, chunk| {
+        for (off, r) in range.enumerate() {
+            chunk[off * d..(off + 1) * d].copy_from_slice(tokens.row(src_of[r] as usize));
+        }
+    });
     RaggedLayoutBuffer { data: out, offsets, counts: plan.kept.clone() }
 }
 
@@ -127,15 +120,9 @@ pub fn ragged_reverse_layout(
     let k = plan.k;
     let cap = plan.capacity;
     let mut out = Tensor::zeros(&[plan.tokens, d]);
-    let out_ptr = out.data_mut().as_mut_ptr() as usize;
-    let body = |range: std::ops::Range<usize>| {
-        // SAFETY: token chunks are disjoint, each output row is owned by
-        // exactly one chunk.
-        let out_slice = unsafe {
-            std::slice::from_raw_parts_mut(out_ptr as *mut f32, plan.tokens * d)
-        };
-        for t in range {
-            let dst = &mut out_slice[t * d..(t + 1) * d];
+    parallel_rows_mut(out.data_mut(), d, threads, |range, chunk| {
+        for (off, t) in range.enumerate() {
+            let dst = &mut chunk[off * d..(off + 1) * d];
             for j in 0..k {
                 let slot = t * k + j;
                 let dest = plan.dest[slot];
@@ -151,12 +138,7 @@ pub fn ragged_reverse_layout(
                 }
             }
         }
-    };
-    if threads <= 1 {
-        body(0..plan.tokens);
-    } else {
-        parallel_for_chunks(plan.tokens, threads, body);
-    }
+    });
     out
 }
 

@@ -2,7 +2,7 @@
 
 use crate::gating::DispatchPlan;
 use crate::tensor::Tensor;
-use crate::util::threadpool::parallel_for_chunks;
+use crate::util::threadpool::parallel_rows_mut;
 
 /// The padded expert-major buffer `[E*C, d]` produced by the forward
 /// transform. Row `e*C + p` holds the `p`-th token accepted by expert
@@ -62,55 +62,38 @@ pub fn scatter_expert_slices(
     }
 }
 
-/// HetuMoE's optimized layout transform: single scatter pass driven by
-/// the precomputed destinations in the [`DispatchPlan`]. `threads > 1`
-/// shards the token dimension (destinations are unique, so scatters are
-/// race-free).
+/// HetuMoE's optimized layout transform: invert the precomputed
+/// destinations in the [`DispatchPlan`] into a per-destination source
+/// map, then gather each buffer row from its token. `threads > 1`
+/// shards the destination-row dimension into disjoint `&mut` chunks, so
+/// the parallel path needs no aliasing tricks: every thread owns the
+/// rows it writes.
 pub fn opt_layout(tokens: &Tensor, plan: &DispatchPlan, threads: usize) -> LayoutBuffer {
     let d = tokens.row_len();
     debug_assert_eq!(tokens.rows(), plan.tokens);
-    // Perf (§Perf L3-2b): don't zero-fill the whole buffer and then
-    // overwrite 80% of it — allocate uninitialized, scatter the occupied
-    // rows, and zero only the padding tail of each expert (FCFS
-    // guarantees rows 0..kept[e] are each written exactly once).
     let rows = plan.buffer_rows();
-    let mut data: Vec<f32> = Vec::with_capacity(rows * d);
-    #[allow(clippy::uninit_vec)]
-    // SAFETY: every element is written exactly once below — occupied rows
-    // by the scatter loop, padding rows by the zeroing loop.
-    unsafe {
-        data.set_len(rows * d);
-    }
-    for e in 0..plan.num_experts {
-        let lo = (e * plan.capacity + plan.kept[e]) * d;
-        let hi = (e + 1) * plan.capacity * d;
-        data[lo..hi].fill(0.0);
-    }
-    let mut out = Tensor::from_vec(data, &[rows, d]).expect("sized above");
-    let out_ptr = out.data_mut().as_mut_ptr() as usize;
     let k = plan.k;
-    let body = |range: std::ops::Range<usize>| {
-        // SAFETY: every dest row is unique across the whole plan
-        // (enforced by apply_capacity), so concurrent writes never alias.
-        let out_slice = unsafe {
-            std::slice::from_raw_parts_mut(out_ptr as *mut f32, plan.buffer_rows() * d)
-        };
-        for t in range {
-            let src = tokens.row(t);
-            for j in 0..k {
-                let dest = plan.dest[t * k + j];
-                if dest != u32::MAX {
-                    let o = dest as usize * d;
-                    out_slice[o..o + d].copy_from_slice(src);
-                }
+    // Invert dest[t*k+j] = buffer row → src_of[row] = token. Every kept
+    // dest is unique (enforced by apply_capacity), so the serial fill is
+    // one pass; u32::MAX marks padding rows.
+    let mut src_of = vec![u32::MAX; rows];
+    for t in 0..plan.tokens {
+        for j in 0..k {
+            let dest = plan.dest[t * k + j];
+            if dest != u32::MAX {
+                src_of[dest as usize] = t as u32;
             }
         }
-    };
-    if threads <= 1 {
-        body(0..plan.tokens);
-    } else {
-        parallel_for_chunks(plan.tokens, threads, body);
     }
+    let mut out = Tensor::zeros(&[rows, d]);
+    parallel_rows_mut(out.data_mut(), d, threads, |range, chunk| {
+        for (off, r) in range.enumerate() {
+            let src = src_of[r];
+            if src != u32::MAX {
+                chunk[off * d..(off + 1) * d].copy_from_slice(tokens.row(src as usize));
+            }
+        }
+    });
     LayoutBuffer { data: out, capacity: plan.capacity, num_experts: plan.num_experts }
 }
 
@@ -155,13 +138,9 @@ pub fn reverse_layout(buffer: &LayoutBuffer, plan: &DispatchPlan, threads: usize
     let d = buffer.data.row_len();
     let k = plan.k;
     let mut out = Tensor::zeros(&[plan.tokens, d]);
-    let out_ptr = out.data_mut().as_mut_ptr() as usize;
-    let body = |range: std::ops::Range<usize>| {
-        let out_slice = unsafe {
-            std::slice::from_raw_parts_mut(out_ptr as *mut f32, plan.tokens * d)
-        };
-        for t in range {
-            let dst = &mut out_slice[t * d..(t + 1) * d];
+    parallel_rows_mut(out.data_mut(), d, threads, |range, chunk| {
+        for (off, t) in range.enumerate() {
+            let dst = &mut chunk[off * d..(off + 1) * d];
             for j in 0..k {
                 let slot = t * k + j;
                 let dest = plan.dest[slot];
@@ -175,12 +154,7 @@ pub fn reverse_layout(buffer: &LayoutBuffer, plan: &DispatchPlan, threads: usize
                 }
             }
         }
-    };
-    if threads <= 1 {
-        body(0..plan.tokens);
-    } else {
-        parallel_for_chunks(plan.tokens, threads, body);
-    }
+    });
     out
 }
 

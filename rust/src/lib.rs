@@ -40,6 +40,11 @@
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-figure reproductions.
 
+// The whole simulator is safe Rust: parallel kernels carve disjoint
+// `&mut` row chunks via `util::threadpool` instead of raw-pointer
+// scatter. Enforced here (and spot-checked by `cargo x analysis`).
+#![forbid(unsafe_code)]
+
 pub mod backprop;
 pub mod baselines;
 pub mod benchkit;

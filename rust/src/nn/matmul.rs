@@ -6,7 +6,7 @@
 //! across scoped threads for the coordinator's batch-level calls.
 
 use crate::tensor::Tensor;
-use crate::util::threadpool::parallel_for_chunks;
+use crate::util::threadpool::parallel_rows_mut;
 
 /// Cache block size over the reduction dimension.
 const KB: usize = 64;
@@ -21,7 +21,8 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
 }
 
 /// Accumulating kernel over a row range (used by both serial and parallel
-/// front-ends). `c` must already be initialized for the rows in `rows`.
+/// front-ends). `c` holds rows `rows` of the output, rebased to row 0,
+/// and must already be initialized.
 fn matmul_accumulate(
     a: &[f32],
     b: &[f32],
@@ -31,11 +32,12 @@ fn matmul_accumulate(
     n: usize,
     rows: std::ops::Range<usize>,
 ) {
+    let base = rows.start;
     for kb in (0..k).step_by(KB) {
         let ke = (kb + KB).min(k);
         for i in rows.clone() {
             let arow = &a[i * k..i * k + k];
-            let crow = &mut c[i * n..i * n + n];
+            let crow = &mut c[(i - base) * n..(i - base) * n + n];
             for kk in kb..ke {
                 let aik = arow[kk];
                 if aik == 0.0 {
@@ -67,36 +69,9 @@ pub fn matmul_par(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
     assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
     let mut out = Tensor::zeros(&[m, n]);
     let (adata, bdata) = (a.data(), b.data());
-    // Shard output rows; each chunk writes a disjoint region. We use
-    // raw pointer arithmetic through a usize to sidestep &mut aliasing
-    // across scoped threads (regions are provably disjoint).
-    let cptr = out.data_mut().as_mut_ptr() as usize;
-    parallel_for_chunks(m, threads, |range| {
-        let lo = range.start;
-        let hi = range.end;
-        // SAFETY: chunks are disjoint row ranges of the output buffer.
-        let cslice = unsafe {
-            std::slice::from_raw_parts_mut((cptr as *mut f32).add(lo * n), (hi - lo) * n)
-        };
-        cslice.fill(0.0);
-        // Build a local view where row indices are rebased to 0.
-        for kb in (0..k).step_by(KB) {
-            let ke = (kb + KB).min(k);
-            for i in lo..hi {
-                let arow = &adata[i * k..i * k + k];
-                let crow = &mut cslice[(i - lo) * n..(i - lo) * n + n];
-                for kk in kb..ke {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &bdata[kk * n..kk * n + n];
-                    for j in 0..n {
-                        crow[j] += aik * brow[j];
-                    }
-                }
-            }
-        }
+    // Shard output rows: each chunk is a disjoint `&mut` row slice.
+    parallel_rows_mut(out.data_mut(), n, threads, |range, cslice| {
+        matmul_accumulate(adata, bdata, cslice, m, k, n, range);
     });
     out
 }
@@ -221,15 +196,7 @@ pub fn matmul_tn_par(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
     assert_eq!(l, l2, "matmul_tn row dims: {l} vs {l2}");
     let mut out = Tensor::zeros(&[m, n]);
     let (adata, bdata) = (a.data(), b.data());
-    let cptr = out.data_mut().as_mut_ptr() as usize;
-    parallel_for_chunks(m, threads, |range| {
-        // SAFETY: chunks are disjoint row ranges of the output buffer.
-        let cslice = unsafe {
-            std::slice::from_raw_parts_mut(
-                (cptr as *mut f32).add(range.start * n),
-                (range.end - range.start) * n,
-            )
-        };
+    parallel_rows_mut(out.data_mut(), n, threads, |range, cslice| {
         matmul_tn_range(adata, bdata, cslice, l, m, n, range);
     });
     out
@@ -255,15 +222,7 @@ pub fn matmul_nt_par(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
     assert_eq!(l, l2, "matmul_nt inner dims: {l} vs {l2}");
     let mut out = Tensor::zeros(&[m, n]);
     let (adata, bdata) = (a.data(), b.data());
-    let cptr = out.data_mut().as_mut_ptr() as usize;
-    parallel_for_chunks(m, threads, |range| {
-        // SAFETY: chunks are disjoint row ranges of the output buffer.
-        let cslice = unsafe {
-            std::slice::from_raw_parts_mut(
-                (cptr as *mut f32).add(range.start * n),
-                (range.end - range.start) * n,
-            )
-        };
+    parallel_rows_mut(out.data_mut(), n, threads, |range, cslice| {
         matmul_nt_range(adata, bdata, cslice, l, n, range);
     });
     out

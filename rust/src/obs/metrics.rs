@@ -20,7 +20,7 @@
 
 use crate::benchkit::{bench, black_box, BenchOpts, Table};
 use crate::comm::schedule::CommChoice;
-use crate::comm::WirePrecision;
+use crate::comm::{WirePrecision, F32_BYTES};
 use crate::config::{ClusterConfig, GateKind, MoeConfig};
 use crate::error::Result;
 use crate::moe::{DispatchMode, MoeLayer, MoeLayerOptions};
@@ -336,7 +336,7 @@ fn fig14_placement() -> Result<Json> {
         capacity_factor: 4.0,
         gate: GateKind::Switch,
     };
-    let row_bytes = d * 4;
+    let row_bytes = d * F32_BYTES;
     let mut r_static = PlacementRouter::new(cfg.clone(), cluster.clone(), CommChoice::Auto, 14)?;
     // Skewed batch on the co-located pair (0, 1): tokens cluster around
     // their gate columns (fig14's construction, pinned).

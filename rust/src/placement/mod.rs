@@ -36,6 +36,7 @@
 
 use crate::cluster::{ExpertPlacement, NetworkModel};
 use crate::comm::schedule::{pick_schedule, CommChoice};
+use crate::comm::F32_BYTES;
 use crate::error::Result;
 use std::collections::VecDeque;
 
@@ -453,7 +454,7 @@ impl PlacementOptimizer {
 /// of every parameter cross the wire.
 pub fn migration_bytes_per_expert(d_model: usize, ffn_hidden: usize) -> usize {
     let params = d_model * ffn_hidden + ffn_hidden + ffn_hidden * d_model + d_model;
-    params * 4 * 3
+    params * F32_BYTES * 3
 }
 
 /// Directional per-node NIC peak of an *actual* integer rank traffic

@@ -18,7 +18,7 @@ use crate::fault::{FaultPlan, StepFaults};
 use crate::comm::hier_ragged::hier_leg_wire_bytes;
 use crate::comm::ragged::split_wire_bytes;
 use crate::comm::schedule::{transpose_counts, Schedule};
-use crate::comm::WirePrecision;
+use crate::comm::{WirePrecision, F32_BYTES_F};
 use crate::moe::{CommImpl, StepReport};
 use crate::obs::trace;
 use crate::pipeline::{ChunkChoice, StagePlan};
@@ -181,16 +181,16 @@ fn phase_times_for(
     let k = gate_k as f64;
     let t = shard_tokens as f64;
     let rows = rank_rows as f64;
-    let gate = gpu.kernel_time(2.0 * t * d * e, t * (d + e) * 4.0, 1)
-        + gpu.memory_time(t * e * 4.0, 3);
-    let layout = gpu.memory_time(2.0 * t * k * d * 4.0, 1);
+    let gate = gpu.kernel_time(2.0 * t * d * e, t * (d + e) * F32_BYTES_F, 1)
+        + gpu.memory_time(t * e * F32_BYTES_F, 3);
+    let layout = gpu.memory_time(2.0 * t * k * d * F32_BYTES_F, 1);
     let experts_per_rank = experts_per_rank.max(1);
     let expert = gpu.kernel_time(
         4.0 * rows * d * h,
-        rows * (d + h) * 4.0,
+        rows * (d + h) * F32_BYTES_F,
         2 * experts_per_rank,
     );
-    let reverse = gpu.memory_time(2.0 * t * k * d * 4.0, 1);
+    let reverse = gpu.memory_time(2.0 * t * k * d * F32_BYTES_F, 1);
     (gate, layout, expert, reverse)
 }
 

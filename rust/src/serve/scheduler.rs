@@ -134,18 +134,15 @@ impl ContinuousBatcher {
             tokens += take;
         }
         while tokens < self.cfg.max_batch_tokens {
-            let take = match self.queue.front() {
-                Some(front) => front
-                    .tokens
-                    .min(self.cfg.chunk_tokens)
-                    .min(self.cfg.max_batch_tokens - tokens),
-                None => break,
-            };
+            let Some(req) = self.queue.pop_front() else { break };
+            let take = req
+                .tokens
+                .min(self.cfg.chunk_tokens)
+                .min(self.cfg.max_batch_tokens - tokens);
             // `take == 0` here only for a zero-token request (the chunk
             // and remaining budget are both >= 1): admit it anyway so
             // `complete` retires it this iteration instead of letting it
             // block the queue head until its deadline.
-            let req = self.queue.pop_front().unwrap();
             self.stats.admitted += 1;
             entries.push((req.id, take));
             tokens += take;

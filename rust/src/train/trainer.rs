@@ -8,6 +8,7 @@
 //! inputs itself (`buffer_from_host_buffer` → owned `PjRtBuffer`s with
 //! correct `Drop`) and runs `execute_b`, which only borrows them.
 
+use crate::comm::F32_BYTES;
 use crate::config::TrainConfig;
 use crate::data::{BatchIter, SyntheticLm};
 use crate::error::{HetuError, Result};
@@ -184,10 +185,11 @@ impl Trainer {
             )));
         }
         for p in self.params.iter_mut() {
-            let mut bytes = vec![0u8; p.data.len() * 4];
+            let mut bytes = vec![0u8; p.data.len() * F32_BYTES];
             f.read_exact(&mut bytes)?;
             for (i, v) in p.data.iter_mut().enumerate() {
-                *v = f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+                let at = i * F32_BYTES;
+                *v = f32::from_le_bytes(bytes[at..at + F32_BYTES].try_into().unwrap());
             }
         }
         Ok(())

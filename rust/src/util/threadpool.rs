@@ -1,236 +1,36 @@
-//! A small scoped thread pool.
+//! Scoped data-parallel helpers.
 //!
-//! `rayon`/`tokio` are not vendored in this environment, so the coordinator,
-//! the optimized layout-transform kernels and the pipeline's per-expert FFN
-//! stage use this pool: fixed worker threads, a shared FIFO injector queue,
-//! and a scoped [`ThreadPool::parallel_for`] that borrows from the caller's
-//! stack (the call blocks on a completion latch, so the borrow outlives
-//! every job).
+//! `rayon`/`tokio` are not vendored in this environment, so the
+//! coordinator, the optimized layout-transform kernels and the
+//! pipeline's per-expert FFN stage parallelize through these free
+//! functions. Everything is built on `std::thread::scope`, so closures
+//! borrow from the caller's stack with no `unsafe` and no lifetime
+//! erasure, and every call returns only after all spawned work joined.
+//!
+//! Output splitting goes through [`parallel_rows_mut`] /
+//! [`parallel_rows_mut2`]: disjoint `&mut` row chunks carved with
+//! `chunks_mut`, which replaces the raw-pointer scatter the layout and
+//! top-k kernels used to do. Chunk boundaries are identical to
+//! [`parallel_for_chunks`] (`per = rows.div_ceil(chunks)`), so the
+//! parallel kernels stay bit-identical to their serial forms.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::thread;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-struct Shared {
-    queue: Mutex<VecDeque<Job>>,
-    cv: Condvar,
-    shutdown: Mutex<bool>,
-}
-
-/// Fixed-size thread pool with FIFO job execution (submission order).
-pub struct ThreadPool {
-    shared: Arc<Shared>,
-    workers: Vec<thread::JoinHandle<()>>,
-    size: usize,
-}
-
-impl ThreadPool {
-    /// Create a pool with `size` worker threads (min 1).
-    pub fn new(size: usize) -> Self {
-        let size = size.max(1);
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
-            shutdown: Mutex::new(false),
-        });
-        let mut workers = Vec::with_capacity(size);
-        for i in 0..size {
-            let sh = Arc::clone(&shared);
-            workers.push(
-                thread::Builder::new()
-                    .name(format!("hetu-worker-{i}"))
-                    .spawn(move || worker_loop(sh))
-                    .expect("spawn worker"),
-            );
-        }
-        ThreadPool { shared, workers, size }
-    }
-
-    /// Pool with one worker per available core.
-    pub fn with_cores() -> Self {
-        ThreadPool::new(available_parallelism())
-    }
-
-    /// Number of worker threads.
-    pub fn size(&self) -> usize {
-        self.size
-    }
-
-    /// Submit a job (fire and forget). Jobs run in submission order
-    /// (FIFO) — chunked pipeline stages rely on early-submitted chunk
-    /// jobs not being starved by later ones.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        let mut q = self.shared.queue.lock().unwrap();
-        q.push_back(Box::new(f));
-        drop(q);
-        self.shared.cv.notify_one();
-    }
-
-    /// Scoped data-parallel for: runs `f(i)` for every `i in 0..n` on
-    /// the pool's workers and returns once all indices completed. `f`
-    /// may borrow from the caller's stack — the call blocks on a
-    /// completion latch, so the borrow outlives every job. Indices are
-    /// claimed atomically, so work stays balanced under uneven job
-    /// sizes. Must not be called from inside a pool job (a waiting
-    /// inner call could deadlock a fully busy pool).
-    pub fn parallel_for<F>(&self, n: usize, f: F)
-    where
-        F: Fn(usize) + Sync,
-    {
-        self.parallel_for_capped(self.size, n, f)
-    }
-
-    /// [`Self::parallel_for`] with at most `cap` jobs in flight, so a
-    /// caller-facing thread budget (e.g. `MoeLayerOptions::threads`)
-    /// bounds concurrency even on the shared all-cores pool.
-    pub fn parallel_for_capped<F>(&self, cap: usize, n: usize, f: F)
-    where
-        F: Fn(usize) + Sync,
-    {
-        if n == 0 {
-            return;
-        }
-        let workers = cap.min(self.size).min(n);
-        if workers <= 1 {
-            for i in 0..n {
-                f(i);
-            }
-            return;
-        }
-        struct Latch {
-            done: Mutex<usize>,
-            cv: Condvar,
-        }
-        let latch = Arc::new(Latch { done: Mutex::new(0), cv: Condvar::new() });
-        let next = Arc::new(AtomicUsize::new(0));
-        let poisoned = Arc::new(AtomicBool::new(false));
-        // SAFETY: the lifetime-erased reference lets the 'static job
-        // closures reach the stack-borrowed `f`; `parallel_for` blocks
-        // until every job has signalled the latch, so `f` outlives every
-        // call through it. (`&dyn` rather than `*const F` so the job
-        // closure's type does not mention `F` and `f` needn't be
-        // 'static itself.)
-        let f_ref: &(dyn Fn(usize) + Sync) = &f;
-        let f_static: &'static (dyn Fn(usize) + Sync) =
-            unsafe { std::mem::transmute(f_ref) };
-        for _ in 0..workers {
-            let latch = Arc::clone(&latch);
-            let next = Arc::clone(&next);
-            let poisoned = Arc::clone(&poisoned);
-            self.execute(move || {
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || f_static(i),
-                    ))
-                    .is_ok();
-                    if !ok {
-                        poisoned.store(true, Ordering::SeqCst);
-                        break;
-                    }
-                }
-                let mut done = latch.done.lock().unwrap();
-                *done += 1;
-                latch.cv.notify_all();
-            });
-        }
-        let mut done = latch.done.lock().unwrap();
-        while *done < workers {
-            done = latch.cv.wait(done).unwrap();
-        }
-        drop(done);
-        if poisoned.load(Ordering::SeqCst) {
-            panic!("ThreadPool::parallel_for: a job panicked");
-        }
-    }
-
-    /// Ordered parallel map on the pool: `out[i] = f(i)` for `i in
-    /// 0..n`, with the same scoped-borrow contract as
-    /// [`Self::parallel_for`].
-    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
-    where
-        T: Send,
-        F: Fn(usize) -> T + Sync,
-    {
-        self.parallel_map_capped(self.size, n, f)
-    }
-
-    /// [`Self::parallel_map`] with at most `cap` jobs in flight.
-    pub fn parallel_map_capped<T, F>(&self, cap: usize, n: usize, f: F) -> Vec<T>
-    where
-        T: Send,
-        F: Fn(usize) -> T + Sync,
-    {
-        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        self.parallel_for_capped(cap, n, |i| {
-            *slots[i].lock().unwrap() = Some(f(i));
-        });
-        slots
-            .into_iter()
-            .map(|s| s.into_inner().unwrap().expect("slot filled"))
-            .collect()
-    }
-}
-
-impl Drop for ThreadPool {
-    fn drop(&mut self) {
-        *self.shared.shutdown.lock().unwrap() = true;
-        self.shared.cv.notify_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-    }
-}
-
-fn worker_loop(shared: Arc<Shared>) {
-    loop {
-        let job = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if let Some(j) = q.pop_front() {
-                    break Some(j);
-                }
-                if *shared.shutdown.lock().unwrap() {
-                    break None;
-                }
-                q = shared.cv.wait(q).unwrap();
-            }
-        };
-        match job {
-            Some(j) => j(),
-            None => return,
-        }
-    }
-}
-
-/// Process-wide shared pool (one worker per core), created on first
-/// use. The unified step pipeline runs its per-expert FFN batches here
-/// so chunked expert compute does not pay pool construction per step.
-pub fn global() -> &'static ThreadPool {
-    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
-    GLOBAL.get_or_init(ThreadPool::with_cores)
-}
-
 /// The pipeline's pool policy in one place (shared by the forward and
-/// backward expert stages): run `f(i)` for `i in 0..n` on the global
-/// pool when `threads > 1` and there is more than one job — capped at
-/// `threads` jobs in flight, so the caller's thread budget is honored
-/// even though the shared pool has one worker per core — inline
-/// otherwise. Results are ordered and identical either way — each job
-/// must be an independent pure function.
+/// backward expert stages): run `f(i)` for `i in 0..n` on up to
+/// `threads` scoped threads when `threads > 1` and there is more than
+/// one job, inline otherwise. Results are ordered and identical either
+/// way — each job must be an independent pure function.
 pub fn pooled<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
     if threads > 1 && n > 1 {
-        global().parallel_map_capped(threads, n, f)
+        parallel_map(n, threads, f)
     } else {
         (0..n).map(f).collect()
     }
@@ -249,7 +49,7 @@ pub fn available_parallelism() -> usize {
 /// chunk.
 pub fn parallel_for_chunks<F>(n: usize, chunks: usize, f: F)
 where
-    F: Fn(std::ops::Range<usize>) + Sync,
+    F: Fn(Range<usize>) + Sync,
 {
     if n == 0 {
         return;
@@ -269,6 +69,82 @@ where
             }
             let fr = &f;
             scope.spawn(move || fr(lo..hi));
+        }
+    });
+}
+
+/// Run `f(rows, chunk)` over disjoint row chunks of `out` (a row-major
+/// `[rows, row_len]` buffer) on up to `threads` scoped threads. `rows`
+/// is the chunk's global row range and `chunk` the corresponding
+/// `&mut` slice, so `chunk[(r - rows.start) * row_len..]` is row `r`.
+///
+/// Row ranges match [`parallel_for_chunks`] exactly, so a kernel moved
+/// from "parallel_for_chunks + raw pointer writes" onto this helper
+/// performs the same writes in the same per-thread order.
+pub fn parallel_rows_mut<T, F>(out: &mut [T], row_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    if out.is_empty() || row_len == 0 {
+        return;
+    }
+    debug_assert_eq!(out.len() % row_len, 0, "out must be whole rows");
+    let rows = out.len() / row_len;
+    let chunks = threads.max(1).min(rows);
+    if chunks == 1 {
+        f(0..rows, out);
+        return;
+    }
+    let per = rows.div_ceil(chunks);
+    thread::scope(|scope| {
+        for (c, chunk) in out.chunks_mut(per * row_len).enumerate() {
+            let lo = c * per;
+            let hi = lo + chunk.len() / row_len;
+            let fr = &f;
+            scope.spawn(move || fr(lo..hi, chunk));
+        }
+    });
+}
+
+/// [`parallel_rows_mut`] over two parallel row-major buffers that share
+/// a row count (`a: [rows, a_row]`, `b: [rows, b_row]`) — e.g. the
+/// top-k kernels' expert-id and gate-value outputs.
+pub fn parallel_rows_mut2<A, B, F>(
+    a: &mut [A],
+    b: &mut [B],
+    a_row: usize,
+    b_row: usize,
+    threads: usize,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    F: Fn(Range<usize>, &mut [A], &mut [B]) + Sync,
+{
+    if a.is_empty() || a_row == 0 || b_row == 0 {
+        return;
+    }
+    debug_assert_eq!(a.len() % a_row, 0, "a must be whole rows");
+    debug_assert_eq!(b.len() % b_row, 0, "b must be whole rows");
+    let rows = a.len() / a_row;
+    debug_assert_eq!(b.len() / b_row, rows, "a and b must share a row count");
+    let chunks = threads.max(1).min(rows);
+    if chunks == 1 {
+        f(0..rows, a, b);
+        return;
+    }
+    let per = rows.div_ceil(chunks);
+    thread::scope(|scope| {
+        for (c, (ca, cb)) in a
+            .chunks_mut(per * a_row)
+            .zip(b.chunks_mut(per * b_row))
+            .enumerate()
+        {
+            let lo = c * per;
+            let hi = lo + ca.len() / a_row;
+            let fr = &f;
+            scope.spawn(move || fr(lo..hi, ca, cb));
         }
     });
 }
@@ -311,111 +187,6 @@ mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
-    fn pool_runs_all_jobs() {
-        let pool = ThreadPool::new(4);
-        let counter = Arc::new(AtomicUsize::new(0));
-        let latch = Arc::new((Mutex::new(0usize), Condvar::new()));
-        let n = 100;
-        for _ in 0..n {
-            let c = Arc::clone(&counter);
-            let l = Arc::clone(&latch);
-            pool.execute(move || {
-                c.fetch_add(1, Ordering::SeqCst);
-                let (m, cv) = &*l;
-                *m.lock().unwrap() += 1;
-                cv.notify_all();
-            });
-        }
-        let (m, cv) = &*latch;
-        let mut done = m.lock().unwrap();
-        while *done < n {
-            done = cv.wait(done).unwrap();
-        }
-        assert_eq!(counter.load(Ordering::SeqCst), n);
-    }
-
-    #[test]
-    fn jobs_run_in_submission_order() {
-        // One worker: execution order must equal submission order — the
-        // queue is FIFO, not a LIFO stack that starves early jobs.
-        let pool = ThreadPool::new(1);
-        let order = Arc::new(Mutex::new(Vec::new()));
-        let latch = Arc::new((Mutex::new(0usize), Condvar::new()));
-        let n = 64usize;
-        for i in 0..n {
-            let order = Arc::clone(&order);
-            let latch = Arc::clone(&latch);
-            pool.execute(move || {
-                order.lock().unwrap().push(i);
-                let (m, cv) = &*latch;
-                *m.lock().unwrap() += 1;
-                cv.notify_all();
-            });
-        }
-        let (m, cv) = &*latch;
-        let mut done = m.lock().unwrap();
-        while *done < n {
-            done = cv.wait(done).unwrap();
-        }
-        drop(done);
-        let got = order.lock().unwrap().clone();
-        let expect: Vec<usize> = (0..n).collect();
-        assert_eq!(got, expect, "FIFO queue must preserve submission order");
-    }
-
-    #[test]
-    fn drop_joins_cleanly() {
-        let pool = ThreadPool::new(2);
-        pool.execute(|| {});
-        drop(pool); // must not hang
-    }
-
-    #[test]
-    fn pool_parallel_for_covers_all_indices() {
-        let pool = ThreadPool::new(4);
-        let n = 257usize;
-        // Borrows from the caller's stack — the scoped contract.
-        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
-        pool.parallel_for(n, |i| {
-            hits[i].fetch_add(1, Ordering::Relaxed);
-        });
-        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
-        // Edge cases: empty and single-index runs execute inline.
-        pool.parallel_for(0, |_| unreachable!("no indices"));
-        let one = AtomicUsize::new(0);
-        pool.parallel_for(1, |_| {
-            one.fetch_add(1, Ordering::Relaxed);
-        });
-        assert_eq!(one.load(Ordering::Relaxed), 1);
-    }
-
-    #[test]
-    fn capped_parallel_map_covers_all_indices() {
-        let pool = ThreadPool::new(4);
-        let out = pool.parallel_map_capped(2, 33, |i| i * 3);
-        let expect: Vec<usize> = (0..33).map(|i| i * 3).collect();
-        assert_eq!(out, expect);
-        // The pooled policy gives identical ordered results inline
-        // (threads = 1) and pooled (threads > 1).
-        let a = pooled(1, 17, |i| i + 1);
-        let b = pooled(3, 17, |i| i + 1);
-        assert_eq!(a, b);
-    }
-
-    #[test]
-    fn global_pool_is_shared_and_usable() {
-        let a = global() as *const ThreadPool;
-        let b = global() as *const ThreadPool;
-        assert_eq!(a, b);
-        let n = 32usize;
-        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
-        global().parallel_for(n, |i| {
-            hits[i].fetch_add(1, Ordering::Relaxed);
-        });
-        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
-    }
-
-    #[test]
     fn parallel_for_covers_all_indices() {
         let n = 1003;
         let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
@@ -448,5 +219,82 @@ mod tests {
     fn parallel_map_empty() {
         let out: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pooled_matches_inline() {
+        // The pooled policy gives identical ordered results inline
+        // (threads = 1) and parallel (threads > 1).
+        let a = pooled(1, 17, |i| i + 1);
+        let b = pooled(3, 17, |i| i + 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rows_mut_chunks_align_with_parallel_for_chunks() {
+        // Same splitting rule: a kernel migrated from raw-pointer
+        // scatter must see the same row ranges.
+        let rows = 23usize;
+        let row_len = 3usize;
+        for threads in [1, 2, 4, 7, 23, 64] {
+            // Reference ranges: the parallel_for_chunks splitting rule.
+            let mut expect: Vec<Vec<usize>> = Vec::new();
+            let chunks = threads.max(1).min(rows);
+            let per = rows.div_ceil(chunks);
+            for c in 0..chunks {
+                let lo = c * per;
+                let hi = ((c + 1) * per).min(rows);
+                if lo < hi {
+                    expect.push((lo..hi).collect());
+                }
+            }
+            let mut out = vec![0usize; rows * row_len];
+            let seen = Mutex::new(Vec::new());
+            parallel_rows_mut(&mut out, row_len, threads, |r, chunk| {
+                assert_eq!(chunk.len(), r.len() * row_len);
+                for (off, row) in r.clone().enumerate() {
+                    for x in &mut chunk[off * row_len..(off + 1) * row_len] {
+                        *x = row;
+                    }
+                }
+                seen.lock().unwrap().push(r.collect::<Vec<_>>());
+            });
+            let mut seen = seen.into_inner().unwrap();
+            seen.sort_by_key(|v| v[0]);
+            assert_eq!(seen, expect, "threads={threads}");
+            for row in 0..rows {
+                assert!(out[row * row_len..(row + 1) * row_len].iter().all(|&x| x == row));
+            }
+        }
+    }
+
+    #[test]
+    fn rows_mut2_writes_both_buffers() {
+        let rows = 11usize;
+        let (ar, br) = (2usize, 5usize);
+        let mut a = vec![0u32; rows * ar];
+        let mut b = vec![0.0f32; rows * br];
+        parallel_rows_mut2(&mut a, &mut b, ar, br, 3, |r, ca, cb| {
+            for (off, row) in r.enumerate() {
+                ca[off * ar..(off + 1) * ar].fill(row as u32);
+                cb[off * br..(off + 1) * br].fill(row as f32);
+            }
+        });
+        for row in 0..rows {
+            assert!(a[row * ar..(row + 1) * ar].iter().all(|&x| x == row as u32));
+            assert!(b[row * br..(row + 1) * br].iter().all(|&x| x == row as f32));
+        }
+    }
+
+    #[test]
+    fn rows_mut_handles_edges() {
+        let mut empty: Vec<u32> = Vec::new();
+        parallel_rows_mut(&mut empty, 4, 8, |_, _| panic!("should not run"));
+        let mut one = vec![0u8; 5];
+        parallel_rows_mut(&mut one, 5, 8, |r, chunk| {
+            assert_eq!(r, 0..1);
+            chunk.fill(7);
+        });
+        assert!(one.iter().all(|&x| x == 7));
     }
 }

@@ -1,0 +1,562 @@
+//! The analysis engine: source loading, comment/string stripping,
+//! test-region masking, diagnostics, allowlists and the report.
+//!
+//! The lints are line/token-level heuristics, not a full parser — the
+//! repo's rustfmt-normalized style makes that reliable, and anything a
+//! heuristic cannot see is handled by the allowlist (see DESIGN.md §16
+//! for the policy). Every structure here is deterministic: files are
+//! walked in sorted order and diagnostics are sorted before emission.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::lints::{self, Lint};
+use crate::schema;
+
+/// One finding, anchored to a repo-relative path and a 1-based line.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub lint: Lint,
+    pub path: String,
+    pub line: usize,
+    pub snippet: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(lint: Lint, path: &str, line: usize, snippet: &str, message: String) -> Self {
+        Diagnostic {
+            lint,
+            path: path.to_string(),
+            line,
+            snippet: snippet.trim().chars().take(120).collect(),
+            message,
+        }
+    }
+}
+
+/// One allowlist entry: `LNNN <path-suffix> <line-substring…>`.
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    pub lint: Lint,
+    pub path: String,
+    pub pattern: String,
+    pub file_line: usize,
+    pub used: bool,
+}
+
+/// Everything one `analysis` run produced.
+pub struct Report {
+    pub violations: Vec<Diagnostic>,
+    pub allowed: Vec<Diagnostic>,
+    pub unused_allow: Vec<String>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty() && self.unused_allow.is_empty()
+    }
+
+    /// Machine-readable report (std-only, hand-rolled escaping).
+    pub fn to_json(&self) -> String {
+        let diag = |d: &Diagnostic| {
+            format!(
+                "{{\"lint\":{},\"name\":{},\"path\":{},\"line\":{},\"snippet\":{},\"message\":{}}}",
+                json_str(d.lint.id()),
+                json_str(d.lint.name()),
+                json_str(&d.path),
+                d.line,
+                json_str(&d.snippet),
+                json_str(&d.message)
+            )
+        };
+        let violations: Vec<String> = self.violations.iter().map(diag).collect();
+        let allowed: Vec<String> = self.allowed.iter().map(diag).collect();
+        let unused: Vec<String> = self.unused_allow.iter().map(|s| json_str(s)).collect();
+        format!(
+            "{{\"files_scanned\":{},\"clean\":{},\"violations\":[{}],\"allowed\":[{}],\"unused_allow\":[{}]}}",
+            self.files_scanned,
+            self.clean(),
+            violations.join(","),
+            allowed.join(","),
+            unused.join(",")
+        )
+    }
+
+    /// Human-readable report; with `fix_hints` each lint's remediation
+    /// guidance is printed once under its first finding.
+    pub fn print_human(&self, fix_hints: bool) {
+        let mut hinted: Vec<&str> = Vec::new();
+        for d in &self.violations {
+            println!("{} [{} {}] {}", loc(d), d.lint.id(), d.lint.name(), d.message);
+            if !d.snippet.is_empty() {
+                println!("    > {}", d.snippet);
+            }
+            if fix_hints && !hinted.contains(&d.lint.id()) {
+                hinted.push(d.lint.id());
+                println!("    fix: {}", d.lint.hint());
+            }
+        }
+        for u in &self.unused_allow {
+            println!("unused allowlist entry (remove it): {u}");
+        }
+        if self.clean() {
+            println!(
+                "analysis: clean — {} files scanned, {} allowed suppressions",
+                self.files_scanned,
+                self.allowed.len()
+            );
+        } else {
+            println!(
+                "analysis: {} violation(s), {} unused allowlist entr(ies) across {} files",
+                self.violations.len(),
+                self.unused_allow.len(),
+                self.files_scanned
+            );
+            if !fix_hints {
+                println!("(re-run with --fix-hints for remediation guidance)");
+            }
+        }
+    }
+}
+
+fn loc(d: &Diagnostic) -> String {
+    format!("{}:{}", d.path, d.line)
+}
+
+/// JSON string escaping for the hand-rolled emitter above.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// A source file with its comment/string-stripped shadow and test mask.
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes.
+    pub rel: String,
+    /// Verbatim lines.
+    pub raw: Vec<String>,
+    /// Same lines with comments and string/char literal contents
+    /// blanked to spaces — token searches run on these.
+    pub code: Vec<String>,
+    /// `true` for lines inside a `#[cfg(test)]` region.
+    pub test: Vec<bool>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let raw: Vec<String> = text.lines().map(str::to_string).collect();
+        let code: Vec<String> = strip_comments_and_strings(text)
+            .lines()
+            .map(str::to_string)
+            .collect();
+        debug_assert_eq!(raw.len(), code.len());
+        let test = test_mask(&code);
+        SourceFile { rel: rel.to_string(), raw, code, test }
+    }
+
+    /// Joined code text of lines `from..from+span` (for statements that
+    /// wrap across lines), capped at the file end.
+    pub fn window(&self, from: usize, span: usize) -> String {
+        let hi = (from + span).min(self.code.len());
+        self.code[from..hi].join("\n")
+    }
+}
+
+/// Run the full pass over `root` (the repo root). `allow` may not exist,
+/// in which case the allowlist is empty.
+pub fn run(root: &Path, allow: &Path) -> io::Result<Report> {
+    let mut entries = load_allowlist(allow)?;
+    let files = walk_sources(&root.join("rust").join("src"))?;
+    let mut all: Vec<Diagnostic> = Vec::new();
+    let mut sources: Vec<SourceFile> = Vec::new();
+    for path in &files {
+        let text = fs::read_to_string(path)?;
+        let rel = rel_path(root, path);
+        sources.push(SourceFile::parse(&rel, &text));
+    }
+    for sf in &sources {
+        all.extend(lints::check_file(sf));
+    }
+    all.extend(schema::check(root));
+    all.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.lint.id()).cmp(&(b.path.as_str(), b.line, b.lint.id()))
+    });
+
+    let mut violations = Vec::new();
+    let mut allowed = Vec::new();
+    for d in all {
+        if inline_allowed(&sources, &d) || list_allowed(&mut entries, &sources, &d) {
+            allowed.push(d);
+        } else {
+            violations.push(d);
+        }
+    }
+    let unused_allow = entries
+        .iter()
+        .filter(|e| !e.used)
+        .map(|e| format!("{}:{} {} {} {}", allow.display(), e.file_line, e.lint.id(), e.path, e.pattern))
+        .collect();
+    Ok(Report { violations, allowed, unused_allow, files_scanned: sources.len() })
+}
+
+/// `lint:allow(LNNN…)` on the flagged line or the line above it.
+fn inline_allowed(sources: &[SourceFile], d: &Diagnostic) -> bool {
+    let Some(sf) = sources.iter().find(|s| s.rel == d.path) else {
+        return false;
+    };
+    let check = |line1: usize| -> bool {
+        if line1 == 0 || line1 > sf.raw.len() {
+            return false;
+        }
+        let raw = &sf.raw[line1 - 1];
+        match raw.find("lint:allow(") {
+            Some(pos) => {
+                let rest = &raw[pos + "lint:allow(".len()..];
+                let inside = rest.split(')').next().unwrap_or("");
+                inside.split(',').any(|id| id.trim() == d.lint.id())
+            }
+            None => false,
+        }
+    };
+    check(d.line) || check(d.line.saturating_sub(1))
+}
+
+/// Match against the allowlist file, marking entries used.
+fn list_allowed(entries: &mut [AllowEntry], sources: &[SourceFile], d: &Diagnostic) -> bool {
+    let raw_line = sources
+        .iter()
+        .find(|s| s.rel == d.path)
+        .and_then(|s| s.raw.get(d.line.saturating_sub(1)))
+        .map(String::as_str)
+        .unwrap_or("");
+    let mut hit = false;
+    for e in entries.iter_mut() {
+        if e.lint == d.lint && d.path.ends_with(&e.path) && raw_line.contains(&e.pattern) {
+            e.used = true;
+            hit = true;
+        }
+    }
+    hit
+}
+
+/// Parse the allowlist: `LNNN <path-suffix> <line-substring…>` per line,
+/// `#` comments and blanks skipped.
+pub fn load_allowlist(path: &Path) -> io::Result<Vec<AllowEntry>> {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e),
+    };
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut rest = line;
+        let lint_tok = take_token(&mut rest);
+        let path_tok = take_token(&mut rest);
+        let pattern = rest.trim().to_string();
+        let lint = match Lint::from_id(&lint_tok) {
+            Some(l) => l,
+            None => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("{}:{}: unknown lint id '{}'", path.display(), i + 1, lint_tok),
+                ));
+            }
+        };
+        if path_tok.is_empty() || pattern.is_empty() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "{}:{}: expected `LNNN <path-suffix> <line-substring>`",
+                    path.display(),
+                    i + 1
+                ),
+            ));
+        }
+        out.push(AllowEntry { lint, path: path_tok, pattern, file_line: i + 1, used: false });
+    }
+    Ok(out)
+}
+
+fn take_token(rest: &mut &str) -> String {
+    let s = rest.trim_start();
+    let end = s.find(char::is_whitespace).unwrap_or(s.len());
+    let tok = s[..end].to_string();
+    *rest = &s[end..];
+    tok
+}
+
+/// All `.rs` files under `dir`, recursively, sorted for determinism.
+pub fn walk_sources(dir: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let rd = match fs::read_dir(&d) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => continue,
+            Err(e) => return Err(e),
+        };
+        for entry in rd {
+            let entry = entry?;
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Blank comments and string/char-literal contents to spaces, keeping
+/// line structure so line numbers and columns survive.
+pub fn strip_comments_and_strings(text: &str) -> String {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment,
+        Str,
+        RawStr,
+        CharLit,
+    }
+    let b: Vec<char> = text.chars().collect();
+    let n = b.len();
+    let mut out: Vec<char> = Vec::with_capacity(n);
+    let mut st = St::Code;
+    let mut block_depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < n {
+        let c = b[i];
+        match st {
+            St::Code => {
+                if c == '/' && i + 1 < n && b[i + 1] == '/' {
+                    st = St::LineComment;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+                    st = St::BlockComment;
+                    block_depth = 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    out.push(' ');
+                    i += 1;
+                } else if c == 'r' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '#') {
+                    // Raw string r"…" / r#"…"# (not `r#ident`).
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while j < n && b[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && b[j] == '"' {
+                        st = St::RawStr;
+                        raw_hashes = hashes;
+                        for _ in i..=j {
+                            out.push(' ');
+                        }
+                        i = j + 1;
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: a literal is '<esc>' or
+                    // 'x' — a lifetime quote is never closed by a quote
+                    // two chars later.
+                    if i + 1 < n && b[i + 1] == '\\' {
+                        st = St::CharLit;
+                        out.push(' ');
+                        i += 1;
+                    } else if i + 2 < n && b[i + 2] == '\'' {
+                        st = St::CharLit;
+                        out.push(' ');
+                        i += 1;
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                if c == '\n' {
+                    st = St::Code;
+                    out.push('\n');
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            St::BlockComment => {
+                if c == '*' && i + 1 < n && b[i + 1] == '/' {
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    block_depth -= 1;
+                    if block_depth == 0 {
+                        st = St::Code;
+                    }
+                } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+                    block_depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    out.push(blank(c));
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(if b[i + 1] == '\n' { '\n' } else { ' ' });
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Code;
+                    out.push(' ');
+                    i += 1;
+                } else {
+                    out.push(blank(c));
+                    i += 1;
+                }
+            }
+            St::RawStr => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut k = 0usize;
+                    while j < n && k < raw_hashes && b[j] == '#' {
+                        k += 1;
+                        j += 1;
+                    }
+                    if k == raw_hashes {
+                        for _ in i..j {
+                            out.push(' ');
+                        }
+                        i = j;
+                        st = St::Code;
+                    } else {
+                        out.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    out.push(blank(c));
+                    i += 1;
+                }
+            }
+            St::CharLit => {
+                if c == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if c == '\'' {
+                    st = St::Code;
+                    out.push(' ');
+                    i += 1;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// Mark every line inside a `#[cfg(test)]`-attributed item (in this
+/// repo: the per-module `mod tests { … }` blocks). The attribute line
+/// itself is marked too.
+fn test_mask(code: &[String]) -> Vec<bool> {
+    let n = code.len();
+    let mut mask = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        if !code[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        while j < n {
+            for ch in code[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            mask[j] = true;
+            if opened && depth <= 0 {
+                break;
+            }
+            // Attribute on a braceless item (`#[cfg(test)] use …;`):
+            // stop at the terminating semicolon instead of running away.
+            if !opened && j > i && code[j].trim_end().ends_with(';') {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// Find `needle` in `hay` at a token boundary (chars on both sides are
+/// not identifier chars). Returns byte offsets of every occurrence.
+pub fn token_positions(hay: &str, needle: &str) -> Vec<usize> {
+    let ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = hay[from..].find(needle) {
+        let at = from + pos;
+        let before_ok = hay[..at].chars().next_back().map_or(true, |c| !ident(c));
+        let after_ok = hay[at + needle.len()..].chars().next().map_or(true, |c| !ident(c));
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + needle.len().max(1);
+    }
+    out
+}

@@ -1,0 +1,7 @@
+//! Library surface of the `xtask` developer-task crate, exposed so the
+//! integration tests in `xtask/tests/` can drive the analysis engine
+//! against fixture trees. The `xtask` binary is a thin CLI over this.
+
+pub mod engine;
+pub mod lints;
+pub mod schema;

@@ -1,0 +1,438 @@
+//! The lint catalogue: repo-specific invariants checked line/token-wise.
+//!
+//! Each lint documents its scope (which modules it restricts) and its
+//! rationale; DESIGN.md §16 carries the narrative version. Scopes are
+//! path prefixes relative to the repo root, so fixture trees in
+//! `xtask/tests/` can mirror the layout.
+
+use crate::engine::{token_positions, Diagnostic, SourceFile};
+
+/// Lint identifiers. `L004` (schema pinning) is implemented in
+/// [`crate::schema`]; everything else lives here.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Lint {
+    L001,
+    L002,
+    L003,
+    L004,
+    L005,
+    L006,
+    L007,
+}
+
+impl Lint {
+    pub fn all() -> [Lint; 7] {
+        [Lint::L001, Lint::L002, Lint::L003, Lint::L004, Lint::L005, Lint::L006, Lint::L007]
+    }
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Lint::L001 => "L001",
+            Lint::L002 => "L002",
+            Lint::L003 => "L003",
+            Lint::L004 => "L004",
+            Lint::L005 => "L005",
+            Lint::L006 => "L006",
+            Lint::L007 => "L007",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Lint> {
+        Lint::all().into_iter().find(|l| l.id() == id)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lint::L001 => "nan-ordering",
+            Lint::L002 => "byte-literal",
+            Lint::L003 => "nondeterministic-iteration",
+            Lint::L004 => "schema-pinning",
+            Lint::L005 => "unwrap-in-cli",
+            Lint::L006 => "span-balance",
+            Lint::L007 => "wall-clock-ban",
+        }
+    }
+
+    /// The `--fix-hints` suggestion.
+    pub fn hint(self) -> &'static str {
+        match self {
+            Lint::L001 => {
+                "order floats with `total_cmp` (or `partial_cmp(..).unwrap_or(Ordering::..)` \
+                 when a NaN policy is intended) — `partial_cmp().unwrap()` panics on NaN"
+            }
+            Lint::L002 => {
+                "route element sizes through `comm::precision::F32_BYTES` / `F32_BYTES_F` or \
+                 `WirePrecision::elem_bytes()` so cost models and data path stay in byte \
+                 agreement across wire formats"
+            }
+            Lint::L003 => {
+                "use `BTreeMap`/`BTreeSet` (or collect + sort before iterating) — wire \
+                 payloads, traces and JSON must not depend on hash iteration order"
+            }
+            Lint::L004 => {
+                "keep `obs/schema.rs` key arrays and the `*_json` emitters in lockstep, and \
+                 keep `to_json` impls delegating to `obs::schema`"
+            }
+            Lint::L005 => {
+                "user-reachable paths must return `Result`/match instead of `unwrap`/`expect` \
+                 — a malformed flag or workload must produce an error, not a panic"
+            }
+            Lint::L006 => {
+                "bind the guard (`let x_span = trace::span(..)`) so the span covers the \
+                 region, and only `drop()` spans bound in the same function"
+            }
+            Lint::L007 => {
+                "wall-clock and ambient randomness break deterministic replay — inject time \
+                 via the simulated clock / seeded `util::rng::Rng`, or allowlist a genuine \
+                 measurement site"
+            }
+        }
+    }
+}
+
+/// L002 applies to cost-model and data-path modules — everywhere byte
+/// counts feed schedules, reports or wire buffers.
+const L002_DIRS: &[&str] = &[
+    "rust/src/serve/",
+    "rust/src/baselines/",
+    "rust/src/obs/",
+    "rust/src/comm/",
+    "rust/src/cluster/",
+    "rust/src/placement/",
+    "rust/src/moe/",
+    "rust/src/train/",
+    "rust/src/backprop/",
+    "rust/src/pipeline/",
+    "rust/src/layout/",
+];
+
+/// L003 applies to modules that construct wire payloads, trace output
+/// or JSON (iteration order is observable there).
+const L003_PATHS: &[&str] = &["rust/src/comm/", "rust/src/obs/", "rust/src/util/json.rs"];
+
+/// L005 applies to user-reachable code: CLI parsing/dispatch and the
+/// serving stack.
+const L005_PATHS: &[&str] = &["rust/src/main.rs", "rust/src/cli.rs", "rust/src/serve/"];
+
+fn in_scope(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+pub fn check_file(sf: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    l001_nan_ordering(sf, &mut out);
+    l002_byte_literal(sf, &mut out);
+    l003_nondet_iteration(sf, &mut out);
+    l005_unwrap_in_cli(sf, &mut out);
+    l006_span_balance(sf, &mut out);
+    l007_wall_clock(sf, &mut out);
+    out
+}
+
+/// L001 — `partial_cmp(..).unwrap()` (or `.expect(..)`) is a NaN
+/// landmine in float ordering. Applies to test code too: a NaN-unsafe
+/// reference sort silently pins the wrong spec.
+fn l001_nan_ordering(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    for i in 0..sf.code.len() {
+        let mut from = 0usize;
+        while let Some(pos) = sf.code[i][from..].find(".partial_cmp(") {
+            let col = from + pos;
+            from = col + ".partial_cmp(".len();
+            // The statement may wrap; join a few lines (the window
+            // starts at line `i`, so `col` indexes into it directly)
+            // and cut at the first `;` after the call.
+            let window = sf.window(i, 6);
+            let tail_full = &window[col..];
+            let tail = tail_full.split(';').next().unwrap_or(tail_full);
+            let unwrap_at = tail.find(".unwrap()");
+            let expect_at = tail.find(".expect(");
+            let guard_at = tail.find(".unwrap_or");
+            let panic_at = match (unwrap_at, expect_at) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (Some(a), None) => Some(a),
+                (None, Some(b)) => Some(b),
+                (None, None) => None,
+            };
+            let bad = match (panic_at, guard_at) {
+                (Some(p), Some(g)) => p < g,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if bad {
+                out.push(Diagnostic::new(
+                    Lint::L001,
+                    &sf.rel,
+                    i + 1,
+                    &sf.raw[i],
+                    "NaN-unsafe float ordering: `partial_cmp(..)` chained into a panicking \
+                     unwrap/expect"
+                        .into(),
+                ));
+            }
+        }
+    }
+}
+
+/// L002 — a raw `* 4` / `* 4.0` byte factor in a cost-model/data-path
+/// module bypasses the canonical element sizes. Suffix-form only: the
+/// repo convention keeps byte factors in suffix position and FLOP
+/// constants in prefix position (`4.0 * rows * d * h`).
+fn l002_byte_literal(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if !in_scope(&sf.rel, L002_DIRS) {
+        return;
+    }
+    for i in 0..sf.code.len() {
+        if sf.test[i] {
+            continue;
+        }
+        let line = &sf.code[i];
+        let chars: Vec<char> = line.chars().collect();
+        let n = chars.len();
+        let mut flagged = false;
+        for s in 0..n {
+            if chars[s] != '*' {
+                continue;
+            }
+            let mut j = s + 1;
+            while j < n && chars[j] == ' ' {
+                j += 1;
+            }
+            if j >= n || chars[j] != '4' {
+                continue;
+            }
+            let mut end = j + 1;
+            if end < n && chars[end] == '.' {
+                if end + 1 < n && chars[end + 1] == '0' {
+                    end += 2;
+                } else {
+                    continue; // e.g. `* 4.5`
+                }
+            }
+            let boundary_ok = end >= n
+                || !(chars[end].is_ascii_alphanumeric() || chars[end] == '_' || chars[end] == '.');
+            if boundary_ok && !flagged {
+                out.push(Diagnostic::new(
+                    Lint::L002,
+                    &sf.rel,
+                    i + 1,
+                    &sf.raw[i],
+                    "raw `* 4`/`* 4.0` byte factor — element sizes must come from \
+                     `F32_BYTES`/`elem_bytes()`"
+                        .into(),
+                ));
+                flagged = true; // one diagnostic per line
+            }
+        }
+    }
+}
+
+/// L003 — `HashMap`/`HashSet` in wire/trace/JSON-producing modules.
+fn l003_nondet_iteration(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if !in_scope(&sf.rel, L003_PATHS) {
+        return;
+    }
+    for i in 0..sf.code.len() {
+        if sf.test[i] {
+            continue;
+        }
+        for tok in ["HashMap", "HashSet"] {
+            if !token_positions(&sf.code[i], tok).is_empty() {
+                out.push(Diagnostic::new(
+                    Lint::L003,
+                    &sf.rel,
+                    i + 1,
+                    &sf.raw[i],
+                    format!(
+                        "`{tok}` in a module that produces wire payloads/trace/JSON — \
+                         iteration order leaks into output"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// L005 — `unwrap`/`expect` on user-reachable paths.
+fn l005_unwrap_in_cli(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if !in_scope(&sf.rel, L005_PATHS) {
+        return;
+    }
+    for i in 0..sf.code.len() {
+        if sf.test[i] {
+            continue;
+        }
+        let line = &sf.code[i];
+        if line.contains(".unwrap()") || line.contains(".expect(") {
+            out.push(Diagnostic::new(
+                Lint::L005,
+                &sf.rel,
+                i + 1,
+                &sf.raw[i],
+                "panicking unwrap/expect on a user-reachable path (CLI/serve)".into(),
+            ));
+        }
+    }
+}
+
+/// L006 — trace spans are RAII guards: an unbound call (or `let _ =`)
+/// drops immediately and records a zero-width span, and a `drop(x)` of
+/// a span never opened in the same function marks the wrong region.
+fn l006_span_balance(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    // Rule A: every `trace::span(` call site is bound to a named guard.
+    for i in 0..sf.code.len() {
+        if sf.test[i] {
+            continue;
+        }
+        for col in token_positions(&sf.code[i], "trace::span") {
+            let before = &sf.code[i][..col];
+            let name = binding_name(before);
+            match name {
+                Some(n) if n != "_" => {}
+                _ => {
+                    out.push(Diagnostic::new(
+                        Lint::L006,
+                        &sf.rel,
+                        i + 1,
+                        &sf.raw[i],
+                        "trace span guard not bound to a named variable — it drops (and \
+                         ends) immediately"
+                            .into(),
+                    ));
+                }
+            }
+        }
+    }
+    // Rule B: `drop(<x>_span)` must reference a span bound in the same
+    // function region.
+    for (start, end) in fn_regions(&sf.code) {
+        let mut bound: Vec<String> = Vec::new();
+        for line in &sf.code[start..end] {
+            if let Some(col) = line.find("trace::span") {
+                if let Some(name) = binding_name(&line[..col]) {
+                    bound.push(name);
+                }
+            }
+        }
+        for (off, line) in sf.code[start..end].iter().enumerate() {
+            if sf.test[start + off] {
+                continue;
+            }
+            let mut from = 0usize;
+            while let Some(pos) = line[from..].find("drop(") {
+                let at = from + pos;
+                let inner: String = line[at + 5..]
+                    .chars()
+                    .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
+                    .collect();
+                from = at + 5;
+                if (inner.ends_with("span") || inner.ends_with("_span"))
+                    && !bound.iter().any(|b| *b == inner)
+                {
+                    out.push(Diagnostic::new(
+                        Lint::L006,
+                        &sf.rel,
+                        start + off + 1,
+                        &sf.raw[start + off],
+                        format!(
+                            "`drop({inner})` closes a span that was not opened in this \
+                             function"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// L007 — wall-clock reads and ambient randomness, outside allowlisted
+/// measurement sites, break deterministic replay.
+fn l007_wall_clock(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    const BANNED: &[&str] = &[
+        "Instant::now",
+        "SystemTime::now",
+        "thread_rng",
+        "from_entropy",
+        "rand::random",
+        "RandomState",
+    ];
+    for i in 0..sf.code.len() {
+        if sf.test[i] {
+            continue;
+        }
+        for tok in BANNED {
+            if !token_positions(&sf.code[i], tok).is_empty() {
+                out.push(Diagnostic::new(
+                    Lint::L007,
+                    &sf.rel,
+                    i + 1,
+                    &sf.raw[i],
+                    format!("`{tok}` outside an allowlisted measurement site"),
+                ));
+            }
+        }
+    }
+}
+
+/// `let [mut] <name> [: T] = …` binding name from the text preceding a
+/// call, if the line is a let-binding.
+fn binding_name(before: &str) -> Option<String> {
+    let let_at = before.rfind("let ")?;
+    let rest = before[let_at + 4..].trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let name: String = rest
+        .chars()
+        .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
+        .collect();
+    if name.is_empty() && rest.starts_with('_') {
+        return Some("_".into());
+    }
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Non-nested `fn` regions (line ranges, end exclusive). Nested items
+/// merge into the enclosing region, which only makes the drop-check
+/// more permissive.
+fn fn_regions(code: &[String]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let n = code.len();
+    let mut i = 0usize;
+    while i < n {
+        if token_positions(&code[i], "fn").is_empty() {
+            i += 1;
+            continue;
+        }
+        // Find the opening brace (the signature may wrap or the item may
+        // be a trait method ending in `;`).
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        let mut terminated = false;
+        while j < n {
+            for ch in code[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    ';' if !opened => terminated = true,
+                    _ => {}
+                }
+            }
+            if terminated && !opened {
+                break;
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        out.push((i, (j + 1).min(n)));
+        i = j + 1;
+    }
+    out
+}

@@ -1,0 +1,88 @@
+//! `cargo x <task>` — repo-local developer tasks.
+//!
+//! The only task today is `analysis`: the repo-specific static lints
+//! described in DESIGN.md §16. Exit status is the contract CI relies
+//! on: 0 for a clean tree, 1 when violations (or stale allowlist
+//! entries) exist, 2 for usage errors.
+
+use std::env;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::engine;
+
+const USAGE: &str = "\
+usage: cargo x analysis [--json] [--fix-hints] [--root <dir>] [--allow <file>]
+
+  --json        emit the report as JSON on stdout (for CI artifacts)
+  --fix-hints   print per-lint remediation guidance under each finding
+  --root DIR    repo root to scan (default: the workspace root)
+  --allow FILE  allowlist file (default: <root>/xtask/analysis.allow)
+";
+
+fn main() -> ExitCode {
+    let mut args = env::args().skip(1);
+    let Some(task) = args.next() else {
+        eprint!("{USAGE}");
+        return ExitCode::from(2);
+    };
+    if task != "analysis" {
+        eprintln!("unknown task '{task}'");
+        eprint!("{USAGE}");
+        return ExitCode::from(2);
+    }
+
+    let mut json = false;
+    let mut fix_hints = false;
+    let mut root: Option<PathBuf> = None;
+    let mut allow: Option<PathBuf> = None;
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--fix-hints" => fix_hints = true,
+            "--root" => match args.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return usage_err("--root requires a directory"),
+            },
+            "--allow" => match args.next() {
+                Some(v) => allow = Some(PathBuf::from(v)),
+                None => return usage_err("--allow requires a file"),
+            },
+            other => return usage_err(&format!("unknown flag '{other}'")),
+        }
+    }
+
+    // The xtask crate lives at <root>/xtask, so the workspace root is
+    // one level up from our manifest.
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("xtask manifest has a parent")
+            .to_path_buf()
+    });
+    let allow = allow.unwrap_or_else(|| root.join("xtask").join("analysis.allow"));
+
+    let report = match engine::run(&root, &allow) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("analysis failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        report.print_human(fix_hints);
+    }
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn usage_err(msg: &str) -> ExitCode {
+    eprintln!("{msg}");
+    eprint!("{USAGE}");
+    ExitCode::from(2)
+}

@@ -1,0 +1,246 @@
+//! L004 — schema pinning: cross-parse the key arrays in
+//! `rust/src/obs/schema.rs` against the `*_json` emitter bodies, and
+//! verify the external `to_json` impls delegate to `obs::schema`.
+//!
+//! Drift in either direction (a pinned key the emitter no longer
+//! writes, or an emitted key missing from the pin) is a violation, as
+//! is a consumer module hand-rolling its own JSON instead of
+//! delegating. String literals are parsed from the raw source — an
+//! emitter key is a literal followed by `,` or `.into()`, and a literal
+//! that is the first argument of `quantile_fields(` expands to the
+//! `_p50`/`_p95`/`_p99` triple.
+
+use std::fs;
+use std::path::Path;
+
+use crate::engine::Diagnostic;
+use crate::lints::Lint;
+
+const SCHEMA_PATH: &str = "rust/src/obs/schema.rs";
+
+/// (key array, emitter fn) pairs pinned against each other.
+const PINS: &[(&str, &str)] = &[
+    ("BREAKDOWN_KEYS", "breakdown_json"),
+    ("SLO_KEYS", "slo_json"),
+    ("BENCH_RESULT_KEYS", "bench_result_json"),
+];
+
+/// (consumer file, required delegation call) — the `to_json` body in
+/// each file must route through the named schema emitter.
+const DELEGATES: &[(&str, &str)] = &[
+    ("rust/src/coordinator/metrics.rs", "schema::breakdown_json"),
+    ("rust/src/serve/slo.rs", "schema::slo_json"),
+    ("rust/src/benchkit.rs", "schema::bench_result_json"),
+];
+
+/// Run the schema check against `root`. A repo without
+/// `rust/src/obs/schema.rs` (fixture trees for the other lints) is
+/// skipped entirely.
+pub fn check(root: &Path) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let schema_file = root.join(SCHEMA_PATH);
+    let Ok(text) = fs::read_to_string(&schema_file) else {
+        return out;
+    };
+    for &(array, emitter) in PINS {
+        let before = out.len();
+        let Some((pinned, array_line)) = parse_key_array(&text, array) else {
+            out.push(Diagnostic::new(
+                Lint::L004,
+                SCHEMA_PATH,
+                1,
+                "",
+                format!("pinned key array `{array}` not found"),
+            ));
+            continue;
+        };
+        let Some((emitted, fn_line)) = parse_emitted_keys(&text, emitter) else {
+            out.push(Diagnostic::new(
+                Lint::L004,
+                SCHEMA_PATH,
+                array_line,
+                "",
+                format!("emitter `{emitter}` not found for `{array}`"),
+            ));
+            continue;
+        };
+        for k in &pinned {
+            if !emitted.contains(k) {
+                out.push(Diagnostic::new(
+                    Lint::L004,
+                    SCHEMA_PATH,
+                    array_line,
+                    "",
+                    format!("`{array}` pins key \"{k}\" but `{emitter}` does not emit it"),
+                ));
+            }
+        }
+        for k in &emitted {
+            if !pinned.contains(k) {
+                out.push(Diagnostic::new(
+                    Lint::L004,
+                    SCHEMA_PATH,
+                    fn_line,
+                    "",
+                    format!("`{emitter}` emits key \"{k}\" missing from `{array}`"),
+                ));
+            }
+        }
+        if out.len() == before && pinned != emitted {
+            out.push(Diagnostic::new(
+                Lint::L004,
+                SCHEMA_PATH,
+                array_line,
+                "",
+                format!("`{array}` and `{emitter}` carry the same keys in different order"),
+            ));
+        }
+    }
+    for &(file, call) in DELEGATES {
+        let path = root.join(file);
+        let Ok(src) = fs::read_to_string(&path) else {
+            continue;
+        };
+        if let Some(at) = src.find("fn to_json") {
+            let line = src[..at].matches('\n').count() + 1;
+            let body = body_after(&src, at);
+            if !body.contains(call) {
+                out.push(Diagnostic::new(
+                    Lint::L004,
+                    file,
+                    line,
+                    "",
+                    format!("`to_json` does not delegate to `{call}` — schema can drift"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Collect the string literals of `pub const NAME: &[&str] = &[ … ];`.
+/// Returns the keys and the 1-based line of the declaration.
+fn parse_key_array(text: &str, name: &str) -> Option<(Vec<String>, usize)> {
+    let decl = format!("const {name}");
+    let at = text.find(&decl)?;
+    let line = text[..at].matches('\n').count() + 1;
+    let tail = &text[at..];
+    let end = tail.find("];")?;
+    Some((string_literals(&tail[..end]).into_iter().map(|(s, _)| s).collect(), line))
+}
+
+/// Collect the keys a `fn <name>` emitter writes, in source order.
+fn parse_emitted_keys(text: &str, name: &str) -> Option<(Vec<String>, usize)> {
+    let decl = format!("fn {name}");
+    let at = text.find(&decl)?;
+    let line = text[..at].matches('\n').count() + 1;
+    let body = body_after(text, at);
+    let mut keys = Vec::new();
+    for (lit, pos) in string_literals(body) {
+        if preceded_by_call(body, pos, "quantile_fields") {
+            for suffix in ["_p50", "_p95", "_p99"] {
+                keys.push(format!("{lit}{suffix}"));
+            }
+            continue;
+        }
+        let after = body[pos..]
+            .find('"')
+            .and_then(|open| {
+                let close = find_close_quote(&body[pos + open + 1..])?;
+                Some(body[pos + open + 1 + close + 1..].trim_start())
+            })
+            .unwrap_or("");
+        if after.starts_with(".into()") || after.starts_with(',') {
+            keys.push(lit);
+        }
+    }
+    Some((keys, line))
+}
+
+/// The brace-delimited body starting at the first `{` after `at`.
+fn body_after(text: &str, at: usize) -> &str {
+    let bytes = text.as_bytes();
+    let mut i = at;
+    while i < bytes.len() && bytes[i] != b'{' {
+        i += 1;
+    }
+    let start = i;
+    let mut depth = 0i64;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return &text[start..=i];
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    &text[start..]
+}
+
+/// `(literal, byte offset of the opening quote)` for every plain `"…"`
+/// literal in `text` (escapes handled; raw strings don't appear in the
+/// schema module).
+fn string_literals(text: &str) -> Vec<(String, usize)> {
+    let b: Vec<char> = text.chars().collect();
+    // Byte offsets need a parallel index because chars vary in width.
+    let mut out = Vec::new();
+    let mut byte = 0usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] == '"' {
+            let open_byte = byte;
+            byte += 1;
+            i += 1;
+            let mut lit = String::new();
+            while i < b.len() && b[i] != '"' {
+                if b[i] == '\\' && i + 1 < b.len() {
+                    lit.push(b[i + 1]);
+                    byte += b[i].len_utf8() + b[i + 1].len_utf8();
+                    i += 2;
+                    continue;
+                }
+                lit.push(b[i]);
+                byte += b[i].len_utf8();
+                i += 1;
+            }
+            if i < b.len() {
+                byte += 1;
+                i += 1; // closing quote
+            }
+            out.push((lit, open_byte));
+        } else {
+            byte += b[i].len_utf8();
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Byte offset of the closing quote of a literal whose contents start
+/// at the beginning of `s`.
+fn find_close_quote(s: &str) -> Option<usize> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return Some(i),
+            _ => i += 1,
+        }
+    }
+    None
+}
+
+/// Whether the literal at `pos` is the first argument of `call(`.
+fn preceded_by_call(text: &str, pos: usize, call: &str) -> bool {
+    let before = text[..pos].trim_end();
+    let Some(stripped) = before.strip_suffix('(') else {
+        return false;
+    };
+    stripped.trim_end().ends_with(call)
+}

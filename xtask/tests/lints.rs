@@ -1,0 +1,402 @@
+//! Integration tests for `cargo x analysis`: per-lint good/bad
+//! fixtures, allowlist round-trips, and a self-check that the shipped
+//! tree is clean under the repo allowlist.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use xtask::engine::{self, Report};
+use xtask::lints::Lint;
+
+static COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+/// A throwaway fixture repo under the system temp dir; removed on drop.
+struct Fixture {
+    root: PathBuf,
+}
+
+impl Fixture {
+    fn new() -> Fixture {
+        let id = COUNTER.fetch_add(1, Ordering::SeqCst);
+        let root = std::env::temp_dir()
+            .join(format!("xtask-fixture-{}-{id}", std::process::id()));
+        fs::create_dir_all(root.join("rust/src")).expect("mkdir fixture");
+        Fixture { root }
+    }
+
+    /// Write `text` at `rel` (repo-relative, forward slashes).
+    fn file(&self, rel: &str, text: &str) -> &Fixture {
+        let path = self.root.join(rel);
+        fs::create_dir_all(path.parent().expect("has parent")).expect("mkdir");
+        fs::write(path, text).expect("write fixture file");
+        self
+    }
+
+    fn allow(&self, text: &str) -> PathBuf {
+        let path = self.root.join("analysis.allow");
+        fs::write(&path, text).expect("write allowlist");
+        path
+    }
+
+    fn run(&self) -> Report {
+        engine::run(&self.root, &self.root.join("analysis.allow")).expect("run")
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+fn ids(report: &Report) -> Vec<&'static str> {
+    report.violations.iter().map(|d| d.lint.id()).collect()
+}
+
+// --- L001: NaN-unsafe float ordering ---
+
+#[test]
+fn l001_flags_partial_cmp_unwrap() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/sort.rs",
+        "pub fn worst(v: &mut [f32]) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n",
+    );
+    let r = fx.run();
+    assert_eq!(ids(&r), ["L001"]);
+    assert_eq!(r.violations[0].line, 2);
+}
+
+#[test]
+fn l001_flags_wrapped_statement_and_test_code() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/sort.rs",
+        "#[cfg(test)]\nmod tests {\n    fn reference(v: &mut [f32]) {\n        v.sort_by(|a, b| {\n            a.partial_cmp(b)\n                .unwrap()\n        });\n    }\n}\n",
+    );
+    // L001 deliberately covers test code: a NaN-unsafe reference sort
+    // pins the wrong spec.
+    assert_eq!(ids(&fx.run()), ["L001"]);
+}
+
+#[test]
+fn l001_accepts_total_cmp_and_guarded_unwrap_or() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/sort.rs",
+        "use std::cmp::Ordering;\npub fn good(v: &mut [f32]) {\n    v.sort_by(|a, b| a.total_cmp(b));\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Equal));\n}\n",
+    );
+    assert!(ids(&fx.run()).is_empty());
+}
+
+// --- L002: raw byte-size literals ---
+
+#[test]
+fn l002_flags_suffix_byte_factor_in_scope() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/serve/cost.rs",
+        "pub fn bytes(t: usize, d: usize) -> usize {\n    t * d * 4\n}\npub fn bytes_f(t: f64) -> f64 {\n    t * 4.0\n}\n",
+    );
+    assert_eq!(ids(&fx.run()), ["L002", "L002"]);
+}
+
+#[test]
+fn l002_ignores_prefix_flop_constants_and_out_of_scope() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/serve/cost.rs",
+        "pub fn flops(r: f64, d: f64, h: f64) -> f64 {\n    4.0 * r * d * h\n}\n",
+    );
+    // Same pattern outside the cost-model/data-path scope: not flagged.
+    fx.file("rust/src/misc.rs", "pub fn x(n: usize) -> usize {\n    n * 4\n}\n");
+    assert!(ids(&fx.run()).is_empty());
+}
+
+// --- L003: nondeterministic iteration ---
+
+#[test]
+fn l003_flags_hash_collections_in_wire_modules() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/comm/wire.rs",
+        "use std::collections::HashMap;\npub fn payload() -> HashMap<u32, u32> {\n    HashMap::new()\n}\n",
+    );
+    let r = fx.run();
+    assert_eq!(ids(&r), ["L003", "L003", "L003"]);
+}
+
+#[test]
+fn l003_accepts_btree_and_out_of_scope_hash() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/comm/wire.rs",
+        "use std::collections::BTreeMap;\npub fn payload() -> BTreeMap<u32, u32> {\n    BTreeMap::new()\n}\n",
+    );
+    fx.file(
+        "rust/src/gating/cache.rs",
+        "use std::collections::HashMap;\npub type Cache = HashMap<u64, usize>;\n",
+    );
+    assert!(ids(&fx.run()).is_empty());
+}
+
+// --- L004: schema pinning ---
+
+const SCHEMA_OK: &str = r#"
+pub const BREAKDOWN_KEYS: &[&str] = &["alpha", "beta"];
+pub const SLO_KEYS: &[&str] = &["duration"];
+pub const BENCH_RESULT_KEYS: &[&str] = &["name"];
+pub fn breakdown_json() {
+    let fields = vec![("alpha", 1.0), ("beta", 2.0)];
+}
+pub fn slo_json() {
+    let fields = vec![("duration".into(), 0.0)];
+}
+pub fn bench_result_json() {
+    let fields = vec![("name", 0.0)];
+}
+"#;
+
+#[test]
+fn l004_clean_when_arrays_match_emitters() {
+    let fx = Fixture::new();
+    fx.file("rust/src/obs/schema.rs", SCHEMA_OK);
+    assert!(ids(&fx.run()).is_empty());
+}
+
+#[test]
+fn l004_flags_drift_in_both_directions() {
+    let fx = Fixture::new();
+    // "beta" pinned but not emitted; "gamma" emitted but not pinned.
+    fx.file(
+        "rust/src/obs/schema.rs",
+        r#"
+pub const BREAKDOWN_KEYS: &[&str] = &["alpha", "beta"];
+pub const SLO_KEYS: &[&str] = &["duration"];
+pub const BENCH_RESULT_KEYS: &[&str] = &["name"];
+pub fn breakdown_json() {
+    let fields = vec![("alpha", 1.0), ("gamma", 2.0)];
+}
+pub fn slo_json() {
+    let fields = vec![("duration".into(), 0.0)];
+}
+pub fn bench_result_json() {
+    let fields = vec![("name", 0.0)];
+}
+"#,
+    );
+    let r = fx.run();
+    assert_eq!(ids(&r), ["L004", "L004"]);
+    assert!(r.violations.iter().any(|d| d.message.contains("\"beta\"")));
+    assert!(r.violations.iter().any(|d| d.message.contains("\"gamma\"")));
+}
+
+#[test]
+fn l004_expands_quantile_fields_and_checks_delegation() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/obs/schema.rs",
+        r#"
+pub const BREAKDOWN_KEYS: &[&str] = &["alpha"];
+pub const SLO_KEYS: &[&str] =
+    &["latency_p50", "latency_p95", "latency_p99"];
+pub const BENCH_RESULT_KEYS: &[&str] = &["name"];
+pub fn breakdown_json() {
+    let fields = vec![("alpha", 1.0)];
+}
+pub fn slo_json() {
+    let mut fields = vec![];
+    fields.extend(quantile_fields("latency", &q));
+}
+pub fn bench_result_json() {
+    let fields = vec![("name", 0.0)];
+}
+"#,
+    );
+    // A consumer hand-rolling its own JSON instead of delegating.
+    fx.file(
+        "rust/src/coordinator/metrics.rs",
+        "impl B {\n    pub fn to_json(&self) -> String {\n        String::new()\n    }\n}\n",
+    );
+    let r = fx.run();
+    assert_eq!(ids(&r), ["L004"]);
+    assert!(r.violations[0].path.ends_with("coordinator/metrics.rs"));
+    assert!(r.violations[0].message.contains("schema::breakdown_json"));
+}
+
+// --- L005: unwrap on user-reachable paths ---
+
+#[test]
+fn l005_flags_unwrap_in_cli_and_serve() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/cli.rs",
+        "pub fn parse(s: &str) -> usize {\n    s.parse().unwrap()\n}\n",
+    );
+    fx.file(
+        "rust/src/serve/engine.rs",
+        "pub fn shard(v: &[u32]) -> u32 {\n    *v.first().expect(\"nonempty\")\n}\n",
+    );
+    assert_eq!(ids(&fx.run()), ["L005", "L005"]);
+}
+
+#[test]
+fn l005_skips_tests_and_out_of_scope() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/cli.rs",
+        "pub fn parse(s: &str) -> Option<usize> {\n    s.parse().ok()\n}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        super::parse(\"3\").unwrap();\n    }\n}\n",
+    );
+    fx.file("rust/src/train/opt.rs", "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n");
+    assert!(ids(&fx.run()).is_empty());
+}
+
+// --- L006: span balance ---
+
+#[test]
+fn l006_flags_unbound_span_and_foreign_drop() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/step.rs",
+        "pub fn step() {\n    trace::span(\"gate\");\n    let _ = trace::span(\"layout\");\n}\npub fn other() {\n    drop(gate_span);\n}\n",
+    );
+    let r = fx.run();
+    assert_eq!(ids(&r), ["L006", "L006", "L006"]);
+}
+
+#[test]
+fn l006_accepts_bound_guard_dropped_in_same_fn() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/step.rs",
+        "pub fn step() {\n    let gate_span = trace::span(\"gate\");\n    work();\n    drop(gate_span);\n    let _whole_span = trace::span(\"rest\");\n}\n",
+    );
+    assert!(ids(&fx.run()).is_empty());
+}
+
+// --- L007: wall-clock / ambient randomness ban ---
+
+#[test]
+fn l007_flags_wall_clock_outside_allowlist() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/gating/timer.rs",
+        "use std::time::Instant;\npub fn now_ms() -> u128 {\n    Instant::now().elapsed().as_millis()\n}\n",
+    );
+    let r = fx.run();
+    assert_eq!(ids(&r), ["L007"]);
+    assert_eq!(r.violations[0].line, 3);
+}
+
+#[test]
+fn l007_allowlist_round_trip() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/bench.rs",
+        "use std::time::Instant;\npub fn measure() -> f64 {\n    let t0 = Instant::now();\n    t0.elapsed().as_secs_f64()\n}\n",
+    );
+    // Without an allowlist: one violation.
+    assert_eq!(ids(&fx.run()), ["L007"]);
+    // With the matching entry: suppressed and counted as used.
+    fx.allow("L007 bench.rs Instant::now\n");
+    let r = fx.run();
+    assert!(ids(&r).is_empty());
+    assert_eq!(r.allowed.len(), 1);
+    assert!(r.unused_allow.is_empty());
+    assert!(r.clean());
+}
+
+#[test]
+fn stale_allowlist_entry_fails_the_run() {
+    let fx = Fixture::new();
+    fx.file("rust/src/ok.rs", "pub fn ok() {}\n");
+    fx.allow("L007 gone.rs Instant::now\n");
+    let r = fx.run();
+    assert!(r.violations.is_empty());
+    assert_eq!(r.unused_allow.len(), 1);
+    assert!(!r.clean(), "stale entries must fail the gate");
+}
+
+#[test]
+fn malformed_allowlist_is_an_error() {
+    let fx = Fixture::new();
+    fx.file("rust/src/ok.rs", "pub fn ok() {}\n");
+    let bad = fx.allow("L099 foo.rs pattern\n");
+    assert!(engine::run(&fx.root, &bad).is_err(), "unknown lint id must error");
+    let bad2 = fx.allow("L007 only-two-tokens\n");
+    assert!(engine::run(&fx.root, &bad2).is_err(), "missing pattern must error");
+}
+
+#[test]
+fn inline_allow_marker_suppresses() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/gating/timer.rs",
+        "use std::time::Instant;\npub fn a() -> Instant {\n    // lint:allow(L007) — epoch base for relative stamps\n    Instant::now()\n}\npub fn b() -> Instant {\n    Instant::now() // lint:allow(L007)\n}\n",
+    );
+    let r = fx.run();
+    assert!(ids(&r).is_empty());
+    assert_eq!(r.allowed.len(), 2);
+}
+
+// --- report plumbing ---
+
+#[test]
+fn json_report_is_well_formed() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/cli.rs",
+        "pub fn parse(s: &str) -> usize {\n    s.parse().unwrap()\n}\n",
+    );
+    let j = fx.run().to_json();
+    assert!(j.contains("\"clean\":false"));
+    assert!(j.contains("\"lint\":\"L005\""));
+    assert!(j.contains("\"path\":\"rust/src/cli.rs\""));
+    // Escaping: the snippet contains a quoted string.
+    fx.file("rust/src/cli.rs", "pub fn p(s: &str) -> usize {\n    s.parse().expect(\"a \\\"b\\\"\")\n}\n");
+    let j2 = fx.run().to_json();
+    assert!(j2.contains("\\\""), "quotes in snippets must be escaped");
+}
+
+#[test]
+fn diagnostics_are_sorted_and_carry_lint_ids() {
+    let fx = Fixture::new();
+    fx.file(
+        "rust/src/comm/wire.rs",
+        "use std::collections::HashSet;\npub fn z(v: &mut [f32]) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n",
+    );
+    let r = fx.run();
+    assert_eq!(ids(&r), ["L003", "L001"], "sorted by (path, line, lint)");
+    for d in &r.violations {
+        assert!(Lint::from_id(d.lint.id()).is_some());
+        assert!(d.line >= 1);
+    }
+}
+
+// --- the shipped tree itself ---
+
+#[test]
+fn shipped_tree_is_clean_under_repo_allowlist() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .to_path_buf();
+    let allow = root.join("xtask").join("analysis.allow");
+    let r = engine::run(&root, &allow).expect("run on shipped tree");
+    assert!(
+        r.violations.is_empty(),
+        "shipped tree has violations:\n{}",
+        r.violations
+            .iter()
+            .map(|d| format!("{}:{} [{}] {}", d.path, d.line, d.lint.id(), d.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(
+        r.unused_allow.is_empty(),
+        "stale allowlist entries:\n{}",
+        r.unused_allow.join("\n")
+    );
+    assert!(r.files_scanned > 50, "expected the full tree, scanned {}", r.files_scanned);
+}
